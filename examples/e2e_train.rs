@@ -1,0 +1,91 @@
+//! End-to-end driver: train the transformer through the full three-layer
+//! stack — Rust coordinator → PJRT-compiled train step (JAX manual-bwd
+//! model + Pallas fake-quant kernels) — on the synthetic corpus, with
+//! the paper-default MoR recipe, logging the loss curve and the MoR
+//! decision statistics.
+//!
+//! Run after `make artifacts`:
+//!   cargo run --release --example e2e_train -- \
+//!       [--model small] [--steps 300] [--artifact train_mor_tensor_block]
+//!
+//! The EXPERIMENTS.md headline run uses `--model small --steps 300`.
+
+use mor::coordinator::logging::ascii_chart;
+use mor::coordinator::trainer::{Trainer, TrainerOptions};
+use mor::model::config::{ModelConfig, TrainConfig};
+use mor::runtime::Runtime;
+use mor::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = ModelConfig::preset(args.get_or("model", "small")).expect("unknown preset");
+    let steps = args.u64("steps", 300);
+    let artifact = args.get_or("artifact", "train_mor_tensor_block").to_string();
+    let artifacts_dir = PathBuf::from(args.get_or("artifacts", "")).into_os_string();
+    let artifacts_dir = if artifacts_dir.is_empty() {
+        PathBuf::from("artifacts").join(model.name)
+    } else {
+        PathBuf::from(artifacts_dir)
+    };
+
+    println!(
+        "e2e: model {} ({:.1}M params), artifact {}, {} steps",
+        model.name,
+        model.num_params() as f64 / 1e6,
+        artifact,
+        steps
+    );
+    let runtime = Runtime::load(&artifacts_dir, model)?;
+    let trainer = Trainer::new(&runtime, TrainConfig::config1(steps));
+    let mut opts = TrainerOptions::new(&artifact, steps, PathBuf::from("runs/e2e"));
+    opts.val_every = (steps / 20).max(1);
+    opts.suite_every = (steps / 6).max(1);
+    opts.ckpt_every = steps / 2;
+    opts.per_channel = artifact.contains("channel");
+    let outcome = trainer.run(&opts)?;
+
+    // Loss curve (the Figure-5-style panel for this single run).
+    let series = vec![
+        (
+            "train".to_string(),
+            outcome
+                .records
+                .iter()
+                .map(|r| (r.step as f64, r.train_loss as f64))
+                .collect::<Vec<_>>(),
+        ),
+        (
+            "val".to_string(),
+            outcome
+                .records
+                .iter()
+                .filter(|r| r.val_loss.is_finite())
+                .map(|r| (r.step as f64, r.val_loss as f64))
+                .collect(),
+        ),
+    ];
+    println!("\n{}", ascii_chart("e2e loss curve", &series, 100, 18));
+
+    println!("final train loss: {:.4}", outcome.final_train_loss);
+    println!("final val loss:   {:.4}", outcome.final_val_loss);
+    println!("mean step time:   {:.0} ms", outcome.mean_step_ms);
+    println!(
+        "tokens/sec:       {:.0}",
+        (runtime.manifest.get(&artifact)?.usize_field("batch")? * model.seq_len) as f32
+            / (outcome.mean_step_ms / 1e3)
+    );
+    println!(
+        "BF16 fallback:    {:.2}% of tensor decisions",
+        outcome.stats.overall_fallback_pct()
+    );
+    if let Some((step, scores)) = outcome.suite_history.last() {
+        println!("eval suite at step {step}:");
+        for (name, loss, acc) in &scores.per_task {
+            println!("  {name:<8} loss {loss:.3} acc {acc:.1}%");
+        }
+        println!("  mean accuracy {:.2}%", scores.mean_accuracy());
+    }
+    println!("\nmetrics CSV: {}", outcome.metrics_path.display());
+    Ok(())
+}

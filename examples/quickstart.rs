@@ -1,0 +1,99 @@
+//! Quickstart: the MoR decision engine on the host, no artifacts needed.
+//!
+//! Demonstrates the paper's three key mechanisms on synthetic tensors:
+//! GAM scaling (Alg. 1), the tensor-level recipe (§3.1) accepting a
+//! well-conditioned tensor and rejecting a wide-dynamic-range one, and
+//! the sub-tensor recipes (§3.2) mixing formats inside one tensor.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mor::formats::ReprType;
+use mor::mor::recipes::{Recipe, RecipeKind, SubTensorMode};
+use mor::quant::fake_quant::fake_quantize;
+use mor::quant::partition::Partition;
+use mor::scaling::{compute_scales, ScalingAlgo};
+use mor::tensor::Tensor;
+
+fn main() {
+    println!("=== MoR quickstart ===\n");
+
+    // 1. GAM scaling: one 23-bit mantissa for the tensor, one 8-bit
+    //    exponent per block (Section 2).
+    let x = Tensor::normal(&[256, 256], 2.0, 42);
+    let blocks = Partition::BLOCK128.blocks(256, 256);
+    let amaxes: Vec<f32> = blocks
+        .iter()
+        .map(|b| b.indices(256).map(|i| x.data()[i].abs()).fold(0.0f32, f32::max))
+        .collect();
+    let scales = compute_scales(ScalingAlgo::Gam, 448.0, x.amax(), &amaxes);
+    println!("GAM: group mantissa m_g = {:.6}", scales.group_mantissa);
+    for (i, b) in scales.blocks.iter().enumerate() {
+        println!(
+            "  block {i}: stored E8M0 exp {:>3}, reconstructed scale {:.4}, amax*scale = {:.2} (<= 448)",
+            b.stored_exp.exponent(),
+            b.scale,
+            amaxes[i] * b.scale
+        );
+    }
+    println!("  metadata: {} bits total\n", scales.metadata_bits());
+
+    // 2. Tensor-level MoR (th = 4.5%): accepts a Gaussian tensor...
+    let recipe = Recipe::paper_default();
+    let good = recipe.apply(&x);
+    println!(
+        "tensor-level MoR on N(0,2) tensor: relerr {:.3}% → {}",
+        good.e4m3_relerr * 100.0,
+        if good.bf16_fraction == 0.0 { "E4M3 accepted" } else { "BF16 fallback" }
+    );
+
+    // ...and rejects a tensor spanning 12 decades.
+    let mut wild = Tensor::normal(&[256, 256], 1.0, 7);
+    for (i, v) in wild.data_mut().iter_mut().enumerate() {
+        *v *= (10.0f32).powi((i % 13) as i32 - 6);
+    }
+    let bad = Recipe {
+        kind: RecipeKind::TensorLevel { threshold: 0.045 },
+        partition: Partition::Tensor,
+        scaling: ScalingAlgo::Gam,
+    }
+    .apply(&wild);
+    println!(
+        "tensor-level MoR on wide-range tensor (per-tensor scale): relerr {:.1}% → {}",
+        bad.e4m3_relerr * 100.0,
+        if bad.bf16_fraction == 1.0 { "BF16 fallback" } else { "E4M3 accepted" }
+    );
+
+    // 3. Sub-tensor MoR: per-block decisions mixing E4M3/E5M2/BF16.
+    let mut mixed = Tensor::normal(&[256, 256], 1.0, 9);
+    for (i, v) in mixed.data_mut().iter_mut().enumerate() {
+        *v *= (10.0f32).powi((i % 7) as i32 - 3);
+    }
+    for mode in [SubTensorMode::TwoWay, SubTensorMode::ThreeWay] {
+        let r = Recipe {
+            kind: RecipeKind::SubTensor { mode },
+            partition: Partition::Block { r: 64, c: 64 },
+            scaling: ScalingAlgo::Gam,
+        }
+        .apply(&mixed);
+        let f = r.type_fractions();
+        println!(
+            "sub-tensor {:?}: blocks → {:.0}% E4M3, {:.0}% E5M2, {:.0}% BF16",
+            mode,
+            f[0] * 100.0,
+            f[1] * 100.0,
+            f[2] * 100.0
+        );
+    }
+
+    // 4. The three scaling algorithms compared on the same tensor.
+    println!("\nscaling-algorithm ablation (relerr of E4M3 quantization):");
+    for algo in [ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0] {
+        let fq = fake_quantize(&x, ReprType::E4M3, Partition::BLOCK128, algo);
+        println!(
+            "  {:<5}: relerr {:.4}%, metadata {} bits",
+            algo.name(),
+            fq.global_err.mean() * 100.0,
+            fq.scales.metadata_bits()
+        );
+    }
+}

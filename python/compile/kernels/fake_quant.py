@@ -1,0 +1,117 @@
+"""Layer-1 Pallas kernels: GAM-scaled fake quantization (Fig. 4).
+
+One Pallas program instance handles one MoR partition block: the
+BlockSpec grid *is* the quantization partition, which is exactly the
+HBM↔VMEM schedule a TPU implementation would use (DESIGN.md
+§Hardware-Adaptation): the block lives in VMEM (128×128×4B = 64 KiB),
+the GAM group mantissa arrives as a broadcast scalar, and the kernel is
+a pure VPU elementwise pass (scale → cast fp8 → cast back → de-scale).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact
+runs under the Rust runtime. Correctness is pinned against ``ref.py``
+(pytest + hypothesis) and against the bit-exact Rust mirror (the
+integration_quant cross-check).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_FP8 = {"e4m3": jnp.float8_e4m3fn, "e5m2": jnp.float8_e5m2}
+
+
+def _mantissa_exponent(s):
+    m, e = jnp.frexp(s)
+    return m * 2.0, e - 1
+
+
+def _fq_kernel(mg_ref, x_ref, o_ref, *, fmt: str, scaling: str):
+    """Fake-quantize one partition block.
+
+    mg_ref: (1,1) group mantissa (GAM; ignored by amax/e8m0 scaling).
+    x_ref/o_ref: (br, bc) block in f32.
+    """
+    x = x_ref[...]
+    q_amax = ref.FP8_MAX[fmt]
+    amax = jnp.max(jnp.abs(x))
+    safe_amax = jnp.where(amax > 0, amax, 1.0)
+    s_ideal = q_amax / safe_amax
+    if scaling == "gam":
+        m_g = mg_ref[0, 0]
+        m_b, e_b = _mantissa_exponent(s_ideal)
+        # Algorithm 1 round-down: never saturate when m_g > m_b.
+        e = jnp.where(m_g <= m_b, e_b, e_b - 1)
+        s = m_g * jnp.exp2(e.astype(jnp.float32))
+    elif scaling == "e8m0":
+        _, e_b = _mantissa_exponent(s_ideal)
+        s = jnp.exp2(e_b.astype(jnp.float32))
+    elif scaling == "amax":
+        s = s_ideal
+    else:  # pragma: no cover - config error
+        raise ValueError(f"unknown scaling {scaling!r}")
+    s = jnp.where(amax > 0, s, 1.0)
+    scaled = jnp.clip(x * s, -q_amax, q_amax)
+    y = scaled.astype(_FP8[fmt]).astype(jnp.float32) / s
+    o_ref[...] = y
+
+
+def pick_block(dim: int, want: int) -> int:
+    """Largest power-of-two divisor of ``dim`` that is <= ``want``.
+
+    The model's dims are all multiples of 64, so the 128×128 paper
+    default degrades gracefully (e.g. 192 → 64-wide blocks) while
+    keeping jnp-reshape blocking exact. Mirrors nothing in Rust: the
+    Rust host mirror handles ragged blocks natively, and cross-check
+    artifacts use divisible shapes.
+    """
+    b = 1
+    while b * 2 <= min(dim, want) and dim % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def block_dims(partition: str, rows: int, cols: int, want: int = 128):
+    """Partition name → concrete (br, bc) for this tensor shape."""
+    if partition == "tensor":
+        return rows, cols
+    if partition.startswith("block"):
+        r, c = partition[len("block"):].split("x")
+        return pick_block(rows, int(r)), pick_block(cols, int(c))
+    if partition == "channel_rows":
+        return 1, cols
+    if partition == "channel_cols":
+        return rows, 1
+    raise ValueError(f"unknown partition {partition!r}")
+
+
+def group_mantissa(x, fmt: str):
+    """GAM group metadata (group = whole tensor), shape (1,1)."""
+    g_amax = jnp.abs(x).max()
+    s_g = ref.FP8_MAX[fmt] / jnp.where(g_amax > 0, g_amax, 1.0)
+    m_g, _ = _mantissa_exponent(s_g)
+    return m_g.reshape(1, 1).astype(jnp.float32)
+
+
+def fake_quant_pallas(x, fmt: str, partition: str, scaling: str = "gam",
+                      want_block: int = 128):
+    """Fake-quantize a 2-D f32 tensor through the Pallas kernel."""
+    rows, cols = x.shape
+    br, bc = block_dims(partition, rows, cols, want_block)
+    grid = (rows // br, cols // bc)
+    kernel = functools.partial(_fq_kernel, fmt=fmt, scaling=scaling)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # broadcast m_g
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(group_mantissa(x, fmt), x)

@@ -1,0 +1,193 @@
+"""Pure-jnp reference oracle for the MoR quantization numerics.
+
+Everything here is the *specification*: the Pallas kernels
+(`fake_quant.py`) and the Rust host mirror (`rust/src/quant/`) are both
+tested against these functions. Keep this file dependency-light and
+obviously-correct; speed does not matter.
+
+Paper mapping:
+  * ``gam_scales``          — Algorithm 1 (Group Amax Mantissa scaling)
+  * ``fake_quant_blocked``  — Figure 4 pipeline over a §3 partition
+  * ``mean_relative_error`` — Eq. (1)-(2)
+  * ``block_relerr_sums``   — Eq. (3) metric M1 inputs
+  * ``range_fits_e5m2``     — Eq. (4) metric M2
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# q_amax of the formats (Section 2 of the paper).
+E4M3_MAX = 448.0
+E5M2_MAX = 57344.0
+E5M2_MIN_NORMAL = 2.0 ** -14
+
+FP8_DTYPES = {
+    "e4m3": jnp.float8_e4m3fn,
+    "e5m2": jnp.float8_e5m2,
+}
+FP8_MAX = {"e4m3": E4M3_MAX, "e5m2": E5M2_MAX}
+
+
+def qdq_elem(x, fmt: str):
+    """Scalar/array quantize-dequantize through an FP8 dtype (saturating:
+    the caller guarantees |x| <= q_amax via scaling, so saturation only
+    guards the exact-max rounding edge)."""
+    dt = FP8_DTYPES[fmt]
+    clipped = jnp.clip(x, -FP8_MAX[fmt], FP8_MAX[fmt])
+    return clipped.astype(dt).astype(jnp.float32)
+
+
+def qdq_bf16(x):
+    """BF16 round-trip (the fallback 'representation')."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def mantissa_exponent(s):
+    """frexp-style decomposition s = m * 2^e with m in [1, 2).
+
+    (jnp.frexp returns m in [0.5, 1); Algorithm 1's convention is the
+    IEEE significand in [1, 2), so shift by one.)
+    """
+    m, e = jnp.frexp(s)
+    return m * 2.0, e - 1
+
+
+def block_shape_for(partition: str, rows: int, cols: int, block: int = 128):
+    """Block (br, bc) for a partition name, matching
+    rust/src/quant/partition.rs. 'channel_rows' = one row per block."""
+    if partition == "tensor":
+        return rows, cols
+    if partition.startswith("block"):
+        r, c = partition[len("block"):].split("x")
+        return int(r), int(c)
+    if partition == "channel_rows":
+        return 1, cols
+    if partition == "channel_cols":
+        return rows, 1
+    raise ValueError(f"unknown partition {partition!r}")
+
+
+def _blockwise_amax(x, br, bc):
+    """Per-block amax, shape (R/br, C/bc); requires divisible dims."""
+    r, c = x.shape
+    assert r % br == 0 and c % bc == 0, (x.shape, br, bc)
+    xb = jnp.abs(x).reshape(r // br, br, c // bc, bc)
+    return xb.max(axis=(1, 3))
+
+
+def gam_scales(x, q_amax: float, br: int, bc: int):
+    """Algorithm 1 with group = whole tensor.
+
+    Returns (scale per block, group mantissa). scale = m_g * 2^e_b with
+    the round-down rule; all-zero blocks get scale 1.0.
+    """
+    g_amax = jnp.abs(x).max()
+    s_g = q_amax / jnp.where(g_amax > 0, g_amax, 1.0)
+    m_g, _ = mantissa_exponent(s_g)
+    b_amax = _blockwise_amax(x, br, bc)
+    s_b = q_amax / jnp.where(b_amax > 0, b_amax, 1.0)
+    m_b, e_b = mantissa_exponent(s_b)
+    e = jnp.where(m_g <= m_b, e_b, e_b - 1)
+    scale = jnp.where(b_amax > 0, m_g * jnp.exp2(e.astype(jnp.float32)), 1.0)
+    return scale, m_g
+
+
+def amax_scales(x, q_amax: float, br: int, bc: int):
+    """Standard per-block FP32 amax scaling (the §4.1.2 baseline)."""
+    b_amax = _blockwise_amax(x, br, bc)
+    return jnp.where(b_amax > 0, q_amax / jnp.where(b_amax > 0, b_amax, 1.0), 1.0)
+
+
+def e8m0_scales(x, q_amax: float, br: int, bc: int):
+    """Pure power-of-two scaling: 2^floor(log2(q_amax / b_amax))."""
+    b_amax = _blockwise_amax(x, br, bc)
+    s = q_amax / jnp.where(b_amax > 0, b_amax, 1.0)
+    _, e = mantissa_exponent(s)
+    return jnp.where(b_amax > 0, jnp.exp2(e.astype(jnp.float32)), 1.0)
+
+
+SCALERS = {"gam": gam_scales, "amax": amax_scales, "e8m0": e8m0_scales}
+
+
+def scales_for(x, fmt: str, partition: str, scaling: str, block: int = 128):
+    rows, cols = x.shape
+    br, bc = block_shape_for(partition, rows, cols, block)
+    fn = SCALERS[scaling]
+    out = fn(x, FP8_MAX[fmt], br, bc)
+    scale = out[0] if isinstance(out, tuple) else out
+    return scale, (br, bc)
+
+
+def _expand(scale, br, bc):
+    """Broadcast per-block scales back to element shape."""
+    return jnp.repeat(jnp.repeat(scale, br, axis=0), bc, axis=1)
+
+
+def fake_quant_blocked(x, fmt: str, partition: str, scaling: str = "gam",
+                       block: int = 128):
+    """The Figure 4 pipeline: scale → cast fp8 → cast back → de-scale.
+
+    Returns the dequantized tensor (float32, same shape).
+    """
+    if fmt == "bf16":
+        return qdq_bf16(x)
+    scale, (br, bc) = scales_for(x, fmt, partition, scaling, block)
+    s = _expand(scale, br, bc)
+    return qdq_elem(x * s, fmt) / s
+
+
+def relerr_terms(x, q):
+    """|x - q| / |x| over non-zero x, 0 elsewhere (Eq. 2 summands)."""
+    nz = x != 0
+    return jnp.where(nz, jnp.abs((x - q) / jnp.where(nz, x, 1.0)), 0.0)
+
+
+def mean_relative_error(x, q):
+    """Eq. (1)-(2): mean relative error over non-zero elements."""
+    nz = (x != 0).sum()
+    return relerr_terms(x, q).sum() / jnp.maximum(nz, 1).astype(jnp.float32)
+
+
+def block_relerr_sums(x, q, br, bc):
+    """Eq. (3): per-block sums of relative error."""
+    r, c = x.shape
+    t = relerr_terms(x, q).reshape(r // br, br, c // bc, bc)
+    return t.sum(axis=(1, 3))
+
+
+def range_fits_e5m2(x, br, bc):
+    """Eq. (4) metric M2 per block: amax/amin_nonzero < E5M2 normal ratio."""
+    r, c = x.shape
+    a = jnp.abs(x).reshape(r // br, br, c // bc, bc)
+    amax = a.max(axis=(1, 3))
+    amin = jnp.where(a > 0, a, jnp.inf).min(axis=(1, 3))
+    ratio = E5M2_MAX / E5M2_MIN_NORMAL
+    return jnp.where(jnp.isfinite(amin), amax / amin < ratio, True)
+
+
+def np_reference_qdq_e4m3(x: np.ndarray) -> np.ndarray:
+    """A from-scratch numpy E4M3 quantizer (independent of ml_dtypes),
+    used to validate that our use of jnp.float8_e4m3fn matches the
+    format spec. Saturating RNE."""
+    out = np.zeros_like(x, dtype=np.float32)
+    for idx, v in np.ndenumerate(x):
+        if not np.isfinite(v):
+            out[idx] = np.nan
+            continue
+        a = abs(float(v))
+        if a == 0.0:
+            out[idx] = 0.0
+            continue
+        a = min(a, 448.0)
+        e = int(np.floor(np.log2(a))) if a > 0 else 0
+        e = max(e, -6)  # subnormal floor
+        step = 2.0 ** (e - 3)
+        q = round(a / step)
+        # round-half-to-even
+        if abs(a / step - round(a / step)) == 0.5:
+            q = int(a / step)
+            if q % 2 == 1:
+                q += 1
+        got = min(q * step, 448.0)
+        out[idx] = np.copysign(got, v)
+    return out

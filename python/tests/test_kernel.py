@@ -1,0 +1,138 @@
+"""L1 correctness: the Pallas fake-quant kernel vs the pure-jnp oracle
+(ref.py), including hypothesis sweeps over shapes, partitions, scalings
+and value distributions. This is the core kernel correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from compile.kernels import fake_quant as fqk
+from compile.kernels import ref
+
+PARTITIONS = ["tensor", "block128x128", "block64x64", "channel_rows", "channel_cols"]
+SCALINGS = ["gam", "amax", "e8m0"]
+FORMATS = ["e4m3", "e5m2"]
+
+
+def rand(shape, scale=1.0, seed=0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def ref_blocked(x, fmt, partition, scaling):
+    """ref.fake_quant_blocked with the same shape-adaptive block rule
+    the Pallas wrapper applies (ref itself requires divisible dims)."""
+    br, bc = fqk.block_dims(partition, *x.shape)
+    return ref.fake_quant_blocked(x, fmt, f"block{br}x{bc}", scaling)
+
+
+@pytest.mark.parametrize("partition", PARTITIONS)
+@pytest.mark.parametrize("scaling", SCALINGS)
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_pallas_matches_ref(partition, scaling, fmt):
+    x = rand((256, 128), 3.0, seed=1)
+    a = np.asarray(fqk.fake_quant_pallas(x, fmt, partition, scaling))
+    b = np.asarray(ref.fake_quant_blocked(x, fmt, partition, scaling))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_zero_tensor_passthrough(fmt):
+    x = jnp.zeros((128, 128), jnp.float32)
+    y = fqk.fake_quant_pallas(x, fmt, "block128x128", "gam")
+    np.testing.assert_array_equal(np.asarray(y), np.zeros((128, 128)))
+
+
+def test_wide_dynamic_range_no_saturation():
+    """GAM must never saturate: outputs stay finite and within q_amax of
+    the original magnitude envelope."""
+    x = rand((128, 128), 1.0, seed=2) * (10.0 ** (jnp.arange(128 * 128).reshape(128, 128) % 9 - 4))
+    for scaling in SCALINGS:
+        y = np.asarray(fqk.fake_quant_pallas(x, "e4m3", "block128x128", scaling))
+        assert np.isfinite(y).all(), scaling
+        assert np.abs(y).max() <= np.abs(np.asarray(x)).max() * 1.01
+
+
+def test_gam_relerr_close_to_amax_relerr():
+    """GAM loses < one binade of scale vs ideal amax scaling, so its
+    relative error should be within ~2x of amax scaling."""
+    x = rand((256, 256), 2.0, seed=3)
+    e_gam = float(ref.mean_relative_error(x, ref.fake_quant_blocked(x, "e4m3", "block128x128", "gam")))
+    e_amax = float(ref.mean_relative_error(x, ref.fake_quant_blocked(x, "e4m3", "block128x128", "amax")))
+    assert e_gam < 2.0 * e_amax + 1e-6
+
+
+def test_relative_error_scale_invariance():
+    x = rand((64, 64), 1.0, seed=4)
+    e1 = float(ref.mean_relative_error(x, ref.fake_quant_blocked(x, "e4m3", "tensor", "gam")))
+    for k in [1e-4, 1e3]:
+        ek = float(
+            ref.mean_relative_error(k * x, ref.fake_quant_blocked(k * x, "e4m3", "tensor", "gam"))
+        )
+        assert abs(e1 - ek) < 0.002, (k, e1, ek)
+
+
+def test_e4m3_matches_independent_numpy_reference():
+    """jnp.float8_e4m3fn (saturating clip path) vs the from-scratch
+    numpy E4M3 quantizer — pins the dtype semantics we rely on."""
+    vals = np.array(
+        [0.0, 1.0, -1.0, 0.3, 447.9, 448.0, 1.0625, 1.1875, 0.001, 0.002, -17.3, 300.0],
+        np.float32,
+    )
+    ours = np.asarray(ref.qdq_elem(jnp.array(vals), "e4m3"))
+    theirs = ref.np_reference_qdq_e4m3(vals)
+    np.testing.assert_allclose(ours, theirs, rtol=0, atol=0)
+
+
+def test_block_dims_rules():
+    assert fqk.block_dims("block128x128", 512, 192) == (128, 64)
+    assert fqk.block_dims("block128x128", 64, 64) == (64, 64)
+    assert fqk.block_dims("tensor", 100, 7) == (100, 7)
+    assert fqk.block_dims("channel_rows", 8, 16) == (1, 16)
+    assert fqk.block_dims("channel_cols", 8, 16) == (8, 1)
+    assert fqk.pick_block(192, 128) == 64
+    assert fqk.pick_block(896, 128) == 128
+
+
+def test_eq4_range_metric():
+    x = jnp.array([[1.0, 2.0], [1e-9, 3.0]], jnp.float32)
+    fits = np.asarray(ref.range_fits_e5m2(x, 1, 2))
+    assert fits[0, 0]  # range 2
+    assert not fits[1, 0]  # range 3e9 >> 2^29.8
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        rows_pow=st.integers(0, 3),
+        cols_pow=st.integers(0, 3),
+        scale_log=st.integers(-12, 12),
+        partition=st.sampled_from(PARTITIONS),
+        scaling=st.sampled_from(SCALINGS),
+        fmt=st.sampled_from(FORMATS),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_pallas_vs_ref(rows_pow, cols_pow, scale_log, partition, scaling, fmt, seed):
+        rows, cols = 32 << rows_pow, 32 << cols_pow
+        x = rand((rows, cols), 10.0**scale_log / 4.0, seed=seed % 65536)
+        a = np.asarray(fqk.fake_quant_pallas(x, fmt, partition, scaling))
+        b = np.asarray(ref_blocked(x, fmt, partition, scaling))
+        np.testing.assert_array_equal(a, b)
+        assert np.isfinite(a).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31), scaling=st.sampled_from(SCALINGS))
+    def test_hypothesis_relerr_bound(seed, scaling):
+        """E4M3 with per-block scaling on Gaussian data keeps the mean
+        relative error under the half-ulp+scale-slack analytic bound."""
+        x = rand((128, 128), 3.0, seed=seed % 65536)
+        y = ref.fake_quant_blocked(x, "e4m3", "block64x64", scaling)
+        assert float(ref.mean_relative_error(x, y)) < 0.07

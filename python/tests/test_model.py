@@ -1,0 +1,173 @@
+"""L2 correctness: manual backward vs jax.grad, train-step semantics,
+MoR decision plumbing, and the stats ABI."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+BASE = M.QuantConfig(recipe="baseline")
+
+
+def make_inputs(batch=4, seed=0):
+    params = M.init_params(CFG, jax.random.PRNGKey(seed))
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (batch, CFG.seq_len), 0, CFG.vocab_size
+    )
+    return params, tokens
+
+
+def test_manual_backward_matches_autodiff():
+    params, tokens = make_inputs()
+    th = jnp.float32(1.0)
+    loss_m, grads_m, _ = M.loss_and_grads(CFG, BASE, params, tokens, th)
+
+    def loss_fn(params):
+        logits, _, _ = M.forward(CFG, BASE, th, params, tokens)
+        return M.loss_fwd(CFG, logits, tokens)[0]
+
+    loss_a, grads_a = jax.value_and_grad(loss_fn)(params)
+    assert abs(float(loss_m) - float(loss_a)) < 1e-5
+    for name, gm, ga in zip(M.param_names(CFG), grads_m, grads_a):
+        scale = float(jnp.abs(ga).max()) + 1e-20
+        rel = float(jnp.abs(gm - ga).max()) / scale
+        assert rel < 1e-4, (name, rel)
+
+
+@pytest.mark.parametrize(
+    "recipe,partition",
+    [
+        ("tensor_level", "block128x128"),
+        ("tensor_level", "tensor"),
+        ("tensor_level", "channel"),
+        ("subtensor2", "block128x128"),
+        ("subtensor3", "block128x128"),
+    ],
+)
+def test_quantized_backward_close_to_autodiff(recipe, partition):
+    """With quantization ON, manual grads should still be close to the
+    unquantized autodiff grads (FP8 noise, not structural error)."""
+    params, tokens = make_inputs(seed=3)
+    q = M.QuantConfig(recipe, partition, "gam", use_pallas=False)
+    th = jnp.float32(0.045)
+    loss_m, grads_m, stats = M.loss_and_grads(CFG, q, params, tokens, th)
+
+    def loss_fn(params):
+        logits, _, _ = M.forward(CFG, BASE, th, params, tokens)
+        return M.loss_fwd(CFG, logits, tokens)[0]
+
+    loss_a, grads_a = jax.value_and_grad(loss_fn)(params)
+    assert abs(float(loss_m) - float(loss_a)) < 0.05 * abs(float(loss_a))
+    # Quantized linear weights see fp8 noise; LN/embedding grads flow
+    # through quantized GEMMs too. Allow a generous but bounded gap.
+    for name, gm, ga in zip(M.param_names(CFG), grads_m, grads_a):
+        na = float(jnp.linalg.norm(ga)) + 1e-20
+        rel = float(jnp.linalg.norm(gm - ga)) / na
+        assert rel < 0.35, (name, rel)
+    assert len(stats) == CFG.n_layers * 4 * 3 * 2
+
+
+def test_stats_slots_complete_and_ordered():
+    params, tokens = make_inputs(seed=5)
+    q = M.QuantConfig("tensor_level", "block128x128", "gam", use_pallas=False)
+    _, _, stats = M.loss_and_grads(CFG, q, params, tokens, jnp.float32(0.045))
+    relerr, fallback = M.pack_stats(CFG, stats)
+    n = CFG.n_layers * 4 * 3 * 2
+    assert relerr.shape == (n,)
+    assert fallback.shape == (n,)
+    # Every (layer, linear, tensor, dir) combination present.
+    for l in range(CFG.n_layers):
+        for li in range(4):
+            for t in range(3):
+                for d in range(2):
+                    assert (l, li, t, d) in stats
+    # Relerr values sane.
+    re = np.asarray(relerr)
+    assert (re >= 0).all() and (re < 1.0).all()
+
+
+def test_threshold_controls_fallback():
+    params, tokens = make_inputs(seed=7)
+    q = M.QuantConfig("tensor_level", "tensor", "gam", use_pallas=False)
+    _, _, stats_strict = M.loss_and_grads(CFG, q, params, tokens, jnp.float32(1e-9))
+    _, _, stats_loose = M.loss_and_grads(CFG, q, params, tokens, jnp.float32(0.9))
+    fb_strict = float(M.pack_stats(CFG, stats_strict)[1].mean())
+    fb_loose = float(M.pack_stats(CFG, stats_loose)[1].mean())
+    assert fb_strict == 1.0
+    assert fb_loose == 0.0
+
+
+def test_baseline_recipe_is_exact_passthrough():
+    params, tokens = make_inputs(seed=9)
+    th = jnp.float32(0.045)
+    l1, _, _ = M.forward(CFG, BASE, th, params, tokens)
+    q = M.QuantConfig("tensor_level", "tensor", "gam", use_pallas=False)
+    l2, _, _ = M.forward(CFG, q, jnp.float32(1e9), params, tokens)
+    # With an infinite threshold every tensor quantizes... so instead
+    # compare baseline vs threshold=0 (always fall back → passthrough).
+    l3, _, _ = M.forward(CFG, q, jnp.float32(-1.0), params, tokens)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l3))
+    assert not np.array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_train_step_decreases_loss():
+    params, tokens = make_inputs(batch=8, seed=11)
+    q = M.QuantConfig("tensor_level", "block128x128", "gam", use_pallas=False)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    losses = []
+    step = jax.jit(
+        lambda p, m, v, t, at: M.train_step(
+            CFG, q, p, m, v, t, at, jnp.float32(1e-3), jnp.float32(0.045)
+        )
+    )
+    for i in range(8):
+        params, m, v, loss, relerr, fallback = step(params, m, v, tokens, jnp.float32(i + 1))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_eval_step_masked_accuracy():
+    params, tokens = make_inputs(batch=4, seed=13)
+    mask = jnp.ones((4, CFG.seq_len), jnp.float32)
+    loss, acc = M.eval_step(CFG, params, tokens, mask)
+    assert 0.0 <= float(acc) <= 1.0
+    assert float(loss) > 0
+    # Zero mask: defined behaviour (no NaN).
+    loss0, acc0 = M.eval_step(CFG, params, tokens, jnp.zeros_like(mask))
+    assert np.isfinite(float(loss0)) and float(acc0) == 0.0
+
+
+def test_eval_accuracy_on_predictable_sequence():
+    """A cyclic sequence must be near-perfectly predictable by a model
+    that has the pattern in-context... an untrained model won't ace it,
+    but a trained-on-batch model should beat chance. Here we only check
+    the metric wiring: accuracy of predicting a constant sequence with
+    an untrained model is already >> 1/vocab after few-step training."""
+    params, _ = make_inputs(seed=15)
+    tokens = jnp.full((2, CFG.seq_len), 7, jnp.int32)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    for i in range(12):
+        params, m, v, loss, _, _ = M.train_step(
+            CFG, M.QuantConfig(), params, m, v, tokens,
+            jnp.float32(i + 1), jnp.float32(3e-3), jnp.float32(0.045),
+        )
+    mask = jnp.ones((2, CFG.seq_len), jnp.float32)
+    _, acc = M.eval_step(CFG, params, tokens, mask)
+    assert float(acc) > 0.9, float(acc)
+
+
+def test_param_shapes_match_rust_convention():
+    names = M.param_names(CFG)
+    shapes = M.param_shapes(CFG)
+    assert names[0] == "embedding.weight" and shapes[0] == (256, 64)
+    assert names[3] == "decoder.layer.0.self_attention.linear_qkv.weight"
+    assert shapes[3] == (64, 192)
+    assert names[-1] == "lm_head.weight" and shapes[-1] == (64, 256)
+    assert len(names) == 1 + 8 * CFG.n_layers + 3
+    total = sum(int(np.prod(s)) for s in shapes)
+    assert total == 256 * 64 * 2 + CFG.n_layers * (2 * 64 + 64 * 192 + 64 * 64 + 2 * 64 + 64 * 256 + 256 * 64) + 2 * 64

@@ -1,0 +1,42 @@
+//! Host GEMM benches: the plain f32 GEMM vs the Fig. 3 mixed-type
+//! blocked GEMM (which also models the fp8-vs-upcast MAC accounting).
+
+use mor::formats::ReprType;
+use mor::tensor::ops::{matmul, matmul_nt, matmul_tn, mixed_gemm, BlockTypes};
+use mor::tensor::Tensor;
+use mor::util::bench::{bench, report_throughput, BenchOptions};
+use std::hint::black_box;
+
+fn main() {
+    let opts = BenchOptions::default();
+    const N: usize = 128;
+    let a = Tensor::normal(&[N, N], 1.0, 1);
+    let b = Tensor::normal(&[N, N], 1.0, 2);
+    let flops = (2 * N * N * N) as f64;
+
+    let r = bench("matmul_f32_128", &opts, || {
+        black_box(matmul(black_box(&a), black_box(&b)));
+    });
+    report_throughput("matmul_f32", &r, flops, "flop");
+
+    let at = a.transpose();
+    let r = bench("matmul_tn_128", &opts, || {
+        black_box(matmul_tn(black_box(&at), black_box(&b)));
+    });
+    report_throughput("matmul_tn", &r, flops, "flop");
+
+    let bt = b.transpose();
+    let r = bench("matmul_nt_128", &opts, || {
+        black_box(matmul_nt(black_box(&a), black_box(&bt)));
+    });
+    report_throughput("matmul_nt", &r, flops, "flop");
+
+    let ta = BlockTypes::uniform(N, N, 32, ReprType::E4M3);
+    let mut tb = BlockTypes::uniform(N, N, 32, ReprType::E4M3);
+    tb.grid[0][0] = ReprType::Bf16;
+    tb.grid[1][1] = ReprType::E5M2;
+    let r = bench("mixed_gemm_128_blk32", &opts, || {
+        black_box(mixed_gemm(black_box(&a), &ta, black_box(&b), &tb));
+    });
+    report_throughput("mixed_gemm", &r, flops, "flop");
+}

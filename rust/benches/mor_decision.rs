@@ -1,0 +1,63 @@
+//! MoR framework overhead: full recipe application per tensor (the
+//! fake-quant + metric + Algorithm-2 walk) across partition strategies
+//! and recipes — the host-mirror cost model for the paper's "dynamic
+//! decisions at runtime" claim.
+
+use mor::mor::recipes::{Recipe, RecipeKind, SubTensorMode};
+use mor::quant::partition::Partition;
+use mor::scaling::ScalingAlgo;
+use mor::tensor::Tensor;
+use mor::util::bench::{bench, report_throughput, BenchOptions};
+use std::hint::black_box;
+
+fn main() {
+    let opts = BenchOptions::default();
+    let x = Tensor::normal(&[256, 256], 2.0, 5);
+    let elems = (256 * 256) as f64;
+
+    for (label, partition) in [
+        ("block128", Partition::BLOCK128),
+        ("block64", Partition::BLOCK64),
+        ("tensor", Partition::Tensor),
+        ("channel", Partition::ChannelRows),
+    ] {
+        let recipe = Recipe {
+            kind: RecipeKind::TensorLevel { threshold: 0.045 },
+            partition,
+            scaling: ScalingAlgo::Gam,
+        };
+        let r = bench(&format!("tensor_level_{label}_256x256"), &opts, || {
+            let o = recipe.apply(black_box(&x));
+            black_box(o);
+        });
+        report_throughput(&format!("tensor_level_{label}"), &r, elems, "elem");
+    }
+
+    for mode in [SubTensorMode::TwoWay, SubTensorMode::ThreeWay] {
+        let recipe = Recipe {
+            kind: RecipeKind::SubTensor { mode },
+            partition: Partition::BLOCK128,
+            scaling: ScalingAlgo::Gam,
+        };
+        let r = bench(&format!("subtensor_{mode:?}_256x256"), &opts, || {
+            let o = recipe.apply(black_box(&x));
+            black_box(o);
+        });
+        report_throughput(&format!("subtensor_{mode:?}"), &r, elems, "elem");
+    }
+
+    // Decision walk alone (metrics precomputed): the pure Algorithm-2
+    // overhead, which the paper treats as free.
+    let fw = mor::mor::framework::MorFramework::e4m3_e5m2_bf16();
+    let metrics: Vec<(f64, f64, bool)> =
+        (0..1024).map(|i| (i as f64 * 0.1, i as f64 * 0.11, i % 3 == 0)).collect();
+    let r = bench("algorithm2_walk_1024blocks", &opts, || {
+        let types = fw.select_all(1024, |t, b| match t {
+            mor::formats::ReprType::E4M3 => metrics[b].0 < metrics[b].1,
+            mor::formats::ReprType::E5M2 => metrics[b].2,
+            _ => false,
+        });
+        black_box(types);
+    });
+    report_throughput("algorithm2_walk", &r, 1024.0, "block");
+}

@@ -1,0 +1,111 @@
+//! Paper-shape micro-reproduction: fast, deterministic checks of each
+//! table/figure's directional claims on host-mirror numerics (the full
+//! regeneration with training runs is `repro report <exp>`; this bench
+//! verifies the *shape* cheaply on every `cargo bench`).
+
+use mor::formats::ReprType;
+use mor::mor::recipes::{Recipe, RecipeKind, SubTensorMode};
+use mor::quant::fake_quant::fake_quantize;
+use mor::quant::partition::Partition;
+use mor::scaling::ScalingAlgo;
+use mor::tensor::Tensor;
+
+/// Synthetic stand-ins for the three tensor populations the paper's
+/// heatmaps identify: well-behaved (most tensors), wide-range
+/// (FC2-activation-like), and extreme (first-layer-FC1-grad-like).
+fn populations() -> Vec<(&'static str, Tensor)> {
+    let smooth = Tensor::normal(&[256, 256], 2.0, 1);
+    let mut wide = Tensor::normal(&[256, 256], 1.0, 2);
+    for (i, v) in wide.data_mut().iter_mut().enumerate() {
+        *v *= (10.0f32).powi((i % 7) as i32 - 3);
+    }
+    let mut extreme = Tensor::normal(&[256, 256], 1.0, 3);
+    for (i, v) in extreme.data_mut().iter_mut().enumerate() {
+        *v *= (10.0f32).powi((i % 13) as i32 - 6);
+    }
+    vec![("smooth", smooth), ("wide", wide), ("extreme", extreme)]
+}
+
+fn main() {
+    println!("== paper-shape checks (host mirror) ==\n");
+    let pops = populations();
+
+    // Fig. 10 shape: fallback ordering channel <= block <= tensor.
+    println!("Fig.10 shape — BF16 fallback by partition strategy (th 4.5%):");
+    let mut rates = Vec::new();
+    for (label, partition) in [
+        ("channel", Partition::ChannelRows),
+        ("block", Partition::BLOCK128),
+        ("tensor", Partition::Tensor),
+    ] {
+        let recipe = Recipe {
+            kind: RecipeKind::TensorLevel { threshold: 0.045 },
+            partition,
+            scaling: ScalingAlgo::Gam,
+        };
+        let fb = pops.iter().map(|(_, t)| recipe.apply(t).bf16_fraction).sum::<f64>()
+            / pops.len() as f64;
+        println!("  {label:<8} fallback {:.1}%", fb * 100.0);
+        rates.push(fb);
+    }
+    assert!(rates[0] <= rates[1] && rates[1] <= rates[2], "Fig.10 ordering violated");
+    println!("  ordering channel <= block <= tensor HOLDS\n");
+
+    // Table 3 shape: GAM/E8M0 relerr <= 2x amax relerr; finer blocks help.
+    println!("Table 3 shape — scaling algos & block size (relerr on wide tensor):");
+    let wide = &pops[1].1;
+    let mut es = Vec::new();
+    for algo in [ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0] {
+        let e = fake_quantize(wide, ReprType::E4M3, Partition::BLOCK128, algo).global_err.mean();
+        println!("  {:<5} {:.3}%", algo.name(), e * 100.0);
+        es.push(e);
+    }
+    let e64 =
+        fake_quantize(wide, ReprType::E4M3, Partition::BLOCK64, ScalingAlgo::Gam).global_err.mean();
+    println!("  block64 (gam) {:.3}%  (128: {:.3}%)", e64 * 100.0, es[0] * 100.0);
+    assert!(e64 <= es[0] * 1.05, "finer blocks should not hurt");
+
+    // Table 4 / Fig. 20 shape: three-way quantizes at least as many
+    // blocks as two-way (E5M2 absorbs some BF16 fallbacks).
+    println!("\nTable 4 shape — sub-tensor recipes on wide tensor:");
+    let two = Recipe {
+        kind: RecipeKind::SubTensor { mode: SubTensorMode::TwoWay },
+        partition: Partition::Block { r: 64, c: 64 },
+        scaling: ScalingAlgo::Gam,
+    }
+    .apply(wide);
+    let three = Recipe {
+        kind: RecipeKind::SubTensor { mode: SubTensorMode::ThreeWay },
+        partition: Partition::Block { r: 64, c: 64 },
+        scaling: ScalingAlgo::Gam,
+    }
+    .apply(wide);
+    println!(
+        "  two-way:   {:.0}% blocks BF16",
+        two.type_fractions()[2] * 100.0
+    );
+    println!(
+        "  three-way: {:.0}% blocks BF16, {:.0}% E5M2",
+        three.type_fractions()[2] * 100.0,
+        three.type_fractions()[1] * 100.0
+    );
+    assert!(three.type_fractions()[2] <= two.type_fractions()[2] + 1e-9);
+
+    // Fig. 14 shape: growing dynamic range pushes relerr over threshold.
+    println!("\nFig.14 shape — relerr grows with dynamic range (per-tensor scale):");
+    for d in [0i32, 2, 4, 6] {
+        let mut t = Tensor::normal(&[128, 128], 1.0, 40 + d as u64);
+        for (i, v) in t.data_mut().iter_mut().enumerate() {
+            *v *= (10.0f32).powi((i % (2 * d + 1) as usize) as i32 - d);
+        }
+        let e = fake_quantize(&t, ReprType::E4M3, Partition::Tensor, ScalingAlgo::Gam)
+            .global_err
+            .mean();
+        println!(
+            "  spread 10^±{d}: relerr {:.2}% {}",
+            e * 100.0,
+            if e > 0.045 { "→ BF16 fallback" } else { "→ E4M3" }
+        );
+    }
+    println!("\nall paper-shape checks passed");
+}

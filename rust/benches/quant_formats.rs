@@ -1,0 +1,49 @@
+//! Codec throughput: fp8/bf16/fp4 encode-decode and the fake-quant
+//! pipeline per element. The L3-side perf floor for any host-side
+//! quantization work (paper Section 2 claims "negligible overhead" for
+//! GAM metadata; this bench quantifies the compute side).
+
+use mor::formats::bf16;
+use mor::formats::fp4;
+use mor::formats::fp8::{Fp8Format, Rounding, E4M3, E5M2};
+use mor::util::bench::{bench, report_throughput, BenchOptions};
+use std::hint::black_box;
+
+fn main() {
+    let opts = BenchOptions::default();
+    let xs: Vec<f32> = (0..4096).map(|i| ((i * 2654435761u64 as usize) as f32).sin() * 100.0).collect();
+
+    let r = bench("e4m3_encode_decode_4k", &opts, || {
+        let mut acc = 0f32;
+        for x in &xs {
+            acc += E4M3::quantize_dequantize(*x, Rounding::Saturate);
+        }
+        black_box(acc);
+    });
+    report_throughput("e4m3_encode_decode", &r, 4096.0, "elem");
+
+    let r = bench("e5m2_encode_decode_4k", &opts, || {
+        let mut acc = 0f32;
+        for x in &xs {
+            acc += E5M2::quantize_dequantize(*x, Rounding::Saturate);
+        }
+        black_box(acc);
+    });
+    report_throughput("e5m2_encode_decode", &r, 4096.0, "elem");
+
+    let r = bench("bf16_roundtrip_4k", &opts, || {
+        let mut acc = 0f32;
+        for x in &xs {
+            acc += bf16::quantize_dequantize(*x);
+        }
+        black_box(acc);
+    });
+    report_throughput("bf16_roundtrip", &r, 4096.0, "elem");
+
+    let mut out = vec![0f32; 4096];
+    let r = bench("nvfp4_block_pipeline_4k", &opts, || {
+        fp4::nvfp4_quantize_dequantize(black_box(&xs), &mut out);
+        black_box(&out);
+    });
+    report_throughput("nvfp4_block_pipeline", &r, 4096.0, "elem");
+}

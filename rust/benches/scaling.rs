@@ -1,0 +1,31 @@
+//! Scaling-algorithm cost: GAM (Alg. 1) vs FP32-amax vs E8M0, per block
+//! — the §4.1.2 ablation's compute side. GAM's extra frexp/round-down
+//! work should be noise against the amax reduction it shares with the
+//! baselines.
+
+use mor::scaling::{compute_scales, ScalingAlgo};
+use mor::util::bench::{bench, report_throughput, BenchOptions};
+use std::hint::black_box;
+
+fn main() {
+    let opts = BenchOptions::default();
+    // 1024 block amaxes (a 4096x4096 tensor under 128x128 blocks).
+    let amaxes: Vec<f32> = (0..1024).map(|i| 0.01 + ((i * 37) % 997) as f32).collect();
+    let group_amax = amaxes.iter().cloned().fold(0.0f32, f32::max);
+
+    for algo in [ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0] {
+        let r = bench(&format!("compute_scales_{}_1024blocks", algo.name()), &opts, || {
+            let s = compute_scales(algo, 448.0, black_box(group_amax), black_box(&amaxes));
+            black_box(s);
+        });
+        report_throughput(&format!("scales_{}", algo.name()), &r, 1024.0, "block");
+    }
+
+    // Amax reduction itself (the shared, dominating cost): 128x128 block.
+    let block: Vec<f32> = (0..128 * 128).map(|i| (i as f32).cos()).collect();
+    let r = bench("block_amax_reduction_128x128", &opts, || {
+        let m = block.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        black_box(m);
+    });
+    report_throughput("block_amax_reduction", &r, (128 * 128) as f64, "elem");
+}

@@ -1,0 +1,73 @@
+//! End-to-end PJRT step latency (the L3 hot path): one full train step
+//! per recipe variant on the tiny preset, plus the standalone quant
+//! kernel, plus the eval step. Skips gracefully when artifacts are
+//! missing. This is the bench behind EXPERIMENTS.md §Perf L3.
+
+use mor::data::loader::BatchLoader;
+use mor::data::synthetic::CorpusProfile;
+use mor::model::config::ModelConfig;
+use mor::runtime::Runtime;
+use mor::tensor::Tensor;
+use mor::util::bench::{bench, report_throughput, BenchOptions};
+use std::hint::black_box;
+use std::path::Path;
+use std::time::Duration;
+
+fn main() {
+    let dir = Path::new("artifacts/tiny");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("step_latency: artifacts/tiny missing — run `make artifacts-tiny`");
+        return;
+    }
+    let rt = Runtime::load(dir, ModelConfig::TINY).expect("loading artifacts");
+    let opts = BenchOptions {
+        warmup: Duration::from_millis(500),
+        measure: Duration::from_secs(3),
+        min_batches: 5,
+    };
+
+    for artifact in [
+        "train_baseline",
+        "train_mor_tensor_block",
+        "train_mor_tensor_block_jnp", // same recipe, fused-jnp lowering
+        "train_mor_tensor_tensor",
+        "train_mor_tensor_channel",
+        "train_mor_subtensor_two_way",
+        "train_mor_subtensor_three_way",
+    ] {
+        let Ok(mut session) = rt.train_session(artifact, 1) else {
+            eprintln!("skipping {artifact}: not in manifest (rebuild artifacts)");
+            continue;
+        };
+        let loader =
+            BatchLoader::new(CorpusProfile::Nemotron4Like, 256, session.batch, session.seq, 1, 0);
+        let batch = loader.next_batch();
+        let tokens_per_step = (session.batch * session.seq) as f64;
+        let r = bench(&format!("{artifact}_step"), &opts, || {
+            let out = session.step(black_box(&batch.tokens), 1e-3, 0.045).unwrap();
+            black_box(out.loss);
+        });
+        report_throughput(artifact, &r, tokens_per_step, "tok");
+    }
+
+    // Standalone Pallas quant kernel through PJRT.
+    let qs = rt.quant_session("quant_e4m3_gam_block128").unwrap();
+    let x = Tensor::normal(&[256, 256], 2.0, 3);
+    let r = bench("quant_e4m3_gam_block128_pjrt", &opts, || {
+        let out = qs.run(black_box(&x)).unwrap();
+        black_box(out.1);
+    });
+    report_throughput("quant_kernel_pjrt", &r, (256 * 256) as f64, "elem");
+
+    // Eval step.
+    let s = rt.train_session("train_baseline", 1).unwrap();
+    let ev = rt.eval_session("eval").unwrap();
+    let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, ev.batch, ev.seq, 2, 1);
+    let batch = loader.next_batch();
+    let mask = mor::coordinator::trainer::full_mask(ev.batch, ev.seq);
+    let r = bench("eval_step", &opts, || {
+        let out = ev.eval(s.param_literals(), black_box(&batch.tokens), &mask).unwrap();
+        black_box(out);
+    });
+    report_throughput("eval_step", &r, (ev.batch * ev.seq) as f64, "tok");
+}

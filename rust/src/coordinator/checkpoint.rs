@@ -1,0 +1,132 @@
+//! Checkpointing: a minimal binary tensor container (no serde offline).
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "MORCKPT1" | u64 step | u32 ntensors |
+//!   per tensor: u32 name_len | name bytes | u32 ndims | u64 dims... |
+//!               f32 data...
+//! ```
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"MORCKPT1";
+
+/// A checkpoint: named tensors + the step they were saved at.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating checkpoint {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+            for d in t.shape() {
+                f.write_all(&(*d as u64).to_le_bytes())?;
+            }
+            // Bulk-write the f32 payload.
+            let data = t.data();
+            let bytes = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening checkpoint {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a MoR checkpoint", path.display());
+        }
+        let mut u64b = [0u8; 8];
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u64b)?;
+        let step = u64::from_le_bytes(u64b);
+        f.read_exact(&mut u32b)?;
+        let n = u32::from_le_bytes(u32b) as usize;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            f.read_exact(&mut u32b)?;
+            let name_len = u32::from_le_bytes(u32b) as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("checkpoint tensor name not utf8")?;
+            f.read_exact(&mut u32b)?;
+            let ndims = u32::from_le_bytes(u32b) as usize;
+            let mut shape = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                f.read_exact(&mut u64b)?;
+                shape.push(u64::from_le_bytes(u64b) as usize);
+            }
+            let vol: usize = shape.iter().product();
+            let mut data = vec![0f32; vol];
+            let bytes = unsafe {
+                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, vol * 4)
+            };
+            f.read_exact(bytes)?;
+            tensors.push((name, Tensor::from_vec(&shape, data)));
+        }
+        Ok(Checkpoint { step, tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mor_ckpt_test_{}", std::process::id()));
+        let path = dir.join("step10.ckpt");
+        let ck = Checkpoint {
+            step: 10,
+            tensors: vec![
+                ("a".into(), Tensor::normal(&[3, 4], 1.0, 1)),
+                ("b.weight".into(), Tensor::uniform(&[7], 2.0, 2)),
+            ],
+        };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.get("a").unwrap().shape(), &[3, 4]);
+        assert!(back.get("zzz").is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("mor_ckpt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPT").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,72 @@
+//! Eval-suite driver: runs the OOD task suite (the downstream-benchmark
+//! substitute) through the compiled masked-eval artifact.
+
+use crate::data::tasks::{EvalSuite, EvalTask};
+use crate::runtime::EvalSession;
+use anyhow::Result;
+
+/// Scores for one pass over the suite.
+#[derive(Debug, Clone)]
+pub struct EvalScores {
+    /// (task name, masked loss, masked next-token accuracy %).
+    pub per_task: Vec<(&'static str, f32, f32)>,
+}
+
+impl EvalScores {
+    /// Mean accuracy over tasks — the "MMLU-like" scalar tracked over
+    /// training in Figures 7/9/21.
+    pub fn mean_accuracy(&self) -> f32 {
+        if self.per_task.is_empty() {
+            return 0.0;
+        }
+        self.per_task.iter().map(|(_, _, a)| a).sum::<f32>() / self.per_task.len() as f32
+    }
+
+    pub fn get(&self, name: &str) -> Option<(f32, f32)> {
+        self.per_task.iter().find(|(n, _, _)| *n == name).map(|(_, l, a)| (*l, *a))
+    }
+}
+
+/// Evaluate the full suite. Examples are packed into eval-session
+/// batches; ragged tails are padded with zero masks (unscored).
+pub fn eval_suite(
+    session: &EvalSession,
+    params: &[xla::Literal],
+    suite: &EvalSuite,
+) -> Result<EvalScores> {
+    let mut per_task = Vec::new();
+    for task in EvalTask::ALL {
+        let examples = suite.examples(task);
+        let (mut loss_sum, mut acc_sum, mut batches) = (0f64, 0f64, 0u32);
+        for chunk in examples.chunks(session.batch) {
+            let mut tokens = vec![0i32; session.batch * session.seq];
+            let mut mask = vec![0f32; session.batch * session.seq];
+            for (i, (t, m)) in chunk.iter().enumerate() {
+                tokens[i * session.seq..(i + 1) * session.seq].copy_from_slice(t);
+                mask[i * session.seq..(i + 1) * session.seq].copy_from_slice(m);
+            }
+            let (loss, acc) = session.eval(params, &tokens, &mask)?;
+            loss_sum += loss as f64;
+            acc_sum += acc as f64;
+            batches += 1;
+        }
+        let n = batches.max(1) as f64;
+        per_task.push((task.name(), (loss_sum / n) as f32, (acc_sum / n * 100.0) as f32));
+    }
+    Ok(EvalScores { per_task })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scores_aggregate() {
+        let s = EvalScores {
+            per_task: vec![("copy", 1.0, 80.0), ("cycle", 0.5, 90.0)],
+        };
+        assert_eq!(s.mean_accuracy(), 85.0);
+        assert_eq!(s.get("copy"), Some((1.0, 80.0)));
+        assert_eq!(s.get("nope"), None);
+    }
+}

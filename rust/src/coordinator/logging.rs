@@ -1,0 +1,195 @@
+//! CSV metrics logging — the raw series behind Figures 5/6/8/20 (loss +
+//! parameter norm curves) and the eval-over-training figures (7/9/21).
+
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// One training-step record.
+#[derive(Debug, Clone, Default)]
+pub struct StepRecord {
+    pub step: u64,
+    pub lr: f32,
+    pub train_loss: f32,
+    /// NaN when not evaluated this step.
+    pub val_loss: f32,
+    pub param_norm: f32,
+    /// Fraction of quantized-tensor slots that fell back to BF16.
+    pub bf16_fallback_rate: f32,
+    /// Mean E4M3 relative error across slots.
+    pub mean_relerr: f32,
+    pub step_ms: f32,
+}
+
+/// Append-only CSV logger, one file per run.
+pub struct MetricsLogger {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+impl MetricsLogger {
+    pub const HEADER: &'static str =
+        "step,lr,train_loss,val_loss,param_norm,bf16_fallback_rate,mean_relerr,step_ms";
+
+    pub fn create(path: &Path) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("creating metrics log {}", path.display()))?;
+        writeln!(file, "{}", Self::HEADER)?;
+        Ok(MetricsLogger { path: path.to_path_buf(), file })
+    }
+
+    pub fn log(&mut self, r: &StepRecord) -> Result<()> {
+        let mut line = String::new();
+        let _ = write!(
+            line,
+            "{},{:.6e},{:.6},{:.6},{:.6},{:.6},{:.6},{:.2}",
+            r.step,
+            r.lr,
+            r.train_loss,
+            r.val_loss,
+            r.param_norm,
+            r.bf16_fallback_rate,
+            r.mean_relerr,
+            r.step_ms
+        );
+        writeln!(self.file, "{line}")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read a metrics CSV back into records (for the report harness).
+    pub fn read(path: &Path) -> Result<Vec<StepRecord>> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading metrics log {}", path.display()))?;
+        let mut out = Vec::new();
+        for line in text.lines().skip(1) {
+            let f: Vec<&str> = line.split(',').collect();
+            if f.len() != 8 {
+                continue;
+            }
+            out.push(StepRecord {
+                step: f[0].parse().unwrap_or(0),
+                lr: f[1].parse().unwrap_or(0.0),
+                train_loss: f[2].parse().unwrap_or(f32::NAN),
+                val_loss: f[3].parse().unwrap_or(f32::NAN),
+                param_norm: f[4].parse().unwrap_or(f32::NAN),
+                bf16_fallback_rate: f[5].parse().unwrap_or(0.0),
+                mean_relerr: f[6].parse().unwrap_or(0.0),
+                step_ms: f[7].parse().unwrap_or(0.0),
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Render an ASCII line chart of one or more labelled series — the
+/// terminal stand-in for the paper's loss/eval figures.
+pub fn ascii_chart(title: &str, series: &[(String, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+    let mut out = format!("── {title} ──\n");
+    let pts: Vec<(f64, f64)> =
+        series.iter().flat_map(|(_, s)| s.iter().copied()).filter(|(_, y)| y.is_finite()).collect();
+    if pts.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let (xmin, xmax) = pts.iter().fold((f64::MAX, f64::MIN), |(a, b), (x, _)| (a.min(*x), b.max(*x)));
+    let (ymin, ymax) = pts.iter().fold((f64::MAX, f64::MIN), |(a, b), (_, y)| (a.min(*y), b.max(*y)));
+    let yspan = (ymax - ymin).max(1e-12);
+    let xspan = (xmax - xmin).max(1e-12);
+    let mut grid = vec![vec![' '; width]; height];
+    const MARKS: [char; 6] = ['*', '+', 'o', 'x', '#', '@'];
+    for (si, (_, s)) in series.iter().enumerate() {
+        for (x, y) in s {
+            if !y.is_finite() {
+                continue;
+            }
+            let c = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let r = (((ymax - y) / yspan) * (height - 1) as f64).round() as usize;
+            grid[r.min(height - 1)][c.min(width - 1)] = MARKS[si % MARKS.len()];
+        }
+    }
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{ymax:10.4} ")
+        } else if r == height - 1 {
+            format!("{ymin:10.4} ")
+        } else {
+            " ".repeat(11)
+        };
+        out.push_str(&label);
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    let _ = writeln!(
+        out,
+        "{}x: {:.0} → {:.0}   legend: {}",
+        " ".repeat(11),
+        xmin,
+        xmax,
+        series
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| format!("{}={}", MARKS[i % MARKS.len()], n))
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_csv() {
+        let dir = std::env::temp_dir().join(format!("mor_log_test_{}", std::process::id()));
+        let path = dir.join("metrics.csv");
+        let mut l = MetricsLogger::create(&path).unwrap();
+        l.log(&StepRecord {
+            step: 1,
+            lr: 3e-4,
+            train_loss: 2.5,
+            val_loss: f32::NAN,
+            param_norm: 10.0,
+            bf16_fallback_rate: 0.05,
+            mean_relerr: 0.02,
+            step_ms: 12.0,
+        })
+        .unwrap();
+        l.log(&StepRecord { step: 2, train_loss: 2.4, ..Default::default() }).unwrap();
+        l.flush().unwrap();
+        let recs = MetricsLogger::read(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].step, 1);
+        assert!((recs[0].train_loss - 2.5).abs() < 1e-6);
+        assert!(recs[0].val_loss.is_nan());
+        assert_eq!(recs[1].step, 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn chart_renders_all_series() {
+        let s = vec![
+            ("a".to_string(), vec![(0.0, 1.0), (10.0, 0.5)]),
+            ("b".to_string(), vec![(0.0, 0.9), (10.0, 0.6)]),
+        ];
+        let c = ascii_chart("loss", &s, 40, 10);
+        assert!(c.contains('*') && c.contains('+'));
+        assert!(c.contains("legend"));
+        let empty = ascii_chart("x", &[("e".into(), vec![])], 10, 5);
+        assert!(empty.contains("no data"));
+    }
+}

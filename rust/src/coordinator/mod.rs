@@ -1,0 +1,13 @@
+//! Layer-3 coordinator: the training/eval loops that drive the AOT
+//! artifacts, metrics logging, and checkpointing. The paper's
+//! contribution lives at L1/L2 (a numeric-format recipe), so this layer
+//! is the *launcher*: process lifecycle, LR schedule, data pipeline,
+//! stats collection, experiment orchestration.
+
+pub mod checkpoint;
+pub mod eval;
+pub mod logging;
+pub mod trainer;
+
+pub use logging::{MetricsLogger, StepRecord};
+pub use trainer::{TrainOutcome, Trainer, TrainerOptions};

@@ -1,0 +1,265 @@
+//! The training loop driver: schedule → data → compiled step → metrics.
+//!
+//! One `Trainer::run` produces everything a paper figure needs from one
+//! run: the loss/param-norm series (Figs. 5/6/8/20), the eval-suite
+//! trajectory (Figs. 7/9/21), and the per-tensor decision statistics
+//! (Figs. 10–19) via [`StatsCollector`].
+
+use super::checkpoint::Checkpoint;
+use super::eval::{eval_suite, EvalScores};
+use super::logging::{MetricsLogger, StepRecord};
+use crate::data::loader::BatchLoader;
+use crate::data::synthetic::CorpusProfile;
+use crate::data::tasks::EvalSuite;
+use crate::model::config::{ModelConfig, TrainConfig};
+use crate::model::naming::{param_specs, QuantTensorId};
+use crate::mor::stats::StatsCollector;
+use crate::runtime::Runtime;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Options for one training run.
+#[derive(Debug, Clone)]
+pub struct TrainerOptions {
+    /// Manifest name of the train artifact (selects the recipe).
+    pub artifact: String,
+    pub steps: u64,
+    /// E4M3 acceptance threshold fed to the compiled step (4.5% paper
+    /// default; 5.0% ablation).
+    pub threshold: f32,
+    /// Validate every N steps (0 = never).
+    pub val_every: u64,
+    /// Run the eval-task suite every N steps (0 = never).
+    pub suite_every: u64,
+    /// Checkpoint every N steps (0 = never).
+    pub ckpt_every: u64,
+    /// Histogram reset window (Fig. 14); paper uses 6000 of its steps.
+    pub stats_window: u64,
+    /// Output directory for metrics.csv / stats CSV / checkpoints.
+    pub out_dir: PathBuf,
+    /// Whether the artifact's partition is per-channel (direction-
+    /// resolved stats keys).
+    pub per_channel: bool,
+    /// Run quietly (no per-step stdout).
+    pub quiet: bool,
+}
+
+impl TrainerOptions {
+    pub fn new(artifact: &str, steps: u64, out_dir: PathBuf) -> Self {
+        TrainerOptions {
+            artifact: artifact.to_string(),
+            steps,
+            threshold: 0.045,
+            val_every: 20,
+            suite_every: 0,
+            ckpt_every: 0,
+            stats_window: 50,
+            out_dir,
+            per_channel: false,
+            quiet: false,
+        }
+    }
+}
+
+/// Summary of a finished run.
+#[derive(Debug)]
+pub struct TrainOutcome {
+    pub final_train_loss: f32,
+    pub final_val_loss: f32,
+    pub records: Vec<StepRecord>,
+    pub stats: StatsCollector,
+    /// (step, scores) trajectory of the eval-task suite.
+    pub suite_history: Vec<(u64, EvalScores)>,
+    pub metrics_path: PathBuf,
+    pub mean_step_ms: f32,
+}
+
+/// The training coordinator.
+pub struct Trainer<'rt> {
+    runtime: &'rt Runtime,
+    pub model: ModelConfig,
+    pub train_config: TrainConfig,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(runtime: &'rt Runtime, train_config: TrainConfig) -> Self {
+        Trainer { runtime, model: runtime.model, train_config }
+    }
+
+    pub fn run(&self, opts: &TrainerOptions) -> Result<TrainOutcome> {
+        let tc = &self.train_config;
+        let mut session = self
+            .runtime
+            .train_session(&opts.artifact, tc.seed)
+            .with_context(|| format!("starting session for {}", opts.artifact))?;
+        let profile = CorpusProfile::from_id(tc.data_profile);
+        let train_loader = BatchLoader::new(
+            profile,
+            self.model.vocab_size,
+            session.batch,
+            session.seq,
+            tc.seed,
+            0,
+        );
+        let val_loader = BatchLoader::new(
+            profile,
+            self.model.vocab_size,
+            session.batch,
+            session.seq,
+            tc.seed,
+            1,
+        );
+        let eval = self.runtime.eval_session("eval").ok();
+        let suite = EvalSuite::new(session.seq, self.model.vocab_size, 8, tc.seed ^ 0xE7A1);
+
+        std::fs::create_dir_all(&opts.out_dir)?;
+        let metrics_path = opts.out_dir.join(format!("{}.{}.csv", opts.artifact, tc.name));
+        let mut logger = MetricsLogger::create(&metrics_path)?;
+        let mut stats = StatsCollector::new(opts.stats_window);
+        let mut suite_history = Vec::new();
+        let mut records = Vec::new();
+        let mut total_ms = 0f32;
+        let mut last_val = f32::NAN;
+        let n_slots = QuantTensorId::count(&self.model);
+
+        for step in 0..opts.steps {
+            let lr = tc.schedule.lr_at(step);
+            let batch = train_loader.next_batch();
+            let t0 = Instant::now();
+            let out = session.step(&batch.tokens, lr, opts.threshold)?;
+            let step_ms = t0.elapsed().as_secs_f32() * 1e3;
+            total_ms += step_ms;
+
+            // Record per-slot decisions into the heatmap stats.
+            stats.set_step(step);
+            debug_assert_eq!(out.relerr.len(), n_slots);
+            let mut fb_sum = 0f32;
+            let mut re_sum = 0f32;
+            for (i, (re, fb)) in out.relerr.iter().zip(out.fallback.iter()).enumerate() {
+                let id = QuantTensorId::from_flat(i);
+                // Direction-1 slots only carry signal for per-channel
+                // partitions; other partitions mirror direction 0 and we
+                // skip them to avoid double counting.
+                if id.direction == 1 && !opts.per_channel {
+                    continue;
+                }
+                stats.record(id.key(opts.per_channel), *re as f64, *fb >= 0.5, *fb as f64);
+                fb_sum += fb;
+                re_sum += re;
+            }
+            let denom = if opts.per_channel { n_slots } else { n_slots / 2 } as f32;
+
+            // Validation loss on a held-out stream.
+            let is_val_step = opts.val_every > 0
+                && (step % opts.val_every == 0 || step + 1 == opts.steps);
+            if is_val_step {
+                if let Some(ev) = &eval {
+                    let vb = val_loader.next_batch();
+                    let mask = full_mask(session.batch, session.seq);
+                    let (vl, _) = ev.eval(session.param_literals(), &vb.tokens, &mask)?;
+                    last_val = vl;
+                }
+            }
+
+            // Eval-task suite (the downstream-benchmark substitute).
+            if opts.suite_every > 0
+                && (step % opts.suite_every == 0 || step + 1 == opts.steps)
+            {
+                if let Some(ev) = &eval {
+                    let scores = eval_suite(ev, session.param_literals(), &suite)?;
+                    suite_history.push((step, scores));
+                }
+            }
+
+            if opts.ckpt_every > 0 && step > 0 && step % opts.ckpt_every == 0 {
+                self.save_checkpoint(&session, step, opts)?;
+            }
+
+            let rec = StepRecord {
+                step,
+                lr,
+                train_loss: out.loss,
+                val_loss: if is_val_step { last_val } else { f32::NAN },
+                param_norm: session.param_norm()?,
+                bf16_fallback_rate: fb_sum / denom,
+                mean_relerr: re_sum / denom,
+                step_ms,
+            };
+            logger.log(&rec)?;
+            if !opts.quiet && (step % 10 == 0 || step + 1 == opts.steps) {
+                println!(
+                    "[{}] step {step:>5} loss {:.4} val {:.4} lr {:.2e} fb {:.2}% relerr {:.3}% ({:.0} ms)",
+                    opts.artifact,
+                    rec.train_loss,
+                    rec.val_loss,
+                    rec.lr,
+                    rec.bf16_fallback_rate * 100.0,
+                    rec.mean_relerr * 100.0,
+                    step_ms
+                );
+            }
+            records.push(rec);
+        }
+        logger.flush()?;
+
+        // Persist the stats heatmap CSV next to the metrics.
+        let stats_path = opts.out_dir.join(format!("{}.{}.stats.csv", opts.artifact, tc.name));
+        std::fs::write(&stats_path, stats.heatmap_csv())?;
+
+        let final_train_loss = records.last().map(|r| r.train_loss).unwrap_or(f32::NAN);
+        Ok(TrainOutcome {
+            final_train_loss,
+            final_val_loss: last_val,
+            mean_step_ms: total_ms / records.len().max(1) as f32,
+            records,
+            stats,
+            suite_history,
+            metrics_path,
+        })
+    }
+
+    fn save_checkpoint(
+        &self,
+        session: &crate::runtime::TrainSession,
+        step: u64,
+        opts: &TrainerOptions,
+    ) -> Result<()> {
+        let specs = param_specs(&self.model);
+        let params = session.params()?;
+        let tensors = specs
+            .iter()
+            .map(|s| s.name.clone())
+            .zip(params.into_iter())
+            .collect();
+        Checkpoint { step, tensors }
+            .save(&opts.out_dir.join(format!("{}.step{step}.ckpt", opts.artifact)))
+    }
+}
+
+/// A mask scoring every position except the last (plain LM validation).
+pub fn full_mask(batch: usize, seq: usize) -> Vec<f32> {
+    let mut m = vec![1.0f32; batch * seq];
+    for b in 0..batch {
+        m[b * seq + seq - 1] = 0.0;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_mask_shape() {
+        let m = full_mask(2, 4);
+        assert_eq!(m, vec![1., 1., 1., 0., 1., 1., 1., 0.]);
+    }
+
+    #[test]
+    fn options_defaults() {
+        let o = TrainerOptions::new("train_baseline", 10, PathBuf::from("/tmp/x"));
+        assert_eq!(o.threshold, 0.045);
+        assert!(o.val_every > 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Data pipeline: synthetic byte-level corpora standing in for the
+//! Nemotron-4 / Nemotron-H training sets (see DESIGN.md §2
+//! substitutions), the out-of-distribution eval-task suite standing in
+//! for the downstream benchmarks, and the batch loader.
+
+pub mod loader;
+pub mod synthetic;
+pub mod tasks;
+
+pub use loader::BatchLoader;
+pub use synthetic::{CorpusProfile, SyntheticCorpus};
+pub use tasks::{EvalSuite, EvalTask};

@@ -1,0 +1,97 @@
+//! BF16 codec (truncated-exponent-range f32, 8 exponent / 7 mantissa
+//! bits). BF16 is the paper's "original precision" — every MoR recipe
+//! terminates in a BF16 fallback, and the fake-quant pipeline (Fig. 4)
+//! keeps tensors materialized in BF16.
+
+/// Largest finite BF16 magnitude.
+pub const MAX: f32 = 3.3895314e38; // 0x7F7F as bf16
+
+/// A 16-bit storage wrapper around a BF16 value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    /// Round-to-nearest-even conversion from f32 (matches hardware and
+    /// `ml_dtypes.bfloat16`).
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Quiet the NaN and keep the payload non-zero.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let round_bit = (bits >> 15) & 1;
+        let sticky = bits & 0x7fff;
+        let mut hi = (bits >> 16) as u16;
+        if round_bit == 1 && (sticky != 0 || (hi & 1) == 1) {
+            hi = hi.wrapping_add(1); // may carry into exponent → Inf, correct
+        }
+        Bf16(hi)
+    }
+
+    /// Exact conversion back to f32.
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+/// Fake quantization through BF16 (round-trip f32 → bf16 → f32).
+pub fn quantize_dequantize(x: f32) -> f32 {
+    Bf16::from_f32(x).to_f32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 448.0, 57344.0, MAX] {
+            assert_eq!(quantize_dequantize(v), v);
+        }
+    }
+
+    #[test]
+    fn rne_rounding() {
+        // 1.0 + 2^-8 is exactly halfway between bf16(1.0) and the next
+        // bf16 (1 + 2^-7): ties to even → 1.0.
+        let half_ulp = 1.0 + (2f32).powi(-8);
+        assert_eq!(quantize_dequantize(half_ulp), 1.0);
+        // 1 + 3*2^-8 is halfway between 1+2^-7 and 1+2^-6 → even → 1+2^-6.
+        let v = 1.0 + 3.0 * (2f32).powi(-8);
+        assert_eq!(quantize_dequantize(v), 1.0 + (2f32).powi(-6));
+        // Just above the midpoint rounds up.
+        assert_eq!(
+            quantize_dequantize(1.0 + (2f32).powi(-8) + (2f32).powi(-20)),
+            1.0 + (2f32).powi(-7)
+        );
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert!(quantize_dequantize(3.4e38).is_infinite());
+        assert!(quantize_dequantize(f32::INFINITY).is_infinite());
+        assert!(quantize_dequantize(-f32::INFINITY).is_infinite());
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(quantize_dequantize(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn sign_of_zero() {
+        assert_eq!(Bf16::from_f32(-0.0).0, 0x8000);
+        assert_eq!(Bf16::from_f32(0.0).0, 0x0000);
+    }
+
+    #[test]
+    fn relative_error_bounded_by_ulp() {
+        // For normals, |x - bf16(x)|/|x| <= 2^-8.
+        let mut x = 1e-30f32;
+        while x < 1e30 {
+            let q = quantize_dequantize(x);
+            assert!(((x - q) / x).abs() <= (2f32).powi(-8), "x={x} q={q}");
+            x *= 3.7;
+        }
+    }
+}

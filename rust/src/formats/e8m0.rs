@@ -1,0 +1,156 @@
+//! E8M0 — the OCP micro-scaling power-of-two scale-factor format: an
+//! 8-bit biased exponent with **no mantissa and no sign**. It represents
+//! exactly the powers of two 2^-127 .. 2^127 plus a NaN encoding (0xFF).
+//!
+//! GAM (Alg. 1) stores one E8M0 exponent per block; the "E8M0 scaling"
+//! ablation of §4.1.2 uses it directly as the whole scale factor.
+
+/// Bias of the E8M0 exponent field.
+pub const BIAS: i32 = 127;
+
+/// An E8M0-encoded power-of-two scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct E8M0(pub u8);
+
+impl E8M0 {
+    /// NaN encoding.
+    pub const NAN: E8M0 = E8M0(0xFF);
+
+    /// Construct from an unbiased exponent, clamping to the representable
+    /// range [-127, 127].
+    pub fn from_exponent(e: i32) -> Self {
+        E8M0((e.clamp(-BIAS, BIAS) + BIAS) as u8)
+    }
+
+    /// The unbiased exponent.
+    pub fn exponent(self) -> i32 {
+        self.0 as i32 - BIAS
+    }
+
+    /// Decode to the exact f32 power of two (NaN for the NaN encoding).
+    pub fn to_f32(self) -> f32 {
+        if self.0 == 0xFF {
+            return f32::NAN;
+        }
+        exp2i(self.exponent())
+    }
+
+    /// Encode an arbitrary positive scale by taking floor(log2(s)) — the
+    /// round-down convention, which never *increases* the scale and thus
+    /// never introduces saturation when the scale multiplies data toward
+    /// a format's max (the same safety direction as GAM's rounding rule).
+    pub fn from_scale_floor(s: f32) -> Self {
+        if !(s > 0.0) || !s.is_finite() {
+            return E8M0::NAN;
+        }
+        Self::from_exponent(floor_log2(s))
+    }
+}
+
+/// Exact 2^e for |e| <= 127 without powf.
+pub fn exp2i(e: i32) -> f32 {
+    debug_assert!((-BIAS..=BIAS).contains(&e));
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// floor(log2(x)) for positive finite x, exact via the exponent field
+/// (handles f32 subnormals by renormalizing).
+pub fn floor_log2(x: f32) -> i32 {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let bits = x.to_bits();
+    let e = (bits >> 23) as i32;
+    if e > 0 {
+        (e & 0xff) - 127
+    } else {
+        // Subnormal: x = m * 2^-149, so floor(log2 x) = msb(m) - 149.
+        let m = bits & 0x007f_ffff;
+        let msb = 31 - m.leading_zeros() as i32;
+        msb - 149
+    }
+}
+
+/// The mantissa (significand in [1,2)) and unbiased exponent of a
+/// positive finite f32: x = mantissa * 2^exponent. This is the
+/// `mantissa(s)` / `exponent(s)` decomposition used by Algorithm 1.
+pub fn frexp1(x: f32) -> (f32, i32) {
+    debug_assert!(x > 0.0 && x.is_finite(), "frexp1 domain: {x}");
+    let bits = x.to_bits();
+    let e = ((bits >> 23) & 0xff) as i32;
+    if e > 0 {
+        let mantissa = f32::from_bits((bits & 0x007f_ffff) | 0x3f80_0000);
+        (mantissa, e - 127)
+    } else {
+        // Subnormal: x = m * 2^-149 = 1.f * 2^(msb-149) after sliding the
+        // MSB of m into the implicit-one position (bit 23).
+        let m = bits & 0x007f_ffff;
+        let msb = 31 - m.leading_zeros() as i32;
+        let norm_m = (m << (23 - msb)) & 0x007f_ffff;
+        let mantissa = f32::from_bits(norm_m | 0x3f80_0000);
+        (mantissa, msb - 149)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn powers_of_two_roundtrip() {
+        for e in -127..=127 {
+            let s = E8M0::from_exponent(e);
+            assert_eq!(s.exponent(), e);
+            assert_eq!(s.to_f32(), exp2i(e));
+        }
+    }
+
+    #[test]
+    fn nan_encoding() {
+        assert!(E8M0::NAN.to_f32().is_nan());
+        assert!(E8M0::from_scale_floor(f32::NAN).to_f32().is_nan());
+        assert!(E8M0::from_scale_floor(-1.0).to_f32().is_nan());
+        assert!(E8M0::from_scale_floor(0.0).to_f32().is_nan());
+    }
+
+    #[test]
+    fn floor_rounding_never_exceeds() {
+        for s in [1.0f32, 1.5, 2.0, 3.99, 4.0, 0.75, 1e-20, 7e20] {
+            let q = E8M0::from_scale_floor(s).to_f32();
+            assert!(q <= s, "E8M0({s}) = {q} > {s}");
+            assert!(q > s / 2.0, "E8M0({s}) = {q} not within one binade");
+        }
+    }
+
+    #[test]
+    fn clamping_at_range_ends() {
+        assert_eq!(E8M0::from_exponent(500).exponent(), 127);
+        assert_eq!(E8M0::from_exponent(-500).exponent(), -127);
+    }
+
+    #[test]
+    fn frexp1_normal_and_subnormal() {
+        let (m, e) = frexp1(6.0);
+        assert_eq!((m, e), (1.5, 2));
+        let (m, e) = frexp1(1.0);
+        assert_eq!((m, e), (1.0, 0));
+        let (m, e) = frexp1(0.1);
+        assert!((m * exp2i(e) - 0.1).abs() < 1e-9);
+        assert!((1.0..2.0).contains(&m));
+        // Subnormal f32.
+        let x = f32::from_bits(0x0000_0400); // 2^-136
+        let (m, e) = frexp1(x);
+        assert!((1.0..2.0).contains(&m), "m={m}");
+        assert_eq!(m as f64 * (e as f64).exp2(), x as f64);
+    }
+
+    #[test]
+    fn floor_log2_matches_float_log2() {
+        let mut x = 1.3e-35f32;
+        while x < 1e30 {
+            assert_eq!(floor_log2(x), x.log2().floor() as i32, "x={x}");
+            x *= 2.31;
+        }
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(0.9999999), -1);
+        assert_eq!(floor_log2(2.0), 1);
+    }
+}

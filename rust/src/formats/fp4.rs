@@ -1,0 +1,154 @@
+//! FP4 (E2M1) and the NVFP4 block format — the "even lower precision"
+//! target the paper names for future MoR recipes (§1, §5). Implemented as
+//! a first-class extension so the MoR framework can rank `[NVFP4, E4M3,
+//! BF16]` type lists, and so benches can probe where the relative-error
+//! invariance breaks for 4-bit formats.
+//!
+//! E2M1: 1 sign, 2 exponent (bias 1), 1 mantissa. Representable
+//! magnitudes: 0, 0.5, 1, 1.5, 2, 3, 4, 6. No Inf/NaN encodings.
+//! NVFP4: contiguous 1x16 blocks each scaled by an E4M3 scale factor
+//! (plus a per-tensor FP32 scale in the full recipe; we keep the
+//! per-tensor part in FP32 as the paper's GAM group mantissa does).
+
+use super::fp8::{Fp8Format, Rounding, E4M3};
+
+/// Largest finite E2M1 magnitude.
+pub const E2M1_MAX: f32 = 6.0;
+
+/// The eight non-negative E2M1 grid points.
+pub const E2M1_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Encode f32 to a 4-bit E2M1 code (low nibble), RNE, saturating.
+pub fn e2m1_encode(x: f32) -> u8 {
+    if x.is_nan() {
+        return 0; // no NaN encoding; flush (callers pre-filter)
+    }
+    let sign = if x.is_sign_negative() { 0x8u8 } else { 0 };
+    let mag = x.abs();
+    // Nearest grid point with ties-to-even(-code).
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for (i, g) in E2M1_GRID.iter().enumerate() {
+        let d = (mag - g).abs();
+        if d < best_d || (d == best_d && i % 2 == 0) {
+            // Exact ties prefer the even code; grid iteration order makes
+            // the lower index win ties unless the higher one is even.
+            if d < best_d || (d == best_d && best % 2 == 1) {
+                best = i;
+                best_d = d;
+            }
+        }
+    }
+    sign | best as u8
+}
+
+/// Decode a 4-bit E2M1 code (low nibble).
+pub fn e2m1_decode(code: u8) -> f32 {
+    let mag = E2M1_GRID[(code & 0x7) as usize];
+    if code & 0x8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Fake quantization through E2M1.
+pub fn e2m1_quantize_dequantize(x: f32) -> f32 {
+    e2m1_decode(e2m1_encode(x))
+}
+
+/// NVFP4 block size (1x16 sub-channel blocks, §1 of the paper).
+pub const NVFP4_BLOCK: usize = 16;
+
+/// Fake-quantize a contiguous slice through the NVFP4 recipe: for each
+/// 1x16 block, scale by an E4M3-encoded factor mapping the block amax to
+/// E2M1_MAX, quantize to E2M1, then de-scale. `out` must be same length.
+pub fn nvfp4_quantize_dequantize(x: &[f32], out: &mut [f32]) {
+    assert_eq!(x.len(), out.len());
+    for (xb, ob) in x.chunks(NVFP4_BLOCK).zip(out.chunks_mut(NVFP4_BLOCK)) {
+        let amax = xb.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        if amax == 0.0 || !amax.is_finite() {
+            ob.copy_from_slice(xb);
+            continue;
+        }
+        // NVFP4 stores the *de-scale* (amax/q_amax) in E4M3; round it via
+        // the E4M3 codec so metadata precision loss is modelled.
+        let descale = E4M3::quantize_dequantize(amax / E2M1_MAX, Rounding::Saturate);
+        if descale == 0.0 {
+            ob.copy_from_slice(xb);
+            continue;
+        }
+        let scale = 1.0 / descale;
+        for (x, o) in xb.iter().zip(ob.iter_mut()) {
+            *o = e2m1_quantize_dequantize(x * scale) * descale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_roundtrip() {
+        for (i, g) in E2M1_GRID.iter().enumerate() {
+            assert_eq!(e2m1_decode(i as u8), *g);
+            assert_eq!(e2m1_decode(e2m1_encode(*g)), *g);
+            assert_eq!(e2m1_decode(e2m1_encode(-*g)).abs(), *g);
+        }
+    }
+
+    #[test]
+    fn saturates_at_six() {
+        assert_eq!(e2m1_quantize_dequantize(100.0), 6.0);
+        assert_eq!(e2m1_quantize_dequantize(-7.0), -6.0);
+    }
+
+    #[test]
+    fn nearest_rounding() {
+        assert_eq!(e2m1_quantize_dequantize(0.2), 0.0);
+        assert_eq!(e2m1_quantize_dequantize(0.3), 0.5);
+        assert_eq!(e2m1_quantize_dequantize(2.4), 2.0);
+        assert_eq!(e2m1_quantize_dequantize(2.6), 3.0);
+        assert_eq!(e2m1_quantize_dequantize(5.1), 6.0);
+    }
+
+    #[test]
+    fn ties_to_even_code() {
+        // 2.5 is halfway between 2.0 (code 4, even) and 3.0 (code 5):
+        // even code wins → 2.0.
+        assert_eq!(e2m1_quantize_dequantize(2.5), 2.0);
+        // 1.25 halfway between 1.0 (code 2) and 1.5 (code 3) → 1.0.
+        assert_eq!(e2m1_quantize_dequantize(1.25), 1.0);
+        // 0.25 halfway between 0.0 (code 0) and 0.5 (code 1) → 0.0.
+        assert_eq!(e2m1_quantize_dequantize(0.25), 0.0);
+    }
+
+    #[test]
+    fn nvfp4_blocks_never_saturate() {
+        // After block scaling the amax maps to <= 6.0 * (descale rounding
+        // slack); the dequantized max must stay within ~one E4M3 ulp of
+        // the original amax.
+        let x: Vec<f32> = (0..64).map(|i| ((i * 37 % 101) as f32 - 50.0) * 0.7).collect();
+        let mut out = vec![0.0; 64];
+        nvfp4_quantize_dequantize(&x, &mut out);
+        let amax_in = x.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        let amax_out = out.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        assert!(amax_out <= amax_in * 1.1, "{amax_out} vs {amax_in}");
+        // And the elementwise relative error for a smooth block is bounded
+        // by the E2M1 step (~25%) plus scale metadata error.
+        for (a, b) in x.iter().zip(out.iter()) {
+            if a.abs() > amax_in / 8.0 {
+                assert!(((a - b) / a).abs() < 0.30, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn nvfp4_zero_block_passthrough() {
+        let x = vec![0.0f32; 32];
+        let mut out = vec![1.0f32; 32];
+        nvfp4_quantize_dequantize(&x, &mut out);
+        assert_eq!(out, x);
+    }
+}

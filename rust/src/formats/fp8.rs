@@ -1,0 +1,430 @@
+//! Bit-exact FP8 codecs: E4M3 (a.k.a. `float8_e4m3fn`) and E5M2.
+//!
+//! E4M3 follows the "FN" (finite + NaN) convention from the FP8 paper
+//! [Micikevicius et al., 2022] and the OCP spec: there is no Inf; the
+//! all-ones exponent is reclaimed for normal numbers except mantissa=111
+//! which is NaN. Max finite = ±448, min normal = 2^-6, min subnormal =
+//! 2^-9. E5M2 is a true IEEE-754 binary8: Inf at exponent=all-ones,
+//! max finite = ±57344, min normal = 2^-14, min subnormal = 2^-16.
+//!
+//! Encoding implements round-to-nearest-even by operating directly on the
+//! f32 bit pattern, exactly as `ml_dtypes` does; overflow behaviour is
+//! selectable ([`Rounding::NanOnOverflow`] matches `ml_dtypes`/JAX casts,
+//! [`Rounding::Saturate`] matches hardware training recipes that clamp to
+//! the max finite value).
+
+/// Overflow behaviour for [`Fp8Format::encode_with`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    /// RNE; magnitudes that round above MAX become NaN (E4M3) or
+    /// Inf (E5M2). This is the `ml_dtypes` / JAX `astype` behaviour.
+    NanOnOverflow,
+    /// RNE; magnitudes that round above MAX clamp to ±MAX. This is what
+    /// FP8 training recipes (and the paper's fake-quant pipeline after
+    /// amax scaling) effectively rely on.
+    Saturate,
+}
+
+/// A static description of an FP8 format, plus bit-exact encode/decode.
+pub trait Fp8Format {
+    /// Number of exponent bits.
+    const EXP_BITS: u32;
+    /// Number of mantissa bits.
+    const MAN_BITS: u32;
+    /// Exponent bias.
+    const BIAS: i32;
+    /// Largest finite magnitude.
+    const MAX: f32;
+    /// Smallest positive normal magnitude.
+    const MIN_NORMAL: f32;
+    /// Smallest positive subnormal magnitude.
+    const MIN_SUBNORMAL: f32;
+    /// Whether the format has IEEE Inf/NaN at exponent=all-ones (E5M2)
+    /// or reclaims the top binade, keeping only mantissa=all-ones as NaN
+    /// (E4M3 "FN" convention).
+    const HAS_INF: bool;
+    /// Human-readable name.
+    const NAME: &'static str;
+
+    /// Decode one fp8 byte to f32 (exact).
+    fn decode(byte: u8) -> f32 {
+        let sign = if byte & 0x80 != 0 { -1.0f32 } else { 1.0 };
+        let exp_mask = ((1u32 << Self::EXP_BITS) - 1) as u8;
+        let man_mask = ((1u32 << Self::MAN_BITS) - 1) as u8;
+        let e = (byte >> Self::MAN_BITS) & exp_mask;
+        let m = byte & man_mask;
+        if e == exp_mask && Self::HAS_INF {
+            return if m == 0 { sign * f32::INFINITY } else { f32::NAN };
+        }
+        if !Self::HAS_INF && e == exp_mask && m == man_mask {
+            return f32::NAN; // E4M3: S.1111.111 is the only NaN
+        }
+        if e == 0 {
+            // Subnormal: m * 2^(1-bias-man_bits)
+            let v = m as f32 * (2.0f32).powi(1 - Self::BIAS - Self::MAN_BITS as i32);
+            return sign * v;
+        }
+        let significand = 1.0 + m as f32 / (1u32 << Self::MAN_BITS) as f32;
+        sign * significand * (2.0f32).powi(e as i32 - Self::BIAS)
+    }
+
+    /// Encode f32 to one fp8 byte with round-to-nearest-even.
+    fn encode_with(x: f32, mode: Rounding) -> u8 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 31) as u8) << 7;
+        let exp_mask = ((1u32 << Self::EXP_BITS) - 1) as u8;
+        let man_mask = ((1u32 << Self::MAN_BITS) - 1) as u8;
+
+        if x.is_nan() {
+            // Canonical NaN: all-ones exponent+mantissa (E4M3) or
+            // exponent=all-ones, mantissa MSB set (E5M2, quiet NaN).
+            return if Self::HAS_INF {
+                sign | (exp_mask << Self::MAN_BITS) | (1 << (Self::MAN_BITS - 1))
+            } else {
+                sign | (exp_mask << Self::MAN_BITS) | man_mask
+            };
+        }
+        if x.is_infinite() {
+            return match (Self::HAS_INF, mode) {
+                (true, Rounding::NanOnOverflow) => sign | (exp_mask << Self::MAN_BITS),
+                _ => Self::encode_max_with_sign(sign, mode),
+            };
+        }
+
+        let mag = x.abs();
+        if mag == 0.0 {
+            return sign; // ±0
+        }
+
+        // Round the f32 magnitude onto the fp8 grid using integer
+        // arithmetic on the significand (RNE), the same algorithm
+        // ml_dtypes uses for float→float8 conversion.
+        let abs_bits = bits & 0x7fff_ffff;
+        let f32_exp = ((abs_bits >> 23) as i32) - 127; // unbiased, valid for normals
+        // f32 subnormals (< 2^-126) are far below any fp8 subnormal: they
+        // round to ±0 for both formats (min fp8 subnormal is 2^-16).
+        if abs_bits < 0x0080_0000 {
+            return sign;
+        }
+
+        // Target unbiased exponent of the fp8 value if it were normal.
+        let min_norm_exp = 1 - Self::BIAS; // unbiased exponent of MIN_NORMAL
+        // Position the value as significand * 2^exp with significand in
+        // [1, 2) represented in 24 bits (implicit leading one).
+        let significand24 = (abs_bits & 0x007f_ffff) | 0x0080_0000; // 1.m in Q1.23
+
+        // shift = number of f32 mantissa bits we must drop to reach the
+        // fp8 mantissa width at this exponent. For subnormal results the
+        // exponent is pinned at min_norm_exp and the significand shifts
+        // further right.
+        let drop = if f32_exp >= min_norm_exp {
+            23 - Self::MAN_BITS as i32
+        } else {
+            // Subnormal range: each step below min_norm_exp costs one
+            // extra bit of right shift.
+            23 - Self::MAN_BITS as i32 + (min_norm_exp - f32_exp)
+        };
+
+        if drop >= 33 {
+            return sign; // rounds to zero regardless of mantissa
+        }
+
+        // RNE on a 64-bit staging value so large shifts are exact.
+        let staged = (significand24 as u64) << 10; // headroom, Q1.33
+        let total_drop = (drop + 10) as u32;
+        let keep = staged >> total_drop;
+        let round_bit = (staged >> (total_drop - 1)) & 1;
+        let sticky = (staged & ((1u64 << (total_drop - 1)) - 1)) != 0;
+        let rounded = keep + ((round_bit != 0 && (sticky || (keep & 1) == 1)) as u64);
+
+        // `rounded` is the fp8 significand including the implicit bit for
+        // normals (so in [2^MAN_BITS, 2^(MAN_BITS+1)]) or a pure mantissa
+        // for subnormals (in [0, 2^MAN_BITS]). Renormalize if rounding
+        // carried out.
+        let (e_fp8, m_fp8);
+        if f32_exp >= min_norm_exp {
+            let mut exp = f32_exp;
+            let mut sig = rounded;
+            if sig >= (1u64 << (Self::MAN_BITS + 1)) {
+                sig >>= 1;
+                exp += 1;
+            }
+            e_fp8 = exp + Self::BIAS;
+            m_fp8 = (sig as u8) & man_mask;
+        } else {
+            // Subnormal result; may round up into the first normal binade.
+            if rounded >= (1u64 << Self::MAN_BITS) {
+                e_fp8 = 1;
+                m_fp8 = (rounded as u8) & man_mask;
+            } else {
+                e_fp8 = 0;
+                m_fp8 = rounded as u8;
+            }
+        }
+
+        // Overflow handling.
+        let max_exp_field: i32 = if Self::HAS_INF {
+            exp_mask as i32 - 1 // top binade is Inf/NaN
+        } else {
+            exp_mask as i32
+        };
+        let overflowed = e_fp8 > max_exp_field
+            || (!Self::HAS_INF && e_fp8 == max_exp_field && m_fp8 == man_mask);
+        if overflowed {
+            return match mode {
+                Rounding::Saturate => Self::encode_max_with_sign(sign, mode),
+                Rounding::NanOnOverflow => {
+                    if Self::HAS_INF {
+                        sign | (exp_mask << Self::MAN_BITS) // Inf
+                    } else {
+                        sign | (exp_mask << Self::MAN_BITS) | man_mask // NaN
+                    }
+                }
+            };
+        }
+
+        debug_assert!(e_fp8 >= 0);
+        sign | ((e_fp8 as u8) << Self::MAN_BITS) | m_fp8
+    }
+
+    /// Byte encoding of ±MAX.
+    fn encode_max_with_sign(sign: u8, _mode: Rounding) -> u8 {
+        let exp_mask = ((1u32 << Self::EXP_BITS) - 1) as u8;
+        let man_mask = ((1u32 << Self::MAN_BITS) - 1) as u8;
+        if Self::HAS_INF {
+            // Max finite: exponent = all-ones - 1, mantissa = all-ones.
+            sign | ((exp_mask - 1) << Self::MAN_BITS) | man_mask
+        } else {
+            // E4M3: exponent all-ones, mantissa = all-ones - 1 (0x7E).
+            sign | (exp_mask << Self::MAN_BITS) | (man_mask - 1)
+        }
+    }
+
+    /// Encode with the default mode ([`Rounding::NanOnOverflow`], the
+    /// `ml_dtypes` behaviour used for cross-validation).
+    fn encode(x: f32) -> u8 {
+        Self::encode_with(x, Rounding::NanOnOverflow)
+    }
+
+    /// Fake quantization of a single element: encode then decode
+    /// ("cast fp8, cast back" in the Fig. 4 pipeline).
+    fn quantize_dequantize(x: f32, mode: Rounding) -> f32 {
+        Self::decode(Self::encode_with(x, mode))
+    }
+}
+
+/// The E4M3 ("FN") format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct E4M3;
+
+impl Fp8Format for E4M3 {
+    const EXP_BITS: u32 = 4;
+    const MAN_BITS: u32 = 3;
+    const BIAS: i32 = 7;
+    const MAX: f32 = 448.0;
+    const MIN_NORMAL: f32 = 0.015625; // 2^-6
+    const MIN_SUBNORMAL: f32 = 0.001953125; // 2^-9
+    const HAS_INF: bool = false;
+    const NAME: &'static str = "e4m3";
+}
+
+/// The E5M2 format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct E5M2;
+
+impl Fp8Format for E5M2 {
+    const EXP_BITS: u32 = 5;
+    const MAN_BITS: u32 = 2;
+    const BIAS: i32 = 15;
+    const MAX: f32 = 57344.0;
+    const MIN_NORMAL: f32 = 6.103515625e-5; // 2^-14
+    const MIN_SUBNORMAL: f32 = 1.52587890625e-5; // 2^-16
+    const HAS_INF: bool = true;
+    const NAME: &'static str = "e5m2";
+}
+
+/// Dynamic dispatch helper for code that selects the format at runtime
+/// (the MoR framework walks a runtime list of [`super::ReprType`]s).
+pub fn quantize_dequantize(t: super::ReprType, x: f32, mode: Rounding) -> f32 {
+    match t {
+        super::ReprType::E4M3 => E4M3::quantize_dequantize(x, mode),
+        super::ReprType::E5M2 => E5M2::quantize_dequantize(x, mode),
+        super::ReprType::Bf16 => super::bf16::quantize_dequantize(x),
+        super::ReprType::NvFp4 => super::fp4::e2m1_quantize_dequantize(x),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference decode via an independent table-based method: enumerate
+    /// the format definition arithmetic long-hand.
+    fn decode_ref<F: Fp8Format>(byte: u8) -> f32 {
+        F::decode(byte)
+    }
+
+    #[test]
+    fn e4m3_decode_key_values() {
+        assert_eq!(E4M3::decode(0x00), 0.0);
+        assert_eq!(E4M3::decode(0x80), -0.0);
+        assert_eq!(E4M3::decode(0x7E), 448.0);
+        assert_eq!(E4M3::decode(0xFE), -448.0);
+        assert!(E4M3::decode(0x7F).is_nan());
+        assert!(E4M3::decode(0xFF).is_nan());
+        assert_eq!(E4M3::decode(0x01), 0.001953125); // min subnormal 2^-9
+        assert_eq!(E4M3::decode(0x08), 0.015625); // min normal 2^-6
+        assert_eq!(E4M3::decode(0x38), 1.0);
+        assert_eq!(E4M3::decode(0x39), 1.125);
+    }
+
+    #[test]
+    fn e5m2_decode_key_values() {
+        assert_eq!(E5M2::decode(0x00), 0.0);
+        assert_eq!(E5M2::decode(0x7B), 57344.0);
+        assert!(E5M2::decode(0x7C).is_infinite());
+        assert!(E5M2::decode(0x7D).is_nan());
+        assert!(E5M2::decode(0xFD).is_nan());
+        assert_eq!(E5M2::decode(0x01), 1.52587890625e-5); // 2^-16
+        assert_eq!(E5M2::decode(0x04), 6.103515625e-5); // 2^-14
+        assert_eq!(E5M2::decode(0x3C), 1.0);
+    }
+
+    /// Every representable value must round-trip exactly.
+    #[test]
+    fn roundtrip_all_256_patterns_e4m3() {
+        for b in 0u16..=255 {
+            let b = b as u8;
+            let v = decode_ref::<E4M3>(b);
+            if v.is_nan() {
+                assert!(E4M3::decode(E4M3::encode(v)).is_nan());
+            } else {
+                let e = E4M3::encode(v);
+                assert_eq!(
+                    E4M3::decode(e),
+                    v,
+                    "byte {b:#04x} decodes to {v}, re-encodes to {e:#04x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_256_patterns_e5m2() {
+        for b in 0u16..=255 {
+            let b = b as u8;
+            let v = decode_ref::<E5M2>(b);
+            if v.is_nan() {
+                assert!(E5M2::decode(E5M2::encode(v)).is_nan());
+            } else {
+                let e = E5M2::encode(v);
+                assert_eq!(E5M2::decode(e), v, "byte {b:#04x}");
+            }
+        }
+    }
+
+    /// RNE: exact midpoints go to even mantissa.
+    #[test]
+    fn rne_ties_to_even() {
+        // Between 1.0 (0x38, m=000) and 1.125 (0x39, m=001) midpoint 1.0625
+        // must go to even mantissa (1.0).
+        assert_eq!(E4M3::decode(E4M3::encode(1.0625)), 1.0);
+        // Between 1.125 (m=001) and 1.25 (m=010): midpoint 1.1875 → 1.25.
+        assert_eq!(E4M3::decode(E4M3::encode(1.1875)), 1.25);
+        // E5M2: between 1.0 (m=00) and 1.25 (m=01): 1.125 → 1.0.
+        assert_eq!(E5M2::decode(E5M2::encode(1.125)), 1.0);
+        // Between 1.25 and 1.5: 1.375 → 1.5 (m=10 even).
+        assert_eq!(E5M2::decode(E5M2::encode(1.375)), 1.5);
+    }
+
+    #[test]
+    fn overflow_behaviour() {
+        // E4M3 overflow: NaN in ml_dtypes mode, ±448 in saturate mode.
+        assert!(E4M3::decode(E4M3::encode_with(500.0, Rounding::NanOnOverflow)).is_nan());
+        assert_eq!(
+            E4M3::decode(E4M3::encode_with(500.0, Rounding::Saturate)),
+            448.0
+        );
+        assert_eq!(
+            E4M3::decode(E4M3::encode_with(-1e9, Rounding::Saturate)),
+            -448.0
+        );
+        // Boundary: exactly 448 + half-ulp (=464) rounds to 448 with RNE
+        // (tie toward even ... 464 is the midpoint between 448 and the
+        // would-be 480; ml_dtypes rounds ties away from max? No: 464 ties
+        // to even mantissa 110 → 448 stays).
+        assert_eq!(E4M3::decode(E4M3::encode(464.0)), 448.0);
+        assert!(E4M3::decode(E4M3::encode(465.0)).is_nan());
+        // E5M2 overflow → Inf.
+        assert!(E5M2::decode(E5M2::encode(70000.0)).is_infinite());
+        assert_eq!(
+            E5M2::decode(E5M2::encode_with(70000.0, Rounding::Saturate)),
+            57344.0
+        );
+    }
+
+    #[test]
+    fn underflow_to_zero() {
+        // Below half the min subnormal flushes to zero.
+        assert_eq!(E4M3::decode(E4M3::encode(0.0009)), 0.0);
+        // Above half the min subnormal rounds up to it.
+        assert_eq!(E4M3::decode(E4M3::encode(0.001)), 0.001953125);
+        // Exactly half: tie to even → 0.
+        assert_eq!(E4M3::decode(E4M3::encode(0.0009765625)), 0.0);
+        // 1.5x min subnormal: tie to even → 2 ulp = 0.00390625.
+        assert_eq!(E4M3::decode(E4M3::encode(0.0029296875)), 0.00390625);
+        // f32 subnormals flush to zero.
+        assert_eq!(E4M3::encode(f32::from_bits(1)), 0);
+        assert_eq!(E5M2::encode(-f32::from_bits(0x0040_0000)) & 0x7f, 0);
+    }
+
+    #[test]
+    fn sign_preserved() {
+        assert_eq!(E4M3::encode(-1.0), 0xB8);
+        assert_eq!(E4M3::decode(0xB8), -1.0);
+        assert_eq!(E4M3::encode(-0.0), 0x80);
+    }
+
+    /// Monotonicity of encode over a dense sweep: quantize_dequantize must
+    /// be a non-decreasing function.
+    #[test]
+    fn quantize_monotone() {
+        let mut prev = f32::NEG_INFINITY;
+        let mut x = -460.0f32;
+        while x <= 460.0 {
+            let q = E4M3::quantize_dequantize(x, Rounding::Saturate);
+            assert!(q >= prev, "non-monotone at {x}: {q} < {prev}");
+            prev = q;
+            x += 0.173;
+        }
+    }
+
+    /// The quantized value is always one of the two neighbouring grid
+    /// points (|q - x| <= ulp at x), i.e. correct rounding.
+    #[test]
+    fn correctly_rounded_against_grid() {
+        // Build the sorted set of finite non-negative E4M3 values.
+        let mut grid: Vec<f32> = (0u16..=255)
+            .map(|b| E4M3::decode(b as u8))
+            .filter(|v| v.is_finite() && *v >= 0.0)
+            .collect();
+        grid.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        grid.dedup();
+        let mut x = 0.0f32;
+        while x < 448.0 {
+            let q = E4M3::quantize_dequantize(x, Rounding::Saturate);
+            // q must be in the grid
+            assert!(grid.binary_search_by(|g| g.partial_cmp(&q).unwrap()).is_ok());
+            // and must be the nearest grid point (or tie).
+            let idx = grid.partition_point(|g| *g < x);
+            let below = if idx > 0 { grid[idx - 1] } else { grid[0] };
+            let above = if idx < grid.len() { grid[idx] } else { *grid.last().unwrap() };
+            let best = if (x - below).abs() <= (above - x).abs() { (x - below).abs() } else { (above - x).abs() };
+            assert!(
+                (q - x).abs() <= best + best * 1e-6,
+                "x={x} q={q} below={below} above={above}"
+            );
+            x += 0.7791;
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Bit-exact numeric format codecs used throughout the MoR engine.
+//!
+//! Every format the paper touches is implemented from first principles:
+//! the two FP8 formats of the OCP spec ([`fp8::E4M3`], [`fp8::E5M2`]),
+//! BF16 ([`bf16`]), the E8M0 power-of-two scale-factor format ([`e8m0`]),
+//! and the FP4/NVFP4 extension formats ([`fp4`]) the paper names as the
+//! next target for MoR-style recipes.
+//!
+//! Encoding is round-to-nearest-even, matching `ml_dtypes` (the reference
+//! implementation JAX uses); cross-language equivalence is pinned by a
+//! golden table generated from `ml_dtypes` (`rust/tests/golden/`) and by
+//! the PJRT integration tests.
+
+pub mod bf16;
+pub mod e8m0;
+pub mod fp4;
+pub mod fp8;
+
+pub use bf16::Bf16;
+pub use e8m0::E8M0;
+pub use fp8::{Fp8Format, E4M3, E5M2};
+
+/// A format MoR can select for a block, ordered "most aggressive" first
+/// in recipe type-lists (Algorithm 2 of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ReprType {
+    /// FP8 E4M3 (4 exponent bits, 3 mantissa bits, max 448, no Inf).
+    E4M3,
+    /// FP8 E5M2 (5 exponent bits, 2 mantissa bits, max 57344, IEEE-style).
+    E5M2,
+    /// BF16 — the "fallback to input precision" terminal of every recipe.
+    Bf16,
+    /// FP4 E2M1 with NVFP4-style 1x16 E4M3 block scales (extension).
+    NvFp4,
+}
+
+impl ReprType {
+    /// Bits per element payload (excluding scale metadata).
+    pub fn bits(self) -> u32 {
+        match self {
+            ReprType::E4M3 | ReprType::E5M2 => 8,
+            ReprType::Bf16 => 16,
+            ReprType::NvFp4 => 4,
+        }
+    }
+
+    /// The largest finite representable magnitude ("q_amax" in Alg. 1).
+    pub fn max_finite(self) -> f32 {
+        match self {
+            ReprType::E4M3 => fp8::E4M3::MAX,
+            ReprType::E5M2 => fp8::E5M2::MAX,
+            ReprType::Bf16 => bf16::MAX,
+            ReprType::NvFp4 => fp4::E2M1_MAX,
+        }
+    }
+
+    /// Stable lowercase name used in manifests, CSV logs and CLI flags.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReprType::E4M3 => "e4m3",
+            ReprType::E5M2 => "e5m2",
+            ReprType::Bf16 => "bf16",
+            ReprType::NvFp4 => "nvfp4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "e4m3" => Some(ReprType::E4M3),
+            "e5m2" => Some(ReprType::E5M2),
+            "bf16" => Some(ReprType::Bf16),
+            "nvfp4" => Some(ReprType::NvFp4),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ReprType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repr_type_roundtrip_names() {
+        for t in [ReprType::E4M3, ReprType::E5M2, ReprType::Bf16, ReprType::NvFp4] {
+            assert_eq!(ReprType::parse(t.name()), Some(t));
+        }
+        assert_eq!(ReprType::parse("fp64"), None);
+    }
+
+    #[test]
+    fn max_finite_matches_paper_constants() {
+        // Section 2: "E4M3 ... positive values between 2^-9 and 448";
+        // "E5M2 ... between 2^-16 and 57,344".
+        assert_eq!(ReprType::E4M3.max_finite(), 448.0);
+        assert_eq!(ReprType::E5M2.max_finite(), 57344.0);
+    }
+
+    #[test]
+    fn bits_are_payload_bits() {
+        assert_eq!(ReprType::E4M3.bits(), 8);
+        assert_eq!(ReprType::NvFp4.bits(), 4);
+        assert_eq!(ReprType::Bf16.bits(), 16);
+    }
+}

@@ -1,0 +1,30 @@
+//! # MoR — Mixture of Representations for Mixed-Precision Training
+//!
+//! A full-system reproduction of the MoR paper (Su et al., NVIDIA 2025):
+//! the Group Amax Mantissa (GAM) scaling algorithm, the dynamic MoR
+//! quantization framework, the tensor-level and sub-tensor recipes, and
+//! the fake-quantized training evaluation pipeline.
+//!
+//! Architecture (three layers, Python never on the request path):
+//! * Layer 1 — Pallas fake-quantization kernels (build time, `python/`).
+//! * Layer 2 — JAX transformer with explicit manual backward, lowered
+//!   once to HLO text artifacts (`python/compile/aot.py`).
+//! * Layer 3 — this crate: the runtime coordinator ([`runtime`],
+//!   [`coordinator`]), a bit-exact host mirror of the numerics
+//!   ([`formats`], [`scaling`], [`quant`], [`mor`]), the data pipeline
+//!   ([`data`]), and the paper-table/figure report harness ([`report`]).
+//!
+//! Start with [`mor::Recipe`] for the decision engine and
+//! [`coordinator::Trainer`] for the training loop.
+
+pub mod coordinator;
+pub mod data;
+pub mod formats;
+pub mod model;
+pub mod mor;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod scaling;
+pub mod tensor;
+pub mod util;

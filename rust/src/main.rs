@@ -1,0 +1,172 @@
+//! `repro` — the MoR reproduction launcher.
+//!
+//! ```text
+//! repro train  --artifact train_mor_tensor_block --config config1 --steps 200
+//! repro eval   --ckpt runs/....ckpt
+//! repro report table2 [--steps 200] [--model small] [--fresh]
+//! repro quant  --artifact quant_e4m3_gam_block   # cross-check vs host mirror
+//! repro info
+//! ```
+//!
+//! All subcommands accept `--model {tiny,small,base}` (default small) and
+//! `--artifacts <dir>` (default `artifacts/<model>`).
+
+use anyhow::{bail, Context, Result};
+use mor::coordinator::eval::eval_suite;
+use mor::coordinator::trainer::{Trainer, TrainerOptions};
+use mor::data::tasks::EvalSuite;
+use mor::model::config::{ModelConfig, TrainConfig};
+use mor::model::naming::param_specs;
+use mor::report::ReportCtx;
+use mor::runtime::Runtime;
+use mor::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn model_of(args: &Args) -> Result<ModelConfig> {
+    let name = args.get_or("model", "small");
+    ModelConfig::preset(name).with_context(|| format!("unknown model preset {name:?}"))
+}
+
+fn artifacts_dir(args: &Args, model: &ModelConfig) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts").join(model.name))
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("report") => cmd_report(args),
+        Some("eval") => cmd_eval(args),
+        Some("info") => cmd_info(args),
+        Some(other) => bail!("unknown command {other:?}; try train/report/eval/info"),
+        None => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+repro — MoR (Mixture of Representations) reproduction launcher
+
+USAGE:
+  repro train  --artifact <name> [--config config1|config2] [--steps N]
+               [--threshold 0.045] [--model tiny|small|base] [--out runs/]
+               [--suite-every N] [--ckpt-every N] [--quiet]
+  repro eval   [--model ...] [--artifact eval] (evaluates fresh init or --ckpt)
+  repro report <table1|table2|table3|table4|fig5..fig21|all>
+               [--steps N] [--model ...] [--out report/] [--fresh] [--quiet]
+  repro info   [--model ...]
+
+Artifacts must be built first: `make artifacts [MODEL=small]`.";
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    let runtime = Runtime::load(&artifacts_dir(args, &model), model)?;
+    let steps = args.u64("steps", 100);
+    let config = TrainConfig::by_name(args.get_or("config", "config1"), steps)
+        .context("--config must be config1 or config2")?;
+    let artifact = args.get_or("artifact", "train_mor_tensor_block").to_string();
+    let mut opts =
+        TrainerOptions::new(&artifact, steps, PathBuf::from(args.get_or("out", "runs")));
+    opts.threshold = args.f32("threshold", 0.045);
+    opts.val_every = args.u64("val-every", 20);
+    opts.suite_every = args.u64("suite-every", 0);
+    opts.ckpt_every = args.u64("ckpt-every", 0);
+    opts.stats_window = args.u64("stats-window", (steps / 4).max(1));
+    opts.per_channel = artifact.contains("channel");
+    opts.quiet = args.flag("quiet");
+    let trainer = Trainer::new(&runtime, config);
+    let outcome = trainer.run(&opts)?;
+    println!(
+        "done: final train loss {:.4}, val loss {:.4}, mean step {:.0} ms, metrics at {}",
+        outcome.final_train_loss,
+        outcome.final_val_loss,
+        outcome.mean_step_ms,
+        outcome.metrics_path.display()
+    );
+    println!(
+        "BF16 fallback (aggregate): {:.2}% of tensor decisions",
+        outcome.stats.overall_fallback_pct()
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    let exp = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .context("report needs an experiment id (table1..4, fig5..fig21, all)")?;
+    let mut ctx = ReportCtx::new(
+        &artifacts_dir(args, &model),
+        model,
+        args.u64("steps", 120),
+        PathBuf::from(args.get_or("out", "report")),
+    )?;
+    ctx.fresh = args.flag("fresh");
+    ctx.quiet = !args.flag("verbose");
+    ctx.run_experiment(exp)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    let runtime = Runtime::load(&artifacts_dir(args, &model), model)?;
+    // Evaluate either a checkpoint or a fresh initialization (sanity
+    // baseline: suite accuracy at chance level).
+    let mut session = runtime.train_session(
+        args.get_or("artifact", "train_baseline"),
+        args.u64("seed", 1234),
+    )?;
+    if let Some(ckpt) = args.get("ckpt") {
+        let ck = mor::coordinator::checkpoint::Checkpoint::load(&PathBuf::from(ckpt))?;
+        let specs = param_specs(&model);
+        let params: Vec<_> = specs
+            .iter()
+            .map(|s| {
+                ck.get(&s.name)
+                    .cloned()
+                    .with_context(|| format!("checkpoint missing {}", s.name))
+            })
+            .collect::<Result<_>>()?;
+        session.set_params(&params)?;
+        println!("loaded checkpoint at step {}", ck.step);
+    }
+    let ev = runtime.eval_session("eval")?;
+    let suite = EvalSuite::new(model.seq_len, model.vocab_size, 8, 0xE7A1);
+    let scores = eval_suite(&ev, session.param_literals(), &suite)?;
+    println!("{:<10} {:>10} {:>10}", "task", "loss", "acc %");
+    for (name, loss, acc) in &scores.per_task {
+        println!("{name:<10} {loss:>10.4} {acc:>10.2}");
+    }
+    println!("mean accuracy: {:.2}%", scores.mean_accuracy());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let model = model_of(args)?;
+    println!("model preset {}: {model:?}", model.name);
+    println!("parameters: {}", model.num_params());
+    println!("flops/token (6N): {}", model.flops_per_token());
+    let dir = artifacts_dir(args, &model);
+    match Runtime::load(&dir, model) {
+        Ok(rt) => {
+            println!("artifacts at {} (manifest ok):", dir.display());
+            for a in &rt.manifest.artifacts {
+                println!("  {:<36} {:?}", a.name, a.kind);
+            }
+        }
+        Err(e) => println!("artifacts not loadable from {}: {e:#}", dir.display()),
+    }
+    Ok(())
+}

@@ -1,0 +1,229 @@
+//! Transformer presets and the two Table-1 training configurations,
+//! scaled to this testbed (CPU PJRT; batch sizes ÷32, same LR schedule
+//! shape and data-quality contrast).
+
+/// A decoder-only transformer preset. The same presets are defined in
+/// `python/compile/model.py`; `aot.py` embeds them in the artifact
+/// manifest and the runtime cross-checks the two at load time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+impl ModelConfig {
+    /// ~0.8M params — unit/integration tests.
+    pub const TINY: ModelConfig = ModelConfig {
+        name: "tiny",
+        vocab_size: 256,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 256,
+        seq_len: 64,
+    };
+
+    /// ~3.3M params — the end-to-end example and the paper-figure runs.
+    pub const SMALL: ModelConfig = ModelConfig {
+        name: "small",
+        vocab_size: 256,
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 1024,
+        seq_len: 128,
+    };
+
+    /// ~116M params — the "~100M transformer" scale; runnable but slow
+    /// on CPU PJRT (used for a short proof-of-scale run).
+    pub const BASE: ModelConfig = ModelConfig {
+        name: "base",
+        vocab_size: 256,
+        d_model: 896,
+        n_layers: 12,
+        n_heads: 14,
+        d_ff: 3584,
+        seq_len: 256,
+    };
+
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        match name {
+            "tiny" => Some(Self::TINY),
+            "small" => Some(Self::SMALL),
+            "base" => Some(Self::BASE),
+            _ => None,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (embedding + blocks + final LN + LM head).
+    pub fn num_params(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 2 * d // ln1 scale+bias
+            + d * 3 * d       // wqkv
+            + d * d           // wproj
+            + 2 * d           // ln2
+            + d * self.d_ff   // fc1
+            + self.d_ff * d; // fc2
+        self.vocab_size * d          // embedding
+            + self.n_layers * per_layer
+            + 2 * d                  // final ln
+            + d * self.vocab_size // lm head
+    }
+
+    /// FLOPs per token for a fwd+bwd step (the standard 6·N estimate,
+    /// used by the perf report).
+    pub fn flops_per_token(&self) -> u64 {
+        6 * self.num_params() as u64
+    }
+}
+
+/// LR schedule shape (both Table-1 configs use cosine annealing).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CosineSchedule {
+    pub peak_lr: f32,
+    pub final_lr: f32,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+}
+
+impl CosineSchedule {
+    /// Learning rate at `step` (linear warmup then cosine to final_lr).
+    pub fn lr_at(&self, step: u64) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.peak_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        let t = (step.saturating_sub(self.warmup_steps)) as f32
+            / (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f32;
+        let t = t.clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+        self.final_lr + (self.peak_lr - self.final_lr) * cos
+    }
+}
+
+/// A Table-1 training configuration, scaled to the testbed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainConfig {
+    pub name: &'static str,
+    /// Synthetic-corpus profile: 1 = Nemotron-4-like (noisier),
+    /// 2 = Nemotron-H-like (higher quality / lower entropy).
+    pub data_profile: u8,
+    pub schedule: CosineSchedule,
+    pub batch_size: usize,
+    pub adam_beta1: f32,
+    pub adam_beta2: f32,
+    pub adam_eps: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    /// Configuration 1: Nemotron-4-style data, peak LR 3e-4 → 3e-5,
+    /// batch 1024 (scaled ÷32 → 32).
+    pub fn config1(total_steps: u64) -> TrainConfig {
+        TrainConfig {
+            name: "config1",
+            data_profile: 1,
+            schedule: CosineSchedule {
+                peak_lr: 3e-4,
+                final_lr: 3e-5,
+                warmup_steps: (total_steps / 100).max(10),
+                total_steps,
+            },
+            batch_size: 32,
+            adam_beta1: 0.9,
+            adam_beta2: 0.95,
+            adam_eps: 1e-8,
+            weight_decay: 0.0,
+            seed: 1234,
+        }
+    }
+
+    /// Configuration 2: higher-quality data, peak LR 1.2e-3 → 3e-6,
+    /// batch 1536 (scaled ÷32 → 48).
+    pub fn config2(total_steps: u64) -> TrainConfig {
+        TrainConfig {
+            name: "config2",
+            data_profile: 2,
+            schedule: CosineSchedule {
+                peak_lr: 1.2e-3,
+                final_lr: 3e-6,
+                warmup_steps: (total_steps / 100).max(10),
+                total_steps,
+            },
+            batch_size: 48,
+            adam_beta1: 0.9,
+            adam_beta2: 0.95,
+            adam_eps: 1e-8,
+            weight_decay: 0.0,
+            seed: 5678,
+        }
+    }
+
+    pub fn by_name(name: &str, total_steps: u64) -> Option<TrainConfig> {
+        match name {
+            "config1" => Some(Self::config1(total_steps)),
+            "config2" => Some(Self::config2(total_steps)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        assert_eq!(ModelConfig::preset("tiny"), Some(ModelConfig::TINY));
+        assert_eq!(ModelConfig::preset("small"), Some(ModelConfig::SMALL));
+        assert_eq!(ModelConfig::preset("base"), Some(ModelConfig::BASE));
+        assert_eq!(ModelConfig::preset("huge"), None);
+    }
+
+    #[test]
+    fn param_counts_in_expected_bands() {
+        assert!(ModelConfig::TINY.num_params() < 2_000_000);
+        let small = ModelConfig::SMALL.num_params();
+        assert!((3_000_000..30_000_000).contains(&small), "small={small}");
+        let base = ModelConfig::BASE.num_params();
+        assert!((90_000_000..150_000_000).contains(&base), "base={base}");
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for m in [ModelConfig::TINY, ModelConfig::SMALL, ModelConfig::BASE] {
+            assert_eq!(m.d_model % m.n_heads, 0, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let s = CosineSchedule { peak_lr: 3e-4, final_lr: 3e-5, warmup_steps: 10, total_steps: 100 };
+        assert!(s.lr_at(0) < s.lr_at(9)); // warming up
+        assert!((s.lr_at(10) - 3e-4).abs() < 1e-8); // peak after warmup
+        assert!(s.lr_at(50) < 3e-4);
+        assert!((s.lr_at(100) - 3e-5).abs() < 1e-8); // annealed
+        assert!((s.lr_at(1000) - 3e-5).abs() < 1e-8); // clamped past end
+    }
+
+    #[test]
+    fn table1_contrast_preserved() {
+        let c1 = TrainConfig::config1(1000);
+        let c2 = TrainConfig::config2(1000);
+        assert!(c2.schedule.peak_lr > c1.schedule.peak_lr);
+        assert!(c2.schedule.final_lr < c1.schedule.final_lr);
+        assert!(c2.batch_size > c1.batch_size);
+        assert_ne!(c1.data_profile, c2.data_profile);
+        // Scaled batch ratio matches the paper's 1536/1024.
+        assert_eq!(c2.batch_size * 1024, c1.batch_size * 1536);
+    }
+}

@@ -1,0 +1,9 @@
+//! Model and training configuration: transformer presets, the canonical
+//! parameter inventory (the single source of truth for the Rust↔HLO
+//! buffer ordering), and the Table-1 training configurations.
+
+pub mod config;
+pub mod naming;
+
+pub use config::{ModelConfig, TrainConfig};
+pub use naming::{ParamSpec, QuantTensorId, LINEARS_PER_LAYER, TENSORS_PER_LINEAR};

@@ -1,0 +1,171 @@
+//! The canonical parameter inventory and quantized-tensor identity
+//! scheme — the Rust side of the artifact ABI. `python/compile/model.py`
+//! flattens parameters in exactly this order; the manifest pins it and
+//! [`crate::runtime::manifest`] verifies names at load time.
+
+use super::config::ModelConfig;
+use crate::mor::stats::TensorKey;
+
+/// Linear layers MoR quantizes per transformer block (§4: "four linear
+/// layers in one transformer block").
+pub const LINEARS_PER_LAYER: usize = 4;
+/// Tensors per linear layer the paper tracks: input activation, weight,
+/// output gradient.
+pub const TENSORS_PER_LINEAR: usize = 3;
+
+/// One model parameter: name + shape, in canonical flattening order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn volume(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The full parameter list for a preset, in the order both sides flatten.
+pub fn param_specs(m: &ModelConfig) -> Vec<ParamSpec> {
+    let d = m.d_model;
+    let mut out = vec![ParamSpec {
+        name: "embedding.weight".into(),
+        shape: vec![m.vocab_size, d],
+    }];
+    for l in 0..m.n_layers {
+        let p = |name: String, shape: Vec<usize>| ParamSpec { name, shape };
+        out.push(p(format!("decoder.layer.{l}.ln1.scale"), vec![d]));
+        out.push(p(format!("decoder.layer.{l}.ln1.bias"), vec![d]));
+        out.push(p(
+            format!("decoder.layer.{l}.self_attention.linear_qkv.weight"),
+            vec![d, 3 * d],
+        ));
+        out.push(p(
+            format!("decoder.layer.{l}.self_attention.linear_proj.weight"),
+            vec![d, d],
+        ));
+        out.push(p(format!("decoder.layer.{l}.ln2.scale"), vec![d]));
+        out.push(p(format!("decoder.layer.{l}.ln2.bias"), vec![d]));
+        out.push(p(format!("decoder.layer.{l}.mlp.fc1.weight"), vec![d, m.d_ff]));
+        out.push(p(format!("decoder.layer.{l}.mlp.fc2.weight"), vec![m.d_ff, d]));
+    }
+    out.push(ParamSpec { name: "final_ln.scale".into(), shape: vec![d] });
+    out.push(ParamSpec { name: "final_ln.bias".into(), shape: vec![d] });
+    out.push(ParamSpec { name: "lm_head.weight".into(), shape: vec![d, m.vocab_size] });
+    out
+}
+
+/// Identity of one quantized-tensor slot in the train-step stats output:
+/// the stats arrays are laid out `[n_layers, 4 linears, 3 tensors, 2
+/// directions]`, flattened row-major.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantTensorId {
+    pub layer: usize,
+    /// 0 = linear_qkv, 1 = linear_proj, 2 = fc1, 3 = fc2.
+    pub linear: usize,
+    /// 0 = input activation, 1 = weight, 2 = output gradient.
+    pub tensor: usize,
+    /// 0 = primary contraction direction, 1 = transpose direction
+    /// (distinct only for per-channel partitioning).
+    pub direction: usize,
+}
+
+impl QuantTensorId {
+    pub const TENSOR_NAMES: [&'static str; TENSORS_PER_LINEAR] = ["input", "weight", "grad"];
+
+    /// Flat index in the stats arrays.
+    pub fn flat(&self, _n_layers: usize) -> usize {
+        ((self.layer * LINEARS_PER_LAYER + self.linear) * TENSORS_PER_LINEAR + self.tensor) * 2
+            + self.direction
+    }
+
+    /// Inverse of [`Self::flat`].
+    pub fn from_flat(idx: usize) -> QuantTensorId {
+        let direction = idx % 2;
+        let rest = idx / 2;
+        let tensor = rest % TENSORS_PER_LINEAR;
+        let rest = rest / TENSORS_PER_LINEAR;
+        let linear = rest % LINEARS_PER_LAYER;
+        let layer = rest / LINEARS_PER_LAYER;
+        QuantTensorId { layer, linear, tensor, direction }
+    }
+
+    /// Total stats slots for a model.
+    pub fn count(m: &ModelConfig) -> usize {
+        m.n_layers * LINEARS_PER_LAYER * TENSORS_PER_LINEAR * 2
+    }
+
+    /// Map to the heatmap naming scheme.
+    pub fn key(&self, per_channel: bool) -> TensorKey {
+        let dir = if per_channel {
+            if self.direction == 0 {
+                "row"
+            } else {
+                "col"
+            }
+        } else {
+            ""
+        };
+        TensorKey::new(self.layer, self.linear, Self::TENSOR_NAMES[self.tensor], dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_specs_order_and_volume() {
+        let m = ModelConfig::TINY;
+        let specs = param_specs(&m);
+        assert_eq!(specs[0].name, "embedding.weight");
+        assert_eq!(specs.last().unwrap().name, "lm_head.weight");
+        // 1 + 8*n_layers + 3
+        assert_eq!(specs.len(), 1 + 8 * m.n_layers + 3);
+        let total: usize = specs.iter().map(|s| s.volume()).sum();
+        assert_eq!(total, m.num_params());
+    }
+
+    #[test]
+    fn tiny_has_expected_qkv_shape() {
+        let specs = param_specs(&ModelConfig::TINY);
+        let qkv = specs
+            .iter()
+            .find(|s| s.name == "decoder.layer.0.self_attention.linear_qkv.weight")
+            .unwrap();
+        assert_eq!(qkv.shape, vec![64, 192]);
+    }
+
+    #[test]
+    fn quant_id_flat_roundtrip() {
+        let m = ModelConfig::SMALL;
+        for idx in 0..QuantTensorId::count(&m) {
+            let id = QuantTensorId::from_flat(idx);
+            assert_eq!(id.flat(m.n_layers), idx);
+            assert!(id.layer < m.n_layers);
+            assert!(id.linear < LINEARS_PER_LAYER);
+            assert!(id.tensor < TENSORS_PER_LINEAR);
+        }
+    }
+
+    #[test]
+    fn quant_id_key_naming() {
+        let id = QuantTensorId { layer: 2, linear: 3, tensor: 0, direction: 0 };
+        assert_eq!(id.key(false).name(), "decoder.layer.2.mlp.fc2.input");
+        assert_eq!(id.key(true).name(), "decoder.layer.2.mlp.fc2.input.row");
+        let id = QuantTensorId { layer: 0, linear: 1, tensor: 2, direction: 1 };
+        assert_eq!(
+            id.key(true).name(),
+            "decoder.layer.0.self_attention.linear_proj.grad.col"
+        );
+    }
+
+    #[test]
+    fn stats_count_matches_paper_shape() {
+        // Paper: 32 layers × 4 linears × 3 tensors = 384 rows; ours adds
+        // the 2-direction axis.
+        let m = ModelConfig::BASE;
+        assert_eq!(QuantTensorId::count(&m), m.n_layers * 4 * 3 * 2);
+    }
+}

@@ -1,0 +1,167 @@
+//! Algorithm 2, verbatim: per block, walk an ordered list of types from
+//! most to least aggressive; accept the first whose metric passes; the
+//! final type is the unconditional fallback (BF16, "leave the block in
+//! its original precision").
+//!
+//! The engine is generic over the metric: recipes plug in Eq. (2)
+//! (tensor-level threshold), Eq. (3) (two-way / three-way M1) and
+//! Eq. (4) (M2 range check). Keeping the walk generic means new type
+//! lists — e.g. `[NVFP4, E4M3, BF16]` — reuse the identical decision
+//! logic, which is how the paper frames future work.
+
+use crate::formats::ReprType;
+
+/// An ordered list of candidate representations, most aggressive first.
+/// The last entry is the fallback and needs no metric.
+#[derive(Debug, Clone)]
+pub struct MorFramework {
+    types: Vec<ReprType>,
+}
+
+impl MorFramework {
+    /// Build a framework; panics on an empty list (there must always be
+    /// a fallback type).
+    pub fn new(types: Vec<ReprType>) -> Self {
+        assert!(!types.is_empty(), "MoR type list cannot be empty");
+        MorFramework { types }
+    }
+
+    /// The paper's tensor-level list.
+    pub fn e4m3_bf16() -> Self {
+        Self::new(vec![ReprType::E4M3, ReprType::Bf16])
+    }
+
+    /// The paper's three-way sub-tensor list.
+    pub fn e4m3_e5m2_bf16() -> Self {
+        Self::new(vec![ReprType::E4M3, ReprType::E5M2, ReprType::Bf16])
+    }
+
+    pub fn types(&self) -> &[ReprType] {
+        &self.types
+    }
+
+    pub fn fallback(&self) -> ReprType {
+        *self.types.last().unwrap()
+    }
+
+    /// Algorithm 2 for one block: `accept(type, block_index)` answers the
+    /// metric question `M_t(b, A)`; the first accepted type wins, else
+    /// the fallback.
+    pub fn select_block<F: FnMut(ReprType, usize) -> bool>(
+        &self,
+        block: usize,
+        mut accept: F,
+    ) -> ReprType {
+        for &t in &self.types[..self.types.len() - 1] {
+            if accept(t, block) {
+                return t;
+            }
+        }
+        self.fallback()
+    }
+
+    /// Run the walk for every block of a partition.
+    pub fn select_all<F: FnMut(ReprType, usize) -> bool>(
+        &self,
+        num_blocks: usize,
+        mut accept: F,
+    ) -> Vec<ReprType> {
+        (0..num_blocks).map(|b| self.select_block(b, &mut accept)).collect()
+    }
+}
+
+/// The outcome of applying a MoR recipe to one tensor.
+#[derive(Debug, Clone)]
+pub struct MorOutcome {
+    /// Fake-quantized tensor, blocks mixed per `block_types`.
+    pub out: crate::tensor::Tensor,
+    /// Chosen representation per partition block.
+    pub block_types: Vec<ReprType>,
+    /// Global mean relative error of the *candidate* E4M3 quantization
+    /// (the number the paper's histograms bin, whether or not E4M3 won).
+    pub e4m3_relerr: f64,
+    /// Fraction of elements left in BF16.
+    pub bf16_fraction: f64,
+    /// Scale metadata bits spent (GAM accounting, §2).
+    pub metadata_bits: u64,
+}
+
+impl MorOutcome {
+    /// Whether the entire tensor fell back to BF16.
+    pub fn full_fallback(&self) -> bool {
+        self.block_types.iter().all(|t| *t == ReprType::Bf16)
+    }
+
+    /// Fraction of blocks per chosen type, ordered [e4m3, e5m2, bf16, nvfp4].
+    pub fn type_fractions(&self) -> [f64; 4] {
+        let mut counts = [0usize; 4];
+        for t in &self.block_types {
+            let i = match t {
+                ReprType::E4M3 => 0,
+                ReprType::E5M2 => 1,
+                ReprType::Bf16 => 2,
+                ReprType::NvFp4 => 3,
+            };
+            counts[i] += 1;
+        }
+        let n = self.block_types.len().max(1) as f64;
+        [counts[0] as f64 / n, counts[1] as f64 / n, counts[2] as f64 / n, counts[3] as f64 / n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_accepted_type_wins() {
+        let fw = MorFramework::e4m3_e5m2_bf16();
+        assert_eq!(fw.select_block(0, |t, _| t == ReprType::E4M3), ReprType::E4M3);
+        assert_eq!(fw.select_block(0, |t, _| t == ReprType::E5M2), ReprType::E5M2);
+        assert_eq!(fw.select_block(0, |_, _| false), ReprType::Bf16);
+    }
+
+    #[test]
+    fn fallback_never_queried() {
+        let fw = MorFramework::e4m3_bf16();
+        let mut asked = Vec::new();
+        fw.select_block(3, |t, b| {
+            asked.push((t, b));
+            false
+        });
+        assert_eq!(asked, vec![(ReprType::E4M3, 3)]);
+    }
+
+    #[test]
+    fn select_all_is_per_block() {
+        let fw = MorFramework::e4m3_bf16();
+        let types = fw.select_all(4, |_, b| b % 2 == 0);
+        assert_eq!(
+            types,
+            vec![ReprType::E4M3, ReprType::Bf16, ReprType::E4M3, ReprType::Bf16]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot be empty")]
+    fn empty_list_panics() {
+        MorFramework::new(vec![]);
+    }
+
+    #[test]
+    fn type_fractions_sum_to_one() {
+        let o = MorOutcome {
+            out: crate::tensor::Tensor::zeros(&[1, 1]),
+            block_types: vec![ReprType::E4M3, ReprType::E4M3, ReprType::Bf16, ReprType::E5M2],
+            e4m3_relerr: 0.0,
+            bf16_fraction: 0.25,
+            metadata_bits: 0,
+        };
+        let f = o.type_fractions();
+        assert_eq!(f[0], 0.5);
+        assert_eq!(f[1], 0.25);
+        assert_eq!(f[2], 0.25);
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(!o.full_fallback());
+    }
+}

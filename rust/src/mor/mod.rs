@@ -1,0 +1,11 @@
+//! The Mixture-of-Representations framework (§3) — the paper's core
+//! contribution — plus the concrete recipes evaluated in §4 and the
+//! statistics machinery behind Figures 10–19.
+
+pub mod framework;
+pub mod recipes;
+pub mod stats;
+
+pub use framework::{MorFramework, MorOutcome};
+pub use recipes::{Recipe, RecipeKind, SubTensorMode};
+pub use stats::{Histogram, StatsCollector, TensorKey, HIST_BINS};

@@ -1,0 +1,418 @@
+//! The concrete MoR recipes evaluated in §4, built on the generic
+//! framework walk:
+//!
+//! * **Tensor-level** (§3.1): one decision for the whole tensor —
+//!   `[E4M3, BF16]`, accept E4M3 iff the global mean relative error over
+//!   non-zero elements (aggregated across the partition's blocks, Fig. 2)
+//!   is below `th_E4M3` (4.5% default, 5.0% ablation).
+//! * **Sub-tensor Two-Way** (§3.2 Alg. 2): per 128×128 block,
+//!   `[E4M3, BF16]` with metric M1 (Eq. 3: E4M3's relerr sum beats
+//!   E5M2's); E5M2 is only a benchmark, never selected.
+//! * **Sub-tensor Three-Way** (§3.2 Alg. 1): `[E4M3, E5M2, BF16]` with
+//!   M1 for E4M3 and M2 (Eq. 4 range check) for E5M2.
+//! * **Baseline**: no quantization (the BF16 reference run).
+//! * **NVFP4 extension**: `[NVFP4, E4M3, BF16]` tensor-level walk — the
+//!   future-work direction §5 sketches, included for the ablation bench.
+
+use super::framework::{MorFramework, MorOutcome};
+use crate::formats::ReprType;
+use crate::quant::error::dynamic_range_fits_e5m2;
+use crate::quant::fake_quant::fake_quantize;
+use crate::quant::partition::Partition;
+use crate::scaling::ScalingAlgo;
+use crate::tensor::Tensor;
+
+/// Sub-tensor selection mode (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SubTensorMode {
+    TwoWay,
+    ThreeWay,
+}
+
+/// Which recipe to run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RecipeKind {
+    /// BF16 baseline — quantization disabled.
+    Baseline,
+    /// §3.1 tensor-level MoR.
+    TensorLevel { threshold: f64 },
+    /// §3.2 sub-tensor MoR at the partition's block granularity.
+    SubTensor { mode: SubTensorMode },
+    /// Extension: tensor-level walk over [NVFP4, E4M3, BF16].
+    NvFp4TensorLevel { threshold_fp4: f64, threshold_e4m3: f64 },
+}
+
+/// A fully-specified recipe: kind + partition + scaling algorithm.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Recipe {
+    pub kind: RecipeKind,
+    pub partition: Partition,
+    pub scaling: ScalingAlgo,
+}
+
+impl Recipe {
+    /// The paper's default tensor-level recipe (128×128 blocks, GAM,
+    /// th = 4.5%).
+    pub fn paper_default() -> Recipe {
+        Recipe {
+            kind: RecipeKind::TensorLevel { threshold: 0.045 },
+            partition: Partition::BLOCK128,
+            scaling: ScalingAlgo::Gam,
+        }
+    }
+
+    pub fn baseline() -> Recipe {
+        Recipe {
+            kind: RecipeKind::Baseline,
+            partition: Partition::Tensor,
+            scaling: ScalingAlgo::Gam,
+        }
+    }
+
+    /// Stable name used in CSV logs / CLI (matches artifact variants).
+    pub fn name(&self) -> String {
+        match self.kind {
+            RecipeKind::Baseline => "baseline".into(),
+            RecipeKind::TensorLevel { threshold } => format!(
+                "mor_tensor_{}_{}_th{:.1}",
+                self.partition.name(),
+                self.scaling.name(),
+                threshold * 100.0
+            ),
+            RecipeKind::SubTensor { mode } => format!(
+                "mor_subtensor_{}_{}",
+                match mode {
+                    SubTensorMode::TwoWay => "two_way",
+                    SubTensorMode::ThreeWay => "three_way",
+                },
+                self.partition.name()
+            ),
+            RecipeKind::NvFp4TensorLevel { .. } => {
+                format!("mor_nvfp4_{}", self.partition.name())
+            }
+        }
+    }
+
+    /// Apply the recipe to one tensor, producing the mixed-representation
+    /// fake-quantized output plus decision telemetry.
+    pub fn apply(&self, x: &Tensor) -> MorOutcome {
+        match self.kind {
+            RecipeKind::Baseline => baseline(x),
+            RecipeKind::TensorLevel { threshold } => {
+                tensor_level(x, self.partition, self.scaling, threshold)
+            }
+            RecipeKind::SubTensor { mode } => sub_tensor(x, self.partition, self.scaling, mode),
+            RecipeKind::NvFp4TensorLevel { threshold_fp4, threshold_e4m3 } => {
+                nvfp4_tensor_level(x, self.partition, self.scaling, threshold_fp4, threshold_e4m3)
+            }
+        }
+    }
+}
+
+fn baseline(x: &Tensor) -> MorOutcome {
+    MorOutcome {
+        out: x.clone(),
+        block_types: vec![ReprType::Bf16],
+        e4m3_relerr: 0.0,
+        bf16_fraction: 1.0,
+        metadata_bits: 0,
+    }
+}
+
+/// §3.1 — one global decision from the aggregated relative error.
+fn tensor_level(x: &Tensor, partition: Partition, scaling: ScalingAlgo, th: f64) -> MorOutcome {
+    let fq = fake_quantize(x, ReprType::E4M3, partition, scaling);
+    let relerr = fq.global_err.mean();
+    let fw = MorFramework::e4m3_bf16();
+    let nblocks = fq.block_err.len();
+    let choice = fw.select_block(0, |t, _| t == ReprType::E4M3 && relerr < th);
+    if choice == ReprType::E4M3 {
+        let metadata_bits = fq.scales.metadata_bits();
+        MorOutcome {
+            out: fq.out,
+            block_types: vec![ReprType::E4M3; nblocks],
+            e4m3_relerr: relerr,
+            bf16_fraction: 0.0,
+            metadata_bits,
+        }
+    } else {
+        let bf = fake_quantize(x, ReprType::Bf16, Partition::Tensor, scaling);
+        MorOutcome {
+            out: bf.out,
+            block_types: vec![ReprType::Bf16; nblocks],
+            e4m3_relerr: relerr,
+            bf16_fraction: 1.0,
+            metadata_bits: 0,
+        }
+    }
+}
+
+/// §3.2 — per-block walk; blocks mix representations inside one tensor.
+fn sub_tensor(
+    x: &Tensor,
+    partition: Partition,
+    scaling: ScalingAlgo,
+    mode: SubTensorMode,
+) -> MorOutcome {
+    let (rows, cols) = x.as_2d();
+    let _ = rows;
+    let fq_e4m3 = fake_quantize(x, ReprType::E4M3, partition, scaling);
+    let fq_e5m2 = fake_quantize(x, ReprType::E5M2, partition, scaling);
+    let nblocks = fq_e4m3.block_err.len();
+    let fw = match mode {
+        SubTensorMode::TwoWay => MorFramework::e4m3_bf16(),
+        SubTensorMode::ThreeWay => MorFramework::e4m3_e5m2_bf16(),
+    };
+    let block_types = fw.select_all(nblocks, |t, b| match t {
+        // M1 (Eq. 3): E4M3 accepted when its relerr *sum* beats E5M2's.
+        ReprType::E4M3 => fq_e4m3.block_err[b].sum < fq_e5m2.block_err[b].sum,
+        // M2 (Eq. 4): E5M2 accepted when the block's dynamic range fits
+        // E5M2's normal range.
+        ReprType::E5M2 => {
+            let (amax, amin) = fq_e4m3.block_range[b];
+            dynamic_range_fits_e5m2(amax, amin)
+        }
+        _ => false,
+    });
+
+    // Assemble the mixed-representation output and count BF16 elements.
+    let mut out = Tensor::zeros(x.shape());
+    let blocks = partition.blocks(x.as_2d().0, cols);
+    let mut bf16_elems = 0usize;
+    for (i, (b, t)) in blocks.iter().zip(block_types.iter()).enumerate() {
+        let _ = i;
+        for idx in b.indices(cols) {
+            out.data_mut()[idx] = match t {
+                ReprType::E4M3 => fq_e4m3.out.data()[idx],
+                ReprType::E5M2 => fq_e5m2.out.data()[idx],
+                _ => crate::formats::bf16::quantize_dequantize(x.data()[idx]),
+            };
+        }
+        if *t == ReprType::Bf16 {
+            bf16_elems += b.len();
+        }
+    }
+    let metadata_bits = block_types
+        .iter()
+        .filter(|t| **t != ReprType::Bf16)
+        .count() as u64
+        * scaling.block_metadata_bits() as u64
+        + if scaling == ScalingAlgo::Gam { 23 } else { 0 };
+    MorOutcome {
+        out,
+        block_types,
+        e4m3_relerr: fq_e4m3.global_err.mean(),
+        bf16_fraction: bf16_elems as f64 / x.len().max(1) as f64,
+        metadata_bits,
+    }
+}
+
+/// Extension: `[NVFP4, E4M3, BF16]` tensor-level walk with per-type
+/// thresholds on the global mean relative error.
+fn nvfp4_tensor_level(
+    x: &Tensor,
+    partition: Partition,
+    scaling: ScalingAlgo,
+    th_fp4: f64,
+    th_e4m3: f64,
+) -> MorOutcome {
+    let fq4 = fake_quantize(x, ReprType::NvFp4, Partition::SubChannelRows { len: 16 }, scaling);
+    let fq8 = fake_quantize(x, ReprType::E4M3, partition, scaling);
+    let fw = MorFramework::new(vec![ReprType::NvFp4, ReprType::E4M3, ReprType::Bf16]);
+    let choice = fw.select_block(0, |t, _| match t {
+        ReprType::NvFp4 => fq4.global_err.mean() < th_fp4,
+        ReprType::E4M3 => fq8.global_err.mean() < th_e4m3,
+        _ => false,
+    });
+    let nblocks = fq8.block_err.len();
+    let (out, bf16_fraction, metadata_bits) = match choice {
+        ReprType::NvFp4 => (fq4.out, 0.0, fq4.scales.metadata_bits()),
+        ReprType::E4M3 => (fq8.out, 0.0, fq8.scales.metadata_bits()),
+        _ => (
+            fake_quantize(x, ReprType::Bf16, Partition::Tensor, scaling).out,
+            1.0,
+            0,
+        ),
+    };
+    MorOutcome {
+        out,
+        block_types: vec![choice; nblocks],
+        e4m3_relerr: fq8.global_err.mean(),
+        bf16_fraction,
+        metadata_bits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop, Gen};
+
+    fn smooth_tensor(seed: u64) -> Tensor {
+        // Narrow dynamic range → quantizes well to E4M3.
+        Tensor::normal(&[16, 16], 1.0, seed)
+    }
+
+    fn wild_tensor(seed: u64) -> Tensor {
+        // Values spanning ~12 binades → high relative error under any
+        // single-scale FP8 quantization.
+        let mut t = Tensor::normal(&[16, 16], 1.0, seed);
+        for (i, v) in t.data_mut().iter_mut().enumerate() {
+            *v *= (10.0f32).powi((i % 13) as i32 - 6);
+        }
+        t
+    }
+
+    fn medium_range_tensor(seed: u64) -> Tensor {
+        // Dynamic range ~10^6 per block: wide enough that E4M3 flushes
+        // the small values (losing Eq. 3 to E5M2), narrow enough to fit
+        // E5M2's normal range (passing Eq. 4).
+        let mut t = Tensor::normal(&[16, 16], 1.0, seed);
+        for (i, v) in t.data_mut().iter_mut().enumerate() {
+            *v *= (10.0f32).powi((i % 7) as i32 - 3);
+        }
+        t
+    }
+
+    #[test]
+    fn tensor_level_accepts_smooth() {
+        let r = Recipe::paper_default().apply(&smooth_tensor(1));
+        assert_eq!(r.bf16_fraction, 0.0);
+        assert!(r.block_types.iter().all(|t| *t == ReprType::E4M3));
+        assert!(r.e4m3_relerr < 0.045);
+    }
+
+    #[test]
+    fn tensor_level_rejects_wild() {
+        let x = wild_tensor(2);
+        let r = Recipe {
+            kind: RecipeKind::TensorLevel { threshold: 0.045 },
+            partition: Partition::Tensor, // single scale: worst case
+            scaling: ScalingAlgo::Gam,
+        }
+        .apply(&x);
+        assert_eq!(r.bf16_fraction, 1.0);
+        assert!(r.full_fallback());
+        assert!(r.e4m3_relerr >= 0.045, "relerr {}", r.e4m3_relerr);
+    }
+
+    #[test]
+    fn baseline_is_identity() {
+        let x = smooth_tensor(3);
+        let r = Recipe::baseline().apply(&x);
+        assert_eq!(r.out, x);
+        assert_eq!(r.bf16_fraction, 1.0);
+        assert_eq!(r.metadata_bits, 0);
+    }
+
+    #[test]
+    fn two_way_never_selects_e5m2() {
+        let x = wild_tensor(4);
+        let r = Recipe {
+            kind: RecipeKind::SubTensor { mode: SubTensorMode::TwoWay },
+            partition: Partition::Block { r: 4, c: 4 },
+            scaling: ScalingAlgo::Gam,
+        }
+        .apply(&x);
+        assert!(r.block_types.iter().all(|t| *t != ReprType::E5M2));
+    }
+
+    #[test]
+    fn three_way_can_select_e5m2() {
+        // Blocks with moderate dynamic range where E5M2's wider exponent
+        // wins Eq. 3 but the range still fits Eq. 4.
+        let x = medium_range_tensor(5);
+        let r = Recipe {
+            kind: RecipeKind::SubTensor { mode: SubTensorMode::ThreeWay },
+            partition: Partition::Block { r: 4, c: 4 },
+            scaling: ScalingAlgo::Gam,
+        }
+        .apply(&x);
+        let f = r.type_fractions();
+        assert!(f[1] > 0.0, "expected some E5M2 blocks, got {:?}", f);
+    }
+
+    #[test]
+    fn threshold_monotonicity() {
+        // Raising the threshold can only move tensors from BF16 to E4M3.
+        let x = Tensor::normal(&[32, 32], 1.0, 6);
+        let strict = Recipe {
+            kind: RecipeKind::TensorLevel { threshold: 1e-6 },
+            partition: Partition::BLOCK128,
+            scaling: ScalingAlgo::Gam,
+        }
+        .apply(&x);
+        let loose = Recipe {
+            kind: RecipeKind::TensorLevel { threshold: 0.5 },
+            partition: Partition::BLOCK128,
+            scaling: ScalingAlgo::Gam,
+        }
+        .apply(&x);
+        assert_eq!(strict.bf16_fraction, 1.0);
+        assert_eq!(loose.bf16_fraction, 0.0);
+    }
+
+    /// Property: the recipe output never degrades a kept-BF16 element
+    /// beyond bf16 rounding, and quantized outputs are finite.
+    #[test]
+    fn prop_outcome_wellformed() {
+        prop(80, |g: &mut Gen| {
+            let x = Tensor::from_vec(
+                &[8, 12],
+                (0..96).map(|_| g.f32_in(-8.0, 8.0)).collect(),
+            );
+            let recipe = Recipe {
+                kind: *g.choose(&[
+                    RecipeKind::TensorLevel { threshold: 0.045 },
+                    RecipeKind::SubTensor { mode: SubTensorMode::TwoWay },
+                    RecipeKind::SubTensor { mode: SubTensorMode::ThreeWay },
+                ]),
+                partition: *g.choose(&[
+                    Partition::Tensor,
+                    Partition::Block { r: 4, c: 4 },
+                    Partition::ChannelRows,
+                ]),
+                scaling: *g.choose(&[ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0]),
+            };
+            let r = recipe.apply(&x);
+            assert!(r.out.data().iter().all(|v| v.is_finite()));
+            assert!((0.0..=1.0).contains(&r.bf16_fraction));
+            let f = r.type_fractions();
+            assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            true
+        });
+    }
+
+    /// Property: two-way and three-way agree on blocks where E4M3 wins M1.
+    #[test]
+    fn prop_two_three_way_agree_on_e4m3_blocks() {
+        prop(40, |g: &mut Gen| {
+            let mut x = Tensor::normal(&[12, 12], 1.0, g.next_u64());
+            for (i, v) in x.data_mut().iter_mut().enumerate() {
+                *v *= (10.0f32).powi((i % 7) as i32 - 3);
+            }
+            let part = Partition::Block { r: 4, c: 4 };
+            let two = Recipe {
+                kind: RecipeKind::SubTensor { mode: SubTensorMode::TwoWay },
+                partition: part,
+                scaling: ScalingAlgo::Gam,
+            }
+            .apply(&x);
+            let three = Recipe {
+                kind: RecipeKind::SubTensor { mode: SubTensorMode::ThreeWay },
+                partition: part,
+                scaling: ScalingAlgo::Gam,
+            }
+            .apply(&x);
+            for (a, b) in two.block_types.iter().zip(three.block_types.iter()) {
+                if *a == ReprType::E4M3 {
+                    assert_eq!(*b, ReprType::E4M3);
+                }
+                if *b == ReprType::Bf16 {
+                    assert_eq!(*a, ReprType::Bf16);
+                }
+            }
+            true
+        });
+    }
+}

@@ -1,0 +1,378 @@
+//! The statistics machinery behind §4.1.3: per-tensor relative-error
+//! histograms (Figures 11–19), BF16 fallback percentages (Figure 10),
+//! and the heatmap CSV/ASCII renderers.
+//!
+//! Binning follows the paper exactly: each bin covers 0.5% of relative
+//! error; the first bin is `< 0.5%`, the last is `>= 5.5%`. One
+//! mini-batch contributes one count per tensor; rows are normalized to
+//! [0,1] when rendered; histograms reset every `reset_every` steps so
+//! drift over training is visible (Figure 14).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Number of histogram bins (11 half-percent bins + overflow bin).
+pub const HIST_BINS: usize = 12;
+
+/// A relative-error histogram with the paper's 0.5%-wide bins.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Histogram {
+    pub counts: [u64; HIST_BINS],
+}
+
+impl Histogram {
+    /// Bin index for a relative error value (fraction, not percent).
+    pub fn bin_of(relerr: f64) -> usize {
+        let pct = relerr * 100.0;
+        if pct < 0.0 {
+            0
+        } else {
+            ((pct / 0.5) as usize).min(HIST_BINS - 1)
+        }
+    }
+
+    pub fn add(&mut self, relerr: f64) {
+        self.counts[Self::bin_of(relerr)] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Row-normalized counts (0 if empty).
+    pub fn normalized(&self) -> [f64; HIST_BINS] {
+        let t = self.total();
+        let mut out = [0.0; HIST_BINS];
+        if t > 0 {
+            for (o, c) in out.iter_mut().zip(self.counts.iter()) {
+                *o = *c as f64 / t as f64;
+            }
+        }
+        out
+    }
+
+    /// Mass at or above a threshold (fraction in bins right of the
+    /// `th` percent line) — the "to the right of the blue line" share.
+    pub fn mass_above(&self, th_pct: f64) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            return 0.0;
+        }
+        let cut = ((th_pct / 0.5).round() as usize).min(HIST_BINS);
+        self.counts[cut..].iter().sum::<u64>() as f64 / t as f64
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+    }
+}
+
+/// Canonical tensor identity in the heatmaps' y-axis naming scheme:
+/// `decoder.layer.{layer}.{module}.{linear}.{tensor}[.{direction}]`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TensorKey {
+    pub layer: usize,
+    /// "self_attention" or "mlp".
+    pub module: &'static str,
+    /// "linear_qkv", "linear_proj", "fc1", "fc2".
+    pub linear: &'static str,
+    /// "input", "weight", "grad".
+    pub tensor: &'static str,
+    /// Partition direction for per-channel stats: "row" or "col"
+    /// (empty for direction-agnostic partitions).
+    pub direction: &'static str,
+}
+
+impl TensorKey {
+    pub fn new(
+        layer: usize,
+        linear_index: usize,
+        tensor: &'static str,
+        direction: &'static str,
+    ) -> TensorKey {
+        // Linear index convention shared with the artifact ABI:
+        // 0 = linear_qkv, 1 = linear_proj, 2 = fc1, 3 = fc2.
+        let (module, linear) = match linear_index {
+            0 => ("self_attention", "linear_qkv"),
+            1 => ("self_attention", "linear_proj"),
+            2 => ("mlp", "fc1"),
+            3 => ("mlp", "fc2"),
+            _ => panic!("linear index out of range: {linear_index}"),
+        };
+        TensorKey { layer, module, linear, tensor, direction }
+    }
+
+    pub fn name(&self) -> String {
+        if self.direction.is_empty() {
+            format!(
+                "decoder.layer.{}.{}.{}.{}",
+                self.layer, self.module, self.linear, self.tensor
+            )
+        } else {
+            format!(
+                "decoder.layer.{}.{}.{}.{}.{}",
+                self.layer, self.module, self.linear, self.tensor, self.direction
+            )
+        }
+    }
+}
+
+/// One window's worth of stats for one tensor.
+#[derive(Debug, Clone, Default)]
+pub struct TensorWindow {
+    pub hist: Histogram,
+    /// Mini-batches where the tensor (or a block share) fell back.
+    pub fallback_count: u64,
+    /// Mini-batches observed.
+    pub steps: u64,
+    /// Mean fraction of elements left in BF16 (sub-tensor recipes).
+    pub bf16_fraction_sum: f64,
+}
+
+impl TensorWindow {
+    pub fn record(&mut self, relerr: f64, fell_back: bool, bf16_fraction: f64) {
+        self.hist.add(relerr);
+        self.fallback_count += fell_back as u64;
+        self.steps += 1;
+        self.bf16_fraction_sum += bf16_fraction;
+    }
+
+    pub fn fallback_rate(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.fallback_count as f64 / self.steps as f64
+        }
+    }
+
+    pub fn mean_bf16_fraction(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.bf16_fraction_sum / self.steps as f64
+        }
+    }
+}
+
+/// Collector for a whole training run: (window, tensor) → stats, with
+/// periodic histogram resets (Figure 14's y-axis is the window index).
+#[derive(Debug, Clone)]
+pub struct StatsCollector {
+    pub reset_every: u64,
+    windows: BTreeMap<(u64, TensorKey), TensorWindow>,
+    /// Running totals across the entire run (Figure 10's aggregate).
+    totals: BTreeMap<TensorKey, TensorWindow>,
+    step: u64,
+}
+
+impl StatsCollector {
+    pub fn new(reset_every: u64) -> Self {
+        StatsCollector {
+            reset_every: reset_every.max(1),
+            windows: BTreeMap::new(),
+            totals: BTreeMap::new(),
+            step: 0,
+        }
+    }
+
+    pub fn set_step(&mut self, step: u64) {
+        self.step = step;
+    }
+
+    pub fn window_of(&self, step: u64) -> u64 {
+        step / self.reset_every
+    }
+
+    /// Record one tensor's decision for the current step.
+    pub fn record(&mut self, key: TensorKey, relerr: f64, fell_back: bool, bf16_fraction: f64) {
+        let w = self.window_of(self.step);
+        self.windows
+            .entry((w, key.clone()))
+            .or_default()
+            .record(relerr, fell_back, bf16_fraction);
+        self.totals.entry(key).or_default().record(relerr, fell_back, bf16_fraction);
+    }
+
+    /// Aggregate BF16 fallback percentage over every recorded tensor
+    /// (Figure 10's headline number, e.g. 1.62% for per-channel cfg 1).
+    pub fn overall_fallback_pct(&self) -> f64 {
+        let (mut fb, mut n) = (0u64, 0u64);
+        for w in self.totals.values() {
+            fb += w.fallback_count;
+            n += w.steps;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            fb as f64 / n as f64 * 100.0
+        }
+    }
+
+    /// Mean BF16 element share (sub-tensor recipes' efficiency number).
+    pub fn overall_bf16_element_pct(&self) -> f64 {
+        let (mut s, mut n) = (0.0f64, 0u64);
+        for w in self.totals.values() {
+            s += w.bf16_fraction_sum;
+            n += w.steps;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            s / n as f64 * 100.0
+        }
+    }
+
+    pub fn tensors(&self) -> Vec<&TensorKey> {
+        self.totals.keys().collect()
+    }
+
+    pub fn total_for(&self, key: &TensorKey) -> Option<&TensorWindow> {
+        self.totals.get(key)
+    }
+
+    pub fn window_for(&self, window: u64, key: &TensorKey) -> Option<&TensorWindow> {
+        self.windows.get(&(window, key.clone()))
+    }
+
+    pub fn num_windows(&self) -> u64 {
+        self.windows.keys().map(|(w, _)| *w + 1).max().unwrap_or(0)
+    }
+
+    /// Heatmap CSV: one row per (window, tensor), normalized bins —
+    /// the raw data behind Figures 11–19.
+    pub fn heatmap_csv(&self) -> String {
+        let mut s = String::from("window,tensor,steps,fallback_rate");
+        for b in 0..HIST_BINS {
+            let lo = b as f64 * 0.5;
+            if b == HIST_BINS - 1 {
+                let _ = write!(s, ",bin_ge{lo:.1}pct");
+            } else {
+                let _ = write!(s, ",bin_{lo:.1}pct");
+            }
+        }
+        s.push('\n');
+        for ((w, key), win) in &self.windows {
+            let _ = write!(s, "{w},{},{},{:.6}", key.name(), win.steps, win.fallback_rate());
+            for v in win.hist.normalized() {
+                let _ = write!(s, ",{v:.6}");
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// ASCII heatmap for a set of tensors in the final window — the
+    /// terminal rendering of a Figure 12/13-style panel. The blue
+    /// threshold line is drawn as `|` at `th_pct`.
+    pub fn ascii_heatmap(&self, keys: &[TensorKey], th_pct: f64) -> String {
+        const SHADES: [char; 9] = [' ', '.', ':', '-', '=', '+', '*', '#', '@'];
+        let last = self.num_windows().saturating_sub(1);
+        let cut = (th_pct / 0.5).round() as usize;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:<56} |{}|  (bins of 0.5% relerr; '|' = {th_pct}% threshold)",
+            "tensor", "0.0 ──────────────▶ ≥5.5%"
+        );
+        for key in keys {
+            let win = self
+                .window_for(last, key)
+                .cloned()
+                .or_else(|| self.totals.get(key).cloned())
+                .unwrap_or_default();
+            let norm = win.hist.normalized();
+            let mut row = String::new();
+            for (b, v) in norm.iter().enumerate() {
+                if b == cut {
+                    row.push('|');
+                }
+                let shade = SHADES[((v * (SHADES.len() - 1) as f64).ceil() as usize)
+                    .min(SHADES.len() - 1)];
+                row.push(shade);
+                row.push(shade);
+            }
+            let _ = writeln!(out, "{:<56} {}  fb={:5.1}%", key.name(), row, win.fallback_rate() * 100.0);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_edges_match_paper() {
+        assert_eq!(Histogram::bin_of(0.0), 0);
+        assert_eq!(Histogram::bin_of(0.004999), 0); // < 0.5%
+        assert_eq!(Histogram::bin_of(0.005), 1); // [0.5, 1.0)
+        assert_eq!(Histogram::bin_of(0.0449), 8);
+        assert_eq!(Histogram::bin_of(0.045), 9); // the threshold bin
+        assert_eq!(Histogram::bin_of(0.055), 11); // >= 5.5% overflow
+        assert_eq!(Histogram::bin_of(5.0), 11);
+    }
+
+    #[test]
+    fn mass_above_threshold() {
+        let mut h = Histogram::default();
+        h.add(0.01); // bin 2
+        h.add(0.05); // bin 10
+        h.add(0.06); // bin 11
+        h.add(0.002); // bin 0
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.mass_above(4.5), 0.5);
+        assert_eq!(h.mass_above(0.0), 1.0);
+    }
+
+    #[test]
+    fn normalized_sums_to_one() {
+        let mut h = Histogram::default();
+        for i in 0..100 {
+            h.add(i as f64 * 0.0007);
+        }
+        let n = h.normalized();
+        assert!((n.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tensor_key_naming() {
+        let k = TensorKey::new(3, 3, "input", "");
+        assert_eq!(k.name(), "decoder.layer.3.mlp.fc2.input");
+        let k = TensorKey::new(0, 0, "grad", "row");
+        assert_eq!(k.name(), "decoder.layer.0.self_attention.linear_qkv.grad.row");
+    }
+
+    #[test]
+    fn windows_reset() {
+        let mut c = StatsCollector::new(10);
+        let key = TensorKey::new(0, 2, "weight", "");
+        c.set_step(5);
+        c.record(key.clone(), 0.01, false, 0.0);
+        c.set_step(15);
+        c.record(key.clone(), 0.06, true, 1.0);
+        assert_eq!(c.num_windows(), 2);
+        assert_eq!(c.window_for(0, &key).unwrap().hist.total(), 1);
+        assert_eq!(c.window_for(1, &key).unwrap().fallback_count, 1);
+        assert_eq!(c.total_for(&key).unwrap().steps, 2);
+        assert_eq!(c.overall_fallback_pct(), 50.0);
+        assert_eq!(c.overall_bf16_element_pct(), 50.0);
+    }
+
+    #[test]
+    fn csv_and_ascii_render() {
+        let mut c = StatsCollector::new(100);
+        let key = TensorKey::new(1, 3, "input", "");
+        for i in 0..50 {
+            c.set_step(i);
+            c.record(key.clone(), 0.002 * (i % 30) as f64, i % 30 >= 23, 0.0);
+        }
+        let csv = c.heatmap_csv();
+        assert!(csv.starts_with("window,tensor,steps,fallback_rate,bin_0.0pct"));
+        assert!(csv.contains("decoder.layer.1.mlp.fc2.input"));
+        let art = c.ascii_heatmap(&[key], 4.5);
+        assert!(art.contains("decoder.layer.1.mlp.fc2.input"));
+        assert!(art.contains('|'));
+    }
+}

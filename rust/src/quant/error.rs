@@ -1,0 +1,152 @@
+//! The relative-error metrics of §3.1–3.2.
+//!
+//! * Eqs. (1)–(2): mean relative quantization error over the **non-zero**
+//!   elements of a tensor — the tensor-level MoR acceptance metric
+//!   (`error < th_E4M3`).
+//! * Eq. (3): per-block *sums* of relative error, compared between E4M3
+//!   and E5M2 — the sub-tensor metric M1.
+//! * Eq. (4): block dynamic-range check against E5M2's normal range —
+//!   the sub-tensor metric M2.
+
+use crate::formats::fp8::{Fp8Format, E5M2};
+
+/// Streaming accumulator for relative error over non-zero elements.
+/// Local (per-block) errors aggregate into the global tensor error by
+/// summing accumulators — exactly the "aggregate the local errors into
+/// the global quantization error" step of §3.1 / Fig. 2.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RelErrAccum {
+    /// Σ |x - Q(x)| / |x| over non-zero x.
+    pub sum: f64,
+    /// Count of non-zero elements (n in Eq. 1).
+    pub count: u64,
+}
+
+impl RelErrAccum {
+    pub fn add(&mut self, x: f32, q: f32) {
+        if x != 0.0 {
+            self.sum += (((x - q) / x).abs()) as f64;
+            self.count += 1;
+        }
+    }
+
+    pub fn merge(&mut self, other: RelErrAccum) {
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    /// Mean relative error (Eq. 2); zero for tensors with no non-zero
+    /// elements (an all-zero tensor quantizes losslessly).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// Eq. (1)–(2): mean relative error between `x` and its quantization `q`
+/// over non-zero elements.
+pub fn mean_relative_error(x: &[f32], q: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), q.len());
+    let mut acc = RelErrAccum::default();
+    for (a, b) in x.iter().zip(q.iter()) {
+        acc.add(*a, *b);
+    }
+    acc.mean()
+}
+
+/// Eq. (3) left/right side: Σ over non-zero elements of |x - Q(x)|/|x|
+/// for one block (a *sum*, not a mean — per the paper's metric M1).
+pub fn block_relerr_sum(x: &[f32], q: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), q.len());
+    let mut acc = RelErrAccum::default();
+    for (a, b) in x.iter().zip(q.iter()) {
+        acc.add(*a, *b);
+    }
+    acc.sum
+}
+
+/// Eq. (4), metric M2: does the block's dynamic range (amax over non-zero
+/// amin) fit within E5M2's *normal* range 57344 / 2^-14?
+pub fn dynamic_range_fits_e5m2(amax: f32, amin_nonzero: Option<f32>) -> bool {
+    const RATIO: f32 = E5M2::MAX / E5M2::MIN_NORMAL; // 57344 / 2^-14
+    match amin_nonzero {
+        None => true, // all-zero block: trivially representable
+        Some(amin) => amax / amin < RATIO,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop, Gen};
+
+    #[test]
+    fn mean_ignores_zeros() {
+        // x = [0, 2, 4]; q = [0, 1, 4]. Non-zero relerrs: 0.5, 0.0.
+        let e = mean_relative_error(&[0.0, 2.0, 4.0], &[0.0, 1.0, 4.0]);
+        assert_eq!(e, 0.25);
+    }
+
+    #[test]
+    fn all_zero_tensor_has_zero_error() {
+        assert_eq!(mean_relative_error(&[0.0; 8], &[0.0; 8]), 0.0);
+    }
+
+    #[test]
+    fn sum_vs_mean() {
+        let x = [1.0f32, 2.0, 0.0];
+        let q = [0.9f32, 1.8, 0.0];
+        let s = block_relerr_sum(&x, &q);
+        let m = mean_relative_error(&x, &q);
+        assert!((s - 0.2).abs() < 1e-6);
+        assert!((m - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accum_merge_equals_whole() {
+        let x: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.3).collect();
+        let q: Vec<f32> = x.iter().map(|v| v * 0.99).collect();
+        let whole = mean_relative_error(&x, &q);
+        let mut a = RelErrAccum::default();
+        let mut b = RelErrAccum::default();
+        for i in 0..50 {
+            a.add(x[i], q[i]);
+        }
+        for i in 50..100 {
+            b.add(x[i], q[i]);
+        }
+        a.merge(b);
+        assert!((a.mean() - whole).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_range_boundary() {
+        // Exactly at the ratio fails (strict <), just below passes.
+        let ratio = 57344.0f32 / 6.103515625e-5;
+        assert!(!dynamic_range_fits_e5m2(ratio, Some(1.0)));
+        assert!(dynamic_range_fits_e5m2(ratio * 0.999, Some(1.0)));
+        assert!(dynamic_range_fits_e5m2(1.0, Some(1.0)));
+        assert!(dynamic_range_fits_e5m2(5.0, None));
+    }
+
+    /// Property: relative error is scale-invariant (relerr(kx, kq) ==
+    /// relerr(x, q)) — the reason the paper can use it as a
+    /// representation-independent invariance.
+    #[test]
+    fn prop_scale_invariance() {
+        prop(300, |g: &mut Gen| {
+            let n = g.usize_in(1, 64);
+            let x: Vec<f32> = (0..n).map(|_| g.f32_in(-4.0, 4.0)).collect();
+            let q: Vec<f32> = x.iter().map(|v| v * g.f32_in(0.9, 1.1)).collect();
+            let k = g.f32_log_uniform(1e-3, 1e3);
+            let xk: Vec<f32> = x.iter().map(|v| v * k).collect();
+            let qk: Vec<f32> = q.iter().map(|v| v * k).collect();
+            let e1 = mean_relative_error(&x, &q);
+            let e2 = mean_relative_error(&xk, &qk);
+            (e1 - e2).abs() < 1e-5 * (1.0 + e1)
+        });
+    }
+}

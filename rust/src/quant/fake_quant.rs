@@ -1,0 +1,287 @@
+//! The fake-quantization pipeline of Fig. 4: per block, **scale → cast to
+//! the target format → cast back → de-scale**, leaving the tensor in its
+//! original precision but carrying the target format's information loss.
+//!
+//! This is the host mirror of the Pallas kernel
+//! (`python/compile/kernels/fake_quant.py`); the integration tests hold
+//! the two bit-equal on shared inputs.
+
+use super::error::RelErrAccum;
+use super::partition::Partition;
+use crate::formats::fp8::{Fp8Format, Rounding, E4M3, E5M2};
+use crate::formats::{bf16, ReprType};
+use crate::scaling::{compute_scales, GroupScales, ScalingAlgo};
+use crate::tensor::Tensor;
+
+/// Result of fake-quantizing one tensor under one (type, partition,
+/// scaling) configuration.
+#[derive(Debug, Clone)]
+pub struct FakeQuantResult {
+    /// The quantize–dequantized tensor (same shape/precision as input).
+    pub out: Tensor,
+    /// Per-block scales + group metadata.
+    pub scales: GroupScales,
+    /// Per-block relative-error accumulators (Eq. 3 numerators), in
+    /// partition block order.
+    pub block_err: Vec<RelErrAccum>,
+    /// Global accumulator (merge of all blocks) — Eq. (1)–(2).
+    pub global_err: RelErrAccum,
+    /// Per-block (amax, non-zero amin) for metric M2 (Eq. 4).
+    pub block_range: Vec<(f32, Option<f32>)>,
+}
+
+fn qdq(t: ReprType, x: f32) -> f32 {
+    match t {
+        ReprType::E4M3 => E4M3::quantize_dequantize(x, Rounding::Saturate),
+        ReprType::E5M2 => E5M2::quantize_dequantize(x, Rounding::Saturate),
+        ReprType::Bf16 => bf16::quantize_dequantize(x),
+        ReprType::NvFp4 => crate::formats::fp4::e2m1_quantize_dequantize(x),
+    }
+}
+
+/// Fake-quantize `x` to `target` under `partition` + `scaling`.
+///
+/// The group for GAM is the entire tensor (the configuration the paper
+/// uses throughout §4); blocks follow the partition. BF16 needs no
+/// scaling (its range covers f32 training tensors), so the pipeline
+/// degenerates to a bf16 round-trip with identity scales.
+pub fn fake_quantize(
+    x: &Tensor,
+    target: ReprType,
+    partition: Partition,
+    scaling: ScalingAlgo,
+) -> FakeQuantResult {
+    let (rows, cols) = x.as_2d();
+    let blocks = partition.blocks(rows, cols);
+    let xd = x.data();
+
+    if target == ReprType::Bf16 {
+        let mut out = x.clone();
+        let mut global = RelErrAccum::default();
+        let mut block_err = Vec::with_capacity(blocks.len());
+        let mut block_range = Vec::with_capacity(blocks.len());
+        for b in &blocks {
+            let mut acc = RelErrAccum::default();
+            let mut amax = 0.0f32;
+            let mut amin = f32::INFINITY;
+            for idx in b.indices(cols) {
+                let q = bf16::quantize_dequantize(xd[idx]);
+                out.data_mut()[idx] = q;
+                acc.add(xd[idx], q);
+                let a = xd[idx].abs();
+                amax = amax.max(a);
+                if a != 0.0 {
+                    amin = amin.min(a);
+                }
+            }
+            global.merge(acc);
+            block_err.push(acc);
+            block_range.push((amax, if amin.is_finite() { Some(amin) } else { None }));
+        }
+        let scales = compute_scales(scaling, bf16::MAX, x.amax(), &vec![0.0; 0]);
+        return FakeQuantResult { out, scales, block_err, global_err: global, block_range };
+    }
+
+    // Per-block amaxes in partition order.
+    let mut block_amaxes = Vec::with_capacity(blocks.len());
+    let mut block_range = Vec::with_capacity(blocks.len());
+    for b in &blocks {
+        let mut amax = 0.0f32;
+        let mut amin = f32::INFINITY;
+        for idx in b.indices(cols) {
+            let a = xd[idx].abs();
+            amax = amax.max(a);
+            if a != 0.0 {
+                amin = amin.min(a);
+            }
+        }
+        block_amaxes.push(amax);
+        block_range.push((amax, if amin.is_finite() { Some(amin) } else { None }));
+    }
+
+    let q_amax = target.max_finite();
+    let scales = compute_scales(scaling, q_amax, x.amax(), &block_amaxes);
+
+    let mut out = Tensor::zeros(x.shape());
+    let mut global = RelErrAccum::default();
+    let mut block_err = Vec::with_capacity(blocks.len());
+    for (b, bs) in blocks.iter().zip(scales.blocks.iter()) {
+        let mut acc = RelErrAccum::default();
+        let s = bs.scale;
+        // De-scale by *division* (not multiply-by-reciprocal): this is
+        // what the compiled kernel does, and the two differ in the last
+        // f32 ulp — the cross-language tests require bit-equality.
+        for idx in b.indices(cols) {
+            let v = xd[idx];
+            let q = qdq(target, v * s) / s;
+            out.data_mut()[idx] = q;
+            acc.add(v, q);
+        }
+        global.merge(acc);
+        block_err.push(acc);
+    }
+    FakeQuantResult { out, scales, block_err, global_err: global, block_range }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop, Gen};
+
+    fn relerr_bound_for(t: ReprType) -> f64 {
+        match t {
+            // Half-ulp of the mantissa width, doubled for the (up to one
+            // binade) scale slack of GAM/E8M0, plus subnormal effects near
+            // the block minimum. Generous analytic bounds:
+            ReprType::E4M3 => 0.07,  // 2^-4 ≈ 6.25%
+            ReprType::E5M2 => 0.14,  // 2^-3 = 12.5%
+            ReprType::Bf16 => 0.004, // 2^-8
+            ReprType::NvFp4 => 0.5,
+        }
+    }
+
+    #[test]
+    fn exact_values_have_zero_error() {
+        // Powers of two within a narrow range quantize exactly to E4M3
+        // under amax scaling when amax itself is a power of two.
+        let x = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 4.0, 0.5]);
+        let r = fake_quantize(&x, ReprType::E4M3, Partition::Tensor, ScalingAlgo::AmaxFp32);
+        assert_eq!(r.global_err.mean(), 0.0);
+        assert_eq!(r.out, x);
+    }
+
+    #[test]
+    fn bf16_target_is_roundtrip() {
+        let x = Tensor::uniform(&[8, 8], 3.0, 11);
+        let r = fake_quantize(&x, ReprType::Bf16, Partition::BLOCK128, ScalingAlgo::Gam);
+        for (a, b) in x.data().iter().zip(r.out.data()) {
+            assert_eq!(*b, bf16::quantize_dequantize(*a));
+        }
+        assert!(r.global_err.mean() < relerr_bound_for(ReprType::Bf16));
+    }
+
+    #[test]
+    fn saturation_never_occurs_with_gam() {
+        // A tensor with huge dynamic range; GAM must still keep every
+        // scaled value <= 448 (no inf/nan in the output).
+        let x = Tensor::from_vec(&[1, 6], vec![1e-8, 3e4, -2e4, 5.0, -1e-6, 2.9e4]);
+        for p in [Partition::Tensor, Partition::Block { r: 1, c: 2 }] {
+            let r = fake_quantize(&x, ReprType::E4M3, p, ScalingAlgo::Gam);
+            for v in r.out.data() {
+                assert!(v.is_finite(), "saturated: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn finer_partitions_reduce_error() {
+        // A tensor whose rows live at very different magnitudes: channel
+        // partition must beat tensor partition on mean relative error.
+        let mut data = Vec::new();
+        for r in 0..8 {
+            let mag = (10.0f32).powi(r - 4);
+            for c in 0..16 {
+                data.push(mag * (1.0 + 0.05 * c as f32) * if c % 2 == 0 { 1.0 } else { -1.0 });
+            }
+        }
+        let x = Tensor::from_vec(&[8, 16], data);
+        let e_tensor = fake_quantize(&x, ReprType::E4M3, Partition::Tensor, ScalingAlgo::Gam)
+            .global_err
+            .mean();
+        let e_chan = fake_quantize(&x, ReprType::E4M3, Partition::ChannelRows, ScalingAlgo::Gam)
+            .global_err
+            .mean();
+        assert!(
+            e_chan < e_tensor,
+            "channel {e_chan} should beat tensor {e_tensor}"
+        );
+    }
+
+    /// Property: fake-quant output is finite and the global error is the
+    /// merge of block errors, for all (type, partition, scaling) combos.
+    #[test]
+    fn prop_fakequant_wellformed() {
+        prop(150, |g: &mut Gen| {
+            let rows = g.usize_in(1, 24);
+            let cols = g.usize_in(1, 24);
+            let x = Tensor::from_vec(
+                &[rows, cols],
+                (0..rows * cols).map(|_| g.f32_in(-10.0, 10.0)).collect(),
+            );
+            let t = *g.choose(&[ReprType::E4M3, ReprType::E5M2, ReprType::Bf16]);
+            let (br, bc) = (g.usize_in(1, 8), g.usize_in(1, 8));
+            let p = *g.choose(&[
+                Partition::Tensor,
+                Partition::Block { r: br, c: bc },
+                Partition::ChannelRows,
+                Partition::ChannelCols,
+            ]);
+            let s = *g.choose(&[ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0]);
+            let r = fake_quantize(&x, t, p, s);
+            assert!(r.out.data().iter().all(|v| v.is_finite()));
+            let mut merged = RelErrAccum::default();
+            for b in &r.block_err {
+                merged.merge(*b);
+            }
+            assert!((merged.mean() - r.global_err.mean()).abs() < 1e-12);
+            assert!(r.global_err.mean() < relerr_bound_for(t), "err {}", r.global_err.mean());
+            true
+        });
+    }
+
+    /// Property: zeros are preserved exactly (scale * 0 = 0 round-trips).
+    #[test]
+    fn prop_zeros_preserved() {
+        prop(100, |g: &mut Gen| {
+            let n = g.usize_in(4, 32);
+            let mut data: Vec<f32> = (0..n).map(|_| g.f32_in(-5.0, 5.0)).collect();
+            for i in (0..n).step_by(3) {
+                data[i] = 0.0;
+            }
+            let x = Tensor::from_vec(&[1, n], data);
+            let r = fake_quantize(&x, ReprType::E4M3, Partition::Tensor, ScalingAlgo::Gam);
+            for (a, b) in x.data().iter().zip(r.out.data()) {
+                if *a == 0.0 {
+                    assert_eq!(*b, 0.0);
+                }
+            }
+            true
+        });
+    }
+
+    /// Property: per-tensor partition error >= per-channel error for the
+    /// same scaling algo (finer granularity can only help on average).
+    #[test]
+    fn prop_granularity_ordering_blockwise_amax() {
+        prop(60, |g: &mut Gen| {
+            // Rows at different magnitudes to create range pressure.
+            let rows = g.usize_in(2, 10);
+            let cols = g.usize_in(2, 24);
+            let mut data = Vec::with_capacity(rows * cols);
+            let base = g.f32_log_uniform(1e-4, 1.0);
+            for r in 0..rows {
+                // Alternate rows ~18 binades apart: under the per-tensor
+                // scale the small rows land in E4M3's flush-to-zero
+                // region (relative error ≈ 1), while per-channel scaling
+                // keeps them normal. (Relative error is scale-invariant
+                // for *normal* values, so a modest spread would not
+                // separate the strategies.)
+                let mag = if r % 2 == 0 { base } else { base * 3e5 };
+                for _ in 0..cols {
+                    data.push(mag * g.f32_in(-1.0, 1.0));
+                }
+            }
+            let x = Tensor::from_vec(&[rows, cols], data);
+            let e_t = fake_quantize(&x, ReprType::E4M3, Partition::Tensor, ScalingAlgo::AmaxFp32)
+                .global_err
+                .sum;
+            let e_c =
+                fake_quantize(&x, ReprType::E4M3, Partition::ChannelRows, ScalingAlgo::AmaxFp32)
+                    .global_err
+                    .sum;
+            // Allow tiny numeric slack: equality happens when rows share
+            // magnitudes.
+            e_c <= e_t * 1.02 + 1e-9
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Host-side quantization substrate: partition strategies (§3), the
+//! fake-quantization pipeline (Fig. 4), and the relative-error metrics
+//! (Eqs. 1–4) that drive MoR decisions.
+//!
+//! This is the bit-exact host mirror of the Pallas/JAX compute path; the
+//! integration tests in `rust/tests/integration_quant.rs` run both on the
+//! same inputs and require element-wise agreement.
+
+pub mod error;
+pub mod fake_quant;
+pub mod partition;
+
+pub use error::{block_relerr_sum, dynamic_range_fits_e5m2, mean_relative_error, RelErrAccum};
+pub use fake_quant::{fake_quantize, FakeQuantResult};
+pub use partition::{BlockRegion, Partition};

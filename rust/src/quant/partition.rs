@@ -1,0 +1,225 @@
+//! Partition strategies over a 2-D tensor (§3 of the paper): the set of
+//! blocks B that MoR quantizes and scores independently.
+//!
+//! * `Tensor` — one block, the whole tensor.
+//! * `Block{r,c}` — r×c tiles (128×128 default, 64×64 ablation).
+//! * `ChannelRows` / `ChannelCols` — one block per row / per column. The
+//!   paper's "per-channel" picks rows or columns *based on the dot
+//!   product dimension*: the contracting dimension of the GEMM the tensor
+//!   feeds. [`Partition::channel_for_contraction`] encodes that rule.
+//! * `SubChannelRows{len}` — 1×len sub-channel segments (MX-style 1×32,
+//!   NVFP4-style 1×16).
+
+/// Half-open 2-D index region \[r0, r1) × \[c0, c1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockRegion {
+    pub r0: usize,
+    pub r1: usize,
+    pub c0: usize,
+    pub c1: usize,
+}
+
+impl BlockRegion {
+    pub fn len(&self) -> usize {
+        (self.r1 - self.r0) * (self.c1 - self.c0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Iterate flat (row-major) indices of this region within a tensor of
+    /// `cols` columns.
+    pub fn indices(&self, cols: usize) -> impl Iterator<Item = usize> + '_ {
+        let (c0, c1) = (self.c0, self.c1);
+        (self.r0..self.r1).flat_map(move |r| (c0..c1).map(move |c| r * cols + c))
+    }
+}
+
+/// A partition strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Partition {
+    Tensor,
+    Block { r: usize, c: usize },
+    ChannelRows,
+    ChannelCols,
+    SubChannelRows { len: usize },
+}
+
+impl Partition {
+    /// The paper's default 128×128 per-block strategy.
+    pub const BLOCK128: Partition = Partition::Block { r: 128, c: 128 };
+    /// The 64×64 ablation.
+    pub const BLOCK64: Partition = Partition::Block { r: 64, c: 64 };
+
+    /// Per-channel partition aligned with the dot-product dimension:
+    /// if the tensor contracts along its columns (first GEMM operand,
+    /// `x[m,k] @ w[k,n]` → x contracts along cols) use rows as blocks;
+    /// if it contracts along rows (second operand) use columns.
+    pub fn channel_for_contraction(contracts_along_cols: bool) -> Partition {
+        if contracts_along_cols {
+            Partition::ChannelRows
+        } else {
+            Partition::ChannelCols
+        }
+    }
+
+    /// Stable name for manifests / CLI.
+    pub fn name(self) -> String {
+        match self {
+            Partition::Tensor => "tensor".into(),
+            Partition::Block { r, c } => format!("block{r}x{c}"),
+            Partition::ChannelRows => "channel_rows".into(),
+            Partition::ChannelCols => "channel_cols".into(),
+            Partition::SubChannelRows { len } => format!("subchannel{len}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Partition> {
+        match s {
+            "tensor" => Some(Partition::Tensor),
+            "channel_rows" => Some(Partition::ChannelRows),
+            "channel_cols" => Some(Partition::ChannelCols),
+            _ => {
+                if let Some(rest) = s.strip_prefix("block") {
+                    let (r, c) = rest.split_once('x')?;
+                    Some(Partition::Block { r: r.parse().ok()?, c: c.parse().ok()? })
+                } else if let Some(rest) = s.strip_prefix("subchannel") {
+                    Some(Partition::SubChannelRows { len: rest.parse().ok()? })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Enumerate the blocks covering a `rows`×`cols` tensor, row-major
+    /// over the block grid. Ragged edges produce smaller blocks.
+    pub fn blocks(self, rows: usize, cols: usize) -> Vec<BlockRegion> {
+        match self {
+            Partition::Tensor => {
+                vec![BlockRegion { r0: 0, r1: rows, c0: 0, c1: cols }]
+            }
+            Partition::Block { r, c } => {
+                let mut out = Vec::with_capacity(rows.div_ceil(r) * cols.div_ceil(c));
+                for br in 0..rows.div_ceil(r) {
+                    for bc in 0..cols.div_ceil(c) {
+                        out.push(BlockRegion {
+                            r0: br * r,
+                            r1: ((br + 1) * r).min(rows),
+                            c0: bc * c,
+                            c1: ((bc + 1) * c).min(cols),
+                        });
+                    }
+                }
+                out
+            }
+            Partition::ChannelRows => (0..rows)
+                .map(|r| BlockRegion { r0: r, r1: r + 1, c0: 0, c1: cols })
+                .collect(),
+            Partition::ChannelCols => (0..cols)
+                .map(|c| BlockRegion { r0: 0, r1: rows, c0: c, c1: c + 1 })
+                .collect(),
+            Partition::SubChannelRows { len } => {
+                let mut out = Vec::new();
+                for r in 0..rows {
+                    for bc in 0..cols.div_ceil(len) {
+                        out.push(BlockRegion {
+                            r0: r,
+                            r1: r + 1,
+                            c0: bc * len,
+                            c1: ((bc + 1) * len).min(cols),
+                        });
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Number of blocks without materializing them.
+    pub fn num_blocks(self, rows: usize, cols: usize) -> usize {
+        match self {
+            Partition::Tensor => 1,
+            Partition::Block { r, c } => rows.div_ceil(r) * cols.div_ceil(c),
+            Partition::ChannelRows => rows,
+            Partition::ChannelCols => cols,
+            Partition::SubChannelRows { len } => rows * cols.div_ceil(len),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop, Gen};
+
+    #[test]
+    fn names_roundtrip() {
+        for p in [
+            Partition::Tensor,
+            Partition::BLOCK128,
+            Partition::BLOCK64,
+            Partition::ChannelRows,
+            Partition::ChannelCols,
+            Partition::SubChannelRows { len: 32 },
+        ] {
+            assert_eq!(Partition::parse(&p.name()), Some(p));
+        }
+        assert_eq!(Partition::parse("bogus"), None);
+    }
+
+    #[test]
+    fn block_counts() {
+        assert_eq!(Partition::BLOCK128.num_blocks(256, 384), 2 * 3);
+        assert_eq!(Partition::BLOCK128.num_blocks(100, 100), 1);
+        assert_eq!(Partition::Tensor.num_blocks(999, 7), 1);
+        assert_eq!(Partition::ChannelRows.num_blocks(5, 9), 5);
+        assert_eq!(Partition::ChannelCols.num_blocks(5, 9), 9);
+        assert_eq!(Partition::SubChannelRows { len: 4 }.num_blocks(3, 10), 9);
+    }
+
+    #[test]
+    fn channel_for_contraction_rule() {
+        assert_eq!(Partition::channel_for_contraction(true), Partition::ChannelRows);
+        assert_eq!(Partition::channel_for_contraction(false), Partition::ChannelCols);
+    }
+
+    /// Property: every partition's blocks exactly tile the tensor —
+    /// disjoint and covering.
+    #[test]
+    fn prop_blocks_tile_exactly() {
+        prop(200, |g: &mut Gen| {
+            let rows = g.usize_in(1, 50);
+            let cols = g.usize_in(1, 50);
+            let (br, bc, sl) = (g.usize_in(1, 20), g.usize_in(1, 20), g.usize_in(1, 16));
+            let p = *g.choose(&[
+                Partition::Tensor,
+                Partition::Block { r: br, c: bc },
+                Partition::ChannelRows,
+                Partition::ChannelCols,
+                Partition::SubChannelRows { len: sl },
+            ]);
+            let blocks = p.blocks(rows, cols);
+            assert_eq!(blocks.len(), p.num_blocks(rows, cols));
+            let mut seen = vec![false; rows * cols];
+            for b in &blocks {
+                assert!(!b.is_empty(), "{p:?} produced empty block {b:?}");
+                for idx in b.indices(cols) {
+                    assert!(!seen[idx], "{p:?} double-covers index {idx}");
+                    seen[idx] = true;
+                }
+            }
+            assert!(seen.iter().all(|s| *s), "{p:?} leaves holes");
+            true
+        });
+    }
+
+    #[test]
+    fn ragged_edge_blocks() {
+        let p = Partition::Block { r: 3, c: 3 };
+        let blocks = p.blocks(4, 5);
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(blocks[3], BlockRegion { r0: 3, r1: 4, c0: 3, c1: 5 });
+    }
+}

@@ -1,0 +1,300 @@
+//! Figure regenerators: ASCII renderings + CSV exports of every figure
+//! in the paper's evaluation section (Figures 5–21).
+
+use super::runs::{self, Run};
+use super::ReportCtx;
+use crate::coordinator::logging::ascii_chart;
+use crate::mor::stats::TensorKey;
+use anyhow::Result;
+
+fn loss_series(runs: &[std::rc::Rc<Run>]) -> Vec<(String, Vec<(f64, f64)>)> {
+    runs.iter()
+        .map(|r| {
+            (
+                r.label.clone(),
+                r.records
+                    .iter()
+                    .map(|rec| (rec.step as f64, rec.train_loss as f64))
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+fn val_series(runs: &[std::rc::Rc<Run>]) -> Vec<(String, Vec<(f64, f64)>)> {
+    runs.iter()
+        .map(|r| {
+            (
+                r.label.clone(),
+                r.records
+                    .iter()
+                    .filter(|rec| rec.val_loss.is_finite())
+                    .map(|rec| (rec.step as f64, rec.val_loss as f64))
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+fn norm_series(runs: &[std::rc::Rc<Run>]) -> Vec<(String, Vec<(f64, f64)>)> {
+    runs.iter()
+        .map(|r| {
+            (
+                r.label.clone(),
+                r.records
+                    .iter()
+                    .map(|rec| (rec.step as f64, rec.param_norm as f64))
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+fn print_run_panels(title: &str, runs: &[std::rc::Rc<Run>]) {
+    println!("{}", ascii_chart(&format!("{title} — training loss"), &loss_series(runs), 100, 20));
+    println!("{}", ascii_chart(&format!("{title} — validation loss"), &val_series(runs), 100, 16));
+    println!("{}", ascii_chart(&format!("{title} — parameter L2 norm"), &norm_series(runs), 100, 12));
+}
+
+/// Figures 5 / 6: loss + param-norm curves, partition strategies.
+pub fn loss_curves(ctx: &ReportCtx, config_id: u8) -> Result<()> {
+    let runs = runs::partition_runs(ctx, config_id, false)?;
+    print_run_panels(&format!("Figure {} (configuration {config_id})", if config_id == 1 { 5 } else { 6 }), &runs);
+    Ok(())
+}
+
+/// Figure 7: eval-suite accuracy over training, both configs.
+pub fn suite_over_training(ctx: &ReportCtx) -> Result<()> {
+    for config_id in [1u8, 2] {
+        let runs = runs::partition_runs(ctx, config_id, true)?;
+        let series: Vec<(String, Vec<(f64, f64)>)> = runs
+            .iter()
+            .map(|r| {
+                (
+                    r.label.clone(),
+                    r.suite_history
+                        .iter()
+                        .map(|(s, sc)| (*s as f64, sc.mean_accuracy() as f64))
+                        .collect(),
+                )
+            })
+            .collect();
+        println!(
+            "{}",
+            ascii_chart(
+                &format!("Figure 7({}) — eval-suite accuracy over training (MMLU substitute)", config_id),
+                &series,
+                100,
+                16
+            )
+        );
+    }
+    Ok(())
+}
+
+/// Figure 8: ablation loss curves (config 1).
+pub fn ablation_loss_curves(ctx: &ReportCtx) -> Result<()> {
+    let mut all = Vec::new();
+    for (label, artifact, th) in runs::ABLATION_VARIANTS {
+        all.push(runs::run_variant(ctx, label, artifact, 1, th, false, false)?);
+    }
+    print_run_panels("Figure 8 (ablations, configuration 1)", &all);
+    Ok(())
+}
+
+/// Figure 9: ablation eval-suite trajectories.
+pub fn ablation_suite(ctx: &ReportCtx) -> Result<()> {
+    let mut series = Vec::new();
+    for (label, artifact, th) in runs::ABLATION_VARIANTS {
+        let r = runs::run_variant(ctx, label, artifact, 1, th, true, false)?;
+        series.push((
+            r.label.clone(),
+            r.suite_history
+                .iter()
+                .map(|(s, sc)| (*s as f64, sc.mean_accuracy() as f64))
+                .collect(),
+        ));
+    }
+    println!("{}", ascii_chart("Figure 9 — ablation eval-suite accuracy", &series, 100, 16));
+    Ok(())
+}
+
+/// Figure 10: BF16 fallback percentages per strategy × config.
+pub fn fallback_percentages(ctx: &ReportCtx) -> Result<()> {
+    println!("Figure 10: percentage of tensors that fall back to BF16");
+    println!("{:<12} {:>14} {:>14}", "strategy", "config 1", "config 2");
+    for (label, artifact) in &runs::PARTITION_VARIANTS[1..] {
+        let mut row = format!("{label:<12}");
+        for config_id in [1u8, 2] {
+            let r = runs::run_variant(ctx, label, artifact, config_id, 0.045, false, false)?;
+            row.push_str(&format!(" {:>13.2}%", r.mean_fallback_pct()));
+        }
+        println!("{row}");
+    }
+    println!("(paper shape: channel < block < tensor; config2 > config1)");
+    Ok(())
+}
+
+/// Figure 11: the histogram/heatmap annotation scheme.
+pub fn heatmap_annotation(ctx: &ReportCtx) -> Result<()> {
+    let _ = ctx;
+    println!("Figure 11: relative-error histogram layout");
+    println!("  x-axis: 12 bins of 0.5% relative error; first bin <0.5%, last bin >=5.5%");
+    println!("  '|' marks the E4M3 threshold (4.5%): mass left of it quantizes to E4M3,");
+    println!("  mass right of it falls back to BF16.");
+    println!("  y-axis: decoder.layer.<n>.<module>.<linear>.<tensor>[.<direction>]");
+    println!("  rows normalized to [0,1]; darker glyph = denser bin ( . : - = + * # @ )");
+    Ok(())
+}
+
+fn layer_keys(
+    layers: &[usize],
+    tensors: &[&'static str],
+    per_channel: bool,
+) -> Vec<TensorKey> {
+    let mut keys = Vec::new();
+    for &l in layers {
+        for linear in 0..4 {
+            for &t in tensors {
+                if per_channel {
+                    for d in ["row", "col"] {
+                        keys.push(TensorKey::new(l, linear, t, d));
+                    }
+                } else {
+                    keys.push(TensorKey::new(l, linear, t, ""));
+                }
+            }
+        }
+    }
+    keys
+}
+
+fn heatmap_for(
+    ctx: &ReportCtx,
+    label: &str,
+    artifact: &str,
+    config_id: u8,
+    backward: bool,
+    per_channel: bool,
+    title: &str,
+) -> Result<()> {
+    let r = runs::run_variant(ctx, label, artifact, config_id, 0.045, false, true)?;
+    let stats = r.stats.as_ref().expect("need_stats run must carry stats");
+    let n = ctx.model.n_layers;
+    let layers: Vec<usize> = if n <= 6 {
+        (0..n).collect()
+    } else {
+        (0..3).chain(n - 3..n).collect()
+    };
+    let tensors: &[&'static str] = if backward { &["grad"] } else { &["input", "weight"] };
+    let keys = layer_keys(&layers, tensors, per_channel);
+    println!("{title}");
+    println!("{}", stats.ascii_heatmap(&keys, 4.5));
+    Ok(())
+}
+
+/// Figures 12/13 (config 1) and 15/16 (config 2): per-block heatmaps.
+pub fn heatmap_block(ctx: &ReportCtx, config_id: u8, backward: bool) -> Result<()> {
+    let fig = match (config_id, backward) {
+        (1, false) => 12,
+        (1, true) => 13,
+        (2, false) => 15,
+        _ => 16,
+    };
+    heatmap_for(
+        ctx,
+        "block",
+        "train_mor_tensor_block",
+        config_id,
+        backward,
+        false,
+        &format!(
+            "Figure {fig}: per-block MoR heatmap, {} pass, configuration {config_id}",
+            if backward { "backward" } else { "forward" }
+        ),
+    )
+}
+
+/// Figure 14: first-layer histograms over training windows.
+pub fn heatmap_over_time(ctx: &ReportCtx) -> Result<()> {
+    let r = runs::run_variant(ctx, "block", "train_mor_tensor_block", 1, 0.045, false, true)?;
+    let stats = r.stats.as_ref().unwrap();
+    println!("Figure 14: first transformer block, histogram per training window");
+    for key in [
+        TensorKey::new(0, 3, "input", ""), // FC2 activation — the outlier
+        TensorKey::new(0, 2, "grad", ""),  // FC1 gradient — the outlier
+    ] {
+        println!("tensor {}:", key.name());
+        for w in 0..stats.num_windows() {
+            if let Some(win) = stats.window_for(w, &key) {
+                let norm = win.hist.normalized();
+                let row: String = norm
+                    .iter()
+                    .map(|v| {
+                        const SHADES: [char; 9] = [' ', '.', ':', '-', '=', '+', '*', '#', '@'];
+                        SHADES[((v * 8.0).ceil() as usize).min(8)]
+                    })
+                    .collect();
+                println!("  window {w:>2} |{row}|  fb={:.0}%", win.fallback_rate() * 100.0);
+            }
+        }
+    }
+    println!("(paper shape: relative error drifts right as training progresses)");
+    Ok(())
+}
+
+/// Figure 17: per-tensor-strategy heatmap (middle layers).
+pub fn heatmap_tensor_strategy(ctx: &ReportCtx) -> Result<()> {
+    let r = runs::run_variant(ctx, "tensor", "train_mor_tensor_tensor", 1, 0.045, false, true)?;
+    let stats = r.stats.as_ref().unwrap();
+    let n = ctx.model.n_layers;
+    let mid: Vec<usize> = (n / 3..(n / 3 + 3).min(n)).collect();
+    println!("Figure 17: per-tensor strategy heatmap (middle layers, fwd+bwd)");
+    let keys = layer_keys(&mid, &["input", "weight", "grad"], false);
+    println!("{}", stats.ascii_heatmap(&keys, 4.5));
+    Ok(())
+}
+
+/// Figures 18/19: per-channel heatmaps with row/col direction resolved.
+pub fn heatmap_channel(ctx: &ReportCtx, backward: bool) -> Result<()> {
+    heatmap_for(
+        ctx,
+        "channel",
+        "train_mor_tensor_channel",
+        1,
+        backward,
+        true,
+        &format!(
+            "Figure {}: per-channel heatmap ({} pass), row vs col partitions",
+            if backward { 19 } else { 18 },
+            if backward { "backward" } else { "forward" }
+        ),
+    )
+}
+
+/// Figure 20: sub-tensor loss curves.
+pub fn subtensor_loss_curves(ctx: &ReportCtx) -> Result<()> {
+    let mut all = Vec::new();
+    for (label, artifact) in runs::SUBTENSOR_VARIANTS {
+        all.push(runs::run_variant(ctx, label, artifact, 1, 0.045, false, false)?);
+    }
+    print_run_panels("Figure 20 (sub-tensor MoR, configuration 1)", &all);
+    Ok(())
+}
+
+/// Figure 21: sub-tensor eval-suite trajectories.
+pub fn subtensor_suite(ctx: &ReportCtx) -> Result<()> {
+    let mut series = Vec::new();
+    for (label, artifact) in runs::SUBTENSOR_VARIANTS {
+        let r = runs::run_variant(ctx, label, artifact, 1, 0.045, true, false)?;
+        series.push((
+            r.label.clone(),
+            r.suite_history
+                .iter()
+                .map(|(s, sc)| (*s as f64, sc.mean_accuracy() as f64))
+                .collect(),
+        ));
+    }
+    println!("{}", ascii_chart("Figure 21 — sub-tensor eval-suite accuracy", &series, 100, 16));
+    Ok(())
+}

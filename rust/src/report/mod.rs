@@ -1,0 +1,98 @@
+//! The paper-reproduction report harness: one entry point per table and
+//! figure of the evaluation section (`repro report <exp>`). See
+//! DESIGN.md §5 for the experiment index.
+//!
+//! Runs are cached on disk: an experiment re-uses an existing run's
+//! metrics/stats CSVs when present (delete `runs/` or pass `--fresh` to
+//! recompute).
+
+pub mod figures;
+pub mod runs;
+pub mod tables;
+
+use crate::model::config::{ModelConfig, TrainConfig};
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Shared context for all report commands.
+pub struct ReportCtx {
+    pub runtime: Runtime,
+    pub model: ModelConfig,
+    /// Steps per training run (scaled-down stand-in for 1T tokens).
+    pub steps: u64,
+    pub out_dir: PathBuf,
+    pub fresh: bool,
+    pub quiet: bool,
+    /// In-memory memoization of completed runs, shared across the
+    /// experiments of one `report all` invocation (each training run is
+    /// executed once with suite + stats and reused everywhere).
+    pub(crate) run_cache:
+        std::cell::RefCell<std::collections::HashMap<String, std::rc::Rc<runs::Run>>>,
+}
+
+impl ReportCtx {
+    pub fn new(
+        artifacts_dir: &std::path::Path,
+        model: ModelConfig,
+        steps: u64,
+        out_dir: PathBuf,
+    ) -> Result<ReportCtx> {
+        let runtime = Runtime::load(artifacts_dir, model)?;
+        Ok(ReportCtx {
+            runtime,
+            model,
+            steps,
+            out_dir,
+            fresh: false,
+            quiet: false,
+            run_cache: Default::default(),
+        })
+    }
+
+    pub fn config(&self, id: u8) -> TrainConfig {
+        match id {
+            2 => TrainConfig::config2(self.steps),
+            _ => TrainConfig::config1(self.steps),
+        }
+    }
+
+    /// Dispatch an experiment by its paper id.
+    pub fn run_experiment(&self, exp: &str) -> Result<()> {
+        match exp {
+            "table1" => tables::table1(self),
+            "table2" => tables::table2(self),
+            "table3" => tables::table3(self),
+            "table4" => tables::table4(self),
+            "fig5" => figures::loss_curves(self, 1),
+            "fig6" => figures::loss_curves(self, 2),
+            "fig7" => figures::suite_over_training(self),
+            "fig8" => figures::ablation_loss_curves(self),
+            "fig9" => figures::ablation_suite(self),
+            "fig10" => figures::fallback_percentages(self),
+            "fig11" => figures::heatmap_annotation(self),
+            "fig12" => figures::heatmap_block(self, 1, false),
+            "fig13" => figures::heatmap_block(self, 1, true),
+            "fig14" => figures::heatmap_over_time(self),
+            "fig15" => figures::heatmap_block(self, 2, false),
+            "fig16" => figures::heatmap_block(self, 2, true),
+            "fig17" => figures::heatmap_tensor_strategy(self),
+            "fig18" => figures::heatmap_channel(self, false),
+            "fig19" => figures::heatmap_channel(self, true),
+            "fig20" => figures::subtensor_loss_curves(self),
+            "fig21" => figures::subtensor_suite(self),
+            "all" => {
+                for e in [
+                    "table1", "fig5", "fig6", "fig7", "table2", "fig8", "fig9", "table3",
+                    "fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17",
+                    "fig18", "fig19", "fig20", "fig21", "table4",
+                ] {
+                    println!("\n================ {e} ================");
+                    self.run_experiment(e)?;
+                }
+                Ok(())
+            }
+            _ => anyhow::bail!("unknown experiment {exp:?} (try table1..4, fig5..fig21, all)"),
+        }
+    }
+}

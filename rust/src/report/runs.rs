@@ -1,0 +1,171 @@
+//! Run management for the report harness: each (artifact, config)
+//! training run is executed once and cached under
+//! `<out_dir>/runs/<artifact>.<config>.csv` (+ `.stats.csv`).
+
+use super::ReportCtx;
+use crate::coordinator::logging::{MetricsLogger, StepRecord};
+use crate::coordinator::trainer::{Trainer, TrainerOptions};
+use crate::mor::stats::StatsCollector;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// The artifact names of the §4.1.1 partition-strategy comparison.
+pub const PARTITION_VARIANTS: [(&str, &str); 4] = [
+    ("baseline", "train_baseline"),
+    ("block", "train_mor_tensor_block"),
+    ("tensor", "train_mor_tensor_tensor"),
+    ("channel", "train_mor_tensor_channel"),
+];
+
+/// The §4.1.2 ablation variants (config 1 only).
+pub const ABLATION_VARIANTS: [(&str, &str, f32); 6] = [
+    ("bf16", "train_baseline", 0.045),
+    ("block128", "train_mor_tensor_block", 0.045),
+    ("block64", "train_mor_tensor_block64", 0.045),
+    ("th5.0", "train_mor_tensor_block", 0.050),
+    ("amax", "train_mor_tensor_block_amax", 0.045),
+    ("e8m0", "train_mor_tensor_block_e8m0", 0.045),
+];
+
+/// The §4.2 sub-tensor variants (config 1 only).
+pub const SUBTENSOR_VARIANTS: [(&str, &str); 3] = [
+    ("bf16", "train_baseline"),
+    ("two_way", "train_mor_subtensor_two_way"),
+    ("three_way", "train_mor_subtensor_three_way"),
+];
+
+/// A completed (or loaded-from-cache) run.
+#[derive(Clone)]
+pub struct Run {
+    pub label: String,
+    pub artifact: String,
+    pub config_id: u8,
+    pub records: Vec<StepRecord>,
+    /// Present only when the run executed in this process (stats CSV
+    /// reload is not implemented; figures that need `stats` force a
+    /// fresh run).
+    pub stats: Option<StatsCollector>,
+    pub suite_history: Vec<(u64, crate::coordinator::eval::EvalScores)>,
+    pub csv_path: PathBuf,
+}
+
+impl Run {
+    pub fn final_train_loss(&self) -> f32 {
+        // Smooth over the last 10 steps to de-noise the tiny-scale runs.
+        let n = self.records.len();
+        let tail = &self.records[n.saturating_sub(10)..];
+        tail.iter().map(|r| r.train_loss).sum::<f32>() / tail.len().max(1) as f32
+    }
+
+    pub fn final_val_loss(&self) -> f32 {
+        self.records
+            .iter()
+            .rev()
+            .find(|r| r.val_loss.is_finite())
+            .map(|r| r.val_loss)
+            .unwrap_or(f32::NAN)
+    }
+
+    pub fn final_param_norm(&self) -> f32 {
+        self.records.last().map(|r| r.param_norm).unwrap_or(f32::NAN)
+    }
+
+    pub fn mean_fallback_pct(&self) -> f32 {
+        let n = self.records.len().max(1) as f32;
+        self.records.iter().map(|r| r.bf16_fallback_rate).sum::<f32>() / n * 100.0
+    }
+}
+
+/// Execute (or load) one run. Each unique (artifact, config, threshold)
+/// executes at most once per process — always with suite evals and
+/// stats collection — and is memoized in [`ReportCtx::run_cache`]; the
+/// disk CSV serves cross-process reuse for figures that need neither
+/// suite nor stats.
+pub fn run_variant(
+    ctx: &ReportCtx,
+    label: &str,
+    artifact: &str,
+    config_id: u8,
+    threshold: f32,
+    with_suite: bool,
+    need_stats: bool,
+) -> Result<std::rc::Rc<Run>> {
+    let cfg = ctx.config(config_id);
+    let runs_dir = ctx.out_dir.join("runs");
+    let csv_path = runs_dir.join(format!("{artifact}.{}.th{threshold}.csv", cfg.name));
+    let key = format!("{artifact}.{}.th{threshold}", cfg.name);
+
+    if let Some(run) = ctx.run_cache.borrow().get(&key) {
+        if (!need_stats || run.stats.is_some()) && (!with_suite || !run.suite_history.is_empty())
+        {
+            if run.label == label {
+                return Ok(run.clone());
+            }
+            // Same run requested under a different display label
+            // (e.g. "baseline" in Table 2 vs "bf16" in Table 3).
+            let mut relabelled = (**run).clone();
+            relabelled.label = label.to_string();
+            return Ok(std::rc::Rc::new(relabelled));
+        }
+    }
+
+    let disk_ok = !ctx.fresh && csv_path.exists() && !need_stats && !with_suite;
+    if disk_ok {
+        let records = MetricsLogger::read(&csv_path)?;
+        if records.len() as u64 >= ctx.steps {
+            let run = std::rc::Rc::new(Run {
+                label: label.to_string(),
+                artifact: artifact.to_string(),
+                config_id,
+                records,
+                stats: None,
+                suite_history: Vec::new(),
+                csv_path,
+            });
+            // Do NOT memoize disk loads: a later suite/stats request
+            // must be able to trigger the full run.
+            return Ok(run);
+        }
+    }
+
+    let trainer = Trainer::new(&ctx.runtime, cfg);
+    let mut opts = TrainerOptions::new(artifact, ctx.steps, runs_dir.clone());
+    opts.threshold = threshold;
+    opts.quiet = ctx.quiet;
+    // Always collect suite + stats so every experiment can share this run.
+    opts.suite_every = (ctx.steps / 8).max(1);
+    opts.stats_window = (ctx.steps / 4).max(1);
+    opts.per_channel = artifact.contains("channel");
+    let outcome = trainer
+        .run(&opts)
+        .with_context(|| format!("run {label} ({artifact}, {})", cfg.name))?;
+    // Rename the trainer's CSV to the threshold-qualified cache name.
+    if outcome.metrics_path != csv_path {
+        std::fs::rename(&outcome.metrics_path, &csv_path).ok();
+    }
+    let run = std::rc::Rc::new(Run {
+        label: label.to_string(),
+        artifact: artifact.to_string(),
+        config_id,
+        records: outcome.records,
+        stats: Some(outcome.stats),
+        suite_history: outcome.suite_history,
+        csv_path,
+    });
+    ctx.run_cache.borrow_mut().insert(key, run.clone());
+    Ok(run)
+}
+
+/// Run the four §4.1.1 partition variants for one config.
+pub fn partition_runs(
+    ctx: &ReportCtx,
+    config_id: u8,
+    with_suite: bool,
+) -> Result<Vec<std::rc::Rc<Run>>> {
+    PARTITION_VARIANTS
+        .iter()
+        .map(|(label, artifact)| {
+            run_variant(ctx, label, artifact, config_id, 0.045, with_suite, false)
+        })
+        .collect()
+}

@@ -1,0 +1,131 @@
+//! Table regenerators: Tables 1–4 of the paper, printed in the same
+//! row/column layout (absolute numbers reflect this testbed; the
+//! *shape* — who wins, by how much — is the reproduction target).
+
+use super::runs::{self, Run};
+use super::ReportCtx;
+use crate::data::synthetic::{CorpusProfile, SyntheticCorpus};
+use crate::data::tasks::EvalTask;
+use anyhow::Result;
+
+/// Table 1: the two training configurations (plus measured corpus
+/// entropy, our stand-in for "data quality").
+pub fn table1(ctx: &ReportCtx) -> Result<()> {
+    let c1 = ctx.config(1);
+    let c2 = ctx.config(2);
+    let mut e1 = SyntheticCorpus::new(CorpusProfile::Nemotron4Like, ctx.model.vocab_size, 1);
+    let mut e2 = SyntheticCorpus::new(CorpusProfile::NemotronHLike, ctx.model.vocab_size, 1);
+    println!("Table 1: training configurations (testbed-scaled)");
+    println!("{:<24} {:>16} {:>16}", "Parameter", "Configuration 1", "Configuration 2");
+    println!("{:<24} {:>16} {:>16}", "Training Data", "synthetic-N4", "synthetic-NH");
+    println!(
+        "{:<24} {:>16} {:>16}",
+        "Corpus entropy (bits)",
+        format!("{:.3}", e1.entropy_estimate(20000)),
+        format!("{:.3}", e2.entropy_estimate(20000))
+    );
+    println!("{:<24} {:>16} {:>16}", "Training steps", ctx.steps, ctx.steps);
+    println!("{:<24} {:>16} {:>16}", "LR Schedule", "Cosine", "Cosine");
+    println!(
+        "{:<24} {:>16.1e} {:>16.1e}",
+        "Peak Learning Rate", c1.schedule.peak_lr, c2.schedule.peak_lr
+    );
+    println!(
+        "{:<24} {:>16.1e} {:>16.1e}",
+        "Final Learning Rate", c1.schedule.final_lr, c2.schedule.final_lr
+    );
+    println!("{:<24} {:>16} {:>16}", "Batch Size", c1.batch_size, c2.batch_size);
+    Ok(())
+}
+
+fn print_quality_table(title: &str, runs: &[std::rc::Rc<Run>], scores: &[Vec<(String, f32)>]) {
+    println!("{title}");
+    print!("{:<18}", "Metric");
+    for r in runs {
+        print!(" {:>12}", r.label);
+    }
+    println!();
+    print!("{:<18}", "Training Loss");
+    for r in runs {
+        print!(" {:>12.4}", r.final_train_loss());
+    }
+    println!();
+    print!("{:<18}", "Validation Loss");
+    for r in runs {
+        print!(" {:>12.4}", r.final_val_loss());
+    }
+    println!();
+    if !scores.is_empty() {
+        // One row per eval task (the downstream-benchmark substitutes).
+        let task_names: Vec<String> =
+            scores[0].iter().map(|(n, _)| n.clone()).collect();
+        for (ti, tname) in task_names.iter().enumerate() {
+            print!("{:<18}", tname);
+            for s in scores {
+                print!(" {:>12.2}", s[ti].1);
+            }
+            println!();
+        }
+    }
+    print!("{:<18}", "BF16 fallback %");
+    for r in runs {
+        print!(" {:>12.2}", r.mean_fallback_pct());
+    }
+    println!();
+}
+
+fn suite_scores(run: &std::rc::Rc<Run>) -> Vec<(String, f32)> {
+    match run.suite_history.last() {
+        Some((_, s)) => {
+            let mut v: Vec<(String, f32)> = s
+                .per_task
+                .iter()
+                .map(|(n, _, a)| (n.to_string(), *a))
+                .collect();
+            v.push(("mean_acc".to_string(), s.mean_accuracy()));
+            v
+        }
+        None => EvalTask::ALL
+            .iter()
+            .map(|t| (t.name().to_string(), f32::NAN))
+            .chain(std::iter::once(("mean_acc".to_string(), f32::NAN)))
+            .collect(),
+    }
+}
+
+/// Table 2: partition strategies × both configs, final quality.
+pub fn table2(ctx: &ReportCtx) -> Result<()> {
+    for config_id in [1u8, 2] {
+        let runs = runs::partition_runs(ctx, config_id, true)?;
+        let scores: Vec<_> = runs.iter().map(suite_scores).collect();
+        print_quality_table(
+            &format!("Table 2 (configuration {config_id}): partition strategies"),
+            &runs,
+            &scores,
+        );
+        println!();
+    }
+    Ok(())
+}
+
+/// Table 3: the §4.1.2 ablations (config 1).
+pub fn table3(ctx: &ReportCtx) -> Result<()> {
+    let mut all = Vec::new();
+    for (label, artifact, th) in runs::ABLATION_VARIANTS {
+        all.push(runs::run_variant(ctx, label, artifact, 1, th, true, false)?);
+    }
+    let scores: Vec<_> = all.iter().map(suite_scores).collect();
+    print_quality_table("Table 3: MoR setting ablations (configuration 1)", &all, &scores);
+    Ok(())
+}
+
+/// Table 4: sub-tensor recipes (config 1).
+pub fn table4(ctx: &ReportCtx) -> Result<()> {
+    let mut all = Vec::new();
+    for (label, artifact) in runs::SUBTENSOR_VARIANTS {
+        all.push(runs::run_variant(ctx, label, artifact, 1, 0.045, true, false)?);
+    }
+    let scores: Vec<_> = all.iter().map(suite_scores).collect();
+    print_quality_table("Table 4: sub-tensor MoR algorithms (configuration 1)", &all, &scores);
+    Ok(())
+}

@@ -1,0 +1,339 @@
+//! The PJRT client wrapper and the typed execution sessions.
+
+use super::manifest::{ArtifactKind, Manifest};
+use crate::model::config::ModelConfig;
+use crate::model::naming::{param_specs, QuantTensorId};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// A loaded artifact set: PJRT client + manifest + compiled-executable
+/// cache. One `Runtime` per artifact directory / model preset.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub model: ModelConfig,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest in `dir` and verify it matches the preset.
+    pub fn load(dir: &Path, model: ModelConfig) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        manifest.check_model(&model)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, model, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.file.to_str().context("artifact path not utf8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Start a training session for a train artifact, initializing
+    /// parameters and Adam state host-side (deterministic seed).
+    pub fn train_session(&self, name: &str, seed: u64) -> Result<TrainSession> {
+        let entry = self.manifest.get(name)?;
+        if entry.kind != ArtifactKind::Train {
+            bail!("artifact {name} is not a train step");
+        }
+        let exe = self.executable(name)?;
+        let batch = entry.usize_field("batch")?;
+        let specs = param_specs(&self.model);
+        if let Ok(n) = entry.usize_field("num_params") {
+            if n != specs.len() {
+                bail!("artifact {name} has {n} params, Rust expects {}", specs.len());
+            }
+        }
+        let stats_len = entry.usize_field("stats_len").unwrap_or(0);
+        if stats_len != QuantTensorId::count(&self.model) {
+            bail!(
+                "artifact {name} stats_len {} != expected {}",
+                stats_len,
+                QuantTensorId::count(&self.model)
+            );
+        }
+        // Initialization mirrors python/compile/model.py `init_params`:
+        // scaled-normal weights, ones/zeros for LN.
+        let mut state: Vec<xla::Literal> = Vec::with_capacity(3 * specs.len());
+        for (i, s) in specs.iter().enumerate() {
+            let t = init_param(&self.model, &s.name, &s.shape, seed.wrapping_add(i as u64));
+            state.push(tensor_to_literal(&t)?);
+        }
+        for s in &specs {
+            state.push(tensor_to_literal(&Tensor::zeros(&s.shape))?); // m
+        }
+        for s in &specs {
+            state.push(tensor_to_literal(&Tensor::zeros(&s.shape))?); // v
+        }
+        Ok(TrainSession {
+            exe,
+            num_params: specs.len(),
+            stats_len,
+            batch,
+            seq: self.model.seq_len,
+            state,
+            step: 0,
+        })
+    }
+
+    /// Create an eval session for the eval artifact.
+    pub fn eval_session(&self, name: &str) -> Result<EvalSession> {
+        let entry = self.manifest.get(name)?;
+        if entry.kind != ArtifactKind::Eval {
+            bail!("artifact {name} is not an eval step");
+        }
+        Ok(EvalSession {
+            exe: self.executable(name)?,
+            batch: entry.usize_field("batch")?,
+            seq: self.model.seq_len,
+            num_params: param_specs(&self.model).len(),
+        })
+    }
+
+    /// Create a quant session (standalone kernel executable).
+    pub fn quant_session(&self, name: &str) -> Result<QuantSession> {
+        let entry = self.manifest.get(name)?;
+        if entry.kind != ArtifactKind::Quant {
+            bail!("artifact {name} is not a quant kernel");
+        }
+        Ok(QuantSession {
+            exe: self.executable(name)?,
+            rows: entry.usize_field("rows")?,
+            cols: entry.usize_field("cols")?,
+        })
+    }
+}
+
+/// Parameter initialization — must match `model.init_params` in python
+/// (both draw from the same xorshift/Box–Muller stream via
+/// [`Tensor::normal`]; the checkpoint tests pin equality).
+pub fn init_param(m: &ModelConfig, name: &str, shape: &[usize], seed: u64) -> Tensor {
+    if name.contains("ln") && name.ends_with("scale") {
+        Tensor::from_vec(shape, vec![1.0; shape.iter().product()])
+    } else if name.ends_with("bias") {
+        Tensor::zeros(shape)
+    } else {
+        // 0.02 init for embeddings, 1/sqrt(d) style for projections.
+        let std = if name.starts_with("embedding") || name.starts_with("lm_head") {
+            0.02
+        } else {
+            (2.0 / (m.d_model as f32 + shape[0] as f32)).sqrt()
+        };
+        Tensor::normal(shape, std, seed)
+    }
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|d| *d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    let data = l.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+fn tokens_literal(tokens: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
+    assert_eq!(tokens.len(), batch * seq);
+    Ok(xla::Literal::vec1(tokens).reshape(&[batch as i64, seq as i64])?)
+}
+
+/// Host-visible outputs of one training step.
+#[derive(Debug, Clone)]
+pub struct StepOutputs {
+    pub loss: f32,
+    /// Per-slot E4M3 relative error, indexed by [`QuantTensorId::flat`].
+    pub relerr: Vec<f32>,
+    /// Per-slot BF16-fallback fraction in [0,1] (0/1 for tensor-level
+    /// decisions, block fraction for sub-tensor recipes).
+    pub fallback: Vec<f32>,
+}
+
+/// A live training run: owns the param/optimizer state literals and the
+/// compiled step.
+pub struct TrainSession {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub num_params: usize,
+    pub stats_len: usize,
+    pub batch: usize,
+    pub seq: usize,
+    /// params ++ m ++ v, in canonical order.
+    state: Vec<xla::Literal>,
+    step: u64,
+}
+
+impl TrainSession {
+    /// Run one optimizer step on a token batch.
+    pub fn step(&mut self, tokens: &[i32], lr: f32, threshold: f32) -> Result<StepOutputs> {
+        let adam_t = (self.step + 1) as f32;
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        let toks = tokens_literal(tokens, self.batch, self.seq)?;
+        let t_lit = xla::Literal::scalar(adam_t);
+        let lr_lit = xla::Literal::scalar(lr);
+        let th_lit = xla::Literal::scalar(threshold);
+        inputs.push(&toks);
+        inputs.push(&t_lit);
+        inputs.push(&lr_lit);
+        inputs.push(&th_lit);
+
+        let result = self.exe.execute::<&xla::Literal>(&inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let mut parts = tuple.to_tuple()?;
+        let expect = 3 * self.num_params + 3;
+        if parts.len() != expect {
+            bail!("train step returned {} outputs, expected {expect}", parts.len());
+        }
+        // Outputs: params ++ m ++ v ++ [loss, relerr, fallback].
+        let fallback = parts.pop().unwrap().to_vec::<f32>()?;
+        let relerr = parts.pop().unwrap().to_vec::<f32>()?;
+        let loss = parts.pop().unwrap().get_first_element::<f32>()?;
+        self.state = parts;
+        self.step += 1;
+        Ok(StepOutputs { loss, relerr, fallback })
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.step
+    }
+
+    /// Copy the current parameters to host tensors (for checkpoints,
+    /// eval, and the param-norm metric).
+    pub fn params(&self) -> Result<Vec<Tensor>> {
+        self.state[..self.num_params].iter().map(literal_to_tensor).collect()
+    }
+
+    /// Borrow the parameter literals (zero-copy path for eval).
+    pub fn param_literals(&self) -> &[xla::Literal] {
+        &self.state[..self.num_params]
+    }
+
+    /// Global parameter L2 norm (Figures 5/6/8/20 bottom panel).
+    pub fn param_norm(&self) -> Result<f32> {
+        let mut sq = 0f64;
+        for t in self.params()? {
+            let n = t.l2() as f64;
+            sq += n * n;
+        }
+        Ok(sq.sqrt() as f32)
+    }
+
+    /// Replace parameters (e.g. restoring a checkpoint).
+    pub fn set_params(&mut self, params: &[Tensor]) -> Result<()> {
+        if params.len() != self.num_params {
+            bail!("expected {} params, got {}", self.num_params, params.len());
+        }
+        for (i, t) in params.iter().enumerate() {
+            self.state[i] = tensor_to_literal(t)?;
+        }
+        Ok(())
+    }
+
+    pub fn set_step(&mut self, step: u64) {
+        self.step = step;
+    }
+}
+
+/// Masked-eval session: loss + next-token accuracy over masked positions.
+pub struct EvalSession {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub batch: usize,
+    pub seq: usize,
+    pub num_params: usize,
+}
+
+impl EvalSession {
+    /// Evaluate one batch: `mask[b,s] = 1` marks scored positions.
+    pub fn eval(
+        &self,
+        params: &[xla::Literal],
+        tokens: &[i32],
+        mask: &[f32],
+    ) -> Result<(f32, f32)> {
+        if params.len() != self.num_params {
+            bail!("expected {} params, got {}", self.num_params, params.len());
+        }
+        let toks = tokens_literal(tokens, self.batch, self.seq)?;
+        let mask_lit =
+            xla::Literal::vec1(mask).reshape(&[self.batch as i64, self.seq as i64])?;
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&toks);
+        inputs.push(&mask_lit);
+        let result = self.exe.execute::<&xla::Literal>(&inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 2 {
+            bail!("eval step returned {} outputs, expected 2", parts.len());
+        }
+        let loss = parts[0].get_first_element::<f32>()?;
+        let acc = parts[1].get_first_element::<f32>()?;
+        Ok((loss, acc))
+    }
+}
+
+/// Standalone quant-kernel session (cross-validation + benches): input
+/// one `[rows, cols]` tensor, output (qdq tensor, global relerr).
+pub struct QuantSession {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl QuantSession {
+    pub fn run(&self, x: &Tensor) -> Result<(Tensor, f32)> {
+        assert_eq!(x.shape(), &[self.rows, self.cols], "quant kernel shape mismatch");
+        let lit = tensor_to_literal(x)?;
+        let result = self.exe.execute::<&xla::Literal>(&[&lit])?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 2 {
+            bail!("quant kernel returned {} outputs, expected 2", parts.len());
+        }
+        let out = literal_to_tensor(&parts[0])?;
+        let relerr = parts[1].get_first_element::<f32>()?;
+        Ok((out, relerr))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_param_conventions() {
+        let m = ModelConfig::TINY;
+        let ln = init_param(&m, "decoder.layer.0.ln1.scale", &[64], 1);
+        assert!(ln.data().iter().all(|v| *v == 1.0));
+        let bias = init_param(&m, "decoder.layer.0.ln1.bias", &[64], 1);
+        assert!(bias.data().iter().all(|v| *v == 0.0));
+        let w = init_param(&m, "decoder.layer.0.mlp.fc1.weight", &[64, 256], 1);
+        assert!(w.amax() > 0.0 && w.amax() < 1.0);
+        let e = init_param(&m, "embedding.weight", &[256, 64], 2);
+        let std =
+            (e.data().iter().map(|v| v * v).sum::<f32>() / e.len() as f32).sqrt();
+        assert!((std - 0.02).abs() < 0.003, "std={std}");
+    }
+
+    // PJRT-dependent paths are covered by rust/tests/integration_*.rs
+    // (they need built artifacts).
+}

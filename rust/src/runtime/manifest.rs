@@ -1,0 +1,264 @@
+//! The artifact manifest — the ABI contract between `python/compile/
+//! aot.py` (writer) and the Rust runtime (reader). A deliberately simple
+//! line-oriented format (no JSON dependency offline):
+//!
+//! ```text
+//! manifest_version 1
+//! model small
+//! vocab_size 256
+//! d_model 256
+//! n_layers 4
+//! n_heads 4
+//! d_ff 1024
+//! seq_len 128
+//! artifact train_mor_tensor_block
+//!   file train_mor_tensor_block.hlo.txt
+//!   kind train
+//!   recipe tensor_level
+//!   partition block128x128
+//!   scaling gam
+//!   batch 8
+//!   num_params 20
+//!   stats_len 192
+//! end
+//! ```
+//!
+//! Parameter ordering is *not* listed per artifact: both sides derive it
+//! from [`crate::model::naming::param_specs`], and `check_model`
+//! cross-validates the embedded model dims against the Rust preset.
+
+use crate::model::config::ModelConfig;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// What a compiled executable does, which fixes its input/output ABI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Inputs: params..., m..., v..., tokens, step, lr, threshold.
+    /// Outputs: new_params..., new_m..., new_v..., loss, relerr, fallback.
+    Train,
+    /// Inputs: params..., tokens, mask. Outputs: loss, acc.
+    Eval,
+    /// Inputs: one tensor (+ threshold). Outputs: qdq tensor, relerr.
+    Quant,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "train" => Ok(ArtifactKind::Train),
+            "eval" => Ok(ArtifactKind::Eval),
+            "quant" => Ok(ArtifactKind::Quant),
+            _ => bail!("unknown artifact kind {s:?}"),
+        }
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    /// Free-form recipe fields (recipe/partition/scaling/threshold/...).
+    pub fields: BTreeMap<String, String>,
+}
+
+impl ArtifactEntry {
+    pub fn field(&self, key: &str) -> Option<&str> {
+        self.fields.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_field(&self, key: &str) -> Result<usize> {
+        self.field(key)
+            .ok_or_else(|| anyhow!("artifact {} missing field {key}", self.name))?
+            .parse()
+            .with_context(|| format!("artifact {} field {key}", self.name))
+    }
+}
+
+/// A parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub model_name: String,
+    pub model_fields: BTreeMap<String, usize>,
+    pub artifacts: Vec<ArtifactEntry>,
+    /// Directory the manifest was loaded from (artifact files are
+    /// resolved relative to it).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut version = 0u32;
+        let mut model_name = String::new();
+        let mut model_fields = BTreeMap::new();
+        let mut artifacts = Vec::new();
+        let mut current: Option<ArtifactEntry> = None;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, value) = line.split_once(' ').unwrap_or((line, ""));
+            let err = |m: &str| anyhow!("manifest line {}: {m}: {raw:?}", lineno + 1);
+            match key {
+                "manifest_version" => version = value.parse().map_err(|_| err("bad version"))?,
+                "model" => model_name = value.to_string(),
+                "artifact" => {
+                    if current.is_some() {
+                        bail!(err("artifact without closing 'end'"));
+                    }
+                    current = Some(ArtifactEntry {
+                        name: value.to_string(),
+                        file: PathBuf::new(),
+                        kind: ArtifactKind::Quant,
+                        fields: BTreeMap::new(),
+                    });
+                }
+                "end" => {
+                    let a = current.take().ok_or_else(|| err("stray 'end'"))?;
+                    if a.file.as_os_str().is_empty() {
+                        bail!("artifact {} missing 'file'", a.name);
+                    }
+                    artifacts.push(a);
+                }
+                _ => {
+                    if let Some(a) = current.as_mut() {
+                        match key {
+                            "file" => a.file = dir.join(value),
+                            "kind" => a.kind = ArtifactKind::parse(value)?,
+                            _ => {
+                                a.fields.insert(key.to_string(), value.to_string());
+                            }
+                        }
+                    } else if let Ok(v) = value.parse::<usize>() {
+                        model_fields.insert(key.to_string(), v);
+                    } else {
+                        bail!(err("unrecognized top-level line"));
+                    }
+                }
+            }
+        }
+        if current.is_some() {
+            bail!("manifest ended inside an artifact block");
+        }
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        Ok(Manifest {
+            version,
+            model_name,
+            model_fields,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                let known: Vec<&str> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+                anyhow!("artifact {name:?} not in manifest (have: {known:?})")
+            })
+    }
+
+    /// Verify the manifest's embedded model dims match the Rust preset —
+    /// the guard against ABI drift between the two languages.
+    pub fn check_model(&self, m: &ModelConfig) -> Result<()> {
+        if self.model_name != m.name {
+            bail!("manifest model {:?} != expected {:?}", self.model_name, m.name);
+        }
+        let expect = [
+            ("vocab_size", m.vocab_size),
+            ("d_model", m.d_model),
+            ("n_layers", m.n_layers),
+            ("n_heads", m.n_heads),
+            ("d_ff", m.d_ff),
+            ("seq_len", m.seq_len),
+        ];
+        for (k, v) in expect {
+            match self.model_fields.get(k) {
+                Some(got) if *got == v => {}
+                Some(got) => bail!("manifest {k}={got} but preset {} has {v}", m.name),
+                None => bail!("manifest missing model field {k}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+manifest_version 1
+model tiny
+vocab_size 256
+d_model 64
+n_layers 2
+n_heads 2
+d_ff 256
+seq_len 64
+artifact train_baseline
+  file train_baseline.hlo.txt
+  kind train
+  recipe baseline
+  batch 8
+  num_params 20
+  stats_len 96
+end
+artifact quant_e4m3_gam
+  file quant_e4m3_gam.hlo.txt
+  kind quant
+  rows 64
+  cols 64
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.model_name, "tiny");
+        assert_eq!(m.artifacts.len(), 2);
+        let t = m.get("train_baseline").unwrap();
+        assert_eq!(t.kind, ArtifactKind::Train);
+        assert_eq!(t.usize_field("batch").unwrap(), 8);
+        assert_eq!(t.file, Path::new("/tmp/a/train_baseline.hlo.txt"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn model_check_passes_and_fails() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(m.check_model(&ModelConfig::TINY).is_ok());
+        assert!(m.check_model(&ModelConfig::SMALL).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("manifest_version 2\nmodel x\n", Path::new(".")).is_err());
+        assert!(Manifest::parse(
+            "manifest_version 1\nartifact a\n  kind train\n",
+            Path::new(".")
+        )
+        .is_err()); // no file + unterminated
+        assert!(Manifest::parse("manifest_version 1\nend\n", Path::new(".")).is_err());
+        assert!(Manifest::parse("manifest_version 1\nwhat is this\n", Path::new(".")).is_err());
+    }
+}

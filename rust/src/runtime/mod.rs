@@ -1,0 +1,23 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them on the PJRT CPU client (the
+//! `xla` crate), and exposes typed session objects for the train/eval/
+//! quant ABIs.
+//!
+//! Python is never on this path: artifacts are plain HLO text files and
+//! the manifest is a plain text file; everything here is self-contained
+//! Rust + the PJRT C API.
+//!
+//! ### Interchange notes (see /opt/xla-example/README.md)
+//! * HLO **text** is the interchange format, not serialized protos
+//!   (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//!   rejects; the text parser reassigns ids).
+//! * Multi-output computations come back as **one tuple buffer**; the
+//!   runtime pulls it to host and decomposes it. Train-state literals
+//!   are reused directly as next-step inputs, so the only per-step cost
+//!   is the unavoidable host↔device copy of the CPU PJRT client.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{EvalSession, QuantSession, Runtime, StepOutputs, TrainSession};
+pub use manifest::{ArtifactEntry, ArtifactKind, Manifest};

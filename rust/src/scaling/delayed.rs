@@ -1,0 +1,162 @@
+//! Delayed vs current scaling — the prior-art scaling strategies the
+//! paper builds on (§1: "[10] and [9] suggested current and delayed
+//! per-tensor scaling"). Implemented as a baseline comparator for the
+//! MoR recipes: *current* scaling uses this step's amax (what the rest
+//! of this repo does); *delayed* scaling derives the scale from a
+//! sliding history of recent amaxes, trading one fewer reduction on the
+//! critical path for staleness — and, unlike GAM, it can saturate when
+//! the live amax exceeds the history.
+
+use crate::formats::e8m0::E8M0;
+use crate::scaling::BlockScale;
+
+/// Sliding amax history for one tensor (delayed scaling state).
+#[derive(Debug, Clone)]
+pub struct AmaxHistory {
+    window: usize,
+    history: std::collections::VecDeque<f32>,
+}
+
+impl AmaxHistory {
+    /// `window` = number of recent steps to remember (Transformer-Engine
+    /// style default is 1024; tests use small windows).
+    pub fn new(window: usize) -> Self {
+        AmaxHistory { window: window.max(1), history: Default::default() }
+    }
+
+    /// Record the amax observed this step.
+    pub fn push(&mut self, amax: f32) {
+        if self.history.len() == self.window {
+            self.history.pop_front();
+        }
+        self.history.push_back(amax);
+    }
+
+    /// The delayed amax: max over the recorded history (None until the
+    /// first push — callers fall back to current scaling for step 0).
+    pub fn delayed_amax(&self) -> Option<f32> {
+        self.history.iter().cloned().reduce(f32::max)
+    }
+
+    /// Delayed per-tensor scale for a target format max `q_amax`.
+    pub fn delayed_scale(&self, q_amax: f32) -> Option<BlockScale> {
+        let amax = self.delayed_amax()?;
+        if amax <= 0.0 || !amax.is_finite() {
+            return Some(BlockScale::IDENTITY);
+        }
+        let s = q_amax / amax;
+        Some(BlockScale { scale: s, stored_exp: E8M0::from_scale_floor(s) })
+    }
+
+    /// Whether applying the delayed scale to a tensor with live amax
+    /// `current_amax` would saturate (scaled beyond q_amax) — the
+    /// failure mode GAM's round-down rule eliminates by construction.
+    pub fn would_saturate(&self, current_amax: f32, q_amax: f32) -> bool {
+        match self.delayed_scale(q_amax) {
+            Some(b) => current_amax * b.scale > q_amax,
+            None => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.history.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop, Gen};
+
+    #[test]
+    fn empty_history_has_no_scale() {
+        let h = AmaxHistory::new(4);
+        assert!(h.delayed_amax().is_none());
+        assert!(h.delayed_scale(448.0).is_none());
+        assert!(!h.would_saturate(10.0, 448.0));
+    }
+
+    #[test]
+    fn window_slides() {
+        let mut h = AmaxHistory::new(3);
+        for a in [10.0, 20.0, 5.0] {
+            h.push(a);
+        }
+        assert_eq!(h.delayed_amax(), Some(20.0));
+        h.push(1.0); // evicts 10.0
+        h.push(2.0); // evicts 20.0
+        assert_eq!(h.delayed_amax(), Some(5.0));
+        assert_eq!(h.len(), 3);
+    }
+
+    #[test]
+    fn delayed_scale_maps_history_amax_to_qmax() {
+        let mut h = AmaxHistory::new(8);
+        h.push(7.0);
+        h.push(14.0);
+        let s = h.delayed_scale(448.0).unwrap();
+        assert_eq!(s.scale * 14.0, 448.0);
+    }
+
+    #[test]
+    fn saturation_when_live_amax_exceeds_history() {
+        let mut h = AmaxHistory::new(4);
+        h.push(10.0);
+        // Live tensor grows beyond everything the history saw.
+        assert!(h.would_saturate(25.0, 448.0));
+        assert!(!h.would_saturate(9.0, 448.0));
+        assert!(!h.would_saturate(10.0, 448.0)); // exactly at amax: ok
+    }
+
+    #[test]
+    fn zero_history_gives_identity() {
+        let mut h = AmaxHistory::new(2);
+        h.push(0.0);
+        assert_eq!(h.delayed_scale(448.0), Some(BlockScale::IDENTITY));
+    }
+
+    /// Property: delayed scaling never saturates on *monotonically
+    /// non-increasing* amax sequences, and the delayed scale is always
+    /// <= the current-scaling scale (staleness only under-scales when
+    /// ranges shrink, over-scales when they grow).
+    #[test]
+    fn prop_delayed_vs_current() {
+        prop(300, |g: &mut Gen| {
+            let mut h = AmaxHistory::new(g.usize_in(1, 8));
+            let mut amax = g.f32_log_uniform(1e-3, 1e3);
+            for _ in 0..g.usize_in(1, 20) {
+                h.push(amax);
+                // Non-increasing sequence.
+                amax *= g.f32_in(0.5, 1.0);
+            }
+            // Current tensor has amax <= history max → no saturation.
+            assert!(!h.would_saturate(amax, 448.0));
+            let delayed = h.delayed_scale(448.0).unwrap().scale;
+            let current = 448.0 / amax;
+            assert!(delayed <= current * (1.0 + 1e-6));
+            true
+        });
+    }
+
+    /// Property: on growing ranges delayed scaling saturates while GAM
+    /// (recomputed each step) never does — the quantitative version of
+    /// why the paper recomputes scales per mini-batch.
+    #[test]
+    fn prop_growth_saturates_delayed_not_gam() {
+        prop(200, |g: &mut Gen| {
+            let base = g.f32_log_uniform(1e-2, 1e2);
+            let mut h = AmaxHistory::new(4);
+            h.push(base);
+            let grown = base * g.f32_in(1.5, 100.0);
+            assert!(h.would_saturate(grown, 448.0));
+            // GAM on the live tensor: scale * amax <= q_amax always.
+            let s = crate::scaling::gam::compute(448.0, grown, &[grown]);
+            assert!(grown * s.blocks[0].scale <= 448.0 * (1.0 + 1e-6));
+            true
+        });
+    }
+}

@@ -1,0 +1,201 @@
+//! Scale-factor computation: the paper's **Group Amax Mantissa (GAM)**
+//! algorithm (Alg. 1) plus the two baselines it is ablated against in
+//! §4.1.2 — plain per-block FP32 amax scaling and pure E8M0 scaling.
+//!
+//! All three map a block's absolute maximum toward the target format's
+//! maximum representable value (`q_amax`); they differ in how the scale
+//! factor itself is represented:
+//!
+//! | algo      | per-block metadata | scale value                         |
+//! |-----------|--------------------|-------------------------------------|
+//! | FP32 amax | 32-bit f32         | exactly `q_amax / b_amax`           |
+//! | E8M0      | 8-bit exponent     | `2^floor(log2(q_amax / b_amax))`    |
+//! | GAM       | 8-bit exponent (+ one 23-bit group mantissa) | `m_g * 2^(e_b [-1])` |
+//!
+//! GAM's key invariant, enforced by the round-down step and verified by
+//! property tests: the reconstructed scale never exceeds the ideal scale,
+//! so scaling can never push a block's amax past `q_amax` (no
+//! saturation), and it stays within one binade of ideal:
+//! `s_ideal / 2 < s_gam <= s_ideal`.
+
+pub mod delayed;
+pub mod gam;
+
+use crate::formats::e8m0::{floor_log2, E8M0};
+
+/// Which scale-factor algorithm to use (CLI/manifest name in comments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScalingAlgo {
+    /// `gam` — Group Amax Mantissa (Alg. 1), the paper's proposal.
+    Gam,
+    /// `amax` — standard per-block FP32 amax scaling.
+    AmaxFp32,
+    /// `e8m0` — per-block power-of-two scaling (micro-scaling style).
+    E8M0,
+}
+
+impl ScalingAlgo {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScalingAlgo::Gam => "gam",
+            ScalingAlgo::AmaxFp32 => "amax",
+            ScalingAlgo::E8M0 => "e8m0",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "gam" => Some(ScalingAlgo::Gam),
+            "amax" => Some(ScalingAlgo::AmaxFp32),
+            "e8m0" => Some(ScalingAlgo::E8M0),
+            _ => None,
+        }
+    }
+
+    /// Per-block metadata cost in bits (excluding group-level metadata).
+    pub fn block_metadata_bits(self) -> u32 {
+        match self {
+            ScalingAlgo::Gam => 8,
+            ScalingAlgo::AmaxFp32 => 32,
+            ScalingAlgo::E8M0 => 8,
+        }
+    }
+}
+
+/// A computed per-block scale: the f32 value applied to the data, plus
+/// the stored representation (for metadata-accounting and exact
+/// reconstruction tests).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockScale {
+    /// The scale multiplied into the block before the fp8 cast.
+    pub scale: f32,
+    /// Stored exponent (E8M0) for GAM / E8M0 algos; unused for FP32 amax.
+    pub stored_exp: E8M0,
+}
+
+impl BlockScale {
+    /// Identity scale for all-zero blocks (nothing to preserve).
+    pub const IDENTITY: BlockScale = BlockScale { scale: 1.0, stored_exp: E8M0(127) };
+}
+
+/// Scales for a whole group of blocks, plus group metadata.
+#[derive(Debug, Clone)]
+pub struct GroupScales {
+    /// The shared group mantissa `m_g` in [1, 2) (GAM) or 1.0 (E8M0) or
+    /// NaN marker (FP32 amax, where no group component exists).
+    pub group_mantissa: f32,
+    pub blocks: Vec<BlockScale>,
+    pub algo: ScalingAlgo,
+}
+
+impl GroupScales {
+    /// Total metadata bits for this group (Sec. 2 "Negligible Overhead").
+    pub fn metadata_bits(&self) -> u64 {
+        let group_bits = match self.algo {
+            ScalingAlgo::Gam => 23, // one FP32 mantissa for the group
+            _ => 0,
+        };
+        group_bits + self.blocks.len() as u64 * self.algo.block_metadata_bits() as u64
+    }
+}
+
+/// Compute per-block scales with the selected algorithm.
+///
+/// `q_amax` is the target format's max finite value, `group_amax` the
+/// amax over the whole group, `block_amaxes` the per-block amaxes
+/// (zero entries mark all-zero blocks and get [`BlockScale::IDENTITY`]).
+pub fn compute_scales(
+    algo: ScalingAlgo,
+    q_amax: f32,
+    group_amax: f32,
+    block_amaxes: &[f32],
+) -> GroupScales {
+    match algo {
+        ScalingAlgo::Gam => gam::compute(q_amax, group_amax, block_amaxes),
+        ScalingAlgo::AmaxFp32 => {
+            let blocks = block_amaxes
+                .iter()
+                .map(|&ba| {
+                    if ba == 0.0 || !ba.is_finite() {
+                        BlockScale::IDENTITY
+                    } else {
+                        let s = q_amax / ba;
+                        BlockScale { scale: s, stored_exp: E8M0::from_scale_floor(s) }
+                    }
+                })
+                .collect();
+            GroupScales { group_mantissa: f32::NAN, blocks, algo }
+        }
+        ScalingAlgo::E8M0 => {
+            let blocks = block_amaxes
+                .iter()
+                .map(|&ba| {
+                    if ba == 0.0 || !ba.is_finite() {
+                        BlockScale::IDENTITY
+                    } else {
+                        let e = floor_log2(q_amax / ba);
+                        let stored = E8M0::from_exponent(e);
+                        BlockScale { scale: stored.to_f32(), stored_exp: stored }
+                    }
+                })
+                .collect();
+            GroupScales { group_mantissa: 1.0, blocks, algo }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const Q: f32 = 448.0; // E4M3
+
+    #[test]
+    fn amax_scaling_is_exact() {
+        let s = compute_scales(ScalingAlgo::AmaxFp32, Q, 10.0, &[10.0, 5.0, 2.5]);
+        assert_eq!(s.blocks[0].scale, 44.8);
+        assert_eq!(s.blocks[1].scale, 89.6);
+        assert_eq!(s.blocks[2].scale, 179.2);
+        // amax scaling maps each block amax exactly onto q_amax.
+        for (ba, b) in [10.0f32, 5.0, 2.5].iter().zip(&s.blocks) {
+            assert_eq!(ba * b.scale, Q);
+        }
+    }
+
+    #[test]
+    fn e8m0_scaling_is_pow2_and_never_saturates() {
+        let amaxes = [10.0f32, 5.0, 2.5, 0.1, 447.9, 448.0, 1000.0];
+        let s = compute_scales(ScalingAlgo::E8M0, Q, 1000.0, &amaxes);
+        for (ba, b) in amaxes.iter().zip(&s.blocks) {
+            let sc = b.scale;
+            assert_eq!(sc, b.stored_exp.to_f32());
+            assert!(ba * sc <= Q, "amax {ba} scaled to {}", ba * sc);
+            assert!(ba * sc > Q / 2.0, "amax {ba} scaled only to {}", ba * sc);
+        }
+    }
+
+    #[test]
+    fn zero_blocks_get_identity() {
+        for algo in [ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0] {
+            let s = compute_scales(algo, Q, 3.0, &[3.0, 0.0]);
+            assert_eq!(s.blocks[1], BlockScale::IDENTITY);
+        }
+    }
+
+    #[test]
+    fn metadata_accounting() {
+        let s = compute_scales(ScalingAlgo::Gam, Q, 1.0, &[1.0; 10]);
+        assert_eq!(s.metadata_bits(), 23 + 10 * 8);
+        let s = compute_scales(ScalingAlgo::AmaxFp32, Q, 1.0, &[1.0; 10]);
+        assert_eq!(s.metadata_bits(), 320);
+        let s = compute_scales(ScalingAlgo::E8M0, Q, 1.0, &[1.0; 10]);
+        assert_eq!(s.metadata_bits(), 80);
+    }
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for a in [ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0] {
+            assert_eq!(ScalingAlgo::parse(a.name()), Some(a));
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! A minimal dense row-major f32 tensor — the host-side data substrate
+//! for the MoR engine mirror, the data pipeline, and the Fig. 3
+//! mixed-type GEMM. Deliberately small: 2-D is the common case (every
+//! tensor MoR quantizes is a GEMM operand), with just enough n-D support
+//! for batched token tensors.
+
+pub mod ops;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Build from existing data; `data.len()` must equal the shape volume.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Deterministic pseudo-random tensor (xorshift64*), values ~U(-a, a).
+    pub fn uniform(shape: &[usize], amplitude: f32, seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        let data = (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                let u = (s >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
+                ((u * 2.0 - 1.0) as f32) * amplitude
+            })
+            .collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Deterministic ~N(0, std) tensor via Box–Muller on the xorshift
+    /// stream; used for weight init and synthetic activations/gradients.
+    pub fn normal(shape: &[usize], std: f32, seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 11) as f64 / (1u64 << 53) as f64
+        };
+        let mut data = Vec::with_capacity(n);
+        while data.len() < n {
+            let u1 = next().max(1e-12);
+            let u2 = next();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s2, c2) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            data.push((r * c2) as f32 * std);
+            if data.len() < n {
+                data.push((r * s2) as f32 * std);
+            }
+        }
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows / cols for a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on non-2D tensor");
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() on non-2D tensor");
+        self.shape[1]
+    }
+
+    /// 2-D element access.
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols() + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        let cols = self.cols();
+        self.data[r * cols + c] = v;
+    }
+
+    /// View as 2-D by folding all leading dims into rows.
+    pub fn as_2d(&self) -> (usize, usize) {
+        let cols = *self.shape.last().expect("as_2d on scalar tensor");
+        (self.data.len() / cols.max(1), cols)
+    }
+
+    /// Transposed copy (2-D only).
+    pub fn transpose(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Absolute maximum over all elements (0 for empty).
+    pub fn amax(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, v| a.max(v.abs()))
+    }
+
+    /// Absolute minimum over non-zero elements (None if all zero).
+    pub fn amin_nonzero(&self) -> Option<f32> {
+        let m = self
+            .data
+            .iter()
+            .filter(|v| **v != 0.0)
+            .fold(f32::INFINITY, |a, v| a.min(v.abs()));
+        if m.is_finite() {
+            Some(m)
+        } else {
+            None
+        }
+    }
+
+    /// L2 norm.
+    pub fn l2(&self) -> f32 {
+        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at(1, 2), 6.0);
+        assert_eq!(t.at(0, 1), 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let t = Tensor::uniform(&[5, 7], 2.0, 42);
+        assert_eq!(t.transpose().transpose(), t);
+        assert_eq!(t.transpose().at(3, 2), t.at(2, 3));
+    }
+
+    #[test]
+    fn amax_and_amin() {
+        let t = Tensor::from_vec(&[1, 4], vec![0.0, -3.0, 2.0, 0.5]);
+        assert_eq!(t.amax(), 3.0);
+        assert_eq!(t.amin_nonzero(), Some(0.5));
+        let z = Tensor::zeros(&[2, 2]);
+        assert_eq!(z.amax(), 0.0);
+        assert_eq!(z.amin_nonzero(), None);
+    }
+
+    #[test]
+    fn deterministic_rng() {
+        let a = Tensor::normal(&[4, 4], 1.0, 7);
+        let b = Tensor::normal(&[4, 4], 1.0, 7);
+        let c = Tensor::normal(&[4, 4], 1.0, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn normal_moments_roughly_correct() {
+        let t = Tensor::normal(&[100, 100], 2.0, 1);
+        let mean = t.data().iter().sum::<f32>() / t.len() as f32;
+        let var =
+            t.data().iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / t.len() as f32;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var.sqrt() - 2.0).abs() < 0.1, "std={}", var.sqrt());
+    }
+
+    #[test]
+    fn as_2d_folds_leading_dims() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.as_2d(), (6, 4));
+    }
+}

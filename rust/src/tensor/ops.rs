@@ -1,0 +1,227 @@
+//! Host GEMM and the Fig. 3 mixed-representation blocked GEMM.
+//!
+//! The blocked GEMM implements the paper's sub-tensor story: operand
+//! matrices are partitioned into blocks whose representation types were
+//! chosen independently by MoR; a block-pair dot product runs "in" the
+//! lower of the two precisions only when both operands share it,
+//! otherwise the lower-precision block is *upcast* to the higher type
+//! (E4M3/E5M2 → BF16) before multiplication — exactly the fallback the
+//! paper describes when no mixed-type hardware dot product exists.
+
+use super::Tensor;
+use crate::formats::ReprType;
+
+/// Plain f32 GEMM: C = A @ B. Cache-blocked i-k-j loop order.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = ad[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..kk * n + n];
+            let crow = &mut cd[i * n..i * n + n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A^T @ B without materializing the transpose.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for kk in 0..k {
+        let arow = &ad[kk * m..kk * m + m];
+        let brow = &bd[kk * n..kk * n + n];
+        for i in 0..m {
+            let aik = arow[i];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..i * n + n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A @ B^T.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..i * k + k];
+        for j in 0..n {
+            let brow = &bd[j * k..j * k + k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            cd[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Per-block representation assignment for one operand of a blocked GEMM:
+/// `types[bi][bj]` is the type of block (bi, bj) under a `block` x `block`
+/// partition (ragged edge blocks included).
+#[derive(Debug, Clone)]
+pub struct BlockTypes {
+    pub block: usize,
+    pub grid: Vec<Vec<ReprType>>,
+}
+
+impl BlockTypes {
+    /// All blocks the same type.
+    pub fn uniform(rows: usize, cols: usize, block: usize, t: ReprType) -> Self {
+        let br = rows.div_ceil(block);
+        let bc = cols.div_ceil(block);
+        BlockTypes { block, grid: vec![vec![t; bc]; br] }
+    }
+
+    pub fn type_of(&self, bi: usize, bj: usize) -> ReprType {
+        self.grid[bi][bj]
+    }
+}
+
+/// The effective compute type of a block-pair dot product (Fig. 3): the
+/// *least aggressive* (highest-precision) of the two operand types; when
+/// the two differ, the more aggressive block is upcast.
+pub fn effective_gemm_type(a: ReprType, b: ReprType) -> ReprType {
+    use ReprType::*;
+    // Precision order (low→high): NvFp4 < E4M3 ~ E5M2 < Bf16. A mixed
+    // E4M3/E5M2 pair has no common FP8 dot product on H100-class hardware
+    // either, so it also upcasts to BF16 per the paper's rule.
+    match (a, b) {
+        (x, y) if x == y => x,
+        (Bf16, _) | (_, Bf16) => Bf16,
+        (E4M3, E5M2) | (E5M2, E4M3) => Bf16,
+        (NvFp4, other) | (other, NvFp4) => other,
+        (x, _) => x, // unreachable: equal pairs matched first
+    }
+}
+
+/// Blocked mixed-type GEMM. Numerically the inputs are already
+/// fake-quantized; the purpose here is to *count* what fraction of MACs
+/// ran in each effective type, which is the efficiency-side statistic for
+/// the sub-tensor recipes (paper Fig. 3 discussion).
+pub struct MixedGemmReport {
+    pub out: Tensor,
+    /// MAC counts per effective type, ordered [E4M3, E5M2, BF16, NVFP4].
+    pub macs: [u64; 4],
+}
+
+pub fn mixed_gemm(a: &Tensor, ta: &BlockTypes, b: &Tensor, tb: &BlockTypes) -> MixedGemmReport {
+    assert_eq!(ta.block, tb.block, "operand partitions must agree on K");
+    let blk = ta.block;
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    let mut macs = [0u64; 4];
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for bi in 0..m.div_ceil(blk) {
+        for bj in 0..n.div_ceil(blk) {
+            for bk in 0..k.div_ceil(blk) {
+                let t = effective_gemm_type(ta.type_of(bi, bk), tb.type_of(bk, bj));
+                let (i0, i1) = (bi * blk, ((bi + 1) * blk).min(m));
+                let (j0, j1) = (bj * blk, ((bj + 1) * blk).min(n));
+                let (k0, k1) = (bk * blk, ((bk + 1) * blk).min(k));
+                let idx = match t {
+                    ReprType::E4M3 => 0,
+                    ReprType::E5M2 => 1,
+                    ReprType::Bf16 => 2,
+                    ReprType::NvFp4 => 3,
+                };
+                macs[idx] += ((i1 - i0) * (j1 - j0) * (k1 - k0)) as u64;
+                for i in i0..i1 {
+                    for kk in k0..k1 {
+                        let aik = ad[i * k + kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        for j in j0..j1 {
+                            od[i * n + j] += aik * bd[kk * n + j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    MixedGemmReport { out, macs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let a = Tensor::uniform(&[7, 5], 1.0, 1);
+        let b = Tensor::uniform(&[5, 9], 1.0, 2);
+        let c = matmul(&a, &b);
+        let c_tn = matmul_tn(&a.transpose(), &b);
+        let c_nt = matmul_nt(&a, &b.transpose());
+        for i in 0..c.len() {
+            assert!((c.data()[i] - c_tn.data()[i]).abs() < 1e-5);
+            assert!((c.data()[i] - c_nt.data()[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn mixed_gemm_matches_plain_and_counts_macs() {
+        let a = Tensor::uniform(&[10, 6], 1.0, 3);
+        let b = Tensor::uniform(&[6, 8], 1.0, 4);
+        let ta = BlockTypes::uniform(10, 6, 4, ReprType::E4M3);
+        let mut tb = BlockTypes::uniform(6, 8, 4, ReprType::E4M3);
+        tb.grid[0][0] = ReprType::Bf16; // one BF16 block forces upcast
+        let rep = mixed_gemm(&a, &ta, &b, &tb);
+        let plain = matmul(&a, &b);
+        for i in 0..plain.len() {
+            assert!((rep.out.data()[i] - plain.data()[i]).abs() < 1e-5);
+        }
+        let total: u64 = rep.macs.iter().sum();
+        assert_eq!(total, 10 * 6 * 8);
+        assert!(rep.macs[2] > 0, "upcast MACs must be counted as BF16");
+        assert!(rep.macs[0] > 0);
+    }
+
+    #[test]
+    fn effective_type_rules() {
+        use ReprType::*;
+        assert_eq!(effective_gemm_type(E4M3, E4M3), E4M3);
+        assert_eq!(effective_gemm_type(E4M3, E5M2), Bf16);
+        assert_eq!(effective_gemm_type(E4M3, Bf16), Bf16);
+        assert_eq!(effective_gemm_type(NvFp4, E4M3), E4M3);
+        assert_eq!(effective_gemm_type(NvFp4, NvFp4), NvFp4);
+    }
+}

@@ -1,0 +1,131 @@
+//! Micro-benchmark harness (offline replacement for `criterion`), used by
+//! every `cargo bench` target (`harness = false`). Warms up, then runs
+//! timed batches until a wall-clock budget is hit, reporting min / median
+//! / mean / p95 per-iteration times and derived throughput.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchOptions {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Minimum number of measured batches.
+    pub min_batches: usize,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_batches: 10,
+        }
+    }
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+
+    /// items/second given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, preventing the result from being optimized out via
+/// `std::hint::black_box` at the call site (callers should black_box
+/// inputs/outputs).
+pub fn bench<F: FnMut()>(name: &str, opts: &BenchOptions, mut f: F) -> BenchResult {
+    // Warmup and batch-size calibration: target ~1ms per batch.
+    let warm_start = Instant::now();
+    let mut calib_iters = 0u64;
+    while warm_start.elapsed() < opts.warmup {
+        f();
+        calib_iters += 1;
+    }
+    let per_iter = opts.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+    let batch = ((1e-3 / per_iter).ceil() as u64).clamp(1, 1_000_000);
+
+    let mut samples: Vec<Duration> = Vec::new();
+    let mut total_iters = 0u64;
+    let measure_start = Instant::now();
+    while measure_start.elapsed() < opts.measure || samples.len() < opts.min_batches {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed() / batch as u32);
+        total_iters += batch;
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    let r = BenchResult { name: name.to_string(), iters: total_iters, min, median, mean, p95 };
+    println!(
+        "bench {:<48} median {:>10}  min {:>10}  mean {:>10}  p95 {:>10}  ({} iters)",
+        r.name,
+        fmt_dur(r.median),
+        fmt_dur(r.min),
+        fmt_dur(r.mean),
+        fmt_dur(r.p95),
+        r.iters
+    );
+    r
+}
+
+/// Print a throughput line in the same table format.
+pub fn report_throughput(name: &str, result: &BenchResult, items_per_iter: f64, unit: &str) {
+    println!(
+        "bench {:<48} throughput {:>12.3e} {unit}/s",
+        name,
+        result.throughput(items_per_iter)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_stats() {
+        let opts = BenchOptions {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_batches: 3,
+        };
+        let mut acc = 0u64;
+        let r = bench("noop", &opts, || {
+            acc = std::hint::black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters > 0);
+        assert!(r.min <= r.median && r.median <= r.p95);
+    }
+}

@@ -1,0 +1,121 @@
+//! Tiny CLI argument parser (offline replacement for `clap`): positional
+//! subcommand + `--key value` / `--flag` options, with typed getters and
+//! an auto-generated usage line.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// First positional argument (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut it = args.into_iter().peekable();
+        let mut out = Args {
+            command: None,
+            positional: Vec::new(),
+            opts: BTreeMap::new(),
+            flags: Vec::new(),
+        };
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.get(key) == Some("true")
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {v:?}"))).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a u64, got {v:?}"))).unwrap_or(default)
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a float, got {v:?}"))).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --steps 100 --recipe mor_tensor_block --verbose");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.usize("steps", 0), 100);
+        assert_eq!(a.get("recipe"), Some("mor_tensor_block"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("report --figure=fig10 --threshold=0.045");
+        assert_eq!(a.get("figure"), Some("fig10"));
+        assert_eq!(a.f32("threshold", 0.0), 0.045);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("eval ckpt1 ckpt2");
+        assert_eq!(a.command.as_deref(), Some("eval"));
+        assert_eq!(a.positional, vec!["ckpt1", "ckpt2"]);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = parse("x --dry-run --steps 5");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.usize("steps", 0), 5);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.usize("steps", 7), 7);
+        assert_eq!(a.f32("lr", 0.1), 0.1);
+        assert_eq!(a.get_or("model", "tiny"), "tiny");
+    }
+}

@@ -1,0 +1,9 @@
+//! In-repo replacements for crates unavailable in the offline build
+//! environment: a deterministic property-testing harness, a tiny CLI
+//! argument parser, a micro-benchmark harness (used by `cargo bench`
+//! targets with `harness = false`), and a seeded RNG.
+
+pub mod bench;
+pub mod cli;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,68 @@
+//! Miniature property-testing harness (offline replacement for the
+//! `proptest` crate). Deterministic by default with per-case seeds, so a
+//! failure message pinpoints the reproducing seed; set
+//! `MOR_PROPTEST_SEED` to re-run a single case and `MOR_PROPTEST_CASES`
+//! to change the case count.
+
+pub use super::rng::Rng as Gen;
+
+/// Run `cases` property checks. The property returns `true` on success;
+/// `false` or a panic fails the test with the case seed in the message.
+pub fn prop<F: Fn(&mut Gen) -> bool + std::panic::RefUnwindSafe>(cases: u32, property: F) {
+    let cases = std::env::var("MOR_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cases);
+    if let Ok(seed) = std::env::var("MOR_PROPTEST_SEED") {
+        let seed: u64 = seed.parse().expect("MOR_PROPTEST_SEED must be a u64");
+        let mut g = Gen::new(seed);
+        assert!(property(&mut g), "property failed for seed {seed}");
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        match result {
+            Ok(true) => {}
+            Ok(false) => panic!(
+                "property returned false on case {case}; rerun with MOR_PROPTEST_SEED={seed}"
+            ),
+            Err(e) => {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| e.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                panic!(
+                    "property panicked on case {case}: {msg}; rerun with MOR_PROPTEST_SEED={seed}"
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop(50, |g| g.f32() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "MOR_PROPTEST_SEED")]
+    fn failing_property_reports_seed() {
+        prop(50, |g| g.f32() < 0.5); // fails with ~certainty over 50 cases
+    }
+
+    #[test]
+    #[should_panic(expected = "property panicked")]
+    fn panicking_property_reports_seed() {
+        prop(10, |g| {
+            assert!(g.f32() < 0.5, "too big");
+            true
+        });
+    }
+}

@@ -1,0 +1,104 @@
+//! xorshift64* PRNG — deterministic, seedable, dependency-free. Used by
+//! the data pipeline, property tests, and synthetic workload generators.
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point; splash the seed.
+        Rng { state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Log-uniform in [lo, hi) — magnitudes spanning many binades, the
+    /// natural distribution for quantization-range tests.
+    pub fn f32_log_uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        debug_assert!(lo > 0.0 && hi > lo);
+        (lo.ln() as f64 + (hi.ln() - lo.ln()) as f64 * self.f64()).exp() as f32
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + (self.next_u64() % (hi - lo + 1) as u64) as usize
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.f32_in(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&v));
+            let u = r.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let l = r.f32_log_uniform(1e-6, 1e6);
+            assert!((1e-7..1e7).contains(&l));
+        }
+    }
+
+    #[test]
+    fn normal_has_unit_variance() {
+        let mut r = Rng::new(9);
+        let n = 20000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+}

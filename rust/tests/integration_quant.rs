@@ -1,0 +1,187 @@
+//! Cross-language equivalence: the compiled HLO quant kernels (Pallas →
+//! XLA → PJRT) against the bit-exact Rust host mirror, on identical
+//! inputs. This is the proof that the three implementations of the
+//! paper's numerics — Pallas kernel, jnp oracle, Rust engine — agree.
+//!
+//! Requires `make artifacts-tiny` (artifacts/tiny). Tests self-skip if
+//! artifacts are missing so `cargo test` stays runnable pre-build.
+
+use mor::formats::ReprType;
+use mor::model::config::ModelConfig;
+use mor::quant::fake_quant::fake_quantize;
+use mor::quant::partition::Partition;
+use mor::runtime::Runtime;
+use mor::scaling::ScalingAlgo;
+use mor::tensor::Tensor;
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new("artifacts/tiny");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts/tiny not built (run `make artifacts-tiny`)");
+        return None;
+    }
+    Some(Runtime::load(dir, ModelConfig::TINY).expect("loading tiny artifacts"))
+}
+
+/// The quant artifacts are all 256x256 — matches aot.py QUANT_ROWS/COLS.
+fn test_tensor(seed: u64, spread: bool) -> Tensor {
+    let mut t = Tensor::normal(&[256, 256], 2.0, seed);
+    if spread {
+        for (i, v) in t.data_mut().iter_mut().enumerate() {
+            *v *= (10.0f32).powi((i % 9) as i32 - 4);
+        }
+    }
+    t
+}
+
+fn check_artifact(
+    rt: &Runtime,
+    name: &str,
+    fmt: ReprType,
+    partition: Partition,
+    scaling: ScalingAlgo,
+) {
+    let session = rt.quant_session(name).expect(name);
+    for (seed, spread) in [(1u64, false), (2, true), (3, false)] {
+        let x = test_tensor(seed, spread);
+        let (hlo_out, hlo_relerr) = session.run(&x).expect("executing quant artifact");
+        let host = fake_quantize(&x, fmt, partition, scaling);
+
+        // Element-wise equivalence between PJRT-compiled Pallas and the
+        // Rust mirror. The Rust mirror is bit-exact against *eager*
+        // JAX (pinned by the ml_dtypes goldens below and pytest); the
+        // AOT-compiled XLA CPU binary additionally FMA-contracts the
+        // scale multiply, which flips values sitting exactly on an RNE
+        // tie to the adjacent fp8 grid point. Bound: < 1% of elements,
+        // each within one grid step (~12.5% relative for fp8).
+        let mut mismatches = 0usize;
+        let amax = x.amax();
+        for (a, b) in hlo_out.data().iter().zip(host.out.data()) {
+            let d = (a - b).abs();
+            if d != 0.0 {
+                mismatches += 1;
+                // Adjacent normal-range codes differ by <= 2^-2 rel;
+                // subnormal-range codes can differ by more relative but
+                // are tiny against the tensor's magnitude envelope.
+                let rel = d / a.abs().max(b.abs()).max(1e-30);
+                assert!(
+                    rel < 0.26 || d < 2e-3 * amax,
+                    "{name} seed {seed}: non-adjacent mismatch {a} vs {b} (input amax {amax})"
+                );
+            }
+        }
+        assert!(
+            (mismatches as f64) < 0.01 * hlo_out.len() as f64,
+            "{name} seed {seed}: {mismatches}/{} mismatching elements",
+            hlo_out.len()
+        );
+
+        // Relative-error metric agreement (f32 vs f64 accumulation).
+        let host_relerr = host.global_err.mean() as f32;
+        assert!(
+            (hlo_relerr - host_relerr).abs() < 1e-4 + host_relerr * 1e-3,
+            "{name} seed {seed}: relerr {hlo_relerr} vs host {host_relerr}"
+        );
+    }
+}
+
+#[test]
+fn quant_e4m3_gam_block128_matches_host() {
+    let Some(rt) = runtime() else { return };
+    check_artifact(&rt, "quant_e4m3_gam_block128", ReprType::E4M3, Partition::BLOCK128, ScalingAlgo::Gam);
+}
+
+#[test]
+fn quant_e4m3_gam_block64_matches_host() {
+    let Some(rt) = runtime() else { return };
+    check_artifact(&rt, "quant_e4m3_gam_block64", ReprType::E4M3, Partition::BLOCK64, ScalingAlgo::Gam);
+}
+
+#[test]
+fn quant_e4m3_gam_tensor_matches_host() {
+    let Some(rt) = runtime() else { return };
+    check_artifact(&rt, "quant_e4m3_gam_tensor", ReprType::E4M3, Partition::Tensor, ScalingAlgo::Gam);
+}
+
+#[test]
+fn quant_e4m3_gam_channel_rows_matches_host() {
+    let Some(rt) = runtime() else { return };
+    check_artifact(&rt, "quant_e4m3_gam_channel_rows", ReprType::E4M3, Partition::ChannelRows, ScalingAlgo::Gam);
+}
+
+#[test]
+fn quant_e4m3_gam_channel_cols_matches_host() {
+    let Some(rt) = runtime() else { return };
+    check_artifact(&rt, "quant_e4m3_gam_channel_cols", ReprType::E4M3, Partition::ChannelCols, ScalingAlgo::Gam);
+}
+
+#[test]
+fn quant_e4m3_amax_block128_matches_host() {
+    let Some(rt) = runtime() else { return };
+    check_artifact(&rt, "quant_e4m3_amax_block128", ReprType::E4M3, Partition::BLOCK128, ScalingAlgo::AmaxFp32);
+}
+
+#[test]
+fn quant_e4m3_e8m0_block128_matches_host() {
+    let Some(rt) = runtime() else { return };
+    check_artifact(&rt, "quant_e4m3_e8m0_block128", ReprType::E4M3, Partition::BLOCK128, ScalingAlgo::E8M0);
+}
+
+#[test]
+fn quant_e5m2_gam_block128_matches_host() {
+    let Some(rt) = runtime() else { return };
+    check_artifact(&rt, "quant_e5m2_gam_block128", ReprType::E5M2, Partition::BLOCK128, ScalingAlgo::Gam);
+}
+
+#[test]
+fn quant_artifact_zero_tensor() {
+    let Some(rt) = runtime() else { return };
+    let s = rt.quant_session("quant_e4m3_gam_block128").unwrap();
+    let x = Tensor::zeros(&[256, 256]);
+    let (out, relerr) = s.run(&x).unwrap();
+    assert!(out.data().iter().all(|v| *v == 0.0));
+    assert_eq!(relerr, 0.0);
+}
+
+/// Golden cross-check: our fp8 encoders vs `ml_dtypes` (the converter
+/// JAX uses), over 8000 random values including subnormal-range and
+/// overflow cases. These run without artifacts.
+#[test]
+fn fp8_e4m3_encode_matches_ml_dtypes_golden() {
+    use mor::formats::fp8::{Fp8Format, E4M3};
+    let text = std::fs::read_to_string("rust/tests/golden/fp8_e4m3_golden.txt").unwrap();
+    let mut checked = 0;
+    for line in text.lines() {
+        let (v, e) = line.split_once(' ').unwrap();
+        let bits = u32::from_str_radix(v, 16).unwrap();
+        let expect = u8::from_str_radix(e, 16).unwrap();
+        let got = E4M3::encode(f32::from_bits(bits));
+        let x = f32::from_bits(bits);
+        let (gd, ed) = (E4M3::decode(got), E4M3::decode(expect));
+        assert!(
+            got == expect || (gd.is_nan() && ed.is_nan()),
+            "x={x} ({bits:08x}): ours {got:02x} ({gd}) vs ml_dtypes {expect:02x} ({ed})"
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 8000);
+}
+
+#[test]
+fn fp8_e5m2_encode_matches_ml_dtypes_golden() {
+    use mor::formats::fp8::{Fp8Format, E5M2};
+    let text = std::fs::read_to_string("rust/tests/golden/fp8_e5m2_golden.txt").unwrap();
+    for line in text.lines() {
+        let (v, e) = line.split_once(' ').unwrap();
+        let bits = u32::from_str_radix(v, 16).unwrap();
+        let expect = u8::from_str_radix(e, 16).unwrap();
+        let got = E5M2::encode(f32::from_bits(bits));
+        let (gd, ed) = (E5M2::decode(got), E5M2::decode(expect));
+        assert!(
+            got == expect || (gd.is_nan() && ed.is_nan()),
+            "x={} ({bits:08x}): ours {got:02x} ({gd}) vs ml_dtypes {expect:02x} ({ed})",
+            f32::from_bits(bits)
+        );
+    }
+}

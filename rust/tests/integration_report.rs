@@ -1,0 +1,72 @@
+//! Smoke tests for the report harness on the tiny preset: a handful of
+//! short runs proving that every table/figure code path executes and
+//! produces the paper-shaped outputs.
+
+use mor::model::config::ModelConfig;
+use mor::report::{runs, ReportCtx};
+use std::path::Path;
+
+fn ctx(steps: u64, tag: &str) -> Option<ReportCtx> {
+    let dir = Path::new("artifacts/tiny");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts/tiny not built");
+        return None;
+    }
+    let out = std::env::temp_dir().join(format!("mor_report_{tag}_{}", std::process::id()));
+    let mut c = ReportCtx::new(dir, ModelConfig::TINY, steps, out).expect("ctx");
+    c.quiet = true;
+    Some(c)
+}
+
+#[test]
+fn table1_prints() {
+    let Some(c) = ctx(4, "t1") else { return };
+    c.run_experiment("table1").unwrap();
+}
+
+#[test]
+fn run_variant_caches() {
+    let Some(c) = ctx(5, "cache") else { return };
+    let r1 = runs::run_variant(&c, "block", "train_mor_tensor_block", 1, 0.045, false, false)
+        .unwrap();
+    assert_eq!(r1.records.len(), 5);
+    assert!(r1.csv_path.exists());
+    // Second call — even one demanding stats + suite — must hit the
+    // in-memory memo (every executed run carries both).
+    let t0 = std::time::Instant::now();
+    let r2 =
+        runs::run_variant(&c, "block", "train_mor_tensor_block", 1, 0.045, true, true).unwrap();
+    assert!(t0.elapsed().as_millis() < 100, "expected memoized run");
+    assert!(std::rc::Rc::ptr_eq(&r1, &r2));
+    assert!(r2.stats.is_some() && !r2.suite_history.is_empty());
+    std::fs::remove_dir_all(&c.out_dir).ok();
+}
+
+#[test]
+fn fig10_shape_holds_directionally() {
+    // The channel strategy must not fall back more than the per-tensor
+    // strategy (paper Fig. 10's headline ordering), measured on a short
+    // tiny-model run. Uses the stats-bearing path.
+    let Some(c) = ctx(6, "fig10") else { return };
+    let tensor = runs::run_variant(&c, "tensor", "train_mor_tensor_tensor", 1, 0.045, false, true)
+        .unwrap();
+    let channel =
+        runs::run_variant(&c, "channel", "train_mor_tensor_channel", 1, 0.045, false, true)
+            .unwrap();
+    let fb_tensor = tensor.stats.as_ref().unwrap().overall_fallback_pct();
+    let fb_channel = channel.stats.as_ref().unwrap().overall_fallback_pct();
+    assert!(
+        fb_channel <= fb_tensor + 1e-9,
+        "channel {fb_channel}% should not exceed tensor {fb_tensor}%"
+    );
+    std::fs::remove_dir_all(&c.out_dir).ok();
+}
+
+#[test]
+fn heatmap_figures_render() {
+    let Some(c) = ctx(4, "heat") else { return };
+    c.run_experiment("fig11").unwrap();
+    c.run_experiment("fig12").unwrap();
+    c.run_experiment("fig14").unwrap();
+    std::fs::remove_dir_all(&c.out_dir).ok();
+}

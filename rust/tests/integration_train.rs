@@ -1,0 +1,174 @@
+//! End-to-end integration over the full stack: Rust coordinator →
+//! PJRT train/eval executables → MoR stats, on the tiny preset.
+//! Requires `make artifacts-tiny`; tests self-skip if absent.
+
+use mor::coordinator::checkpoint::Checkpoint;
+use mor::coordinator::eval::eval_suite;
+use mor::coordinator::trainer::{full_mask, Trainer, TrainerOptions};
+use mor::data::loader::BatchLoader;
+use mor::data::synthetic::CorpusProfile;
+use mor::data::tasks::EvalSuite;
+use mor::model::config::{ModelConfig, TrainConfig};
+use mor::model::naming::{param_specs, QuantTensorId};
+use mor::runtime::Runtime;
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new("artifacts/tiny");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts/tiny not built (run `make artifacts-tiny`)");
+        return None;
+    }
+    Some(Runtime::load(dir, ModelConfig::TINY).expect("loading tiny artifacts"))
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("mor_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn baseline_training_reduces_loss() {
+    let Some(rt) = runtime() else { return };
+    let mut s = rt.train_session("train_baseline", 42).unwrap();
+    let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, s.batch, s.seq, 42, 0);
+    let mut first = 0f32;
+    let mut last = 0f32;
+    for i in 0..25 {
+        let b = loader.next_batch();
+        let out = s.step(&b.tokens, 3e-3, 0.045).unwrap();
+        assert!(out.loss.is_finite(), "step {i} loss {}", out.loss);
+        if i == 0 {
+            first = out.loss;
+        }
+        last = out.loss;
+    }
+    assert!(
+        last < first - 0.3,
+        "loss should drop: first {first}, last {last}"
+    );
+    // Baseline emits zero quant stats.
+    assert_eq!(s.stats_len, QuantTensorId::count(&ModelConfig::TINY));
+}
+
+#[test]
+fn mor_block_training_tracks_baseline_and_reports_stats() {
+    let Some(rt) = runtime() else { return };
+    let mut base = rt.train_session("train_baseline", 7).unwrap();
+    let mut mor = rt.train_session("train_mor_tensor_block", 7).unwrap();
+    let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, base.batch, base.seq, 7, 0);
+    let (mut lb, mut lm) = (0f32, 0f32);
+    let mut saw_quant = false;
+    for _ in 0..20 {
+        let b = loader.next_batch();
+        lb = base.step(&b.tokens, 2e-3, 0.045).unwrap().loss;
+        let out = mor.step(&b.tokens, 2e-3, 0.045).unwrap();
+        lm = out.loss;
+        assert_eq!(out.relerr.len(), QuantTensorId::count(&ModelConfig::TINY));
+        // relerr slots populated with sane values; fallback is 0/1 for
+        // the tensor-level recipe.
+        for (re, fb) in out.relerr.iter().zip(out.fallback.iter()) {
+            assert!((0.0..1.0).contains(re), "relerr {re}");
+            assert!(*fb == 0.0 || *fb == 1.0, "fallback {fb}");
+        }
+        if out.fallback.iter().any(|f| *f == 0.0) {
+            saw_quant = true;
+        }
+    }
+    assert!(saw_quant, "MoR never quantized anything");
+    // Same data, same seed: fake-quant noise should keep losses close.
+    assert!(
+        (lb - lm).abs() < 0.15 * lb.abs().max(0.1),
+        "baseline {lb} vs MoR {lm} diverged"
+    );
+}
+
+#[test]
+fn subtensor_fallback_is_fractional() {
+    let Some(rt) = runtime() else { return };
+    let mut s = rt.train_session("train_mor_subtensor_two_way", 11).unwrap();
+    let loader = BatchLoader::new(CorpusProfile::NemotronHLike, 256, s.batch, s.seq, 11, 0);
+    let b = loader.next_batch();
+    let out = s.step(&b.tokens, 1e-3, 0.045).unwrap();
+    for fb in &out.fallback {
+        assert!((0.0..=1.0).contains(fb));
+    }
+}
+
+#[test]
+fn eval_session_and_suite_run() {
+    let Some(rt) = runtime() else { return };
+    let s = rt.train_session("train_baseline", 3).unwrap();
+    let ev = rt.eval_session("eval").unwrap();
+    let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, ev.batch, ev.seq, 3, 1);
+    let b = loader.next_batch();
+    let mask = full_mask(ev.batch, ev.seq);
+    let (loss, acc) = ev.eval(s.param_literals(), &b.tokens, &mask).unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+    // Untrained model ≈ chance accuracy (< 5% over 256 tokens).
+    assert!(acc < 0.05, "untrained acc {acc}");
+
+    let suite = EvalSuite::new(ev.seq, 256, 4, 99);
+    let scores = eval_suite(&ev, s.param_literals(), &suite).unwrap();
+    assert_eq!(scores.per_task.len(), 5);
+    for (name, loss, acc) in &scores.per_task {
+        assert!(loss.is_finite(), "{name}");
+        assert!((0.0..=100.0).contains(acc), "{name} acc {acc}");
+    }
+}
+
+#[test]
+fn trainer_end_to_end_with_metrics_and_checkpoint() {
+    let Some(rt) = runtime() else { return };
+    let out_dir = tmpdir("trainer");
+    let trainer = Trainer::new(&rt, TrainConfig::config1(12));
+    let mut opts = TrainerOptions::new("train_mor_tensor_block", 12, out_dir.clone());
+    opts.val_every = 4;
+    opts.suite_every = 6;
+    opts.ckpt_every = 5;
+    opts.quiet = true;
+    let outcome = trainer.run(&opts).unwrap();
+    assert_eq!(outcome.records.len(), 12);
+    assert!(outcome.final_train_loss.is_finite());
+    assert!(outcome.final_val_loss.is_finite());
+    assert!(!outcome.suite_history.is_empty());
+    assert!(outcome.metrics_path.exists());
+    assert!(outcome.stats.overall_fallback_pct() >= 0.0);
+
+    // Checkpoint round-trip through a fresh session.
+    let ckpt_path = out_dir.join("train_mor_tensor_block.step5.ckpt");
+    assert!(ckpt_path.exists(), "checkpoint not written");
+    let ck = Checkpoint::load(&ckpt_path).unwrap();
+    assert_eq!(ck.step, 5);
+    let specs = param_specs(&ModelConfig::TINY);
+    assert_eq!(ck.tensors.len(), specs.len());
+    let mut s2 = rt.train_session("train_baseline", 1).unwrap();
+    let params: Vec<_> = specs.iter().map(|s| ck.get(&s.name).unwrap().clone()).collect();
+    s2.set_params(&params).unwrap();
+    let n1 = s2.param_norm().unwrap();
+    let expected: f32 = {
+        let mut sq = 0f64;
+        for (_, t) in &ck.tensors {
+            sq += (t.l2() as f64).powi(2);
+        }
+        sq.sqrt() as f32
+    };
+    assert!((n1 - expected).abs() < 1e-3 * expected);
+    std::fs::remove_dir_all(out_dir).ok();
+}
+
+#[test]
+fn deterministic_training_given_seed() {
+    let Some(rt) = runtime() else { return };
+    let run = |seed: u64| -> Vec<f32> {
+        let mut s = rt.train_session("train_baseline", seed).unwrap();
+        let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, s.batch, s.seq, seed, 0);
+        (0..5)
+            .map(|_| s.step(&loader.next_batch().tokens, 1e-3, 0.045).unwrap().loss)
+            .collect()
+    };
+    assert_eq!(run(5), run(5));
+    assert_ne!(run(5), run(6));
+}
