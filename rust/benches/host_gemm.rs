@@ -1,42 +1,50 @@
 //! Host GEMM benches: the plain f32 GEMM vs the Fig. 3 mixed-type
-//! blocked GEMM (which also models the fp8-vs-upcast MAC accounting).
+//! blocked GEMM (which also models the fp8-vs-upcast MAC accounting),
+//! each serial vs parallel over output-row panels.
 
 use mor::formats::ReprType;
-use mor::tensor::ops::{matmul, matmul_nt, matmul_tn, mixed_gemm, BlockTypes};
+use mor::tensor::ops::{
+    matmul_nt_with, matmul_tn_with, matmul_with, mixed_gemm_with, BlockTypes,
+};
 use mor::tensor::Tensor;
 use mor::util::bench::{bench, report_throughput, BenchOptions};
+use mor::util::par::Parallelism;
 use std::hint::black_box;
 
 fn main() {
     let opts = BenchOptions::default();
-    const N: usize = 128;
+    const N: usize = 256;
     let a = Tensor::normal(&[N, N], 1.0, 1);
     let b = Tensor::normal(&[N, N], 1.0, 2);
     let flops = (2 * N * N * N) as f64;
-
-    let r = bench("matmul_f32_128", &opts, || {
-        black_box(matmul(black_box(&a), black_box(&b)));
-    });
-    report_throughput("matmul_f32", &r, flops, "flop");
-
     let at = a.transpose();
-    let r = bench("matmul_tn_128", &opts, || {
-        black_box(matmul_tn(black_box(&at), black_box(&b)));
-    });
-    report_throughput("matmul_tn", &r, flops, "flop");
-
     let bt = b.transpose();
-    let r = bench("matmul_nt_128", &opts, || {
-        black_box(matmul_nt(black_box(&a), black_box(&bt)));
-    });
-    report_throughput("matmul_nt", &r, flops, "flop");
-
     let ta = BlockTypes::uniform(N, N, 32, ReprType::E4M3);
     let mut tb = BlockTypes::uniform(N, N, 32, ReprType::E4M3);
     tb.grid[0][0] = ReprType::Bf16;
     tb.grid[1][1] = ReprType::E5M2;
-    let r = bench("mixed_gemm_128_blk32", &opts, || {
-        black_box(mixed_gemm(black_box(&a), &ta, black_box(&b), &tb));
-    });
-    report_throughput("mixed_gemm", &r, flops, "flop");
+
+    let auto = Parallelism::auto();
+    for (label, cfg) in [("serial", Parallelism::serial()), ("parallel", auto)] {
+        let r = bench(&format!("matmul_f32_{N}_{label}"), &opts, || {
+            black_box(matmul_with(black_box(&a), black_box(&b), cfg));
+        });
+        report_throughput(&format!("matmul_f32_{label}"), &r, flops, "flop");
+
+        let r = bench(&format!("matmul_tn_{N}_{label}"), &opts, || {
+            black_box(matmul_tn_with(black_box(&at), black_box(&b), cfg));
+        });
+        report_throughput(&format!("matmul_tn_{label}"), &r, flops, "flop");
+
+        let r = bench(&format!("matmul_nt_{N}_{label}"), &opts, || {
+            black_box(matmul_nt_with(black_box(&a), black_box(&bt), cfg));
+        });
+        report_throughput(&format!("matmul_nt_{label}"), &r, flops, "flop");
+
+        let r = bench(&format!("mixed_gemm_{N}_blk32_{label}"), &opts, || {
+            black_box(mixed_gemm_with(black_box(&a), &ta, black_box(&b), &tb, cfg));
+        });
+        report_throughput(&format!("mixed_gemm_{label}"), &r, flops, "flop");
+    }
+    println!("(parallel = {} threads, row-panel chunking)", auto.threads);
 }

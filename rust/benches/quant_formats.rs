@@ -1,12 +1,20 @@
 //! Codec throughput: fp8/bf16/fp4 encode-decode and the fake-quant
-//! pipeline per element. The L3-side perf floor for any host-side
-//! quantization work (paper Section 2 claims "negligible overhead" for
-//! GAM metadata; this bench quantifies the compute side).
+//! pipeline per element, plus the serial-vs-parallel comparison of the
+//! full fake-quant pipeline on the chunked engine. The L3-side perf
+//! floor for any host-side quantization work (paper Section 2 claims
+//! "negligible overhead" for GAM metadata; this bench quantifies the
+//! compute side).
 
 use mor::formats::bf16;
 use mor::formats::fp4;
 use mor::formats::fp8::{Fp8Format, Rounding, E4M3, E5M2};
+use mor::formats::ReprType;
+use mor::quant::fake_quant::fake_quantize_with;
+use mor::quant::partition::Partition;
+use mor::scaling::ScalingAlgo;
+use mor::tensor::Tensor;
 use mor::util::bench::{bench, report_throughput, BenchOptions};
+use mor::util::par::Parallelism;
 use std::hint::black_box;
 
 fn main() {
@@ -46,4 +54,39 @@ fn main() {
         black_box(&out);
     });
     report_throughput("nvfp4_block_pipeline", &r, 4096.0, "elem");
+
+    // Full fake-quant pipeline (Fig. 4), serial vs parallel chunked
+    // engine at the default thread count. This is the bench behind the
+    // sweep-throughput claim: per-tensor metric collection must be
+    // cheap enough to run every step.
+    let x = Tensor::normal(&[512, 512], 2.0, 7);
+    let elems = (512 * 512) as f64;
+    let auto = Parallelism::auto();
+    for (label, cfg) in [("serial", Parallelism::serial()), ("parallel", auto)] {
+        for (pname, partition) in [
+            ("block128", Partition::BLOCK128),
+            ("channel", Partition::ChannelRows),
+            ("subchannel32", Partition::SubChannelRows { len: 32 }),
+        ] {
+            let r = bench(
+                &format!("fake_quant_e4m3_gam_{pname}_512x512_{label}"),
+                &opts,
+                || {
+                    let fq = fake_quantize_with(
+                        black_box(&x),
+                        ReprType::E4M3,
+                        partition,
+                        ScalingAlgo::Gam,
+                        cfg,
+                    );
+                    black_box(fq.global_err.mean());
+                },
+            );
+            report_throughput(&format!("fake_quant_{pname}_{label}"), &r, elems, "elem");
+        }
+    }
+    println!(
+        "(parallel = {} threads; bit-identical to serial by the par-engine contract)",
+        auto.threads
+    );
 }

@@ -1,7 +1,11 @@
-//! End-to-end PJRT step latency (the L3 hot path): one full train step
-//! per recipe variant on the tiny preset, plus the standalone quant
-//! kernel, plus the eval step. Skips gracefully when artifacts are
-//! missing. This is the bench behind EXPERIMENTS.md §Perf L3.
+//! End-to-end step latency (the L3 hot path), on both backends:
+//!
+//! * **Host backend** (always runs, no artifacts): one full train step
+//!   per recipe variant on the tiny preset, serial vs parallel — the
+//!   headline serial-vs-parallel comparison for the whole pipeline.
+//! * **PJRT** (skips gracefully when artifacts are missing): the
+//!   compiled-step latency per recipe variant, the standalone quant
+//!   kernel, and the eval step.
 
 use mor::data::loader::BatchLoader;
 use mor::data::synthetic::CorpusProfile;
@@ -9,22 +13,70 @@ use mor::model::config::ModelConfig;
 use mor::runtime::Runtime;
 use mor::tensor::Tensor;
 use mor::util::bench::{bench, report_throughput, BenchOptions};
+use mor::util::par::{self, Parallelism};
 use std::hint::black_box;
 use std::path::Path;
 use std::time::Duration;
 
-fn main() {
-    let dir = Path::new("artifacts/tiny");
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("step_latency: artifacts/tiny missing — run `make artifacts-tiny`");
-        return;
+fn host_backend_section(opts: &BenchOptions) {
+    let rt = Runtime::host(ModelConfig::TINY);
+    let auto = Parallelism::auto();
+    println!("== host backend (tiny preset, serial vs {} threads) ==", auto.threads);
+    for artifact in ["train_baseline", "train_mor_tensor_block", "train_mor_subtensor_two_way"] {
+        for (label, cfg) in [("serial", Parallelism::serial()), ("parallel", auto)] {
+            par::set_global(cfg);
+            let mut session = rt.train_session(artifact, 1).expect("host session");
+            let loader = BatchLoader::new(
+                CorpusProfile::Nemotron4Like,
+                256,
+                session.batch,
+                session.seq,
+                1,
+                0,
+            );
+            let batch = loader.next_batch();
+            let tokens_per_step = (session.batch * session.seq) as f64;
+            let r = bench(&format!("host_{artifact}_step_{label}"), opts, || {
+                let out = session.step(black_box(&batch.tokens), 1e-3, 0.045).unwrap();
+                black_box(out.loss);
+            });
+            report_throughput(&format!("host_{artifact}_{label}"), &r, tokens_per_step, "tok");
+        }
     }
-    let rt = Runtime::load(dir, ModelConfig::TINY).expect("loading artifacts");
+    // Standalone host quant kernel, serial vs parallel.
+    let qs = rt.quant_session("quant_e4m3_gam_block128").unwrap();
+    let x = Tensor::normal(&[qs.rows, qs.cols], 2.0, 3);
+    for (label, cfg) in [("serial", Parallelism::serial()), ("parallel", auto)] {
+        par::set_global(cfg);
+        let r = bench(&format!("host_quant_e4m3_gam_block128_{label}"), opts, || {
+            let out = qs.run(black_box(&x)).unwrap();
+            black_box(out.1);
+        });
+        report_throughput(
+            &format!("host_quant_kernel_{label}"),
+            &r,
+            (qs.rows * qs.cols) as f64,
+            "elem",
+        );
+    }
+    par::set_global(auto);
+}
+
+fn main() {
     let opts = BenchOptions {
         warmup: Duration::from_millis(500),
         measure: Duration::from_secs(3),
         min_batches: 5,
     };
+
+    host_backend_section(&opts);
+
+    let dir = Path::new("artifacts/tiny");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("step_latency: artifacts/tiny missing — skipping the PJRT section");
+        return;
+    }
+    let rt = Runtime::load(dir, ModelConfig::TINY).expect("loading artifacts");
 
     for artifact in [
         "train_baseline",
@@ -60,7 +112,7 @@ fn main() {
     report_throughput("quant_kernel_pjrt", &r, (256 * 256) as f64, "elem");
 
     // Eval step.
-    let s = rt.train_session("train_baseline", 1).unwrap();
+    let mut s = rt.train_session("train_baseline", 1).unwrap();
     let ev = rt.eval_session("eval").unwrap();
     let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, ev.batch, ev.seq, 2, 1);
     let batch = loader.next_batch();

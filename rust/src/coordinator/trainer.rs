@@ -15,6 +15,7 @@ use crate::model::config::{ModelConfig, TrainConfig};
 use crate::model::naming::{param_specs, QuantTensorId};
 use crate::mor::stats::StatsCollector;
 use crate::runtime::Runtime;
+use crate::util::par::{self, Parallelism};
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 use std::time::Instant;
@@ -43,6 +44,12 @@ pub struct TrainerOptions {
     pub per_channel: bool,
     /// Run quietly (no per-step stdout).
     pub quiet: bool,
+    /// Worker override for the quantization/GEMM hot paths (`None`
+    /// keeps the process-global setting; see `util::par`). The setting
+    /// is process-global while the run executes and is restored when
+    /// it ends — concurrent runs in one process share whichever was
+    /// set last (results stay bit-identical either way).
+    pub parallelism: Option<Parallelism>,
 }
 
 impl TrainerOptions {
@@ -58,6 +65,7 @@ impl TrainerOptions {
             out_dir,
             per_channel: false,
             quiet: false,
+            parallelism: None,
         }
     }
 }
@@ -88,6 +96,13 @@ impl<'rt> Trainer<'rt> {
     }
 
     pub fn run(&self, opts: &TrainerOptions) -> Result<TrainOutcome> {
+        // The engine config is process-global; scope the per-run
+        // override to this run (restored on every exit path).
+        let _par_guard = opts.parallelism.map(|p| {
+            let prev = par::global();
+            par::set_global(p);
+            RestoreParallelism(prev)
+        });
         let tc = &self.train_config;
         let mut session = self
             .runtime
@@ -234,6 +249,15 @@ impl<'rt> Trainer<'rt> {
             .collect();
         Checkpoint { step, tensors }
             .save(&opts.out_dir.join(format!("{}.step{step}.ckpt", opts.artifact)))
+    }
+}
+
+/// Restores the previous global [`Parallelism`] when a run ends.
+struct RestoreParallelism(Parallelism);
+
+impl Drop for RestoreParallelism {
+    fn drop(&mut self) {
+        par::set_global(self.0);
     }
 }
 

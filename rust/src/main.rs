@@ -20,10 +20,12 @@ use mor::model::naming::param_specs;
 use mor::report::ReportCtx;
 use mor::runtime::Runtime;
 use mor::util::cli::Args;
+use mor::util::par::{self, Parallelism};
 use std::path::PathBuf;
 
 fn main() {
     let args = Args::from_env();
+    par::set_global(parallelism_of(&args));
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -39,6 +41,39 @@ fn artifacts_dir(args: &Args, model: &ModelConfig) -> PathBuf {
     args.get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts").join(model.name))
+}
+
+/// `--threads N` (0 = autodetect) and `--par-min-block N` configure the
+/// parallel chunked engine behind every quantization/GEMM hot path.
+fn parallelism_of(args: &Args) -> Parallelism {
+    let mut p = match args.usize("threads", 0) {
+        0 => Parallelism::auto(),
+        n => Parallelism::with_threads(n),
+    };
+    p.min_items = args.usize("par-min-block", p.min_items);
+    p
+}
+
+/// Select the execution backend: `--backend pjrt` requires compiled
+/// artifacts, `--backend host` runs the pure-Rust mirror, and the
+/// default `auto` uses PJRT when the manifest exists and falls back to
+/// the host backend otherwise.
+fn runtime_of(args: &Args, model: ModelConfig) -> Result<Runtime> {
+    let dir = artifacts_dir(args, &model);
+    match args.get_or("backend", "auto") {
+        "host" => Ok(Runtime::host(model)),
+        "pjrt" => Runtime::load(&dir, model),
+        "auto" => {
+            if !dir.join("manifest.txt").exists() {
+                eprintln!(
+                    "note: no artifacts at {} — using the host execution backend",
+                    dir.display()
+                );
+            }
+            Runtime::auto(&dir, model)
+        }
+        other => bail!("unknown backend {other:?}; try auto/host/pjrt"),
+    }
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -67,11 +102,19 @@ USAGE:
                [--steps N] [--model ...] [--out report/] [--fresh] [--quiet]
   repro info   [--model ...]
 
-Artifacts must be built first: `make artifacts [MODEL=small]`.";
+Common options:
+  --backend auto|host|pjrt   execution backend (default auto: PJRT when
+                             artifacts exist, else the pure-Rust host mirror)
+  --threads N                worker threads for the parallel engine (0 = auto;
+                             MOR_THREADS env var also respected)
+  --par-min-block N          tensors below N elements stay serial
+
+PJRT artifacts are built with `make artifacts [MODEL=small]`; without
+them every command still runs on the host backend.";
 
 fn cmd_train(args: &Args) -> Result<()> {
     let model = model_of(args)?;
-    let runtime = Runtime::load(&artifacts_dir(args, &model), model)?;
+    let runtime = runtime_of(args, model)?;
     let steps = args.u64("steps", 100);
     let config = TrainConfig::by_name(args.get_or("config", "config1"), steps)
         .context("--config must be config1 or config2")?;
@@ -85,6 +128,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.stats_window = args.u64("stats-window", (steps / 4).max(1));
     opts.per_channel = artifact.contains("channel");
     opts.quiet = args.flag("quiet");
+    opts.parallelism = Some(parallelism_of(args));
     let trainer = Trainer::new(&runtime, config);
     let outcome = trainer.run(&opts)?;
     println!(
@@ -108,12 +152,11 @@ fn cmd_report(args: &Args) -> Result<()> {
         .first()
         .map(|s| s.as_str())
         .context("report needs an experiment id (table1..4, fig5..fig21, all)")?;
-    let mut ctx = ReportCtx::new(
-        &artifacts_dir(args, &model),
-        model,
+    let mut ctx = ReportCtx::with_runtime(
+        runtime_of(args, model)?,
         args.u64("steps", 120),
         PathBuf::from(args.get_or("out", "report")),
-    )?;
+    );
     ctx.fresh = args.flag("fresh");
     ctx.quiet = !args.flag("verbose");
     ctx.run_experiment(exp)
@@ -121,7 +164,7 @@ fn cmd_report(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let model = model_of(args)?;
-    let runtime = Runtime::load(&artifacts_dir(args, &model), model)?;
+    let runtime = runtime_of(args, model)?;
     // Evaluate either a checkpoint or a fresh initialization (sanity
     // baseline: suite accuracy at chance level).
     let mut session = runtime.train_session(
@@ -166,7 +209,16 @@ fn cmd_info(args: &Args) -> Result<()> {
                 println!("  {:<36} {:?}", a.name, a.kind);
             }
         }
-        Err(e) => println!("artifacts not loadable from {}: {e:#}", dir.display()),
+        Err(e) => {
+            println!("artifacts not loadable from {}: {e:#}", dir.display());
+            let host = Runtime::host(model);
+            println!("host backend provides:");
+            for a in &host.manifest.artifacts {
+                println!("  {:<36} {:?}", a.name, a.kind);
+            }
+        }
     }
+    let p = parallelism_of(args);
+    println!("parallel engine: {} threads, serial below {} elements", p.threads, p.min_items);
     Ok(())
 }

@@ -17,10 +17,11 @@
 use super::framework::{MorFramework, MorOutcome};
 use crate::formats::ReprType;
 use crate::quant::error::dynamic_range_fits_e5m2;
-use crate::quant::fake_quant::fake_quantize;
+use crate::quant::fake_quant::fake_quantize_with;
 use crate::quant::partition::Partition;
 use crate::scaling::ScalingAlgo;
 use crate::tensor::Tensor;
+use crate::util::par::{self, Parallelism};
 
 /// Sub-tensor selection mode (§3.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -94,18 +95,51 @@ impl Recipe {
     }
 
     /// Apply the recipe to one tensor, producing the mixed-representation
-    /// fake-quantized output plus decision telemetry.
+    /// fake-quantized output plus decision telemetry. Uses the
+    /// process-global [`Parallelism`] for the underlying fake-quant
+    /// passes.
     pub fn apply(&self, x: &Tensor) -> MorOutcome {
+        self.apply_with(x, par::global())
+    }
+
+    /// [`Recipe::apply`] with an explicit [`Parallelism`].
+    pub fn apply_with(&self, x: &Tensor, cfg: Parallelism) -> MorOutcome {
         match self.kind {
             RecipeKind::Baseline => baseline(x),
             RecipeKind::TensorLevel { threshold } => {
-                tensor_level(x, self.partition, self.scaling, threshold)
+                tensor_level(x, self.partition, self.scaling, threshold, cfg)
             }
-            RecipeKind::SubTensor { mode } => sub_tensor(x, self.partition, self.scaling, mode),
+            RecipeKind::SubTensor { mode } => {
+                sub_tensor(x, self.partition, self.scaling, mode, cfg)
+            }
             RecipeKind::NvFp4TensorLevel { threshold_fp4, threshold_e4m3 } => {
-                nvfp4_tensor_level(x, self.partition, self.scaling, threshold_fp4, threshold_e4m3)
+                nvfp4_tensor_level(
+                    x,
+                    self.partition,
+                    self.scaling,
+                    threshold_fp4,
+                    threshold_e4m3,
+                    cfg,
+                )
             }
         }
+    }
+
+    /// The per-step MoR decision sweep: apply the recipe to every tensor
+    /// of a mini-batch, parallel **across tensors** (each per-tensor
+    /// application runs serially inside its worker to avoid nested
+    /// oversubscription). Outcome order matches input order and each
+    /// outcome is bit-identical to a standalone [`Recipe::apply`].
+    pub fn apply_batch(&self, xs: &[&Tensor]) -> Vec<MorOutcome> {
+        self.apply_batch_with(xs, par::global())
+    }
+
+    /// [`Recipe::apply_batch`] with an explicit [`Parallelism`].
+    pub fn apply_batch_with(&self, xs: &[&Tensor], cfg: Parallelism) -> Vec<MorOutcome> {
+        if cfg.threads <= 1 || xs.len() <= 1 {
+            return xs.iter().map(|x| self.apply_with(x, cfg)).collect();
+        }
+        par::par_map(cfg, xs.len(), |i| self.apply_with(xs[i], Parallelism::serial()))
     }
 }
 
@@ -120,8 +154,14 @@ fn baseline(x: &Tensor) -> MorOutcome {
 }
 
 /// §3.1 — one global decision from the aggregated relative error.
-fn tensor_level(x: &Tensor, partition: Partition, scaling: ScalingAlgo, th: f64) -> MorOutcome {
-    let fq = fake_quantize(x, ReprType::E4M3, partition, scaling);
+fn tensor_level(
+    x: &Tensor,
+    partition: Partition,
+    scaling: ScalingAlgo,
+    th: f64,
+    cfg: Parallelism,
+) -> MorOutcome {
+    let fq = fake_quantize_with(x, ReprType::E4M3, partition, scaling, cfg);
     let relerr = fq.global_err.mean();
     let fw = MorFramework::e4m3_bf16();
     let nblocks = fq.block_err.len();
@@ -136,7 +176,7 @@ fn tensor_level(x: &Tensor, partition: Partition, scaling: ScalingAlgo, th: f64)
             metadata_bits,
         }
     } else {
-        let bf = fake_quantize(x, ReprType::Bf16, Partition::Tensor, scaling);
+        let bf = fake_quantize_with(x, ReprType::Bf16, Partition::Tensor, scaling, cfg);
         MorOutcome {
             out: bf.out,
             block_types: vec![ReprType::Bf16; nblocks],
@@ -153,11 +193,12 @@ fn sub_tensor(
     partition: Partition,
     scaling: ScalingAlgo,
     mode: SubTensorMode,
+    cfg: Parallelism,
 ) -> MorOutcome {
     let (rows, cols) = x.as_2d();
     let _ = rows;
-    let fq_e4m3 = fake_quantize(x, ReprType::E4M3, partition, scaling);
-    let fq_e5m2 = fake_quantize(x, ReprType::E5M2, partition, scaling);
+    let fq_e4m3 = fake_quantize_with(x, ReprType::E4M3, partition, scaling, cfg);
+    let fq_e5m2 = fake_quantize_with(x, ReprType::E5M2, partition, scaling, cfg);
     let nblocks = fq_e4m3.block_err.len();
     let fw = match mode {
         SubTensorMode::TwoWay => MorFramework::e4m3_bf16(),
@@ -215,9 +256,11 @@ fn nvfp4_tensor_level(
     scaling: ScalingAlgo,
     th_fp4: f64,
     th_e4m3: f64,
+    cfg: Parallelism,
 ) -> MorOutcome {
-    let fq4 = fake_quantize(x, ReprType::NvFp4, Partition::SubChannelRows { len: 16 }, scaling);
-    let fq8 = fake_quantize(x, ReprType::E4M3, partition, scaling);
+    let fq4 =
+        fake_quantize_with(x, ReprType::NvFp4, Partition::SubChannelRows { len: 16 }, scaling, cfg);
+    let fq8 = fake_quantize_with(x, ReprType::E4M3, partition, scaling, cfg);
     let fw = MorFramework::new(vec![ReprType::NvFp4, ReprType::E4M3, ReprType::Bf16]);
     let choice = fw.select_block(0, |t, _| match t {
         ReprType::NvFp4 => fq4.global_err.mean() < th_fp4,
@@ -229,7 +272,7 @@ fn nvfp4_tensor_level(
         ReprType::NvFp4 => (fq4.out, 0.0, fq4.scales.metadata_bits()),
         ReprType::E4M3 => (fq8.out, 0.0, fq8.scales.metadata_bits()),
         _ => (
-            fake_quantize(x, ReprType::Bf16, Partition::Tensor, scaling).out,
+            fake_quantize_with(x, ReprType::Bf16, Partition::Tensor, scaling, cfg).out,
             1.0,
             0,
         ),

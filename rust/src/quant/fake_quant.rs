@@ -5,13 +5,21 @@
 //! This is the host mirror of the Pallas kernel
 //! (`python/compile/kernels/fake_quant.py`); the integration tests hold
 //! the two bit-equal on shared inputs.
+//!
+//! Execution is parallel over partition blocks via the chunked engine in
+//! [`crate::util::par`]: blocks are independent by construction (they
+//! tile the tensor disjointly), per-block error accumulators come back
+//! in canonical partition order and are merged serially, so the result
+//! is **bit-identical to the serial path** for any thread count
+//! (pinned by `rust/tests/parallel_equivalence.rs`).
 
 use super::error::RelErrAccum;
-use super::partition::Partition;
+use super::partition::{BlockRegion, Partition};
 use crate::formats::fp8::{Fp8Format, Rounding, E4M3, E5M2};
 use crate::formats::{bf16, ReprType};
-use crate::scaling::{compute_scales, GroupScales, ScalingAlgo};
+use crate::scaling::{compute_scales_with, GroupScales, ScalingAlgo};
 use crate::tensor::Tensor;
+use crate::util::par::{self, DisjointWriter, Parallelism};
 
 /// Result of fake-quantizing one tensor under one (type, partition,
 /// scaling) configuration.
@@ -39,86 +47,119 @@ fn qdq(t: ReprType, x: f32) -> f32 {
     }
 }
 
-/// Fake-quantize `x` to `target` under `partition` + `scaling`.
-///
-/// The group for GAM is the entire tensor (the configuration the paper
-/// uses throughout §4); blocks follow the partition. BF16 needs no
-/// scaling (its range covers f32 training tensors), so the pipeline
-/// degenerates to a bf16 round-trip with identity scales.
+/// Per-block range scan: (amax, non-zero amin).
+fn block_range_of(xd: &[f32], b: &BlockRegion, cols: usize) -> (f32, Option<f32>) {
+    let mut amax = 0.0f32;
+    let mut amin = f32::INFINITY;
+    for idx in b.indices(cols) {
+        let a = xd[idx].abs();
+        amax = amax.max(a);
+        if a != 0.0 {
+            amin = amin.min(a);
+        }
+    }
+    (amax, if amin.is_finite() { Some(amin) } else { None })
+}
+
+/// Fake-quantize `x` to `target` under `partition` + `scaling`, with the
+/// process-global [`Parallelism`].
 pub fn fake_quantize(
     x: &Tensor,
     target: ReprType,
     partition: Partition,
     scaling: ScalingAlgo,
 ) -> FakeQuantResult {
+    fake_quantize_with(x, target, partition, scaling, par::global())
+}
+
+/// Fake-quantize with an explicit [`Parallelism`] (benches and the
+/// parallel≡serial equivalence tests).
+///
+/// The group for GAM is the entire tensor (the configuration the paper
+/// uses throughout §4); blocks follow the partition. BF16 needs no
+/// scaling (its range covers f32 training tensors), so the pipeline
+/// degenerates to a bf16 round-trip with identity scales.
+pub fn fake_quantize_with(
+    x: &Tensor,
+    target: ReprType,
+    partition: Partition,
+    scaling: ScalingAlgo,
+    cfg: Parallelism,
+) -> FakeQuantResult {
     let (rows, cols) = x.as_2d();
     let blocks = partition.blocks(rows, cols);
     let xd = x.data();
+    // Tiny tensors stay serial (the min-block-size cutoff).
+    let cfg = cfg.gate(x.len());
 
     if target == ReprType::Bf16 {
         let mut out = x.clone();
+        let per_block: Vec<(RelErrAccum, (f32, Option<f32>))> = {
+            let sink = DisjointWriter::new(out.data_mut());
+            par::par_map(cfg, blocks.len(), |bi| {
+                let b = &blocks[bi];
+                let mut acc = RelErrAccum::default();
+                let mut amax = 0.0f32;
+                let mut amin = f32::INFINITY;
+                for idx in b.indices(cols) {
+                    let q = bf16::quantize_dequantize(xd[idx]);
+                    // Safety: partition blocks tile the tensor disjointly.
+                    unsafe { sink.write(idx, q) };
+                    acc.add(xd[idx], q);
+                    let a = xd[idx].abs();
+                    amax = amax.max(a);
+                    if a != 0.0 {
+                        amin = amin.min(a);
+                    }
+                }
+                (acc, (amax, if amin.is_finite() { Some(amin) } else { None }))
+            })
+        };
         let mut global = RelErrAccum::default();
         let mut block_err = Vec::with_capacity(blocks.len());
         let mut block_range = Vec::with_capacity(blocks.len());
-        for b in &blocks {
-            let mut acc = RelErrAccum::default();
-            let mut amax = 0.0f32;
-            let mut amin = f32::INFINITY;
-            for idx in b.indices(cols) {
-                let q = bf16::quantize_dequantize(xd[idx]);
-                out.data_mut()[idx] = q;
-                acc.add(xd[idx], q);
-                let a = xd[idx].abs();
-                amax = amax.max(a);
-                if a != 0.0 {
-                    amin = amin.min(a);
-                }
-            }
+        for (acc, range) in per_block {
             global.merge(acc);
             block_err.push(acc);
-            block_range.push((amax, if amin.is_finite() { Some(amin) } else { None }));
+            block_range.push(range);
         }
-        let scales = compute_scales(scaling, bf16::MAX, x.amax(), &vec![0.0; 0]);
+        let scales = compute_scales_with(scaling, bf16::MAX, x.amax(), &[], cfg);
         return FakeQuantResult { out, scales, block_err, global_err: global, block_range };
     }
 
-    // Per-block amaxes in partition order.
-    let mut block_amaxes = Vec::with_capacity(blocks.len());
-    let mut block_range = Vec::with_capacity(blocks.len());
-    for b in &blocks {
-        let mut amax = 0.0f32;
-        let mut amin = f32::INFINITY;
-        for idx in b.indices(cols) {
-            let a = xd[idx].abs();
-            amax = amax.max(a);
-            if a != 0.0 {
-                amin = amin.min(a);
-            }
-        }
-        block_amaxes.push(amax);
-        block_range.push((amax, if amin.is_finite() { Some(amin) } else { None }));
-    }
+    // Phase A — per-block amaxes (and M2 ranges) in partition order.
+    let block_range: Vec<(f32, Option<f32>)> =
+        par::par_map(cfg, blocks.len(), |bi| block_range_of(xd, &blocks[bi], cols));
+    let block_amaxes: Vec<f32> = block_range.iter().map(|r| r.0).collect();
 
     let q_amax = target.max_finite();
-    let scales = compute_scales(scaling, q_amax, x.amax(), &block_amaxes);
+    let scales = compute_scales_with(scaling, q_amax, x.amax(), &block_amaxes, cfg);
 
+    // Phase B — scale, cast, de-scale per block; disjoint writes into
+    // the output, per-block accumulators merged in canonical order.
     let mut out = Tensor::zeros(x.shape());
+    let block_err: Vec<RelErrAccum> = {
+        let sink = DisjointWriter::new(out.data_mut());
+        par::par_map(cfg, blocks.len(), |bi| {
+            let b = &blocks[bi];
+            let s = scales.blocks[bi].scale;
+            let mut acc = RelErrAccum::default();
+            // De-scale by *division* (not multiply-by-reciprocal): this is
+            // what the compiled kernel does, and the two differ in the last
+            // f32 ulp — the cross-language tests require bit-equality.
+            for idx in b.indices(cols) {
+                let v = xd[idx];
+                let q = qdq(target, v * s) / s;
+                // Safety: partition blocks tile the tensor disjointly.
+                unsafe { sink.write(idx, q) };
+                acc.add(v, q);
+            }
+            acc
+        })
+    };
     let mut global = RelErrAccum::default();
-    let mut block_err = Vec::with_capacity(blocks.len());
-    for (b, bs) in blocks.iter().zip(scales.blocks.iter()) {
-        let mut acc = RelErrAccum::default();
-        let s = bs.scale;
-        // De-scale by *division* (not multiply-by-reciprocal): this is
-        // what the compiled kernel does, and the two differ in the last
-        // f32 ulp — the cross-language tests require bit-equality.
-        for idx in b.indices(cols) {
-            let v = xd[idx];
-            let q = qdq(target, v * s) / s;
-            out.data_mut()[idx] = q;
-            acc.add(v, q);
-        }
-        global.merge(acc);
-        block_err.push(acc);
+    for acc in &block_err {
+        global.merge(*acc);
     }
     FakeQuantResult { out, scales, block_err, global_err: global, block_range }
 }

@@ -38,8 +38,17 @@ impl ReportCtx {
         steps: u64,
         out_dir: PathBuf,
     ) -> Result<ReportCtx> {
-        let runtime = Runtime::load(artifacts_dir, model)?;
-        Ok(ReportCtx {
+        // Shared auto-backend policy (PJRT when compiled artifacts
+        // exist, else the host backend) — every experiment is runnable
+        // without Python artifacts. The CLI resolves `--backend`
+        // itself and uses `with_runtime`.
+        Ok(Self::with_runtime(Runtime::auto(artifacts_dir, model)?, steps, out_dir))
+    }
+
+    /// Build a context around an already-selected runtime/backend.
+    pub fn with_runtime(runtime: Runtime, steps: u64, out_dir: PathBuf) -> ReportCtx {
+        let model = runtime.model;
+        ReportCtx {
             runtime,
             model,
             steps,
@@ -47,7 +56,7 @@ impl ReportCtx {
             fresh: false,
             quiet: false,
             run_cache: Default::default(),
-        })
+        }
     }
 
     pub fn config(&self, id: u8) -> TrainConfig {

@@ -1,36 +1,91 @@
-//! The PJRT client wrapper and the typed execution sessions.
+//! The typed execution sessions, dispatching over two backends:
+//!
+//! * **PJRT** — compiled HLO artifacts via the `xla` crate (the
+//!   original path; requires `make artifacts`).
+//! * **Host** — the pure-Rust mirror in [`super::host`], requiring no
+//!   artifacts at all: [`Runtime::host`] builds a synthetic manifest
+//!   and every session runs the bit-exact host numerics on the parallel
+//!   chunked engine.
+//!
+//! The session API (`TrainSession::step`, `EvalSession::eval`,
+//! `QuantSession::run`) is identical for both, so the coordinator,
+//! report harness and benches never know which backend they drive.
 
+use super::host::{host_eval, host_quant, HostQuant, HostTrainer};
 use super::manifest::{ArtifactKind, Manifest};
+use crate::formats::ReprType;
 use crate::model::config::ModelConfig;
 use crate::model::naming::{param_specs, QuantTensorId};
+use crate::quant::partition::Partition;
+use crate::scaling::ScalingAlgo;
 use crate::tensor::Tensor;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
 
-/// A loaded artifact set: PJRT client + manifest + compiled-executable
-/// cache. One `Runtime` per artifact directory / model preset.
+enum Backend {
+    Pjrt {
+        client: xla::PjRtClient,
+        cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    },
+    Host,
+}
+
+/// A loaded artifact set: backend + manifest + model preset. One
+/// `Runtime` per artifact directory (PJRT) or per preset (host).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Backend,
     pub manifest: Manifest,
     pub model: ModelConfig,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Runtime {
-    /// Load the manifest in `dir` and verify it matches the preset.
+    /// Load the manifest in `dir` and verify it matches the preset
+    /// (PJRT backend).
     pub fn load(dir: &Path, model: ModelConfig) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
         manifest.check_model(&model)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, manifest, model, cache: RefCell::new(HashMap::new()) })
+        Ok(Runtime {
+            backend: Backend::Pjrt { client, cache: RefCell::new(HashMap::new()) },
+            manifest,
+            model,
+        })
     }
 
-    /// Compile (or fetch from cache) an artifact by manifest name.
+    /// Artifact-free host runtime: a synthetic manifest covering the
+    /// standard train/eval/quant artifact set, executed by the host
+    /// mirror. The end-to-end path for tests, benches and `repro`
+    /// commands when no compiled artifacts exist.
+    pub fn host(model: ModelConfig) -> Runtime {
+        Runtime { backend: Backend::Host, manifest: Manifest::host_synthetic(&model), model }
+    }
+
+    /// The shared auto-backend policy: PJRT when a manifest exists at
+    /// `dir`, the host backend otherwise. The CLI and the report
+    /// harness both resolve through this.
+    pub fn auto(dir: &Path, model: ModelConfig) -> Result<Runtime> {
+        if dir.join("manifest.txt").exists() {
+            Self::load(dir, model)
+        } else {
+            Ok(Self::host(model))
+        }
+    }
+
+    /// Whether this runtime executes host-side (no PJRT).
+    pub fn is_host(&self) -> bool {
+        matches!(self.backend, Backend::Host)
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name
+    /// (PJRT backend only).
     pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+        let Backend::Pjrt { client, cache } = &self.backend else {
+            bail!("host runtime has no compiled executables (artifact {name})");
+        };
+        if let Some(e) = cache.borrow().get(name) {
             return Ok(e.clone());
         }
         let entry = self.manifest.get(name)?;
@@ -39,12 +94,11 @@ impl Runtime {
         )
         .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
+        let exe = client
             .compile(&comp)
             .with_context(|| format!("compiling artifact {name}"))?;
         let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        cache.borrow_mut().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
@@ -55,7 +109,6 @@ impl Runtime {
         if entry.kind != ArtifactKind::Train {
             bail!("artifact {name} is not a train step");
         }
-        let exe = self.executable(name)?;
         let batch = entry.usize_field("batch")?;
         let specs = param_specs(&self.model);
         if let Ok(n) = entry.usize_field("num_params") {
@@ -71,26 +124,43 @@ impl Runtime {
                 QuantTensorId::count(&self.model)
             );
         }
-        // Initialization mirrors python/compile/model.py `init_params`:
-        // scaled-normal weights, ones/zeros for LN.
-        let mut state: Vec<xla::Literal> = Vec::with_capacity(3 * specs.len());
-        for (i, s) in specs.iter().enumerate() {
-            let t = init_param(&self.model, &s.name, &s.shape, seed.wrapping_add(i as u64));
-            state.push(tensor_to_literal(&t)?);
-        }
-        for s in &specs {
-            state.push(tensor_to_literal(&Tensor::zeros(&s.shape))?); // m
-        }
-        for s in &specs {
-            state.push(tensor_to_literal(&Tensor::zeros(&s.shape))?); // v
-        }
+
+        let imp = match &self.backend {
+            Backend::Host => {
+                let quant = HostQuant::from_fields(
+                    entry.field("recipe").unwrap_or("baseline"),
+                    entry.field("partition").unwrap_or("tensor"),
+                    entry.field("scaling").unwrap_or("gam"),
+                )
+                .with_context(|| format!("artifact {name} recipe fields"))?;
+                let trainer = HostTrainer::new(self.model, quant, seed);
+                TrainImpl::Host { trainer, param_lits: Vec::new(), lits_stale: true }
+            }
+            Backend::Pjrt { .. } => {
+                let exe = self.executable(name)?;
+                // Initialization mirrors python/compile/model.py
+                // `init_params`: scaled-normal weights, ones/zeros for LN.
+                let mut state: Vec<xla::Literal> = Vec::with_capacity(3 * specs.len());
+                for (i, s) in specs.iter().enumerate() {
+                    let t =
+                        init_param(&self.model, &s.name, &s.shape, seed.wrapping_add(i as u64));
+                    state.push(tensor_to_literal(&t)?);
+                }
+                for s in &specs {
+                    state.push(tensor_to_literal(&Tensor::zeros(&s.shape))?); // m
+                }
+                for s in &specs {
+                    state.push(tensor_to_literal(&Tensor::zeros(&s.shape))?); // v
+                }
+                TrainImpl::Pjrt { exe, state }
+            }
+        };
         Ok(TrainSession {
-            exe,
+            imp,
             num_params: specs.len(),
             stats_len,
             batch,
             seq: self.model.seq_len,
-            state,
             step: 0,
         })
     }
@@ -101,8 +171,12 @@ impl Runtime {
         if entry.kind != ArtifactKind::Eval {
             bail!("artifact {name} is not an eval step");
         }
+        let imp = match &self.backend {
+            Backend::Host => EvalImpl::Host(self.model),
+            Backend::Pjrt { .. } => EvalImpl::Pjrt(self.executable(name)?),
+        };
         Ok(EvalSession {
-            exe: self.executable(name)?,
+            imp,
             batch: entry.usize_field("batch")?,
             seq: self.model.seq_len,
             num_params: param_specs(&self.model).len(),
@@ -115,8 +189,25 @@ impl Runtime {
         if entry.kind != ArtifactKind::Quant {
             bail!("artifact {name} is not a quant kernel");
         }
+        let imp = match &self.backend {
+            Backend::Host => QuantImpl::Host {
+                fmt: entry
+                    .field("format")
+                    .and_then(ReprType::parse)
+                    .ok_or_else(|| anyhow!("artifact {name} missing/unknown format"))?,
+                partition: entry
+                    .field("partition")
+                    .and_then(Partition::parse)
+                    .ok_or_else(|| anyhow!("artifact {name} missing/unknown partition"))?,
+                scaling: entry
+                    .field("scaling")
+                    .and_then(ScalingAlgo::parse)
+                    .ok_or_else(|| anyhow!("artifact {name} missing/unknown scaling"))?,
+            },
+            Backend::Pjrt { .. } => QuantImpl::Pjrt(self.executable(name)?),
+        };
         Ok(QuantSession {
-            exe: self.executable(name)?,
+            imp,
             rows: entry.usize_field("rows")?,
             cols: entry.usize_field("cols")?,
         })
@@ -170,16 +261,23 @@ pub struct StepOutputs {
     pub fallback: Vec<f32>,
 }
 
-/// A live training run: owns the param/optimizer state literals and the
-/// compiled step.
+enum TrainImpl {
+    /// Compiled step: owns the param/optimizer state literals.
+    Pjrt { exe: Rc<xla::PjRtLoadedExecutable>, state: Vec<xla::Literal> },
+    /// Host mirror: owns tensors; `param_lits` shadows the parameters
+    /// so `param_literals` serves the eval path, rebuilt lazily (the
+    /// stale flag keeps the per-step cost at zero when nothing reads
+    /// the literals between steps).
+    Host { trainer: HostTrainer, param_lits: Vec<xla::Literal>, lits_stale: bool },
+}
+
+/// A live training run: owns the model state and the step function.
 pub struct TrainSession {
-    exe: Rc<xla::PjRtLoadedExecutable>,
+    imp: TrainImpl,
     pub num_params: usize,
     pub stats_len: usize,
     pub batch: usize,
     pub seq: usize,
-    /// params ++ m ++ v, in canonical order.
-    state: Vec<xla::Literal>,
     step: u64,
 }
 
@@ -187,30 +285,41 @@ impl TrainSession {
     /// Run one optimizer step on a token batch.
     pub fn step(&mut self, tokens: &[i32], lr: f32, threshold: f32) -> Result<StepOutputs> {
         let adam_t = (self.step + 1) as f32;
-        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
-        let toks = tokens_literal(tokens, self.batch, self.seq)?;
-        let t_lit = xla::Literal::scalar(adam_t);
-        let lr_lit = xla::Literal::scalar(lr);
-        let th_lit = xla::Literal::scalar(threshold);
-        inputs.push(&toks);
-        inputs.push(&t_lit);
-        inputs.push(&lr_lit);
-        inputs.push(&th_lit);
+        let out = match &mut self.imp {
+            TrainImpl::Host { trainer, lits_stale, .. } => {
+                let (loss, relerr, fallback) =
+                    trainer.step(tokens, self.batch, lr, threshold, adam_t)?;
+                *lits_stale = true;
+                StepOutputs { loss, relerr, fallback }
+            }
+            TrainImpl::Pjrt { exe, state } => {
+                let mut inputs: Vec<&xla::Literal> = state.iter().collect();
+                let toks = tokens_literal(tokens, self.batch, self.seq)?;
+                let t_lit = xla::Literal::scalar(adam_t);
+                let lr_lit = xla::Literal::scalar(lr);
+                let th_lit = xla::Literal::scalar(threshold);
+                inputs.push(&toks);
+                inputs.push(&t_lit);
+                inputs.push(&lr_lit);
+                inputs.push(&th_lit);
 
-        let result = self.exe.execute::<&xla::Literal>(&inputs)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let mut parts = tuple.to_tuple()?;
-        let expect = 3 * self.num_params + 3;
-        if parts.len() != expect {
-            bail!("train step returned {} outputs, expected {expect}", parts.len());
-        }
-        // Outputs: params ++ m ++ v ++ [loss, relerr, fallback].
-        let fallback = parts.pop().unwrap().to_vec::<f32>()?;
-        let relerr = parts.pop().unwrap().to_vec::<f32>()?;
-        let loss = parts.pop().unwrap().get_first_element::<f32>()?;
-        self.state = parts;
+                let result = exe.execute::<&xla::Literal>(&inputs)?;
+                let tuple = result[0][0].to_literal_sync()?;
+                let mut parts = tuple.to_tuple()?;
+                let expect = 3 * self.num_params + 3;
+                if parts.len() != expect {
+                    bail!("train step returned {} outputs, expected {expect}", parts.len());
+                }
+                // Outputs: params ++ m ++ v ++ [loss, relerr, fallback].
+                let fallback = parts.pop().unwrap().to_vec::<f32>()?;
+                let relerr = parts.pop().unwrap().to_vec::<f32>()?;
+                let loss = parts.pop().unwrap().get_first_element::<f32>()?;
+                *state = parts;
+                StepOutputs { loss, relerr, fallback }
+            }
+        };
         self.step += 1;
-        Ok(StepOutputs { loss, relerr, fallback })
+        Ok(out)
     }
 
     pub fn steps_taken(&self) -> u64 {
@@ -220,12 +329,34 @@ impl TrainSession {
     /// Copy the current parameters to host tensors (for checkpoints,
     /// eval, and the param-norm metric).
     pub fn params(&self) -> Result<Vec<Tensor>> {
-        self.state[..self.num_params].iter().map(literal_to_tensor).collect()
+        match &self.imp {
+            TrainImpl::Host { trainer, .. } => Ok(trainer.params.clone()),
+            TrainImpl::Pjrt { state, .. } => {
+                state[..self.num_params].iter().map(literal_to_tensor).collect()
+            }
+        }
     }
 
-    /// Borrow the parameter literals (zero-copy path for eval).
-    pub fn param_literals(&self) -> &[xla::Literal] {
-        &self.state[..self.num_params]
+    /// Borrow the parameter literals (the eval-path interchange). For
+    /// the host backend the shadow copy is rebuilt here, only when the
+    /// parameters changed since the last call.
+    pub fn param_literals(&mut self) -> &[xla::Literal] {
+        match &mut self.imp {
+            TrainImpl::Host { trainer, param_lits, lits_stale } => {
+                if *lits_stale {
+                    *param_lits = trainer
+                        .params
+                        .iter()
+                        .map(|t| {
+                            tensor_to_literal(t).expect("param tensors are well-shaped")
+                        })
+                        .collect();
+                    *lits_stale = false;
+                }
+                &param_lits[..]
+            }
+            TrainImpl::Pjrt { state, .. } => &state[..self.num_params],
+        }
     }
 
     /// Global parameter L2 norm (Figures 5/6/8/20 bottom panel).
@@ -243,8 +374,16 @@ impl TrainSession {
         if params.len() != self.num_params {
             bail!("expected {} params, got {}", self.num_params, params.len());
         }
-        for (i, t) in params.iter().enumerate() {
-            self.state[i] = tensor_to_literal(t)?;
+        match &mut self.imp {
+            TrainImpl::Host { trainer, lits_stale, .. } => {
+                trainer.params = params.to_vec();
+                *lits_stale = true;
+            }
+            TrainImpl::Pjrt { state, .. } => {
+                for (i, t) in params.iter().enumerate() {
+                    state[i] = tensor_to_literal(t)?;
+                }
+            }
         }
         Ok(())
     }
@@ -254,9 +393,14 @@ impl TrainSession {
     }
 }
 
+enum EvalImpl {
+    Pjrt(Rc<xla::PjRtLoadedExecutable>),
+    Host(ModelConfig),
+}
+
 /// Masked-eval session: loss + next-token accuracy over masked positions.
 pub struct EvalSession {
-    exe: Rc<xla::PjRtLoadedExecutable>,
+    imp: EvalImpl,
     pub batch: usize,
     pub seq: usize,
     pub num_params: usize,
@@ -273,28 +417,42 @@ impl EvalSession {
         if params.len() != self.num_params {
             bail!("expected {} params, got {}", self.num_params, params.len());
         }
-        let toks = tokens_literal(tokens, self.batch, self.seq)?;
-        let mask_lit =
-            xla::Literal::vec1(mask).reshape(&[self.batch as i64, self.seq as i64])?;
-        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
-        inputs.push(&toks);
-        inputs.push(&mask_lit);
-        let result = self.exe.execute::<&xla::Literal>(&inputs)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        if parts.len() != 2 {
-            bail!("eval step returned {} outputs, expected 2", parts.len());
+        match &self.imp {
+            EvalImpl::Host(model) => {
+                let tensors: Vec<Tensor> =
+                    params.iter().map(literal_to_tensor).collect::<Result<Vec<_>>>()?;
+                host_eval(model, &tensors, tokens, mask, self.batch)
+            }
+            EvalImpl::Pjrt(exe) => {
+                let toks = tokens_literal(tokens, self.batch, self.seq)?;
+                let mask_lit =
+                    xla::Literal::vec1(mask).reshape(&[self.batch as i64, self.seq as i64])?;
+                let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+                inputs.push(&toks);
+                inputs.push(&mask_lit);
+                let result = exe.execute::<&xla::Literal>(&inputs)?;
+                let tuple = result[0][0].to_literal_sync()?;
+                let parts = tuple.to_tuple()?;
+                if parts.len() != 2 {
+                    bail!("eval step returned {} outputs, expected 2", parts.len());
+                }
+                let loss = parts[0].get_first_element::<f32>()?;
+                let acc = parts[1].get_first_element::<f32>()?;
+                Ok((loss, acc))
+            }
         }
-        let loss = parts[0].get_first_element::<f32>()?;
-        let acc = parts[1].get_first_element::<f32>()?;
-        Ok((loss, acc))
     }
+}
+
+enum QuantImpl {
+    Pjrt(Rc<xla::PjRtLoadedExecutable>),
+    Host { fmt: ReprType, partition: Partition, scaling: ScalingAlgo },
 }
 
 /// Standalone quant-kernel session (cross-validation + benches): input
 /// one `[rows, cols]` tensor, output (qdq tensor, global relerr).
 pub struct QuantSession {
-    exe: Rc<xla::PjRtLoadedExecutable>,
+    imp: QuantImpl,
     pub rows: usize,
     pub cols: usize,
 }
@@ -302,16 +460,23 @@ pub struct QuantSession {
 impl QuantSession {
     pub fn run(&self, x: &Tensor) -> Result<(Tensor, f32)> {
         assert_eq!(x.shape(), &[self.rows, self.cols], "quant kernel shape mismatch");
-        let lit = tensor_to_literal(x)?;
-        let result = self.exe.execute::<&xla::Literal>(&[&lit])?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        if parts.len() != 2 {
-            bail!("quant kernel returned {} outputs, expected 2", parts.len());
+        match &self.imp {
+            QuantImpl::Host { fmt, partition, scaling } => {
+                Ok(host_quant(x, *fmt, *partition, *scaling))
+            }
+            QuantImpl::Pjrt(exe) => {
+                let lit = tensor_to_literal(x)?;
+                let result = exe.execute::<&xla::Literal>(&[&lit])?;
+                let tuple = result[0][0].to_literal_sync()?;
+                let parts = tuple.to_tuple()?;
+                if parts.len() != 2 {
+                    bail!("quant kernel returned {} outputs, expected 2", parts.len());
+                }
+                let out = literal_to_tensor(&parts[0])?;
+                let relerr = parts[1].get_first_element::<f32>()?;
+                Ok((out, relerr))
+            }
         }
-        let out = literal_to_tensor(&parts[0])?;
-        let relerr = parts[1].get_first_element::<f32>()?;
-        Ok((out, relerr))
     }
 }
 
@@ -332,6 +497,57 @@ mod tests {
         let std =
             (e.data().iter().map(|v| v * v).sum::<f32>() / e.len() as f32).sqrt();
         assert!((std - 0.02).abs() < 0.003, "std={std}");
+    }
+
+    #[test]
+    fn host_runtime_serves_all_session_kinds() {
+        let rt = Runtime::host(ModelConfig::TINY);
+        assert!(rt.is_host());
+        assert!(rt.manifest.check_model(&ModelConfig::TINY).is_ok());
+        let mut s = rt.train_session("train_baseline", 5).unwrap();
+        assert_eq!(s.stats_len, QuantTensorId::count(&ModelConfig::TINY));
+        let tokens = vec![1i32; s.batch * s.seq];
+        let out = s.step(&tokens, 1e-3, 0.045).unwrap();
+        assert!(out.loss.is_finite());
+        assert_eq!(s.steps_taken(), 1);
+        assert_eq!(out.relerr.len(), s.stats_len);
+
+        let ev = rt.eval_session("eval").unwrap();
+        let mask = crate::coordinator::trainer::full_mask(ev.batch, ev.seq);
+        let toks = vec![2i32; ev.batch * ev.seq];
+        let (loss, acc) = ev.eval(s.param_literals(), &toks, &mask).unwrap();
+        assert!(loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+
+        let qs = rt.quant_session("quant_e4m3_gam_block128").unwrap();
+        let x = Tensor::normal(&[qs.rows, qs.cols], 1.0, 9);
+        let (qx, relerr) = qs.run(&x).unwrap();
+        assert_eq!(qx.shape(), x.shape());
+        assert!(relerr > 0.0 && relerr < 0.1);
+    }
+
+    #[test]
+    fn host_session_param_roundtrip() {
+        let rt = Runtime::host(ModelConfig::TINY);
+        let mut s = rt.train_session("train_baseline", 1).unwrap();
+        let params = s.params().unwrap();
+        assert_eq!(params.len(), s.num_params);
+        assert_eq!(s.param_literals().len(), s.num_params);
+        let n0 = s.param_norm().unwrap();
+        s.set_params(&params).unwrap();
+        let n1 = s.param_norm().unwrap();
+        assert_eq!(n0, n1);
+        // Wrong arity is rejected.
+        assert!(s.set_params(&params[..1]).is_err());
+    }
+
+    #[test]
+    fn host_runtime_rejects_unknown_and_kind_mismatch() {
+        let rt = Runtime::host(ModelConfig::TINY);
+        assert!(rt.train_session("nope", 1).is_err());
+        assert!(rt.train_session("eval", 1).is_err());
+        assert!(rt.eval_session("train_baseline").is_err());
+        assert!(rt.executable("train_baseline").is_err());
     }
 
     // PJRT-dependent paths are covered by rust/tests/integration_*.rs

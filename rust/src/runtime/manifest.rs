@@ -175,6 +175,102 @@ impl Manifest {
             })
     }
 
+    /// Synthetic manifest for the host execution backend: the standard
+    /// train/eval/quant artifact set with the recipe fields the AOT
+    /// writer would embed, but no HLO files — `Runtime::host` executes
+    /// these via `runtime::host` instead of PJRT.
+    pub fn host_synthetic(m: &ModelConfig) -> Manifest {
+        // Batch size of the synthetic host artifacts matches the tiny
+        // AOT artifacts so tests/benches behave alike on both paths.
+        const HOST_BATCH: usize = 8;
+        const QUANT_ROWS: usize = 256;
+        const QUANT_COLS: usize = 256;
+
+        let mut model_fields = BTreeMap::new();
+        for (k, v) in [
+            ("vocab_size", m.vocab_size),
+            ("d_model", m.d_model),
+            ("n_layers", m.n_layers),
+            ("n_heads", m.n_heads),
+            ("d_ff", m.d_ff),
+            ("seq_len", m.seq_len),
+        ] {
+            model_fields.insert(k.to_string(), v);
+        }
+        let num_params = crate::model::naming::param_specs(m).len();
+        let stats_len = crate::model::naming::QuantTensorId::count(m);
+
+        let field =
+            |entries: &[(&str, String)]| -> BTreeMap<String, String> {
+                entries.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+            };
+        let train = |name: &str, recipe: &str, partition: &str, scaling: &str| ArtifactEntry {
+            name: name.to_string(),
+            file: PathBuf::from("<host>"),
+            kind: ArtifactKind::Train,
+            fields: field(&[
+                ("backend", "host".to_string()),
+                ("recipe", recipe.to_string()),
+                ("partition", partition.to_string()),
+                ("scaling", scaling.to_string()),
+                ("batch", HOST_BATCH.to_string()),
+                ("num_params", num_params.to_string()),
+                ("stats_len", stats_len.to_string()),
+            ]),
+        };
+        let mut artifacts = vec![
+            train("train_baseline", "baseline", "tensor", "gam"),
+            train("train_mor_tensor_block", "tensor_level", "block128x128", "gam"),
+            train("train_mor_tensor_block64", "tensor_level", "block64x64", "gam"),
+            train("train_mor_tensor_tensor", "tensor_level", "tensor", "gam"),
+            train("train_mor_tensor_channel", "tensor_level", "channel", "gam"),
+            train("train_mor_tensor_block_amax", "tensor_level", "block128x128", "amax"),
+            train("train_mor_tensor_block_e8m0", "tensor_level", "block128x128", "e8m0"),
+            train("train_mor_subtensor_two_way", "subtensor2", "block128x128", "gam"),
+            train("train_mor_subtensor_three_way", "subtensor3", "block128x128", "gam"),
+        ];
+        artifacts.push(ArtifactEntry {
+            name: "eval".to_string(),
+            file: PathBuf::from("<host>"),
+            kind: ArtifactKind::Eval,
+            fields: field(&[
+                ("backend", "host".to_string()),
+                ("batch", HOST_BATCH.to_string()),
+            ]),
+        });
+        for (name, format, partition, scaling) in [
+            ("quant_e4m3_gam_block128", "e4m3", "block128x128", "gam"),
+            ("quant_e4m3_gam_block64", "e4m3", "block64x64", "gam"),
+            ("quant_e4m3_gam_tensor", "e4m3", "tensor", "gam"),
+            ("quant_e4m3_gam_channel_rows", "e4m3", "channel_rows", "gam"),
+            ("quant_e4m3_gam_channel_cols", "e4m3", "channel_cols", "gam"),
+            ("quant_e4m3_amax_block128", "e4m3", "block128x128", "amax"),
+            ("quant_e4m3_e8m0_block128", "e4m3", "block128x128", "e8m0"),
+            ("quant_e5m2_gam_block128", "e5m2", "block128x128", "gam"),
+        ] {
+            artifacts.push(ArtifactEntry {
+                name: name.to_string(),
+                file: PathBuf::from("<host>"),
+                kind: ArtifactKind::Quant,
+                fields: field(&[
+                    ("backend", "host".to_string()),
+                    ("format", format.to_string()),
+                    ("partition", partition.to_string()),
+                    ("scaling", scaling.to_string()),
+                    ("rows", QUANT_ROWS.to_string()),
+                    ("cols", QUANT_COLS.to_string()),
+                ]),
+            });
+        }
+        Manifest {
+            version: 1,
+            model_name: m.name.to_string(),
+            model_fields,
+            artifacts,
+            dir: PathBuf::from("."),
+        }
+    }
+
     /// Verify the manifest's embedded model dims match the Rust preset —
     /// the guard against ABI drift between the two languages.
     pub fn check_model(&self, m: &ModelConfig) -> Result<()> {

@@ -1,13 +1,17 @@
-//! PJRT runtime: loads the HLO-text artifacts produced by
-//! `python/compile/aot.py`, compiles them on the PJRT CPU client (the
-//! `xla` crate), and exposes typed session objects for the train/eval/
-//! quant ABIs.
+//! Runtime layer: typed train/eval/quant sessions over two backends.
 //!
-//! Python is never on this path: artifacts are plain HLO text files and
-//! the manifest is a plain text file; everything here is self-contained
-//! Rust + the PJRT C API.
+//! * **PJRT** ([`client`]): loads the HLO-text artifacts produced by
+//!   `python/compile/aot.py`, compiles them on the PJRT CPU client (the
+//!   `xla` crate), and executes them. Python is never on this path:
+//!   artifacts are plain HLO text files and the manifest is a plain
+//!   text file.
+//! * **Host** ([`host`]): a pure-Rust mirror of the compiled step —
+//!   transformer forward + manual backward + Adam + MoR telemetry on
+//!   the bit-exact host numerics, parallelized by the chunked engine.
+//!   [`Runtime::host`] needs no artifacts at all, which is what keeps
+//!   `cargo test` and the trainer smoke tests self-contained.
 //!
-//! ### Interchange notes (see /opt/xla-example/README.md)
+//! ### Interchange notes (PJRT path)
 //! * HLO **text** is the interchange format, not serialized protos
 //!   (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
 //!   rejects; the text parser reassigns ids).
@@ -17,7 +21,9 @@
 //!   is the unavoidable host↔device copy of the CPU PJRT client.
 
 pub mod client;
+pub mod host;
 pub mod manifest;
 
 pub use client::{EvalSession, QuantSession, Runtime, StepOutputs, TrainSession};
+pub use host::{HostQuant, HostTrainer};
 pub use manifest::{ArtifactEntry, ArtifactKind, Manifest};

@@ -21,9 +21,22 @@
 
 use super::{BlockScale, GroupScales, ScalingAlgo};
 use crate::formats::e8m0::{exp2i, frexp1, E8M0};
+use crate::util::par::{self, Parallelism};
 
-/// Run Algorithm 1 for one group.
+/// Run Algorithm 1 for one group (serial).
 pub fn compute(q_amax: f32, group_amax: f32, block_amaxes: &[f32]) -> GroupScales {
+    compute_with(q_amax, group_amax, block_amaxes, Parallelism::serial())
+}
+
+/// Run Algorithm 1 for one group, chunking the per-block map across
+/// workers. Block scales are mutually independent given `m_g`, so the
+/// result is bit-identical to the serial path.
+pub fn compute_with(
+    q_amax: f32,
+    group_amax: f32,
+    block_amaxes: &[f32],
+    cfg: Parallelism,
+) -> GroupScales {
     if group_amax == 0.0 || !group_amax.is_finite() {
         // Degenerate group (all zeros): identity scales throughout.
         return GroupScales {
@@ -34,19 +47,17 @@ pub fn compute(q_amax: f32, group_amax: f32, block_amaxes: &[f32]) -> GroupScale
     }
     let s_g = q_amax / group_amax;
     let (m_g, _e_g) = frexp1(s_g);
-    let blocks = block_amaxes
-        .iter()
-        .map(|&ba| {
-            if ba == 0.0 || !ba.is_finite() {
-                return BlockScale::IDENTITY;
-            }
-            let s_b = q_amax / ba;
-            let (m_b, e_b) = frexp1(s_b);
-            let e = if m_g <= m_b { e_b } else { e_b - 1 };
-            let stored = E8M0::from_exponent(e);
-            BlockScale { scale: m_g * stored.to_f32(), stored_exp: stored }
-        })
-        .collect();
+    let blocks = par::par_map(cfg, block_amaxes.len(), |i| {
+        let ba = block_amaxes[i];
+        if ba == 0.0 || !ba.is_finite() {
+            return BlockScale::IDENTITY;
+        }
+        let s_b = q_amax / ba;
+        let (m_b, e_b) = frexp1(s_b);
+        let e = if m_g <= m_b { e_b } else { e_b - 1 };
+        let stored = E8M0::from_exponent(e);
+        BlockScale { scale: m_g * stored.to_f32(), stored_exp: stored }
+    });
     GroupScales { group_mantissa: m_g, blocks, algo: ScalingAlgo::Gam }
 }
 

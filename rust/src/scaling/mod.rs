@@ -22,6 +22,7 @@ pub mod delayed;
 pub mod gam;
 
 use crate::formats::e8m0::{floor_log2, E8M0};
+use crate::util::par::{self, Parallelism};
 
 /// Which scale-factor algorithm to use (CLI/manifest name in comments).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -99,7 +100,8 @@ impl GroupScales {
     }
 }
 
-/// Compute per-block scales with the selected algorithm.
+/// Compute per-block scales with the selected algorithm, using the
+/// process-global [`Parallelism`].
 ///
 /// `q_amax` is the target format's max finite value, `group_amax` the
 /// amax over the whole group, `block_amaxes` the per-block amaxes
@@ -110,35 +112,48 @@ pub fn compute_scales(
     group_amax: f32,
     block_amaxes: &[f32],
 ) -> GroupScales {
+    compute_scales_with(algo, q_amax, group_amax, block_amaxes, par::global())
+}
+
+/// [`compute_scales`] with an explicit [`Parallelism`]. Per-block scale
+/// derivation is independent, so the block list is chunked across
+/// workers; results come back in block order and are bit-identical to
+/// the serial path.
+pub fn compute_scales_with(
+    algo: ScalingAlgo,
+    q_amax: f32,
+    group_amax: f32,
+    block_amaxes: &[f32],
+    cfg: Parallelism,
+) -> GroupScales {
+    // The per-block work is a handful of flops; only fan out for very
+    // large block lists.
+    let cfg = cfg.gate(block_amaxes.len());
     match algo {
-        ScalingAlgo::Gam => gam::compute(q_amax, group_amax, block_amaxes),
+        ScalingAlgo::Gam => gam::compute_with(q_amax, group_amax, block_amaxes, cfg),
         ScalingAlgo::AmaxFp32 => {
-            let blocks = block_amaxes
-                .iter()
-                .map(|&ba| {
-                    if ba == 0.0 || !ba.is_finite() {
-                        BlockScale::IDENTITY
-                    } else {
-                        let s = q_amax / ba;
-                        BlockScale { scale: s, stored_exp: E8M0::from_scale_floor(s) }
-                    }
-                })
-                .collect();
+            let blocks = par::par_map(cfg, block_amaxes.len(), |i| {
+                let ba = block_amaxes[i];
+                if ba == 0.0 || !ba.is_finite() {
+                    BlockScale::IDENTITY
+                } else {
+                    let s = q_amax / ba;
+                    BlockScale { scale: s, stored_exp: E8M0::from_scale_floor(s) }
+                }
+            });
             GroupScales { group_mantissa: f32::NAN, blocks, algo }
         }
         ScalingAlgo::E8M0 => {
-            let blocks = block_amaxes
-                .iter()
-                .map(|&ba| {
-                    if ba == 0.0 || !ba.is_finite() {
-                        BlockScale::IDENTITY
-                    } else {
-                        let e = floor_log2(q_amax / ba);
-                        let stored = E8M0::from_exponent(e);
-                        BlockScale { scale: stored.to_f32(), stored_exp: stored }
-                    }
-                })
-                .collect();
+            let blocks = par::par_map(cfg, block_amaxes.len(), |i| {
+                let ba = block_amaxes[i];
+                if ba == 0.0 || !ba.is_finite() {
+                    BlockScale::IDENTITY
+                } else {
+                    let e = floor_log2(q_amax / ba);
+                    let stored = E8M0::from_exponent(e);
+                    BlockScale { scale: stored.to_f32(), stored_exp: stored }
+                }
+            });
             GroupScales { group_mantissa: 1.0, blocks, algo }
         }
     }

@@ -7,78 +7,112 @@
 //! otherwise the lower-precision block is *upcast* to the higher type
 //! (E4M3/E5M2 → BF16) before multiplication — exactly the fallback the
 //! paper describes when no mixed-type hardware dot product exists.
+//!
+//! All four GEMMs parallelize over contiguous **row panels** of the
+//! output via [`crate::util::par`]. Each output element accumulates its
+//! k-products in ascending-k order on exactly one thread, so results
+//! are bit-identical to the serial path for any thread count (pinned by
+//! `rust/tests/parallel_equivalence.rs`).
 
 use super::Tensor;
 use crate::formats::ReprType;
+use crate::util::par::{self, Parallelism};
 
-/// Plain f32 GEMM: C = A @ B. Cache-blocked i-k-j loop order.
+/// Plain f32 GEMM: C = A @ B, parallel over output-row panels with the
+/// process-global [`Parallelism`].
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_with(a, b, par::global())
+}
+
+/// [`matmul`] with an explicit [`Parallelism`].
+pub fn matmul_with(a: &Tensor, b: &Tensor, cfg: Parallelism) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    for i in 0..m {
-        for kk in 0..k {
-            let aik = ad[i * k + kk];
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &bd[kk * n..kk * n + n];
-            let crow = &mut cd[i * n..i * n + n];
-            for j in 0..n {
-                crow[j] += aik * brow[j];
+    let cfg = cfg.gate(m * n);
+    let bounds = par::chunk_bounds(m, cfg.threads);
+    par::par_panels(&bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
+        for (ri, i) in (r0..r1).enumerate() {
+            for kk in 0..k {
+                let aik = ad[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bd[kk * n..kk * n + n];
+                let crow = &mut cd[ri * n..ri * n + n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
             }
         }
-    }
+    });
     c
 }
 
 /// C = A^T @ B without materializing the transpose.
 pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_tn_with(a, b, par::global())
+}
+
+/// [`matmul_tn`] with an explicit [`Parallelism`]. Per output element
+/// the contraction still runs in ascending-k order (the loop nest is
+/// output-row-major rather than the serial version's historical k-major
+/// order, which accumulates the identical per-element sequence).
+pub fn matmul_tn_with(a: &Tensor, b: &Tensor, cfg: Parallelism) -> Tensor {
     let (k, m) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2);
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    for kk in 0..k {
-        let arow = &ad[kk * m..kk * m + m];
-        let brow = &bd[kk * n..kk * n + n];
-        for i in 0..m {
-            let aik = arow[i];
-            if aik == 0.0 {
-                continue;
-            }
-            let crow = &mut cd[i * n..i * n + n];
-            for j in 0..n {
-                crow[j] += aik * brow[j];
+    let cfg = cfg.gate(m * n);
+    let bounds = par::chunk_bounds(m, cfg.threads);
+    par::par_panels(&bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
+        for (ri, i) in (r0..r1).enumerate() {
+            let crow = &mut cd[ri * n..ri * n + n];
+            for kk in 0..k {
+                let aik = ad[kk * m + i];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bd[kk * n..kk * n + n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
             }
         }
-    }
+    });
     c
 }
 
 /// C = A @ B^T.
 pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_nt_with(a, b, par::global())
+}
+
+/// [`matmul_nt`] with an explicit [`Parallelism`].
+pub fn matmul_nt_with(a: &Tensor, b: &Tensor, cfg: Parallelism) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (n, k2) = (b.rows(), b.cols());
     assert_eq!(k, k2);
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..i * k + k];
-        for j in 0..n {
-            let brow = &bd[j * k..j * k + k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
+    let cfg = cfg.gate(m * n);
+    let bounds = par::chunk_bounds(m, cfg.threads);
+    par::par_panels(&bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
+        for (ri, i) in (r0..r1).enumerate() {
+            let arow = &ad[i * k..i * k + k];
+            for j in 0..n {
+                let brow = &bd[j * k..j * k + k];
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                cd[ri * n + j] = acc;
             }
-            cd[i * n + j] = acc;
         }
-    }
+    });
     c
 }
 
@@ -132,41 +166,67 @@ pub struct MixedGemmReport {
 }
 
 pub fn mixed_gemm(a: &Tensor, ta: &BlockTypes, b: &Tensor, tb: &BlockTypes) -> MixedGemmReport {
+    mixed_gemm_with(a, ta, b, tb, par::global())
+}
+
+/// [`mixed_gemm`] with an explicit [`Parallelism`]: parallel over
+/// block-row panels of the output (each worker owns whole block-rows,
+/// so accumulation order per element is the serial bk-then-k order).
+pub fn mixed_gemm_with(
+    a: &Tensor,
+    ta: &BlockTypes,
+    b: &Tensor,
+    tb: &BlockTypes,
+    cfg: Parallelism,
+) -> MixedGemmReport {
     assert_eq!(ta.block, tb.block, "operand partitions must agree on K");
     let blk = ta.block;
     let (m, k) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2);
     let mut out = Tensor::zeros(&[m, n]);
-    let mut macs = [0u64; 4];
     let (ad, bd) = (a.data(), b.data());
-    let od = out.data_mut();
-    for bi in 0..m.div_ceil(blk) {
-        for bj in 0..n.div_ceil(blk) {
-            for bk in 0..k.div_ceil(blk) {
-                let t = effective_gemm_type(ta.type_of(bi, bk), tb.type_of(bk, bj));
-                let (i0, i1) = (bi * blk, ((bi + 1) * blk).min(m));
-                let (j0, j1) = (bj * blk, ((bj + 1) * blk).min(n));
-                let (k0, k1) = (bk * blk, ((bk + 1) * blk).min(k));
-                let idx = match t {
-                    ReprType::E4M3 => 0,
-                    ReprType::E5M2 => 1,
-                    ReprType::Bf16 => 2,
-                    ReprType::NvFp4 => 3,
-                };
-                macs[idx] += ((i1 - i0) * (j1 - j0) * (k1 - k0)) as u64;
-                for i in i0..i1 {
-                    for kk in k0..k1 {
-                        let aik = ad[i * k + kk];
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        for j in j0..j1 {
-                            od[i * n + j] += aik * bd[kk * n + j];
+    let n_bi = m.div_ceil(blk);
+    let cfg = cfg.gate(m * n);
+    let bounds = par::unit_panel_bounds(n_bi, blk, m, cfg.threads);
+    let panel_macs: Vec<[u64; 4]> =
+        par::par_panels(&bounds, n, out.data_mut(), |_pi, (row0, row1), od| {
+            let mut macs = [0u64; 4];
+            for bi in row0 / blk..row1.div_ceil(blk) {
+                for bj in 0..n.div_ceil(blk) {
+                    for bk in 0..k.div_ceil(blk) {
+                        let t = effective_gemm_type(ta.type_of(bi, bk), tb.type_of(bk, bj));
+                        let (i0, i1) = (bi * blk, ((bi + 1) * blk).min(m));
+                        let (j0, j1) = (bj * blk, ((bj + 1) * blk).min(n));
+                        let (k0, k1) = (bk * blk, ((bk + 1) * blk).min(k));
+                        let idx = match t {
+                            ReprType::E4M3 => 0,
+                            ReprType::E5M2 => 1,
+                            ReprType::Bf16 => 2,
+                            ReprType::NvFp4 => 3,
+                        };
+                        macs[idx] += ((i1 - i0) * (j1 - j0) * (k1 - k0)) as u64;
+                        for i in i0..i1 {
+                            let orow = &mut od[(i - row0) * n..(i - row0) * n + n];
+                            for kk in k0..k1 {
+                                let aik = ad[i * k + kk];
+                                if aik == 0.0 {
+                                    continue;
+                                }
+                                for j in j0..j1 {
+                                    orow[j] += aik * bd[kk * n + j];
+                                }
+                            }
                         }
                     }
                 }
             }
+            macs
+        });
+    let mut macs = [0u64; 4];
+    for pm in panel_macs {
+        for (t, v) in macs.iter_mut().zip(pm.iter()) {
+            *t += v;
         }
     }
     MixedGemmReport { out, macs }

@@ -1,0 +1,319 @@
+//! Parallel chunked execution engine for the quantization/analysis
+//! pipeline: a std-only scoped-thread worker layer with **deterministic
+//! block-order chunking**.
+//!
+//! Design contract, relied on by every caller and enforced by
+//! `rust/tests/parallel_equivalence.rs`: results are **bit-identical to
+//! the serial path** regardless of thread count. The primitives only
+//! split *independent* work items (partition blocks, GEMM row panels,
+//! tensors of a sweep) across threads; all reductions (error-accumulator
+//! merges, MAC counters) happen on the caller side in canonical item
+//! order after the parallel section. Floating-point evaluation order per
+//! output element therefore never changes.
+//!
+//! Work distribution is static: item range `0..n` is cut into at most
+//! `threads` contiguous chunks. No work stealing, no locks on the hot
+//! path, no allocation inside workers beyond their own result vectors.
+
+use std::marker::PhantomData;
+use std::sync::Mutex;
+
+/// Elements below which tensor-granularity operations stay serial (the
+/// "min-block-size cutoff": spawning threads for a 64x64 tensor costs
+/// more than the quantization itself).
+pub const DEFAULT_MIN_ITEMS: usize = 8192;
+
+/// Parallelism configuration: worker count plus the serial cutoff.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Number of worker threads (1 = serial).
+    pub threads: usize,
+    /// Workloads smaller than this many items run serially even when
+    /// `threads > 1`.
+    pub min_items: usize,
+}
+
+impl Parallelism {
+    /// Strictly serial execution.
+    pub fn serial() -> Parallelism {
+        Parallelism { threads: 1, min_items: usize::MAX }
+    }
+
+    /// `n` worker threads with the default serial cutoff.
+    pub fn with_threads(n: usize) -> Parallelism {
+        Parallelism { threads: n.max(1), min_items: DEFAULT_MIN_ITEMS }
+    }
+
+    /// Autodetect: `MOR_THREADS` env override, else the machine's
+    /// available parallelism.
+    pub fn auto() -> Parallelism {
+        let threads = std::env::var("MOR_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|n| *n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        Parallelism::with_threads(threads)
+    }
+
+    /// Whether a workload of `items` units is worth fanning out.
+    pub fn should_parallelize(&self, items: usize) -> bool {
+        self.threads > 1 && items >= self.min_items
+    }
+
+    /// This config with the serial cutoff applied for an `items`-sized
+    /// workload: unchanged when large enough, serial otherwise.
+    pub fn gate(&self, items: usize) -> Parallelism {
+        if self.should_parallelize(items) {
+            *self
+        } else {
+            Parallelism::serial()
+        }
+    }
+}
+
+static GLOBAL: Mutex<Option<Parallelism>> = Mutex::new(None);
+
+/// Process-wide default parallelism, used by the public hot-path entry
+/// points (`fake_quantize`, `matmul`, `Recipe::apply`, ...). Lazily
+/// initialized to [`Parallelism::auto`].
+pub fn global() -> Parallelism {
+    let mut g = GLOBAL.lock().unwrap();
+    *g.get_or_insert_with(Parallelism::auto)
+}
+
+/// Override the process-wide default (CLI `--threads`, benches, tests).
+pub fn set_global(p: Parallelism) {
+    *GLOBAL.lock().unwrap() = Some(p);
+}
+
+/// Contiguous chunk boundaries covering `0..n` with at most `parts`
+/// chunks, every chunk non-empty. Deterministic for given (n, parts).
+pub fn chunk_bounds(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let chunk = n.div_ceil(parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Map `f` over `0..n`, returning results in index order. Chunks are
+/// contiguous, so the concatenation order is independent of scheduling.
+pub fn par_map<R, F>(cfg: Parallelism, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if cfg.threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let bounds = chunk_bounds(n, cfg.threads);
+    let chunks: Vec<Vec<R>> = std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = bounds
+            .iter()
+            .map(|&(lo, hi)| s.spawn(move || (lo..hi).map(f).collect::<Vec<R>>()))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("mor worker thread panicked"))
+            .collect()
+    });
+    chunks.into_iter().flatten().collect()
+}
+
+/// Run `f` once per panel over disjoint contiguous row-panels of `out`
+/// (row-major, rows of `row_size` elements), returning the per-panel
+/// results in panel order. `bounds` must be ascending, non-overlapping
+/// and exactly cover `out.len() / row_size` rows. Panel `i` receives
+/// `(i, (row_lo, row_hi), &mut out[row_lo*row_size .. row_hi*row_size])`.
+pub fn par_panels<R, F>(
+    bounds: &[(usize, usize)],
+    row_size: usize,
+    out: &mut [f32],
+    f: F,
+) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, (usize, usize), &mut [f32]) -> R + Sync,
+{
+    debug_assert_eq!(
+        bounds.last().map(|b| b.1 * row_size).unwrap_or(0),
+        out.len(),
+        "panel bounds must cover the output"
+    );
+    if bounds.len() <= 1 {
+        return bounds
+            .iter()
+            .map(|&(r0, r1)| f(0, (r0, r1), &mut out[r0 * row_size..r1 * row_size]))
+            .collect();
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest: &mut [f32] = out;
+        let mut handles = Vec::with_capacity(bounds.len());
+        for (pi, &(r0, r1)) in bounds.iter().enumerate() {
+            let (panel, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * row_size);
+            rest = tail;
+            handles.push(s.spawn(move || f(pi, (r0, r1), panel)));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("mor worker thread panicked"))
+            .collect()
+    })
+}
+
+/// A shared view over a mutable slice for writes to **provably disjoint
+/// index sets** from worker threads — the write sink for partition
+/// blocks, whose regions interleave row fragments and cannot be split
+/// into contiguous panels.
+///
+/// Safety contract (callers): no index is written by more than one
+/// concurrent closure, and the slice is not read until the parallel
+/// section completes. Partition disjointness is exactly the
+/// `prop_blocks_tile_exactly` invariant in `quant::partition`.
+pub struct DisjointWriter<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for DisjointWriter<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointWriter<'_, T> {}
+
+impl<'a, T> DisjointWriter<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        DisjointWriter { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// `i < len`, and no concurrent write to the same `i`.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) = v };
+    }
+}
+
+/// Convenience: chunk boundaries in *row* space for panels aligned to
+/// `unit` rows (GEMM block-row panels): units `0..n_units` are chunked,
+/// then converted to row ranges capped at `rows`.
+pub fn unit_panel_bounds(n_units: usize, unit: usize, rows: usize, parts: usize) -> Vec<(usize, usize)> {
+    chunk_bounds(n_units, parts)
+        .into_iter()
+        .map(|(u0, u1)| (u0 * unit, (u1 * unit).min(rows)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_bounds_cover_exactly() {
+        for n in [0usize, 1, 2, 7, 16, 1000] {
+            for parts in [1usize, 2, 3, 8, 64] {
+                let b = chunk_bounds(n, parts);
+                if n == 0 {
+                    assert!(b.is_empty());
+                    continue;
+                }
+                assert!(b.len() <= parts.max(1));
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b.last().unwrap().1, n);
+                for w in b.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+                assert!(b.iter().all(|(lo, hi)| lo < hi));
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let cfg = Parallelism { threads: 4, min_items: 1 };
+        let out = par_map(cfg, 100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        let serial = par_map(Parallelism::serial(), 100, |i| i * i);
+        assert_eq!(out, serial);
+    }
+
+    #[test]
+    fn par_panels_writes_disjoint_rows() {
+        let mut out = vec![0.0f32; 10 * 4];
+        let bounds = chunk_bounds(10, 3);
+        let sums = par_panels(&bounds, 4, &mut out, |_pi, (r0, r1), panel| {
+            for (ri, r) in (r0..r1).enumerate() {
+                for c in 0..4 {
+                    panel[ri * 4 + c] = (r * 4 + c) as f32;
+                }
+            }
+            r1 - r0
+        });
+        assert_eq!(sums.iter().sum::<usize>(), 10);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn disjoint_writer_from_threads() {
+        let mut data = vec![0u64; 1000];
+        {
+            let w = DisjointWriter::new(&mut data);
+            let cfg = Parallelism { threads: 8, min_items: 1 };
+            par_map(cfg, 1000, |i| unsafe { w.write(i, i as u64 + 1) });
+        }
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn gate_applies_cutoff() {
+        let cfg = Parallelism { threads: 8, min_items: 100 };
+        assert_eq!(cfg.gate(99), Parallelism::serial());
+        assert_eq!(cfg.gate(100), cfg);
+        assert!(!Parallelism::serial().should_parallelize(usize::MAX));
+        assert!(Parallelism::with_threads(1).threads == 1);
+    }
+
+    #[test]
+    fn unit_panels_cap_ragged_rows() {
+        // 3 block-rows of 4 rows each over 10 total rows.
+        let b = unit_panel_bounds(3, 4, 10, 2);
+        assert_eq!(b.last().unwrap().1, 10);
+        assert_eq!(b[0].0, 0);
+        let total: usize = b.iter().map(|(lo, hi)| hi - lo).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn global_settable() {
+        // Note: global state; only assert set/get coherence.
+        set_global(Parallelism { threads: 3, min_items: 7 });
+        assert_eq!(global().threads, 3);
+        set_global(Parallelism::auto());
+        assert!(global().threads >= 1);
+    }
+}

@@ -1,0 +1,195 @@
+//! Golden-vector format tests: exhaustive 256-bit-pattern round trips
+//! for both FP8 formats (encode/decode/quantize_dequantize including
+//! saturation and NaN behavior), the bf16 golden table generated from
+//! `ml_dtypes.bfloat16`, and E2M1/NVFP4 edge-case vectors. These run
+//! with no artifacts — they pin the host codecs to the reference
+//! converter bit-for-bit. Regenerate the tables with
+//! `python3 tests/golden/gen_golden.py`.
+
+use mor::formats::bf16::{self, Bf16};
+use mor::formats::fp4::{self, E2M1_GRID, E2M1_MAX};
+use mor::formats::fp8::{Fp8Format, Rounding, E4M3, E5M2};
+
+/// Decode all 256 byte patterns, re-encode each decoded value, and
+/// require the original byte back (modulo NaN canonicalization and the
+/// sign of zero for redundant encodings — neither format has redundant
+/// non-NaN encodings, so only NaN needs the special case).
+fn exhaustive_roundtrip<F: Fp8Format>() {
+    for b in 0u16..=255 {
+        let b = b as u8;
+        let v = F::decode(b);
+        if v.is_nan() {
+            assert!(F::decode(F::encode(v)).is_nan(), "{}: NaN byte {b:#04x}", F::NAME);
+            continue;
+        }
+        if v.is_infinite() {
+            // Only E5M2 has Inf encodings: NanOnOverflow preserves them,
+            // Saturate clamps to ±MAX by design.
+            assert_eq!(F::decode(F::encode_with(v, Rounding::NanOnOverflow)), v);
+            assert_eq!(
+                F::decode(F::encode_with(v, Rounding::Saturate)),
+                v.signum() * F::MAX,
+                "{}: Inf byte {b:#04x} must saturate to ±MAX",
+                F::NAME
+            );
+            continue;
+        }
+        for mode in [Rounding::NanOnOverflow, Rounding::Saturate] {
+            let e = F::encode_with(v, mode);
+            assert_eq!(
+                F::decode(e),
+                v,
+                "{}: byte {b:#04x} decodes to {v}, re-encodes to {e:#04x} ({mode:?})",
+                F::NAME
+            );
+        }
+        // quantize_dequantize must be exact on representable values.
+        assert_eq!(F::quantize_dequantize(v, Rounding::Saturate), v, "{} qdq {b:#04x}", F::NAME);
+    }
+}
+
+#[test]
+fn e4m3_exhaustive_256_patterns() {
+    exhaustive_roundtrip::<E4M3>();
+}
+
+#[test]
+fn e5m2_exhaustive_256_patterns() {
+    exhaustive_roundtrip::<E5M2>();
+}
+
+#[test]
+fn e4m3_saturation_and_nan_behavior() {
+    // Above max: NaN in ml_dtypes mode, clamp in saturate mode.
+    for x in [449.0f32, 1e9, f32::INFINITY] {
+        assert!(E4M3::quantize_dequantize(x, Rounding::NanOnOverflow).is_nan(), "x={x}");
+        assert_eq!(E4M3::quantize_dequantize(x, Rounding::Saturate), 448.0, "x={x}");
+        assert_eq!(E4M3::quantize_dequantize(-x, Rounding::Saturate), -448.0, "x={x}");
+    }
+    // NaN input encodes to the canonical NaN byte in both modes.
+    for mode in [Rounding::NanOnOverflow, Rounding::Saturate] {
+        assert!(E4M3::decode(E4M3::encode_with(f32::NAN, mode)).is_nan());
+    }
+    // 448 itself survives; the RNE tie at 464 rounds back down to 448.
+    assert_eq!(E4M3::quantize_dequantize(448.0, Rounding::NanOnOverflow), 448.0);
+    assert_eq!(E4M3::quantize_dequantize(464.0, Rounding::NanOnOverflow), 448.0);
+}
+
+#[test]
+fn e5m2_saturation_inf_and_nan_behavior() {
+    // E5M2 has a real Inf: overflow goes to Inf in ml_dtypes mode.
+    assert!(E5M2::quantize_dequantize(1e6, Rounding::NanOnOverflow).is_infinite());
+    assert_eq!(E5M2::quantize_dequantize(1e6, Rounding::Saturate), 57344.0);
+    assert_eq!(E5M2::quantize_dequantize(-1e6, Rounding::Saturate), -57344.0);
+    assert!(E5M2::quantize_dequantize(f32::INFINITY, Rounding::NanOnOverflow).is_infinite());
+    assert_eq!(E5M2::quantize_dequantize(f32::INFINITY, Rounding::Saturate), 57344.0);
+    assert!(E5M2::decode(E5M2::encode(f32::NAN)).is_nan());
+    // Inf byte decodes to Inf with the right sign.
+    assert_eq!(E5M2::decode(0x7C), f32::INFINITY);
+    assert_eq!(E5M2::decode(0xFC), f32::NEG_INFINITY);
+}
+
+fn check_golden_fp8<F: Fp8Format>(path: &str) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("{path}: {e} (regenerate with tests/golden/gen_golden.py)"));
+    let mut checked = 0usize;
+    for line in text.lines() {
+        let (v, e) = line.split_once(' ').unwrap();
+        let bits = u32::from_str_radix(v, 16).unwrap();
+        let expect = u8::from_str_radix(e, 16).unwrap();
+        let x = f32::from_bits(bits);
+        let got = F::encode(x);
+        let (gd, ed) = (F::decode(got), F::decode(expect));
+        assert!(
+            got == expect || (gd.is_nan() && ed.is_nan()),
+            "{}: x={x} ({bits:08x}): ours {got:02x} ({gd}) vs ml_dtypes {expect:02x} ({ed})",
+            F::NAME
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 8000, "{path} must hold 8000 vectors");
+}
+
+#[test]
+fn fp8_e4m3_matches_ml_dtypes_golden() {
+    check_golden_fp8::<E4M3>("tests/golden/fp8_e4m3_golden.txt");
+}
+
+#[test]
+fn fp8_e5m2_matches_ml_dtypes_golden() {
+    check_golden_fp8::<E5M2>("tests/golden/fp8_e5m2_golden.txt");
+}
+
+#[test]
+fn bf16_matches_ml_dtypes_golden() {
+    let path = "tests/golden/bf16_golden.txt";
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("{path}: {e} (regenerate with tests/golden/gen_golden.py)"));
+    let mut checked = 0usize;
+    for line in text.lines() {
+        let (v, e) = line.split_once(' ').unwrap();
+        let bits = u32::from_str_radix(v, 16).unwrap();
+        let expect = u16::from_str_radix(e, 16).unwrap();
+        let x = f32::from_bits(bits);
+        let got = Bf16::from_f32(x).0;
+        let (gf, ef) = (Bf16(got).to_f32(), Bf16(expect).to_f32());
+        assert!(
+            got == expect || (gf.is_nan() && ef.is_nan()),
+            "bf16: x={x} ({bits:08x}): ours {got:04x} vs ml_dtypes {expect:04x}"
+        );
+        checked += 1;
+    }
+    assert_eq!(checked, 4000, "{path} must hold 4000 vectors");
+}
+
+#[test]
+fn bf16_edge_vectors() {
+    // Exact values survive; max finite is the documented constant.
+    for v in [0.0f32, -0.0, 1.0, -2.0, 448.0, 57344.0, bf16::MAX] {
+        assert_eq!(bf16::quantize_dequantize(v), v);
+    }
+    // Overflow → Inf; f32 subnormals round to (signed) zero.
+    assert!(bf16::quantize_dequantize(3.4e38).is_infinite());
+    assert_eq!(bf16::quantize_dequantize(1e-40), 0.0);
+    assert!(bf16::quantize_dequantize(-1e-40).is_sign_negative());
+    // RNE tie: 1 + 2^-8 is halfway between 1.0 and 1 + 2^-7 → even.
+    assert_eq!(bf16::quantize_dequantize(1.0 + f32::powi(2.0, -8)), 1.0);
+}
+
+#[test]
+fn e2m1_edge_vectors() {
+    // The full grid round-trips with both signs.
+    for (code, g) in E2M1_GRID.iter().enumerate() {
+        assert_eq!(fp4::e2m1_decode(code as u8), *g);
+        assert_eq!(fp4::e2m1_quantize_dequantize(*g), *g);
+        assert_eq!(fp4::e2m1_quantize_dequantize(-*g).abs(), *g);
+    }
+    // Saturation at ±6, nearest-grid rounding, ties to even code.
+    assert_eq!(fp4::e2m1_quantize_dequantize(1e9), E2M1_MAX);
+    assert_eq!(fp4::e2m1_quantize_dequantize(-1e9), -E2M1_MAX);
+    assert_eq!(fp4::e2m1_quantize_dequantize(2.5), 2.0); // tie → even code 4
+    assert_eq!(fp4::e2m1_quantize_dequantize(5.0), 4.0); // tie → even code 6
+    assert_eq!(fp4::e2m1_quantize_dequantize(0.25), 0.0); // tie → code 0
+    assert_eq!(fp4::e2m1_quantize_dequantize(0.26), 0.5);
+    assert_eq!(fp4::e2m1_quantize_dequantize(3.4), 3.0);
+    assert_eq!(fp4::e2m1_quantize_dequantize(3.6), 4.0);
+}
+
+#[test]
+fn nvfp4_block_pipeline_edges() {
+    // A 1x16 block with one dominant value: the scale maps it near
+    // E2M1_MAX and small same-block values flush toward zero. (The
+    // dominant value stays below E4M3_MAX * E2M1_MAX = 2688, the
+    // format's representable ceiling.)
+    let mut x = vec![0.01f32; 16];
+    x[3] = 2000.0;
+    let mut out = vec![0f32; 16];
+    fp4::nvfp4_quantize_dequantize(&x, &mut out);
+    assert!((out[3] - 2000.0).abs() / 2000.0 < 0.1, "dominant value kept: {}", out[3]);
+    assert_eq!(out[0], 0.0, "tiny co-block values flush");
+    // All-zero blocks pass through untouched.
+    let z = vec![0f32; 32];
+    let mut zo = vec![1f32; 32];
+    fp4::nvfp4_quantize_dequantize(&z, &mut zo);
+    assert_eq!(zo, z);
+}

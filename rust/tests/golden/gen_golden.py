@@ -1,0 +1,192 @@
+#!/usr/bin/env python3
+"""Regenerate the golden cross-validation vectors in this directory.
+
+Each line is `<f32 bits as %08x> <expected encoding as hex>`; the
+expected byte/word comes from `ml_dtypes` (the converter JAX uses), so
+the Rust codecs in `rust/src/formats/` are pinned to the reference
+implementation. Before writing, this script cross-checks a pure-Python
+port of the Rust encoding algorithm against ml_dtypes on every emitted
+value and aborts on any disagreement, so a stale ml_dtypes can never
+produce a silently-wrong golden file.
+
+Usage: python3 rust/tests/golden/gen_golden.py
+"""
+
+import os
+import struct
+
+import ml_dtypes
+import numpy as np
+
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", np.float32(x)))[0]
+
+
+def bits_f32(b):
+    return struct.unpack("<f", struct.pack("<I", b & 0xFFFFFFFF))[0]
+
+
+def encode_fp8_py(x, exp_bits, man_bits, bias, has_inf):
+    """Pure-Python port of rust/src/formats/fp8.rs encode_with
+    (NanOnOverflow mode)."""
+    bits = f32_bits(x)
+    sign = ((bits >> 31) & 1) << 7
+    exp_mask = (1 << exp_bits) - 1
+    man_mask = (1 << man_bits) - 1
+    xf = bits_f32(bits)
+
+    if np.isnan(xf):
+        if has_inf:
+            return sign | (exp_mask << man_bits) | (1 << (man_bits - 1))
+        return sign | (exp_mask << man_bits) | man_mask
+    if np.isinf(xf):
+        if has_inf:
+            return sign | (exp_mask << man_bits)
+        return sign | (exp_mask << man_bits) | man_mask  # NaN for e4m3
+
+    abs_bits = bits & 0x7FFFFFFF
+    if abs_bits == 0:
+        return sign
+    if abs_bits < 0x00800000:  # f32 subnormal: far below fp8 range
+        return sign
+
+    f32_exp = (abs_bits >> 23) - 127
+    min_norm_exp = 1 - bias
+    significand24 = (abs_bits & 0x007FFFFF) | 0x00800000
+    if f32_exp >= min_norm_exp:
+        drop = 23 - man_bits
+    else:
+        drop = 23 - man_bits + (min_norm_exp - f32_exp)
+    if drop >= 33:
+        return sign
+    staged = significand24 << 10
+    total_drop = drop + 10
+    keep = staged >> total_drop
+    round_bit = (staged >> (total_drop - 1)) & 1
+    sticky = (staged & ((1 << (total_drop - 1)) - 1)) != 0
+    rounded = keep + (1 if (round_bit and (sticky or (keep & 1) == 1)) else 0)
+
+    if f32_exp >= min_norm_exp:
+        exp = f32_exp
+        sig = rounded
+        if sig >= (1 << (man_bits + 1)):
+            sig >>= 1
+            exp += 1
+        e_fp8 = exp + bias
+        m_fp8 = sig & man_mask
+    else:
+        if rounded >= (1 << man_bits):
+            e_fp8 = 1
+            m_fp8 = rounded & man_mask
+        else:
+            e_fp8 = 0
+            m_fp8 = rounded
+
+    max_exp_field = exp_mask - 1 if has_inf else exp_mask
+    overflowed = e_fp8 > max_exp_field or (
+        not has_inf and e_fp8 == max_exp_field and m_fp8 == man_mask
+    )
+    if overflowed:
+        if has_inf:
+            return sign | (exp_mask << man_bits)  # Inf
+        return sign | (exp_mask << man_bits) | man_mask  # NaN
+    return sign | (e_fp8 << man_bits) | m_fp8
+
+
+def sample_values(rng, n):
+    """Random f32 values spanning normal, subnormal-range and overflow
+    cases for fp8, plus deterministic edge values."""
+    vals = []
+    # Log-uniform magnitudes covering well below fp8 subnormals up to
+    # well above both formats' max.
+    mags = np.exp(rng.uniform(np.log(1e-9), np.log(1e6), n - 64)).astype(np.float32)
+    signs = rng.choice([-1.0, 1.0], n - 64).astype(np.float32)
+    vals.extend((mags * signs).tolist())
+    edges = [
+        0.0, -0.0, 1.0, -1.0, 448.0, -448.0, 464.0, 465.0, 57344.0, -57344.0,
+        61440.0, 61441.0, 0.001953125, 0.0009765625, 1.52587890625e-5,
+        6.103515625e-5, 7.62939453125e-6, 2.0**-17, 2.0**-20, 3.4e38,
+        float("inf"), float("-inf"), 0.015625, 2.0**-6, 2.0**-14,
+        1.0625, 1.1875, 1.125, 1.375, 240.0, 239.0, 241.0,
+    ]
+    vals.extend(np.float32(v) for v in edges)
+    while len(vals) < n:
+        vals.append(np.float32(rng.normal() * 10.0))
+    return np.array(vals[:n], dtype=np.float32)
+
+
+def gen_fp8(path, dtype, exp_bits, man_bits, bias, has_inf, n=8000, seed=20260731):
+    rng = np.random.default_rng(seed)
+    vals = sample_values(rng, n)
+    expect = vals.astype(dtype).view(np.uint8)
+    mismatches = 0
+    lines = []
+    for v, e in zip(vals, expect):
+        b = f32_bits(v)
+        ours = encode_fp8_py(v, exp_bits, man_bits, bias, has_inf)
+        ours_d = np.array([ours], np.uint8).view(dtype)[0]
+        e_d = np.array([e], np.uint8).view(dtype)[0]
+        if ours != int(e) and not (np.isnan(float(ours_d)) and np.isnan(float(e_d))):
+            mismatches += 1
+            print(f"MISMATCH {path}: x={v} bits={b:08x} ours={ours:02x} ml_dtypes={int(e):02x}")
+        lines.append(f"{b:08x} {int(e):02x}")
+    assert mismatches == 0, f"{mismatches} mismatches vs ml_dtypes"
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path}: {len(lines)} vectors")
+
+
+def bf16_from_f32_py(x):
+    """Port of rust/src/formats/bf16.rs Bf16::from_f32."""
+    bits = f32_bits(x)
+    if np.isnan(bits_f32(bits)):
+        return ((bits >> 16) & 0xFFFF) | 0x0040
+    round_bit = (bits >> 15) & 1
+    sticky = bits & 0x7FFF
+    hi = (bits >> 16) & 0xFFFF
+    if round_bit == 1 and (sticky != 0 or (hi & 1) == 1):
+        hi = (hi + 1) & 0xFFFF
+    return hi
+
+
+def gen_bf16(path, n=4000, seed=20260731):
+    rng = np.random.default_rng(seed ^ 0xB16)
+    mags = np.exp(rng.uniform(np.log(1e-38), np.log(3.4e38), n - 16)).astype(np.float32)
+    signs = rng.choice([-1.0, 1.0], n - 16).astype(np.float32)
+    vals = list((mags * signs).tolist())
+    vals.extend(np.float32(v) for v in [
+        0.0, -0.0, 1.0, -1.0, 1.0 + 2.0**-8, 1.0 + 3 * 2.0**-8, 3.3895314e38,
+        3.4e38, float("inf"), float("-inf"), 2.0**-126, 1e-40, -1e-40,
+        65504.0, 57344.0, 448.0,
+    ])
+    vals = np.array(vals[:n], dtype=np.float32)
+    expect = vals.astype(ml_dtypes.bfloat16).view(np.uint16)
+    mismatches = 0
+    lines = []
+    for v, e in zip(vals, expect):
+        b = f32_bits(v)
+        ours = bf16_from_f32_py(v)
+        ours_f = np.array([ours], np.uint16).view(ml_dtypes.bfloat16)[0]
+        e_f = np.array([e], np.uint16).view(ml_dtypes.bfloat16)[0]
+        if ours != int(e) and not (np.isnan(float(ours_f)) and np.isnan(float(e_f))):
+            mismatches += 1
+            print(f"MISMATCH bf16: x={v} bits={b:08x} ours={ours:04x} ml_dtypes={int(e):04x}")
+        lines.append(f"{b:08x} {int(e):04x}")
+    assert mismatches == 0, f"{mismatches} bf16 mismatches vs ml_dtypes"
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {path}: {len(lines)} vectors")
+
+
+def main():
+    here = os.path.dirname(os.path.abspath(__file__))
+    gen_fp8(os.path.join(here, "fp8_e4m3_golden.txt"),
+            ml_dtypes.float8_e4m3fn, 4, 3, 7, False)
+    gen_fp8(os.path.join(here, "fp8_e5m2_golden.txt"),
+            ml_dtypes.float8_e5m2, 5, 2, 15, True)
+    gen_bf16(os.path.join(here, "bf16_golden.txt"))
+
+
+if __name__ == "__main__":
+    main()

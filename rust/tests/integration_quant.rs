@@ -150,7 +150,8 @@ fn quant_artifact_zero_tensor() {
 #[test]
 fn fp8_e4m3_encode_matches_ml_dtypes_golden() {
     use mor::formats::fp8::{Fp8Format, E4M3};
-    let text = std::fs::read_to_string("rust/tests/golden/fp8_e4m3_golden.txt").unwrap();
+    // cargo runs integration tests from the package root (rust/).
+    let text = std::fs::read_to_string("tests/golden/fp8_e4m3_golden.txt").unwrap();
     let mut checked = 0;
     for line in text.lines() {
         let (v, e) = line.split_once(' ').unwrap();
@@ -171,7 +172,7 @@ fn fp8_e4m3_encode_matches_ml_dtypes_golden() {
 #[test]
 fn fp8_e5m2_encode_matches_ml_dtypes_golden() {
     use mor::formats::fp8::{Fp8Format, E5M2};
-    let text = std::fs::read_to_string("rust/tests/golden/fp8_e5m2_golden.txt").unwrap();
+    let text = std::fs::read_to_string("tests/golden/fp8_e5m2_golden.txt").unwrap();
     for line in text.lines() {
         let (v, e) = line.split_once(' ').unwrap();
         let bits = u32::from_str_radix(v, 16).unwrap();

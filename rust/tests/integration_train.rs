@@ -99,7 +99,7 @@ fn subtensor_fallback_is_fractional() {
 #[test]
 fn eval_session_and_suite_run() {
     let Some(rt) = runtime() else { return };
-    let s = rt.train_session("train_baseline", 3).unwrap();
+    let mut s = rt.train_session("train_baseline", 3).unwrap();
     let ev = rt.eval_session("eval").unwrap();
     let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, ev.batch, ev.seq, 3, 1);
     let b = loader.next_batch();

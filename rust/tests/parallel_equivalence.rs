@@ -1,0 +1,210 @@
+//! The parallel engine's correctness contract: for any thread count,
+//! `fake_quantize`, `compute_scales`, all four GEMM paths and the
+//! recipe sweep produce results **bit-identical** to the serial path.
+//! Also pins `Histogram::bin_of` to the paper's 0.5%-wide bin edges.
+
+use mor::formats::ReprType;
+use mor::mor::recipes::{Recipe, RecipeKind, SubTensorMode};
+use mor::mor::stats::{Histogram, HIST_BINS};
+use mor::quant::fake_quant::fake_quantize_with;
+use mor::quant::partition::Partition;
+use mor::scaling::{compute_scales_with, ScalingAlgo};
+use mor::tensor::ops::{
+    matmul_nt_with, matmul_tn_with, matmul_with, mixed_gemm_with, BlockTypes,
+};
+use mor::tensor::Tensor;
+use mor::util::par::Parallelism;
+use mor::util::proptest::{prop, Gen};
+
+/// A worker pool with the serial cutoff disabled, so even tiny test
+/// tensors exercise the parallel path.
+fn pool(threads: usize) -> Parallelism {
+    Parallelism { threads, min_items: 1 }
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+fn random_tensor(g: &mut Gen, max_side: usize) -> Tensor {
+    let rows = g.usize_in(1, max_side);
+    let cols = g.usize_in(1, max_side);
+    let data = (0..rows * cols)
+        .map(|_| g.f32_in(-1.0, 1.0) * g.f32_log_uniform(1e-4, 1e3))
+        .collect();
+    Tensor::from_vec(&[rows, cols], data)
+}
+
+#[test]
+fn prop_fake_quantize_parallel_equals_serial() {
+    prop(120, |g: &mut Gen| {
+        let x = random_tensor(g, 40);
+        let t = *g.choose(&[ReprType::E4M3, ReprType::E5M2, ReprType::Bf16, ReprType::NvFp4]);
+        let (br, bc, sl) = (g.usize_in(1, 9), g.usize_in(1, 9), g.usize_in(1, 8));
+        let p = *g.choose(&[
+            Partition::Tensor,
+            Partition::Block { r: br, c: bc },
+            Partition::ChannelRows,
+            Partition::ChannelCols,
+            Partition::SubChannelRows { len: sl },
+        ]);
+        let s = *g.choose(&[ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0]);
+        let threads = g.usize_in(2, 8);
+
+        let serial = fake_quantize_with(&x, t, p, s, Parallelism::serial());
+        let parallel = fake_quantize_with(&x, t, p, s, pool(threads));
+
+        assert_bits_eq(serial.out.data(), parallel.out.data(), "fake_quantize out");
+        assert_eq!(serial.block_err, parallel.block_err, "block_err");
+        assert_eq!(serial.global_err, parallel.global_err, "global_err");
+        assert_eq!(serial.block_range, parallel.block_range, "block_range");
+        assert_eq!(serial.scales.blocks, parallel.scales.blocks, "scales");
+        assert_eq!(
+            serial.scales.group_mantissa.to_bits(),
+            parallel.scales.group_mantissa.to_bits(),
+            "group mantissa"
+        );
+        true
+    });
+}
+
+#[test]
+fn prop_compute_scales_parallel_equals_serial() {
+    prop(200, |g: &mut Gen| {
+        let n = g.usize_in(1, 600);
+        let group_amax = g.f32_log_uniform(1e-6, 1e6);
+        let amaxes: Vec<f32> = (0..n)
+            .map(|_| if g.f32() < 0.05 { 0.0 } else { group_amax * g.f32_in(1e-5, 1.0) })
+            .collect();
+        let algo = *g.choose(&[ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0]);
+        let threads = g.usize_in(2, 8);
+        let serial = compute_scales_with(algo, 448.0, group_amax, &amaxes, Parallelism::serial());
+        let parallel = compute_scales_with(algo, 448.0, group_amax, &amaxes, pool(threads));
+        assert_eq!(serial.blocks, parallel.blocks);
+        assert_eq!(
+            serial.group_mantissa.to_bits(),
+            parallel.group_mantissa.to_bits()
+        );
+        assert_eq!(serial.metadata_bits(), parallel.metadata_bits());
+        true
+    });
+}
+
+#[test]
+fn prop_gemms_parallel_equal_serial() {
+    prop(80, |g: &mut Gen| {
+        let m = g.usize_in(1, 33);
+        let k = g.usize_in(1, 33);
+        let n = g.usize_in(1, 33);
+        let a = Tensor::from_vec(&[m, k], (0..m * k).map(|_| g.f32_in(-2.0, 2.0)).collect());
+        let b = Tensor::from_vec(&[k, n], (0..k * n).map(|_| g.f32_in(-2.0, 2.0)).collect());
+        let threads = g.usize_in(2, 8);
+        let cfg = pool(threads);
+
+        let c_s = matmul_with(&a, &b, Parallelism::serial());
+        let c_p = matmul_with(&a, &b, cfg);
+        assert_bits_eq(c_s.data(), c_p.data(), "matmul");
+
+        let at = a.transpose();
+        let tn_s = matmul_tn_with(&at, &b, Parallelism::serial());
+        let tn_p = matmul_tn_with(&at, &b, cfg);
+        assert_bits_eq(tn_s.data(), tn_p.data(), "matmul_tn");
+
+        let bt = b.transpose();
+        let nt_s = matmul_nt_with(&a, &bt, Parallelism::serial());
+        let nt_p = matmul_nt_with(&a, &bt, cfg);
+        assert_bits_eq(nt_s.data(), nt_p.data(), "matmul_nt");
+        true
+    });
+}
+
+#[test]
+fn prop_mixed_gemm_parallel_equals_serial() {
+    prop(60, |g: &mut Gen| {
+        let m = g.usize_in(1, 40);
+        let k = g.usize_in(1, 40);
+        let n = g.usize_in(1, 40);
+        let blk = g.usize_in(1, 12);
+        let a = Tensor::from_vec(&[m, k], (0..m * k).map(|_| g.f32_in(-2.0, 2.0)).collect());
+        let b = Tensor::from_vec(&[k, n], (0..k * n).map(|_| g.f32_in(-2.0, 2.0)).collect());
+        let mut ta = BlockTypes::uniform(m, k, blk, ReprType::E4M3);
+        let mut tb = BlockTypes::uniform(k, n, blk, ReprType::E4M3);
+        for row in ta.grid.iter_mut() {
+            for t in row.iter_mut() {
+                *t = *g.choose(&[ReprType::E4M3, ReprType::E5M2, ReprType::Bf16, ReprType::NvFp4]);
+            }
+        }
+        for row in tb.grid.iter_mut() {
+            for t in row.iter_mut() {
+                *t = *g.choose(&[ReprType::E4M3, ReprType::E5M2, ReprType::Bf16, ReprType::NvFp4]);
+            }
+        }
+        let threads = g.usize_in(2, 8);
+        let serial = mixed_gemm_with(&a, &ta, &b, &tb, Parallelism::serial());
+        let parallel = mixed_gemm_with(&a, &ta, &b, &tb, pool(threads));
+        assert_bits_eq(serial.out.data(), parallel.out.data(), "mixed_gemm out");
+        assert_eq!(serial.macs, parallel.macs, "mixed_gemm macs");
+        true
+    });
+}
+
+#[test]
+fn prop_recipe_sweep_parallel_equals_serial() {
+    prop(30, |g: &mut Gen| {
+        let tensors: Vec<Tensor> = (0..g.usize_in(2, 6)).map(|_| random_tensor(g, 24)).collect();
+        let refs: Vec<&Tensor> = tensors.iter().collect();
+        let recipe = Recipe {
+            kind: *g.choose(&[
+                RecipeKind::TensorLevel { threshold: 0.045 },
+                RecipeKind::SubTensor { mode: SubTensorMode::TwoWay },
+                RecipeKind::SubTensor { mode: SubTensorMode::ThreeWay },
+            ]),
+            partition: *g.choose(&[
+                Partition::Tensor,
+                Partition::Block { r: 5, c: 5 },
+                Partition::ChannelRows,
+            ]),
+            scaling: *g.choose(&[ScalingAlgo::Gam, ScalingAlgo::AmaxFp32]),
+        };
+        let serial = recipe.apply_batch_with(&refs, Parallelism::serial());
+        let parallel = recipe.apply_batch_with(&refs, pool(g.usize_in(2, 6)));
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(parallel.iter()) {
+            assert_bits_eq(s.out.data(), p.out.data(), "sweep out");
+            assert_eq!(s.block_types, p.block_types);
+            assert_eq!(s.e4m3_relerr.to_bits(), p.e4m3_relerr.to_bits());
+            assert_eq!(s.bf16_fraction.to_bits(), p.bf16_fraction.to_bits());
+            assert_eq!(s.metadata_bits, p.metadata_bits);
+        }
+        true
+    });
+}
+
+/// The paper's histogram: 0.5%-wide bins, first bin `< 0.5%`, last bin
+/// `>= 5.5%`, threshold values land in the bin to their right.
+#[test]
+fn histogram_bin_edges_are_exact() {
+    assert_eq!(HIST_BINS, 12);
+    // Exact paper edges.
+    assert_eq!(Histogram::bin_of(0.0), 0);
+    assert_eq!(Histogram::bin_of(0.005), 1);
+    assert_eq!(Histogram::bin_of(0.045), 9); // the 4.5% threshold bin
+    assert_eq!(Histogram::bin_of(0.050), 10);
+    assert_eq!(Histogram::bin_of(0.055), 11);
+    assert_eq!(Histogram::bin_of(123.0), 11); // overflow bin
+    assert_eq!(Histogram::bin_of(-1e-9), 0); // negatives clamp to bin 0
+    // Just-below / just-above every edge k*0.5%.
+    for k in 1..=11usize {
+        let edge = k as f64 * 0.005;
+        assert_eq!(Histogram::bin_of(edge - 1e-7), k - 1, "below edge {k}");
+        assert_eq!(Histogram::bin_of(edge + 1e-7), k.min(HIST_BINS - 1), "above edge {k}");
+    }
+    // Mid-bin values.
+    for k in 0..HIST_BINS {
+        let mid = (k as f64 + 0.5) * 0.005;
+        assert_eq!(Histogram::bin_of(mid), k.min(HIST_BINS - 1), "mid of bin {k}");
+    }
+}

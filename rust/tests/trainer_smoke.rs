@@ -1,0 +1,145 @@
+//! Trainer smoke tests on the host execution backend: a few
+//! `coordinator::Trainer` steps end-to-end on `data/synthetic` streams,
+//! **no Python artifacts required**. The PJRT integration tests
+//! (`integration_train.rs`) remain the artifact-gated deep coverage;
+//! this suite is the tier-1 floor that always runs.
+
+use mor::coordinator::checkpoint::Checkpoint;
+use mor::coordinator::trainer::{Trainer, TrainerOptions};
+use mor::data::loader::BatchLoader;
+use mor::data::synthetic::CorpusProfile;
+use mor::model::config::{ModelConfig, TrainConfig};
+use mor::model::naming::{param_specs, QuantTensorId};
+use mor::runtime::Runtime;
+use mor::util::par::Parallelism;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("mor_smoke_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn trainer_runs_end_to_end_on_host_backend() {
+    let rt = Runtime::host(ModelConfig::TINY);
+    let out_dir = tmpdir("trainer");
+    let trainer = Trainer::new(&rt, TrainConfig::config1(6));
+    let mut opts = TrainerOptions::new("train_mor_tensor_block", 6, out_dir.clone());
+    opts.val_every = 3;
+    opts.suite_every = 0; // suite covered separately; keep the smoke fast
+    opts.ckpt_every = 4;
+    opts.quiet = true;
+    opts.parallelism = Some(Parallelism::auto());
+    let outcome = trainer.run(&opts).unwrap();
+
+    assert_eq!(outcome.records.len(), 6);
+    assert!(outcome.final_train_loss.is_finite(), "loss {}", outcome.final_train_loss);
+    assert!(outcome.final_val_loss.is_finite(), "val loss {}", outcome.final_val_loss);
+    assert!(outcome.metrics_path.exists());
+    // The BF16-fallback percentage is populated (0..=100, and the MoR
+    // recipe recorded per-tensor decisions for every step).
+    let fb = outcome.stats.overall_fallback_pct();
+    assert!((0.0..=100.0).contains(&fb), "fallback pct {fb}");
+    assert!(!outcome.stats.tensors().is_empty(), "no per-tensor stats recorded");
+    assert!(
+        outcome.records.iter().all(|r| (0.0..=1.0).contains(&r.bf16_fallback_rate)),
+        "fallback rates out of range"
+    );
+    assert!(
+        outcome.records.iter().any(|r| r.mean_relerr > 0.0),
+        "relerr telemetry never populated"
+    );
+
+    // Checkpoint written at step 4 and loadable with the right arity.
+    let ckpt_path = out_dir.join("train_mor_tensor_block.step4.ckpt");
+    assert!(ckpt_path.exists(), "checkpoint not written");
+    let ck = Checkpoint::load(&ckpt_path).unwrap();
+    assert_eq!(ck.step, 4);
+    assert_eq!(ck.tensors.len(), param_specs(&ModelConfig::TINY).len());
+    std::fs::remove_dir_all(out_dir).ok();
+}
+
+#[test]
+fn host_baseline_loss_decreases() {
+    let rt = Runtime::host(ModelConfig::TINY);
+    let mut s = rt.train_session("train_baseline", 42).unwrap();
+    let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, s.batch, s.seq, 42, 0);
+    let mut first = 0f32;
+    let mut last = 0f32;
+    for i in 0..12 {
+        let b = loader.next_batch();
+        let out = s.step(&b.tokens, 3e-3, 0.045).unwrap();
+        assert!(out.loss.is_finite(), "step {i} loss {}", out.loss);
+        if i == 0 {
+            first = out.loss;
+        }
+        last = out.loss;
+    }
+    assert!(
+        last < first - 0.1,
+        "loss should drop over 12 host steps: first {first}, last {last}"
+    );
+    assert_eq!(s.stats_len, QuantTensorId::count(&ModelConfig::TINY));
+}
+
+#[test]
+fn host_mor_recipes_populate_fallback() {
+    let rt = Runtime::host(ModelConfig::TINY);
+    // Tensor-level: fallback is 0/1 per slot. Sub-tensor: fractional.
+    let mut tl = rt.train_session("train_mor_tensor_block", 7).unwrap();
+    let loader = BatchLoader::new(CorpusProfile::NemotronHLike, 256, tl.batch, tl.seq, 7, 0);
+    let b = loader.next_batch();
+    let out = tl.step(&b.tokens, 1e-3, 0.045).unwrap();
+    assert_eq!(out.relerr.len(), QuantTensorId::count(&ModelConfig::TINY));
+    for (re, fb) in out.relerr.iter().zip(out.fallback.iter()) {
+        assert!((0.0..1.0).contains(re), "relerr {re}");
+        assert!(*fb == 0.0 || *fb == 1.0, "tensor-level fallback must be 0/1, got {fb}");
+    }
+    assert!(out.relerr.iter().any(|r| *r > 0.0));
+
+    let mut st = rt.train_session("train_mor_subtensor_two_way", 7).unwrap();
+    let out = st.step(&b.tokens, 1e-3, 0.045).unwrap();
+    for fb in &out.fallback {
+        assert!((0.0..=1.0).contains(fb), "sub-tensor fallback {fb}");
+    }
+}
+
+#[test]
+fn host_training_is_deterministic_given_seed() {
+    let rt = Runtime::host(ModelConfig::TINY);
+    let run = |seed: u64| -> Vec<f32> {
+        let mut s = rt.train_session("train_baseline", seed).unwrap();
+        let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, s.batch, s.seq, seed, 0);
+        (0..3)
+            .map(|_| s.step(&loader.next_batch().tokens, 1e-3, 0.045).unwrap().loss)
+            .collect()
+    };
+    assert_eq!(run(5), run(5));
+    assert_ne!(run(5), run(6));
+}
+
+#[test]
+fn host_eval_session_scores_suite() {
+    use mor::coordinator::eval::eval_suite;
+    use mor::coordinator::trainer::full_mask;
+    use mor::data::tasks::EvalSuite;
+
+    let rt = Runtime::host(ModelConfig::TINY);
+    let mut s = rt.train_session("train_baseline", 3).unwrap();
+    let ev = rt.eval_session("eval").unwrap();
+    let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, ev.batch, ev.seq, 3, 1);
+    let b = loader.next_batch();
+    let mask = full_mask(ev.batch, ev.seq);
+    let (loss, acc) = ev.eval(s.param_literals(), &b.tokens, &mask).unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    // Untrained model ≈ chance accuracy over 256 symbols.
+    assert!(acc < 0.05, "untrained acc {acc}");
+
+    let suite = EvalSuite::new(ev.seq, 256, 2, 99);
+    let scores = eval_suite(&ev, s.param_literals(), &suite).unwrap();
+    assert_eq!(scores.per_task.len(), 5);
+    for (name, loss, acc) in &scores.per_task {
+        assert!(loss.is_finite(), "{name}");
+        assert!((0.0..=100.0).contains(acc), "{name} acc {acc}");
+    }
+}

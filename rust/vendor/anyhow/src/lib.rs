@@ -1,0 +1,221 @@
+//! Vendored minimal replacement for the `anyhow` crate, API-compatible
+//! with the subset this repository uses: [`Error`], [`Result`], the
+//! [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and the [`Context`]
+//! extension trait for `Result` and `Option`.
+//!
+//! The build environment is fully offline (no crates.io), so external
+//! dependencies are vendored under `rust/vendor/`. Like the real crate,
+//! `Error` deliberately does **not** implement `std::error::Error`:
+//! that keeps the blanket `From<E: std::error::Error>` conversion free
+//! of coherence conflicts with the reflexive `From<Error> for Error`.
+
+use std::fmt;
+
+/// A context-carrying error. The chain is stored innermost-first;
+/// `Display` shows the outermost message, `{:#}` the full chain
+/// separated by `: ` (matching anyhow's alternate formatting).
+pub struct Error {
+    /// Message chain, innermost (root cause) first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Used by the `anyhow!(expr)` macro arm: accept anything already
+    /// convertible to an `Error` (including `Error` itself) without
+    /// flattening its chain.
+    pub fn from_any<T: Into<Error>>(t: T) -> Error {
+        t.into()
+    }
+
+    /// Push an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.push(c.to_string());
+        self
+    }
+
+    /// The messages from outermost to innermost (anyhow's `chain()`
+    /// order).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.first().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for m in self.chain.iter().rev() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(m)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.chain.last().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug prints the full chain like anyhow's multi-line report,
+        // compacted to one line.
+        write!(f, "{self:#}")
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = Vec::new();
+        let mut cur: Option<&dyn std::error::Error> = Some(&e);
+        while let Some(c) = cur {
+            chain.push(c.to_string());
+            cur = c.source();
+        }
+        chain.reverse(); // store innermost first
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option` (the two impls the repo
+/// relies on).
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string, a displayable
+/// expression, or an existing error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::from_any($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err()
+            .context("loading runtime");
+        assert_eq!(format!("{e}"), "loading runtime");
+        assert_eq!(format!("{e:#}"), "loading runtime: reading manifest: missing file");
+        assert_eq!(e.root_cause(), "missing file");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "x";
+        let e = anyhow!("artifact {name:?} missing");
+        assert_eq!(format!("{e}"), "artifact \"x\" missing");
+        let e2 = anyhow!("field {} of {}", 3, name);
+        assert_eq!(format!("{e2}"), "field 3 of x");
+        let e3 = anyhow!(e2); // expr arm passes an Error through
+        assert_eq!(format!("{e3}"), "field 3 of x");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag was false");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing here").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing here");
+        let v = Some(3).with_context(|| "unused").unwrap();
+        assert_eq!(v, 3);
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

@@ -1,0 +1,289 @@
+//! Vendored stand-in for the `xla` PJRT bindings used by
+//! `rust/src/runtime/client.rs`.
+//!
+//! The offline build environment has neither crates.io nor the
+//! `xla_extension` C++ distribution, so this crate provides:
+//!
+//! * a fully functional host [`Literal`] — a shaped, typed (f32/i32)
+//!   array container with the reshape/tuple/readback API the runtime
+//!   uses. The host execution backend (`mor::runtime::host`) stores
+//!   training state in these, so everything except HLO execution works.
+//! * stub PJRT types ([`PjRtClient`], [`PjRtLoadedExecutable`], ...)
+//!   whose `compile`/`execute` return a descriptive error. Artifact-
+//!   driven paths self-skip when artifacts are absent, and report a
+//!   clear message instead of a link failure when they are present.
+//!
+//! Swapping the real bindings back in is a one-line change in
+//! `rust/Cargo.toml`; the API surface here matches the subset the
+//! runtime consumes.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type; converts into `anyhow::Error` at the runtime layer via
+/// the std-error blanket impl.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "XLA/PJRT execution is unavailable in this offline build \
+(the `xla` crate is a vendored host stub); use the host backend \
+(`Runtime::host`) or link the real xla_extension bindings";
+
+// ---------------------------------------------------------------------------
+// Literal: a real host array container
+// ---------------------------------------------------------------------------
+
+/// Element payload of a [`Literal`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A shaped host array (or tuple of arrays), mirroring the subset of
+/// `xla::Literal` the runtime uses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LiteralData,
+}
+
+/// Scalar element types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    fn vec_into(v: Vec<Self>) -> LiteralData;
+    fn vec_from(d: &LiteralData) -> Option<Vec<Self>>;
+    const NAME: &'static str;
+}
+
+impl NativeType for f32 {
+    fn vec_into(v: Vec<f32>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+    fn vec_from(d: &LiteralData) -> Option<Vec<f32>> {
+        match d {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "f32";
+}
+
+impl NativeType for i32 {
+    fn vec_into(v: Vec<i32>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+    fn vec_from(d: &LiteralData) -> Option<Vec<i32>> {
+        match d {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+    const NAME: &'static str = "i32";
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::vec_into(v.to_vec()) }
+    }
+
+    /// Rank-0 scalar literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], data: T::vec_into(vec![v]) }
+    }
+
+    /// Tuple literal (what multi-output executables return).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], data: LiteralData::Tuple(parts) }
+    }
+
+    fn volume(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(_) => 0,
+        }
+    }
+
+    /// Reinterpret with new dimensions (volume must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            return Err(Error::msg("cannot reshape a tuple literal"));
+        }
+        let n: i64 = dims.iter().product();
+        if n as usize != self.volume() {
+            return Err(Error::msg(format!(
+                "reshape {:?} -> {dims:?}: volume mismatch ({} elements)",
+                self.dims,
+                self.volume()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            LiteralData::Tuple(parts) => Ok(parts),
+            _ => Err(Error::msg("literal is not a tuple")),
+        }
+    }
+
+    /// Copy out the flat element buffer.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::vec_from(&self.data)
+            .ok_or_else(|| Error::msg(format!("literal does not hold {}", T::NAME)))
+    }
+
+    /// First element (scalar readback).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::msg("empty literal"))
+    }
+
+    /// Array shape (errors on tuples, like the real bindings).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.data {
+            LiteralData::Tuple(_) => Err(Error::msg("tuple literal has no array shape")),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT stubs
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module (stores the text; the stub cannot compile it).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::msg(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation wrapper.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { text: proto.text.clone() }
+    }
+}
+
+/// PJRT client stub. Construction succeeds (so `Runtime::load` can
+/// parse and validate manifests); `compile` reports the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::msg(STUB_MSG))
+    }
+}
+
+/// Compiled-executable stub (unconstructible outside this crate; the
+/// stub client never produces one).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::msg(STUB_MSG))
+    }
+}
+
+/// Device buffer stub.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::msg(STUB_MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_scalar_and_tuple() {
+        let s = Literal::scalar(2.5f32);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+        let t = Literal::tuple(vec![s.clone(), Literal::vec1(&[1i32, 2])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<i32>().unwrap(), vec![1, 2]);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_volume() {
+        let l = Literal::vec1(&[0i32; 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn stub_client_compiles_to_error() {
+        let c = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation { text: "HloModule m".into() };
+        let e = c.compile(&comp).unwrap_err();
+        assert!(format!("{e}").contains("offline"));
+    }
+}
