@@ -25,24 +25,24 @@ fn main() {
     tb.grid[1][1] = ReprType::E5M2;
 
     let auto = Parallelism::auto();
-    for (label, cfg) in [("serial", Parallelism::serial()), ("parallel", auto)] {
+    for (label, cfg) in [("serial", Parallelism::serial()), ("parallel", auto.clone())] {
         let r = bench(&format!("matmul_f32_{N}_{label}"), &opts, || {
-            black_box(matmul_with(black_box(&a), black_box(&b), cfg));
+            black_box(matmul_with(black_box(&a), black_box(&b), &cfg));
         });
         report_throughput(&format!("matmul_f32_{label}"), &r, flops, "flop");
 
         let r = bench(&format!("matmul_tn_{N}_{label}"), &opts, || {
-            black_box(matmul_tn_with(black_box(&at), black_box(&b), cfg));
+            black_box(matmul_tn_with(black_box(&at), black_box(&b), &cfg));
         });
         report_throughput(&format!("matmul_tn_{label}"), &r, flops, "flop");
 
         let r = bench(&format!("matmul_nt_{N}_{label}"), &opts, || {
-            black_box(matmul_nt_with(black_box(&a), black_box(&bt), cfg));
+            black_box(matmul_nt_with(black_box(&a), black_box(&bt), &cfg));
         });
         report_throughput(&format!("matmul_nt_{label}"), &r, flops, "flop");
 
         let r = bench(&format!("mixed_gemm_{N}_blk32_{label}"), &opts, || {
-            black_box(mixed_gemm_with(black_box(&a), &ta, black_box(&b), &tb, cfg));
+            black_box(mixed_gemm_with(black_box(&a), &ta, black_box(&b), &tb, &cfg));
         });
         report_throughput(&format!("mixed_gemm_{label}"), &r, flops, "flop");
     }

@@ -19,7 +19,8 @@ use std::hint::black_box;
 
 fn main() {
     let opts = BenchOptions::default();
-    let xs: Vec<f32> = (0..4096).map(|i| ((i * 2654435761u64 as usize) as f32).sin() * 100.0).collect();
+    let xs: Vec<f32> =
+        (0..4096).map(|i| ((i * 2654435761u64 as usize) as f32).sin() * 100.0).collect();
 
     let r = bench("e4m3_encode_decode_4k", &opts, || {
         let mut acc = 0f32;
@@ -62,7 +63,7 @@ fn main() {
     let x = Tensor::normal(&[512, 512], 2.0, 7);
     let elems = (512 * 512) as f64;
     let auto = Parallelism::auto();
-    for (label, cfg) in [("serial", Parallelism::serial()), ("parallel", auto)] {
+    for (label, cfg) in [("serial", Parallelism::serial()), ("parallel", auto.clone())] {
         for (pname, partition) in [
             ("block128", Partition::BLOCK128),
             ("channel", Partition::ChannelRows),
@@ -77,7 +78,7 @@ fn main() {
                         ReprType::E4M3,
                         partition,
                         ScalingAlgo::Gam,
-                        cfg,
+                        &cfg,
                     );
                     black_box(fq.global_err.mean());
                 },

@@ -1,8 +1,13 @@
 //! End-to-end step latency (the L3 hot path), on both backends:
 //!
 //! * **Host backend** (always runs, no artifacts): one full train step
-//!   per recipe variant on the tiny preset, serial vs parallel — the
-//!   headline serial-vs-parallel comparison for the whole pipeline.
+//!   per recipe variant on the tiny preset, serial vs the scoped-thread
+//!   **spawn** engine vs the persistent worker **pool** — the headline
+//!   comparison for the whole pipeline. The pool and spawn rows run the
+//!   same chunking with the same thread count; the gap between them is
+//!   exactly the per-call spawn/join fixed overhead the pool removes
+//!   (hundreds of waves per host train step), so the pool row should
+//!   sit at-or-below the spawn row.
 //! * **PJRT** (skips gracefully when artifacts are missing): the
 //!   compiled-step latency per recipe variant, the standalone quant
 //!   kernel, and the eval step.
@@ -13,19 +18,29 @@ use mor::model::config::ModelConfig;
 use mor::runtime::Runtime;
 use mor::tensor::Tensor;
 use mor::util::bench::{bench, report_throughput, BenchOptions};
-use mor::util::par::{self, Parallelism};
+use mor::util::par::{Engine, Parallelism};
 use std::hint::black_box;
 use std::path::Path;
 use std::time::Duration;
 
+/// The three engine configurations under comparison. Fresh handles per
+/// call so each bench row owns (and drops) its own pool.
+fn engine_rows() -> [(&'static str, Parallelism); 3] {
+    [
+        ("serial", Parallelism::serial()),
+        ("spawn", Parallelism::auto().with_engine(Engine::Spawn)),
+        ("pool", Parallelism::auto()),
+    ]
+}
+
 fn host_backend_section(opts: &BenchOptions) {
     let rt = Runtime::host(ModelConfig::TINY);
-    let auto = Parallelism::auto();
-    println!("== host backend (tiny preset, serial vs {} threads) ==", auto.threads);
+    let threads = Parallelism::auto().threads;
+    println!("== host backend (tiny preset; serial vs spawn vs pool at {threads} threads) ==");
     for artifact in ["train_baseline", "train_mor_tensor_block", "train_mor_subtensor_two_way"] {
-        for (label, cfg) in [("serial", Parallelism::serial()), ("parallel", auto)] {
-            par::set_global(cfg);
-            let mut session = rt.train_session(artifact, 1).expect("host session");
+        for (label, cfg) in engine_rows() {
+            let mut session =
+                rt.train_session_with(artifact, 1, cfg.clone()).expect("host session");
             let loader = BatchLoader::new(
                 CorpusProfile::Nemotron4Like,
                 256,
@@ -43,11 +58,12 @@ fn host_backend_section(opts: &BenchOptions) {
             report_throughput(&format!("host_{artifact}_{label}"), &r, tokens_per_step, "tok");
         }
     }
-    // Standalone host quant kernel, serial vs parallel.
-    let qs = rt.quant_session("quant_e4m3_gam_block128").unwrap();
-    let x = Tensor::normal(&[qs.rows, qs.cols], 2.0, 3);
-    for (label, cfg) in [("serial", Parallelism::serial()), ("parallel", auto)] {
-        par::set_global(cfg);
+    // Standalone host quant kernel across the same engine rows. The
+    // 256x256 input sits near the --par-min-block cutoff, which is
+    // where the pool's saved fixed overhead is most visible.
+    for (label, cfg) in engine_rows() {
+        let qs = rt.quant_session_with("quant_e4m3_gam_block128", cfg.clone()).unwrap();
+        let x = Tensor::normal(&[qs.rows, qs.cols], 2.0, 3);
         let r = bench(&format!("host_quant_e4m3_gam_block128_{label}"), opts, || {
             let out = qs.run(black_box(&x)).unwrap();
             black_box(out.1);
@@ -59,7 +75,6 @@ fn host_backend_section(opts: &BenchOptions) {
             "elem",
         );
     }
-    par::set_global(auto);
 }
 
 fn main() {

@@ -96,7 +96,12 @@ impl MetricsLogger {
 
 /// Render an ASCII line chart of one or more labelled series — the
 /// terminal stand-in for the paper's loss/eval figures.
-pub fn ascii_chart(title: &str, series: &[(String, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+pub fn ascii_chart(
+    title: &str,
+    series: &[(String, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+) -> String {
     let mut out = format!("── {title} ──\n");
     let pts: Vec<(f64, f64)> =
         series.iter().flat_map(|(_, s)| s.iter().copied()).filter(|(_, y)| y.is_finite()).collect();
@@ -104,8 +109,10 @@ pub fn ascii_chart(title: &str, series: &[(String, Vec<(f64, f64)>)], width: usi
         out.push_str("(no data)\n");
         return out;
     }
-    let (xmin, xmax) = pts.iter().fold((f64::MAX, f64::MIN), |(a, b), (x, _)| (a.min(*x), b.max(*x)));
-    let (ymin, ymax) = pts.iter().fold((f64::MAX, f64::MIN), |(a, b), (_, y)| (a.min(*y), b.max(*y)));
+    let (xmin, xmax) =
+        pts.iter().fold((f64::MAX, f64::MIN), |(a, b), (x, _)| (a.min(*x), b.max(*x)));
+    let (ymin, ymax) =
+        pts.iter().fold((f64::MAX, f64::MIN), |(a, b), (_, y)| (a.min(*y), b.max(*y)));
     let yspan = (ymax - ymin).max(1e-12);
     let xspan = (xmax - xmin).max(1e-12);
     let mut grid = vec![vec![' '; width]; height];

@@ -15,7 +15,7 @@ use crate::model::config::{ModelConfig, TrainConfig};
 use crate::model::naming::{param_specs, QuantTensorId};
 use crate::mor::stats::StatsCollector;
 use crate::runtime::Runtime;
-use crate::util::par::{self, Parallelism};
+use crate::util::par::Parallelism;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 use std::time::Instant;
@@ -44,11 +44,13 @@ pub struct TrainerOptions {
     pub per_channel: bool,
     /// Run quietly (no per-step stdout).
     pub quiet: bool,
-    /// Worker override for the quantization/GEMM hot paths (`None`
-    /// keeps the process-global setting; see `util::par`). The setting
-    /// is process-global while the run executes and is restored when
-    /// it ends — concurrent runs in one process share whichever was
-    /// set last (results stay bit-identical either way).
+    /// Per-run engine handle for the quantization/GEMM hot paths
+    /// (`None` inherits the runtime's default; see `util::par`). The
+    /// handle is owned by this run's sessions, so no run ever mutates
+    /// a process-global setting. Runs inheriting one runtime's default
+    /// share that runtime's pool (safely — results are bit-identical
+    /// for any thread count); give each run a `Some(...)` override for
+    /// pool isolation.
     pub parallelism: Option<Parallelism>,
 }
 
@@ -96,17 +98,17 @@ impl<'rt> Trainer<'rt> {
     }
 
     pub fn run(&self, opts: &TrainerOptions) -> Result<TrainOutcome> {
-        // The engine config is process-global; scope the per-run
-        // override to this run (restored on every exit path).
-        let _par_guard = opts.parallelism.map(|p| {
-            let prev = par::global();
-            par::set_global(p);
-            RestoreParallelism(prev)
-        });
+        // One Parallelism handle per run, owned by the run's sessions:
+        // the per-run override (or the runtime default) rides the
+        // session API instead of a scoped process-global override.
+        let par = opts
+            .parallelism
+            .clone()
+            .unwrap_or_else(|| self.runtime.parallelism().clone());
         let tc = &self.train_config;
         let mut session = self
             .runtime
-            .train_session(&opts.artifact, tc.seed)
+            .train_session_with(&opts.artifact, tc.seed, par.clone())
             .with_context(|| format!("starting session for {}", opts.artifact))?;
         let profile = CorpusProfile::from_id(tc.data_profile);
         let train_loader = BatchLoader::new(
@@ -125,7 +127,7 @@ impl<'rt> Trainer<'rt> {
             tc.seed,
             1,
         );
-        let eval = self.runtime.eval_session("eval").ok();
+        let eval = self.runtime.eval_session_with("eval", par).ok();
         let suite = EvalSuite::new(session.seq, self.model.vocab_size, 8, tc.seed ^ 0xE7A1);
 
         std::fs::create_dir_all(&opts.out_dir)?;
@@ -204,7 +206,8 @@ impl<'rt> Trainer<'rt> {
             logger.log(&rec)?;
             if !opts.quiet && (step % 10 == 0 || step + 1 == opts.steps) {
                 println!(
-                    "[{}] step {step:>5} loss {:.4} val {:.4} lr {:.2e} fb {:.2}% relerr {:.3}% ({:.0} ms)",
+                    "[{}] step {step:>5} loss {:.4} val {:.4} lr {:.2e} fb {:.2}% \
+                     relerr {:.3}% ({:.0} ms)",
                     opts.artifact,
                     rec.train_loss,
                     rec.val_loss,
@@ -249,15 +252,6 @@ impl<'rt> Trainer<'rt> {
             .collect();
         Checkpoint { step, tensors }
             .save(&opts.out_dir.join(format!("{}.step{step}.ckpt", opts.artifact)))
-    }
-}
-
-/// Restores the previous global [`Parallelism`] when a run ends.
-struct RestoreParallelism(Parallelism);
-
-impl Drop for RestoreParallelism {
-    fn drop(&mut self) {
-        par::set_global(self.0);
     }
 }
 

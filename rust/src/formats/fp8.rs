@@ -419,7 +419,11 @@ mod tests {
             let idx = grid.partition_point(|g| *g < x);
             let below = if idx > 0 { grid[idx - 1] } else { grid[0] };
             let above = if idx < grid.len() { grid[idx] } else { *grid.last().unwrap() };
-            let best = if (x - below).abs() <= (above - x).abs() { (x - below).abs() } else { (above - x).abs() };
+            let best = if (x - below).abs() <= (above - x).abs() {
+                (x - below).abs()
+            } else {
+                (above - x).abs()
+            };
             assert!(
                 (q - x).abs() <= best + best * 1e-6,
                 "x={x} q={q} below={below} above={above}"

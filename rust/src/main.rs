@@ -57,7 +57,10 @@ fn parallelism_of(args: &Args) -> Parallelism {
 /// Select the execution backend: `--backend pjrt` requires compiled
 /// artifacts, `--backend host` runs the pure-Rust mirror, and the
 /// default `auto` uses PJRT when the manifest exists and falls back to
-/// the host backend otherwise.
+/// the host backend otherwise. The runtime inherits the process
+/// default [`Parallelism`] handle, which `main` already set from the
+/// CLI flags — one shared pool for sessions and the no-argument entry
+/// points alike.
 fn runtime_of(args: &Args, model: ModelConfig) -> Result<Runtime> {
     let dir = artifacts_dir(args, &model);
     match args.get_or("backend", "auto") {
@@ -128,7 +131,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.stats_window = args.u64("stats-window", (steps / 4).max(1));
     opts.per_channel = artifact.contains("channel");
     opts.quiet = args.flag("quiet");
-    opts.parallelism = Some(parallelism_of(args));
+    // opts.parallelism stays None: the run inherits the runtime's
+    // handle, which is the process-global one main() set from the CLI
+    // flags — one pool end to end.
     let trainer = Trainer::new(&runtime, config);
     let outcome = trainer.run(&opts)?;
     println!(
@@ -219,6 +224,11 @@ fn cmd_info(args: &Args) -> Result<()> {
         }
     }
     let p = parallelism_of(args);
-    println!("parallel engine: {} threads, serial below {} elements", p.threads, p.min_items);
+    println!(
+        "parallel engine: {} threads ({:?}), serial below {} elements",
+        p.threads,
+        p.engine(),
+        p.min_items
+    );
     Ok(())
 }

@@ -207,7 +207,8 @@ mod tests {
 
     #[test]
     fn cosine_schedule_shape() {
-        let s = CosineSchedule { peak_lr: 3e-4, final_lr: 3e-5, warmup_steps: 10, total_steps: 100 };
+        let s =
+            CosineSchedule { peak_lr: 3e-4, final_lr: 3e-5, warmup_steps: 10, total_steps: 100 };
         assert!(s.lr_at(0) < s.lr_at(9)); // warming up
         assert!((s.lr_at(10) - 3e-4).abs() < 1e-8); // peak after warmup
         assert!(s.lr_at(50) < 3e-4);

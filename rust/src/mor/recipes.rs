@@ -99,11 +99,11 @@ impl Recipe {
     /// process-global [`Parallelism`] for the underlying fake-quant
     /// passes.
     pub fn apply(&self, x: &Tensor) -> MorOutcome {
-        self.apply_with(x, par::global())
+        self.apply_with(x, &par::global())
     }
 
     /// [`Recipe::apply`] with an explicit [`Parallelism`].
-    pub fn apply_with(&self, x: &Tensor, cfg: Parallelism) -> MorOutcome {
+    pub fn apply_with(&self, x: &Tensor, cfg: &Parallelism) -> MorOutcome {
         match self.kind {
             RecipeKind::Baseline => baseline(x),
             RecipeKind::TensorLevel { threshold } => {
@@ -131,15 +131,15 @@ impl Recipe {
     /// oversubscription). Outcome order matches input order and each
     /// outcome is bit-identical to a standalone [`Recipe::apply`].
     pub fn apply_batch(&self, xs: &[&Tensor]) -> Vec<MorOutcome> {
-        self.apply_batch_with(xs, par::global())
+        self.apply_batch_with(xs, &par::global())
     }
 
     /// [`Recipe::apply_batch`] with an explicit [`Parallelism`].
-    pub fn apply_batch_with(&self, xs: &[&Tensor], cfg: Parallelism) -> Vec<MorOutcome> {
+    pub fn apply_batch_with(&self, xs: &[&Tensor], cfg: &Parallelism) -> Vec<MorOutcome> {
         if cfg.threads <= 1 || xs.len() <= 1 {
             return xs.iter().map(|x| self.apply_with(x, cfg)).collect();
         }
-        par::par_map(cfg, xs.len(), |i| self.apply_with(xs[i], Parallelism::serial()))
+        par::par_map(cfg, xs.len(), |i| self.apply_with(xs[i], &Parallelism::serial()))
     }
 }
 
@@ -159,7 +159,7 @@ fn tensor_level(
     partition: Partition,
     scaling: ScalingAlgo,
     th: f64,
-    cfg: Parallelism,
+    cfg: &Parallelism,
 ) -> MorOutcome {
     let fq = fake_quantize_with(x, ReprType::E4M3, partition, scaling, cfg);
     let relerr = fq.global_err.mean();
@@ -193,12 +193,17 @@ fn sub_tensor(
     partition: Partition,
     scaling: ScalingAlgo,
     mode: SubTensorMode,
-    cfg: Parallelism,
+    cfg: &Parallelism,
 ) -> MorOutcome {
     let (rows, cols) = x.as_2d();
     let _ = rows;
-    let fq_e4m3 = fake_quantize_with(x, ReprType::E4M3, partition, scaling, cfg);
-    let fq_e5m2 = fake_quantize_with(x, ReprType::E5M2, partition, scaling, cfg);
+    // The two candidate quantizations are independent; overlap them on
+    // the pool (each stays internally chunk-parallel and deterministic).
+    let (fq_e4m3, fq_e5m2) = par::join2(
+        cfg,
+        || fake_quantize_with(x, ReprType::E4M3, partition, scaling, cfg),
+        || fake_quantize_with(x, ReprType::E5M2, partition, scaling, cfg),
+    );
     let nblocks = fq_e4m3.block_err.len();
     let fw = match mode {
         SubTensorMode::TwoWay => MorFramework::e4m3_bf16(),
@@ -256,11 +261,16 @@ fn nvfp4_tensor_level(
     scaling: ScalingAlgo,
     th_fp4: f64,
     th_e4m3: f64,
-    cfg: Parallelism,
+    cfg: &Parallelism,
 ) -> MorOutcome {
-    let fq4 =
-        fake_quantize_with(x, ReprType::NvFp4, Partition::SubChannelRows { len: 16 }, scaling, cfg);
-    let fq8 = fake_quantize_with(x, ReprType::E4M3, partition, scaling, cfg);
+    let (fq4, fq8) = par::join2(
+        cfg,
+        || {
+            let sub = Partition::SubChannelRows { len: 16 };
+            fake_quantize_with(x, ReprType::NvFp4, sub, scaling, cfg)
+        },
+        || fake_quantize_with(x, ReprType::E4M3, partition, scaling, cfg),
+    );
     let fw = MorFramework::new(vec![ReprType::NvFp4, ReprType::E4M3, ReprType::Bf16]);
     let choice = fw.select_block(0, |t, _| match t {
         ReprType::NvFp4 => fq4.global_err.mean() < th_fp4,

@@ -293,7 +293,8 @@ impl StatsCollector {
                 row.push(shade);
                 row.push(shade);
             }
-            let _ = writeln!(out, "{:<56} {}  fb={:5.1}%", key.name(), row, win.fallback_rate() * 100.0);
+            let fb = win.fallback_rate() * 100.0;
+            let _ = writeln!(out, "{:<56} {}  fb={fb:5.1}%", key.name(), row);
         }
         out
     }

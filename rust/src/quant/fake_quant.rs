@@ -69,7 +69,7 @@ pub fn fake_quantize(
     partition: Partition,
     scaling: ScalingAlgo,
 ) -> FakeQuantResult {
-    fake_quantize_with(x, target, partition, scaling, par::global())
+    fake_quantize_with(x, target, partition, scaling, &par::global())
 }
 
 /// Fake-quantize with an explicit [`Parallelism`] (benches and the
@@ -84,7 +84,7 @@ pub fn fake_quantize_with(
     target: ReprType,
     partition: Partition,
     scaling: ScalingAlgo,
-    cfg: Parallelism,
+    cfg: &Parallelism,
 ) -> FakeQuantResult {
     let (rows, cols) = x.as_2d();
     let blocks = partition.blocks(rows, cols);
@@ -96,7 +96,7 @@ pub fn fake_quantize_with(
         let mut out = x.clone();
         let per_block: Vec<(RelErrAccum, (f32, Option<f32>))> = {
             let sink = DisjointWriter::new(out.data_mut());
-            par::par_map(cfg, blocks.len(), |bi| {
+            par::par_map(&cfg, blocks.len(), |bi| {
                 let b = &blocks[bi];
                 let mut acc = RelErrAccum::default();
                 let mut amax = 0.0f32;
@@ -123,24 +123,24 @@ pub fn fake_quantize_with(
             block_err.push(acc);
             block_range.push(range);
         }
-        let scales = compute_scales_with(scaling, bf16::MAX, x.amax(), &[], cfg);
+        let scales = compute_scales_with(scaling, bf16::MAX, x.amax(), &[], &cfg);
         return FakeQuantResult { out, scales, block_err, global_err: global, block_range };
     }
 
     // Phase A — per-block amaxes (and M2 ranges) in partition order.
     let block_range: Vec<(f32, Option<f32>)> =
-        par::par_map(cfg, blocks.len(), |bi| block_range_of(xd, &blocks[bi], cols));
+        par::par_map(&cfg, blocks.len(), |bi| block_range_of(xd, &blocks[bi], cols));
     let block_amaxes: Vec<f32> = block_range.iter().map(|r| r.0).collect();
 
     let q_amax = target.max_finite();
-    let scales = compute_scales_with(scaling, q_amax, x.amax(), &block_amaxes, cfg);
+    let scales = compute_scales_with(scaling, q_amax, x.amax(), &block_amaxes, &cfg);
 
     // Phase B — scale, cast, de-scale per block; disjoint writes into
     // the output, per-block accumulators merged in canonical order.
     let mut out = Tensor::zeros(x.shape());
     let block_err: Vec<RelErrAccum> = {
         let sink = DisjointWriter::new(out.data_mut());
-        par::par_map(cfg, blocks.len(), |bi| {
+        par::par_map(&cfg, blocks.len(), |bi| {
             let b = &blocks[bi];
             let s = scales.blocks[bi].scale;
             let mut acc = RelErrAccum::default();

@@ -53,13 +53,15 @@ fn norm_series(runs: &[std::rc::Rc<Run>]) -> Vec<(String, Vec<(f64, f64)>)> {
 fn print_run_panels(title: &str, runs: &[std::rc::Rc<Run>]) {
     println!("{}", ascii_chart(&format!("{title} — training loss"), &loss_series(runs), 100, 20));
     println!("{}", ascii_chart(&format!("{title} — validation loss"), &val_series(runs), 100, 16));
-    println!("{}", ascii_chart(&format!("{title} — parameter L2 norm"), &norm_series(runs), 100, 12));
+    let chart = ascii_chart(&format!("{title} — parameter L2 norm"), &norm_series(runs), 100, 12);
+    println!("{chart}");
 }
 
 /// Figures 5 / 6: loss + param-norm curves, partition strategies.
 pub fn loss_curves(ctx: &ReportCtx, config_id: u8) -> Result<()> {
     let runs = runs::partition_runs(ctx, config_id, false)?;
-    print_run_panels(&format!("Figure {} (configuration {config_id})", if config_id == 1 { 5 } else { 6 }), &runs);
+    let fig = if config_id == 1 { 5 } else { 6 };
+    print_run_panels(&format!("Figure {fig} (configuration {config_id})"), &runs);
     Ok(())
 }
 
@@ -82,7 +84,9 @@ pub fn suite_over_training(ctx: &ReportCtx) -> Result<()> {
         println!(
             "{}",
             ascii_chart(
-                &format!("Figure 7({}) — eval-suite accuracy over training (MMLU substitute)", config_id),
+                &format!(
+                    "Figure 7({config_id}) — eval-suite accuracy over training (MMLU substitute)"
+                ),
                 &series,
                 100,
                 16

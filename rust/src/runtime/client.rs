@@ -19,6 +19,7 @@ use crate::model::naming::{param_specs, QuantTensorId};
 use crate::quant::partition::Partition;
 use crate::scaling::ScalingAlgo;
 use crate::tensor::Tensor;
+use crate::util::par::{self, Parallelism};
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -34,11 +35,16 @@ enum Backend {
 }
 
 /// A loaded artifact set: backend + manifest + model preset. One
-/// `Runtime` per artifact directory (PJRT) or per preset (host).
+/// `Runtime` per artifact directory (PJRT) or per preset (host). The
+/// runtime also owns the default [`Parallelism`] handle its sessions
+/// inherit; per-run overrides go through the `*_session_with`
+/// constructors (that is what `Trainer::run` does), replacing the old
+/// process-global scoped override.
 pub struct Runtime {
     backend: Backend,
     pub manifest: Manifest,
     pub model: ModelConfig,
+    parallelism: Parallelism,
 }
 
 impl Runtime {
@@ -52,6 +58,7 @@ impl Runtime {
             backend: Backend::Pjrt { client, cache: RefCell::new(HashMap::new()) },
             manifest,
             model,
+            parallelism: par::global(),
         })
     }
 
@@ -60,7 +67,30 @@ impl Runtime {
     /// mirror. The end-to-end path for tests, benches and `repro`
     /// commands when no compiled artifacts exist.
     pub fn host(model: ModelConfig) -> Runtime {
-        Runtime { backend: Backend::Host, manifest: Manifest::host_synthetic(&model), model }
+        Runtime {
+            backend: Backend::Host,
+            manifest: Manifest::host_synthetic(&model),
+            model,
+            parallelism: par::global(),
+        }
+    }
+
+    /// This runtime with a different default [`Parallelism`]; sessions
+    /// created afterwards inherit the new handle (and its pool).
+    pub fn with_parallelism(mut self, p: Parallelism) -> Runtime {
+        self.parallelism = p;
+        self
+    }
+
+    /// Replace the default [`Parallelism`] in place. Existing sessions
+    /// keep the handle they were created with.
+    pub fn set_parallelism(&mut self, p: Parallelism) {
+        self.parallelism = p;
+    }
+
+    /// The default engine handle sessions inherit.
+    pub fn parallelism(&self) -> &Parallelism {
+        &self.parallelism
     }
 
     /// The shared auto-backend policy: PJRT when a manifest exists at
@@ -103,8 +133,20 @@ impl Runtime {
     }
 
     /// Start a training session for a train artifact, initializing
-    /// parameters and Adam state host-side (deterministic seed).
+    /// parameters and Adam state host-side (deterministic seed). Uses
+    /// the runtime's default [`Parallelism`].
     pub fn train_session(&self, name: &str, seed: u64) -> Result<TrainSession> {
+        self.train_session_with(name, seed, self.parallelism.clone())
+    }
+
+    /// [`Runtime::train_session`] with an explicit per-run
+    /// [`Parallelism`] handle (owned by the session for its lifetime).
+    pub fn train_session_with(
+        &self,
+        name: &str,
+        seed: u64,
+        par: Parallelism,
+    ) -> Result<TrainSession> {
         let entry = self.manifest.get(name)?;
         if entry.kind != ArtifactKind::Train {
             bail!("artifact {name} is not a train step");
@@ -133,7 +175,7 @@ impl Runtime {
                     entry.field("scaling").unwrap_or("gam"),
                 )
                 .with_context(|| format!("artifact {name} recipe fields"))?;
-                let trainer = HostTrainer::new(self.model, quant, seed);
+                let trainer = HostTrainer::new(self.model, quant, seed, par);
                 TrainImpl::Host { trainer, param_lits: Vec::new(), lits_stale: true }
             }
             Backend::Pjrt { .. } => {
@@ -165,14 +207,20 @@ impl Runtime {
         })
     }
 
-    /// Create an eval session for the eval artifact.
+    /// Create an eval session for the eval artifact, on the runtime's
+    /// default [`Parallelism`].
     pub fn eval_session(&self, name: &str) -> Result<EvalSession> {
+        self.eval_session_with(name, self.parallelism.clone())
+    }
+
+    /// [`Runtime::eval_session`] with an explicit per-run handle.
+    pub fn eval_session_with(&self, name: &str, par: Parallelism) -> Result<EvalSession> {
         let entry = self.manifest.get(name)?;
         if entry.kind != ArtifactKind::Eval {
             bail!("artifact {name} is not an eval step");
         }
         let imp = match &self.backend {
-            Backend::Host => EvalImpl::Host(self.model),
+            Backend::Host => EvalImpl::Host { model: self.model, par },
             Backend::Pjrt { .. } => EvalImpl::Pjrt(self.executable(name)?),
         };
         Ok(EvalSession {
@@ -183,8 +231,14 @@ impl Runtime {
         })
     }
 
-    /// Create a quant session (standalone kernel executable).
+    /// Create a quant session (standalone kernel executable), on the
+    /// runtime's default [`Parallelism`].
     pub fn quant_session(&self, name: &str) -> Result<QuantSession> {
+        self.quant_session_with(name, self.parallelism.clone())
+    }
+
+    /// [`Runtime::quant_session`] with an explicit per-run handle.
+    pub fn quant_session_with(&self, name: &str, par: Parallelism) -> Result<QuantSession> {
         let entry = self.manifest.get(name)?;
         if entry.kind != ArtifactKind::Quant {
             bail!("artifact {name} is not a quant kernel");
@@ -203,6 +257,7 @@ impl Runtime {
                     .field("scaling")
                     .and_then(ScalingAlgo::parse)
                     .ok_or_else(|| anyhow!("artifact {name} missing/unknown scaling"))?,
+                par,
             },
             Backend::Pjrt { .. } => QuantImpl::Pjrt(self.executable(name)?),
         };
@@ -395,7 +450,7 @@ impl TrainSession {
 
 enum EvalImpl {
     Pjrt(Rc<xla::PjRtLoadedExecutable>),
-    Host(ModelConfig),
+    Host { model: ModelConfig, par: Parallelism },
 }
 
 /// Masked-eval session: loss + next-token accuracy over masked positions.
@@ -418,10 +473,10 @@ impl EvalSession {
             bail!("expected {} params, got {}", self.num_params, params.len());
         }
         match &self.imp {
-            EvalImpl::Host(model) => {
+            EvalImpl::Host { model, par } => {
                 let tensors: Vec<Tensor> =
                     params.iter().map(literal_to_tensor).collect::<Result<Vec<_>>>()?;
-                host_eval(model, &tensors, tokens, mask, self.batch)
+                host_eval(model, &tensors, tokens, mask, self.batch, par)
             }
             EvalImpl::Pjrt(exe) => {
                 let toks = tokens_literal(tokens, self.batch, self.seq)?;
@@ -446,7 +501,7 @@ impl EvalSession {
 
 enum QuantImpl {
     Pjrt(Rc<xla::PjRtLoadedExecutable>),
-    Host { fmt: ReprType, partition: Partition, scaling: ScalingAlgo },
+    Host { fmt: ReprType, partition: Partition, scaling: ScalingAlgo, par: Parallelism },
 }
 
 /// Standalone quant-kernel session (cross-validation + benches): input
@@ -461,8 +516,8 @@ impl QuantSession {
     pub fn run(&self, x: &Tensor) -> Result<(Tensor, f32)> {
         assert_eq!(x.shape(), &[self.rows, self.cols], "quant kernel shape mismatch");
         match &self.imp {
-            QuantImpl::Host { fmt, partition, scaling } => {
-                Ok(host_quant(x, *fmt, *partition, *scaling))
+            QuantImpl::Host { fmt, partition, scaling, par } => {
+                Ok(host_quant(x, *fmt, *partition, *scaling, par))
             }
             QuantImpl::Pjrt(exe) => {
                 let lit = tensor_to_literal(x)?;
@@ -548,6 +603,25 @@ mod tests {
         assert!(rt.train_session("eval", 1).is_err());
         assert!(rt.eval_session("train_baseline").is_err());
         assert!(rt.executable("train_baseline").is_err());
+    }
+
+    #[test]
+    fn sessions_inherit_runtime_parallelism_bitwise() {
+        use crate::util::par::Parallelism;
+        // A pooled runtime and a serial runtime must produce the exact
+        // same step outputs (the parallel == serial contract, exercised
+        // through the session API rather than the primitives).
+        let pooled = Runtime::host(ModelConfig::TINY).with_parallelism(Parallelism::pooled(3, 1));
+        assert_eq!(pooled.parallelism().threads, 3);
+        let serial = Runtime::host(ModelConfig::TINY).with_parallelism(Parallelism::serial());
+        let mut a = pooled.train_session("train_mor_tensor_block", 9).unwrap();
+        let mut b = serial.train_session("train_mor_tensor_block", 9).unwrap();
+        let tokens = vec![3i32; a.batch * a.seq];
+        let oa = a.step(&tokens, 1e-3, 0.045).unwrap();
+        let ob = b.step(&tokens, 1e-3, 0.045).unwrap();
+        assert_eq!(oa.loss.to_bits(), ob.loss.to_bits());
+        assert_eq!(oa.relerr, ob.relerr);
+        assert_eq!(oa.fallback, ob.fallback);
     }
 
     // PJRT-dependent paths are covered by rust/tests/integration_*.rs

@@ -22,11 +22,12 @@ use crate::formats::ReprType;
 use crate::model::config::ModelConfig;
 use crate::model::naming::QuantTensorId;
 use crate::quant::error::dynamic_range_fits_e5m2;
-use crate::quant::fake_quant::fake_quantize;
+use crate::quant::fake_quant::fake_quantize_with;
 use crate::quant::partition::Partition;
 use crate::scaling::ScalingAlgo;
-use crate::tensor::ops::{matmul, matmul_nt, matmul_tn};
+use crate::tensor::ops::{matmul_nt_with, matmul_tn_with, matmul_with};
 use crate::tensor::Tensor;
+use crate::util::par::{self, Parallelism};
 use anyhow::{anyhow, bail, Result};
 
 pub const LN_EPS: f32 = 1e-5;
@@ -123,12 +124,36 @@ impl HostQuant {
 /// returns (quantized tensor, relerr, fallback fraction). On fallback
 /// the operand stays in its original precision, exactly like the
 /// compiled step's `jnp.where(use, fq8, x2d)`.
-pub fn mor_quantize(q: &HostQuant, x: &Tensor, th: f32, direction: usize) -> (Tensor, f32, f32) {
+///
+/// The sub-tensor recipes need two candidate quantizations (E4M3 and
+/// E5M2) of the same tensor; they are independent, so they overlap on
+/// the worker pool via [`par::join2`] — each stays internally
+/// chunk-parallel and bit-identical to its serial run.
+pub fn mor_quantize(
+    q: &HostQuant,
+    x: &Tensor,
+    th: f32,
+    direction: usize,
+    cfg: &Parallelism,
+) -> (Tensor, f32, f32) {
     if q.kind == HostRecipeKind::Baseline {
         return (x.clone(), 0.0, 0.0);
     }
     let part = q.partition.resolve(direction);
-    let fq8 = fake_quantize(x, ReprType::E4M3, part, q.scaling);
+    let needs_e5m2 = matches!(
+        q.kind,
+        HostRecipeKind::SubTensorTwoWay | HostRecipeKind::SubTensorThreeWay
+    );
+    let (fq8, fq5) = if needs_e5m2 {
+        let (fq8, fq5) = par::join2(
+            cfg,
+            || fake_quantize_with(x, ReprType::E4M3, part, q.scaling, cfg),
+            || fake_quantize_with(x, ReprType::E5M2, part, q.scaling, cfg),
+        );
+        (fq8, Some(fq5))
+    } else {
+        (fake_quantize_with(x, ReprType::E4M3, part, q.scaling, cfg), None)
+    };
     let relerr = fq8.global_err.mean() as f32;
 
     match q.kind {
@@ -140,7 +165,7 @@ pub fn mor_quantize(q: &HostQuant, x: &Tensor, th: f32, direction: usize) -> (Te
             }
         }
         HostRecipeKind::SubTensorTwoWay | HostRecipeKind::SubTensorThreeWay => {
-            let fq5 = fake_quantize(x, ReprType::E5M2, part, q.scaling);
+            let fq5 = fq5.expect("sub-tensor recipes computed the E5M2 candidate");
             let (rows, cols) = x.as_2d();
             let blocks = part.blocks(rows, cols);
             let nb = blocks.len().max(1) as f32;
@@ -341,8 +366,8 @@ pub fn attention_fwd(
                     prow[s2] = sc / denom;
                 }
                 // Context: out[s1] = sum_{s2<=s1} p * v[s2].
-                let orow =
-                    &mut out.data_mut()[(bi * s + s1) * d + hi * hd..(bi * s + s1) * d + (hi + 1) * hd];
+                let o0 = (bi * s + s1) * d + hi * hd;
+                let orow = &mut out.data_mut()[o0..o0 + hd];
                 for s2 in 0..=s1 {
                     let pv = prow[s2];
                     if pv == 0.0 {
@@ -454,6 +479,8 @@ impl StepStats {
 }
 
 /// y = fq(x) @ fq(w), recording input/weight forward-direction stats.
+/// The two operand quantizations are independent and overlap on the
+/// pool.
 #[allow(clippy::too_many_arguments)]
 fn linear_fwd(
     q: &HostQuant,
@@ -463,16 +490,27 @@ fn linear_fwd(
     linear: usize,
     x2d: &Tensor,
     w: &Tensor,
+    cfg: &Parallelism,
 ) -> Tensor {
-    let (qx, rex, fbx) = mor_quantize(q, x2d, th, 0);
-    let (qw, rew, fbw) = mor_quantize(q, w, th, 1);
+    let ((qx, rex, fbx), (qw, rew, fbw)) = par::join2(
+        cfg,
+        || mor_quantize(q, x2d, th, 0, cfg),
+        || mor_quantize(q, w, th, 1, cfg),
+    );
     stats.record(layer, linear, 0, 0, rex, fbx);
     stats.record(layer, linear, 1, 0, rew, fbw);
-    matmul(&qx, &qw)
+    matmul_with(&qx, &qw, cfg)
 }
 
 /// Backward GEMMs with their own quantized operands (the paper's "and
 /// their transposes"): dx = fq(dy) @ fq(W^T), dW = fq(x^T) @ fq(dy).
+///
+/// Pipeline-level parallelism: the backward operand quantizations
+/// (dy in both directions when they differ, W^T and x^T, transposes
+/// included) share no data, so they run overlapped on the worker pool,
+/// as do the two backward GEMMs that consume them. Every overlapped
+/// piece is an independent computation whose internal chunk merge is
+/// canonical, so the result is bit-identical to the sequential order.
 #[allow(clippy::too_many_arguments)]
 fn linear_bwd(
     q: &HostQuant,
@@ -483,22 +521,51 @@ fn linear_bwd(
     x2d: &Tensor,
     w: &Tensor,
     dy2d: &Tensor,
+    cfg: &Parallelism,
 ) -> (Tensor, Tensor) {
-    let (qdy0, reg0, fbg0) = mor_quantize(q, dy2d, th, 0);
-    let wt = w.transpose();
-    let (qwt, rew1, fbw1) = mor_quantize(q, &wt, th, 1);
-    let dx = matmul(&qdy0, &qwt);
-    let xt = x2d.transpose();
-    let (qxt, rex1, fbx1) = mor_quantize(q, &xt, th, 0);
-    // dy feeds both backward GEMMs; when the partition ignores the
-    // contraction direction the two quantizations are identical, so
-    // reuse the first pass instead of re-running the full pipeline.
-    let (qdy1, reg1, fbg1) = if q.partition.direction_invariant() {
-        (qdy0, reg0, fbg0)
-    } else {
-        mor_quantize(q, dy2d, th, 1)
+    // dy feeds both backward GEMMs; when the partition resolves both
+    // contraction directions identically the direction-1 pass would be
+    // bit-identical to direction 0, so it is skipped and the first
+    // pass reused. When it does differ (per-channel partitions) it is
+    // a fourth independent quantization and joins the overlap tree.
+    let (((qdy0, reg0, fbg0), alt_dy), ((qwt, rew1, fbw1), (qxt, rex1, fbx1))) = par::join2(
+        cfg,
+        || {
+            par::join2(
+                cfg,
+                || mor_quantize(q, dy2d, th, 0, cfg),
+                || {
+                    if q.partition.direction_invariant() {
+                        None
+                    } else {
+                        Some(mor_quantize(q, dy2d, th, 1, cfg))
+                    }
+                },
+            )
+        },
+        || {
+            par::join2(
+                cfg,
+                || {
+                    let wt = w.transpose();
+                    mor_quantize(q, &wt, th, 1, cfg)
+                },
+                || {
+                    let xt = x2d.transpose();
+                    mor_quantize(q, &xt, th, 0, cfg)
+                },
+            )
+        },
+    );
+    let (qdy1, reg1, fbg1) = match &alt_dy {
+        Some((t, re, fb)) => (t, *re, *fb),
+        None => (&qdy0, reg0, fbg0),
     };
-    let dw = matmul(&qxt, &qdy1);
+    let (dx, dw) = par::join2(
+        cfg,
+        || matmul_with(&qdy0, &qwt, cfg),
+        || matmul_with(&qxt, qdy1, cfg),
+    );
     stats.record(layer, linear, 0, 1, rex1, fbx1);
     stats.record(layer, linear, 1, 1, rew1, fbw1);
     stats.record(layer, linear, 2, 0, reg0, fbg0);
@@ -664,7 +731,7 @@ fn forward(
         }
     }
     let (xf, lnf) = layernorm_fwd(&x, lnf_s, lnf_b);
-    let logits = matmul(&xf, head); // lm_head unquantized (§4 scope)
+    let logits = matmul_with(&xf, head, cfg); // lm_head unquantized (§4 scope)
     let cache = if save { Some(ForwardCache { layers, lnf, xf }) } else { None };
     (logits, cache)
 }
@@ -702,6 +769,7 @@ fn loss_and_dlogits(
 
 /// Manual backward through the whole model; returns grads in canonical
 /// parameter order.
+#[allow(clippy::too_many_arguments)]
 fn backward(
     m: &ModelConfig,
     q: &HostQuant,
@@ -712,6 +780,7 @@ fn backward(
     tokens: &[i32],
     batch: usize,
     stats: &mut StepStats,
+    cfg: &Parallelism,
 ) -> Vec<Tensor> {
     let d = m.d_model;
     let n_layer_params = 1 + 8 * m.n_layers;
@@ -719,8 +788,8 @@ fn backward(
     let head = &params[n_layer_params + 2];
 
     // lm_head GEMM (unquantized).
-    let dhead = matmul_tn(&cache.xf, dlogits);
-    let dxf = matmul_nt(dlogits, head);
+    let dhead = matmul_tn_with(&cache.xf, dlogits, cfg);
+    let dxf = matmul_nt_with(dlogits, head, cfg);
     let (mut dx, dlnf_s, dlnf_b) = layernorm_bwd(&cache.lnf, lnf_s, &dxf);
 
     let mut dlayers: Vec<[Tensor; 8]> = Vec::with_capacity(m.n_layers);
@@ -729,17 +798,17 @@ fn backward(
         let lc = &cache.layers[l];
 
         // MLP block.
-        let (dg, dw2) = linear_bwd(q, th, stats, l, 3, &lc.fc2_in, lp.w2, &dx);
+        let (dg, dw2) = linear_bwd(q, th, stats, l, 3, &lc.fc2_in, lp.w2, &dx, cfg);
         let df = gelu_bwd(&lc.gelu_in, &lc.gelu_t, &dg);
-        let (dh2, dw1) = linear_bwd(q, th, stats, l, 2, &lc.fc1_in, lp.w1, &df);
+        let (dh2, dw1) = linear_bwd(q, th, stats, l, 2, &lc.fc1_in, lp.w1, &df, cfg);
         let (dx_mlp, dln2s, dln2b) = layernorm_bwd(&lc.ln2, lp.ln2_s, &dh2);
         add_into(&mut dx, &dx_mlp);
 
         // Attention block.
-        let (da2d, dwproj) = linear_bwd(q, th, stats, l, 1, &lc.proj_in, lp.wproj, &dx);
+        let (da2d, dwproj) = linear_bwd(q, th, stats, l, 1, &lc.proj_in, lp.wproj, &dx, cfg);
         let (dq3, dk3, dv3) = attention_bwd(m, batch, &lc.attn, &da2d);
         let dqkv = concat3(&dq3, &dk3, &dv3);
-        let (dh2d, dwqkv) = linear_bwd(q, th, stats, l, 0, &lc.qkv_in, lp.wqkv, &dqkv);
+        let (dh2d, dwqkv) = linear_bwd(q, th, stats, l, 0, &lc.qkv_in, lp.wqkv, &dqkv, cfg);
         let (dx_attn, dln1s, dln1b) = layernorm_bwd(&lc.ln1, lp.ln1_s, &dh2d);
         add_into(&mut dx, &dx_attn);
 
@@ -776,6 +845,8 @@ fn backward(
 pub struct HostTrainer {
     pub model: ModelConfig,
     pub quant: HostQuant,
+    /// The per-run engine handle every hot-path call below runs on.
+    pub par: Parallelism,
     pub params: Vec<Tensor>,
     m: Vec<Tensor>,
     v: Vec<Tensor>,
@@ -784,7 +855,7 @@ pub struct HostTrainer {
 impl HostTrainer {
     /// Initialize parameters host-side with the deterministic seed,
     /// exactly like [`super::client::init_param`] does for PJRT.
-    pub fn new(model: ModelConfig, quant: HostQuant, seed: u64) -> HostTrainer {
+    pub fn new(model: ModelConfig, quant: HostQuant, seed: u64, par: Parallelism) -> HostTrainer {
         let specs = crate::model::naming::param_specs(&model);
         let params: Vec<Tensor> = specs
             .iter()
@@ -795,7 +866,7 @@ impl HostTrainer {
             .collect();
         let m = specs.iter().map(|sp| Tensor::zeros(&sp.shape)).collect();
         let v = specs.iter().map(|sp| Tensor::zeros(&sp.shape)).collect();
-        HostTrainer { model, quant, params, m, v }
+        HostTrainer { model, quant, par, params, m, v }
     }
 
     /// One fused step: fwd + manual bwd + Adam. Returns
@@ -818,8 +889,17 @@ impl HostTrainer {
         check_tokens(tokens, self.model.vocab_size)?;
         let n_slots = QuantTensorId::count(&self.model);
         let mut stats = StepStats::new(n_slots);
-        let (logits, cache) =
-            forward(&self.model, &self.quant, th, &self.params, tokens, batch, &mut stats, true);
+        let (logits, cache) = forward(
+            &self.model,
+            &self.quant,
+            th,
+            &self.params,
+            tokens,
+            batch,
+            &mut stats,
+            true,
+            &self.par,
+        );
         let (loss, dlogits) = loss_and_dlogits(&self.model, &logits, tokens, batch);
         let cache = cache.expect("forward(save=true) returns a cache");
         let grads = backward(
@@ -832,6 +912,7 @@ impl HostTrainer {
             tokens,
             batch,
             &mut stats,
+            &self.par,
         );
 
         let bc1 = 1.0 - ADAM_B1.powf(adam_t);
@@ -862,6 +943,7 @@ pub fn host_eval(
     tokens: &[i32],
     mask: &[f32],
     batch: usize,
+    cfg: &Parallelism,
 ) -> Result<(f32, f32)> {
     let (s, v) = (model.seq_len, model.vocab_size);
     if tokens.len() != batch * s || mask.len() != batch * s {
@@ -870,7 +952,8 @@ pub fn host_eval(
     check_tokens(tokens, v)?;
     let mut stats = StepStats::new(QuantTensorId::count(model));
     let quant = HostQuant::baseline();
-    let (logits, _) = forward(model, &quant, 1.0, params, tokens, batch, &mut stats, false);
+    let (logits, _) =
+        forward(model, &quant, 1.0, params, tokens, batch, &mut stats, false, cfg);
     let mut n = 0f64;
     let mut loss = 0f64;
     let mut correct = 0f64;
@@ -910,8 +993,9 @@ pub fn host_quant(
     fmt: ReprType,
     partition: Partition,
     scaling: ScalingAlgo,
+    cfg: &Parallelism,
 ) -> (Tensor, f32) {
-    let fq = fake_quantize(x, fmt, partition, scaling);
+    let fq = fake_quantize_with(x, fmt, partition, scaling, cfg);
     let relerr = fq.global_err.mean() as f32;
     (fq.out, relerr)
 }
@@ -938,7 +1022,8 @@ mod tests {
     #[test]
     fn mor_quantize_baseline_is_identity() {
         let x = Tensor::normal(&[8, 8], 1.0, 1);
-        let (out, re, fb) = mor_quantize(&HostQuant::baseline(), &x, 0.045, 0);
+        let (out, re, fb) =
+            mor_quantize(&HostQuant::baseline(), &x, 0.045, 0, &Parallelism::serial());
         assert_eq!(out, x);
         assert_eq!((re, fb), (0.0, 0.0));
     }
@@ -947,7 +1032,7 @@ mod tests {
     fn mor_quantize_tensor_level_decides() {
         let q = HostQuant::from_fields("tensor_level", "tensor", "gam").unwrap();
         let smooth = Tensor::normal(&[16, 16], 1.0, 2);
-        let (_, re, fb) = mor_quantize(&q, &smooth, 0.045, 0);
+        let (_, re, fb) = mor_quantize(&q, &smooth, 0.045, 0, &Parallelism::serial());
         assert!(re > 0.0 && re < 0.045);
         assert_eq!(fb, 0.0);
         // Wide-range tensor falls back and stays bit-identical.
@@ -955,7 +1040,7 @@ mod tests {
         for (i, v) in wild.data_mut().iter_mut().enumerate() {
             *v *= (10.0f32).powi((i % 13) as i32 - 6);
         }
-        let (out, re, fb) = mor_quantize(&q, &wild, 0.045, 0);
+        let (out, re, fb) = mor_quantize(&q, &wild, 0.045, 0, &Parallelism::serial());
         assert!(re >= 0.045);
         assert_eq!(fb, 1.0);
         assert_eq!(out, wild);
@@ -1016,8 +1101,9 @@ mod tests {
     #[test]
     fn host_training_reduces_loss() {
         let model = ModelConfig::TINY;
-        let mut t = HostTrainer::new(model, HostQuant::baseline(), 42);
-        let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, model.vocab_size, 4, model.seq_len, 42, 0);
+        let mut t = HostTrainer::new(model, HostQuant::baseline(), 42, Parallelism::auto());
+        let profile = CorpusProfile::Nemotron4Like;
+        let loader = BatchLoader::new(profile, model.vocab_size, 4, model.seq_len, 42, 0);
         let mut first = 0f32;
         let mut last = 0f32;
         for i in 0..8 {
@@ -1036,8 +1122,9 @@ mod tests {
     fn host_step_emits_quant_stats() {
         let model = ModelConfig::TINY;
         let quant = HostQuant::from_fields("tensor_level", "block128x128", "gam").unwrap();
-        let mut t = HostTrainer::new(model, quant, 7);
-        let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, model.vocab_size, 2, model.seq_len, 7, 0);
+        let mut t = HostTrainer::new(model, quant, 7, Parallelism::auto());
+        let profile = CorpusProfile::Nemotron4Like;
+        let loader = BatchLoader::new(profile, model.vocab_size, 2, model.seq_len, 7, 0);
         let b = loader.next_batch();
         let (loss, relerr, fallback) = t.step(&b.tokens, 2, 1e-3, 0.045, 1.0).unwrap();
         assert!(loss.is_finite());
@@ -1050,11 +1137,12 @@ mod tests {
     #[test]
     fn host_eval_scores_in_range() {
         let model = ModelConfig::TINY;
-        let t = HostTrainer::new(model, HostQuant::baseline(), 3);
-        let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, model.vocab_size, 2, model.seq_len, 3, 1);
+        let t = HostTrainer::new(model, HostQuant::baseline(), 3, Parallelism::auto());
+        let profile = CorpusProfile::Nemotron4Like;
+        let loader = BatchLoader::new(profile, model.vocab_size, 2, model.seq_len, 3, 1);
         let b = loader.next_batch();
         let mask = crate::coordinator::trainer::full_mask(2, model.seq_len);
-        let (loss, acc) = host_eval(&model, &t.params, &b.tokens, &mask, 2).unwrap();
+        let (loss, acc) = host_eval(&model, &t.params, &b.tokens, &mask, 2, &t.par).unwrap();
         assert!(loss > 0.0 && loss.is_finite());
         assert!((0.0..=1.0).contains(&acc));
         // Untrained ≈ chance over 256 symbols.

@@ -11,6 +11,12 @@
 //!   [`Runtime::host`] needs no artifacts at all, which is what keeps
 //!   `cargo test` and the trainer smoke tests self-contained.
 //!
+//! Every `Runtime` owns a default `util::par::Parallelism` handle (a
+//! persistent worker pool); sessions inherit it at creation, and the
+//! `*_session_with` constructors take an explicit per-run handle — the
+//! path `Trainer::run` uses, so concurrent runs never share or mutate
+//! a process-global engine setting.
+//!
 //! ### Interchange notes (PJRT path)
 //! * HLO **text** is the interchange format, not serialized protos
 //!   (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1

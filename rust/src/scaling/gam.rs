@@ -25,7 +25,7 @@ use crate::util::par::{self, Parallelism};
 
 /// Run Algorithm 1 for one group (serial).
 pub fn compute(q_amax: f32, group_amax: f32, block_amaxes: &[f32]) -> GroupScales {
-    compute_with(q_amax, group_amax, block_amaxes, Parallelism::serial())
+    compute_with(q_amax, group_amax, block_amaxes, &Parallelism::serial())
 }
 
 /// Run Algorithm 1 for one group, chunking the per-block map across
@@ -35,7 +35,7 @@ pub fn compute_with(
     q_amax: f32,
     group_amax: f32,
     block_amaxes: &[f32],
-    cfg: Parallelism,
+    cfg: &Parallelism,
 ) -> GroupScales {
     if group_amax == 0.0 || !group_amax.is_finite() {
         // Degenerate group (all zeros): identity scales throughout.

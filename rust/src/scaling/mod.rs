@@ -112,7 +112,7 @@ pub fn compute_scales(
     group_amax: f32,
     block_amaxes: &[f32],
 ) -> GroupScales {
-    compute_scales_with(algo, q_amax, group_amax, block_amaxes, par::global())
+    compute_scales_with(algo, q_amax, group_amax, block_amaxes, &par::global())
 }
 
 /// [`compute_scales`] with an explicit [`Parallelism`]. Per-block scale
@@ -124,15 +124,15 @@ pub fn compute_scales_with(
     q_amax: f32,
     group_amax: f32,
     block_amaxes: &[f32],
-    cfg: Parallelism,
+    cfg: &Parallelism,
 ) -> GroupScales {
     // The per-block work is a handful of flops; only fan out for very
     // large block lists.
     let cfg = cfg.gate(block_amaxes.len());
     match algo {
-        ScalingAlgo::Gam => gam::compute_with(q_amax, group_amax, block_amaxes, cfg),
+        ScalingAlgo::Gam => gam::compute_with(q_amax, group_amax, block_amaxes, &cfg),
         ScalingAlgo::AmaxFp32 => {
-            let blocks = par::par_map(cfg, block_amaxes.len(), |i| {
+            let blocks = par::par_map(&cfg, block_amaxes.len(), |i| {
                 let ba = block_amaxes[i];
                 if ba == 0.0 || !ba.is_finite() {
                     BlockScale::IDENTITY
@@ -144,7 +144,7 @@ pub fn compute_scales_with(
             GroupScales { group_mantissa: f32::NAN, blocks, algo }
         }
         ScalingAlgo::E8M0 => {
-            let blocks = par::par_map(cfg, block_amaxes.len(), |i| {
+            let blocks = par::par_map(&cfg, block_amaxes.len(), |i| {
                 let ba = block_amaxes[i];
                 if ba == 0.0 || !ba.is_finite() {
                     BlockScale::IDENTITY

@@ -21,11 +21,11 @@ use crate::util::par::{self, Parallelism};
 /// Plain f32 GEMM: C = A @ B, parallel over output-row panels with the
 /// process-global [`Parallelism`].
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
-    matmul_with(a, b, par::global())
+    matmul_with(a, b, &par::global())
 }
 
 /// [`matmul`] with an explicit [`Parallelism`].
-pub fn matmul_with(a: &Tensor, b: &Tensor, cfg: Parallelism) -> Tensor {
+pub fn matmul_with(a: &Tensor, b: &Tensor, cfg: &Parallelism) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
@@ -33,7 +33,7 @@ pub fn matmul_with(a: &Tensor, b: &Tensor, cfg: Parallelism) -> Tensor {
     let (ad, bd) = (a.data(), b.data());
     let cfg = cfg.gate(m * n);
     let bounds = par::chunk_bounds(m, cfg.threads);
-    par::par_panels(&bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
+    par::par_panels(&cfg, &bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
         for (ri, i) in (r0..r1).enumerate() {
             for kk in 0..k {
                 let aik = ad[i * k + kk];
@@ -53,14 +53,14 @@ pub fn matmul_with(a: &Tensor, b: &Tensor, cfg: Parallelism) -> Tensor {
 
 /// C = A^T @ B without materializing the transpose.
 pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
-    matmul_tn_with(a, b, par::global())
+    matmul_tn_with(a, b, &par::global())
 }
 
 /// [`matmul_tn`] with an explicit [`Parallelism`]. Per output element
 /// the contraction still runs in ascending-k order (the loop nest is
 /// output-row-major rather than the serial version's historical k-major
 /// order, which accumulates the identical per-element sequence).
-pub fn matmul_tn_with(a: &Tensor, b: &Tensor, cfg: Parallelism) -> Tensor {
+pub fn matmul_tn_with(a: &Tensor, b: &Tensor, cfg: &Parallelism) -> Tensor {
     let (k, m) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2);
@@ -68,7 +68,7 @@ pub fn matmul_tn_with(a: &Tensor, b: &Tensor, cfg: Parallelism) -> Tensor {
     let (ad, bd) = (a.data(), b.data());
     let cfg = cfg.gate(m * n);
     let bounds = par::chunk_bounds(m, cfg.threads);
-    par::par_panels(&bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
+    par::par_panels(&cfg, &bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
         for (ri, i) in (r0..r1).enumerate() {
             let crow = &mut cd[ri * n..ri * n + n];
             for kk in 0..k {
@@ -88,11 +88,11 @@ pub fn matmul_tn_with(a: &Tensor, b: &Tensor, cfg: Parallelism) -> Tensor {
 
 /// C = A @ B^T.
 pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
-    matmul_nt_with(a, b, par::global())
+    matmul_nt_with(a, b, &par::global())
 }
 
 /// [`matmul_nt`] with an explicit [`Parallelism`].
-pub fn matmul_nt_with(a: &Tensor, b: &Tensor, cfg: Parallelism) -> Tensor {
+pub fn matmul_nt_with(a: &Tensor, b: &Tensor, cfg: &Parallelism) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (n, k2) = (b.rows(), b.cols());
     assert_eq!(k, k2);
@@ -100,7 +100,7 @@ pub fn matmul_nt_with(a: &Tensor, b: &Tensor, cfg: Parallelism) -> Tensor {
     let (ad, bd) = (a.data(), b.data());
     let cfg = cfg.gate(m * n);
     let bounds = par::chunk_bounds(m, cfg.threads);
-    par::par_panels(&bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
+    par::par_panels(&cfg, &bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
         for (ri, i) in (r0..r1).enumerate() {
             let arow = &ad[i * k..i * k + k];
             for j in 0..n {
@@ -166,7 +166,7 @@ pub struct MixedGemmReport {
 }
 
 pub fn mixed_gemm(a: &Tensor, ta: &BlockTypes, b: &Tensor, tb: &BlockTypes) -> MixedGemmReport {
-    mixed_gemm_with(a, ta, b, tb, par::global())
+    mixed_gemm_with(a, ta, b, tb, &par::global())
 }
 
 /// [`mixed_gemm`] with an explicit [`Parallelism`]: parallel over
@@ -177,7 +177,7 @@ pub fn mixed_gemm_with(
     ta: &BlockTypes,
     b: &Tensor,
     tb: &BlockTypes,
-    cfg: Parallelism,
+    cfg: &Parallelism,
 ) -> MixedGemmReport {
     assert_eq!(ta.block, tb.block, "operand partitions must agree on K");
     let blk = ta.block;
@@ -190,7 +190,7 @@ pub fn mixed_gemm_with(
     let cfg = cfg.gate(m * n);
     let bounds = par::unit_panel_bounds(n_bi, blk, m, cfg.threads);
     let panel_macs: Vec<[u64; 4]> =
-        par::par_panels(&bounds, n, out.data_mut(), |_pi, (row0, row1), od| {
+        par::par_panels(&cfg, &bounds, n, out.data_mut(), |_pi, (row0, row1), od| {
             let mut macs = [0u64; 4];
             for bi in row0 / blk..row1.div_ceil(blk) {
                 for bj in 0..n.div_ceil(blk) {

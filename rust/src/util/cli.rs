@@ -60,15 +60,21 @@ impl Args {
     }
 
     pub fn usize(&self, key: &str, default: usize) -> usize {
-        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {v:?}"))).unwrap_or(default)
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {v:?}")))
+            .unwrap_or(default)
     }
 
     pub fn u64(&self, key: &str, default: u64) -> u64 {
-        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a u64, got {v:?}"))).unwrap_or(default)
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a u64, got {v:?}")))
+            .unwrap_or(default)
     }
 
     pub fn f32(&self, key: &str, default: f32) -> f32 {
-        self.get(key).map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a float, got {v:?}"))).unwrap_or(default)
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a float, got {v:?}")))
+            .unwrap_or(default)
     }
 }
 

@@ -1,6 +1,6 @@
 //! Parallel chunked execution engine for the quantization/analysis
-//! pipeline: a std-only scoped-thread worker layer with **deterministic
-//! block-order chunking**.
+//! pipeline: a std-only **persistent worker pool** with deterministic
+//! block-order chunking.
 //!
 //! Design contract, relied on by every caller and enforced by
 //! `rust/tests/parallel_equivalence.rs`: results are **bit-identical to
@@ -12,49 +12,143 @@
 //! output element therefore never changes.
 //!
 //! Work distribution is static: item range `0..n` is cut into at most
-//! `threads` contiguous chunks. No work stealing, no locks on the hot
-//! path, no allocation inside workers beyond their own result vectors.
+//! `threads` contiguous chunks. No work stealing between chunks, no
+//! locks on the hot path, no allocation inside workers beyond their own
+//! result vectors.
+//!
+//! ## The worker pool
+//!
+//! A [`Parallelism`] handle owns (a shared reference to) one
+//! [`WorkerPool`]: `threads - 1` lazily-spawned worker threads fed
+//! through a chunk queue, with the calling thread always executing the
+//! first chunk itself and then helping drain the queue until its call
+//! completes. The help-while-waiting step is what makes *nested*
+//! parallel sections (pipeline-level overlap via [`join2`] around
+//! chunk-parallel quantizations) deadlock-free: a waiting caller never
+//! idles while runnable chunks exist.
+//!
+//! Clones of a handle share the pool, so consecutive `par_map` /
+//! `par_panels` calls reuse the same workers instead of paying a
+//! spawn/join wave per call (the old scoped-thread engine is retained
+//! behind [`Engine::Spawn`] for benchmark comparison). Worker panics
+//! are caught, forwarded, and re-raised on the calling thread; dropping
+//! the last handle shuts the pool down and joins every worker.
 
+use std::any::Any;
+use std::collections::VecDeque;
 use std::marker::PhantomData;
-use std::sync::Mutex;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Elements below which tensor-granularity operations stay serial (the
-/// "min-block-size cutoff": spawning threads for a 64x64 tensor costs
+/// "min-block-size cutoff": dispatching chunks for a 64x64 tensor costs
 /// more than the quantization itself).
 pub const DEFAULT_MIN_ITEMS: usize = 8192;
 
-/// Parallelism configuration: worker count plus the serial cutoff.
+/// Which execution engine a [`Parallelism`] dispatches chunks on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Persistent worker pool (the default): chunks go through the
+    /// pool's queue, workers are reused across calls.
+    Pool,
+    /// Scoped thread per chunk, spawned and joined inside every call —
+    /// the original engine, kept for the pool-vs-spawn bench comparison
+    /// and as a reference implementation.
+    Spawn,
+}
+
+/// Parallelism configuration **and** pool handle: worker count, the
+/// serial cutoff, and a shared reference to the persistent worker pool
+/// that executes chunks. Cheap to clone (clones share the pool); the
+/// pool shuts down when the last handle drops.
+///
+/// One handle is owned per run (`TrainerOptions::parallelism`, the
+/// `Runtime` default) and threaded through the session API down to
+/// every `fake_quantize` / GEMM call, replacing the former process-wide
+/// scoped override.
+#[derive(Debug, Clone)]
 pub struct Parallelism {
-    /// Number of worker threads (1 = serial).
+    /// Number of concurrent chunk runners (1 = serial). The pool itself
+    /// holds `threads - 1` workers; the calling thread is the last one.
     pub threads: usize,
     /// Workloads smaller than this many items run serially even when
     /// `threads > 1`.
     pub min_items: usize,
+    engine: Engine,
+    pool: Option<Arc<WorkerPool>>,
 }
 
+impl PartialEq for Parallelism {
+    fn eq(&self, other: &Self) -> bool {
+        self.threads == other.threads
+            && self.min_items == other.min_items
+            && self.engine == other.engine
+    }
+}
+
+impl Eq for Parallelism {}
+
 impl Parallelism {
-    /// Strictly serial execution.
+    /// Strictly serial execution (no pool behind it).
     pub fn serial() -> Parallelism {
-        Parallelism { threads: 1, min_items: usize::MAX }
+        Parallelism { threads: 1, min_items: usize::MAX, engine: Engine::Pool, pool: None }
     }
 
-    /// `n` worker threads with the default serial cutoff.
+    /// `n` chunk runners with the default serial cutoff.
     pub fn with_threads(n: usize) -> Parallelism {
-        Parallelism { threads: n.max(1), min_items: DEFAULT_MIN_ITEMS }
+        Parallelism::pooled(n, DEFAULT_MIN_ITEMS)
+    }
+
+    /// `threads` chunk runners with an explicit serial cutoff — the
+    /// constructor tests and benches use to force tiny workloads onto
+    /// the parallel path.
+    pub fn pooled(threads: usize, min_items: usize) -> Parallelism {
+        let threads = threads.max(1);
+        let pool = (threads > 1).then(|| Arc::new(WorkerPool::new(threads)));
+        Parallelism { threads, min_items, engine: Engine::Pool, pool }
     }
 
     /// Autodetect: `MOR_THREADS` env override, else the machine's
     /// available parallelism.
+    ///
+    /// # Panics
+    /// When `MOR_THREADS` is set but not a positive integer. A silent
+    /// fallback here used to hide typos (`MOR_THREADS=O8` ran serial);
+    /// misconfiguring the determinism matrix should be loud.
     pub fn auto() -> Parallelism {
-        let threads = std::env::var("MOR_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|n| *n >= 1)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            });
+        let env = std::env::var("MOR_THREADS").ok();
+        let threads = match parse_mor_threads(env.as_deref()) {
+            Ok(Some(n)) => n,
+            Ok(None) => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            Err(msg) => panic!("{msg}"),
+        };
         Parallelism::with_threads(threads)
+    }
+
+    /// This handle switched to `engine` (building the pool if the pool
+    /// engine now needs one, dropping it for the spawn engine).
+    pub fn with_engine(mut self, engine: Engine) -> Parallelism {
+        self.engine = engine;
+        match engine {
+            Engine::Spawn => self.pool = None,
+            Engine::Pool => {
+                if self.threads > 1 && self.pool.is_none() {
+                    self.pool = Some(Arc::new(WorkerPool::new(self.threads)));
+                }
+            }
+        }
+        self
+    }
+
+    /// The engine this handle dispatches on.
+    pub fn engine(&self) -> Engine {
+        self.engine
+    }
+
+    /// The pool behind this handle (`None` for serial / spawn configs).
+    pub fn worker_pool(&self) -> Option<&WorkerPool> {
+        self.pool.as_deref()
     }
 
     /// Whether a workload of `items` units is worth fanning out.
@@ -66,24 +160,48 @@ impl Parallelism {
     /// workload: unchanged when large enough, serial otherwise.
     pub fn gate(&self, items: usize) -> Parallelism {
         if self.should_parallelize(items) {
-            *self
+            self.clone()
         } else {
             Parallelism::serial()
         }
     }
 }
 
-static GLOBAL: Mutex<Option<Parallelism>> = Mutex::new(None);
-
-/// Process-wide default parallelism, used by the public hot-path entry
-/// points (`fake_quantize`, `matmul`, `Recipe::apply`, ...). Lazily
-/// initialized to [`Parallelism::auto`].
-pub fn global() -> Parallelism {
-    let mut g = GLOBAL.lock().unwrap();
-    *g.get_or_insert_with(Parallelism::auto)
+/// Parse a `MOR_THREADS` value: `Ok(None)` when unset, `Ok(Some(n))`
+/// for a positive integer, and a clear error for everything else —
+/// `0` (no workers is not a thread count; use 1 for serial), empty,
+/// negative or non-numeric strings.
+pub fn parse_mor_threads(raw: Option<&str>) -> Result<Option<usize>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return Err(
+            "MOR_THREADS is set but empty; use a positive integer or unset it".to_string()
+        );
+    }
+    match trimmed.parse::<usize>() {
+        Ok(0) => Err(
+            "MOR_THREADS must be >= 1 (use 1 for serial, unset for autodetect)".to_string()
+        ),
+        Ok(n) => Ok(Some(n)),
+        Err(_) => Err(format!("MOR_THREADS must be a positive integer, got {trimmed:?}")),
+    }
 }
 
-/// Override the process-wide default (CLI `--threads`, benches, tests).
+static GLOBAL: Mutex<Option<Parallelism>> = Mutex::new(None);
+
+/// Process-wide default parallelism, used by the no-argument entry
+/// points (`fake_quantize`, `matmul`, `Recipe::apply`, ...) and as the
+/// default handle for new `Runtime`s. Lazily initialized to
+/// [`Parallelism::auto`]; the handle (and its pool) lives for the rest
+/// of the process once created.
+pub fn global() -> Parallelism {
+    GLOBAL.lock().unwrap().get_or_insert_with(Parallelism::auto).clone()
+}
+
+/// Override the process-wide default (CLI `--threads`). Per-run
+/// configuration should prefer an owned [`Parallelism`] handle threaded
+/// through the session API over mutating this.
 pub fn set_global(p: Parallelism) {
     *GLOBAL.lock().unwrap() = Some(p);
 }
@@ -106,9 +224,303 @@ pub fn chunk_bounds(n: usize, parts: usize) -> Vec<(usize, usize)> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// The worker pool
+// ---------------------------------------------------------------------------
+
+/// A lifetime-erased chunk of work on the pool queue.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// How often an idle helper re-checks the queue while parked on its
+/// completion latch (new submissions signal the workers' condvar, not
+/// the helper's, so the helper polls at this bounded cadence).
+const HELPER_RECHECK: std::time::Duration = std::time::Duration::from_micros(500);
+
+struct PoolQueue {
+    tasks: VecDeque<Task>,
+    shutdown: bool,
+    spawned: usize,
+}
+
+struct PoolShared {
+    queue: Mutex<PoolQueue>,
+    /// Signals workers that a task arrived (or shutdown was requested).
+    work_cv: Condvar,
+}
+
+/// The persistent worker set behind a [`Parallelism`] handle: lazily
+/// spawned threads draining a shared chunk queue.
+///
+/// * **Lazy**: no thread exists until the first chunk is submitted.
+/// * **Panic-safe**: chunks are run under `catch_unwind`; a panicking
+///   chunk poisons nothing, the payload is re-raised on the caller and
+///   the worker survives to serve the next call.
+/// * **Clean shutdown**: dropping the pool (the last `Parallelism`
+///   clone) flags shutdown, wakes every worker and joins them all — no
+///   leaked threads.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    /// Live worker count; each worker holds a guard that decrements on
+    /// any exit path. Outlives the pool via [`WorkerPool::alive_probe`].
+    alive: Arc<AtomicUsize>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Worker threads this pool spawns: the calling thread always runs
+    /// chunks too, so a `threads`-way config needs `threads - 1`.
+    workers: usize,
+    /// Lock-free fast path for [`WorkerPool::ensure_spawned`] once the
+    /// one-time spawn has happened.
+    started: std::sync::atomic::AtomicBool,
+}
+
+impl WorkerPool {
+    /// A pool sized for `threads`-way parallelism (`threads - 1` worker
+    /// threads + the calling thread). Workers spawn on first use.
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool {
+            shared: Arc::new(PoolShared {
+                queue: Mutex::new(PoolQueue {
+                    tasks: VecDeque::new(),
+                    shutdown: false,
+                    spawned: 0,
+                }),
+                work_cv: Condvar::new(),
+            }),
+            alive: Arc::new(AtomicUsize::new(0)),
+            handles: Mutex::new(Vec::new()),
+            workers: threads.saturating_sub(1).max(1),
+            started: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    /// Worker threads spawned so far (0 until the first submit).
+    pub fn spawned_workers(&self) -> usize {
+        self.shared.queue.lock().unwrap().spawned
+    }
+
+    /// Worker threads currently alive.
+    pub fn alive_workers(&self) -> usize {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    /// A counter handle that outlives the pool: reads 0 once every
+    /// worker has exited. The shutdown-on-drop observability hook.
+    pub fn alive_probe(&self) -> Arc<AtomicUsize> {
+        self.alive.clone()
+    }
+
+    fn ensure_spawned(&self) {
+        if self.started.load(Ordering::Acquire) {
+            return;
+        }
+        let to_spawn = {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.shutdown || q.spawned >= self.workers {
+                return;
+            }
+            let first = q.spawned;
+            q.spawned = self.workers;
+            first..self.workers
+        };
+        self.started.store(true, Ordering::Release);
+        let mut handles = self.handles.lock().unwrap();
+        for wi in to_spawn {
+            self.alive.fetch_add(1, Ordering::AcqRel);
+            let shared = self.shared.clone();
+            let alive = self.alive.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("mor-pool-{wi}"))
+                .spawn(move || worker_loop(shared, alive));
+            match spawned {
+                Ok(handle) => handles.push(handle),
+                Err(_) => {
+                    // Must not unwind here: submit() runs inside
+                    // run_all, whose queued tasks borrow the caller's
+                    // frame. Fewer workers is always safe — the
+                    // calling thread drains its own chunks regardless.
+                    self.alive.fetch_sub(1, Ordering::AcqRel);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Queue one task. Callers dispatching a batch run
+    /// [`WorkerPool::ensure_spawned`] once up front (`run_all`,
+    /// `join2`) rather than paying the check per task.
+    fn submit(&self, task: Task) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.tasks.push_back(task);
+        }
+        self.shared.work_cv.notify_one();
+    }
+
+    fn try_pop(&self) -> Option<Task> {
+        self.shared.queue.lock().unwrap().tasks.pop_front()
+    }
+
+    /// Run queued chunks on the calling thread until `comp` completes.
+    /// This is what keeps nested parallel sections live: a caller
+    /// waiting on its own chunks executes whatever work is runnable
+    /// (its chunks, or chunks of the call it is nested inside).
+    fn help_until(&self, comp: &Completion) {
+        loop {
+            {
+                let remaining = comp.remaining.lock().unwrap();
+                if *remaining == 0 {
+                    return;
+                }
+            }
+            match self.try_pop() {
+                Some(task) => task(),
+                None => {
+                    let remaining = comp.remaining.lock().unwrap();
+                    if *remaining == 0 {
+                        return;
+                    }
+                    // Queue empty + chunks outstanding: they are being
+                    // executed by other threads. `finish_one` notifies
+                    // under the `remaining` lock, so this check-then-
+                    // wait cannot miss the last completion. The timeout
+                    // bounds a second race this condvar cannot see:
+                    // tasks *submitted* (by nested sections on other
+                    // threads) while we sleep only signal `work_cv`, so
+                    // re-check the queue at a fixed cadence rather than
+                    // idling until our own call completes.
+                    let waited = comp
+                        .done_cv
+                        .wait_timeout(remaining, HELPER_RECHECK)
+                        .unwrap();
+                    drop(waited);
+                }
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for handle in self.handles.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers)
+            .field("spawned", &self.spawned_workers())
+            .finish()
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, alive: Arc<AtomicUsize>) {
+    // Decrement the live count on every exit path. Tasks catch their
+    // own panics, so an unwind out of `task()` should be impossible;
+    // the guard makes the count right even if one slips through.
+    struct AliveGuard(Arc<AtomicUsize>);
+    impl Drop for AliveGuard {
+        fn drop(&mut self) {
+            self.0.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+    let _guard = AliveGuard(alive);
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(task) = q.tasks.pop_front() {
+                    break Some(task);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        match task {
+            Some(task) => task(),
+            None => return,
+        }
+    }
+}
+
+/// Completion latch for one parallel call: open when every chunk has
+/// run, carrying the first panic payload if any chunk panicked.
+struct Completion {
+    remaining: Mutex<usize>,
+    done_cv: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Completion {
+    fn new(n: usize) -> Completion {
+        Completion { remaining: Mutex::new(n), done_cv: Condvar::new(), panic: Mutex::new(None) }
+    }
+
+    fn finish_one(&self) {
+        let mut remaining = self.remaining.lock().unwrap();
+        *remaining -= 1;
+        if *remaining == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    fn record_panic(&self, payload: Box<dyn Any + Send>) {
+        let mut slot = self.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+
+    fn take_panic(&self) -> Option<Box<dyn Any + Send>> {
+        self.panic.lock().unwrap().take()
+    }
+}
+
+/// Erase a task's borrow lifetime so it can cross the pool's `'static`
+/// queue.
+///
+/// # Safety
+/// The caller must not return — normally or by unwinding — until the
+/// task has finished running, so every borrow the task holds outlives
+/// its execution. [`run_all`] enforces this with a completion latch.
+unsafe fn erase<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> Task {
+    unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Task>(task) }
+}
+
+/// Drive `tasks` to completion on `pool`: every task but the first is
+/// fed to the chunk queue, the first runs on the calling thread, then
+/// the caller helps drain the queue until the latch opens. `comp` must
+/// have been created with `tasks.len()` pending counts and every task
+/// must call `comp.finish_one()` exactly once (and never unwind —
+/// wrappers catch panics into the latch).
+fn run_all(pool: &WorkerPool, mut tasks: Vec<Box<dyn FnOnce() + Send + '_>>, comp: &Completion) {
+    pool.ensure_spawned();
+    let first = tasks.remove(0);
+    for task in tasks {
+        // Safety: `help_until` below blocks this frame until every
+        // submitted task has run (the latch only opens after the last
+        // `finish_one`), so the borrows inside `task` stay valid.
+        pool.submit(unsafe { erase(task) });
+    }
+    first();
+    pool.help_until(comp);
+}
+
+// ---------------------------------------------------------------------------
+// Parallel primitives
+// ---------------------------------------------------------------------------
+
 /// Map `f` over `0..n`, returning results in index order. Chunks are
 /// contiguous, so the concatenation order is independent of scheduling.
-pub fn par_map<R, F>(cfg: Parallelism, n: usize, f: F) -> Vec<R>
+pub fn par_map<R, F>(cfg: &Parallelism, n: usize, f: F) -> Vec<R>
 where
     R: Send,
     F: Fn(usize) -> R + Sync,
@@ -117,11 +529,62 @@ where
         return (0..n).map(f).collect();
     }
     let bounds = chunk_bounds(n, cfg.threads);
+    if bounds.len() <= 1 {
+        return (0..n).map(f).collect();
+    }
+    match (cfg.engine, cfg.pool.as_deref()) {
+        (Engine::Pool, Some(pool)) => par_map_pool(pool, &bounds, &f),
+        _ => par_map_spawn(&bounds, &f),
+    }
+}
+
+fn par_map_pool<R, F>(pool: &WorkerPool, bounds: &[(usize, usize)], f: &F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let comp = Completion::new(bounds.len());
+    let results: Vec<Mutex<Option<Vec<R>>>> = bounds.iter().map(|_| Mutex::new(None)).collect();
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = bounds
+        .iter()
+        .enumerate()
+        .map(|(ci, &(lo, hi))| {
+            let (comp, results) = (&comp, &results);
+            Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| {
+                    (lo..hi).map(|i| f(i)).collect::<Vec<R>>()
+                }));
+                match out {
+                    Ok(v) => *results[ci].lock().unwrap() = Some(v),
+                    Err(payload) => comp.record_panic(payload),
+                }
+                comp.finish_one();
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    run_all(pool, tasks, &comp);
+    if let Some(payload) = comp.take_panic() {
+        resume_unwind(payload);
+    }
+    results
+        .into_iter()
+        .flat_map(|slot| {
+            slot.into_inner().unwrap().expect("pool chunk completed without a result")
+        })
+        .collect()
+}
+
+/// The original scoped-thread engine ([`Engine::Spawn`]): one thread
+/// per chunk, spawned and joined inside the call.
+fn par_map_spawn<R, F>(bounds: &[(usize, usize)], f: &F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
     let chunks: Vec<Vec<R>> = std::thread::scope(|s| {
-        let f = &f;
         let handles: Vec<_> = bounds
             .iter()
-            .map(|&(lo, hi)| s.spawn(move || (lo..hi).map(f).collect::<Vec<R>>()))
+            .map(|&(lo, hi)| s.spawn(move || (lo..hi).map(|i| f(i)).collect::<Vec<R>>()))
             .collect();
         handles
             .into_iter()
@@ -137,6 +600,7 @@ where
 /// and exactly cover `out.len() / row_size` rows. Panel `i` receives
 /// `(i, (row_lo, row_hi), &mut out[row_lo*row_size .. row_hi*row_size])`.
 pub fn par_panels<R, F>(
+    cfg: &Parallelism,
     bounds: &[(usize, usize)],
     row_size: usize,
     out: &mut [f32],
@@ -151,14 +615,76 @@ where
         out.len(),
         "panel bounds must cover the output"
     );
-    if bounds.len() <= 1 {
+    if bounds.len() <= 1 || cfg.threads <= 1 {
         return bounds
             .iter()
-            .map(|&(r0, r1)| f(0, (r0, r1), &mut out[r0 * row_size..r1 * row_size]))
+            .enumerate()
+            .map(|(pi, &(r0, r1))| f(pi, (r0, r1), &mut out[r0 * row_size..r1 * row_size]))
             .collect();
     }
+    match (cfg.engine, cfg.pool.as_deref()) {
+        (Engine::Pool, Some(pool)) => par_panels_pool(pool, bounds, row_size, out, &f),
+        _ => par_panels_spawn(bounds, row_size, out, &f),
+    }
+}
+
+fn par_panels_pool<R, F>(
+    pool: &WorkerPool,
+    bounds: &[(usize, usize)],
+    row_size: usize,
+    out: &mut [f32],
+    f: &F,
+) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, (usize, usize), &mut [f32]) -> R + Sync,
+{
+    let comp = Completion::new(bounds.len());
+    let results: Vec<Mutex<Option<R>>> = bounds.iter().map(|_| Mutex::new(None)).collect();
+    let mut panels = Vec::with_capacity(bounds.len());
+    let mut rest: &mut [f32] = out;
+    for &(r0, r1) in bounds {
+        let (panel, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * row_size);
+        panels.push(panel);
+        rest = tail;
+    }
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = panels
+        .into_iter()
+        .enumerate()
+        .map(|(pi, panel)| {
+            let (comp, results) = (&comp, &results);
+            let (r0, r1) = bounds[pi];
+            Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(pi, (r0, r1), panel)));
+                match out {
+                    Ok(v) => *results[pi].lock().unwrap() = Some(v),
+                    Err(payload) => comp.record_panic(payload),
+                }
+                comp.finish_one();
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    run_all(pool, tasks, &comp);
+    if let Some(payload) = comp.take_panic() {
+        resume_unwind(payload);
+    }
+    results
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("pool panel completed without a result"))
+        .collect()
+}
+
+fn par_panels_spawn<R, F>(
+    bounds: &[(usize, usize)],
+    row_size: usize,
+    out: &mut [f32],
+    f: &F,
+) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, (usize, usize), &mut [f32]) -> R + Sync,
+{
     std::thread::scope(|s| {
-        let f = &f;
         let mut rest: &mut [f32] = out;
         let mut handles = Vec::with_capacity(bounds.len());
         for (pi, &(r0, r1)) in bounds.iter().enumerate() {
@@ -171,6 +697,58 @@ where
             .map(|h| h.join().expect("mor worker thread panicked"))
             .collect()
     })
+}
+
+/// Run two independent computations, `fb` on a pool worker (or a
+/// scoped thread for the spawn engine) overlapped with `fa` on the
+/// calling thread. The pipeline-level building block: overlapping whole
+/// quantizations, transposes and GEMMs that share no data. Results come
+/// back in argument order and each closure is an independent
+/// computation, so callers stay bit-deterministic by construction.
+pub fn join2<A, B, FA, FB>(cfg: &Parallelism, fa: FA, fb: FB) -> (A, B)
+where
+    B: Send,
+    FA: FnOnce() -> A,
+    FB: FnOnce() -> B + Send,
+{
+    if cfg.threads <= 1 {
+        let a = fa();
+        let b = fb();
+        return (a, b);
+    }
+    match (cfg.engine, cfg.pool.as_deref()) {
+        (Engine::Pool, Some(pool)) => {
+            pool.ensure_spawned();
+            let comp = Completion::new(1);
+            let slot: Mutex<Option<B>> = Mutex::new(None);
+            {
+                let (comp, slot) = (&comp, &slot);
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    match catch_unwind(AssertUnwindSafe(fb)) {
+                        Ok(v) => *slot.lock().unwrap() = Some(v),
+                        Err(payload) => comp.record_panic(payload),
+                    }
+                    comp.finish_one();
+                });
+                // Safety: `help_until` below blocks until the task ran.
+                pool.submit(unsafe { erase(task) });
+            }
+            let a = catch_unwind(AssertUnwindSafe(fa));
+            pool.help_until(&comp);
+            if let Some(payload) = comp.take_panic() {
+                resume_unwind(payload);
+            }
+            let a = a.unwrap_or_else(|payload| resume_unwind(payload));
+            let b = slot.into_inner().unwrap().expect("join2 task completed without a result");
+            (a, b)
+        }
+        _ => std::thread::scope(|s| {
+            let hb = s.spawn(fb);
+            let a = fa();
+            let b = hb.join().unwrap_or_else(|payload| resume_unwind(payload));
+            (a, b)
+        }),
+    }
 }
 
 /// A shared view over a mutable slice for writes to **provably disjoint
@@ -218,7 +796,12 @@ impl<'a, T> DisjointWriter<'a, T> {
 /// Convenience: chunk boundaries in *row* space for panels aligned to
 /// `unit` rows (GEMM block-row panels): units `0..n_units` are chunked,
 /// then converted to row ranges capped at `rows`.
-pub fn unit_panel_bounds(n_units: usize, unit: usize, rows: usize, parts: usize) -> Vec<(usize, usize)> {
+pub fn unit_panel_bounds(
+    n_units: usize,
+    unit: usize,
+    rows: usize,
+    parts: usize,
+) -> Vec<(usize, usize)> {
     chunk_bounds(n_units, parts)
         .into_iter()
         .map(|(u0, u1)| (u0 * unit, (u1 * unit).min(rows)))
@@ -251,18 +834,19 @@ mod tests {
 
     #[test]
     fn par_map_preserves_order() {
-        let cfg = Parallelism { threads: 4, min_items: 1 };
-        let out = par_map(cfg, 100, |i| i * i);
+        let cfg = Parallelism::pooled(4, 1);
+        let out = par_map(&cfg, 100, |i| i * i);
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
-        let serial = par_map(Parallelism::serial(), 100, |i| i * i);
+        let serial = par_map(&Parallelism::serial(), 100, |i| i * i);
         assert_eq!(out, serial);
     }
 
     #[test]
     fn par_panels_writes_disjoint_rows() {
+        let cfg = Parallelism::pooled(3, 1);
         let mut out = vec![0.0f32; 10 * 4];
         let bounds = chunk_bounds(10, 3);
-        let sums = par_panels(&bounds, 4, &mut out, |_pi, (r0, r1), panel| {
+        let sums = par_panels(&cfg, &bounds, 4, &mut out, |_pi, (r0, r1), panel| {
             for (ri, r) in (r0..r1).enumerate() {
                 for c in 0..4 {
                     panel[ri * 4 + c] = (r * 4 + c) as f32;
@@ -281,8 +865,8 @@ mod tests {
         let mut data = vec![0u64; 1000];
         {
             let w = DisjointWriter::new(&mut data);
-            let cfg = Parallelism { threads: 8, min_items: 1 };
-            par_map(cfg, 1000, |i| unsafe { w.write(i, i as u64 + 1) });
+            let cfg = Parallelism::pooled(8, 1);
+            par_map(&cfg, 1000, |i| unsafe { w.write(i, i as u64 + 1) });
         }
         for (i, v) in data.iter().enumerate() {
             assert_eq!(*v, i as u64 + 1);
@@ -291,11 +875,12 @@ mod tests {
 
     #[test]
     fn gate_applies_cutoff() {
-        let cfg = Parallelism { threads: 8, min_items: 100 };
+        let cfg = Parallelism::pooled(8, 100);
         assert_eq!(cfg.gate(99), Parallelism::serial());
         assert_eq!(cfg.gate(100), cfg);
         assert!(!Parallelism::serial().should_parallelize(usize::MAX));
         assert!(Parallelism::with_threads(1).threads == 1);
+        assert!(Parallelism::with_threads(1).worker_pool().is_none());
     }
 
     #[test]
@@ -311,9 +896,124 @@ mod tests {
     #[test]
     fn global_settable() {
         // Note: global state; only assert set/get coherence.
-        set_global(Parallelism { threads: 3, min_items: 7 });
+        set_global(Parallelism::pooled(3, 7));
         assert_eq!(global().threads, 3);
         set_global(Parallelism::auto());
         assert!(global().threads >= 1);
+    }
+
+    #[test]
+    fn mor_threads_parsing_is_strict() {
+        assert_eq!(parse_mor_threads(None), Ok(None));
+        assert_eq!(parse_mor_threads(Some("4")), Ok(Some(4)));
+        assert_eq!(parse_mor_threads(Some(" 13 ")), Ok(Some(13)));
+        assert!(parse_mor_threads(Some("0")).is_err());
+        assert!(parse_mor_threads(Some("-2")).is_err());
+        assert!(parse_mor_threads(Some("eight")).is_err());
+        assert!(parse_mor_threads(Some("")).is_err());
+        assert!(parse_mor_threads(Some("  ")).is_err());
+    }
+
+    #[test]
+    fn pool_is_reused_across_calls() {
+        let cfg = Parallelism::pooled(4, 1);
+        assert_eq!(cfg.worker_pool().unwrap().spawned_workers(), 0, "pool must be lazy");
+        let a = par_map(&cfg, 64, |i| i + 1);
+        let spawned = cfg.worker_pool().unwrap().spawned_workers();
+        assert_eq!(spawned, 3, "4-way parallelism = caller + 3 workers");
+        let b = par_map(&cfg, 64, |i| i + 1);
+        assert_eq!(a, b);
+        assert_eq!(
+            cfg.worker_pool().unwrap().spawned_workers(),
+            spawned,
+            "second call must reuse the pool, not respawn"
+        );
+        assert_eq!(cfg.worker_pool().unwrap().alive_workers(), spawned);
+        // Clones share the same pool.
+        let clone = cfg.clone();
+        let _ = par_map(&clone, 64, |i| i);
+        assert_eq!(clone.worker_pool().unwrap().spawned_workers(), spawned);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let cfg = Parallelism::pooled(4, 1);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            par_map(&cfg, 100, |i| {
+                if i == 57 {
+                    panic!("intentional test panic at {i}");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err(), "worker panic must reach the caller");
+        // The pool stays serviceable: same workers, correct results.
+        let v = par_map(&cfg, 100, |i| i * 2);
+        assert_eq!(v, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(cfg.worker_pool().unwrap().alive_workers(), 3);
+        // Panel-path panics propagate too.
+        let mut out = vec![0.0f32; 12];
+        let bounds = chunk_bounds(12, 4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            par_panels(&cfg, &bounds, 1, &mut out, |pi, _b, _panel| {
+                if pi == 2 {
+                    panic!("intentional panel panic");
+                }
+                pi
+            })
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn pool_shuts_down_on_drop() {
+        let cfg = Parallelism::pooled(4, 1);
+        let probe = cfg.worker_pool().unwrap().alive_probe();
+        let _ = par_map(&cfg, 64, |i| i);
+        assert_eq!(probe.load(Ordering::Acquire), 3);
+        let clone = cfg.clone();
+        drop(cfg);
+        assert_eq!(probe.load(Ordering::Acquire), 3, "clone keeps the pool alive");
+        drop(clone);
+        assert_eq!(probe.load(Ordering::Acquire), 0, "workers leaked past drop");
+    }
+
+    #[test]
+    fn nested_par_map_does_not_deadlock() {
+        let cfg = Parallelism::pooled(3, 1);
+        let out = par_map(&cfg, 6, |i| {
+            let inner = par_map(&cfg, 5, move |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        let expect: Vec<usize> = (0..6).map(|i| (0..5).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn join2_overlaps_and_propagates() {
+        let cfg = Parallelism::pooled(4, 1);
+        let (a, b) = join2(&cfg, || 40 + 2, || "side".to_string());
+        assert_eq!((a, b.as_str()), (42, "side"));
+        let (a, b) = join2(&Parallelism::serial(), || 1, || 2);
+        assert_eq!((a, b), (1, 2));
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            join2(&cfg, || 7, || -> usize { panic!("intentional join2 panic") })
+        }));
+        assert!(r.is_err(), "side-branch panic must reach the caller");
+        // Pool still fine afterwards.
+        let (a, b) = join2(&cfg, || 1, || 2);
+        assert_eq!((a, b), (1, 2));
+    }
+
+    #[test]
+    fn spawn_engine_matches_pool_engine() {
+        let pool_cfg = Parallelism::pooled(4, 1);
+        let spawn_cfg = Parallelism::pooled(4, 1).with_engine(Engine::Spawn);
+        assert!(spawn_cfg.worker_pool().is_none());
+        let a = par_map(&pool_cfg, 257, |i| (i as f32).sin());
+        let b = par_map(&spawn_cfg, 257, |i| (i as f32).sin());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 }

@@ -89,49 +89,97 @@ fn check_artifact(
 #[test]
 fn quant_e4m3_gam_block128_matches_host() {
     let Some(rt) = runtime() else { return };
-    check_artifact(&rt, "quant_e4m3_gam_block128", ReprType::E4M3, Partition::BLOCK128, ScalingAlgo::Gam);
+    check_artifact(
+        &rt,
+        "quant_e4m3_gam_block128",
+        ReprType::E4M3,
+        Partition::BLOCK128,
+        ScalingAlgo::Gam,
+    );
 }
 
 #[test]
 fn quant_e4m3_gam_block64_matches_host() {
     let Some(rt) = runtime() else { return };
-    check_artifact(&rt, "quant_e4m3_gam_block64", ReprType::E4M3, Partition::BLOCK64, ScalingAlgo::Gam);
+    check_artifact(
+        &rt,
+        "quant_e4m3_gam_block64",
+        ReprType::E4M3,
+        Partition::BLOCK64,
+        ScalingAlgo::Gam,
+    );
 }
 
 #[test]
 fn quant_e4m3_gam_tensor_matches_host() {
     let Some(rt) = runtime() else { return };
-    check_artifact(&rt, "quant_e4m3_gam_tensor", ReprType::E4M3, Partition::Tensor, ScalingAlgo::Gam);
+    check_artifact(
+        &rt,
+        "quant_e4m3_gam_tensor",
+        ReprType::E4M3,
+        Partition::Tensor,
+        ScalingAlgo::Gam,
+    );
 }
 
 #[test]
 fn quant_e4m3_gam_channel_rows_matches_host() {
     let Some(rt) = runtime() else { return };
-    check_artifact(&rt, "quant_e4m3_gam_channel_rows", ReprType::E4M3, Partition::ChannelRows, ScalingAlgo::Gam);
+    check_artifact(
+        &rt,
+        "quant_e4m3_gam_channel_rows",
+        ReprType::E4M3,
+        Partition::ChannelRows,
+        ScalingAlgo::Gam,
+    );
 }
 
 #[test]
 fn quant_e4m3_gam_channel_cols_matches_host() {
     let Some(rt) = runtime() else { return };
-    check_artifact(&rt, "quant_e4m3_gam_channel_cols", ReprType::E4M3, Partition::ChannelCols, ScalingAlgo::Gam);
+    check_artifact(
+        &rt,
+        "quant_e4m3_gam_channel_cols",
+        ReprType::E4M3,
+        Partition::ChannelCols,
+        ScalingAlgo::Gam,
+    );
 }
 
 #[test]
 fn quant_e4m3_amax_block128_matches_host() {
     let Some(rt) = runtime() else { return };
-    check_artifact(&rt, "quant_e4m3_amax_block128", ReprType::E4M3, Partition::BLOCK128, ScalingAlgo::AmaxFp32);
+    check_artifact(
+        &rt,
+        "quant_e4m3_amax_block128",
+        ReprType::E4M3,
+        Partition::BLOCK128,
+        ScalingAlgo::AmaxFp32,
+    );
 }
 
 #[test]
 fn quant_e4m3_e8m0_block128_matches_host() {
     let Some(rt) = runtime() else { return };
-    check_artifact(&rt, "quant_e4m3_e8m0_block128", ReprType::E4M3, Partition::BLOCK128, ScalingAlgo::E8M0);
+    check_artifact(
+        &rt,
+        "quant_e4m3_e8m0_block128",
+        ReprType::E4M3,
+        Partition::BLOCK128,
+        ScalingAlgo::E8M0,
+    );
 }
 
 #[test]
 fn quant_e5m2_gam_block128_matches_host() {
     let Some(rt) = runtime() else { return };
-    check_artifact(&rt, "quant_e5m2_gam_block128", ReprType::E5M2, Partition::BLOCK128, ScalingAlgo::Gam);
+    check_artifact(
+        &rt,
+        "quant_e5m2_gam_block128",
+        ReprType::E5M2,
+        Partition::BLOCK128,
+        ScalingAlgo::Gam,
+    );
 }
 
 #[test]

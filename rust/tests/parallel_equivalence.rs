@@ -1,25 +1,31 @@
 //! The parallel engine's correctness contract: for any thread count,
-//! `fake_quantize`, `compute_scales`, all four GEMM paths and the
-//! recipe sweep produce results **bit-identical** to the serial path.
-//! Also pins `Histogram::bin_of` to the paper's 0.5%-wide bin edges.
+//! `fake_quantize`, `compute_scales`, all four GEMM paths, the recipe
+//! sweep and the full overlapped host train step produce results
+//! **bit-identical** to the serial path — on the persistent worker
+//! pool, on the legacy spawn engine, and at whatever thread count
+//! `MOR_THREADS` selects (the CI determinism matrix runs this suite at
+//! 1, 4 and 13 threads). Also pins `Histogram::bin_of` to the paper's
+//! 0.5%-wide bin edges.
 
 use mor::formats::ReprType;
+use mor::model::config::ModelConfig;
 use mor::mor::recipes::{Recipe, RecipeKind, SubTensorMode};
 use mor::mor::stats::{Histogram, HIST_BINS};
 use mor::quant::fake_quant::fake_quantize_with;
 use mor::quant::partition::Partition;
+use mor::runtime::Runtime;
 use mor::scaling::{compute_scales_with, ScalingAlgo};
 use mor::tensor::ops::{
     matmul_nt_with, matmul_tn_with, matmul_with, mixed_gemm_with, BlockTypes,
 };
 use mor::tensor::Tensor;
-use mor::util::par::Parallelism;
+use mor::util::par::{Engine, Parallelism};
 use mor::util::proptest::{prop, Gen};
 
 /// A worker pool with the serial cutoff disabled, so even tiny test
 /// tensors exercise the parallel path.
 fn pool(threads: usize) -> Parallelism {
-    Parallelism { threads, min_items: 1 }
+    Parallelism::pooled(threads, 1)
 }
 
 fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
@@ -54,8 +60,8 @@ fn prop_fake_quantize_parallel_equals_serial() {
         let s = *g.choose(&[ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0]);
         let threads = g.usize_in(2, 8);
 
-        let serial = fake_quantize_with(&x, t, p, s, Parallelism::serial());
-        let parallel = fake_quantize_with(&x, t, p, s, pool(threads));
+        let serial = fake_quantize_with(&x, t, p, s, &Parallelism::serial());
+        let parallel = fake_quantize_with(&x, t, p, s, &pool(threads));
 
         assert_bits_eq(serial.out.data(), parallel.out.data(), "fake_quantize out");
         assert_eq!(serial.block_err, parallel.block_err, "block_err");
@@ -81,8 +87,9 @@ fn prop_compute_scales_parallel_equals_serial() {
             .collect();
         let algo = *g.choose(&[ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0]);
         let threads = g.usize_in(2, 8);
-        let serial = compute_scales_with(algo, 448.0, group_amax, &amaxes, Parallelism::serial());
-        let parallel = compute_scales_with(algo, 448.0, group_amax, &amaxes, pool(threads));
+        let serial =
+            compute_scales_with(algo, 448.0, group_amax, &amaxes, &Parallelism::serial());
+        let parallel = compute_scales_with(algo, 448.0, group_amax, &amaxes, &pool(threads));
         assert_eq!(serial.blocks, parallel.blocks);
         assert_eq!(
             serial.group_mantissa.to_bits(),
@@ -104,18 +111,18 @@ fn prop_gemms_parallel_equal_serial() {
         let threads = g.usize_in(2, 8);
         let cfg = pool(threads);
 
-        let c_s = matmul_with(&a, &b, Parallelism::serial());
-        let c_p = matmul_with(&a, &b, cfg);
+        let c_s = matmul_with(&a, &b, &Parallelism::serial());
+        let c_p = matmul_with(&a, &b, &cfg);
         assert_bits_eq(c_s.data(), c_p.data(), "matmul");
 
         let at = a.transpose();
-        let tn_s = matmul_tn_with(&at, &b, Parallelism::serial());
-        let tn_p = matmul_tn_with(&at, &b, cfg);
+        let tn_s = matmul_tn_with(&at, &b, &Parallelism::serial());
+        let tn_p = matmul_tn_with(&at, &b, &cfg);
         assert_bits_eq(tn_s.data(), tn_p.data(), "matmul_tn");
 
         let bt = b.transpose();
-        let nt_s = matmul_nt_with(&a, &bt, Parallelism::serial());
-        let nt_p = matmul_nt_with(&a, &bt, cfg);
+        let nt_s = matmul_nt_with(&a, &bt, &Parallelism::serial());
+        let nt_p = matmul_nt_with(&a, &bt, &cfg);
         assert_bits_eq(nt_s.data(), nt_p.data(), "matmul_nt");
         true
     });
@@ -143,8 +150,8 @@ fn prop_mixed_gemm_parallel_equals_serial() {
             }
         }
         let threads = g.usize_in(2, 8);
-        let serial = mixed_gemm_with(&a, &ta, &b, &tb, Parallelism::serial());
-        let parallel = mixed_gemm_with(&a, &ta, &b, &tb, pool(threads));
+        let serial = mixed_gemm_with(&a, &ta, &b, &tb, &Parallelism::serial());
+        let parallel = mixed_gemm_with(&a, &ta, &b, &tb, &pool(threads));
         assert_bits_eq(serial.out.data(), parallel.out.data(), "mixed_gemm out");
         assert_eq!(serial.macs, parallel.macs, "mixed_gemm macs");
         true
@@ -169,8 +176,8 @@ fn prop_recipe_sweep_parallel_equals_serial() {
             ]),
             scaling: *g.choose(&[ScalingAlgo::Gam, ScalingAlgo::AmaxFp32]),
         };
-        let serial = recipe.apply_batch_with(&refs, Parallelism::serial());
-        let parallel = recipe.apply_batch_with(&refs, pool(g.usize_in(2, 6)));
+        let serial = recipe.apply_batch_with(&refs, &Parallelism::serial());
+        let parallel = recipe.apply_batch_with(&refs, &pool(g.usize_in(2, 6)));
         assert_eq!(serial.len(), parallel.len());
         for (s, p) in serial.iter().zip(parallel.iter()) {
             assert_bits_eq(s.out.data(), p.out.data(), "sweep out");
@@ -181,6 +188,76 @@ fn prop_recipe_sweep_parallel_equals_serial() {
         }
         true
     });
+}
+
+/// The spawn engine (scoped thread per chunk) and the persistent pool
+/// must agree bit-for-bit: same chunking, different scheduling.
+#[test]
+fn prop_spawn_engine_equals_pool_engine() {
+    prop(40, |g: &mut Gen| {
+        let x = random_tensor(g, 32);
+        let threads = g.usize_in(2, 8);
+        let pool_cfg = pool(threads);
+        let spawn_cfg = pool(threads).with_engine(Engine::Spawn);
+        let (t, p, alg) = (ReprType::E4M3, Partition::BLOCK128, ScalingAlgo::Gam);
+        let a = fake_quantize_with(&x, t, p, alg, &pool_cfg);
+        let b = fake_quantize_with(&x, t, p, alg, &spawn_cfg);
+        assert_bits_eq(a.out.data(), b.out.data(), "engine parity");
+        assert_eq!(a.block_err, b.block_err);
+        true
+    });
+}
+
+/// `MOR_THREADS`-driven config (what the CI determinism matrix varies):
+/// `Parallelism::auto()` with the cutoff disabled must match serial
+/// bitwise at whatever thread count the environment selected.
+#[test]
+fn auto_env_config_matches_serial_bitwise() {
+    let mut auto = Parallelism::auto();
+    auto.min_items = 1;
+    let x = Tensor::from_vec(
+        &[37, 29],
+        (0..37 * 29).map(|i| ((i as f32) * 0.7311).sin() * (1.0 + (i % 17) as f32)).collect(),
+    );
+    for t in [ReprType::E4M3, ReprType::E5M2, ReprType::Bf16] {
+        let ser = Parallelism::serial();
+        let serial = fake_quantize_with(&x, t, Partition::BLOCK128, ScalingAlgo::Gam, &ser);
+        let parallel = fake_quantize_with(&x, t, Partition::BLOCK128, ScalingAlgo::Gam, &auto);
+        assert_bits_eq(serial.out.data(), parallel.out.data(), "auto-config fake_quantize");
+        assert_eq!(serial.block_err, parallel.block_err);
+    }
+    let a = matmul_with(&x, &x.transpose(), &Parallelism::serial());
+    let b = matmul_with(&x, &x.transpose(), &auto);
+    assert_bits_eq(a.data(), b.data(), "auto-config matmul");
+}
+
+/// The full overlapped host train step — pipeline-parallel operand
+/// quantizations inside `linear_bwd`, GEMM overlap, pool engine — is
+/// bit-identical to the strictly serial step, including at the awkward
+/// 13-thread count the CI matrix pins.
+#[test]
+fn host_train_step_parallel_equals_serial_bitwise() {
+    let run = |par: Parallelism| -> (Vec<u32>, Vec<f32>, Vec<f32>) {
+        let rt = Runtime::host(ModelConfig::TINY).with_parallelism(par);
+        let mut s = rt.train_session("train_mor_subtensor_three_way", 11).unwrap();
+        let tokens: Vec<i32> = (0..s.batch * s.seq).map(|i| (i % 251) as i32).collect();
+        let mut losses = Vec::new();
+        let mut out = None;
+        for _ in 0..2 {
+            let o = s.step(&tokens, 1e-3, 0.045).unwrap();
+            losses.push(o.loss.to_bits());
+            out = Some(o);
+        }
+        let o = out.unwrap();
+        (losses, o.relerr, o.fallback)
+    };
+    let serial = run(Parallelism::serial());
+    for threads in [2, 3, 13] {
+        let parallel = run(Parallelism::pooled(threads, 1));
+        assert_eq!(serial.0, parallel.0, "losses diverged at {threads} threads");
+        assert_bits_eq(&serial.1, &parallel.1, "relerr slots");
+        assert_bits_eq(&serial.2, &parallel.2, "fallback slots");
+    }
 }
 
 /// The paper's histogram: 0.5%-wide bins, first bin `< 0.5%`, last bin
