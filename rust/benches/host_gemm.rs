@@ -1,18 +1,26 @@
 //! Host GEMM benches: the plain f32 GEMM vs the Fig. 3 mixed-type
 //! blocked GEMM (which also models the fp8-vs-upcast MAC accounting),
-//! each serial vs parallel over output-row panels.
+//! serial vs spawn vs the shared-queue pool vs the deque/steal
+//! scheduler over output-row panels.
+//!
+//! `--json <path>` merges the rows into the machine-readable perf
+//! snapshot (`BENCH_3.json`); `--warmup-ms/--measure-ms/--min-batches`
+//! shrink the budgets for CI.
 
 use mor::formats::ReprType;
 use mor::tensor::ops::{
     matmul_nt_with, matmul_tn_with, matmul_with, mixed_gemm_with, BlockTypes,
 };
 use mor::tensor::Tensor;
-use mor::util::bench::{bench, report_throughput, BenchOptions};
-use mor::util::par::Parallelism;
+use mor::util::bench::{bench, report_throughput, BenchOptions, JsonSnapshot};
+use mor::util::cli::Args;
+use mor::util::par::{engine_comparison_rows, Parallelism};
 use std::hint::black_box;
 
 fn main() {
-    let opts = BenchOptions::default();
+    let args = Args::from_env();
+    let opts = BenchOptions::default().with_args(&args);
+    let mut snap = JsonSnapshot::from_args("host_gemm", &args);
     const N: usize = 256;
     let a = Tensor::normal(&[N, N], 1.0, 1);
     let b = Tensor::normal(&[N, N], 1.0, 2);
@@ -24,27 +32,42 @@ fn main() {
     tb.grid[0][0] = ReprType::Bf16;
     tb.grid[1][1] = ReprType::E5M2;
 
-    let auto = Parallelism::auto();
-    for (label, cfg) in [("serial", Parallelism::serial()), ("parallel", auto.clone())] {
+    for (label, cfg) in engine_comparison_rows() {
+        let mut rows: Vec<(String, mor::util::bench::BenchResult)> = Vec::new();
+
         let r = bench(&format!("matmul_f32_{N}_{label}"), &opts, || {
             black_box(matmul_with(black_box(&a), black_box(&b), &cfg));
         });
-        report_throughput(&format!("matmul_f32_{label}"), &r, flops, "flop");
+        rows.push((format!("matmul_f32_{label}"), r));
 
         let r = bench(&format!("matmul_tn_{N}_{label}"), &opts, || {
             black_box(matmul_tn_with(black_box(&at), black_box(&b), &cfg));
         });
-        report_throughput(&format!("matmul_tn_{label}"), &r, flops, "flop");
+        rows.push((format!("matmul_tn_{label}"), r));
 
         let r = bench(&format!("matmul_nt_{N}_{label}"), &opts, || {
             black_box(matmul_nt_with(black_box(&a), black_box(&bt), &cfg));
         });
-        report_throughput(&format!("matmul_nt_{label}"), &r, flops, "flop");
+        rows.push((format!("matmul_nt_{label}"), r));
 
         let r = bench(&format!("mixed_gemm_{N}_blk32_{label}"), &opts, || {
             black_box(mixed_gemm_with(black_box(&a), &ta, black_box(&b), &tb, &cfg));
         });
-        report_throughput(&format!("mixed_gemm_{label}"), &r, flops, "flop");
+        rows.push((format!("mixed_gemm_{label}"), r));
+
+        for (name, r) in &rows {
+            report_throughput(name, r, flops, "flop");
+            if let Some(s) = &mut snap {
+                s.record(r);
+                s.record_throughput(name, r, flops, "flop");
+            }
+        }
     }
-    println!("(parallel = {} threads, row-panel chunking)", auto.threads);
+    println!(
+        "(parallel rows = {} threads, row-panel chunking)",
+        Parallelism::auto().threads
+    );
+    if let Some(s) = &snap {
+        s.write(Parallelism::auto().threads).expect("writing bench snapshot");
+    }
 }

@@ -1,9 +1,13 @@
 //! Codec throughput: fp8/bf16/fp4 encode-decode and the fake-quant
-//! pipeline per element, plus the serial-vs-parallel comparison of the
-//! full fake-quant pipeline on the chunked engine. The L3-side perf
-//! floor for any host-side quantization work (paper Section 2 claims
-//! "negligible overhead" for GAM metadata; this bench quantifies the
-//! compute side).
+//! pipeline per element, plus the serial vs spawn vs pool vs steal
+//! comparison of the full fake-quant pipeline on the chunked engine.
+//! The L3-side perf floor for any host-side quantization work (paper
+//! Section 2 claims "negligible overhead" for GAM metadata; this bench
+//! quantifies the compute side).
+//!
+//! `--json <path>` merges the rows into the machine-readable perf
+//! snapshot (`BENCH_3.json`); `--warmup-ms/--measure-ms/--min-batches`
+//! shrink the budgets for CI.
 
 use mor::formats::bf16;
 use mor::formats::fp4;
@@ -13,12 +17,15 @@ use mor::quant::fake_quant::fake_quantize_with;
 use mor::quant::partition::Partition;
 use mor::scaling::ScalingAlgo;
 use mor::tensor::Tensor;
-use mor::util::bench::{bench, report_throughput, BenchOptions};
-use mor::util::par::Parallelism;
+use mor::util::bench::{bench, report_throughput, BenchOptions, JsonSnapshot};
+use mor::util::cli::Args;
+use mor::util::par::{engine_comparison_rows, Parallelism};
 use std::hint::black_box;
 
 fn main() {
-    let opts = BenchOptions::default();
+    let args = Args::from_env();
+    let opts = BenchOptions::default().with_args(&args);
+    let mut snap = JsonSnapshot::from_args("quant_formats", &args);
     let xs: Vec<f32> =
         (0..4096).map(|i| ((i * 2654435761u64 as usize) as f32).sin() * 100.0).collect();
 
@@ -30,6 +37,10 @@ fn main() {
         black_box(acc);
     });
     report_throughput("e4m3_encode_decode", &r, 4096.0, "elem");
+    if let Some(s) = &mut snap {
+        s.record(&r);
+        s.record_throughput("e4m3_encode_decode", &r, 4096.0, "elem");
+    }
 
     let r = bench("e5m2_encode_decode_4k", &opts, || {
         let mut acc = 0f32;
@@ -39,6 +50,10 @@ fn main() {
         black_box(acc);
     });
     report_throughput("e5m2_encode_decode", &r, 4096.0, "elem");
+    if let Some(s) = &mut snap {
+        s.record(&r);
+        s.record_throughput("e5m2_encode_decode", &r, 4096.0, "elem");
+    }
 
     let r = bench("bf16_roundtrip_4k", &opts, || {
         let mut acc = 0f32;
@@ -48,6 +63,10 @@ fn main() {
         black_box(acc);
     });
     report_throughput("bf16_roundtrip", &r, 4096.0, "elem");
+    if let Some(s) = &mut snap {
+        s.record(&r);
+        s.record_throughput("bf16_roundtrip", &r, 4096.0, "elem");
+    }
 
     let mut out = vec![0f32; 4096];
     let r = bench("nvfp4_block_pipeline_4k", &opts, || {
@@ -55,15 +74,18 @@ fn main() {
         black_box(&out);
     });
     report_throughput("nvfp4_block_pipeline", &r, 4096.0, "elem");
+    if let Some(s) = &mut snap {
+        s.record(&r);
+        s.record_throughput("nvfp4_block_pipeline", &r, 4096.0, "elem");
+    }
 
-    // Full fake-quant pipeline (Fig. 4), serial vs parallel chunked
-    // engine at the default thread count. This is the bench behind the
+    // Full fake-quant pipeline (Fig. 4), serial vs spawn vs pool vs
+    // steal at the default thread count. This is the bench behind the
     // sweep-throughput claim: per-tensor metric collection must be
     // cheap enough to run every step.
     let x = Tensor::normal(&[512, 512], 2.0, 7);
     let elems = (512 * 512) as f64;
-    let auto = Parallelism::auto();
-    for (label, cfg) in [("serial", Parallelism::serial()), ("parallel", auto.clone())] {
+    for (label, cfg) in engine_comparison_rows() {
         for (pname, partition) in [
             ("block128", Partition::BLOCK128),
             ("channel", Partition::ChannelRows),
@@ -84,10 +106,17 @@ fn main() {
                 },
             );
             report_throughput(&format!("fake_quant_{pname}_{label}"), &r, elems, "elem");
+            if let Some(s) = &mut snap {
+                s.record(&r);
+                s.record_throughput(&format!("fake_quant_{pname}_{label}"), &r, elems, "elem");
+            }
         }
     }
     println!(
-        "(parallel = {} threads; bit-identical to serial by the par-engine contract)",
-        auto.threads
+        "(parallel rows = {} threads; bit-identical to serial by the par-engine contract)",
+        Parallelism::auto().threads
     );
+    if let Some(s) = &snap {
+        s.write(Parallelism::auto().threads).expect("writing bench snapshot");
+    }
 }

@@ -2,43 +2,44 @@
 //!
 //! * **Host backend** (always runs, no artifacts): one full train step
 //!   per recipe variant on the tiny preset, serial vs the scoped-thread
-//!   **spawn** engine vs the persistent worker **pool** — the headline
-//!   comparison for the whole pipeline. The pool and spawn rows run the
-//!   same chunking with the same thread count; the gap between them is
-//!   exactly the per-call spawn/join fixed overhead the pool removes
-//!   (hundreds of waves per host train step), so the pool row should
-//!   sit at-or-below the spawn row.
+//!   **spawn** engine vs the shared-queue **pool** vs the deque/**steal**
+//!   scheduler — the headline comparison for the whole pipeline. All
+//!   three pooled rows run the same chunking with the same thread
+//!   count: the spawn→pool gap is the per-call spawn/join fixed
+//!   overhead, and the pool→steal gap is the shared-queue contention
+//!   the per-worker deques remove, so steal should sit at-or-below
+//!   pool — especially on the mixed-size sweep workload below.
 //! * **PJRT** (skips gracefully when artifacts are missing): the
 //!   compiled-step latency per recipe variant, the standalone quant
 //!   kernel, and the eval step.
+//!
+//! `--json <path>` merges the rows into the machine-readable perf
+//! snapshot (`BENCH_3.json`); `--warmup-ms/--measure-ms/--min-batches`
+//! shrink the budgets for CI.
 
 use mor::data::loader::BatchLoader;
 use mor::data::synthetic::CorpusProfile;
 use mor::model::config::ModelConfig;
+use mor::mor::recipes::{Recipe, RecipeKind, SubTensorMode};
+use mor::quant::partition::Partition;
 use mor::runtime::Runtime;
+use mor::scaling::ScalingAlgo;
 use mor::tensor::Tensor;
-use mor::util::bench::{bench, report_throughput, BenchOptions};
-use mor::util::par::{Engine, Parallelism};
+use mor::util::bench::{bench, report_throughput, BenchOptions, JsonSnapshot};
+use mor::util::cli::Args;
+use mor::util::par::{engine_comparison_rows, Parallelism};
 use std::hint::black_box;
 use std::path::Path;
 use std::time::Duration;
 
-/// The three engine configurations under comparison. Fresh handles per
-/// call so each bench row owns (and drops) its own pool.
-fn engine_rows() -> [(&'static str, Parallelism); 3] {
-    [
-        ("serial", Parallelism::serial()),
-        ("spawn", Parallelism::auto().with_engine(Engine::Spawn)),
-        ("pool", Parallelism::auto()),
-    ]
-}
-
-fn host_backend_section(opts: &BenchOptions) {
+fn host_backend_section(opts: &BenchOptions, snap: &mut Option<JsonSnapshot>) {
     let rt = Runtime::host(ModelConfig::TINY);
     let threads = Parallelism::auto().threads;
-    println!("== host backend (tiny preset; serial vs spawn vs pool at {threads} threads) ==");
+    println!(
+        "== host backend (tiny preset; serial vs spawn vs pool vs steal at {threads} threads) =="
+    );
     for artifact in ["train_baseline", "train_mor_tensor_block", "train_mor_subtensor_two_way"] {
-        for (label, cfg) in engine_rows() {
+        for (label, cfg) in engine_comparison_rows() {
             let mut session =
                 rt.train_session_with(artifact, 1, cfg.clone()).expect("host session");
             let loader = BatchLoader::new(
@@ -56,12 +57,21 @@ fn host_backend_section(opts: &BenchOptions) {
                 black_box(out.loss);
             });
             report_throughput(&format!("host_{artifact}_{label}"), &r, tokens_per_step, "tok");
+            if let Some(s) = snap {
+                s.record(&r);
+                s.record_throughput(
+                    &format!("host_{artifact}_{label}"),
+                    &r,
+                    tokens_per_step,
+                    "tok",
+                );
+            }
         }
     }
     // Standalone host quant kernel across the same engine rows. The
     // 256x256 input sits near the --par-min-block cutoff, which is
-    // where the pool's saved fixed overhead is most visible.
-    for (label, cfg) in engine_rows() {
+    // where the pooled engines' saved fixed overhead is most visible.
+    for (label, cfg) in engine_comparison_rows() {
         let qs = rt.quant_session_with("quant_e4m3_gam_block128", cfg.clone()).unwrap();
         let x = Tensor::normal(&[qs.rows, qs.cols], 2.0, 3);
         let r = bench(&format!("host_quant_e4m3_gam_block128_{label}"), opts, || {
@@ -74,21 +84,71 @@ fn host_backend_section(opts: &BenchOptions) {
             (qs.rows * qs.cols) as f64,
             "elem",
         );
+        if let Some(s) = snap {
+            s.record(&r);
+            s.record_throughput(
+                &format!("host_quant_kernel_{label}"),
+                &r,
+                (qs.rows * qs.cols) as f64,
+                "elem",
+            );
+        }
+    }
+}
+
+/// The weighted-sweep workload the steal scheduler targets: one giant
+/// tensor plus many tiny ones through `Recipe::apply_batch_with`.
+/// Under the old serial-inside-one-worker sweep the giant tensor set
+/// the tail; with largest-first weighted dispatch it starts first and
+/// stays chunk-parallel, so steal should beat pool here.
+fn mixed_sweep_section(opts: &BenchOptions, snap: &mut Option<JsonSnapshot>) {
+    println!("== mixed-size recipe sweep (1 giant + 12 tiny tensors) ==");
+    let recipe = Recipe {
+        kind: RecipeKind::SubTensor { mode: SubTensorMode::TwoWay },
+        partition: Partition::Block { r: 32, c: 32 },
+        scaling: ScalingAlgo::Gam,
+    };
+    let giant = Tensor::normal(&[256, 256], 1.0, 11);
+    let tinies: Vec<Tensor> =
+        (0..12).map(|i| Tensor::normal(&[16, 16], 1.0, 20 + i as u64)).collect();
+    let mut tensors: Vec<&Tensor> = vec![&giant];
+    tensors.extend(tinies.iter());
+    let total_elems: f64 = tensors.iter().map(|t| t.len() as f64).sum();
+    for (label, cfg) in engine_comparison_rows() {
+        // Force the sweep onto the engine even for the tiny items.
+        let mut cfg = cfg;
+        cfg.min_items = 1;
+        let r = bench(&format!("mixed_sweep_1giant_12tiny_{label}"), opts, || {
+            let out = recipe.apply_batch_with(black_box(&tensors), &cfg);
+            black_box(out.len());
+        });
+        report_throughput(&format!("mixed_sweep_{label}"), &r, total_elems, "elem");
+        if let Some(s) = snap {
+            s.record(&r);
+            s.record_throughput(&format!("mixed_sweep_{label}"), &r, total_elems, "elem");
+        }
     }
 }
 
 fn main() {
+    let args = Args::from_env();
     let opts = BenchOptions {
         warmup: Duration::from_millis(500),
         measure: Duration::from_secs(3),
         min_batches: 5,
-    };
+    }
+    .with_args(&args);
+    let mut snap = JsonSnapshot::from_args("step_latency", &args);
 
-    host_backend_section(&opts);
+    host_backend_section(&opts, &mut snap);
+    mixed_sweep_section(&opts, &mut snap);
 
     let dir = Path::new("artifacts/tiny");
     if !dir.join("manifest.txt").exists() {
         eprintln!("step_latency: artifacts/tiny missing — skipping the PJRT section");
+        if let Some(s) = &snap {
+            s.write(Parallelism::auto().threads).expect("writing bench snapshot");
+        }
         return;
     }
     let rt = Runtime::load(dir, ModelConfig::TINY).expect("loading artifacts");
@@ -115,6 +175,10 @@ fn main() {
             black_box(out.loss);
         });
         report_throughput(artifact, &r, tokens_per_step, "tok");
+        if let Some(s) = &mut snap {
+            s.record(&r);
+            s.record_throughput(artifact, &r, tokens_per_step, "tok");
+        }
     }
 
     // Standalone Pallas quant kernel through PJRT.
@@ -125,16 +189,28 @@ fn main() {
         black_box(out.1);
     });
     report_throughput("quant_kernel_pjrt", &r, (256 * 256) as f64, "elem");
+    if let Some(s) = &mut snap {
+        s.record(&r);
+        s.record_throughput("quant_kernel_pjrt", &r, (256 * 256) as f64, "elem");
+    }
 
-    // Eval step.
-    let mut s = rt.train_session("train_baseline", 1).unwrap();
+    // Eval step (tensor-native interchange on the session params).
+    let s = rt.train_session("train_baseline", 1).unwrap();
     let ev = rt.eval_session("eval").unwrap();
     let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, ev.batch, ev.seq, 2, 1);
     let batch = loader.next_batch();
     let mask = mor::coordinator::trainer::full_mask(ev.batch, ev.seq);
     let r = bench("eval_step", &opts, || {
-        let out = ev.eval(s.param_literals(), black_box(&batch.tokens), &mask).unwrap();
+        let out = ev.eval_params(s.params_ref(), black_box(&batch.tokens), &mask).unwrap();
         black_box(out);
     });
     report_throughput("eval_step", &r, (ev.batch * ev.seq) as f64, "tok");
+    if let Some(s) = &mut snap {
+        s.record(&r);
+        s.record_throughput("eval_step", &r, (ev.batch * ev.seq) as f64, "tok");
+    }
+
+    if let Some(s) = &snap {
+        s.write(Parallelism::auto().threads).expect("writing bench snapshot");
+    }
 }

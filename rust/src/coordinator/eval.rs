@@ -2,7 +2,7 @@
 //! substitute) through the compiled masked-eval artifact.
 
 use crate::data::tasks::{EvalSuite, EvalTask};
-use crate::runtime::EvalSession;
+use crate::runtime::{EvalSession, ParamsRef};
 use anyhow::Result;
 
 /// Scores for one pass over the suite.
@@ -29,9 +29,12 @@ impl EvalScores {
 
 /// Evaluate the full suite. Examples are packed into eval-session
 /// batches; ragged tails are padded with zero masks (unscored).
+/// Parameters arrive as a borrowed [`ParamsRef`]
+/// (`TrainSession::params_ref`), so a host-backend suite pass runs on
+/// the trainer's tensors directly — no Literal copies per batch.
 pub fn eval_suite(
     session: &EvalSession,
-    params: &[xla::Literal],
+    params: ParamsRef<'_>,
     suite: &EvalSuite,
 ) -> Result<EvalScores> {
     let mut per_task = Vec::new();
@@ -45,7 +48,7 @@ pub fn eval_suite(
                 tokens[i * session.seq..(i + 1) * session.seq].copy_from_slice(t);
                 mask[i * session.seq..(i + 1) * session.seq].copy_from_slice(m);
             }
-            let (loss, acc) = session.eval(params, &tokens, &mask)?;
+            let (loss, acc) = session.eval_params(params, &tokens, &mask)?;
             loss_sum += loss as f64;
             acc_sum += acc as f64;
             batches += 1;

@@ -174,7 +174,10 @@ impl<'rt> Trainer<'rt> {
                 if let Some(ev) = &eval {
                     let vb = val_loader.next_batch();
                     let mask = full_mask(session.batch, session.seq);
-                    let (vl, _) = ev.eval(session.param_literals(), &vb.tokens, &mask)?;
+                    // Tensor-native interchange: on the host backend the
+                    // eval borrows the trainer's params directly — no
+                    // Tensor→Literal→Tensor round-trip per validation.
+                    let (vl, _) = ev.eval_params(session.params_ref(), &vb.tokens, &mask)?;
                     last_val = vl;
                 }
             }
@@ -184,7 +187,7 @@ impl<'rt> Trainer<'rt> {
                 && (step % opts.suite_every == 0 || step + 1 == opts.steps)
             {
                 if let Some(ev) = &eval {
-                    let scores = eval_suite(ev, session.param_literals(), &suite)?;
+                    let scores = eval_suite(ev, session.params_ref(), &suite)?;
                     suite_history.push((step, scores));
                 }
             }

@@ -45,12 +45,27 @@ fn artifacts_dir(args: &Args, model: &ModelConfig) -> PathBuf {
 
 /// `--threads N` (0 = autodetect) and `--par-min-block N` configure the
 /// parallel chunked engine behind every quantization/GEMM hot path.
+/// `--par-min-block` is parsed with the same strictness as
+/// `MOR_THREADS` — `0`, empty or non-numeric values abort loudly — and
+/// falls back to the `MOR_PAR_MIN_BLOCK` env var when the flag is
+/// absent (the CI-tuning knob).
 fn parallelism_of(args: &Args) -> Parallelism {
     let mut p = match args.usize("threads", 0) {
         0 => Parallelism::auto(),
         n => Parallelism::with_threads(n),
     };
-    p.min_items = args.usize("par-min-block", p.min_items);
+    match par::parse_par_min_block(args.get("par-min-block")) {
+        Ok(Some(n)) => p.min_items = n,
+        Ok(None) => {
+            if let Some(n) = par::env_min_items() {
+                p.min_items = n;
+            }
+        }
+        Err(msg) => {
+            eprintln!("error: --par-min-block {msg}");
+            std::process::exit(2);
+        }
+    }
     p
 }
 
@@ -192,7 +207,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     }
     let ev = runtime.eval_session("eval")?;
     let suite = EvalSuite::new(model.seq_len, model.vocab_size, 8, 0xE7A1);
-    let scores = eval_suite(&ev, session.param_literals(), &suite)?;
+    let scores = eval_suite(&ev, session.params_ref(), &suite)?;
     println!("{:<10} {:>10} {:>10}", "task", "loss", "acc %");
     for (name, loss, acc) in &scores.per_task {
         println!("{name:<10} {loss:>10.4} {acc:>10.2}");

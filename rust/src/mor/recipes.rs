@@ -125,11 +125,20 @@ impl Recipe {
         }
     }
 
-    /// The per-step MoR decision sweep: apply the recipe to every tensor
-    /// of a mini-batch, parallel **across tensors** (each per-tensor
-    /// application runs serially inside its worker to avoid nested
-    /// oversubscription). Outcome order matches input order and each
-    /// outcome is bit-identical to a standalone [`Recipe::apply`].
+    /// The per-step MoR decision sweep: apply the recipe to every
+    /// tensor of a mini-batch on the shared pool with **weighted
+    /// scheduling** — items dispatch largest-tensor-first (element
+    /// count as the cost estimate), so a mixed-size batch no longer
+    /// strands its giant tensor behind a queue of tiny ones. Each item
+    /// stays chunk-parallel *inside* its application too (nested
+    /// sections share the pool deadlock-free), replacing the old
+    /// serial-inside-one-worker scheme whose tail latency was the
+    /// largest tensor run single-threaded.
+    ///
+    /// Outcome order matches input order and each outcome is
+    /// bit-identical to a standalone [`Recipe::apply`] — weighted
+    /// dispatch reorders only *scheduling*, never the canonical result
+    /// merge.
     pub fn apply_batch(&self, xs: &[&Tensor]) -> Vec<MorOutcome> {
         self.apply_batch_with(xs, &par::global())
     }
@@ -139,7 +148,17 @@ impl Recipe {
         if cfg.threads <= 1 || xs.len() <= 1 {
             return xs.iter().map(|x| self.apply_with(x, cfg)).collect();
         }
-        par::par_map(cfg, xs.len(), |i| self.apply_with(xs[i], &Parallelism::serial()))
+        let weights: Vec<usize> = xs.iter().map(|x| x.len()).collect();
+        // Pooled engines share one bounded worker set, so nesting is
+        // free; the scoped-thread spawn engine has no such bound —
+        // items × chunks would oversubscribe — so it keeps the old
+        // serial-inside-each-item scheme (bitwise identical either
+        // way, by the engine contract).
+        let inner = match cfg.engine() {
+            par::Engine::Spawn => Parallelism::serial(),
+            _ => cfg.clone(),
+        };
+        par::par_map_weighted(cfg, &weights, |i| self.apply_with(xs[i], &inner))
     }
 }
 

@@ -11,7 +11,7 @@
 //! `QuantSession::run`) is identical for both, so the coordinator,
 //! report harness and benches never know which backend they drive.
 
-use super::host::{host_eval, host_quant, HostQuant, HostTrainer};
+use super::host::{host_eval_tensors, host_quant, HostQuant, HostTrainer};
 use super::manifest::{ArtifactKind, Manifest};
 use crate::formats::ReprType;
 use crate::model::config::ModelConfig;
@@ -176,7 +176,12 @@ impl Runtime {
                 )
                 .with_context(|| format!("artifact {name} recipe fields"))?;
                 let trainer = HostTrainer::new(self.model, quant, seed, par);
-                TrainImpl::Host { trainer, param_lits: Vec::new(), lits_stale: true }
+                TrainImpl::Host {
+                    trainer,
+                    param_lits: Vec::new(),
+                    lits_stale: true,
+                    lits_rebuilds: 0,
+                }
             }
             Backend::Pjrt { .. } => {
                 let exe = self.executable(name)?;
@@ -316,14 +321,49 @@ pub struct StepOutputs {
     pub fallback: Vec<f32>,
 }
 
+/// A borrowed view of a session's parameters in whichever form the
+/// owning backend holds them — the zero-copy eval interchange.
+///
+/// The host backend hands out its tensors directly
+/// ([`ParamsRef::Tensors`]); PJRT hands out its state literals
+/// ([`ParamsRef::Literals`]). `EvalSession::eval_params` accepts either
+/// and only converts when the *backends* genuinely differ, so the
+/// host-train → host-eval path allocates no `Literal` copies at all.
+#[derive(Clone, Copy)]
+pub enum ParamsRef<'a> {
+    Tensors(&'a [Tensor]),
+    Literals(&'a [xla::Literal]),
+}
+
+impl ParamsRef<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            ParamsRef::Tensors(t) => t.len(),
+            ParamsRef::Literals(l) => l.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 enum TrainImpl {
     /// Compiled step: owns the param/optimizer state literals.
     Pjrt { exe: Rc<xla::PjRtLoadedExecutable>, state: Vec<xla::Literal> },
     /// Host mirror: owns tensors; `param_lits` shadows the parameters
-    /// so `param_literals` serves the eval path, rebuilt lazily (the
+    /// so `param_literals` serves the cross-backend interchange,
+    /// rebuilt lazily and **exactly once per staleness window** (the
     /// stale flag keeps the per-step cost at zero when nothing reads
-    /// the literals between steps).
-    Host { trainer: HostTrainer, param_lits: Vec<xla::Literal>, lits_stale: bool },
+    /// the literals between steps; `lits_rebuilds` counts rebuilds so
+    /// tests can pin both properties). The tensor-native eval path
+    /// (`params_ref`) never touches this shadow at all.
+    Host {
+        trainer: HostTrainer,
+        param_lits: Vec<xla::Literal>,
+        lits_stale: bool,
+        lits_rebuilds: u64,
+    },
 }
 
 /// A live training run: owns the model state and the step function.
@@ -392,12 +432,25 @@ impl TrainSession {
         }
     }
 
-    /// Borrow the parameter literals (the eval-path interchange). For
-    /// the host backend the shadow copy is rebuilt here, only when the
-    /// parameters changed since the last call.
+    /// Borrow the current parameters in the backend's native form —
+    /// the zero-copy eval interchange. Prefer this over
+    /// [`TrainSession::param_literals`]: on the host backend it borrows
+    /// the trainer's tensors directly (no Literal shadow is built or
+    /// refreshed, and staleness cannot arise by construction).
+    pub fn params_ref(&self) -> ParamsRef<'_> {
+        match &self.imp {
+            TrainImpl::Host { trainer, .. } => ParamsRef::Tensors(&trainer.params),
+            TrainImpl::Pjrt { state, .. } => ParamsRef::Literals(&state[..self.num_params]),
+        }
+    }
+
+    /// Borrow the parameter literals (the cross-backend interchange).
+    /// For the host backend the shadow copy is rebuilt here, lazily and
+    /// exactly once after any step/param mutation, however many times
+    /// it is read in between.
     pub fn param_literals(&mut self) -> &[xla::Literal] {
         match &mut self.imp {
-            TrainImpl::Host { trainer, param_lits, lits_stale } => {
+            TrainImpl::Host { trainer, param_lits, lits_stale, lits_rebuilds } => {
                 if *lits_stale {
                     *param_lits = trainer
                         .params
@@ -407,10 +460,22 @@ impl TrainSession {
                         })
                         .collect();
                     *lits_stale = false;
+                    *lits_rebuilds += 1;
                 }
                 &param_lits[..]
             }
             TrainImpl::Pjrt { state, .. } => &state[..self.num_params],
+        }
+    }
+
+    /// How many times the host backend rebuilt its Literal shadow (0
+    /// for PJRT, where the state *is* literals). The regression hook
+    /// for both "the stale path refreshes exactly once" and "the
+    /// tensor-native eval path allocates no Literal copies".
+    pub fn param_literal_rebuilds(&self) -> u64 {
+        match &self.imp {
+            TrainImpl::Host { lits_rebuilds, .. } => *lits_rebuilds,
+            TrainImpl::Pjrt { .. } => 0,
         }
     }
 
@@ -462,7 +527,40 @@ pub struct EvalSession {
 }
 
 impl EvalSession {
-    /// Evaluate one batch: `mask[b,s] = 1` marks scored positions.
+    /// Evaluate one batch with parameters in either backend form — the
+    /// preferred entry. Conversions happen only on the two cross-
+    /// backend diagonals; the host-tensors and PJRT-literals cases run
+    /// copy-free:
+    ///
+    /// | session \ params | `Tensors`             | `Literals`          |
+    /// |------------------|-----------------------|---------------------|
+    /// | Host             | zero-copy `host_eval_tensors` | Literal→Tensor once |
+    /// | PJRT             | Tensor→Literal once   | zero-copy           |
+    pub fn eval_params(
+        &self,
+        params: ParamsRef<'_>,
+        tokens: &[i32],
+        mask: &[f32],
+    ) -> Result<(f32, f32)> {
+        if params.len() != self.num_params {
+            bail!("expected {} params, got {}", self.num_params, params.len());
+        }
+        match (&self.imp, params) {
+            (EvalImpl::Host { model, par }, ParamsRef::Tensors(tensors)) => {
+                host_eval_tensors(model, tensors, tokens, mask, self.batch, par)
+            }
+            (_, ParamsRef::Literals(lits)) => self.eval(lits, tokens, mask),
+            (EvalImpl::Pjrt(_), ParamsRef::Tensors(tensors)) => {
+                let lits: Vec<xla::Literal> =
+                    tensors.iter().map(tensor_to_literal).collect::<Result<Vec<_>>>()?;
+                self.eval(&lits, tokens, mask)
+            }
+        }
+    }
+
+    /// Evaluate one batch: `mask[b,s] = 1` marks scored positions
+    /// (the Literal-interchange entry; [`EvalSession::eval_params`]
+    /// avoids the conversions when backends match).
     pub fn eval(
         &self,
         params: &[xla::Literal],
@@ -476,7 +574,7 @@ impl EvalSession {
             EvalImpl::Host { model, par } => {
                 let tensors: Vec<Tensor> =
                     params.iter().map(literal_to_tensor).collect::<Result<Vec<_>>>()?;
-                host_eval(model, &tensors, tokens, mask, self.batch, par)
+                host_eval_tensors(model, &tensors, tokens, mask, self.batch, par)
             }
             EvalImpl::Pjrt(exe) => {
                 let toks = tokens_literal(tokens, self.batch, self.seq)?;
@@ -594,6 +692,44 @@ mod tests {
         assert_eq!(n0, n1);
         // Wrong arity is rejected.
         assert!(s.set_params(&params[..1]).is_err());
+    }
+
+    #[test]
+    fn host_eval_after_step_is_fresh_and_literal_free() {
+        let rt = Runtime::host(ModelConfig::TINY);
+        let mut s = rt.train_session("train_baseline", 5).unwrap();
+        let ev = rt.eval_session("eval").unwrap();
+        let toks: Vec<i32> = (0..ev.batch * ev.seq).map(|i| (i % 251) as i32).collect();
+        let mask = crate::coordinator::trainer::full_mask(ev.batch, ev.seq);
+
+        // Tensor-native eval before and after a train step: the second
+        // eval must see the stepped parameters (no stale shadow), and
+        // the whole sequence must build zero Literal copies.
+        let (l0, _) = ev.eval_params(s.params_ref(), &toks, &mask).unwrap();
+        let train_toks = vec![1i32; s.batch * s.seq];
+        s.step(&train_toks, 1e-3, 0.045).unwrap();
+        let (l1, _) = ev.eval_params(s.params_ref(), &toks, &mask).unwrap();
+        assert_ne!(l0.to_bits(), l1.to_bits(), "eval did not see the stepped params");
+        assert_eq!(
+            s.param_literal_rebuilds(),
+            0,
+            "tensor-native host eval must not build Literal copies"
+        );
+
+        // The Literal interchange still works, refreshing lazily
+        // exactly once per staleness window however often it is read.
+        assert_eq!(s.param_literals().len(), s.num_params);
+        let _ = s.param_literals();
+        let _ = s.param_literals();
+        assert_eq!(s.param_literal_rebuilds(), 1, "stale path must refresh exactly once");
+        s.step(&train_toks, 1e-3, 0.045).unwrap();
+        let _ = s.param_literals();
+        assert_eq!(s.param_literal_rebuilds(), 2, "one refresh per mutation window");
+
+        // Both interchanges agree bitwise on the same parameters.
+        let (via_lits, _) = ev.eval(s.param_literals(), &toks, &mask).unwrap();
+        let (via_tensors, _) = ev.eval_params(s.params_ref(), &toks, &mask).unwrap();
+        assert_eq!(via_lits.to_bits(), via_tensors.to_bits());
     }
 
     #[test]

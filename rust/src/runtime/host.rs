@@ -672,6 +672,7 @@ fn check_tokens(tokens: &[i32], vocab: usize) -> Result<()> {
 
 /// Forward pass over one token batch; returns `[B*S, V]` logits (and,
 /// when `save`, the residuals for [`backward`]).
+#[allow(clippy::too_many_arguments)]
 fn forward(
     m: &ModelConfig,
     q: &HostQuant,
@@ -681,6 +682,7 @@ fn forward(
     batch: usize,
     stats: &mut StepStats,
     save: bool,
+    cfg: &Parallelism,
 ) -> (Tensor, Option<ForwardCache>) {
     let (s, d) = (m.seq_len, m.d_model);
     let bs = batch * s;
@@ -703,17 +705,17 @@ fn forward(
         let lp = layer_params(params, l);
         // Attention block: x = x + proj(attn(qkv(ln1(x)))).
         let (h2d, ln1) = layernorm_fwd(&x, lp.ln1_s, lp.ln1_b);
-        let qkv = linear_fwd(q, th, stats, l, 0, &h2d, lp.wqkv);
+        let qkv = linear_fwd(q, th, stats, l, 0, &h2d, lp.wqkv, cfg);
         let (q3, k3, v3) = split3(&qkv, d);
         let (a2d, attn) = attention_fwd(m, batch, &q3, &k3, &v3);
-        let proj = linear_fwd(q, th, stats, l, 1, &a2d, lp.wproj);
+        let proj = linear_fwd(q, th, stats, l, 1, &a2d, lp.wproj, cfg);
         add_into(&mut x, &proj);
 
         // MLP block: x = x + fc2(gelu(fc1(ln2(x)))).
         let (h2, ln2) = layernorm_fwd(&x, lp.ln2_s, lp.ln2_b);
-        let f2d = linear_fwd(q, th, stats, l, 2, &h2, lp.w1);
+        let f2d = linear_fwd(q, th, stats, l, 2, &h2, lp.w1, cfg);
         let (g, gelu_t) = gelu_fwd(&f2d);
-        let o2d = linear_fwd(q, th, stats, l, 3, &g, lp.w2);
+        let o2d = linear_fwd(q, th, stats, l, 3, &g, lp.w2, cfg);
         add_into(&mut x, &o2d);
 
         if save {
@@ -937,7 +939,15 @@ impl HostTrainer {
 
 /// Masked eval (mirrors python `eval_step`): mean loss and next-token
 /// accuracy over positions with mask = 1.
-pub fn host_eval(
+///
+/// This is the **tensor-native** host eval entry: parameters are
+/// borrowed host tensors, no `xla::Literal` interchange anywhere on
+/// the path. `Runtime`-level callers reach it through
+/// `EvalSession::eval_params` with `ParamsRef::Tensors`, which is how
+/// validation and suite passes on the host backend skip the
+/// Tensor→Literal→Tensor round-trip entirely (the PJRT path keeps the
+/// Literal interface).
+pub fn host_eval_tensors(
     model: &ModelConfig,
     params: &[Tensor],
     tokens: &[i32],
@@ -1142,7 +1152,8 @@ mod tests {
         let loader = BatchLoader::new(profile, model.vocab_size, 2, model.seq_len, 3, 1);
         let b = loader.next_batch();
         let mask = crate::coordinator::trainer::full_mask(2, model.seq_len);
-        let (loss, acc) = host_eval(&model, &t.params, &b.tokens, &mask, 2, &t.par).unwrap();
+        let (loss, acc) =
+            host_eval_tensors(&model, &t.params, &b.tokens, &mask, 2, &t.par).unwrap();
         assert!(loss > 0.0 && loss.is_finite());
         assert!((0.0..=1.0).contains(&acc));
         // Untrained ≈ chance over 256 symbols.

@@ -17,6 +17,11 @@
 //! path `Trainer::run` uses, so concurrent runs never share or mutate
 //! a process-global engine setting.
 //!
+//! Parameters flow from train to eval sessions as a borrowed
+//! [`ParamsRef`] (`TrainSession::params_ref` →
+//! `EvalSession::eval_params`): tensors for the host backend, literals
+//! for PJRT, converted only when the backends genuinely differ.
+//!
 //! ### Interchange notes (PJRT path)
 //! * HLO **text** is the interchange format, not serialized protos
 //!   (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
@@ -30,6 +35,6 @@ pub mod client;
 pub mod host;
 pub mod manifest;
 
-pub use client::{EvalSession, QuantSession, Runtime, StepOutputs, TrainSession};
+pub use client::{EvalSession, ParamsRef, QuantSession, Runtime, StepOutputs, TrainSession};
 pub use host::{HostQuant, HostTrainer};
 pub use manifest::{ArtifactEntry, ArtifactKind, Manifest};

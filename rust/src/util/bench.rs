@@ -2,7 +2,16 @@
 //! every `cargo bench` target (`harness = false`). Warms up, then runs
 //! timed batches until a wall-clock budget is hit, reporting min / median
 //! / mean / p95 per-iteration times and derived throughput.
+//!
+//! Machine-readable output: a [`JsonSnapshot`] collects the same rows
+//! and merges them into a shared perf-snapshot JSON file (the
+//! `BENCH_3.json` artifact the CI bench step uploads), one `targets`
+//! entry per bench binary, so `step_latency`, `host_gemm` and
+//! `quant_formats` can all write into one file across separate
+//! invocations.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 pub struct BenchOptions {
@@ -19,6 +28,20 @@ impl Default for BenchOptions {
             measure: Duration::from_millis(800),
             min_batches: 10,
         }
+    }
+}
+
+impl BenchOptions {
+    /// Apply the CLI overrides shared by every bench binary:
+    /// `--warmup-ms`, `--measure-ms`, `--min-batches`. CI passes small
+    /// budgets so the snapshot run stays fast; local runs keep the
+    /// binary's defaults.
+    pub fn with_args(mut self, args: &crate::util::cli::Args) -> BenchOptions {
+        self.warmup = Duration::from_millis(args.u64("warmup-ms", self.warmup.as_millis() as u64));
+        self.measure =
+            Duration::from_millis(args.u64("measure-ms", self.measure.as_millis() as u64));
+        self.min_batches = args.usize("min-batches", self.min_batches);
+        self
     }
 }
 
@@ -110,6 +133,156 @@ pub fn report_throughput(name: &str, result: &BenchResult, items_per_iter: f64, 
     );
 }
 
+// ---------------------------------------------------------------------------
+// Machine-readable perf snapshot (`--json <path>`)
+// ---------------------------------------------------------------------------
+
+/// A finite JSON number (the harness never measures NaN/inf, but a
+/// zero-duration median would derive an infinite throughput — clamp
+/// rather than emit invalid JSON).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Collects one bench binary's rows and merges them into a shared
+/// snapshot file keyed by target name. The file is a plain JSON object
+/// (`schema: mor-bench-v1`) with one `targets.<name>` array per bench
+/// binary; re-running a binary replaces only its own entry, so the
+/// three CI bench invocations compose one `BENCH_3.json`.
+pub struct JsonSnapshot {
+    target: String,
+    path: PathBuf,
+    rows: Vec<String>,
+}
+
+impl JsonSnapshot {
+    pub fn new(target: &str, path: impl Into<PathBuf>) -> JsonSnapshot {
+        JsonSnapshot { target: target.to_string(), path: path.into(), rows: Vec::new() }
+    }
+
+    /// `Some` when the binary was invoked with `--json <path>`.
+    pub fn from_args(target: &str, args: &crate::util::cli::Args) -> Option<JsonSnapshot> {
+        args.get("json").map(|p| JsonSnapshot::new(target, p))
+    }
+
+    /// Record one latency result (mirrors the stdout table row).
+    pub fn record(&mut self, r: &BenchResult) {
+        self.rows.push(format!(
+            r#"{{"kind":"latency","name":"{}","median_ns":{},"mean_ns":{},"min_ns":{},"p95_ns":{},"iters":{}}}"#,
+            r.name,
+            json_num(r.median.as_nanos() as f64),
+            json_num(r.mean.as_nanos() as f64),
+            json_num(r.min.as_nanos() as f64),
+            json_num(r.p95.as_nanos() as f64),
+            r.iters,
+        ));
+    }
+
+    /// Record one derived-throughput result.
+    pub fn record_throughput(
+        &mut self,
+        name: &str,
+        r: &BenchResult,
+        items_per_iter: f64,
+        unit: &str,
+    ) {
+        self.rows.push(format!(
+            r#"{{"kind":"throughput","name":"{name}","items_per_s":{},"unit":"{unit}/s"}}"#,
+            json_num(r.throughput(items_per_iter)),
+        ));
+    }
+
+    /// Merge this target's rows into the snapshot file and write it.
+    /// `threads` records the engine width **this target's** parallel
+    /// rows ran at — stamped per `targets` entry, so invocations at
+    /// different `MOR_THREADS` merging into one file stay correctly
+    /// labeled.
+    pub fn write(&self, threads: usize) -> std::io::Result<()> {
+        let mut targets: BTreeMap<String, String> = std::fs::read_to_string(&self.path)
+            .map(|s| parse_snapshot_targets(&s))
+            .unwrap_or_default();
+        targets.insert(
+            self.target.clone(),
+            format!("{{\"threads\":{threads},\"rows\":[{}]}}", self.rows.join(",")),
+        );
+        let body = format!(
+            "{{\"schema\":\"mor-bench-v1\",\"targets\":{{{}}}}}\n",
+            targets
+                .iter()
+                .map(|(k, v)| format!("\"{k}\":{v}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&self.path, body)?;
+        println!("bench snapshot ({}) merged into {}", self.target, self.path.display());
+        Ok(())
+    }
+}
+
+/// Extract `targets.<name>` entries (each a `{"threads":N,"rows":[..]}`
+/// object) from a snapshot this module wrote. Only has to understand
+/// our own output — bench names contain no quotes, braces or
+/// brackets — and degrades to "start fresh" on any surprise (snapshot
+/// files are derived artifacts, never inputs).
+fn parse_snapshot_targets(content: &str) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    let Some(pos) = content.find("\"targets\":{") else {
+        return out;
+    };
+    let mut rest = &content[pos + "\"targets\":{".len()..];
+    loop {
+        rest = rest.trim_start();
+        let Some(stripped) = rest.strip_prefix('"') else {
+            return out; // '}' (done) or malformed: either way, stop.
+        };
+        let Some(name_end) = stripped.find('"') else {
+            return out;
+        };
+        let name = &stripped[..name_end];
+        let after_name = stripped[name_end + 1..].trim_start();
+        let Some(value) = after_name.strip_prefix(':') else {
+            return out;
+        };
+        let value = value.trim_start();
+        let (open, close) = match value.chars().next() {
+            Some('{') => ('{', '}'),
+            Some('[') => ('[', ']'), // pre-per-target-threads files
+            _ => return out,
+        };
+        let mut depth = 0usize;
+        let mut end = None;
+        for (i, c) in value.char_indices() {
+            if c == open {
+                depth += 1;
+            } else if c == close {
+                depth -= 1;
+                if depth == 0 {
+                    end = Some(i);
+                    break;
+                }
+            }
+        }
+        let Some(end) = end else {
+            return out;
+        };
+        out.insert(name.to_string(), value[..=end].to_string());
+        rest = value[end + 1..].trim_start();
+        rest = match rest.strip_prefix(',') {
+            Some(r) => r,
+            None => return out,
+        };
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,5 +300,75 @@ mod tests {
         });
         assert!(r.iters > 0);
         assert!(r.min <= r.median && r.median <= r.p95);
+    }
+
+    #[test]
+    fn snapshot_merges_targets_across_invocations() {
+        let path = std::env::temp_dir()
+            .join(format!("mor_bench_snap_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        let fake = BenchResult {
+            name: "row_a".to_string(),
+            iters: 10,
+            min: Duration::from_nanos(100),
+            median: Duration::from_nanos(150),
+            mean: Duration::from_nanos(160),
+            p95: Duration::from_nanos(200),
+        };
+
+        let mut first = JsonSnapshot::new("alpha", &path);
+        first.record(&fake);
+        first.record_throughput("row_a_tp", &fake, 1000.0, "elem");
+        first.write(4).unwrap();
+
+        let mut second = JsonSnapshot::new("beta", &path);
+        second.record(&fake);
+        second.write(4).unwrap();
+
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains("\"schema\":\"mor-bench-v1\""));
+        assert!(
+            content.contains("\"alpha\":{\"threads\":4,\"rows\":["),
+            "first target lost on merge: {content}"
+        );
+        assert!(content.contains("\"beta\":{\"threads\":4,\"rows\":["));
+        assert!(content.contains("\"median_ns\":150"));
+        assert!(content.contains("\"unit\":\"elem/s\""));
+
+        // Re-running a target replaces its rows rather than
+        // duplicating, and re-stamps only its own thread count.
+        let mut rerun = JsonSnapshot::new("alpha", &path);
+        rerun.record(&BenchResult { name: "row_b".to_string(), ..duplicate(&fake) });
+        rerun.write(13).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains("row_b"));
+        assert!(!content.contains("row_a_tp"), "stale alpha rows survived: {content}");
+        assert!(content.contains("\"alpha\":{\"threads\":13,"));
+        assert!(content.contains("\"beta\":{\"threads\":4,"), "beta's thread stamp was relabeled");
+
+        let targets = parse_snapshot_targets(&content);
+        assert_eq!(targets.len(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn duplicate(r: &BenchResult) -> BenchResult {
+        BenchResult {
+            name: r.name.clone(),
+            iters: r.iters,
+            min: r.min,
+            median: r.median,
+            mean: r.mean,
+            p95: r.p95,
+        }
+    }
+
+    #[test]
+    fn snapshot_parser_rejects_garbage_gracefully() {
+        assert!(parse_snapshot_targets("").is_empty());
+        assert!(parse_snapshot_targets("{\"schema\":\"x\"}").is_empty());
+        assert!(parse_snapshot_targets("{\"targets\":{\"a\":[1,2}").is_empty());
+        let ok = parse_snapshot_targets(r#"{"targets":{"a":[{"n":1}],"b":[]}}"#);
+        assert_eq!(ok.get("a").map(String::as_str), Some(r#"[{"n":1}]"#));
+        assert_eq!(ok.get("b").map(String::as_str), Some("[]"));
     }
 }

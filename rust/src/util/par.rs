@@ -11,28 +11,46 @@
 //! order after the parallel section. Floating-point evaluation order per
 //! output element therefore never changes.
 //!
-//! Work distribution is static: item range `0..n` is cut into at most
-//! `threads` contiguous chunks. No work stealing between chunks, no
-//! locks on the hot path, no allocation inside workers beyond their own
-//! result vectors.
+//! Work *division* is static: item range `0..n` is cut into at most
+//! `threads` contiguous chunks, and results always merge in canonical
+//! chunk order. Work *placement* is dynamic on the default engine:
+//! chunks land on per-worker deques and idle threads steal, so
+//! scheduling never changes results, only who computes them.
 //!
 //! ## The worker pool
 //!
 //! A [`Parallelism`] handle owns (a shared reference to) one
-//! [`WorkerPool`]: `threads - 1` lazily-spawned worker threads fed
-//! through a chunk queue, with the calling thread always executing the
-//! first chunk itself and then helping drain the queue until its call
-//! completes. The help-while-waiting step is what makes *nested*
-//! parallel sections (pipeline-level overlap via [`join2`] around
-//! chunk-parallel quantizations) deadlock-free: a waiting caller never
-//! idles while runnable chunks exist.
+//! [`WorkerPool`]: `threads - 1` lazily-spawned worker threads, with
+//! the calling thread always executing the first chunk itself and then
+//! helping drain runnable work until its call completes. The
+//! help-while-waiting step is what makes *nested* parallel sections
+//! (pipeline-level overlap via [`join2`] around chunk-parallel
+//! quantizations) deadlock-free: a waiting caller never idles while
+//! runnable chunks exist.
+//!
+//! Three dispatch engines share those workers:
+//!
+//! * [`Engine::Steal`] (default) — each worker owns a **bounded deque**;
+//!   batch submissions spread chunks across the deques round-robin
+//!   (largest work first for weighted submissions), overflow spills to
+//!   the shared injector queue, and an idle thread **steals** from the
+//!   back of victim deques in a randomized-but-seeded order (bounded
+//!   attempts, then one deterministic sweep, then sleep). Owners pop
+//!   their own deque front lock-locally, so the old single-mutex chunk
+//!   queue is off the hot path at high thread counts.
+//! * [`Engine::Pool`] — the previous scheduler: every chunk goes through
+//!   the one shared injector queue. Retained for the pool-vs-steal
+//!   bench comparison.
+//! * [`Engine::Spawn`] — a scoped thread per chunk, spawned and joined
+//!   inside every call; the original engine, the per-call-overhead
+//!   baseline.
 //!
 //! Clones of a handle share the pool, so consecutive `par_map` /
 //! `par_panels` calls reuse the same workers instead of paying a
-//! spawn/join wave per call (the old scoped-thread engine is retained
-//! behind [`Engine::Spawn`] for benchmark comparison). Worker panics
-//! are caught, forwarded, and re-raised on the calling thread; dropping
-//! the last handle shuts the pool down and joins every worker.
+//! spawn/join wave per call. Worker panics are caught, forwarded, and
+//! re-raised on the calling thread — including panics in chunks that
+//! were stolen — and dropping the last handle shuts the pool down and
+//! joins every worker.
 
 use std::any::Any;
 use std::collections::VecDeque;
@@ -49,8 +67,11 @@ pub const DEFAULT_MIN_ITEMS: usize = 8192;
 /// Which execution engine a [`Parallelism`] dispatches chunks on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Engine {
-    /// Persistent worker pool (the default): chunks go through the
-    /// pool's queue, workers are reused across calls.
+    /// Persistent worker pool with per-worker bounded deques and
+    /// seeded bounded work stealing (the default).
+    Steal,
+    /// Persistent worker pool fed through one shared chunk queue — the
+    /// previous scheduler, kept for the pool-vs-steal bench comparison.
     Pool,
     /// Scoped thread per chunk, spawned and joined inside every call —
     /// the original engine, kept for the pool-vs-spawn bench comparison
@@ -92,7 +113,7 @@ impl Eq for Parallelism {}
 impl Parallelism {
     /// Strictly serial execution (no pool behind it).
     pub fn serial() -> Parallelism {
-        Parallelism { threads: 1, min_items: usize::MAX, engine: Engine::Pool, pool: None }
+        Parallelism { threads: 1, min_items: usize::MAX, engine: Engine::Steal, pool: None }
     }
 
     /// `n` chunk runners with the default serial cutoff.
@@ -106,16 +127,18 @@ impl Parallelism {
     pub fn pooled(threads: usize, min_items: usize) -> Parallelism {
         let threads = threads.max(1);
         let pool = (threads > 1).then(|| Arc::new(WorkerPool::new(threads)));
-        Parallelism { threads, min_items, engine: Engine::Pool, pool }
+        Parallelism { threads, min_items, engine: Engine::Steal, pool }
     }
 
     /// Autodetect: `MOR_THREADS` env override, else the machine's
-    /// available parallelism.
+    /// available parallelism; `MOR_PAR_MIN_BLOCK` overrides the serial
+    /// cutoff (the CI-tuning twin of the `--par-min-block` flag).
     ///
     /// # Panics
-    /// When `MOR_THREADS` is set but not a positive integer. A silent
-    /// fallback here used to hide typos (`MOR_THREADS=O8` ran serial);
-    /// misconfiguring the determinism matrix should be loud.
+    /// When `MOR_THREADS` or `MOR_PAR_MIN_BLOCK` is set but not a
+    /// positive integer. A silent fallback here used to hide typos
+    /// (`MOR_THREADS=O8` ran serial); misconfiguring the determinism
+    /// matrix should be loud.
     pub fn auto() -> Parallelism {
         let env = std::env::var("MOR_THREADS").ok();
         let threads = match parse_mor_threads(env.as_deref()) {
@@ -123,16 +146,20 @@ impl Parallelism {
             Ok(None) => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             Err(msg) => panic!("{msg}"),
         };
-        Parallelism::with_threads(threads)
+        let mut p = Parallelism::with_threads(threads);
+        if let Some(n) = env_min_items() {
+            p.min_items = n;
+        }
+        p
     }
 
-    /// This handle switched to `engine` (building the pool if the pool
-    /// engine now needs one, dropping it for the spawn engine).
+    /// This handle switched to `engine` (building the pool if the new
+    /// engine needs one, dropping it for the spawn engine).
     pub fn with_engine(mut self, engine: Engine) -> Parallelism {
         self.engine = engine;
         match engine {
             Engine::Spawn => self.pool = None,
-            Engine::Pool => {
+            Engine::Pool | Engine::Steal => {
                 if self.threads > 1 && self.pool.is_none() {
                     self.pool = Some(Arc::new(WorkerPool::new(self.threads)));
                 }
@@ -188,6 +215,41 @@ pub fn parse_mor_threads(raw: Option<&str>) -> Result<Option<usize>, String> {
     }
 }
 
+/// Parse a `--par-min-block` / `MOR_PAR_MIN_BLOCK` value with the same
+/// strictness as [`parse_mor_threads`]: `Ok(None)` when unset,
+/// `Ok(Some(n))` for a positive element count, and a clear error for
+/// `0` (use `1` to parallelize everything), empty, negative or
+/// non-numeric strings. The caller prefixes the flag/env name.
+pub fn parse_par_min_block(raw: Option<&str>) -> Result<Option<usize>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return Err("is set but empty; use a positive element count or unset it".to_string());
+    }
+    match trimmed.parse::<usize>() {
+        Ok(0) => Err(
+            "must be >= 1 (a cutoff of 1 element parallelizes everything; \
+             unset for the default)"
+                .to_string(),
+        ),
+        Ok(n) => Ok(Some(n)),
+        Err(_) => Err(format!("must be a positive element count, got {trimmed:?}")),
+    }
+}
+
+/// The `MOR_PAR_MIN_BLOCK` serial-cutoff override, strictly parsed.
+///
+/// # Panics
+/// When the variable is set but not a positive integer — CI tuning
+/// typos must fail loudly, exactly like `MOR_THREADS`.
+pub fn env_min_items() -> Option<usize> {
+    let env = std::env::var("MOR_PAR_MIN_BLOCK").ok();
+    match parse_par_min_block(env.as_deref()) {
+        Ok(v) => v,
+        Err(msg) => panic!("MOR_PAR_MIN_BLOCK {msg}"),
+    }
+}
+
 static GLOBAL: Mutex<Option<Parallelism>> = Mutex::new(None);
 
 /// Process-wide default parallelism, used by the no-argument entry
@@ -236,7 +298,33 @@ type Task = Box<dyn FnOnce() + Send + 'static>;
 /// the helper's, so the helper polls at this bounded cadence).
 const HELPER_RECHECK: std::time::Duration = std::time::Duration::from_micros(500);
 
+/// Per-worker deque capacity. A batch submission that overflows a
+/// deque spills to the shared injector instead of blocking, so the
+/// bound caps steal-scan cost without ever deadlocking a submit.
+const DEQUE_CAP: usize = 8;
+
+/// Steal-victim selection is randomized so idle threads don't convoy on
+/// the same victim, but **seeded per thread** so a given pool shape
+/// scans victims in a reproducible order (results never depend on it —
+/// chunks merge canonically — this keeps scheduling *behavior*
+/// reproducible for debugging).
+fn steal_seed(thread_index: usize) -> u64 {
+    (thread_index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1
+}
+
+fn xorshift64(s: &mut u64) -> u64 {
+    let mut x = *s;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *s = x;
+    x
+}
+
 struct PoolQueue {
+    /// The shared injector: every [`Engine::Pool`] task, plus
+    /// [`Engine::Steal`] overflow past [`DEQUE_CAP`] and single-task
+    /// submissions ([`join2`]).
     tasks: VecDeque<Task>,
     shutdown: bool,
     spawned: usize,
@@ -244,17 +332,143 @@ struct PoolQueue {
 
 struct PoolShared {
     queue: Mutex<PoolQueue>,
-    /// Signals workers that a task arrived (or shutdown was requested).
+    /// Signals sleeping workers that a task arrived (or shutdown was
+    /// requested).
     work_cv: Condvar,
+    /// One bounded deque per worker thread ([`Engine::Steal`] batch
+    /// placement). Owners pop the front; thieves and the helping
+    /// caller pop the back.
+    deques: Vec<Mutex<VecDeque<Task>>>,
+    /// Tasks currently queued anywhere (injector + all deques). Lets
+    /// scanners and the sleep path check "is there runnable work?"
+    /// without sweeping every queue under locks.
+    available: AtomicUsize,
+    /// Workers currently blocked on `work_cv`. Submitters skip the
+    /// notify handshake entirely while this is zero — the common case
+    /// under load, which is what keeps the injector mutex off the
+    /// steady-state submit path.
+    sleepers: AtomicUsize,
+}
+
+impl PoolShared {
+    /// Queue `task` on the engine-appropriate queue. `slot` picks the
+    /// target deque for steal placement (`None` = shared injector).
+    fn push(&self, task: Task, slot: Option<usize>) {
+        // Count the task before it becomes poppable: a scanner that
+        // wins the race then decrements a counter that was already
+        // incremented, so `available` can overshoot transiently (a
+        // bounded wasted scan) but never underflow.
+        self.available.fetch_add(1, Ordering::SeqCst);
+        let spilled = match slot {
+            Some(si) if !self.deques.is_empty() => {
+                let mut dq = self.deques[si % self.deques.len()].lock().unwrap();
+                if dq.len() < DEQUE_CAP {
+                    dq.push_back(task);
+                    None
+                } else {
+                    Some(task)
+                }
+            }
+            _ => Some(task),
+        };
+        if let Some(task) = spilled {
+            self.queue.lock().unwrap().tasks.push_back(task);
+        }
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            // Lock-bridge: taking (and dropping) the condvar mutex
+            // orders this notify after any in-flight check-then-wait,
+            // so a sleeper that saw `available == 0` is guaranteed to
+            // be parked — and woken — rather than missing the signal.
+            drop(self.queue.lock().unwrap());
+            self.work_cv.notify_one();
+        }
+    }
+
+    fn pop_injector(&self) -> Option<Task> {
+        let task = self.queue.lock().unwrap().tasks.pop_front();
+        if task.is_some() {
+            self.available.fetch_sub(1, Ordering::SeqCst);
+        }
+        task
+    }
+
+    fn pop_deque(&self, di: usize, back: bool) -> Option<Task> {
+        let mut dq = self.deques[di].lock().unwrap();
+        let task = if back { dq.pop_back() } else { dq.pop_front() };
+        drop(dq);
+        if task.is_some() {
+            self.available.fetch_sub(1, Ordering::SeqCst);
+        }
+        task
+    }
+
+    /// One full scan for runnable work: own deque front (owners only),
+    /// then the injector, then bounded randomized stealing from victim
+    /// deque backs, then one deterministic sweep so a lone runnable
+    /// task cannot hide from an unlucky victim sequence.
+    fn find_task(&self, own: Option<usize>, rng: &mut u64) -> Option<Task> {
+        if let Some(wi) = own {
+            if let Some(task) = self.pop_deque(wi, false) {
+                return Some(task);
+            }
+        }
+        if let Some(task) = self.pop_injector() {
+            return Some(task);
+        }
+        let n = self.deques.len();
+        if n == 0 || self.available.load(Ordering::SeqCst) == 0 {
+            return None;
+        }
+        for _ in 0..2 * n {
+            let victim = (xorshift64(rng) as usize) % n;
+            if Some(victim) == own {
+                continue;
+            }
+            if let Some(task) = self.pop_deque(victim, true) {
+                return Some(task);
+            }
+        }
+        for victim in 0..n {
+            if Some(victim) == own {
+                continue;
+            }
+            if let Some(task) = self.pop_deque(victim, true) {
+                return Some(task);
+            }
+        }
+        None
+    }
+
+    /// Park until work exists or shutdown. Returns `false` on shutdown.
+    fn wait_for_work(&self) -> bool {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if q.shutdown {
+                return false;
+            }
+            // Register as a sleeper BEFORE the availability check: a
+            // submitter that bumps `available` after our check will see
+            // `sleepers > 0` and take the notify handshake.
+            self.sleepers.fetch_add(1, Ordering::SeqCst);
+            if self.available.load(Ordering::SeqCst) > 0 {
+                self.sleepers.fetch_sub(1, Ordering::SeqCst);
+                return true;
+            }
+            q = self.work_cv.wait(q).unwrap();
+            self.sleepers.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
 }
 
 /// The persistent worker set behind a [`Parallelism`] handle: lazily
-/// spawned threads draining a shared chunk queue.
+/// spawned threads draining per-worker deques (with bounded stealing)
+/// and a shared injector queue.
 ///
 /// * **Lazy**: no thread exists until the first chunk is submitted.
 /// * **Panic-safe**: chunks are run under `catch_unwind`; a panicking
-///   chunk poisons nothing, the payload is re-raised on the caller and
-///   the worker survives to serve the next call.
+///   chunk — including one another worker stole — poisons nothing, the
+///   payload is re-raised on the caller and the worker survives to
+///   serve the next call.
 /// * **Clean shutdown**: dropping the pool (the last `Parallelism`
 ///   clone) flags shutdown, wakes every worker and joins them all — no
 ///   leaked threads.
@@ -267,6 +481,10 @@ pub struct WorkerPool {
     /// Worker threads this pool spawns: the calling thread always runs
     /// chunks too, so a `threads`-way config needs `threads - 1`.
     workers: usize,
+    /// Rotates the starting deque of each batch's round-robin
+    /// placement, so concurrent nested batches spread across all
+    /// deques instead of convoying on deque 0.
+    rr_base: AtomicUsize,
     /// Lock-free fast path for [`WorkerPool::ensure_spawned`] once the
     /// one-time spawn has happened.
     started: std::sync::atomic::AtomicBool,
@@ -274,8 +492,10 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     /// A pool sized for `threads`-way parallelism (`threads - 1` worker
-    /// threads + the calling thread). Workers spawn on first use.
+    /// threads + the calling thread). Workers spawn on first use; their
+    /// deques exist up front so submission never races spawning.
     pub fn new(threads: usize) -> WorkerPool {
+        let workers = threads.saturating_sub(1).max(1);
         WorkerPool {
             shared: Arc::new(PoolShared {
                 queue: Mutex::new(PoolQueue {
@@ -284,10 +504,14 @@ impl WorkerPool {
                     spawned: 0,
                 }),
                 work_cv: Condvar::new(),
+                deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+                available: AtomicUsize::new(0),
+                sleepers: AtomicUsize::new(0),
             }),
             alive: Arc::new(AtomicUsize::new(0)),
             handles: Mutex::new(Vec::new()),
-            workers: threads.saturating_sub(1).max(1),
+            workers,
+            rr_base: AtomicUsize::new(0),
             started: std::sync::atomic::AtomicBool::new(false),
         }
     }
@@ -329,7 +553,7 @@ impl WorkerPool {
             let alive = self.alive.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("mor-pool-{wi}"))
-                .spawn(move || worker_loop(shared, alive));
+                .spawn(move || worker_loop(shared, alive, wi));
             match spawned {
                 Ok(handle) => handles.push(handle),
                 Err(_) => {
@@ -344,26 +568,24 @@ impl WorkerPool {
         }
     }
 
-    /// Queue one task. Callers dispatching a batch run
-    /// [`WorkerPool::ensure_spawned`] once up front (`run_all`,
-    /// `join2`) rather than paying the check per task.
-    fn submit(&self, task: Task) {
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.tasks.push_back(task);
-        }
-        self.shared.work_cv.notify_one();
+    /// Queue one task. `slot` selects [`Engine::Steal`] deque placement
+    /// (`None` = the shared injector, the [`Engine::Pool`] path).
+    /// Callers dispatching a batch run [`WorkerPool::ensure_spawned`]
+    /// once up front (`run_all`, `join2`) rather than paying the check
+    /// per task.
+    fn submit(&self, task: Task, slot: Option<usize>) {
+        self.shared.push(task, slot);
     }
 
-    fn try_pop(&self) -> Option<Task> {
-        self.shared.queue.lock().unwrap().tasks.pop_front()
-    }
-
-    /// Run queued chunks on the calling thread until `comp` completes.
-    /// This is what keeps nested parallel sections live: a caller
-    /// waiting on its own chunks executes whatever work is runnable
-    /// (its chunks, or chunks of the call it is nested inside).
+    /// Run runnable chunks on the calling thread until `comp`
+    /// completes. This is what keeps nested parallel sections live: a
+    /// caller waiting on its own chunks executes whatever work is
+    /// runnable (its chunks, or chunks of the call it is nested
+    /// inside), stealing from worker deques like any idle thread.
     fn help_until(&self, comp: &Completion) {
+        // The caller is "thread index workers" for steal-seed purposes:
+        // distinct from every worker, deterministic per pool shape.
+        let mut rng = steal_seed(self.workers);
         loop {
             {
                 let remaining = comp.remaining.lock().unwrap();
@@ -371,22 +593,23 @@ impl WorkerPool {
                     return;
                 }
             }
-            match self.try_pop() {
+            match self.shared.find_task(None, &mut rng) {
                 Some(task) => task(),
                 None => {
                     let remaining = comp.remaining.lock().unwrap();
                     if *remaining == 0 {
                         return;
                     }
-                    // Queue empty + chunks outstanding: they are being
-                    // executed by other threads. `finish_one` notifies
-                    // under the `remaining` lock, so this check-then-
-                    // wait cannot miss the last completion. The timeout
-                    // bounds a second race this condvar cannot see:
-                    // tasks *submitted* (by nested sections on other
-                    // threads) while we sleep only signal `work_cv`, so
-                    // re-check the queue at a fixed cadence rather than
-                    // idling until our own call completes.
+                    // No runnable work + chunks outstanding: they are
+                    // being executed by other threads. `finish_one`
+                    // notifies under the `remaining` lock, so this
+                    // check-then-wait cannot miss the last completion.
+                    // The timeout bounds a second race this condvar
+                    // cannot see: tasks *submitted* (by nested sections
+                    // on other threads) while we sleep only signal
+                    // `work_cv`, so re-scan the queues at a fixed
+                    // cadence rather than idling until our own call
+                    // completes.
                     let waited = comp
                         .done_cv
                         .wait_timeout(remaining, HELPER_RECHECK)
@@ -420,7 +643,7 @@ impl std::fmt::Debug for WorkerPool {
     }
 }
 
-fn worker_loop(shared: Arc<PoolShared>, alive: Arc<AtomicUsize>) {
+fn worker_loop(shared: Arc<PoolShared>, alive: Arc<AtomicUsize>, wi: usize) {
     // Decrement the live count on every exit path. Tasks catch their
     // own panics, so an unwind out of `task()` should be impossible;
     // the guard makes the count right even if one slips through.
@@ -431,22 +654,15 @@ fn worker_loop(shared: Arc<PoolShared>, alive: Arc<AtomicUsize>) {
         }
     }
     let _guard = AliveGuard(alive);
+    let mut rng = steal_seed(wi);
     loop {
-        let task = {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                if let Some(task) = q.tasks.pop_front() {
-                    break Some(task);
-                }
-                if q.shutdown {
-                    break None;
-                }
-                q = shared.work_cv.wait(q).unwrap();
-            }
-        };
-        match task {
+        match shared.find_task(Some(wi), &mut rng) {
             Some(task) => task(),
-            None => return,
+            None => {
+                if !shared.wait_for_work() {
+                    return;
+                }
+            }
         }
     }
 }
@@ -496,19 +712,34 @@ unsafe fn erase<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> Task {
 }
 
 /// Drive `tasks` to completion on `pool`: every task but the first is
-/// fed to the chunk queue, the first runs on the calling thread, then
-/// the caller helps drain the queue until the latch opens. `comp` must
-/// have been created with `tasks.len()` pending counts and every task
-/// must call `comp.finish_one()` exactly once (and never unwind —
-/// wrappers catch panics into the latch).
-fn run_all(pool: &WorkerPool, mut tasks: Vec<Box<dyn FnOnce() + Send + '_>>, comp: &Completion) {
+/// fed to the scheduler (round-robin across per-worker deques for
+/// [`Engine::Steal`], the shared injector for [`Engine::Pool`]), the
+/// first runs on the calling thread, then the caller helps drain
+/// runnable work until the latch opens. `comp` must have been created
+/// with `tasks.len()` pending counts and every task must call
+/// `comp.finish_one()` exactly once (and never unwind — wrappers catch
+/// panics into the latch).
+fn run_all(
+    pool: &WorkerPool,
+    engine: Engine,
+    mut tasks: Vec<Box<dyn FnOnce() + Send + '_>>,
+    comp: &Completion,
+) {
     pool.ensure_spawned();
+    // Each batch starts its round-robin at a rotated base so
+    // concurrent (nested) batches spread across all deques instead of
+    // all hammering deque 0. Placement never affects results.
+    let base = pool.rr_base.fetch_add(1, Ordering::Relaxed);
     let first = tasks.remove(0);
-    for task in tasks {
+    for (i, task) in tasks.into_iter().enumerate() {
+        let slot = match engine {
+            Engine::Steal => Some(base.wrapping_add(i)),
+            _ => None,
+        };
         // Safety: `help_until` below blocks this frame until every
         // submitted task has run (the latch only opens after the last
         // `finish_one`), so the borrows inside `task` stay valid.
-        pool.submit(unsafe { erase(task) });
+        pool.submit(unsafe { erase(task) }, slot);
     }
     first();
     pool.help_until(comp);
@@ -533,12 +764,12 @@ where
         return (0..n).map(f).collect();
     }
     match (cfg.engine, cfg.pool.as_deref()) {
-        (Engine::Pool, Some(pool)) => par_map_pool(pool, &bounds, &f),
-        _ => par_map_spawn(&bounds, &f),
+        (Engine::Spawn, _) | (_, None) => par_map_spawn(&bounds, &f),
+        (engine, Some(pool)) => par_map_pool(pool, engine, &bounds, &f),
     }
 }
 
-fn par_map_pool<R, F>(pool: &WorkerPool, bounds: &[(usize, usize)], f: &F) -> Vec<R>
+fn par_map_pool<R, F>(pool: &WorkerPool, engine: Engine, bounds: &[(usize, usize)], f: &F) -> Vec<R>
 where
     R: Send,
     F: Fn(usize) -> R + Sync,
@@ -562,7 +793,7 @@ where
             }) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
-    run_all(pool, tasks, &comp);
+    run_all(pool, engine, tasks, &comp);
     if let Some(payload) = comp.take_panic() {
         resume_unwind(payload);
     }
@@ -570,6 +801,103 @@ where
         .into_iter()
         .flat_map(|slot| {
             slot.into_inner().unwrap().expect("pool chunk completed without a result")
+        })
+        .collect()
+}
+
+/// Map `f` over `0..weights.len()`, one pool task per item (no chunk
+/// batching), **submitting heaviest items first**: the scheduler sees
+/// item `i`'s cost estimate `weights[i]` and dispatches in descending
+/// weight order (ties broken by index, so submission order is fully
+/// deterministic). Results still come back in index order, and each
+/// `f(i)` is an independent computation, so the output is bit-identical
+/// to the serial loop for any thread count — only tail latency changes.
+///
+/// This is the sweep scheduler: a mixed-size batch no longer strands a
+/// giant tensor behind a queue of tiny ones, and items may themselves
+/// run chunk-parallel on the same pool (nested sections are
+/// deadlock-free via help-while-waiting).
+pub fn par_map_weighted<R, F>(cfg: &Parallelism, weights: &[usize], f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let n = weights.len();
+    if cfg.threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(weights[i]), i));
+    match (cfg.engine, cfg.pool.as_deref()) {
+        (Engine::Spawn, _) | (_, None) => par_map_weighted_spawn(cfg.threads, &order, n, &f),
+        (engine, Some(pool)) => par_map_weighted_pool(pool, engine, &order, n, &f),
+    }
+}
+
+fn par_map_weighted_pool<R, F>(
+    pool: &WorkerPool,
+    engine: Engine,
+    order: &[usize],
+    n: usize,
+    f: &F,
+) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let comp = Completion::new(order.len());
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = order
+        .iter()
+        .map(|&i| {
+            let (comp, results) = (&comp, &results);
+            Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(i)));
+                match out {
+                    Ok(v) => *results[i].lock().unwrap() = Some(v),
+                    Err(payload) => comp.record_panic(payload),
+                }
+                comp.finish_one();
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    run_all(pool, engine, tasks, &comp);
+    if let Some(payload) = comp.take_panic() {
+        resume_unwind(payload);
+    }
+    results
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner().unwrap().expect("weighted item completed without a result")
+        })
+        .collect()
+}
+
+/// Spawn-engine weighted map: at most `threads` scoped threads (the
+/// same cap `par_map_spawn` gets from its chunk count — never one
+/// thread per item), pulling items off the descending-weight `order`
+/// through a shared cursor so the heaviest items still start first.
+fn par_map_weighted_spawn<R, F>(threads: usize, order: &[usize], n: usize, f: &F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.max(1).min(order.len()) {
+            let (results, cursor) = (&results, &cursor);
+            s.spawn(move || loop {
+                let k = cursor.fetch_add(1, Ordering::SeqCst);
+                let Some(&i) = order.get(k) else { return };
+                *results[i].lock().unwrap() = Some(f(i));
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner().unwrap().expect("weighted item completed without a result")
         })
         .collect()
 }
@@ -623,13 +951,14 @@ where
             .collect();
     }
     match (cfg.engine, cfg.pool.as_deref()) {
-        (Engine::Pool, Some(pool)) => par_panels_pool(pool, bounds, row_size, out, &f),
-        _ => par_panels_spawn(bounds, row_size, out, &f),
+        (Engine::Spawn, _) | (_, None) => par_panels_spawn(bounds, row_size, out, &f),
+        (engine, Some(pool)) => par_panels_pool(pool, engine, bounds, row_size, out, &f),
     }
 }
 
 fn par_panels_pool<R, F>(
     pool: &WorkerPool,
+    engine: Engine,
     bounds: &[(usize, usize)],
     row_size: usize,
     out: &mut [f32],
@@ -664,7 +993,7 @@ where
             }) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
-    run_all(pool, tasks, &comp);
+    run_all(pool, engine, tasks, &comp);
     if let Some(payload) = comp.take_panic() {
         resume_unwind(payload);
     }
@@ -717,7 +1046,13 @@ where
         return (a, b);
     }
     match (cfg.engine, cfg.pool.as_deref()) {
-        (Engine::Pool, Some(pool)) => {
+        (Engine::Spawn, _) | (_, None) => std::thread::scope(|s| {
+            let hb = s.spawn(fb);
+            let a = fa();
+            let b = hb.join().unwrap_or_else(|payload| resume_unwind(payload));
+            (a, b)
+        }),
+        (_, Some(pool)) => {
             pool.ensure_spawned();
             let comp = Completion::new(1);
             let slot: Mutex<Option<B>> = Mutex::new(None);
@@ -730,8 +1065,10 @@ where
                     }
                     comp.finish_one();
                 });
+                // A lone task gains nothing from deque placement; the
+                // shared injector serves both pooled engines here.
                 // Safety: `help_until` below blocks until the task ran.
-                pool.submit(unsafe { erase(task) });
+                pool.submit(unsafe { erase(task) }, None);
             }
             let a = catch_unwind(AssertUnwindSafe(fa));
             pool.help_until(&comp);
@@ -742,12 +1079,6 @@ where
             let b = slot.into_inner().unwrap().expect("join2 task completed without a result");
             (a, b)
         }
-        _ => std::thread::scope(|s| {
-            let hb = s.spawn(fb);
-            let a = fa();
-            let b = hb.join().unwrap_or_else(|payload| resume_unwind(payload));
-            (a, b)
-        }),
     }
 }
 
@@ -806,6 +1137,20 @@ pub fn unit_panel_bounds(
         .into_iter()
         .map(|(u0, u1)| (u0 * unit, (u1 * unit).min(rows)))
         .collect()
+}
+
+/// The four engine configurations the serial-vs-parallel benches
+/// compare, in cost-model order: no parallelism, per-call thread
+/// spawning, the shared-queue pool, and the stealing pool (default).
+/// Fresh handles per call so each bench row owns (and drops) its own
+/// pool.
+pub fn engine_comparison_rows() -> Vec<(&'static str, Parallelism)> {
+    vec![
+        ("serial", Parallelism::serial()),
+        ("spawn", Parallelism::auto().with_engine(Engine::Spawn)),
+        ("pool", Parallelism::auto().with_engine(Engine::Pool)),
+        ("steal", Parallelism::auto()),
+    ]
 }
 
 #[cfg(test)]
@@ -912,6 +1257,114 @@ mod tests {
         assert!(parse_mor_threads(Some("eight")).is_err());
         assert!(parse_mor_threads(Some("")).is_err());
         assert!(parse_mor_threads(Some("  ")).is_err());
+    }
+
+    #[test]
+    fn par_min_block_parsing_is_strict() {
+        assert_eq!(parse_par_min_block(None), Ok(None));
+        assert_eq!(parse_par_min_block(Some("8192")), Ok(Some(8192)));
+        assert_eq!(parse_par_min_block(Some(" 1 ")), Ok(Some(1)));
+        assert!(parse_par_min_block(Some("0")).is_err());
+        assert!(parse_par_min_block(Some("-1")).is_err());
+        assert!(parse_par_min_block(Some("4k")).is_err());
+        assert!(parse_par_min_block(Some("")).is_err());
+        assert!(parse_par_min_block(Some("  ")).is_err());
+    }
+
+    #[test]
+    fn default_engine_is_steal_and_rows_cover_all_engines() {
+        assert_eq!(Parallelism::pooled(4, 1).engine(), Engine::Steal);
+        assert_eq!(Parallelism::serial().engine(), Engine::Steal);
+        let rows = engine_comparison_rows();
+        assert_eq!(rows.len(), 4);
+        let labels: Vec<&str> = rows.iter().map(|(l, _)| *l).collect();
+        assert_eq!(labels, ["serial", "spawn", "pool", "steal"]);
+        assert_eq!(rows[2].1.engine(), Engine::Pool);
+        assert_eq!(rows[3].1.engine(), Engine::Steal);
+    }
+
+    #[test]
+    fn steal_engine_matches_shared_queue_engine() {
+        // Same chunking, different placement: results must be
+        // bit-identical between the deque/steal scheduler and the
+        // legacy shared-queue pool.
+        for threads in [2, 3, 13] {
+            let steal = Parallelism::pooled(threads, 1);
+            let shared = Parallelism::pooled(threads, 1).with_engine(Engine::Pool);
+            let a = par_map(&steal, 257, |i| (i as f32).sin());
+            let b = par_map(&shared, 257, |i| (i as f32).sin());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_map_preserves_index_order() {
+        let cfg = Parallelism::pooled(4, 1);
+        // Ascending weights: submission order is exactly reversed from
+        // index order, results must still come back by index.
+        let weights: Vec<usize> = (1..=40).collect();
+        let out = par_map_weighted(&cfg, &weights, |i| i * 3);
+        assert_eq!(out, (0..40).map(|i| i * 3).collect::<Vec<_>>());
+        // Serial path agrees.
+        let serial = par_map_weighted(&Parallelism::serial(), &weights, |i| i * 3);
+        assert_eq!(out, serial);
+        // Spawn engine agrees.
+        let spawn = Parallelism::pooled(4, 1).with_engine(Engine::Spawn);
+        assert_eq!(out, par_map_weighted(&spawn, &weights, |i| i * 3));
+        // Tied weights keep index order deterministically.
+        let tied = vec![7usize; 9];
+        assert_eq!(par_map_weighted(&cfg, &tied, |i| i), (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_map_overflows_deques_safely() {
+        // Far more items than DEQUE_CAP * workers: the bounded deques
+        // must spill to the injector, and every item must still run
+        // exactly once.
+        let cfg = Parallelism::pooled(2, 1);
+        let weights: Vec<usize> = (0..200).map(|i| i % 13).collect();
+        let out = par_map_weighted(&cfg, &weights, |i| i + 1);
+        assert_eq!(out, (1..=200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stolen_chunk_panic_propagates_and_pool_survives() {
+        // With 3-way parallelism and many single-item tasks, the
+        // panicking task is queued on a worker deque and may be run by
+        // its owner, a stealing worker, or the helping caller — on
+        // every path the payload must reach the caller.
+        let cfg = Parallelism::pooled(3, 1);
+        assert_eq!(cfg.engine(), Engine::Steal);
+        let weights: Vec<usize> = vec![1; 48];
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            par_map_weighted(&cfg, &weights, |i| {
+                if i == 47 {
+                    panic!("intentional stolen-chunk panic at {i}");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err(), "stolen-chunk panic must reach the caller");
+        // The pool stays serviceable afterwards.
+        let v = par_map(&cfg, 64, |i| i * 2);
+        assert_eq!(v, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(cfg.worker_pool().unwrap().alive_workers(), 2);
+    }
+
+    #[test]
+    fn nested_weighted_map_shares_the_pool() {
+        // Sweep items that are themselves chunk-parallel on the same
+        // pool: the help-while-waiting protocol must keep this live.
+        let cfg = Parallelism::pooled(3, 1);
+        let weights = [30usize, 2, 17, 1, 9];
+        let out = par_map_weighted(&cfg, &weights, |i| {
+            par_map(&cfg, weights[i], move |j| i * 100 + j).iter().sum::<usize>()
+        });
+        let expect: Vec<usize> =
+            (0..weights.len()).map(|i| (0..weights[i]).map(|j| i * 100 + j).sum()).collect();
+        assert_eq!(out, expect);
     }
 
     #[test]

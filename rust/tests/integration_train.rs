@@ -111,7 +111,7 @@ fn eval_session_and_suite_run() {
     assert!(acc < 0.05, "untrained acc {acc}");
 
     let suite = EvalSuite::new(ev.seq, 256, 4, 99);
-    let scores = eval_suite(&ev, s.param_literals(), &suite).unwrap();
+    let scores = eval_suite(&ev, s.params_ref(), &suite).unwrap();
     assert_eq!(scores.per_task.len(), 5);
     for (name, loss, acc) in &scores.per_task {
         assert!(loss.is_finite(), "{name}");

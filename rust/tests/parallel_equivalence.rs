@@ -1,11 +1,12 @@
 //! The parallel engine's correctness contract: for any thread count,
-//! `fake_quantize`, `compute_scales`, all four GEMM paths, the recipe
-//! sweep and the full overlapped host train step produce results
-//! **bit-identical** to the serial path — on the persistent worker
-//! pool, on the legacy spawn engine, and at whatever thread count
-//! `MOR_THREADS` selects (the CI determinism matrix runs this suite at
-//! 1, 4 and 13 threads). Also pins `Histogram::bin_of` to the paper's
-//! 0.5%-wide bin edges.
+//! `fake_quantize`, `compute_scales`, all four GEMM paths, the
+//! weighted recipe sweep and the full overlapped host train step
+//! produce results **bit-identical** to the serial path — on the
+//! deque/steal scheduler (default), the legacy shared-queue pool, the
+//! spawn engine, and at whatever thread count `MOR_THREADS` selects
+//! (the CI determinism matrix runs this suite at 1, 2, 4 and 13
+//! threads; 2 is the minimal stealing case). Also pins
+//! `Histogram::bin_of` to the paper's 0.5%-wide bin edges.
 
 use mor::formats::ReprType;
 use mor::model::config::ModelConfig;
@@ -190,22 +191,106 @@ fn prop_recipe_sweep_parallel_equals_serial() {
     });
 }
 
-/// The spawn engine (scoped thread per chunk) and the persistent pool
-/// must agree bit-for-bit: same chunking, different scheduling.
+/// The spawn engine (scoped thread per chunk), the shared-queue pool
+/// and the deque/steal scheduler must all agree bit-for-bit: same
+/// chunking, different scheduling.
 #[test]
 fn prop_spawn_engine_equals_pool_engine() {
     prop(40, |g: &mut Gen| {
         let x = random_tensor(g, 32);
         let threads = g.usize_in(2, 8);
-        let pool_cfg = pool(threads);
+        let steal_cfg = pool(threads); // Engine::Steal is the default
+        let shared_cfg = pool(threads).with_engine(Engine::Pool);
         let spawn_cfg = pool(threads).with_engine(Engine::Spawn);
         let (t, p, alg) = (ReprType::E4M3, Partition::BLOCK128, ScalingAlgo::Gam);
-        let a = fake_quantize_with(&x, t, p, alg, &pool_cfg);
+        let a = fake_quantize_with(&x, t, p, alg, &steal_cfg);
         let b = fake_quantize_with(&x, t, p, alg, &spawn_cfg);
-        assert_bits_eq(a.out.data(), b.out.data(), "engine parity");
+        let c = fake_quantize_with(&x, t, p, alg, &shared_cfg);
+        assert_bits_eq(a.out.data(), b.out.data(), "steal-vs-spawn parity");
+        assert_bits_eq(a.out.data(), c.out.data(), "steal-vs-pool parity");
         assert_eq!(a.block_err, b.block_err);
+        assert_eq!(a.block_err, c.block_err);
         true
     });
+}
+
+/// Adversarial chunk shapes for the stealing scheduler, at the exact
+/// thread counts the CI determinism matrix pins (2 = minimal stealing
+/// case, 3, 13): 1-element chunks, chunk counts of worker-count ± 1
+/// (one deque empty / one chunk spilling past the round-robin), and
+/// counts far past the deque bound. Every shape must match serial
+/// bitwise on both pooled engines.
+#[test]
+fn adversarial_chunk_shapes_match_serial_bitwise() {
+    let f = |i: usize| ((i as f32) * 0.7311).sin() * (1.0 + (i % 17) as f32);
+    for threads in [2usize, 3, 13] {
+        let steal = pool(threads);
+        let shared = pool(threads).with_engine(Engine::Pool);
+        for n in [1usize, threads - 1, threads, threads + 1, 4 * threads + 1, 97] {
+            let serial: Vec<u32> = (0..n).map(|i| f(i).to_bits()).collect();
+            let a: Vec<u32> =
+                mor::util::par::par_map(&steal, n, f).iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> =
+                mor::util::par::par_map(&shared, n, f).iter().map(|v| v.to_bits()).collect();
+            assert_eq!(serial, a, "steal par_map diverged at {threads} threads, n={n}");
+            assert_eq!(serial, b, "pool par_map diverged at {threads} threads, n={n}");
+        }
+        // 1-element-chunk quantizations: a 1xN tensor under a 1x1 block
+        // partition makes every chunk a single element.
+        let x = Tensor::from_vec(&[1, 29], (0..29).map(f).collect());
+        let one = Partition::Block { r: 1, c: 1 };
+        let ser = Parallelism::serial();
+        let s = fake_quantize_with(&x, ReprType::E4M3, one, ScalingAlgo::Gam, &ser);
+        let p = fake_quantize_with(&x, ReprType::E4M3, one, ScalingAlgo::Gam, &steal);
+        assert_bits_eq(s.out.data(), p.out.data(), "1-element chunks");
+        assert_eq!(s.block_err, p.block_err);
+    }
+}
+
+/// The weighted sweep scheduler on its target workload — one giant
+/// tensor plus many tiny items — must stay bitwise equal to the serial
+/// sweep at the matrix thread counts, for both sub-tensor recipes.
+#[test]
+fn weighted_sweep_giant_plus_tiny_matches_serial_bitwise() {
+    let giant = Tensor::normal(&[96, 96], 1.0, 41);
+    let tinies: Vec<Tensor> = (0..11)
+        .map(|i| {
+            let side = 1 + (i % 4);
+            Tensor::normal(&[side, side + 1], 1.0, 100 + i as u64)
+        })
+        .collect();
+    // Giant deliberately NOT first in input order: weighted dispatch
+    // must reorder scheduling without reordering results.
+    let mut refs: Vec<&Tensor> = tinies.iter().take(5).collect();
+    refs.push(&giant);
+    refs.extend(tinies.iter().skip(5));
+    for kind in [
+        RecipeKind::TensorLevel { threshold: 0.045 },
+        RecipeKind::SubTensor { mode: SubTensorMode::TwoWay },
+        RecipeKind::SubTensor { mode: SubTensorMode::ThreeWay },
+    ] {
+        let recipe = Recipe {
+            kind,
+            partition: Partition::Block { r: 5, c: 5 },
+            scaling: ScalingAlgo::Gam,
+        };
+        let serial = recipe.apply_batch_with(&refs, &Parallelism::serial());
+        for threads in [2usize, 3, 13] {
+            let parallel = recipe.apply_batch_with(&refs, &pool(threads));
+            assert_eq!(serial.len(), parallel.len());
+            for (i, (s, p)) in serial.iter().zip(parallel.iter()).enumerate() {
+                assert_bits_eq(
+                    s.out.data(),
+                    p.out.data(),
+                    &format!("weighted sweep item {i} at {threads} threads"),
+                );
+                assert_eq!(s.block_types, p.block_types);
+                assert_eq!(s.e4m3_relerr.to_bits(), p.e4m3_relerr.to_bits());
+                assert_eq!(s.bf16_fraction.to_bits(), p.bf16_fraction.to_bits());
+                assert_eq!(s.metadata_bits, p.metadata_bits);
+            }
+        }
+    }
 }
 
 /// `MOR_THREADS`-driven config (what the CI determinism matrix varies):

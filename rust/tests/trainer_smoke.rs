@@ -130,13 +130,18 @@ fn host_eval_session_scores_suite() {
     let loader = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, ev.batch, ev.seq, 3, 1);
     let b = loader.next_batch();
     let mask = full_mask(ev.batch, ev.seq);
-    let (loss, acc) = ev.eval(s.param_literals(), &b.tokens, &mask).unwrap();
+    // Tensor-native path (zero-copy on the host backend)...
+    let (loss, acc) = ev.eval_params(s.params_ref(), &b.tokens, &mask).unwrap();
     assert!(loss > 0.0 && loss.is_finite());
     // Untrained model ≈ chance accuracy over 256 symbols.
     assert!(acc < 0.05, "untrained acc {acc}");
+    // ...agrees bitwise with the Literal-interchange path.
+    let (loss_lit, acc_lit) = ev.eval(s.param_literals(), &b.tokens, &mask).unwrap();
+    assert_eq!(loss.to_bits(), loss_lit.to_bits());
+    assert_eq!(acc.to_bits(), acc_lit.to_bits());
 
     let suite = EvalSuite::new(ev.seq, 256, 2, 99);
-    let scores = eval_suite(&ev, s.param_literals(), &suite).unwrap();
+    let scores = eval_suite(&ev, s.params_ref(), &suite).unwrap();
     assert_eq!(scores.per_task.len(), 5);
     for (name, loss, acc) in &scores.per_task {
         assert!(loss.is_finite(), "{name}");
