@@ -1,95 +1,396 @@
-//! Checkpointing: a minimal binary tensor container (no serde offline).
+//! Checkpointing: the `MORCKPT2` sectioned binary container (no serde
+//! offline) plus the full-training-state [`TrainCheckpoint`] built on
+//! it — the on-disk half of the bitwise **resume ≡ continuous**
+//! contract.
 //!
-//! Format (little-endian):
+//! ## Container layout (all integers/floats little-endian, explicitly
+//! via `to_le_bytes`/`from_le_bytes` — the format is endian-stable)
+//!
 //! ```text
-//! magic "MORCKPT1" | u64 step | u32 ntensors |
-//!   per tensor: u32 name_len | name bytes | u32 ndims | u64 dims... |
-//!               f32 data...
+//! MORCKPT2:
+//!   magic "MORCKPT2" | u64 step | u32 nsections |
+//!     per section: u32 name_len | name bytes | u64 payload_len | payload
+//!
+//! tensor-list payload (sections "params", "opt/m", "opt/v"):
+//!   u32 ntensors |
+//!     per tensor: u32 name_len | name bytes | u32 ndims | u64 dims... |
+//!                 f32 data (LE) ...
 //! ```
+//!
+//! `step` counts **completed** optimizer steps; a resumed run continues
+//! at exactly that step index. The legacy `MORCKPT1` layout (magic +
+//! step + bare tensor list, params only) still loads — it simply has no
+//! sections.
+//!
+//! Section names and payloads of a full training checkpoint (see
+//! [`section`]): optimizer moments (`opt/m`, `opt/v`), data-loader
+//! positions (`data/train`, `data/val`), raw `util::rng` stream states
+//! (`rng/streams`), delayed-scaling amax histories
+//! (`scaling/amax_hist`), the `mor::stats` collector (`mor/stats`),
+//! the metrics rows logged so far (`metrics/records`), the eval-suite
+//! trajectory (`eval/suite`), run identity (`meta`), and extensible
+//! named telemetry counters (`telemetry/counters`). Unknown sections
+//! are preserved on load, so older readers skip newer state instead of
+//! failing.
+//!
+//! Every read is bounded: lengths are validated against the remaining
+//! buffer **before** any allocation, name/dims counts have hard caps,
+//! and malformed input (bad magic, truncated payloads, oversized
+//! length fields) returns an `anyhow` error — never a panic or an
+//! unchecked allocation (`rust/tests/checkpoint_roundtrip.rs` pins one
+//! test per malformed-file class).
 
+use crate::coordinator::eval::EvalScores;
+use crate::coordinator::logging::StepRecord;
+use crate::data::loader::LoaderCursor;
+use crate::data::synthetic::CorpusState;
+use crate::data::tasks::EvalTask;
+use crate::mor::stats::{StatsCollector, TensorKey, TensorWindow, HIST_BINS};
+use crate::runtime::TrainState;
+use crate::scaling::delayed::AmaxHistory;
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"MORCKPT1";
+const MAGIC_V1: &[u8; 8] = b"MORCKPT1";
+const MAGIC_V2: &[u8; 8] = b"MORCKPT2";
 
-/// A checkpoint: named tensors + the step they were saved at.
+/// Hard cap on any encoded name (tensor, section, counter, task).
+pub const MAX_NAME_LEN: usize = 4096;
+/// Hard cap on tensor rank.
+pub const MAX_NDIMS: usize = 16;
+/// Hard cap on the section count of one container.
+pub const MAX_SECTIONS: usize = 256;
+
+/// Canonical section names of a [`TrainCheckpoint`].
+pub mod section {
+    pub const PARAMS: &str = "params";
+    pub const OPT_M: &str = "opt/m";
+    pub const OPT_V: &str = "opt/v";
+    pub const DATA_TRAIN: &str = "data/train";
+    pub const DATA_VAL: &str = "data/val";
+    pub const RNG: &str = "rng/streams";
+    pub const SCALING: &str = "scaling/amax_hist";
+    pub const STATS: &str = "mor/stats";
+    pub const METRICS: &str = "metrics/records";
+    pub const SUITE: &str = "eval/suite";
+    pub const META: &str = "meta";
+    pub const TELEMETRY: &str = "telemetry/counters";
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian writer/reader primitives
+// ---------------------------------------------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= MAX_NAME_LEN, "name {s:?} exceeds MAX_NAME_LEN");
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Raw f32 payload, element-wise `to_le_bytes` (endian-stable; no
+/// pointer punning anywhere in the format).
+fn put_f32s(out: &mut Vec<u8>, data: &[f32]) {
+    out.reserve(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked cursor over an in-memory checkpoint image. Every
+/// `take` verifies the requested length against the remaining bytes, so
+/// no length field can trigger an allocation larger than the file
+/// itself.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Rd<'a> {
+        Rd { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("checkpoint truncated: {what} needs {n} bytes, {} left", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        let b = self.take(4, what)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        let b = self.take(8, what)?;
+        Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let n = self.u32(what)? as usize;
+        if n > MAX_NAME_LEN {
+            bail!("checkpoint corrupt: {what} length {n} exceeds cap {MAX_NAME_LEN}");
+        }
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec()).with_context(|| format!("{what} is not utf8"))
+    }
+
+    /// `n` little-endian f32s, length-validated before allocating.
+    fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint corrupt: {what} count overflows"))?;
+        let raw = self.take(bytes, what)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn expect_done(&self, what: &str) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("checkpoint corrupt: {} trailing bytes after {what}", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tensor-list codec (sections "params", "opt/m", "opt/v"; also the v1
+// body)
+// ---------------------------------------------------------------------------
+
+fn put_tensor_entry(out: &mut Vec<u8>, name: &str, t: &Tensor) {
+    put_str(out, name);
+    debug_assert!(t.shape().len() <= MAX_NDIMS);
+    put_u32(out, t.shape().len() as u32);
+    for d in t.shape() {
+        put_u64(out, *d as u64);
+    }
+    put_f32s(out, t.data());
+}
+
+fn put_tensors(out: &mut Vec<u8>, tensors: &[(String, Tensor)]) {
+    put_u32(out, tensors.len() as u32);
+    for (name, t) in tensors {
+        put_tensor_entry(out, name, t);
+    }
+}
+
+/// Tensor-list payload from parallel name/tensor slices — lets the
+/// optimizer-moment sections serialize straight from borrowed session
+/// state without cloning every tensor first.
+fn put_named_tensors(out: &mut Vec<u8>, names: &[String], tensors: &[Tensor]) {
+    debug_assert_eq!(names.len(), tensors.len());
+    put_u32(out, tensors.len() as u32);
+    for (name, t) in names.iter().zip(tensors) {
+        put_tensor_entry(out, name, t);
+    }
+}
+
+fn read_tensors(rd: &mut Rd) -> Result<Vec<(String, Tensor)>> {
+    let n = rd.u32("tensor count")? as usize;
+    // Each tensor costs ≥ 8 header bytes; a count the file cannot hold
+    // is rejected before the Vec is sized.
+    if n > rd.remaining() / 8 + 1 {
+        bail!("checkpoint corrupt: tensor count {n} exceeds file capacity");
+    }
+    let mut tensors = Vec::with_capacity(n);
+    for i in 0..n {
+        let name = rd.str(&format!("tensor {i} name"))?;
+        let ndims = rd.u32(&format!("tensor {name} ndims"))? as usize;
+        if ndims > MAX_NDIMS {
+            bail!("checkpoint corrupt: tensor {name} rank {ndims} exceeds cap {MAX_NDIMS}");
+        }
+        let mut shape = Vec::with_capacity(ndims);
+        let mut vol = 1usize;
+        for d in 0..ndims {
+            let dim = rd.u64(&format!("tensor {name} dim {d}"))?;
+            let dim = usize::try_from(dim)
+                .map_err(|_| anyhow::anyhow!("tensor {name} dim {d} out of range"))?;
+            vol = vol
+                .checked_mul(dim)
+                .ok_or_else(|| anyhow::anyhow!("tensor {name} volume overflows"))?;
+            shape.push(dim);
+        }
+        let data = rd.f32s(vol, &format!("tensor {name} data"))?;
+        tensors.push((name, Tensor::from_vec(&shape, data)));
+    }
+    Ok(tensors)
+}
+
+// ---------------------------------------------------------------------------
+// The container
+// ---------------------------------------------------------------------------
+
+/// A checkpoint container: named tensors (the `params` section), the
+/// completed-step count, and any number of opaque named state sections.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
+    /// Completed optimizer steps at save time.
     pub step: u64,
+    /// The `params` tensors (v1 files carry only these).
     pub tensors: Vec<(String, Tensor)>,
+    /// Extra state sections, in on-disk order (`params` excluded).
+    pub sections: Vec<(String, Vec<u8>)>,
 }
 
 impl Checkpoint {
-    pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        let mut f = std::io::BufWriter::new(
-            std::fs::File::create(path)
-                .with_context(|| format!("creating checkpoint {}", path.display()))?,
-        );
-        f.write_all(MAGIC)?;
-        f.write_all(&self.step.to_le_bytes())?;
-        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
-        for (name, t) in &self.tensors {
-            f.write_all(&(name.len() as u32).to_le_bytes())?;
-            f.write_all(name.as_bytes())?;
-            f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
-            for d in t.shape() {
-                f.write_all(&(*d as u64).to_le_bytes())?;
-            }
-            // Bulk-write the f32 payload.
-            let data = t.data();
-            let bytes = unsafe {
-                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-            };
-            f.write_all(bytes)?;
-        }
-        f.flush()?;
-        Ok(())
+    pub fn new(step: u64, tensors: Vec<(String, Tensor)>) -> Checkpoint {
+        Checkpoint { step, tensors, sections: Vec::new() }
     }
 
-    pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path)
-                .with_context(|| format!("opening checkpoint {}", path.display()))?,
-        );
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("{} is not a MoR checkpoint", path.display());
+    /// Append a named state section (keeps on-disk order). Callers own
+    /// the write-side caps: at most [`MAX_SECTIONS`] sections, names at
+    /// most [`MAX_NAME_LEN`] bytes and unique — the loader rejects
+    /// violations, and `put_str` asserts on oversized names (a
+    /// programmer error; the atomic temp+rename save means a panic
+    /// here can never corrupt a published checkpoint).
+    pub fn push_section(&mut self, name: &str, payload: Vec<u8>) {
+        self.sections.push((name.to_string(), payload));
+    }
+
+    /// A section's payload by name.
+    pub fn section(&self, name: &str) -> Option<&[u8]> {
+        self.sections.iter().find(|(n, _)| n == name).map(|(_, p)| p.as_slice())
+    }
+
+    /// Serialize in the `MORCKPT2` layout (`params` section first, then
+    /// the extra sections in order).
+    pub fn to_bytes_v2(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_V2);
+        put_u64(&mut out, self.step);
+        put_u32(&mut out, 1 + self.sections.len() as u32);
+        let mut params = Vec::new();
+        put_tensors(&mut params, &self.tensors);
+        put_str(&mut out, section::PARAMS);
+        put_u64(&mut out, params.len() as u64);
+        out.extend_from_slice(&params);
+        for (name, payload) in &self.sections {
+            put_str(&mut out, name);
+            put_u64(&mut out, payload.len() as u64);
+            out.extend_from_slice(payload);
         }
-        let mut u64b = [0u8; 8];
-        let mut u32b = [0u8; 4];
-        f.read_exact(&mut u64b)?;
-        let step = u64::from_le_bytes(u64b);
-        f.read_exact(&mut u32b)?;
-        let n = u32::from_le_bytes(u32b) as usize;
-        let mut tensors = Vec::with_capacity(n);
-        for _ in 0..n {
-            f.read_exact(&mut u32b)?;
-            let name_len = u32::from_le_bytes(u32b) as usize;
-            let mut name = vec![0u8; name_len];
-            f.read_exact(&mut name)?;
-            let name = String::from_utf8(name).context("checkpoint tensor name not utf8")?;
-            f.read_exact(&mut u32b)?;
-            let ndims = u32::from_le_bytes(u32b) as usize;
-            let mut shape = Vec::with_capacity(ndims);
-            for _ in 0..ndims {
-                f.read_exact(&mut u64b)?;
-                shape.push(u64::from_le_bytes(u64b) as usize);
+        out
+    }
+
+    /// Serialize in the legacy `MORCKPT1` layout (params only; any
+    /// extra sections are dropped). Kept for compatibility tests and
+    /// interop with v1-only readers.
+    pub fn to_bytes_v1(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC_V1);
+        put_u64(&mut out, self.step);
+        put_tensors(&mut out, &self.tensors);
+        out
+    }
+
+    /// Parse either container version from an in-memory image.
+    pub fn from_bytes(buf: &[u8]) -> Result<Checkpoint> {
+        let mut rd = Rd::new(buf);
+        let magic = rd.take(8, "magic")?;
+        if magic == MAGIC_V1 {
+            let step = rd.u64("step")?;
+            let tensors = read_tensors(&mut rd)?;
+            rd.expect_done("v1 tensor list")?;
+            return Ok(Checkpoint { step, tensors, sections: Vec::new() });
+        }
+        if magic != MAGIC_V2 {
+            bail!("not a MoR checkpoint (bad magic)");
+        }
+        let step = rd.u64("step")?;
+        let nsections = rd.u32("section count")? as usize;
+        if nsections > MAX_SECTIONS {
+            bail!("checkpoint corrupt: {nsections} sections exceeds cap {MAX_SECTIONS}");
+        }
+        let mut tensors = Vec::new();
+        let mut seen_params = false;
+        let mut sections = Vec::new();
+        for i in 0..nsections {
+            let name = rd.str(&format!("section {i} name"))?;
+            let len = rd.u64(&format!("section {name} length"))?;
+            let len = usize::try_from(len)
+                .map_err(|_| anyhow::anyhow!("section {name} length out of range"))?;
+            let payload = rd.take(len, &format!("section {name} payload"))?;
+            // Duplicate names would make lookups ambiguous (first-wins
+            // vs last-wins); reject them as corrupt.
+            if (name == section::PARAMS && seen_params)
+                || sections.iter().any(|(n, _)| *n == name)
+            {
+                bail!("checkpoint corrupt: duplicate section {name:?}");
             }
-            let vol: usize = shape.iter().product();
-            let mut data = vec![0f32; vol];
-            let bytes = unsafe {
-                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, vol * 4)
-            };
-            f.read_exact(bytes)?;
-            tensors.push((name, Tensor::from_vec(&shape, data)));
+            if name == section::PARAMS {
+                let mut prd = Rd::new(payload);
+                tensors = read_tensors(&mut prd)?;
+                prd.expect_done("params section")?;
+                seen_params = true;
+            } else {
+                sections.push((name, payload.to_vec()));
+            }
         }
-        Ok(Checkpoint { step, tensors })
+        rd.expect_done("section list")?;
+        if !seen_params {
+            bail!("checkpoint corrupt: no params section");
+        }
+        Ok(Checkpoint { step, tensors, sections })
+    }
+
+    /// Save in the current (`MORCKPT2`) format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_file(path, &self.to_bytes_v2())
+    }
+
+    /// Save in the legacy (`MORCKPT1`) format.
+    pub fn save_v1(&self, path: &Path) -> Result<()> {
+        write_file(path, &self.to_bytes_v1())
+    }
+
+    /// Load either container version.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?;
+        Self::from_bytes(&buf)
+            .with_context(|| format!("parsing checkpoint {}", path.display()))
     }
 
     pub fn get(&self, name: &str) -> Option<&Tensor> {
@@ -97,21 +398,505 @@ impl Checkpoint {
     }
 }
 
+/// Atomic write: a crash mid-save (the exact scenario resume exists
+/// for) must never leave a truncated file at the checkpoint path, so
+/// the bytes land in a same-directory temp file first and are renamed
+/// into place only once fully written.
+fn write_file(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(&format!(".tmp.{}", std::process::id()));
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing checkpoint {}", path.display()))
+}
+
+// ---------------------------------------------------------------------------
+// Section codecs for the full training state
+// ---------------------------------------------------------------------------
+
+/// `data/*` payload: Markov context + pending pattern tail + consumed
+/// batch count. The RNG state of the stream lives in `rng/streams`
+/// (one logical home per kind of state, no duplication).
+fn put_data_cursor(out: &mut Vec<u8>, cur: &LoaderCursor) {
+    put_u8(out, cur.state.context.0);
+    put_u8(out, cur.state.context.1);
+    put_u32(out, cur.state.pending.len() as u32);
+    out.extend_from_slice(&cur.state.pending);
+    put_u64(out, cur.batches);
+}
+
+fn read_data_cursor(rd: &mut Rd, rng_state: u64) -> Result<LoaderCursor> {
+    let a = rd.u8("cursor context")?;
+    let b = rd.u8("cursor context")?;
+    let npend = rd.u32("cursor pending length")? as usize;
+    let pending = rd.take(npend, "cursor pending")?.to_vec();
+    let batches = rd.u64("cursor batches")?;
+    Ok(LoaderCursor { state: CorpusState { rng_state, context: (a, b), pending }, batches })
+}
+
+/// `rng/streams` payload: named raw `util::rng` stream states.
+fn put_rng_streams(out: &mut Vec<u8>, streams: &[(String, u64)]) {
+    put_u32(out, streams.len() as u32);
+    for (name, state) in streams {
+        put_str(out, name);
+        put_u64(out, *state);
+    }
+}
+
+fn read_rng_streams(rd: &mut Rd) -> Result<Vec<(String, u64)>> {
+    let n = rd.u32("rng stream count")? as usize;
+    if n > rd.remaining() / 12 + 1 {
+        bail!("checkpoint corrupt: rng stream count {n} exceeds file capacity");
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let name = rd.str(&format!("rng stream {i} name"))?;
+        let state = rd.u64(&format!("rng stream {name}"))?;
+        out.push((name, state));
+    }
+    Ok(out)
+}
+
+/// `scaling/amax_hist` payload: per-slot (window, values) histories.
+fn put_amax_histories(out: &mut Vec<u8>, hists: &[AmaxHistory]) {
+    put_u32(out, hists.len() as u32);
+    for h in hists {
+        put_u32(out, h.window() as u32);
+        let vals: Vec<f32> = h.values().collect();
+        put_u32(out, vals.len() as u32);
+        put_f32s(out, &vals);
+    }
+}
+
+fn read_amax_histories(rd: &mut Rd) -> Result<Vec<AmaxHistory>> {
+    let n = rd.u32("amax history count")? as usize;
+    if n > rd.remaining() / 8 + 1 {
+        bail!("checkpoint corrupt: amax history count {n} exceeds file capacity");
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let window = rd.u32(&format!("amax history {i} window"))? as usize;
+        let len = rd.u32(&format!("amax history {i} length"))? as usize;
+        let vals = rd.f32s(len, &format!("amax history {i} values"))?;
+        if vals.len() > window.max(1) {
+            bail!("checkpoint corrupt: amax history {i} longer than its window");
+        }
+        out.push(AmaxHistory::from_values(window, &vals));
+    }
+    Ok(out)
+}
+
+/// `mor/stats` payload: the full collector (windows + running totals).
+fn put_stats(out: &mut Vec<u8>, stats: &StatsCollector) {
+    put_u64(out, stats.reset_every);
+    put_u64(out, stats.step());
+    let put_key = |out: &mut Vec<u8>, key: &TensorKey| {
+        let (layer, linear, tensor, dir) = key.codes();
+        put_u32(out, layer);
+        put_u8(out, linear);
+        put_u8(out, tensor);
+        put_u8(out, dir);
+    };
+    let put_window = |out: &mut Vec<u8>, w: &TensorWindow| {
+        for c in &w.hist.counts {
+            put_u64(out, *c);
+        }
+        put_u64(out, w.fallback_count);
+        put_u64(out, w.steps);
+        put_f64(out, w.bf16_fraction_sum);
+    };
+    let windows: Vec<_> = stats.window_entries().collect();
+    put_u32(out, windows.len() as u32);
+    for ((win, key), w) in windows {
+        put_u64(out, *win);
+        put_key(out, key);
+        put_window(out, w);
+    }
+    let totals: Vec<_> = stats.total_entries().collect();
+    put_u32(out, totals.len() as u32);
+    for (key, w) in totals {
+        put_key(out, key);
+        put_window(out, w);
+    }
+}
+
+fn read_stats_key(rd: &mut Rd) -> Result<TensorKey> {
+    let layer = rd.u32("stats key layer")?;
+    let linear = rd.u8("stats key linear")?;
+    let tensor = rd.u8("stats key tensor")?;
+    let dir = rd.u8("stats key direction")?;
+    TensorKey::from_codes(layer, linear, tensor, dir)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint corrupt: bad stats key codes"))
+}
+
+fn read_stats_window(rd: &mut Rd) -> Result<TensorWindow> {
+    let mut w = TensorWindow::default();
+    for c in w.hist.counts.iter_mut() {
+        *c = rd.u64("stats histogram bin")?;
+    }
+    debug_assert_eq!(w.hist.counts.len(), HIST_BINS);
+    w.fallback_count = rd.u64("stats fallback count")?;
+    w.steps = rd.u64("stats step count")?;
+    w.bf16_fraction_sum = rd.f64("stats bf16 fraction")?;
+    Ok(w)
+}
+
+fn read_stats(rd: &mut Rd) -> Result<StatsCollector> {
+    let reset_every = rd.u64("stats reset_every")?;
+    let step = rd.u64("stats step")?;
+    // Window entries cost ≥ 8+7+HIST_BINS*8 bytes each.
+    let per_entry = 8 + 7 + HIST_BINS * 8 + 24;
+    let nw = rd.u32("stats window count")? as usize;
+    if nw > rd.remaining() / per_entry + 1 {
+        bail!("checkpoint corrupt: stats window count {nw} exceeds file capacity");
+    }
+    let mut windows = Vec::with_capacity(nw);
+    for _ in 0..nw {
+        let win = rd.u64("stats window index")?;
+        let key = read_stats_key(rd)?;
+        let w = read_stats_window(rd)?;
+        windows.push(((win, key), w));
+    }
+    let nt = rd.u32("stats total count")? as usize;
+    if nt > rd.remaining() / (per_entry - 8) + 1 {
+        bail!("checkpoint corrupt: stats total count {nt} exceeds file capacity");
+    }
+    let mut totals = Vec::with_capacity(nt);
+    for _ in 0..nt {
+        let key = read_stats_key(rd)?;
+        let w = read_stats_window(rd)?;
+        totals.push((key, w));
+    }
+    Ok(StatsCollector::restore(reset_every, step, windows, totals))
+}
+
+/// `metrics/records` payload: the exact `StepRecord`s logged so far
+/// (f32 bit patterns preserved, so re-logging them reproduces the
+/// continuous run's CSV text byte-for-byte).
+fn put_records(out: &mut Vec<u8>, records: &[StepRecord]) {
+    put_u32(out, records.len() as u32);
+    for r in records {
+        put_u64(out, r.step);
+        put_f32(out, r.lr);
+        put_f32(out, r.train_loss);
+        put_f32(out, r.val_loss);
+        put_f32(out, r.param_norm);
+        put_f32(out, r.bf16_fallback_rate);
+        put_f32(out, r.mean_relerr);
+        put_f32(out, r.step_ms);
+    }
+}
+
+fn read_records(rd: &mut Rd) -> Result<Vec<StepRecord>> {
+    let n = rd.u32("record count")? as usize;
+    if n > rd.remaining() / 36 + 1 {
+        bail!("checkpoint corrupt: record count {n} exceeds file capacity");
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let what = format!("record {i}");
+        out.push(StepRecord {
+            step: rd.u64(&what)?,
+            lr: rd.f32(&what)?,
+            train_loss: rd.f32(&what)?,
+            val_loss: rd.f32(&what)?,
+            param_norm: rd.f32(&what)?,
+            bf16_fallback_rate: rd.f32(&what)?,
+            mean_relerr: rd.f32(&what)?,
+            step_ms: rd.f32(&what)?,
+        });
+    }
+    Ok(out)
+}
+
+/// `eval/suite` payload: the (step, per-task scores) trajectory.
+fn put_suite(out: &mut Vec<u8>, suite: &[(u64, EvalScores)]) {
+    put_u32(out, suite.len() as u32);
+    for (step, scores) in suite {
+        put_u64(out, *step);
+        put_u32(out, scores.per_task.len() as u32);
+        for (name, loss, acc) in &scores.per_task {
+            put_str(out, name);
+            put_f32(out, *loss);
+            put_f32(out, *acc);
+        }
+    }
+}
+
+fn read_suite(rd: &mut Rd) -> Result<Vec<(u64, EvalScores)>> {
+    let n = rd.u32("suite entry count")? as usize;
+    if n > rd.remaining() / 12 + 1 {
+        bail!("checkpoint corrupt: suite entry count {n} exceeds file capacity");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let step = rd.u64("suite step")?;
+        let ntasks = rd.u32("suite task count")? as usize;
+        if ntasks > rd.remaining() / 12 + 1 {
+            bail!("checkpoint corrupt: suite task count {ntasks} exceeds file capacity");
+        }
+        let mut per_task = Vec::with_capacity(ntasks);
+        for _ in 0..ntasks {
+            let name = rd.str("suite task name")?;
+            let loss = rd.f32("suite task loss")?;
+            let acc = rd.f32("suite task acc")?;
+            // Map back to the task vocabulary's 'static name.
+            let task = EvalTask::ALL
+                .iter()
+                .find(|t| t.name() == name)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint has unknown eval task {name:?}"))?;
+            per_task.push((task.name(), loss, acc));
+        }
+        out.push((step, EvalScores { per_task }));
+    }
+    Ok(out)
+}
+
+/// `telemetry/counters` payload: extensible named u64 counters.
+fn put_counters(out: &mut Vec<u8>, counters: &[(String, u64)]) {
+    put_u32(out, counters.len() as u32);
+    for (name, v) in counters {
+        put_str(out, name);
+        put_u64(out, *v);
+    }
+}
+
+fn read_counters(rd: &mut Rd) -> Result<Vec<(String, u64)>> {
+    let n = rd.u32("counter count")? as usize;
+    if n > rd.remaining() / 12 + 1 {
+        bail!("checkpoint corrupt: counter count {n} exceeds file capacity");
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let name = rd.str(&format!("counter {i} name"))?;
+        let v = rd.u64(&format!("counter {name}"))?;
+        out.push((name, v));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// The full training-state checkpoint
+// ---------------------------------------------------------------------------
+
+/// Everything a bitwise resume needs, decoded: the session state
+/// ([`TrainState`]), both data-loader cursors, raw RNG stream states,
+/// the stats collector, the metrics rows and eval-suite trajectory
+/// logged so far, and run identity/telemetry. `Trainer::run` writes one
+/// of these every `--ckpt-every` steps and `--resume` restores it.
+#[derive(Debug, Clone)]
+pub struct TrainCheckpoint {
+    /// Completed optimizer steps (== `session.step`).
+    pub step: u64,
+    /// Artifact (recipe) the run was training.
+    pub artifact: String,
+    /// Train-config name (`config1`/`config2`).
+    pub config: String,
+    /// Last validation loss (NaN if never validated).
+    pub last_val: f32,
+    /// Parameter names, canonical `param_specs` order.
+    pub param_names: Vec<String>,
+    pub session: TrainState,
+    pub train_cursor: LoaderCursor,
+    pub val_cursor: LoaderCursor,
+    /// Named raw `util::rng` stream states (includes the two corpus
+    /// streams; extensible).
+    pub rng_streams: Vec<(String, u64)>,
+    pub stats: StatsCollector,
+    pub records: Vec<StepRecord>,
+    pub suite_history: Vec<(u64, EvalScores)>,
+    /// Extensible named telemetry counters.
+    pub counters: Vec<(String, u64)>,
+}
+
+impl TrainCheckpoint {
+    /// Assemble the sectioned container (the `params`/`opt` tensor
+    /// lists are named by `param_names`).
+    pub fn to_container(&self) -> Checkpoint {
+        // The container owns its `params` tensors (one clone); the
+        // moment sections serialize straight from borrowed state.
+        let params = self
+            .param_names
+            .iter()
+            .cloned()
+            .zip(self.session.params.iter().cloned())
+            .collect();
+        let mut ck = Checkpoint::new(self.step, params);
+        let mut buf = Vec::new();
+        put_str(&mut buf, &self.artifact);
+        put_str(&mut buf, &self.config);
+        put_f32(&mut buf, self.last_val);
+        ck.push_section(section::META, buf);
+
+        let mut buf = Vec::new();
+        put_named_tensors(&mut buf, &self.param_names, &self.session.opt_m);
+        ck.push_section(section::OPT_M, buf);
+        let mut buf = Vec::new();
+        put_named_tensors(&mut buf, &self.param_names, &self.session.opt_v);
+        ck.push_section(section::OPT_V, buf);
+
+        let mut buf = Vec::new();
+        put_data_cursor(&mut buf, &self.train_cursor);
+        ck.push_section(section::DATA_TRAIN, buf);
+        let mut buf = Vec::new();
+        put_data_cursor(&mut buf, &self.val_cursor);
+        ck.push_section(section::DATA_VAL, buf);
+
+        let mut buf = Vec::new();
+        put_rng_streams(&mut buf, &self.rng_streams);
+        ck.push_section(section::RNG, buf);
+
+        let mut buf = Vec::new();
+        put_amax_histories(&mut buf, &self.session.amax_hist);
+        ck.push_section(section::SCALING, buf);
+
+        let mut buf = Vec::new();
+        put_stats(&mut buf, &self.stats);
+        ck.push_section(section::STATS, buf);
+
+        let mut buf = Vec::new();
+        put_records(&mut buf, &self.records);
+        ck.push_section(section::METRICS, buf);
+
+        let mut buf = Vec::new();
+        put_suite(&mut buf, &self.suite_history);
+        ck.push_section(section::SUITE, buf);
+
+        let mut buf = Vec::new();
+        put_counters(&mut buf, &self.counters);
+        ck.push_section(section::TELEMETRY, buf);
+        ck
+    }
+
+    /// Decode a container holding a full training state. Fails with a
+    /// descriptive error on a params-only (v1 or bare-v2) file.
+    pub fn from_container(ck: &Checkpoint) -> Result<TrainCheckpoint> {
+        fn sect<'c>(ck: &'c Checkpoint, name: &str) -> Result<Rd<'c>> {
+            ck.section(name).map(Rd::new).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "checkpoint has no {name:?} section — params-only files \
+                     (e.g. MORCKPT1) cannot seed a bitwise resume"
+                )
+            })
+        }
+
+        let mut rd = sect(ck, section::META)?;
+        let artifact = rd.str("meta artifact")?;
+        let config = rd.str("meta config")?;
+        let last_val = rd.f32("meta last_val")?;
+        rd.expect_done("meta section")?;
+
+        let split = |ts: &[(String, Tensor)]| -> (Vec<String>, Vec<Tensor>) {
+            let names = ts.iter().map(|(n, _)| n.clone()).collect();
+            let tensors = ts.iter().map(|(_, t)| t.clone()).collect();
+            (names, tensors)
+        };
+        let (param_names, params) = split(&ck.tensors);
+        let mut rd = sect(ck, section::OPT_M)?;
+        let (m_names, opt_m) = split(&read_tensors(&mut rd)?);
+        rd.expect_done("opt/m section")?;
+        let mut rd = sect(ck, section::OPT_V)?;
+        let (v_names, opt_v) = split(&read_tensors(&mut rd)?);
+        rd.expect_done("opt/v section")?;
+        if m_names != param_names || v_names != param_names {
+            bail!("optimizer moment names do not match params");
+        }
+
+        let mut rd = sect(ck, section::RNG)?;
+        let rng_streams = read_rng_streams(&mut rd)?;
+        rd.expect_done("rng section")?;
+        let stream = |name: &str| -> Result<u64> {
+            rng_streams
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, s)| *s)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint missing rng stream {name:?}"))
+        };
+
+        let mut rd = sect(ck, section::DATA_TRAIN)?;
+        let train_cursor = read_data_cursor(&mut rd, stream(section::DATA_TRAIN)?)?;
+        rd.expect_done("data/train section")?;
+        let mut rd = sect(ck, section::DATA_VAL)?;
+        let val_cursor = read_data_cursor(&mut rd, stream(section::DATA_VAL)?)?;
+        rd.expect_done("data/val section")?;
+
+        let mut rd = sect(ck, section::SCALING)?;
+        let amax_hist = read_amax_histories(&mut rd)?;
+        rd.expect_done("scaling section")?;
+
+        let mut rd = sect(ck, section::STATS)?;
+        let stats = read_stats(&mut rd)?;
+        rd.expect_done("stats section")?;
+
+        let mut rd = sect(ck, section::METRICS)?;
+        let records = read_records(&mut rd)?;
+        rd.expect_done("metrics section")?;
+
+        let mut rd = sect(ck, section::SUITE)?;
+        let suite_history = read_suite(&mut rd)?;
+        rd.expect_done("suite section")?;
+
+        let mut rd = sect(ck, section::TELEMETRY)?;
+        let counters = read_counters(&mut rd)?;
+        rd.expect_done("telemetry section")?;
+
+        Ok(TrainCheckpoint {
+            step: ck.step,
+            artifact,
+            config,
+            last_val,
+            param_names,
+            session: TrainState { step: ck.step, params, opt_m, opt_v, amax_hist },
+            train_cursor,
+            val_cursor,
+            rng_streams,
+            stats,
+            records,
+            suite_history,
+            counters,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_container().save(path)
+    }
+
+    pub fn load(path: &Path) -> Result<TrainCheckpoint> {
+        let ck = Checkpoint::load(path)?;
+        Self::from_container(&ck)
+            .with_context(|| format!("decoding training state from {}", path.display()))
+    }
+
+    /// A named counter's value, if present.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mor_ckpt_{tag}_{}", std::process::id()))
+    }
+
     #[test]
     fn roundtrip() {
-        let dir = std::env::temp_dir().join(format!("mor_ckpt_test_{}", std::process::id()));
+        let dir = tmp("test");
         let path = dir.join("step10.ckpt");
-        let ck = Checkpoint {
-            step: 10,
-            tensors: vec![
+        let ck = Checkpoint::new(
+            10,
+            vec![
                 ("a".into(), Tensor::normal(&[3, 4], 1.0, 1)),
                 ("b.weight".into(), Tensor::uniform(&[7], 2.0, 2)),
             ],
-        };
+        );
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back, ck);
@@ -121,12 +906,119 @@ mod tests {
     }
 
     #[test]
+    fn v1_roundtrip_still_loads() {
+        let dir = tmp("v1");
+        let path = dir.join("legacy.ckpt");
+        let ck = Checkpoint::new(
+            3,
+            vec![("w".into(), Tensor::normal(&[2, 5], 0.5, 9))],
+        );
+        ck.save_v1(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        assert!(back.sections.is_empty());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sections_roundtrip_with_order() {
+        let mut ck = Checkpoint::new(1, vec![("p".into(), Tensor::zeros(&[2]))]);
+        ck.push_section("zeta", vec![9, 9]);
+        ck.push_section("alpha", vec![1, 2, 3]);
+        let back = Checkpoint::from_bytes(&ck.to_bytes_v2()).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.section("alpha"), Some(&[1u8, 2, 3][..]));
+        assert_eq!(back.section("nope"), None);
+        // On-disk order is preserved exactly (byte-stable container).
+        assert_eq!(back.sections[0].0, "zeta");
+    }
+
+    #[test]
     fn rejects_garbage() {
-        let dir = std::env::temp_dir().join(format!("mor_ckpt_bad_{}", std::process::id()));
+        let dir = tmp("bad");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"NOTACKPT").unwrap();
         assert!(Checkpoint::load(&path).is_err());
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn train_checkpoint_sections_roundtrip() {
+        use crate::mor::stats::TensorKey;
+        let mut stats = StatsCollector::new(7);
+        stats.set_step(5);
+        stats.record(TensorKey::new(0, 2, "weight", ""), 0.01, false, 0.0);
+        stats.record(TensorKey::new(1, 0, "grad", "row"), 0.06, true, 0.5);
+        let tc = TrainCheckpoint {
+            step: 5,
+            artifact: "train_mor_tensor_block".into(),
+            config: "config1".into(),
+            last_val: 2.5,
+            param_names: vec!["w1".into(), "w2".into()],
+            session: TrainState {
+                step: 5,
+                params: vec![Tensor::normal(&[2, 3], 1.0, 1), Tensor::normal(&[4], 1.0, 2)],
+                opt_m: vec![Tensor::normal(&[2, 3], 0.1, 3), Tensor::zeros(&[4])],
+                opt_v: vec![Tensor::normal(&[2, 3], 0.2, 4), Tensor::zeros(&[4])],
+                amax_hist: vec![AmaxHistory::from_values(4, &[1.0, 2.0]); 3],
+            },
+            train_cursor: LoaderCursor {
+                state: CorpusState { rng_state: 0xDEAD, context: (7, 9), pending: vec![1, 2] },
+                batches: 5,
+            },
+            val_cursor: LoaderCursor {
+                state: CorpusState { rng_state: 0xBEEF, context: (0, 0), pending: vec![] },
+                batches: 2,
+            },
+            rng_streams: vec![
+                (section::DATA_TRAIN.into(), 0xDEAD),
+                (section::DATA_VAL.into(), 0xBEEF),
+            ],
+            stats,
+            records: vec![StepRecord {
+                step: 4,
+                lr: 3e-4,
+                train_loss: 2.75,
+                val_loss: f32::NAN,
+                param_norm: 10.5,
+                bf16_fallback_rate: 0.25,
+                mean_relerr: 0.01,
+                step_ms: 12.5,
+            }],
+            suite_history: vec![(
+                3,
+                EvalScores { per_task: vec![("copy", 1.5, 40.0), ("cycle", 0.5, 80.0)] },
+            )],
+            counters: vec![("ckpts_written".into(), 1)],
+        };
+        let back = TrainCheckpoint::from_container(&tc.to_container()).unwrap();
+        assert_eq!(back.step, 5);
+        assert_eq!(back.artifact, tc.artifact);
+        assert_eq!(back.config, tc.config);
+        assert_eq!(back.last_val.to_bits(), tc.last_val.to_bits());
+        assert_eq!(back.param_names, tc.param_names);
+        assert_eq!(back.session.params, tc.session.params);
+        assert_eq!(back.session.opt_m, tc.session.opt_m);
+        assert_eq!(back.session.opt_v, tc.session.opt_v);
+        assert_eq!(back.session.amax_hist, tc.session.amax_hist);
+        assert_eq!(back.train_cursor, tc.train_cursor);
+        assert_eq!(back.val_cursor, tc.val_cursor);
+        assert_eq!(back.rng_streams, tc.rng_streams);
+        assert_eq!(back.stats.heatmap_csv(), tc.stats.heatmap_csv());
+        assert_eq!(back.records.len(), 1);
+        assert_eq!(back.records[0].train_loss.to_bits(), 2.75f32.to_bits());
+        assert!(back.records[0].val_loss.is_nan(), "NaN bits must survive");
+        assert_eq!(back.suite_history.len(), 1);
+        assert_eq!(back.suite_history[0].1.per_task, tc.suite_history[0].1.per_task);
+        assert_eq!(back.counter("ckpts_written"), Some(1));
+        assert_eq!(back.counter("nope"), None);
+    }
+
+    #[test]
+    fn params_only_file_is_not_a_train_checkpoint() {
+        let ck = Checkpoint::new(1, vec![("w".into(), Tensor::zeros(&[2]))]);
+        let err = TrainCheckpoint::from_container(&ck).unwrap_err();
+        assert!(format!("{err:#}").contains("section"), "{err:#}");
     }
 }

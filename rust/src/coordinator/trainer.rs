@@ -1,11 +1,37 @@
-//! The training loop driver: schedule → data → compiled step → metrics.
+//! The training loop driver: schedule → data → compiled step → metrics,
+//! with deterministic checkpoint/resume.
 //!
 //! One `Trainer::run` produces everything a paper figure needs from one
 //! run: the loss/param-norm series (Figs. 5/6/8/20), the eval-suite
 //! trajectory (Figs. 7/9/21), and the per-tensor decision statistics
 //! (Figs. 10–19) via [`StatsCollector`].
+//!
+//! ## The resume ≡ continuous contract
+//!
+//! With `ckpt_every > 0` the trainer writes a full `MORCKPT2`
+//! [`TrainCheckpoint`] (params, Adam moments, data-loader cursors, RNG
+//! stream states, delayed-scaling amax histories, stats collector,
+//! metrics rows, suite trajectory) after every k-th completed step.
+//! Restarting with `resume: Some(path)` and the **same total `steps`,
+//! config and artifact** reproduces the uninterrupted run **bitwise**:
+//! identical parameters, identical `metrics.csv` rows (minus the
+//! wall-clock `step_ms` column, which is timing, not state), identical
+//! MoR decision fractions and heatmaps — at every `MOR_THREADS`
+//! setting, because the parallel engine's merge order is already
+//! deterministic. Two design points make any resumable checkpoint an
+//! exact prefix of the continuous run:
+//!
+//! * checkpoints are written *after* a step's record is logged, so a
+//!   checkpoint at step `k` is exactly the continuous run's state
+//!   after `k` completed steps;
+//! * the numerics-affecting options — total `steps` (the LR
+//!   schedule), `threshold`, `val_every`, `suite_every`,
+//!   `per_channel` — are pinned inside the checkpoint and validated
+//!   on resume, so the forced final-step validation/suite pass (which
+//!   consumes an extra validation batch) can only ever fire on the
+//!   run's true last step — a step no resumable checkpoint precedes.
 
-use super::checkpoint::Checkpoint;
+use super::checkpoint::{section, TrainCheckpoint};
 use super::eval::{eval_suite, EvalScores};
 use super::logging::{MetricsLogger, StepRecord};
 use crate::data::loader::BatchLoader;
@@ -14,9 +40,9 @@ use crate::data::tasks::EvalSuite;
 use crate::model::config::{ModelConfig, TrainConfig};
 use crate::model::naming::{param_specs, QuantTensorId};
 use crate::mor::stats::StatsCollector;
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, TrainSession};
 use crate::util::par::Parallelism;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 use std::time::Instant;
 
@@ -33,7 +59,8 @@ pub struct TrainerOptions {
     pub val_every: u64,
     /// Run the eval-task suite every N steps (0 = never).
     pub suite_every: u64,
-    /// Checkpoint every N steps (0 = never).
+    /// Checkpoint every N completed steps (0 = never; the final step
+    /// always checkpoints when enabled).
     pub ckpt_every: u64,
     /// Histogram reset window (Fig. 14); paper uses 6000 of its steps.
     pub stats_window: u64,
@@ -44,6 +71,14 @@ pub struct TrainerOptions {
     pub per_channel: bool,
     /// Run quietly (no per-step stdout).
     pub quiet: bool,
+    /// Resume from a `MORCKPT2` training checkpoint. The run continues
+    /// at the checkpoint's completed-step count. The artifact, train
+    /// config, and every pinned numerics-affecting option (total
+    /// `steps`, `threshold`, `val_every`, `suite_every`,
+    /// `per_channel`) must match the original run — all are validated,
+    /// so a mismatch errors instead of silently breaking the bitwise
+    /// resume ≡ continuous contract.
+    pub resume: Option<PathBuf>,
     /// Per-run engine handle for the quantization/GEMM hot paths
     /// (`None` inherits the runtime's default; see `util::par`). The
     /// handle is owned by this run's sessions, so no run ever mutates
@@ -67,6 +102,7 @@ impl TrainerOptions {
             out_dir,
             per_channel: false,
             quiet: false,
+            resume: None,
             parallelism: None,
         }
     }
@@ -111,36 +147,85 @@ impl<'rt> Trainer<'rt> {
             .train_session_with(&opts.artifact, tc.seed, par.clone())
             .with_context(|| format!("starting session for {}", opts.artifact))?;
         let profile = CorpusProfile::from_id(tc.data_profile);
-        let train_loader = BatchLoader::new(
-            profile,
-            self.model.vocab_size,
-            session.batch,
-            session.seq,
-            tc.seed,
-            0,
-        );
-        let val_loader = BatchLoader::new(
-            profile,
-            self.model.vocab_size,
-            session.batch,
-            session.seq,
-            tc.seed,
-            1,
-        );
+
+        // Restore the full training state when resuming: session
+        // (params + moments + step + amax histories), loader cursors,
+        // stats, metrics rows, suite trajectory.
+        let resumed = match &opts.resume {
+            Some(path) => Some(self.restore(path, &mut session, opts)?),
+            None => None,
+        };
+        let (train_loader, val_loader) = match &resumed {
+            Some(ck) => (
+                BatchLoader::resume(
+                    profile,
+                    self.model.vocab_size,
+                    session.batch,
+                    session.seq,
+                    tc.seed,
+                    0,
+                    &ck.train_cursor,
+                ),
+                BatchLoader::resume(
+                    profile,
+                    self.model.vocab_size,
+                    session.batch,
+                    session.seq,
+                    tc.seed,
+                    1,
+                    &ck.val_cursor,
+                ),
+            ),
+            None => (
+                BatchLoader::new(
+                    profile,
+                    self.model.vocab_size,
+                    session.batch,
+                    session.seq,
+                    tc.seed,
+                    0,
+                ),
+                BatchLoader::new(
+                    profile,
+                    self.model.vocab_size,
+                    session.batch,
+                    session.seq,
+                    tc.seed,
+                    1,
+                ),
+            ),
+        };
         let eval = self.runtime.eval_session_with("eval", par).ok();
         let suite = EvalSuite::new(session.seq, self.model.vocab_size, 8, tc.seed ^ 0xE7A1);
 
         std::fs::create_dir_all(&opts.out_dir)?;
         let metrics_path = opts.out_dir.join(format!("{}.{}.csv", opts.artifact, tc.name));
         let mut logger = MetricsLogger::create(&metrics_path)?;
-        let mut stats = StatsCollector::new(opts.stats_window);
-        let mut suite_history = Vec::new();
-        let mut records = Vec::new();
-        let mut total_ms = 0f32;
-        let mut last_val = f32::NAN;
+        let (start_step, mut stats, mut suite_history, mut records, mut last_val, mut ckpts) =
+            match resumed {
+                Some(ck) => {
+                    // Replay the restored rows so the resumed
+                    // metrics.csv is the continuous file's prefix
+                    // byte-for-byte (same bits → same formatted text).
+                    for r in &ck.records {
+                        logger.log(r)?;
+                    }
+                    let ckpts = ck.counter("ckpts_written").unwrap_or(0);
+                    (ck.step, ck.stats, ck.suite_history, ck.records, ck.last_val, ckpts)
+                }
+                None => (
+                    0,
+                    StatsCollector::new(opts.stats_window),
+                    Vec::new(),
+                    Vec::new(),
+                    f32::NAN,
+                    0,
+                ),
+            };
+        let mut total_ms = records.iter().map(|r| r.step_ms).sum::<f32>();
         let n_slots = QuantTensorId::count(&self.model);
 
-        for step in 0..opts.steps {
+        for step in start_step..opts.steps {
             let lr = tc.schedule.lr_at(step);
             let batch = train_loader.next_batch();
             let t0 = Instant::now();
@@ -167,7 +252,11 @@ impl<'rt> Trainer<'rt> {
             }
             let denom = if opts.per_channel { n_slots } else { n_slots / 2 } as f32;
 
-            // Validation loss on a held-out stream.
+            // Validation loss on a held-out stream. The forced
+            // final-step pass only fires on the run's true last step:
+            // `steps` is pinned in every checkpoint, so no resumable
+            // checkpoint can sit after a forced pass — mid-run
+            // checkpoints stay exact prefixes of the continuous run.
             let is_val_step = opts.val_every > 0
                 && (step % opts.val_every == 0 || step + 1 == opts.steps);
             if is_val_step {
@@ -182,7 +271,8 @@ impl<'rt> Trainer<'rt> {
                 }
             }
 
-            // Eval-task suite (the downstream-benchmark substitute).
+            // Eval-task suite (the downstream-benchmark substitute);
+            // same final-step rule as validation.
             if opts.suite_every > 0
                 && (step % opts.suite_every == 0 || step + 1 == opts.steps)
             {
@@ -190,10 +280,6 @@ impl<'rt> Trainer<'rt> {
                     let scores = eval_suite(ev, session.params_ref(), &suite)?;
                     suite_history.push((step, scores));
                 }
-            }
-
-            if opts.ckpt_every > 0 && step > 0 && step % opts.ckpt_every == 0 {
-                self.save_checkpoint(&session, step, opts)?;
             }
 
             let rec = StepRecord {
@@ -221,6 +307,25 @@ impl<'rt> Trainer<'rt> {
                 );
             }
             records.push(rec);
+
+            // Checkpoint after the record is logged: the file captures
+            // exactly `completed` finished steps of the continuous run.
+            let completed = step + 1;
+            let on_cadence = completed % opts.ckpt_every.max(1) == 0 || completed == opts.steps;
+            if opts.ckpt_every > 0 && on_cadence {
+                ckpts += 1;
+                self.save_checkpoint(
+                    &session,
+                    &train_loader,
+                    &val_loader,
+                    &stats,
+                    &records,
+                    &suite_history,
+                    last_val,
+                    ckpts,
+                    opts,
+                )?;
+            }
         }
         logger.flush()?;
 
@@ -240,21 +345,136 @@ impl<'rt> Trainer<'rt> {
         })
     }
 
+    /// Load and validate a resume checkpoint, importing the session
+    /// state. Returns the decoded checkpoint for the loader/stats
+    /// restore in `run`.
+    fn restore(
+        &self,
+        path: &std::path::Path,
+        session: &mut TrainSession,
+        opts: &TrainerOptions,
+    ) -> Result<TrainCheckpoint> {
+        let ck = TrainCheckpoint::load(path)?;
+        if ck.artifact != opts.artifact {
+            bail!(
+                "checkpoint {} was trained with artifact {:?}, this run uses {:?}",
+                path.display(),
+                ck.artifact,
+                opts.artifact
+            );
+        }
+        if ck.config != self.train_config.name {
+            bail!(
+                "checkpoint {} was trained with config {:?}, this run uses {:?}",
+                path.display(),
+                ck.config,
+                self.train_config.name
+            );
+        }
+        if ck.step >= opts.steps {
+            bail!(
+                "checkpoint {} already has {} completed steps; nothing to do for a {}-step run \
+                 (pass the run's total steps, not the remaining steps)",
+                path.display(),
+                ck.step,
+                opts.steps
+            );
+        }
+        let specs = param_specs(&self.model);
+        if ck.param_names.len() != specs.len()
+            || ck.param_names.iter().zip(specs.iter()).any(|(n, s)| *n != s.name)
+        {
+            bail!("checkpoint {} params do not match model {}", path.display(), self.model.name);
+        }
+        // Numerics-affecting options must match the original run, or
+        // the resumed trajectory silently diverges from the continuous
+        // one: total steps shape the LR schedule (resuming with the
+        // *remaining* count is the classic mistake), threshold changes
+        // decisions, and the val/suite cadence changes which
+        // validation batches are consumed.
+        let pinned = [
+            ("opt/steps", opts.steps, "--steps (the run's TOTAL, not remaining)"),
+            ("opt/threshold_bits", opts.threshold.to_bits() as u64, "--threshold"),
+            ("opt/val_every", opts.val_every, "--val-every"),
+            ("opt/suite_every", opts.suite_every, "--suite-every"),
+            ("opt/per_channel", opts.per_channel as u64, "per-channel stats"),
+            ("opt/stats_window", opts.stats_window, "--stats-window"),
+        ];
+        for (key, got, flag) in pinned {
+            if let Some(want) = ck.counter(key) {
+                if want != got {
+                    bail!(
+                        "checkpoint {} pins {flag} ({key}={want}) but this run uses {got}; \
+                         resume with the original settings to keep the bitwise contract",
+                        path.display()
+                    );
+                }
+            }
+        }
+        session
+            .import_state(&ck.session)
+            .with_context(|| format!("importing session state from {}", path.display()))?;
+        Ok(ck)
+    }
+
+    /// Write a full `MORCKPT2` training checkpoint: session state plus
+    /// every piece of coordinator-owned dynamic state a bitwise resume
+    /// needs.
+    #[allow(clippy::too_many_arguments)]
     fn save_checkpoint(
         &self,
-        session: &crate::runtime::TrainSession,
-        step: u64,
+        session: &TrainSession,
+        train_loader: &BatchLoader,
+        val_loader: &BatchLoader,
+        stats: &StatsCollector,
+        records: &[StepRecord],
+        suite_history: &[(u64, EvalScores)],
+        last_val: f32,
+        ckpts_written: u64,
         opts: &TrainerOptions,
-    ) -> Result<()> {
-        let specs = param_specs(&self.model);
-        let params = session.params()?;
-        let tensors = specs
-            .iter()
-            .map(|s| s.name.clone())
-            .zip(params.into_iter())
-            .collect();
-        Checkpoint { step, tensors }
-            .save(&opts.out_dir.join(format!("{}.step{step}.ckpt", opts.artifact)))
+    ) -> Result<PathBuf> {
+        let state = session.export_state()?;
+        let train_cursor = train_loader.cursor();
+        let val_cursor = val_loader.cursor();
+        let rng_streams = vec![
+            (section::DATA_TRAIN.to_string(), train_cursor.state.rng_state),
+            (section::DATA_VAL.to_string(), val_cursor.state.rng_state),
+        ];
+        let counters = vec![
+            ("train_batches".to_string(), train_cursor.batches),
+            ("val_batches".to_string(), val_cursor.batches),
+            ("suite_passes".to_string(), suite_history.len() as u64),
+            ("ckpts_written".to_string(), ckpts_written),
+            // Numerics-affecting options, pinned so a resume with a
+            // different setting errors instead of silently breaking
+            // the bitwise resume ≡ continuous contract. `steps` pins
+            // the LR schedule AND guarantees the forced final-step
+            // val/suite pass can never precede a resumable checkpoint.
+            ("opt/steps".to_string(), opts.steps),
+            ("opt/threshold_bits".to_string(), opts.threshold.to_bits() as u64),
+            ("opt/val_every".to_string(), opts.val_every),
+            ("opt/suite_every".to_string(), opts.suite_every),
+            ("opt/per_channel".to_string(), opts.per_channel as u64),
+            ("opt/stats_window".to_string(), opts.stats_window),
+        ];
+        let ck = TrainCheckpoint {
+            step: state.step,
+            artifact: opts.artifact.clone(),
+            config: self.train_config.name.to_string(),
+            last_val,
+            param_names: param_specs(&self.model).iter().map(|s| s.name.clone()).collect(),
+            session: state,
+            train_cursor,
+            val_cursor,
+            rng_streams,
+            stats: stats.clone(),
+            records: records.to_vec(),
+            suite_history: suite_history.to_vec(),
+            counters,
+        };
+        let path = opts.out_dir.join(format!("{}.step{}.ckpt", opts.artifact, ck.step));
+        ck.save(&path)?;
+        Ok(path)
     }
 }
 
@@ -282,5 +502,6 @@ mod tests {
         let o = TrainerOptions::new("train_baseline", 10, PathBuf::from("/tmp/x"));
         assert_eq!(o.threshold, 0.045);
         assert!(o.val_every > 0);
+        assert!(o.resume.is_none());
     }
 }

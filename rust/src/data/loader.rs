@@ -1,8 +1,17 @@
 //! Batch loader: turns a [`SyntheticCorpus`] stream into fixed-shape
 //! token batches for the train step, with a held-out validation split
-//! (disjoint seed stream) and double-buffered prefetch on a std thread.
+//! (disjoint seed stream), double-buffered prefetch on a std thread,
+//! and a checkpointable cursor.
+//!
+//! Every delivered batch is tagged with the corpus state *after* it was
+//! generated, so [`BatchLoader::cursor`] always describes the position
+//! of the last consumed batch — independent of how far the prefetch
+//! thread has run ahead. [`BatchLoader::resume`] reopens the stream at
+//! such a cursor bitwise: the next batch it yields is exactly the batch
+//! the original loader would have yielded next.
 
-use super::synthetic::{CorpusProfile, SyntheticCorpus};
+use super::synthetic::{CorpusProfile, CorpusState, SyntheticCorpus};
+use std::cell::RefCell;
 use std::sync::mpsc;
 
 /// One batch of token ids, shape `[batch, seq]` flattened row-major.
@@ -13,12 +22,25 @@ pub struct Batch {
     pub seq: usize,
 }
 
+/// The checkpointable position of a [`BatchLoader`]: the corpus state
+/// after the last consumed batch plus the number of batches consumed so
+/// far (a telemetry counter; the state alone determines the stream).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoaderCursor {
+    pub state: CorpusState,
+    pub batches: u64,
+}
+
 /// Streaming batch producer with background prefetch.
 pub struct BatchLoader {
-    rx: mpsc::Receiver<Batch>,
+    rx: mpsc::Receiver<(Batch, CorpusState)>,
     _handle: std::thread::JoinHandle<()>,
     pub batch: usize,
     pub seq: usize,
+    /// Position of the last consumed batch (interior-mutable so the
+    /// blocking `next_batch(&self)` API stays unchanged; the loader is
+    /// single-consumer by construction).
+    cursor: RefCell<LoaderCursor>,
 }
 
 impl BatchLoader {
@@ -32,24 +54,57 @@ impl BatchLoader {
         seed: u64,
         split_seed_offset: u64,
     ) -> Self {
-        let (tx, rx) = mpsc::sync_channel::<Batch>(4); // shallow prefetch queue
-        let handle = std::thread::spawn(move || {
-            let mut corpus =
-                SyntheticCorpus::new(profile, vocab, seed.wrapping_add(split_seed_offset * 0x5eed));
-            loop {
-                let mut tokens = vec![0i32; batch * seq];
-                corpus.fill(&mut tokens);
-                if tx.send(Batch { tokens, batch, seq }).is_err() {
-                    return; // consumer dropped
-                }
-            }
-        });
-        BatchLoader { rx, _handle: handle, batch, seq }
+        let corpus =
+            SyntheticCorpus::new(profile, vocab, seed.wrapping_add(split_seed_offset * 0x5eed));
+        Self::spawn(corpus, batch, seq, 0)
     }
 
-    /// Blocking fetch of the next batch.
+    /// Reopen a stream at a checkpointed [`LoaderCursor`]. The
+    /// (profile, vocab, seed, split) quadruple must match the loader
+    /// the cursor was taken from — the cursor carries only the dynamic
+    /// stream state, not the seed-derived pattern dictionary.
+    pub fn resume(
+        profile: CorpusProfile,
+        vocab: usize,
+        batch: usize,
+        seq: usize,
+        seed: u64,
+        split_seed_offset: u64,
+        cursor: &LoaderCursor,
+    ) -> Self {
+        let mut corpus =
+            SyntheticCorpus::new(profile, vocab, seed.wrapping_add(split_seed_offset * 0x5eed));
+        corpus.set_state(&cursor.state);
+        Self::spawn(corpus, batch, seq, cursor.batches)
+    }
+
+    fn spawn(mut corpus: SyntheticCorpus, batch: usize, seq: usize, batches: u64) -> Self {
+        let start = LoaderCursor { state: corpus.state(), batches };
+        let (tx, rx) = mpsc::sync_channel::<(Batch, CorpusState)>(4); // shallow prefetch queue
+        let handle = std::thread::spawn(move || loop {
+            let mut tokens = vec![0i32; batch * seq];
+            corpus.fill(&mut tokens);
+            let state = corpus.state();
+            if tx.send((Batch { tokens, batch, seq }, state)).is_err() {
+                return; // consumer dropped
+            }
+        });
+        BatchLoader { rx, _handle: handle, batch, seq, cursor: RefCell::new(start) }
+    }
+
+    /// Blocking fetch of the next batch; advances the cursor.
     pub fn next_batch(&self) -> Batch {
-        self.rx.recv().expect("loader thread died")
+        let (b, state) = self.rx.recv().expect("loader thread died");
+        let mut cur = self.cursor.borrow_mut();
+        cur.batches += 1;
+        cur.state = state;
+        b
+    }
+
+    /// The position of the last consumed batch (the data-loader section
+    /// of a training checkpoint).
+    pub fn cursor(&self) -> LoaderCursor {
+        self.cursor.borrow().clone()
     }
 }
 
@@ -77,6 +132,34 @@ mod tests {
         let a = BatchLoader::new(CorpusProfile::NemotronHLike, 256, 2, 16, 7, 0);
         let b = BatchLoader::new(CorpusProfile::NemotronHLike, 256, 2, 16, 7, 0);
         assert_eq!(a.next_batch(), b.next_batch());
+        assert_eq!(a.next_batch(), b.next_batch());
+    }
+
+    #[test]
+    fn cursor_resume_continues_stream_bitwise() {
+        let a = BatchLoader::new(CorpusProfile::NemotronHLike, 256, 3, 17, 99, 0);
+        for _ in 0..5 {
+            a.next_batch();
+        }
+        let cur = a.cursor();
+        assert_eq!(cur.batches, 5);
+        // Resumed loader yields exactly the batches the original yields
+        // next — regardless of how far `a`'s prefetch thread ran ahead.
+        let b = BatchLoader::resume(CorpusProfile::NemotronHLike, 256, 3, 17, 99, 0, &cur);
+        for _ in 0..4 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+        assert_eq!(b.cursor().batches, 9);
+        assert_eq!(a.cursor(), b.cursor());
+    }
+
+    #[test]
+    fn fresh_cursor_is_stream_origin() {
+        let a = BatchLoader::new(CorpusProfile::Nemotron4Like, 256, 2, 8, 5, 0);
+        let cur = a.cursor();
+        assert_eq!(cur.batches, 0);
+        // Resuming at the origin replays the stream from the start.
+        let b = BatchLoader::resume(CorpusProfile::Nemotron4Like, 256, 2, 8, 5, 0, &cur);
         assert_eq!(a.next_batch(), b.next_batch());
     }
 }

@@ -104,6 +104,53 @@ impl TensorKey {
         TensorKey { layer, module, linear, tensor, direction }
     }
 
+    /// Compact integer identity `(layer, linear, tensor, direction)` —
+    /// the checkpoint encoding of a key (the string fields are all
+    /// `'static` vocabulary, so indices round-trip losslessly).
+    pub fn codes(&self) -> (u32, u8, u8, u8) {
+        let linear = match self.linear {
+            "linear_qkv" => 0u8,
+            "linear_proj" => 1,
+            "fc1" => 2,
+            "fc2" => 3,
+            other => panic!("unknown linear {other:?}"),
+        };
+        let tensor = match self.tensor {
+            "input" => 0u8,
+            "weight" => 1,
+            "grad" => 2,
+            other => panic!("unknown tensor {other:?}"),
+        };
+        let direction = match self.direction {
+            "" => 0u8,
+            "row" => 1,
+            "col" => 2,
+            other => panic!("unknown direction {other:?}"),
+        };
+        (self.layer as u32, linear, tensor, direction)
+    }
+
+    /// Inverse of [`TensorKey::codes`]; `None` on out-of-vocabulary
+    /// indices (corrupt checkpoint).
+    pub fn from_codes(layer: u32, linear: u8, tensor: u8, direction: u8) -> Option<TensorKey> {
+        if linear > 3 {
+            return None;
+        }
+        let tensor = match tensor {
+            0 => "input",
+            1 => "weight",
+            2 => "grad",
+            _ => return None,
+        };
+        let direction = match direction {
+            0 => "",
+            1 => "row",
+            2 => "col",
+            _ => return None,
+        };
+        Some(TensorKey::new(layer as usize, linear as usize, tensor, direction))
+    }
+
     pub fn name(&self) -> String {
         if self.direction.is_empty() {
             format!(
@@ -179,6 +226,40 @@ impl StatsCollector {
 
     pub fn set_step(&mut self, step: u64) {
         self.step = step;
+    }
+
+    /// The step the collector is currently recording at.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Every `(window, key) → stats` entry, in BTreeMap (canonical)
+    /// order — the checkpointable body of the collector.
+    pub fn window_entries(&self) -> impl Iterator<Item = (&(u64, TensorKey), &TensorWindow)> {
+        self.windows.iter()
+    }
+
+    /// Every `key → running-total` entry, in canonical order.
+    pub fn total_entries(&self) -> impl Iterator<Item = (&TensorKey, &TensorWindow)> {
+        self.totals.iter()
+    }
+
+    /// Rebuild a collector from checkpointed entries — the exact
+    /// inverse of iterating `window_entries`/`total_entries`. A
+    /// restored collector continues recording as if it had never
+    /// stopped: same windows, same totals, same aggregate percentages.
+    pub fn restore(
+        reset_every: u64,
+        step: u64,
+        windows: Vec<((u64, TensorKey), TensorWindow)>,
+        totals: Vec<(TensorKey, TensorWindow)>,
+    ) -> StatsCollector {
+        StatsCollector {
+            reset_every: reset_every.max(1),
+            windows: windows.into_iter().collect(),
+            totals: totals.into_iter().collect(),
+            step,
+        }
     }
 
     pub fn window_of(&self, step: u64) -> u64 {
@@ -359,6 +440,47 @@ mod tests {
         assert_eq!(c.total_for(&key).unwrap().steps, 2);
         assert_eq!(c.overall_fallback_pct(), 50.0);
         assert_eq!(c.overall_bf16_element_pct(), 50.0);
+    }
+
+    #[test]
+    fn key_codes_roundtrip() {
+        for layer in [0usize, 3, 11] {
+            for linear in 0..4usize {
+                for tensor in ["input", "weight", "grad"] {
+                    for dir in ["", "row", "col"] {
+                        let k = TensorKey::new(layer, linear, tensor, dir);
+                        let (l, li, t, d) = k.codes();
+                        assert_eq!(TensorKey::from_codes(l, li, t, d), Some(k));
+                    }
+                }
+            }
+        }
+        assert_eq!(TensorKey::from_codes(0, 4, 0, 0), None);
+        assert_eq!(TensorKey::from_codes(0, 0, 3, 0), None);
+        assert_eq!(TensorKey::from_codes(0, 0, 0, 3), None);
+    }
+
+    #[test]
+    fn restore_rebuilds_collector_exactly() {
+        let mut c = StatsCollector::new(10);
+        let k1 = TensorKey::new(0, 1, "weight", "");
+        let k2 = TensorKey::new(1, 2, "grad", "row");
+        for i in 0..25u64 {
+            c.set_step(i);
+            c.record(k1.clone(), 0.001 * i as f64, i % 5 == 0, 0.1);
+            c.record(k2.clone(), 0.06, true, 1.0);
+        }
+        let back = StatsCollector::restore(
+            c.reset_every,
+            c.step(),
+            c.window_entries().map(|(k, w)| (k.clone(), w.clone())).collect(),
+            c.total_entries().map(|(k, w)| (k.clone(), w.clone())).collect(),
+        );
+        assert_eq!(back.step(), c.step());
+        assert_eq!(back.heatmap_csv(), c.heatmap_csv());
+        assert_eq!(back.overall_fallback_pct(), c.overall_fallback_pct());
+        assert_eq!(back.overall_bf16_element_pct(), c.overall_bf16_element_pct());
+        assert_eq!(back.num_windows(), c.num_windows());
     }
 
     #[test]

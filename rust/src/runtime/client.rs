@@ -17,6 +17,7 @@ use crate::formats::ReprType;
 use crate::model::config::ModelConfig;
 use crate::model::naming::{param_specs, QuantTensorId};
 use crate::quant::partition::Partition;
+use crate::scaling::delayed::AmaxHistory;
 use crate::scaling::ScalingAlgo;
 use crate::tensor::Tensor;
 use crate::util::par::{self, Parallelism};
@@ -348,6 +349,26 @@ impl ParamsRef<'_> {
     }
 }
 
+/// The complete dynamic state of a [`TrainSession`], in host form —
+/// what [`TrainSession::export_state`] hands the checkpoint writer and
+/// [`TrainSession::import_state`] restores on resume. Restoring this
+/// (plus the coordinator-owned state: data cursors, stats, metrics) is
+/// what makes a resumed run bitwise identical to an uninterrupted one.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    /// Completed optimizer steps (drives Adam bias correction).
+    pub step: u64,
+    /// Parameters, canonical `param_specs` order.
+    pub params: Vec<Tensor>,
+    /// Adam first moments, same order.
+    pub opt_m: Vec<Tensor>,
+    /// Adam second moments, same order.
+    pub opt_v: Vec<Tensor>,
+    /// Per-slot delayed-scaling amax histories (host backend; empty
+    /// for PJRT, whose device state carries no host-side telemetry).
+    pub amax_hist: Vec<AmaxHistory>,
+}
+
 enum TrainImpl {
     /// Compiled step: owns the param/optimizer state literals.
     Pjrt { exe: Rc<xla::PjRtLoadedExecutable>, state: Vec<xla::Literal> },
@@ -510,6 +531,87 @@ impl TrainSession {
 
     pub fn set_step(&mut self, step: u64) {
         self.step = step;
+    }
+
+    /// Export the complete dynamic session state (params + optimizer
+    /// moments + step counter + scaling telemetry) as host tensors —
+    /// the session half of a [`crate::coordinator::checkpoint`]
+    /// `MORCKPT2` checkpoint. Works on both backends; PJRT pulls its
+    /// state literals to host.
+    pub fn export_state(&self) -> Result<TrainState> {
+        match &self.imp {
+            TrainImpl::Host { trainer, .. } => {
+                let (m, v) = trainer.moments();
+                Ok(TrainState {
+                    step: self.step,
+                    params: trainer.params.clone(),
+                    opt_m: m.to_vec(),
+                    opt_v: v.to_vec(),
+                    amax_hist: trainer.amax_history().to_vec(),
+                })
+            }
+            TrainImpl::Pjrt { state, .. } => {
+                let n = self.num_params;
+                let pull = |lits: &[xla::Literal]| -> Result<Vec<Tensor>> {
+                    lits.iter().map(literal_to_tensor).collect()
+                };
+                Ok(TrainState {
+                    step: self.step,
+                    params: pull(&state[..n])?,
+                    opt_m: pull(&state[n..2 * n])?,
+                    opt_v: pull(&state[2 * n..3 * n])?,
+                    amax_hist: Vec::new(),
+                })
+            }
+        }
+    }
+
+    /// Restore a state exported by [`TrainSession::export_state`]. The
+    /// arity/shape contract is checked; on success the session is
+    /// bitwise indistinguishable from the one that exported — stepping
+    /// it produces the exact sequence the original would have produced.
+    pub fn import_state(&mut self, st: &TrainState) -> Result<()> {
+        let n = self.num_params;
+        if st.params.len() != n || st.opt_m.len() != n || st.opt_v.len() != n {
+            bail!(
+                "state arity mismatch: {} params / {} m / {} v, expected {n}",
+                st.params.len(),
+                st.opt_m.len(),
+                st.opt_v.len()
+            );
+        }
+        match &mut self.imp {
+            TrainImpl::Host { trainer, lits_stale, .. } => {
+                trainer.load_state(&st.params, &st.opt_m, &st.opt_v, &st.amax_hist)?;
+                *lits_stale = true;
+            }
+            TrainImpl::Pjrt { state, .. } => {
+                // Validate every shape against the live state literals
+                // BEFORE overwriting anything, so a mismatched
+                // checkpoint errors cleanly here (like the host
+                // backend) instead of surfacing as an opaque XLA
+                // execute failure — and never leaves the state
+                // half-replaced.
+                let full: Vec<&Tensor> =
+                    st.params.iter().chain(&st.opt_m).chain(&st.opt_v).collect();
+                for (i, t) in full.iter().enumerate() {
+                    let shape = state[i].array_shape()?;
+                    let dims: Vec<usize> =
+                        shape.dims().iter().map(|d| *d as usize).collect();
+                    if dims.as_slice() != t.shape() {
+                        bail!(
+                            "state shape mismatch at slot {i}: checkpoint {:?}, session {dims:?}",
+                            t.shape()
+                        );
+                    }
+                }
+                for (i, t) in full.iter().enumerate() {
+                    state[i] = tensor_to_literal(t)?;
+                }
+            }
+        }
+        self.step = st.step;
+        Ok(())
     }
 }
 
@@ -758,6 +860,45 @@ mod tests {
         assert_eq!(oa.loss.to_bits(), ob.loss.to_bits());
         assert_eq!(oa.relerr, ob.relerr);
         assert_eq!(oa.fallback, ob.fallback);
+    }
+
+    #[test]
+    fn export_import_state_resumes_bitwise() {
+        let rt = Runtime::host(ModelConfig::TINY);
+        let mut a = rt.train_session("train_mor_tensor_block", 21).unwrap();
+        let tokens: Vec<i32> = (0..a.batch * a.seq).map(|i| (i % 253) as i32).collect();
+        for _ in 0..3 {
+            a.step(&tokens, 1e-3, 0.045).unwrap();
+        }
+        let st = a.export_state().unwrap();
+        assert_eq!(st.step, 3);
+        assert_eq!(st.params.len(), a.num_params);
+        assert_eq!(st.opt_m.len(), a.num_params);
+        assert_eq!(st.amax_hist.len(), a.stats_len);
+        assert!(st.amax_hist.iter().all(|h| h.len() == 3));
+        // Moments are live after 3 steps.
+        assert!(st.opt_m.iter().any(|t| t.data().iter().any(|v| *v != 0.0)));
+
+        // A *different* fresh session (different seed) imports the
+        // state and must continue exactly like the original.
+        let mut b = rt.train_session("train_mor_tensor_block", 999).unwrap();
+        b.import_state(&st).unwrap();
+        assert_eq!(b.steps_taken(), 3);
+        let oa = a.step(&tokens, 5e-4, 0.045).unwrap();
+        let ob = b.step(&tokens, 5e-4, 0.045).unwrap();
+        assert_eq!(oa.loss.to_bits(), ob.loss.to_bits());
+        assert_eq!(oa.relerr, ob.relerr);
+        assert_eq!(oa.fallback, ob.fallback);
+        let pa = a.params().unwrap();
+        let pb = b.params().unwrap();
+        for (x, y) in pa.iter().zip(pb.iter()) {
+            assert_eq!(x, y, "params diverged after resume");
+        }
+
+        // Arity mismatches are rejected.
+        let mut bad = st.clone();
+        bad.opt_m.pop();
+        assert!(b.import_state(&bad).is_err());
     }
 
     // PJRT-dependent paths are covered by rust/tests/integration_*.rs

@@ -24,6 +24,7 @@ use crate::model::naming::QuantTensorId;
 use crate::quant::error::dynamic_range_fits_e5m2;
 use crate::quant::fake_quant::fake_quantize_with;
 use crate::quant::partition::Partition;
+use crate::scaling::delayed::AmaxHistory;
 use crate::scaling::ScalingAlgo;
 use crate::tensor::ops::{matmul_nt_with, matmul_tn_with, matmul_with};
 use crate::tensor::Tensor;
@@ -463,18 +464,37 @@ pub fn attention_bwd(
 pub struct StepStats {
     pub relerr: Vec<f32>,
     pub fallback: Vec<f32>,
+    /// Per-slot operand amax — feeds the delayed-scaling history
+    /// ([`HostTrainer`]'s per-slot [`AmaxHistory`] telemetry, part of
+    /// the checkpointable session state).
+    pub amax: Vec<f32>,
 }
 
 impl StepStats {
     fn new(n_slots: usize) -> StepStats {
-        StepStats { relerr: vec![0.0; n_slots], fallback: vec![0.0; n_slots] }
+        StepStats {
+            relerr: vec![0.0; n_slots],
+            fallback: vec![0.0; n_slots],
+            amax: vec![0.0; n_slots],
+        }
     }
 
-    fn record(&mut self, layer: usize, linear: usize, tensor: usize, dir: usize, re: f32, fb: f32) {
+    #[allow(clippy::too_many_arguments)]
+    fn record(
+        &mut self,
+        layer: usize,
+        linear: usize,
+        tensor: usize,
+        dir: usize,
+        re: f32,
+        fb: f32,
+        amax: f32,
+    ) {
         let id = QuantTensorId { layer, linear, tensor, direction: dir };
         let idx = id.flat(0);
         self.relerr[idx] = re;
         self.fallback[idx] = fb;
+        self.amax[idx] = amax;
     }
 }
 
@@ -497,8 +517,8 @@ fn linear_fwd(
         || mor_quantize(q, x2d, th, 0, cfg),
         || mor_quantize(q, w, th, 1, cfg),
     );
-    stats.record(layer, linear, 0, 0, rex, fbx);
-    stats.record(layer, linear, 1, 0, rew, fbw);
+    stats.record(layer, linear, 0, 0, rex, fbx, x2d.amax());
+    stats.record(layer, linear, 1, 0, rew, fbw, w.amax());
     matmul_with(&qx, &qw, cfg)
 }
 
@@ -566,10 +586,13 @@ fn linear_bwd(
         || matmul_with(&qdy0, &qwt, cfg),
         || matmul_with(&qxt, qdy1, cfg),
     );
-    stats.record(layer, linear, 0, 1, rex1, fbx1);
-    stats.record(layer, linear, 1, 1, rew1, fbw1);
-    stats.record(layer, linear, 2, 0, reg0, fbg0);
-    stats.record(layer, linear, 2, 1, reg1, fbg1);
+    // Operand amaxes are transpose-invariant, so they come from the
+    // untransposed tensors.
+    let (axm, awm, agm) = (x2d.amax(), w.amax(), dy2d.amax());
+    stats.record(layer, linear, 0, 1, rex1, fbx1, axm);
+    stats.record(layer, linear, 1, 1, rew1, fbw1, awm);
+    stats.record(layer, linear, 2, 0, reg0, fbg0, agm);
+    stats.record(layer, linear, 2, 1, reg1, fbg1, agm);
     (dx, dw)
 }
 
@@ -842,8 +865,14 @@ fn backward(
 // Train / eval entry points (the host ABI)
 // ---------------------------------------------------------------------------
 
+/// Window of the per-slot delayed-scaling amax telemetry
+/// ([`HostTrainer::amax_history`]) — Transformer-Engine-style histories
+/// scaled to the testbed.
+pub const AMAX_HIST_WINDOW: usize = 16;
+
 /// The host-side train session state: params + Adam moments, stepped in
-/// place. Mirrors the compiled train artifact's fused step.
+/// place, plus the per-slot delayed-scaling amax history telemetry.
+/// Mirrors the compiled train artifact's fused step.
 pub struct HostTrainer {
     pub model: ModelConfig,
     pub quant: HostQuant,
@@ -852,6 +881,14 @@ pub struct HostTrainer {
     pub params: Vec<Tensor>,
     m: Vec<Tensor>,
     v: Vec<Tensor>,
+    /// Per-slot sliding amax history (slot order = `QuantTensorId::
+    /// flat`): the delayed-scaling state a resumed run must restore to
+    /// keep its scaling decisions auditable against the uninterrupted
+    /// run (pure telemetry today — the recipes recompute scales per
+    /// mini-batch — but checkpointed like the rest of the dynamic
+    /// state so a delayed-scaling recipe slots in without a format
+    /// change).
+    amax_hist: Vec<AmaxHistory>,
 }
 
 impl HostTrainer {
@@ -868,7 +905,60 @@ impl HostTrainer {
             .collect();
         let m = specs.iter().map(|sp| Tensor::zeros(&sp.shape)).collect();
         let v = specs.iter().map(|sp| Tensor::zeros(&sp.shape)).collect();
-        HostTrainer { model, quant, par, params, m, v }
+        let amax_hist =
+            vec![AmaxHistory::new(AMAX_HIST_WINDOW); QuantTensorId::count(&model)];
+        HostTrainer { model, quant, par, params, m, v, amax_hist }
+    }
+
+    /// The Adam moments, in canonical parameter order (checkpointing).
+    pub fn moments(&self) -> (&[Tensor], &[Tensor]) {
+        (&self.m, &self.v)
+    }
+
+    /// The per-slot delayed-scaling amax histories (checkpointing).
+    pub fn amax_history(&self) -> &[AmaxHistory] {
+        &self.amax_hist
+    }
+
+    /// Restore the full dynamic state (params + Adam moments + amax
+    /// histories) from a checkpoint. Arities and shapes must match the
+    /// model; an empty `amax_hist` resets the telemetry (the PJRT
+    /// backend exports none).
+    pub fn load_state(
+        &mut self,
+        params: &[Tensor],
+        m: &[Tensor],
+        v: &[Tensor],
+        amax_hist: &[AmaxHistory],
+    ) -> Result<()> {
+        let n = self.params.len();
+        if params.len() != n || m.len() != n || v.len() != n {
+            bail!(
+                "state arity mismatch: {} params / {} m / {} v, expected {n}",
+                params.len(),
+                m.len(),
+                v.len()
+            );
+        }
+        for (i, ((p, mm), vv)) in params.iter().zip(m).zip(v).enumerate() {
+            let want = self.params[i].shape();
+            if p.shape() != want || mm.shape() != want || vv.shape() != want {
+                bail!("state shape mismatch at param {i}: expected {want:?}");
+            }
+        }
+        let n_slots = QuantTensorId::count(&self.model);
+        if !amax_hist.is_empty() && amax_hist.len() != n_slots {
+            bail!("amax history has {} slots, expected {n_slots}", amax_hist.len());
+        }
+        self.params = params.to_vec();
+        self.m = m.to_vec();
+        self.v = v.to_vec();
+        self.amax_hist = if amax_hist.is_empty() {
+            vec![AmaxHistory::new(AMAX_HIST_WINDOW); n_slots]
+        } else {
+            amax_hist.to_vec()
+        };
+        Ok(())
     }
 
     /// One fused step: fwd + manual bwd + Adam. Returns
@@ -916,6 +1006,12 @@ impl HostTrainer {
             &mut stats,
             &self.par,
         );
+
+        // Advance the per-slot delayed-scaling histories with the
+        // amaxes this step observed (checkpointable telemetry).
+        for (h, &a) in self.amax_hist.iter_mut().zip(stats.amax.iter()) {
+            h.push(a);
+        }
 
         let bc1 = 1.0 - ADAM_B1.powf(adam_t);
         let bc2 = 1.0 - ADAM_B2.powf(adam_t);

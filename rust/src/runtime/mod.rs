@@ -22,6 +22,13 @@
 //! `EvalSession::eval_params`): tensors for the host backend, literals
 //! for PJRT, converted only when the backends genuinely differ.
 //!
+//! Sessions are checkpointable: `TrainSession::export_state` /
+//! `import_state` move the complete dynamic state ([`TrainState`]:
+//! params, Adam moments, step counter, delayed-scaling amax histories)
+//! in and out on both backends, which is what the coordinator's
+//! `MORCKPT2` checkpoints and the bitwise resume ≡ continuous contract
+//! are built on.
+//!
 //! ### Interchange notes (PJRT path)
 //! * HLO **text** is the interchange format, not serialized protos
 //!   (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
@@ -35,6 +42,8 @@ pub mod client;
 pub mod host;
 pub mod manifest;
 
-pub use client::{EvalSession, ParamsRef, QuantSession, Runtime, StepOutputs, TrainSession};
+pub use client::{
+    EvalSession, ParamsRef, QuantSession, Runtime, StepOutputs, TrainSession, TrainState,
+};
 pub use host::{HostQuant, HostTrainer};
 pub use manifest::{ArtifactEntry, ArtifactKind, Manifest};

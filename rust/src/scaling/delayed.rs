@@ -65,6 +65,40 @@ impl AmaxHistory {
     pub fn is_empty(&self) -> bool {
         self.history.is_empty()
     }
+
+    /// The configured window size (checkpoint metadata).
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// The recorded amaxes, oldest first — the checkpointable state of
+    /// the stream.
+    pub fn values(&self) -> impl Iterator<Item = f32> + '_ {
+        self.history.iter().copied()
+    }
+
+    /// Rebuild a history from checkpointed (window, values). Values
+    /// beyond the window are dropped oldest-first, exactly as if they
+    /// had been `push`ed in order.
+    pub fn from_values(window: usize, values: &[f32]) -> Self {
+        let mut h = AmaxHistory::new(window);
+        for &v in values {
+            h.push(v);
+        }
+        h
+    }
+}
+
+impl PartialEq for AmaxHistory {
+    fn eq(&self, other: &Self) -> bool {
+        self.window == other.window
+            && self.history.len() == other.history.len()
+            && self
+                .history
+                .iter()
+                .zip(other.history.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
 }
 
 #[cfg(test)]
@@ -110,6 +144,22 @@ mod tests {
         assert!(h.would_saturate(25.0, 448.0));
         assert!(!h.would_saturate(9.0, 448.0));
         assert!(!h.would_saturate(10.0, 448.0)); // exactly at amax: ok
+    }
+
+    #[test]
+    fn values_roundtrip_rebuilds_history() {
+        let mut h = AmaxHistory::new(3);
+        for a in [4.0, 8.0, 2.0, 1.0] {
+            h.push(a); // 4.0 evicted
+        }
+        let vals: Vec<f32> = h.values().collect();
+        assert_eq!(vals, vec![8.0, 2.0, 1.0]);
+        let back = AmaxHistory::from_values(h.window(), &vals);
+        assert_eq!(back, h);
+        assert_eq!(back.delayed_amax(), h.delayed_amax());
+        // Oversized value lists fold down exactly like live pushes.
+        let folded = AmaxHistory::from_values(2, &[9.0, 5.0, 3.0]);
+        assert_eq!(folded.values().collect::<Vec<_>>(), vec![5.0, 3.0]);
     }
 
     #[test]

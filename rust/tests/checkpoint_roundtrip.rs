@@ -1,0 +1,342 @@
+//! The checkpoint container's correctness contract:
+//!
+//! * save → load round-trips are **bitwise** for both container
+//!   versions (property-tested over adversarial tensor sets: empty
+//!   tensors, 1-element tensors, 0-dim scalars, long names);
+//! * every malformed-file class — bad magic, truncated payloads,
+//!   oversized `name_len`/`ndims`/dims/section-count fields — returns
+//!   an `anyhow` error: no panics, no allocations beyond the file's
+//!   own size;
+//! * the on-disk encoding is pinned byte-for-byte against committed
+//!   golden fixtures (`tests/golden/morckpt*_fixture.bin`, generated
+//!   by `tests/golden/gen_ckpt_fixtures.py`), so the format is
+//!   endian-stable and cannot drift silently.
+
+use mor::coordinator::checkpoint::{Checkpoint, MAX_NAME_LEN, MAX_NDIMS};
+use mor::tensor::Tensor;
+use mor::util::proptest::{prop, Gen};
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mor_ckptrt_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn golden(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name)
+}
+
+fn assert_tensors_bitwise_eq(a: &[(String, Tensor)], b: &[(String, Tensor)]) {
+    assert_eq!(a.len(), b.len(), "tensor count");
+    for ((na, ta), (nb, tb)) in a.iter().zip(b.iter()) {
+        assert_eq!(na, nb, "tensor name");
+        assert_eq!(ta.shape(), tb.shape(), "shape of {na}");
+        for (i, (x, y)) in ta.data().iter().zip(tb.data().iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{na}[{i}]: {x} vs {y}");
+        }
+    }
+}
+
+/// A random tensor set covering the adversarial shapes: 0-dim scalars,
+/// 1-element tensors, empty tensors (a zero dim), plus ordinary 1-D/2-D
+/// tensors with denormal-to-huge magnitudes and signed zeros.
+fn random_tensor_set(g: &mut Gen) -> Vec<(String, Tensor)> {
+    let n = g.usize_in(0, 6);
+    (0..n)
+        .map(|i| {
+            let shape: Vec<usize> = match g.usize_in(0, 5) {
+                0 => vec![],                                   // 0-dim scalar
+                1 => vec![1],                                  // 1 element
+                2 => vec![g.usize_in(0, 3), 0],                // empty (zero dim)
+                3 => vec![g.usize_in(1, 9)],                   // 1-D
+                _ => vec![g.usize_in(1, 7), g.usize_in(1, 7)], // 2-D
+            };
+            let vol: usize = shape.iter().product();
+            let data: Vec<f32> = (0..vol)
+                .map(|_| match g.usize_in(0, 9) {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => f32::MIN_POSITIVE / 2.0, // subnormal
+                    _ => g.f32_in(-1.0, 1.0) * g.f32_log_uniform(1e-30, 1e30),
+                })
+                .collect();
+            let name = match i % 3 {
+                0 => format!("t{i}"),
+                1 => format!("decoder.layer.{i}.mlp.fc1.weight"),
+                _ => "x".repeat(g.usize_in(1, 40)),
+            };
+            (name, Tensor::from_vec(&shape, data))
+        })
+        .collect()
+}
+
+#[test]
+fn prop_v2_roundtrip_bitwise() {
+    prop(120, |g: &mut Gen| {
+        let mut ck = Checkpoint::new(g.next_u64(), random_tensor_set(g));
+        for s in 0..g.usize_in(0, 3) {
+            let payload: Vec<u8> = (0..g.usize_in(0, 64)).map(|_| g.u32() as u8).collect();
+            ck.push_section(&format!("sect/{s}"), payload);
+        }
+        let back = Checkpoint::from_bytes(&ck.to_bytes_v2()).unwrap();
+        assert_eq!(back.step, ck.step);
+        assert_tensors_bitwise_eq(&back.tensors, &ck.tensors);
+        assert_eq!(back.sections, ck.sections);
+        true
+    });
+}
+
+#[test]
+fn prop_v1_roundtrip_bitwise() {
+    prop(120, |g: &mut Gen| {
+        let ck = Checkpoint::new(g.next_u64(), random_tensor_set(g));
+        let back = Checkpoint::from_bytes(&ck.to_bytes_v1()).unwrap();
+        assert_eq!(back.step, ck.step);
+        assert_tensors_bitwise_eq(&back.tensors, &ck.tensors);
+        assert!(back.sections.is_empty());
+        true
+    });
+}
+
+#[test]
+fn v2_file_roundtrip_on_disk() {
+    let dir = tmpdir("disk");
+    let path = dir.join("a.ckpt");
+    let mut ck = Checkpoint::new(
+        42,
+        vec![
+            ("scalar".into(), Tensor::from_vec(&[], vec![3.25])),
+            ("empty".into(), Tensor::zeros(&[2, 0])),
+            ("w".into(), Tensor::normal(&[3, 5], 1.0, 7)),
+        ],
+    );
+    ck.push_section("opaque", vec![0, 255, 7]);
+    ck.save(&path).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    assert_eq!(back, ck);
+    assert_eq!(back.get("scalar").unwrap().data(), &[3.25]);
+    assert_eq!(back.get("empty").unwrap().len(), 0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Malformed-input classes: each must error, never panic or over-allocate
+// ---------------------------------------------------------------------------
+
+fn le32(v: u32) -> [u8; 4] {
+    v.to_le_bytes()
+}
+
+fn le64(v: u64) -> [u8; 8] {
+    v.to_le_bytes()
+}
+
+/// A minimal *valid* v1 image: step 1, one tensor "w" = [2] of zeros.
+fn valid_v1() -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(b"MORCKPT1");
+    b.extend_from_slice(&le64(1));
+    b.extend_from_slice(&le32(1)); // ntensors
+    b.extend_from_slice(&le32(1)); // name_len
+    b.push(b'w');
+    b.extend_from_slice(&le32(1)); // ndims
+    b.extend_from_slice(&le64(2)); // dim = 2
+    b.extend_from_slice(&[0u8; 8]); // 2 f32 zeros
+    b
+}
+
+#[test]
+fn malformed_bad_magic_errors() {
+    assert!(Checkpoint::from_bytes(b"NOTACKPT").is_err());
+    assert!(Checkpoint::from_bytes(b"MORCKPT9\x01\x00\x00\x00\x00\x00\x00\x00").is_err());
+    assert!(Checkpoint::from_bytes(b"").is_err());
+    assert!(Checkpoint::from_bytes(b"MOR").is_err()); // shorter than magic
+}
+
+#[test]
+fn malformed_truncations_error() {
+    let good = valid_v1();
+    assert!(Checkpoint::from_bytes(&good).is_ok(), "baseline image must parse");
+    // Every strict prefix is a truncation of some field and must error.
+    for cut in 8..good.len() {
+        assert!(
+            Checkpoint::from_bytes(&good[..cut]).is_err(),
+            "truncation at {cut} bytes parsed successfully"
+        );
+    }
+}
+
+#[test]
+fn malformed_oversized_name_len_errors() {
+    // name_len = u32::MAX: the cap (MAX_NAME_LEN) must reject it before
+    // any allocation of that size is attempted.
+    let mut b = Vec::new();
+    b.extend_from_slice(b"MORCKPT1");
+    b.extend_from_slice(&le64(1));
+    b.extend_from_slice(&le32(1)); // ntensors
+    b.extend_from_slice(&le32(u32::MAX)); // absurd name_len
+    b.push(b'w');
+    let err = Checkpoint::from_bytes(&b).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&MAX_NAME_LEN.to_string()) || msg.contains("truncated"), "{msg}");
+}
+
+#[test]
+fn malformed_oversized_ndims_errors() {
+    let mut b = Vec::new();
+    b.extend_from_slice(b"MORCKPT1");
+    b.extend_from_slice(&le64(1));
+    b.extend_from_slice(&le32(1)); // ntensors
+    b.extend_from_slice(&le32(1));
+    b.push(b'w');
+    b.extend_from_slice(&le32(1_000_000)); // ndims far past MAX_NDIMS
+    let err = Checkpoint::from_bytes(&b).unwrap_err();
+    assert!(format!("{err:#}").contains(&MAX_NDIMS.to_string()), "{err:#}");
+}
+
+#[test]
+fn malformed_oversized_dims_error() {
+    // Dims whose volume would dwarf the file: the data read must be
+    // bounded by the remaining bytes, not the claimed volume.
+    for dims in [[u64::MAX, 2], [1 << 40, 1 << 40], [1 << 20, 1 << 20]] {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"MORCKPT1");
+        b.extend_from_slice(&le64(1));
+        b.extend_from_slice(&le32(1)); // ntensors
+        b.extend_from_slice(&le32(1));
+        b.push(b'w');
+        b.extend_from_slice(&le32(2)); // ndims
+        for d in dims {
+            b.extend_from_slice(&le64(d));
+        }
+        b.extend_from_slice(&[0u8; 64]); // nowhere near vol * 4 bytes
+        assert!(Checkpoint::from_bytes(&b).is_err(), "dims {dims:?} accepted");
+    }
+}
+
+#[test]
+fn malformed_tensor_count_errors() {
+    // A tensor count the file cannot possibly hold.
+    let mut b = Vec::new();
+    b.extend_from_slice(b"MORCKPT1");
+    b.extend_from_slice(&le64(1));
+    b.extend_from_slice(&le32(u32::MAX));
+    assert!(Checkpoint::from_bytes(&b).is_err());
+}
+
+#[test]
+fn malformed_v2_sections_error() {
+    // Section count past the cap.
+    let mut b = Vec::new();
+    b.extend_from_slice(b"MORCKPT2");
+    b.extend_from_slice(&le64(1));
+    b.extend_from_slice(&le32(100_000));
+    assert!(Checkpoint::from_bytes(&b).is_err());
+
+    // Section payload length pointing past the end of the file.
+    let mut b = Vec::new();
+    b.extend_from_slice(b"MORCKPT2");
+    b.extend_from_slice(&le64(1));
+    b.extend_from_slice(&le32(1));
+    b.extend_from_slice(&le32(6));
+    b.extend_from_slice(b"params");
+    b.extend_from_slice(&le64(u64::MAX)); // absurd payload length
+    assert!(Checkpoint::from_bytes(&b).is_err());
+
+    // A v2 container without a params section is rejected.
+    let mut b = Vec::new();
+    b.extend_from_slice(b"MORCKPT2");
+    b.extend_from_slice(&le64(1));
+    b.extend_from_slice(&le32(1));
+    b.extend_from_slice(&le32(4));
+    b.extend_from_slice(b"note");
+    b.extend_from_slice(&le64(0));
+    assert!(Checkpoint::from_bytes(&b).is_err());
+}
+
+#[test]
+fn malformed_duplicate_sections_error() {
+    // Duplicate names would make section lookups ambiguous; the loader
+    // rejects them rather than picking a winner.
+    let empty_params: Vec<u8> = le32(0).to_vec(); // ntensors = 0
+    let mut b = Vec::new();
+    b.extend_from_slice(b"MORCKPT2");
+    b.extend_from_slice(&le64(1));
+    b.extend_from_slice(&le32(3));
+    for (name, payload) in
+        [("params", &empty_params), ("note", &vec![7u8]), ("note", &vec![8u8])]
+    {
+        b.extend_from_slice(&le32(name.len() as u32));
+        b.extend_from_slice(name.as_bytes());
+        b.extend_from_slice(&le64(payload.len() as u64));
+        b.extend_from_slice(payload);
+    }
+    let err = Checkpoint::from_bytes(&b).unwrap_err();
+    assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+}
+
+#[test]
+fn malformed_trailing_garbage_errors() {
+    let mut good = valid_v1();
+    good.push(0xAA);
+    assert!(Checkpoint::from_bytes(&good).is_err());
+}
+
+#[test]
+fn malformed_non_utf8_name_errors() {
+    let mut b = Vec::new();
+    b.extend_from_slice(b"MORCKPT1");
+    b.extend_from_slice(&le64(1));
+    b.extend_from_slice(&le32(1)); // ntensors
+    b.extend_from_slice(&le32(2)); // name_len
+    b.extend_from_slice(&[0xFF, 0xFE]); // invalid utf8
+    b.extend_from_slice(&le32(0)); // ndims = 0 (scalar)
+    b.extend_from_slice(&[0u8; 4]);
+    assert!(Checkpoint::from_bytes(&b).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Byte-level golden fixtures: the encoding is pinned, endian-stably
+// ---------------------------------------------------------------------------
+
+/// The checkpoint value both fixtures encode (see
+/// `tests/golden/gen_ckpt_fixtures.py`).
+fn fixture_checkpoint() -> Checkpoint {
+    let mut ck = Checkpoint::new(
+        7,
+        vec![("w".into(), Tensor::from_vec(&[2, 2], vec![1.0, -2.0, 0.5, 3.0]))],
+    );
+    ck.push_section("note", b"hello".to_vec());
+    ck
+}
+
+#[test]
+fn golden_fixture_v1_bytes_pinned() {
+    let want = std::fs::read(golden("morckpt1_fixture.bin"))
+        .expect("committed fixture tests/golden/morckpt1_fixture.bin");
+    // Encoder reproduces the committed bytes exactly (v1 drops the
+    // extra section by design)...
+    assert_eq!(fixture_checkpoint().to_bytes_v1(), want, "v1 encoding drifted");
+    // ...and the committed bytes decode to the expected value.
+    let back = Checkpoint::from_bytes(&want).unwrap();
+    assert_eq!(back.step, 7);
+    assert_tensors_bitwise_eq(&back.tensors, &fixture_checkpoint().tensors);
+}
+
+#[test]
+fn golden_fixture_v2_bytes_pinned() {
+    let want = std::fs::read(golden("morckpt2_fixture.bin"))
+        .expect("committed fixture tests/golden/morckpt2_fixture.bin");
+    assert_eq!(fixture_checkpoint().to_bytes_v2(), want, "v2 encoding drifted");
+    let back = Checkpoint::from_bytes(&want).unwrap();
+    assert_eq!(back, fixture_checkpoint());
+    // Spot-check the f32 payload bytes really are little-endian
+    // to_le_bytes output: 1.0f32 == 3F80_0000.
+    let pos = want
+        .windows(4)
+        .position(|w| w == [0x00, 0x00, 0x80, 0x3F])
+        .expect("LE bytes of 1.0f32 present in fixture");
+    // -2.0f32 == C000_0000 follows immediately.
+    assert_eq!(&want[pos + 4..pos + 8], &[0x00, 0x00, 0x00, 0xC0]);
+}

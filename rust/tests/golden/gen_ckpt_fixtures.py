@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Generate the byte-level checkpoint-container fixtures.
+
+Writes `morckpt1_fixture.bin` / `morckpt2_fixture.bin`, the golden
+images `rust/tests/checkpoint_roundtrip.rs` pins the on-disk encoding
+against (see the format doc in `rust/src/coordinator/checkpoint.rs`).
+Both encode the same logical checkpoint:
+
+    step = 7
+    tensors = [("w", shape [2, 2], f32 data [1.0, -2.0, 0.5, 3.0])]
+    sections = [("note", b"hello")]        # v2 only; v1 drops sections
+
+Everything is little-endian by construction (struct '<'), which is the
+point: the Rust side must produce these exact bytes on any host.
+"""
+
+import pathlib
+import struct
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+STEP = 7
+TENSORS = [("w", [2, 2], [1.0, -2.0, 0.5, 3.0])]
+SECTIONS = [("note", b"hello")]
+
+
+def name(s: str) -> bytes:
+    b = s.encode()
+    return struct.pack("<I", len(b)) + b
+
+
+def tensor_list(tensors) -> bytes:
+    out = struct.pack("<I", len(tensors))
+    for tname, shape, data in tensors:
+        assert len(data) == int.__mul__(*shape) if len(shape) == 2 else True
+        out += name(tname)
+        out += struct.pack("<I", len(shape))
+        for d in shape:
+            out += struct.pack("<Q", d)
+        for v in data:
+            out += struct.pack("<f", v)
+    return out
+
+
+def v1() -> bytes:
+    return b"MORCKPT1" + struct.pack("<Q", STEP) + tensor_list(TENSORS)
+
+
+def v2() -> bytes:
+    out = b"MORCKPT2" + struct.pack("<Q", STEP)
+    sections = [("params", tensor_list(TENSORS))] + [
+        (n, payload) for n, payload in SECTIONS
+    ]
+    out += struct.pack("<I", len(sections))
+    for n, payload in sections:
+        out += name(n)
+        out += struct.pack("<Q", len(payload))
+        out += payload
+    return out
+
+
+def main():
+    for fname, data in [("morckpt1_fixture.bin", v1()), ("morckpt2_fixture.bin", v2())]:
+        path = HERE / fname
+        path.write_bytes(data)
+        print(f"wrote {path} ({len(data)} bytes)")
+    # Self-check: the f32 payload really is LE (1.0f32 == 00 00 80 3f).
+    assert b"\x00\x00\x80\x3f\x00\x00\x00\xc0" in v1()
+    print("fixture self-check ok")
+
+
+if __name__ == "__main__":
+    main()

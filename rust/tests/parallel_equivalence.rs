@@ -8,8 +8,10 @@
 //! threads; 2 is the minimal stealing case). Also pins
 //! `Histogram::bin_of` to the paper's 0.5%-wide bin edges.
 
+use mor::coordinator::checkpoint::Checkpoint;
+use mor::coordinator::trainer::{TrainOutcome, Trainer, TrainerOptions};
 use mor::formats::ReprType;
-use mor::model::config::ModelConfig;
+use mor::model::config::{ModelConfig, TrainConfig};
 use mor::mor::recipes::{Recipe, RecipeKind, SubTensorMode};
 use mor::mor::stats::{Histogram, HIST_BINS};
 use mor::quant::fake_quant::fake_quantize_with;
@@ -343,6 +345,193 @@ fn host_train_step_parallel_equals_serial_bitwise() {
         assert_bits_eq(&serial.1, &parallel.1, "relerr slots");
         assert_bits_eq(&serial.2, &parallel.2, "fallback slots");
     }
+}
+
+/// The resume ≡ continuous contract: training N steps, checkpointing,
+/// restarting the whole process path (fresh runtime, trainer, session,
+/// loaders) and training M more steps is **bitwise identical** to one
+/// uninterrupted N+M-step run — params, metrics rows (minus the
+/// wall-clock step_ms column), MoR decision fractions and heatmaps,
+/// eval-suite trajectory, data cursors, RNG streams and amax
+/// histories. Verified at the in-test thread counts 2/3/13 plus
+/// whatever `MOR_THREADS` the CI determinism matrix selects (1/2/4/13
+/// via `Parallelism::auto`).
+#[test]
+fn resume_equals_continuous_bitwise() {
+    const SPLIT: u64 = 3;
+    const TOTAL: u64 = 6;
+    const ARTIFACT: &str = "train_mor_tensor_block";
+
+    let base = std::env::temp_dir().join(format!("mor_resume_{}", std::process::id()));
+    let mk_opts = |steps: u64, out: std::path::PathBuf, par: Parallelism| {
+        let mut o = TrainerOptions::new(ARTIFACT, steps, out);
+        o.val_every = 2;
+        o.suite_every = 3;
+        o.ckpt_every = SPLIT;
+        o.stats_window = 2;
+        o.quiet = true;
+        o.parallelism = Some(par);
+        o
+    };
+    // Each leg builds its own runtime + trainer + session from scratch:
+    // the only shared state is what the checkpoint file carries.
+    let run = |steps: u64,
+               out: std::path::PathBuf,
+               par: Parallelism,
+               resume: Option<std::path::PathBuf>|
+     -> TrainOutcome {
+        let rt = Runtime::host(ModelConfig::TINY);
+        let trainer = Trainer::new(&rt, TrainConfig::config1(TOTAL));
+        let mut opts = mk_opts(steps, out, par);
+        opts.resume = resume;
+        trainer.run(&opts).unwrap()
+    };
+
+    let mut cases: Vec<(String, Parallelism)> =
+        [2usize, 3, 13].iter().map(|t| (format!("t{t}"), pool(*t))).collect();
+    // Honor the CI matrix: MOR_THREADS drives auto() in every cell.
+    cases.push(("auto".into(), Parallelism::auto()));
+
+    for (tag, par) in cases {
+        let cont_dir = base.join(format!("{tag}_cont"));
+        let split_dir = base.join(format!("{tag}_split"));
+
+        // The continuous run checkpoints mid-run at step 3 — exactly
+        // what a kill-and-restart would resume from.
+        let cont = run(TOTAL, cont_dir.clone(), par.clone(), None);
+        let ckpt = cont_dir.join(format!("{ARTIFACT}.step{SPLIT}.ckpt"));
+        assert!(ckpt.exists(), "[{tag}] mid-run checkpoint missing");
+        // Restart the whole process path from it, into a fresh out dir,
+        // with the same total step count.
+        let res = run(TOTAL, split_dir.clone(), par.clone(), Some(ckpt));
+
+        // Outcome parity: every record field except wall-clock step_ms.
+        assert_eq!(res.records.len(), cont.records.len(), "[{tag}] record count");
+        for (a, b) in cont.records.iter().zip(res.records.iter()) {
+            assert_eq!(a.step, b.step, "[{tag}] step");
+            assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "[{tag}] lr @{}", a.step);
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "[{tag}] train_loss @{}",
+                a.step
+            );
+            assert_eq!(
+                a.val_loss.to_bits(),
+                b.val_loss.to_bits(),
+                "[{tag}] val_loss @{}",
+                a.step
+            );
+            assert_eq!(
+                a.param_norm.to_bits(),
+                b.param_norm.to_bits(),
+                "[{tag}] param_norm @{}",
+                a.step
+            );
+            assert_eq!(
+                a.bf16_fallback_rate.to_bits(),
+                b.bf16_fallback_rate.to_bits(),
+                "[{tag}] fallback @{}",
+                a.step
+            );
+            assert_eq!(
+                a.mean_relerr.to_bits(),
+                b.mean_relerr.to_bits(),
+                "[{tag}] relerr @{}",
+                a.step
+            );
+        }
+        assert_eq!(
+            cont.final_train_loss.to_bits(),
+            res.final_train_loss.to_bits(),
+            "[{tag}] final train loss"
+        );
+        assert_eq!(
+            cont.final_val_loss.to_bits(),
+            res.final_val_loss.to_bits(),
+            "[{tag}] final val loss"
+        );
+
+        // metrics.csv parity: byte-identical rows minus the trailing
+        // step_ms column (wall-clock time is timing, not state).
+        let strip = |path: &std::path::Path| -> Vec<String> {
+            std::fs::read_to_string(path)
+                .unwrap()
+                .lines()
+                .map(|l| l.rsplit_once(',').unwrap().0.to_string())
+                .collect()
+        };
+        let csv = format!("{ARTIFACT}.config1.csv");
+        assert_eq!(
+            strip(&cont_dir.join(&csv)),
+            strip(&split_dir.join(&csv)),
+            "[{tag}] metrics.csv rows diverged"
+        );
+
+        // MoR decision fractions + full heatmaps.
+        assert_eq!(
+            cont.stats.overall_fallback_pct().to_bits(),
+            res.stats.overall_fallback_pct().to_bits(),
+            "[{tag}] fallback pct"
+        );
+        assert_eq!(
+            cont.stats.heatmap_csv(),
+            res.stats.heatmap_csv(),
+            "[{tag}] stats heatmap"
+        );
+
+        // Eval-suite trajectory.
+        assert_eq!(cont.suite_history.len(), res.suite_history.len(), "[{tag}] suite len");
+        for ((sa, a), (sb, b)) in cont.suite_history.iter().zip(res.suite_history.iter()) {
+            assert_eq!(sa, sb, "[{tag}] suite step");
+            assert_eq!(a.per_task.len(), b.per_task.len());
+            for ((na, la, aa), (nb, lb, ab)) in a.per_task.iter().zip(b.per_task.iter()) {
+                assert_eq!(na, nb);
+                assert_eq!(la.to_bits(), lb.to_bits(), "[{tag}] suite loss {na}");
+                assert_eq!(aa.to_bits(), ab.to_bits(), "[{tag}] suite acc {na}");
+            }
+        }
+
+        // Strongest check: the final step-6 checkpoints agree section
+        // by section — params bitwise, and every state section
+        // (optimizer moments, data cursors, RNG streams, amax
+        // histories, stats, suite, meta, telemetry) byte-identical.
+        // Only metrics/records may differ, in its step_ms bits.
+        let ca = Checkpoint::load(&cont_dir.join(format!("{ARTIFACT}.step{TOTAL}.ckpt")))
+            .unwrap();
+        let cb = Checkpoint::load(&split_dir.join(format!("{ARTIFACT}.step{TOTAL}.ckpt")))
+            .unwrap();
+        assert_eq!(ca.step, cb.step, "[{tag}] final ckpt step");
+        assert_eq!(ca.tensors.len(), cb.tensors.len());
+        for ((na, ta), (nb, tb)) in ca.tensors.iter().zip(cb.tensors.iter()) {
+            assert_eq!(na, nb);
+            assert_bits_eq(ta.data(), tb.data(), &format!("[{tag}] param {na}"));
+        }
+        assert_eq!(ca.sections.len(), cb.sections.len());
+        for ((na, pa), (nb, pb)) in ca.sections.iter().zip(cb.sections.iter()) {
+            assert_eq!(na, nb, "[{tag}] section order");
+            if na == "metrics/records" {
+                continue; // carries wall-clock step_ms bits
+            }
+            assert_eq!(pa, pb, "[{tag}] section {na} diverged");
+        }
+    }
+
+    // A resume with mismatched pinned numerics options must be
+    // rejected loudly, not silently diverge: wrong total steps (the
+    // classic remaining-count mistake changes the LR schedule) and a
+    // wrong threshold both error.
+    let ckpt = base.join("auto_cont").join(format!("{ARTIFACT}.step{SPLIT}.ckpt"));
+    let rt = Runtime::host(ModelConfig::TINY);
+    let trainer = Trainer::new(&rt, TrainConfig::config1(TOTAL));
+    let mut bad = mk_opts(TOTAL + 2, base.join("bad"), Parallelism::auto());
+    bad.resume = Some(ckpt.clone());
+    assert!(trainer.run(&bad).is_err(), "steps mismatch must be rejected");
+    let mut bad = mk_opts(TOTAL, base.join("bad"), Parallelism::auto());
+    bad.threshold = 0.05;
+    bad.resume = Some(ckpt);
+    assert!(trainer.run(&bad).is_err(), "threshold mismatch must be rejected");
+    std::fs::remove_dir_all(base).ok();
 }
 
 /// The paper's histogram: 0.5%-wide bins, first bin `< 0.5%`, last bin

@@ -50,13 +50,126 @@ fn trainer_runs_end_to_end_on_host_backend() {
         "relerr telemetry never populated"
     );
 
-    // Checkpoint written at step 4 and loadable with the right arity.
+    // Checkpoint written after 4 completed steps and loadable with the
+    // right arity; it is a full MORCKPT2 training checkpoint (state
+    // sections present), and the final step checkpoints too.
     let ckpt_path = out_dir.join("train_mor_tensor_block.step4.ckpt");
     assert!(ckpt_path.exists(), "checkpoint not written");
     let ck = Checkpoint::load(&ckpt_path).unwrap();
     assert_eq!(ck.step, 4);
     assert_eq!(ck.tensors.len(), param_specs(&ModelConfig::TINY).len());
+    for sect in ["opt/m", "opt/v", "data/train", "data/val", "rng/streams", "mor/stats"] {
+        assert!(ck.section(sect).is_some(), "missing checkpoint section {sect}");
+    }
+    assert!(out_dir.join("train_mor_tensor_block.step6.ckpt").exists());
     std::fs::remove_dir_all(out_dir).ok();
+}
+
+/// One line per step: `step,train_loss_bits,fallback_bits,relerr_bits`
+/// (f32 bit patterns in hex — the bitwise trajectory).
+fn run_trajectory() -> Vec<String> {
+    let rt = Runtime::host(ModelConfig::TINY);
+    let out_dir = tmpdir("golden_traj");
+    let trainer = Trainer::new(&rt, TrainConfig::config1(6));
+    let mut opts = TrainerOptions::new("train_mor_tensor_block", 6, out_dir.clone());
+    opts.val_every = 0; // loss + repr-type fractions only: minimal golden
+    opts.suite_every = 0;
+    opts.quiet = true;
+    opts.parallelism = Some(Parallelism::auto());
+    let outcome = trainer.run(&opts).unwrap();
+    std::fs::remove_dir_all(out_dir).ok();
+    outcome
+        .records
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{:08x},{:08x},{:08x}",
+                r.step,
+                r.train_loss.to_bits(),
+                r.bf16_fallback_rate.to_bits(),
+                r.mean_relerr.to_bits()
+            )
+        })
+        .collect()
+}
+
+/// The strict cross-checkout golden pin is scoped to the platform CI
+/// runs on: the trajectory passes through libm transcendentals
+/// (exp/ln in the loss softmax, powf in Adam bias correction), whose
+/// last-ulp results can differ across libms/architectures. Elsewhere
+/// the run-twice determinism check still applies, without the
+/// bit-pattern comparison against a Linux-generated file.
+const GOLDEN_PINNED_PLATFORM: bool = cfg!(all(target_os = "linux", target_arch = "x86_64"));
+
+/// Golden-trajectory regression: the committed host-backend trajectory
+/// (loss + repr-type fractions for the trainer_smoke config) must be
+/// reproduced **exactly** — future PRs cannot silently change the
+/// numerics. Because the parallel ≡ serial contract is bitwise, the
+/// same golden holds at every `MOR_THREADS` the CI matrix pins.
+///
+/// Bootstrap: if the golden file does not exist yet (fresh clone of a
+/// branch that predates it, or regeneration after an *intentional*
+/// numerics change — delete the file), the test verifies the
+/// trajectory is self-reproducible, writes the file, and passes;
+/// commit the generated file to pin it.
+#[test]
+fn golden_trajectory_reproduced_exactly() {
+    let lines = run_trajectory();
+    assert_eq!(lines.len(), 6);
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/trainer_smoke_trajectory.csv");
+    if !GOLDEN_PINNED_PLATFORM {
+        // Off the pinned platform: prove run-to-run determinism only.
+        let again = run_trajectory();
+        assert_eq!(lines, again, "trajectory not deterministic across fresh runs");
+        eprintln!("golden pin skipped (not the pinned linux/x86_64 platform)");
+        return;
+    }
+    match std::fs::read_to_string(&path) {
+        Ok(text) => {
+            let want: Vec<&str> =
+                text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()).collect();
+            assert_eq!(
+                want.len(),
+                lines.len(),
+                "golden {} has {} rows, trajectory has {}",
+                path.display(),
+                want.len(),
+                lines.len()
+            );
+            for (i, (got, want)) in lines.iter().zip(want.iter()).enumerate() {
+                assert_eq!(
+                    got, want,
+                    "trajectory diverged from {} at step {i} \
+                     (numerics changed — if intentional, delete the golden and re-run)",
+                    path.display()
+                );
+            }
+        }
+        Err(_) => {
+            // No committed golden yet: prove determinism (two fresh
+            // end-to-end runs agree bitwise), then bootstrap the file.
+            let again = run_trajectory();
+            assert_eq!(lines, again, "trajectory not deterministic across fresh runs");
+            let mut text = String::from(
+                "# step,train_loss_bits,bf16_fallback_rate_bits,mean_relerr_bits (f32 hex)\n\
+                 # trainer_smoke config: TINY / train_mor_tensor_block / config1(6), 6 steps\n\
+                 # Pinned platform: linux/x86_64 (libm last-ulp sensitivity); other\n\
+                 # platforms run the determinism check only.\n\
+                 # Bootstrapped by golden_trajectory_reproduced_exactly — commit this file.\n",
+            );
+            for l in &lines {
+                text.push_str(l);
+                text.push('\n');
+            }
+            // Best-effort: a read-only checkout still gets the
+            // run-twice determinism check above.
+            match std::fs::write(&path, text) {
+                Ok(()) => eprintln!("bootstrapped golden trajectory at {}", path.display()),
+                Err(e) => eprintln!("could not write golden trajectory: {e}"),
+            }
+        }
+    }
 }
 
 #[test]
