@@ -1,20 +1,25 @@
 //! Host GEMM benches: the plain f32 GEMM vs the Fig. 3 mixed-type
 //! blocked GEMM (which also models the fp8-vs-upcast MAC accounting),
 //! serial vs spawn vs the shared-queue pool vs the deque/steal
-//! scheduler over output-row panels.
+//! scheduler over output-row panels, plus the kernel-layer rows —
+//! **naive triple loop vs packed register-tiled microkernel** for
+//! every variant, and **fused quantize-on-pack vs quantize-then-pack**
+//! for the MoR linear-operand path.
 //!
 //! `--json <path>` merges the rows into the machine-readable perf
-//! snapshot (`BENCH_3.json`); `--warmup-ms/--measure-ms/--min-batches`
+//! snapshot (`BENCH_5.json`); `--warmup-ms/--measure-ms/--min-batches`
 //! shrink the budgets for CI.
 
 use mor::formats::ReprType;
+use mor::kernels::gemm::pack_b;
+use mor::runtime::host::{mor_quantize, mor_quantize_packed, HostQuant};
 use mor::tensor::ops::{
     matmul_nt_with, matmul_tn_with, matmul_with, mixed_gemm_with, BlockTypes,
 };
 use mor::tensor::Tensor;
 use mor::util::bench::{bench, report_throughput, BenchOptions, JsonSnapshot};
 use mor::util::cli::Args;
-use mor::util::par::{engine_comparison_rows, Parallelism};
+use mor::util::par::{engine_comparison_rows, kernel_comparison_rows, Parallelism};
 use std::hint::black_box;
 
 fn main() {
@@ -31,6 +36,62 @@ fn main() {
     let mut tb = BlockTypes::uniform(N, N, 32, ReprType::E4M3);
     tb.grid[0][0] = ReprType::Bf16;
     tb.grid[1][1] = ReprType::E5M2;
+
+    // Kernel-layer rows at the default engine/thread configuration:
+    // the scalar oracle (naive loops) vs the packed blocked kernels,
+    // per GEMM variant — the headline naive-vs-blocked comparison.
+    for (label, cfg) in kernel_comparison_rows() {
+        let mut rows: Vec<(String, mor::util::bench::BenchResult)> = Vec::new();
+        let r = bench(&format!("matmul_{N}_kernel_{label}"), &opts, || {
+            black_box(matmul_with(black_box(&a), black_box(&b), &cfg));
+        });
+        rows.push((format!("matmul_kernel_{label}"), r));
+        let r = bench(&format!("matmul_tn_{N}_kernel_{label}"), &opts, || {
+            black_box(matmul_tn_with(black_box(&at), black_box(&b), &cfg));
+        });
+        rows.push((format!("matmul_tn_kernel_{label}"), r));
+        let r = bench(&format!("matmul_nt_{N}_kernel_{label}"), &opts, || {
+            black_box(matmul_nt_with(black_box(&a), black_box(&bt), &cfg));
+        });
+        rows.push((format!("matmul_nt_kernel_{label}"), r));
+        let r = bench(&format!("mixed_gemm_{N}_blk32_kernel_{label}"), &opts, || {
+            black_box(mixed_gemm_with(black_box(&a), &ta, black_box(&b), &tb, &cfg));
+        });
+        rows.push((format!("mixed_gemm_kernel_{label}"), r));
+        for (name, r) in &rows {
+            report_throughput(name, r, flops, "flop");
+            if let Some(s) = &mut snap {
+                s.record(r);
+                s.record_throughput(name, r, flops, "flop");
+            }
+        }
+    }
+
+    // Fused quantize-on-pack vs the unfused materialize-then-pack
+    // sequence for one MoR weight operand (identical pack bits; the
+    // fused row skips the full materialize+re-read pass).
+    {
+        let q = HostQuant::from_fields("subtensor3", "block32x32", "gam").unwrap();
+        let cfg = Parallelism::auto();
+        let r = bench(&format!("quantize_pack_unfused_{N}"), &opts, || {
+            let (qw, re, _) = mor_quantize(&q, black_box(&b), 0.045, 1, &cfg);
+            black_box((pack_b(&qw), re));
+        });
+        report_throughput("quantize_pack_unfused", &r, (N * N) as f64, "elem");
+        if let Some(s) = &mut snap {
+            s.record(&r);
+            s.record_throughput("quantize_pack_unfused", &r, (N * N) as f64, "elem");
+        }
+        let r = bench(&format!("quantize_pack_fused_{N}"), &opts, || {
+            let (pw, re, _) = mor_quantize_packed(&q, black_box(&b), 0.045, 1, &cfg);
+            black_box((pw, re));
+        });
+        report_throughput("quantize_pack_fused", &r, (N * N) as f64, "elem");
+        if let Some(s) = &mut snap {
+            s.record(&r);
+            s.record_throughput("quantize_pack_fused", &r, (N * N) as f64, "elem");
+        }
+    }
 
     for (label, cfg) in engine_comparison_rows() {
         let mut rows: Vec<(String, mor::util::bench::BenchResult)> = Vec::new();

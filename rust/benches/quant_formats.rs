@@ -1,25 +1,27 @@
 //! Codec throughput: fp8/bf16/fp4 encode-decode and the fake-quant
-//! pipeline per element, plus the serial vs spawn vs pool vs steal
+//! pipeline per element, the **scalar codec vs table-driven LUT QDQ**
+//! kernel comparison, plus the serial vs spawn vs pool vs steal
 //! comparison of the full fake-quant pipeline on the chunked engine.
 //! The L3-side perf floor for any host-side quantization work (paper
 //! Section 2 claims "negligible overhead" for GAM metadata; this bench
 //! quantifies the compute side).
 //!
 //! `--json <path>` merges the rows into the machine-readable perf
-//! snapshot (`BENCH_3.json`); `--warmup-ms/--measure-ms/--min-batches`
+//! snapshot (`BENCH_5.json`); `--warmup-ms/--measure-ms/--min-batches`
 //! shrink the budgets for CI.
 
 use mor::formats::bf16;
 use mor::formats::fp4;
 use mor::formats::fp8::{Fp8Format, Rounding, E4M3, E5M2};
 use mor::formats::ReprType;
+use mor::kernels::qdq::QdqTables;
 use mor::quant::fake_quant::fake_quantize_with;
 use mor::quant::partition::Partition;
 use mor::scaling::ScalingAlgo;
 use mor::tensor::Tensor;
 use mor::util::bench::{bench, report_throughput, BenchOptions, JsonSnapshot};
 use mor::util::cli::Args;
-use mor::util::par::{engine_comparison_rows, Parallelism};
+use mor::util::par::{engine_comparison_rows, kernel_comparison_rows, Parallelism};
 use std::hint::black_box;
 
 fn main() {
@@ -53,6 +55,37 @@ fn main() {
     if let Some(s) = &mut snap {
         s.record(&r);
         s.record_throughput("e5m2_encode_decode", &r, 4096.0, "elem");
+    }
+
+    // Table-driven LUT QDQ vs the scalar codec rows above — the
+    // kernel-layer speedup at the single-element level (bit-identical
+    // values by the parity tests; only the wall clock differs).
+    let e4 = QdqTables::e4m3();
+    let r = bench("e4m3_qdq_lut_4k", &opts, || {
+        let mut acc = 0f32;
+        for x in &xs {
+            acc += e4.qdq_sat(*x);
+        }
+        black_box(acc);
+    });
+    report_throughput("e4m3_qdq_lut", &r, 4096.0, "elem");
+    if let Some(s) = &mut snap {
+        s.record(&r);
+        s.record_throughput("e4m3_qdq_lut", &r, 4096.0, "elem");
+    }
+
+    let e5 = QdqTables::e5m2();
+    let r = bench("e5m2_qdq_lut_4k", &opts, || {
+        let mut acc = 0f32;
+        for x in &xs {
+            acc += e5.qdq_sat(*x);
+        }
+        black_box(acc);
+    });
+    report_throughput("e5m2_qdq_lut", &r, 4096.0, "elem");
+    if let Some(s) = &mut snap {
+        s.record(&r);
+        s.record_throughput("e5m2_qdq_lut", &r, 4096.0, "elem");
     }
 
     let r = bench("bf16_roundtrip_4k", &opts, || {
@@ -110,6 +143,26 @@ fn main() {
                 s.record(&r);
                 s.record_throughput(&format!("fake_quant_{pname}_{label}"), &r, elems, "elem");
             }
+        }
+    }
+    // Kernel-engine rows: the whole fake-quant pipeline under the
+    // scalar oracle vs the LUT/slice kernel layer at the default
+    // engine+thread configuration.
+    for (label, cfg) in kernel_comparison_rows() {
+        let r = bench(&format!("fake_quant_e4m3_gam_block128_512x512_qdq_{label}"), &opts, || {
+            let fq = fake_quantize_with(
+                black_box(&x),
+                ReprType::E4M3,
+                Partition::BLOCK128,
+                ScalingAlgo::Gam,
+                &cfg,
+            );
+            black_box(fq.global_err.mean());
+        });
+        report_throughput(&format!("fake_quant_qdq_{label}"), &r, elems, "elem");
+        if let Some(s) = &mut snap {
+            s.record(&r);
+            s.record_throughput(&format!("fake_quant_qdq_{label}"), &r, elems, "elem");
         }
     }
     println!(

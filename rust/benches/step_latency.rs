@@ -13,8 +13,14 @@
 //!   compiled-step latency per recipe variant, the standalone quant
 //!   kernel, and the eval step.
 //!
+//! The `host_*_step_kernels_{scalar,kernel}` row pair is the kernel
+//! layer's headline comparison: the same full train step under the
+//! scalar oracle (per-element QDQ + naive GEMM loops) vs the
+//! table-driven LUT QDQ + packed blocked GEMM + fused quantize-on-pack
+//! engine — bit-identical outputs, only wall clock differs.
+//!
 //! `--json <path>` merges the rows into the machine-readable perf
-//! snapshot (`BENCH_3.json`); `--warmup-ms/--measure-ms/--min-batches`
+//! snapshot (`BENCH_5.json`); `--warmup-ms/--measure-ms/--min-batches`
 //! shrink the budgets for CI.
 
 use mor::data::loader::BatchLoader;
@@ -27,7 +33,7 @@ use mor::scaling::ScalingAlgo;
 use mor::tensor::Tensor;
 use mor::util::bench::{bench, report_throughput, BenchOptions, JsonSnapshot};
 use mor::util::cli::Args;
-use mor::util::par::{engine_comparison_rows, Parallelism};
+use mor::util::par::{engine_comparison_rows, kernel_comparison_rows, Parallelism};
 use std::hint::black_box;
 use std::path::Path;
 use std::time::Duration;
@@ -68,6 +74,47 @@ fn host_backend_section(opts: &BenchOptions, snap: &mut Option<JsonSnapshot>) {
             }
         }
     }
+    // Kernel-engine rows on the default (steal) scheduler: the scalar
+    // oracle vs the LUT QDQ + packed-GEMM + fused-pack layer, per
+    // artifact — the `step_latency` acceptance pair for the kernel
+    // rewrite (same step, same bits, different kernels).
+    println!("== host backend kernel rows (scalar oracle vs blocked kernel layer) ==");
+    for artifact in ["train_baseline", "train_mor_tensor_block", "train_mor_subtensor_two_way"] {
+        for (label, cfg) in kernel_comparison_rows() {
+            let mut session =
+                rt.train_session_with(artifact, 1, cfg.clone()).expect("host session");
+            let loader = BatchLoader::new(
+                CorpusProfile::Nemotron4Like,
+                256,
+                session.batch,
+                session.seq,
+                1,
+                0,
+            );
+            let batch = loader.next_batch();
+            let tokens_per_step = (session.batch * session.seq) as f64;
+            let r = bench(&format!("host_{artifact}_step_kernels_{label}"), opts, || {
+                let out = session.step(black_box(&batch.tokens), 1e-3, 0.045).unwrap();
+                black_box(out.loss);
+            });
+            report_throughput(
+                &format!("host_{artifact}_kernels_{label}"),
+                &r,
+                tokens_per_step,
+                "tok",
+            );
+            if let Some(s) = snap {
+                s.record(&r);
+                s.record_throughput(
+                    &format!("host_{artifact}_kernels_{label}"),
+                    &r,
+                    tokens_per_step,
+                    "tok",
+                );
+            }
+        }
+    }
+
     // Standalone host quant kernel across the same engine rows. The
     // 256x256 input sits near the --par-min-block cutoff, which is
     // where the pooled engines' saved fixed overhead is most visible.

@@ -27,11 +27,13 @@
 //! positions (`data/train`, `data/val`), raw `util::rng` stream states
 //! (`rng/streams`), delayed-scaling amax histories
 //! (`scaling/amax_hist`), the `mor::stats` collector (`mor/stats`),
-//! the metrics rows logged so far (`metrics/records`), the eval-suite
-//! trajectory (`eval/suite`), run identity (`meta`), and extensible
-//! named telemetry counters (`telemetry/counters`). Unknown sections
-//! are preserved on load, so older readers skip newer state instead of
-//! failing.
+//! the metrics rows logged so far (`metrics/records` — either the
+//! embedded history, or the O(1) row-count + FNV-1a content digest of
+//! the on-disk `metrics.csv` prefix that replaces it for long runs;
+//! see [`MetricsState`]), the eval-suite trajectory (`eval/suite`),
+//! run identity (`meta`), and extensible named telemetry counters
+//! (`telemetry/counters`). Unknown sections are preserved on load, so
+//! older readers skip newer state instead of failing.
 //!
 //! Every read is bounded: lengths are validated against the remaining
 //! buffer **before** any allocation, name/dims counts have hard caps,
@@ -575,25 +577,92 @@ fn read_stats(rd: &mut Rd) -> Result<StatsCollector> {
     Ok(StatsCollector::restore(reset_every, step, windows, totals))
 }
 
-/// `metrics/records` payload: the exact `StepRecord`s logged so far
-/// (f32 bit patterns preserved, so re-logging them reproduces the
-/// continuous run's CSV text byte-for-byte).
-fn put_records(out: &mut Vec<u8>, records: &[StepRecord]) {
-    put_u32(out, records.len() as u32);
-    for r in records {
-        put_u64(out, r.step);
-        put_f32(out, r.lr);
-        put_f32(out, r.train_loss);
-        put_f32(out, r.val_loss);
-        put_f32(out, r.param_norm);
-        put_f32(out, r.bf16_fallback_rate);
-        put_f32(out, r.mean_relerr);
-        put_f32(out, r.step_ms);
+/// How a checkpoint carries the metrics rows logged so far.
+///
+/// `Embedded` is the original scheme: the exact `StepRecord`s (f32 bit
+/// patterns preserved, so re-logging them reproduces the continuous
+/// run's CSV text byte-for-byte). Its cost grows with the step count —
+/// O(steps²/ckpt_every) bytes written over a long run.
+///
+/// `Digest` is the O(1) replacement: a row count plus the FNV-1a 64
+/// hash of the CSV data lines
+/// ([`crate::coordinator::logging::csv_lines_digest`]). On resume the
+/// trainer replays the prefix from the original run's on-disk
+/// `metrics.csv` — verified against the digest before anything is
+/// trusted — which is lossless because [`StepRecord::csv_line`] uses
+/// shortest-round-trip float formatting.
+#[derive(Debug, Clone)]
+pub enum MetricsState {
+    /// Full history embedded in the checkpoint (legacy mode; every
+    /// MORCKPT2 written before the digest existed decodes to this).
+    Embedded(Vec<StepRecord>),
+    /// Row count + content hash of the on-disk metrics CSV prefix.
+    Digest { rows: u64, hash: u64 },
+}
+
+impl MetricsState {
+    /// The embedded rows, if this is the legacy representation.
+    pub fn embedded(&self) -> Option<&[StepRecord]> {
+        match self {
+            MetricsState::Embedded(r) => Some(r),
+            MetricsState::Digest { .. } => None,
+        }
+    }
+
+    /// Number of metrics rows the checkpoint accounts for.
+    pub fn rows(&self) -> u64 {
+        match self {
+            MetricsState::Embedded(r) => r.len() as u64,
+            MetricsState::Digest { rows, .. } => *rows,
+        }
     }
 }
 
-fn read_records(rd: &mut Rd) -> Result<Vec<StepRecord>> {
-    let n = rd.u32("record count")? as usize;
+/// Digest-payload marker: a leading record count of `u32::MAX` cannot
+/// occur in a legacy embedded payload (the capacity check below rejects
+/// any count the file cannot hold), so the same `metrics/records`
+/// section name stays readable across both representations.
+const METRICS_DIGEST_SENTINEL: u32 = u32::MAX;
+/// Digest payload version (after the sentinel).
+const METRICS_DIGEST_V1: u8 = 1;
+
+/// `metrics/records` payload, either representation.
+fn put_metrics(out: &mut Vec<u8>, metrics: &MetricsState) {
+    match metrics {
+        MetricsState::Embedded(records) => {
+            put_u32(out, records.len() as u32);
+            for r in records {
+                put_u64(out, r.step);
+                put_f32(out, r.lr);
+                put_f32(out, r.train_loss);
+                put_f32(out, r.val_loss);
+                put_f32(out, r.param_norm);
+                put_f32(out, r.bf16_fallback_rate);
+                put_f32(out, r.mean_relerr);
+                put_f32(out, r.step_ms);
+            }
+        }
+        MetricsState::Digest { rows, hash } => {
+            put_u32(out, METRICS_DIGEST_SENTINEL);
+            put_u8(out, METRICS_DIGEST_V1);
+            put_u64(out, *rows);
+            put_u64(out, *hash);
+        }
+    }
+}
+
+fn read_metrics(rd: &mut Rd) -> Result<MetricsState> {
+    let n = rd.u32("record count")?;
+    if n == METRICS_DIGEST_SENTINEL {
+        let version = rd.u8("metrics digest version")?;
+        if version != METRICS_DIGEST_V1 {
+            bail!("checkpoint corrupt: unknown metrics digest version {version}");
+        }
+        let rows = rd.u64("metrics digest rows")?;
+        let hash = rd.u64("metrics digest hash")?;
+        return Ok(MetricsState::Digest { rows, hash });
+    }
+    let n = n as usize;
     if n > rd.remaining() / 36 + 1 {
         bail!("checkpoint corrupt: record count {n} exceeds file capacity");
     }
@@ -611,7 +680,7 @@ fn read_records(rd: &mut Rd) -> Result<Vec<StepRecord>> {
             step_ms: rd.f32(&what)?,
         });
     }
-    Ok(out)
+    Ok(MetricsState::Embedded(out))
 }
 
 /// `eval/suite` payload: the (step, per-task scores) trajectory.
@@ -708,7 +777,9 @@ pub struct TrainCheckpoint {
     /// streams; extensible).
     pub rng_streams: Vec<(String, u64)>,
     pub stats: StatsCollector,
-    pub records: Vec<StepRecord>,
+    /// Metrics rows logged so far: embedded history (legacy) or an
+    /// O(1) row-count + content-hash digest of the on-disk CSV prefix.
+    pub metrics: MetricsState,
     pub suite_history: Vec<(u64, EvalScores)>,
     /// Extensible named telemetry counters.
     pub counters: Vec<(String, u64)>,
@@ -760,7 +831,7 @@ impl TrainCheckpoint {
         ck.push_section(section::STATS, buf);
 
         let mut buf = Vec::new();
-        put_records(&mut buf, &self.records);
+        put_metrics(&mut buf, &self.metrics);
         ck.push_section(section::METRICS, buf);
 
         let mut buf = Vec::new();
@@ -834,7 +905,7 @@ impl TrainCheckpoint {
         rd.expect_done("stats section")?;
 
         let mut rd = sect(ck, section::METRICS)?;
-        let records = read_records(&mut rd)?;
+        let metrics = read_metrics(&mut rd)?;
         rd.expect_done("metrics section")?;
 
         let mut rd = sect(ck, section::SUITE)?;
@@ -856,7 +927,7 @@ impl TrainCheckpoint {
             val_cursor,
             rng_streams,
             stats,
-            records,
+            metrics,
             suite_history,
             counters,
         })
@@ -976,7 +1047,7 @@ mod tests {
                 (section::DATA_VAL.into(), 0xBEEF),
             ],
             stats,
-            records: vec![StepRecord {
+            metrics: MetricsState::Embedded(vec![StepRecord {
                 step: 4,
                 lr: 3e-4,
                 train_loss: 2.75,
@@ -985,7 +1056,7 @@ mod tests {
                 bf16_fallback_rate: 0.25,
                 mean_relerr: 0.01,
                 step_ms: 12.5,
-            }],
+            }]),
             suite_history: vec![(
                 3,
                 EvalScores { per_task: vec![("copy", 1.5, 40.0), ("cycle", 0.5, 80.0)] },
@@ -1006,13 +1077,54 @@ mod tests {
         assert_eq!(back.val_cursor, tc.val_cursor);
         assert_eq!(back.rng_streams, tc.rng_streams);
         assert_eq!(back.stats.heatmap_csv(), tc.stats.heatmap_csv());
-        assert_eq!(back.records.len(), 1);
-        assert_eq!(back.records[0].train_loss.to_bits(), 2.75f32.to_bits());
-        assert!(back.records[0].val_loss.is_nan(), "NaN bits must survive");
+        let records = back.metrics.embedded().expect("embedded metrics survive");
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].train_loss.to_bits(), 2.75f32.to_bits());
+        assert!(records[0].val_loss.is_nan(), "NaN bits must survive");
+        assert_eq!(back.metrics.rows(), 1);
         assert_eq!(back.suite_history.len(), 1);
         assert_eq!(back.suite_history[0].1.per_task, tc.suite_history[0].1.per_task);
         assert_eq!(back.counter("ckpts_written"), Some(1));
         assert_eq!(back.counter("nope"), None);
+
+        // The digest representation round-trips through the same
+        // section, and cannot be confused with an embedded payload.
+        let mut tc2 = tc.clone();
+        tc2.metrics = MetricsState::Digest { rows: 123_456, hash: 0xDEAD_BEEF_F00D_CAFE };
+        let back2 = TrainCheckpoint::from_container(&tc2.to_container()).unwrap();
+        match back2.metrics {
+            MetricsState::Digest { rows, hash } => {
+                assert_eq!(rows, 123_456);
+                assert_eq!(hash, 0xDEAD_BEEF_F00D_CAFE);
+            }
+            MetricsState::Embedded(_) => panic!("digest decoded as embedded"),
+        }
+        assert_eq!(back2.metrics.rows(), 123_456);
+        assert!(back2.metrics.embedded().is_none());
+    }
+
+    #[test]
+    fn metrics_digest_payload_rejects_malformed() {
+        // Unknown digest version.
+        let mut buf = Vec::new();
+        put_u32(&mut buf, METRICS_DIGEST_SENTINEL);
+        put_u8(&mut buf, 9);
+        put_u64(&mut buf, 1);
+        put_u64(&mut buf, 2);
+        let mut rd = Rd::new(&buf);
+        assert!(read_metrics(&mut rd).is_err(), "unknown version must be rejected");
+        // Truncated digest payload.
+        let mut buf = Vec::new();
+        put_u32(&mut buf, METRICS_DIGEST_SENTINEL);
+        put_u8(&mut buf, METRICS_DIGEST_V1);
+        put_u64(&mut buf, 1);
+        let mut rd = Rd::new(&buf);
+        assert!(read_metrics(&mut rd).is_err(), "truncated digest must be rejected");
+        // An embedded count the payload cannot hold still fails fast.
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 1_000_000);
+        let mut rd = Rd::new(&buf);
+        assert!(read_metrics(&mut rd).is_err(), "oversized count must be rejected");
     }
 
     #[test]

@@ -22,6 +22,70 @@ pub struct StepRecord {
     pub step_ms: f32,
 }
 
+impl StepRecord {
+    /// The record's CSV data line (no trailing newline). Formatting is
+    /// Rust's shortest-round-trip float rendering, so
+    /// `line.parse()` → [`StepRecord`] reproduces every f32 **bit for
+    /// bit** — the property the checkpoint metrics digest relies on to
+    /// replay a resumed run's metrics prefix from the on-disk CSV
+    /// instead of embedding the full history in every checkpoint.
+    pub fn csv_line(&self) -> String {
+        format!(
+            "{},{:e},{},{},{},{},{},{}",
+            self.step,
+            self.lr,
+            self.train_loss,
+            self.val_loss,
+            self.param_norm,
+            self.bf16_fallback_rate,
+            self.mean_relerr,
+            self.step_ms
+        )
+    }
+
+    /// Parse one CSV data line (the inverse of [`StepRecord::csv_line`]
+    /// — bit-exact for lines that function produced). `None` for lines
+    /// with the wrong field count or unparseable fields.
+    pub fn parse_csv_line(line: &str) -> Option<StepRecord> {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 8 {
+            return None;
+        }
+        Some(StepRecord {
+            step: f[0].parse().ok()?,
+            lr: f[1].parse().ok()?,
+            train_loss: f[2].parse().ok()?,
+            val_loss: f[3].parse().ok()?,
+            param_norm: f[4].parse().ok()?,
+            bf16_fallback_rate: f[5].parse().ok()?,
+            mean_relerr: f[6].parse().ok()?,
+            step_ms: f[7].parse().ok()?,
+        })
+    }
+}
+
+/// FNV-1a 64 over the given CSV data lines, each terminated by `\n` —
+/// the checkpoint metrics digest. Computable identically from
+/// in-memory records (`records.iter().map(|r| r.csv_line())`) and from
+/// the on-disk file's lines, which is what lets a resume *verify* the
+/// prefix it replays.
+pub fn csv_lines_digest<I, S>(lines: I) -> u64
+where
+    I: IntoIterator<Item = S>,
+    S: AsRef<str>,
+{
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for line in lines {
+        for b in line.as_ref().as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h ^= b'\n' as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 /// Append-only CSV logger, one file per run.
 pub struct MetricsLogger {
     path: PathBuf,
@@ -43,19 +107,13 @@ impl MetricsLogger {
     }
 
     pub fn log(&mut self, r: &StepRecord) -> Result<()> {
-        let mut line = String::new();
-        let _ = write!(
-            line,
-            "{},{:.6e},{:.6},{:.6},{:.6},{:.6},{:.6},{:.2}",
-            r.step,
-            r.lr,
-            r.train_loss,
-            r.val_loss,
-            r.param_norm,
-            r.bf16_fallback_rate,
-            r.mean_relerr,
-            r.step_ms
-        );
+        writeln!(self.file, "{}", r.csv_line())?;
+        Ok(())
+    }
+
+    /// Append one already-formatted data line verbatim — the resume
+    /// path replays the original run's CSV prefix byte for byte.
+    pub fn log_raw(&mut self, line: &str) -> Result<()> {
         writeln!(self.file, "{line}")?;
         Ok(())
     }
@@ -70,27 +128,11 @@ impl MetricsLogger {
     }
 
     /// Read a metrics CSV back into records (for the report harness).
+    /// Tolerant: malformed lines are skipped (derived-artifact files).
     pub fn read(path: &Path) -> Result<Vec<StepRecord>> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading metrics log {}", path.display()))?;
-        let mut out = Vec::new();
-        for line in text.lines().skip(1) {
-            let f: Vec<&str> = line.split(',').collect();
-            if f.len() != 8 {
-                continue;
-            }
-            out.push(StepRecord {
-                step: f[0].parse().unwrap_or(0),
-                lr: f[1].parse().unwrap_or(0.0),
-                train_loss: f[2].parse().unwrap_or(f32::NAN),
-                val_loss: f[3].parse().unwrap_or(f32::NAN),
-                param_norm: f[4].parse().unwrap_or(f32::NAN),
-                bf16_fallback_rate: f[5].parse().unwrap_or(0.0),
-                mean_relerr: f[6].parse().unwrap_or(0.0),
-                step_ms: f[7].parse().unwrap_or(0.0),
-            });
-        }
-        Ok(out)
+        Ok(text.lines().skip(1).filter_map(StepRecord::parse_csv_line).collect())
     }
 }
 
@@ -185,6 +227,69 @@ mod tests {
         assert!(recs[0].val_loss.is_nan());
         assert_eq!(recs[1].step, 2);
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn csv_line_roundtrips_bit_exact() {
+        let r = StepRecord {
+            step: 7,
+            lr: 2.9999999e-4,
+            train_loss: 2.772_588_7,
+            val_loss: f32::NAN,
+            param_norm: 10.510_203,
+            bf16_fallback_rate: 1.0 / 3.0,
+            mean_relerr: 0.012_345_679,
+            step_ms: 12.34,
+        };
+        let line = r.csv_line();
+        let back = StepRecord::parse_csv_line(&line).unwrap();
+        assert_eq!(back.step, r.step);
+        for (a, b) in [
+            (back.lr, r.lr),
+            (back.train_loss, r.train_loss),
+            (back.val_loss, r.val_loss),
+            (back.param_norm, r.param_norm),
+            (back.bf16_fallback_rate, r.bf16_fallback_rate),
+            (back.mean_relerr, r.mean_relerr),
+            (back.step_ms, r.step_ms),
+        ] {
+            assert_eq!(a.to_bits(), b.to_bits(), "field {a} vs {b} in {line:?}");
+        }
+        // Fuzz: random bit patterns (finite) survive the text round
+        // trip exactly — the shortest-round-trip formatting guarantee.
+        let mut s = 0x5DEE_CE66_D715_1234u64;
+        for _ in 0..20_000 {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            let v = f32::from_bits((s >> 32) as u32);
+            if !v.is_finite() {
+                continue;
+            }
+            let r = StepRecord { train_loss: v, ..Default::default() };
+            let back = StepRecord::parse_csv_line(&r.csv_line()).unwrap();
+            assert_eq!(back.train_loss.to_bits(), v.to_bits(), "{v:e}");
+        }
+        assert!(StepRecord::parse_csv_line("1,2,3").is_none());
+        assert!(StepRecord::parse_csv_line("a,b,c,d,e,f,g,h").is_none());
+    }
+
+    #[test]
+    fn digest_agrees_between_records_and_file_lines() {
+        let recs = vec![
+            StepRecord { step: 0, train_loss: 2.5, ..Default::default() },
+            StepRecord { step: 1, train_loss: 2.25, step_ms: 7.5, ..Default::default() },
+        ];
+        let from_records = csv_lines_digest(recs.iter().map(|r| r.csv_line()));
+        let text: String = recs.iter().map(|r| format!("{}\n", r.csv_line())).collect();
+        let from_lines = csv_lines_digest(text.lines());
+        assert_eq!(from_records, from_lines);
+        // Any bit change shows up.
+        let mut other = recs.clone();
+        other[1].step_ms = 7.5000005;
+        assert_ne!(from_records, csv_lines_digest(other.iter().map(|r| r.csv_line())));
+        // Empty input has a stable non-zero basis.
+        assert_eq!(csv_lines_digest(Vec::<String>::new()), 0xcbf2_9ce4_8422_2325);
     }
 
     #[test]

@@ -10,8 +10,10 @@
 //!
 //! With `ckpt_every > 0` the trainer writes a full `MORCKPT2`
 //! [`TrainCheckpoint`] (params, Adam moments, data-loader cursors, RNG
-//! stream states, delayed-scaling amax histories, stats collector,
-//! metrics rows, suite trajectory) after every k-th completed step.
+//! stream states, delayed-scaling amax histories, stats collector, a
+//! metrics row-count+content-hash digest — or the embedded rows under
+//! `embed_metrics` — and the suite trajectory) after every k-th
+//! completed step.
 //! Restarting with `resume: Some(path)` and the **same total `steps`,
 //! config and artifact** reproduces the uninterrupted run **bitwise**:
 //! identical parameters, identical `metrics.csv` rows (minus the
@@ -31,9 +33,9 @@
 //!   consumes an extra validation batch) can only ever fire on the
 //!   run's true last step — a step no resumable checkpoint precedes.
 
-use super::checkpoint::{section, TrainCheckpoint};
+use super::checkpoint::{section, MetricsState, TrainCheckpoint};
 use super::eval::{eval_suite, EvalScores};
-use super::logging::{MetricsLogger, StepRecord};
+use super::logging::{csv_lines_digest, MetricsLogger, StepRecord};
 use crate::data::loader::BatchLoader;
 use crate::data::synthetic::CorpusProfile;
 use crate::data::tasks::EvalSuite;
@@ -79,6 +81,15 @@ pub struct TrainerOptions {
     /// so a mismatch errors instead of silently breaking the bitwise
     /// resume ≡ continuous contract.
     pub resume: Option<PathBuf>,
+    /// Embed the full metrics history in checkpoints (the legacy
+    /// `metrics/records` representation) instead of the default O(1)
+    /// row-count + content-hash digest. The digest keeps checkpoint
+    /// size flat over long runs — the old embedded mode cost
+    /// O(steps²/ckpt_every) bytes across a run — with the prefix
+    /// replayed from the original run's on-disk metrics.csv at resume
+    /// time, verified against the hash before anything is trusted.
+    /// Both representations load either way.
+    pub embed_metrics: bool,
     /// Per-run engine handle for the quantization/GEMM hot paths
     /// (`None` inherits the runtime's default; see `util::par`). The
     /// handle is owned by this run's sessions, so no run ever mutates
@@ -103,6 +114,7 @@ impl TrainerOptions {
             per_channel: false,
             quiet: false,
             resume: None,
+            embed_metrics: false,
             parallelism: None,
         }
     }
@@ -155,6 +167,18 @@ impl<'rt> Trainer<'rt> {
             Some(path) => Some(self.restore(path, &mut session, opts)?),
             None => None,
         };
+        // Resolve the resumed metrics prefix (bit-exact records + the
+        // raw CSV lines to replay) BEFORE the logger is created: a
+        // digest checkpoint replays from the original run's on-disk
+        // metrics file, and resuming into the same out_dir would
+        // otherwise read the file the logger just truncated.
+        let resumed_metrics: Option<(Vec<StepRecord>, Vec<String>)> =
+            match (&resumed, &opts.resume) {
+                (Some(ck), Some(path)) => {
+                    Some(restore_metrics(ck, path, &opts.artifact, self.train_config.name)?)
+                }
+                _ => None,
+            };
         let (train_loader, val_loader) = match &resumed {
             Some(ck) => (
                 BatchLoader::resume(
@@ -204,14 +228,19 @@ impl<'rt> Trainer<'rt> {
         let (start_step, mut stats, mut suite_history, mut records, mut last_val, mut ckpts) =
             match resumed {
                 Some(ck) => {
-                    // Replay the restored rows so the resumed
+                    // Replay the restored rows verbatim so the resumed
                     // metrics.csv is the continuous file's prefix
-                    // byte-for-byte (same bits → same formatted text).
-                    for r in &ck.records {
-                        logger.log(r)?;
+                    // byte-for-byte (digest checkpoints verified the
+                    // lines against the content hash above; embedded
+                    // checkpoints re-format from the exact bits, which
+                    // produces the identical text).
+                    let (records, lines) =
+                        resumed_metrics.expect("resumed run resolved its metrics prefix");
+                    for line in &lines {
+                        logger.log_raw(line)?;
                     }
                     let ckpts = ck.counter("ckpts_written").unwrap_or(0);
-                    (ck.step, ck.stats, ck.suite_history, ck.records, ck.last_val, ckpts)
+                    (ck.step, ck.stats, ck.suite_history, records, ck.last_val, ckpts)
                 }
                 None => (
                     0,
@@ -468,13 +497,89 @@ impl<'rt> Trainer<'rt> {
             val_cursor,
             rng_streams,
             stats: stats.clone(),
-            records: records.to_vec(),
+            // Digest by default: O(1) per save instead of embedding the
+            // ever-growing row history (the old O(steps²/ckpt_every)
+            // cost); `--embed-metrics` keeps the legacy representation.
+            metrics: if opts.embed_metrics {
+                MetricsState::Embedded(records.to_vec())
+            } else {
+                MetricsState::Digest {
+                    rows: records.len() as u64,
+                    hash: csv_lines_digest(records.iter().map(|r| r.csv_line())),
+                }
+            },
             suite_history: suite_history.to_vec(),
             counters,
         };
         let path = opts.out_dir.join(format!("{}.step{}.ckpt", opts.artifact, ck.step));
         ck.save(&path)?;
         Ok(path)
+    }
+}
+
+/// Resolve the metrics prefix of a resumed run: the bit-exact records
+/// plus the raw CSV lines to replay verbatim into the new metrics file.
+///
+/// Embedded checkpoints carry the records directly (lines re-formatted
+/// from the exact bits). Digest checkpoints replay from the original
+/// run's on-disk `metrics.csv` — located next to the checkpoint, since
+/// both were written to the same out_dir — after verifying the row
+/// count and FNV-1a content hash, so a modified or foreign file fails
+/// loudly instead of silently corrupting the resume≡continuous
+/// contract. The replayed rows parse back bit-exactly because
+/// [`StepRecord::csv_line`] uses shortest-round-trip float formatting.
+fn restore_metrics(
+    ck: &TrainCheckpoint,
+    resume_path: &std::path::Path,
+    artifact: &str,
+    config_name: &str,
+) -> Result<(Vec<StepRecord>, Vec<String>)> {
+    match &ck.metrics {
+        MetricsState::Embedded(records) => {
+            let lines = records.iter().map(|r| r.csv_line()).collect();
+            Ok((records.clone(), lines))
+        }
+        MetricsState::Digest { rows, hash } => {
+            let dir = resume_path.parent().unwrap_or_else(|| std::path::Path::new("."));
+            let csv = dir.join(format!("{artifact}.{config_name}.csv"));
+            let text = std::fs::read_to_string(&csv).with_context(|| {
+                format!(
+                    "checkpoint {} stores a metrics digest; its prefix replays from the \
+                     original run's metrics file {}",
+                    resume_path.display(),
+                    csv.display()
+                )
+            })?;
+            let lines: Vec<String> =
+                text.lines().skip(1).take(*rows as usize).map(str::to_string).collect();
+            if (lines.len() as u64) != *rows {
+                bail!(
+                    "metrics file {} has {} data rows; checkpoint {} covers {}",
+                    csv.display(),
+                    lines.len(),
+                    resume_path.display(),
+                    rows
+                );
+            }
+            let got = csv_lines_digest(lines.iter());
+            if got != *hash {
+                bail!(
+                    "metrics file {} does not match the checkpoint digest (got {got:#018x}, \
+                     want {hash:#018x}); the file was modified or belongs to a different run",
+                    csv.display()
+                );
+            }
+            let mut records = Vec::with_capacity(lines.len());
+            for (i, line) in lines.iter().enumerate() {
+                records.push(StepRecord::parse_csv_line(line).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "metrics file {} row {i} is unparseable: {line:?}",
+                        csv.display()
+                    )
+                })?);
+            }
+            Ok((records, lines))
+        }
     }
 }
 
@@ -503,5 +608,6 @@ mod tests {
         assert_eq!(o.threshold, 0.045);
         assert!(o.val_every > 0);
         assert!(o.resume.is_none());
+        assert!(!o.embed_metrics, "digest mode is the default");
     }
 }

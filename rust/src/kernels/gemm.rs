@@ -1,0 +1,486 @@
+//! Packed, cache-blocked GEMM microkernels for the host backend.
+//!
+//! ## Bit-exactness argument
+//!
+//! The reference loops in `tensor::ops` accumulate every output element
+//! `c[i][j]` as a strictly ascending-`k` chain of `c += a[i][k] *
+//! b[k][j]` f32 operations (with a skip when `a[i][k] == 0.0` in the
+//! `nn`/`tn`/mixed variants, and no skip in `nt`). Floating-point
+//! addition is not associative, so that per-element chain is the
+//! contract. The kernels here change only:
+//!
+//! * **where operands live** — B is packed into contiguous column
+//!   panels of width [`NR`] (a pure copy; for `nt`, a transpose copy),
+//! * **which elements are computed together** — [`MR`] rows × `NR`
+//!   columns of `C` accumulate simultaneously in registers,
+//!
+//! and never the per-element operation sequence: the `k` loop stays
+//! outermost-sequential inside each tile, each register accumulates
+//! `a[i][k] * pack[k][j]` in ascending `k` with the reference's exact
+//! zero-skip, and is stored to `C` once at the end (loads/stores move
+//! bits, not values). Output is therefore bitwise equal to the naive
+//! loops for every shape — pinned by the unit tests below and by
+//! `rust/tests/parallel_equivalence.rs` across thread counts.
+//!
+//! The perf win is memory traffic: the naive loops re-stream all of B
+//! (or B^T) once per output row; the tiled kernels read each packed
+//! panel element once per `MR` rows and keep `MR × NR` accumulators in
+//! registers, with panel-contiguous loads the compiler vectorizes.
+
+use crate::tensor::Tensor;
+
+/// Rows of C per register tile.
+pub const MR: usize = 4;
+/// Columns of C per register tile (= packed panel width).
+pub const NR: usize = 16;
+
+/// One GEMM operand packed into contiguous column panels: panel `p`
+/// holds columns `[p*NR, min((p+1)*NR, n))` of the logical row-major
+/// `[k, n]` matrix B, stored `k`-major within the panel
+/// (`panel[kk * width + c] = B[kk][p*NR + c]`). Full panels have width
+/// `NR`; the ragged last panel is stored tight at its own width.
+pub struct PackedB {
+    /// Contraction length (rows of logical B).
+    pub k: usize,
+    /// Output width (columns of logical B).
+    pub n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// An all-zero pack buffer for `k`×`n` — the fused quantize-on-pack
+    /// writers fill it block by block.
+    pub fn zeroed(k: usize, n: usize) -> PackedB {
+        PackedB { k, n, data: vec![0.0; k * n] }
+    }
+
+    /// Number of column panels.
+    pub fn panels(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
+    /// (flat data offset, width) of panel `p`.
+    #[inline]
+    fn panel_off_width(&self, p: usize) -> (usize, usize) {
+        let j0 = p * NR;
+        (j0 * self.k, NR.min(self.n - j0))
+    }
+
+    /// Panel `p` as a flat `k * width` slice.
+    #[inline]
+    pub fn panel(&self, p: usize) -> &[f32] {
+        let (off, w) = self.panel_off_width(p);
+        &self.data[off..off + self.k * w]
+    }
+
+    /// The whole pack buffer (tests compare fused vs unfused packs).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Copy `vals` — columns `[j0, j0 + vals.len())` of logical row
+    /// `kk` — into the pack buffer, splitting across panels as needed.
+    /// This is the fused quantize-on-pack write primitive: block
+    /// quantizers emit row segments and this routes them to panel
+    /// storage without materializing the row-major tensor first.
+    pub fn write_row_segment(&mut self, kk: usize, j0: usize, vals: &[f32]) {
+        debug_assert!(kk < self.k && j0 + vals.len() <= self.n);
+        let mut j = j0;
+        let mut src = vals;
+        while !src.is_empty() {
+            let p = j / NR;
+            let (off, w) = self.panel_off_width(p);
+            let c = j - p * NR;
+            let take = (w - c).min(src.len());
+            let dst_at = off + kk * w + c;
+            self.data[dst_at..dst_at + take].copy_from_slice(&src[..take]);
+            j += take;
+            src = &src[take..];
+        }
+    }
+}
+
+/// Pack row-major `[k, n]` data into column panels.
+pub fn pack_rows(bd: &[f32], k: usize, n: usize) -> PackedB {
+    debug_assert_eq!(bd.len(), k * n);
+    let mut out = PackedB::zeroed(k, n);
+    for kk in 0..k {
+        out.write_row_segment(kk, 0, &bd[kk * n..kk * n + n]);
+    }
+    out
+}
+
+/// Pack a row-major tensor into column panels (leading dims folded
+/// into rows, like every 2-D view in the GEMM layer).
+pub fn pack_b(b: &Tensor) -> PackedB {
+    let (k, n) = b.as_2d();
+    pack_rows(b.data(), k, n)
+}
+
+/// Pack a row-major `[n, k]` tensor (B^T, the second operand of the
+/// `nt` variant) into column panels of the **logical** `[k, n]` B — a
+/// transpose copy, so the `nt` microkernel reads panel-contiguous
+/// rows exactly like `nn` does.
+pub fn pack_bt(bt: &Tensor) -> PackedB {
+    let (n, k) = (bt.rows(), bt.cols());
+    let mut out = PackedB::zeroed(k, n);
+    let sd = bt.data();
+    for p in 0..out.panels() {
+        let (off, w) = out.panel_off_width(p);
+        let j0 = p * NR;
+        for kk in 0..k {
+            for c in 0..w {
+                out.data[off + kk * w + c] = sd[(j0 + c) * k + kk];
+            }
+        }
+    }
+    out
+}
+
+/// C-panel rows `[r0, r1)` of `C = A @ B` over a packed B. `ad` is the
+/// row-major `[m, k]` A, `cd` the output row-panel slice (row size
+/// `bp.n`, row 0 = global row `r0`). Zero-`a` terms are skipped exactly
+/// like the reference `nn` loop.
+pub fn nn_panel(ad: &[f32], k: usize, bp: &PackedB, cd: &mut [f32], r0: usize, r1: usize) {
+    tile_loop(bp, r0, r1, cd, |kk, i| {
+        let a = ad[i * k + kk];
+        if a == 0.0 {
+            None
+        } else {
+            Some(a)
+        }
+    });
+}
+
+/// C-panel rows of `C = A^T @ B`: `ad` is the row-major `[k, m]` A
+/// whose column `i` is the logical row. Same zero-skip as the
+/// reference `tn` loop.
+pub fn tn_panel(ad: &[f32], m: usize, bp: &PackedB, cd: &mut [f32], r0: usize, r1: usize) {
+    tile_loop(bp, r0, r1, cd, |kk, i| {
+        let a = ad[kk * m + i];
+        if a == 0.0 {
+            None
+        } else {
+            Some(a)
+        }
+    });
+}
+
+/// C-panel rows of `C = A @ B^T` over a [`pack_bt`] pack. The reference
+/// `nt` loop accumulates **without** a zero-skip, so this one must not
+/// skip either (adding `0.0 * b` is observable when `b` is Inf/NaN).
+pub fn nt_panel(ad: &[f32], k: usize, bp: &PackedB, cd: &mut [f32], r0: usize, r1: usize) {
+    tile_loop(bp, r0, r1, cd, |kk, i| Some(ad[i * k + kk]));
+}
+
+/// Shared MR×NR tile driver: `a_at(kk, i)` yields the A factor for
+/// output row `i` at contraction index `kk`, or `None` to skip the term
+/// (the reference loops' zero-skip). Per output element the returned
+/// factors are consumed in strictly ascending `kk`, so the accumulation
+/// chain matches the naive loops bit for bit.
+#[inline]
+fn tile_loop<F>(bp: &PackedB, r0: usize, r1: usize, cd: &mut [f32], a_at: F)
+where
+    F: Fn(usize, usize) -> Option<f32>,
+{
+    let (k, n) = (bp.k, bp.n);
+    for p in 0..bp.panels() {
+        let j0 = p * NR;
+        let pb = bp.panel(p);
+        let jw = NR.min(n - j0);
+        let mut i = r0;
+        while i < r1 {
+            let mr = MR.min(r1 - i);
+            let mut acc = [[0f32; NR]; MR];
+            if jw == NR {
+                // Full-width tile: constant bounds let the compiler
+                // unroll and vectorize the j loop.
+                for kk in 0..k {
+                    let brow = &pb[kk * NR..kk * NR + NR];
+                    for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                        let Some(a) = a_at(kk, i + r) else { continue };
+                        for c in 0..NR {
+                            accr[c] += a * brow[c];
+                        }
+                    }
+                }
+            } else {
+                for kk in 0..k {
+                    let brow = &pb[kk * jw..kk * jw + jw];
+                    for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                        let Some(a) = a_at(kk, i + r) else { continue };
+                        for c in 0..jw {
+                            accr[c] += a * brow[c];
+                        }
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate().take(mr) {
+                let at = (i + r - r0) * n + j0;
+                cd[at..at + jw].copy_from_slice(&accr[..jw]);
+            }
+            i += mr;
+        }
+    }
+}
+
+/// In-place register-tiled accumulation for one `(i, k, j)` block of
+/// `C += A @ B` — the mixed-type blocked GEMM's inner kernel. `od` is
+/// the output row-panel slice (row size `n`, row 0 = global row
+/// `row0`); rows `[i0, i1)`, columns `[j0, j1)` accumulate the
+/// contraction range `[k0, k1)` with the reference loop's zero-skip.
+/// Because C is loaded into the tile registers before the `kk` loop and
+/// stored after it, per-element accumulation order across successive
+/// k-blocks is exactly the naive `bk`-then-`kk` sequence.
+#[allow(clippy::too_many_arguments)]
+pub fn nn_block_inplace(
+    ad: &[f32],
+    k: usize,
+    bd: &[f32],
+    n: usize,
+    od: &mut [f32],
+    row0: usize,
+    (i0, i1): (usize, usize),
+    (k0, k1): (usize, usize),
+    (j0, j1): (usize, usize),
+) {
+    let mut jt = j0;
+    while jt < j1 {
+        let jw = NR.min(j1 - jt);
+        let mut i = i0;
+        while i < i1 {
+            let mr = MR.min(i1 - i);
+            let mut acc = [[0f32; NR]; MR];
+            for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                let at = (i + r - row0) * n + jt;
+                accr[..jw].copy_from_slice(&od[at..at + jw]);
+            }
+            for kk in k0..k1 {
+                let brow = &bd[kk * n + jt..kk * n + jt + jw];
+                for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                    let a = ad[(i + r) * k + kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    for c in 0..jw {
+                        accr[c] += a * brow[c];
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate().take(mr) {
+                let at = (i + r - row0) * n + jt;
+                od[at..at + jw].copy_from_slice(&accr[..jw]);
+            }
+            i += mr;
+        }
+        jt += jw;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, seed: u64, with_zeros: bool) -> Tensor {
+        let mut t = Tensor::normal(&[rows, cols], 1.0, seed);
+        if with_zeros {
+            for (i, v) in t.data_mut().iter_mut().enumerate() {
+                if i % 5 == 0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        t
+    }
+
+    fn naive_nn(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.rows(), a.cols());
+        let n = b.cols();
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a.data()[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    c.data_mut()[i * n + j] += aik * b.data()[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn naive_nt(a: &Tensor, bt: &Tensor) -> Tensor {
+        let (m, k) = (a.rows(), a.cols());
+        let n = bt.rows();
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += a.data()[i * k + kk] * bt.data()[j * k + kk];
+                }
+                c.data_mut()[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn assert_bits(a: &Tensor, b: &Tensor, what: &str) {
+        assert_eq!(a.shape(), b.shape(), "{what} shape");
+        for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} element {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn pack_roundtrips_values() {
+        let b = mat(7, 37, 3, false);
+        let bp = pack_b(&b);
+        assert_eq!(bp.panels(), 3);
+        for kk in 0..7 {
+            for j in 0..37 {
+                let p = j / NR;
+                let pb = bp.panel(p);
+                let w = NR.min(37 - p * NR);
+                assert_eq!(
+                    pb[kk * w + (j - p * NR)].to_bits(),
+                    b.data()[kk * 37 + j].to_bits(),
+                    "({kk},{j})"
+                );
+            }
+        }
+        // pack_bt of the transpose is the same pack.
+        let bt = b.transpose();
+        let bp2 = pack_bt(&bt);
+        assert_eq!(bp.data().len(), bp2.data().len());
+        for (x, y) in bp.data().iter().zip(bp2.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn write_row_segment_splits_across_panels() {
+        let mut bp = PackedB::zeroed(2, 40);
+        let vals: Vec<f32> = (0..30).map(|i| i as f32 + 1.0).collect();
+        bp.write_row_segment(1, 5, &vals); // spans panels 0, 1, 2
+        let full = {
+            let mut t = Tensor::zeros(&[2, 40]);
+            t.data_mut()[40 + 5..40 + 35].copy_from_slice(&vals);
+            pack_b(&t)
+        };
+        for (x, y) in bp.data().iter().zip(full.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn panels_match_naive_bitwise_adversarial_shapes() {
+        // 1×1, k=1, single-column, tile-boundary ± 1, ragged everything.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (1, 7, 1),
+            (5, 1, 9),
+            (MR, 3, NR),
+            (MR + 1, 5, NR + 1),
+            (MR - 1, 4, NR - 1),
+            (13, 17, 33),
+            (16, 16, 16),
+            (3, 64, 2),
+        ];
+        for (m, k, n) in shapes {
+            let a = mat(m, k, (m * 31 + n) as u64, true);
+            let b = mat(k, n, (k * 17 + n) as u64 + 1, true);
+            let want = naive_nn(&a, &b);
+
+            let bp = pack_b(&b);
+            let mut c = Tensor::zeros(&[m, n]);
+            nn_panel(a.data(), k, &bp, c.data_mut(), 0, m);
+            assert_bits(&c, &want, &format!("nn {m}x{k}x{n}"));
+
+            // tn over A^T reproduces the same product.
+            let at = a.transpose();
+            let mut c = Tensor::zeros(&[m, n]);
+            tn_panel(at.data(), m, &bp, c.data_mut(), 0, m);
+            assert_bits(&c, &want, &format!("tn {m}x{k}x{n}"));
+
+            // nt over B^T: no zero-skip in the reference — compare
+            // against the skip-free naive.
+            let bt = b.transpose();
+            let want_nt = naive_nt(&a, &bt);
+            let btp = pack_bt(&bt);
+            let mut c = Tensor::zeros(&[m, n]);
+            nt_panel(a.data(), k, &btp, c.data_mut(), 0, m);
+            assert_bits(&c, &want_nt, &format!("nt {m}x{k}x{n}"));
+
+            // Partial row panels (the par_panels split) agree too.
+            if m > 2 {
+                let split = m / 2;
+                let mut c = Tensor::zeros(&[m, n]);
+                let (lo, hi) = c.data_mut().split_at_mut(split * n);
+                nn_panel(a.data(), k, &bp, lo, 0, split);
+                nn_panel(a.data(), k, &bp, hi, split, m);
+                assert_bits(&c, &want, &format!("nn split {m}x{k}x{n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn nt_keeps_zero_times_inf_nan() {
+        // 0 * inf = NaN must survive: the nt reference has no zero-skip.
+        let a = Tensor::from_vec(&[1, 2], vec![0.0, 1.0]);
+        let bt = Tensor::from_vec(&[1, 2], vec![f32::INFINITY, 2.0]);
+        let want = naive_nt(&a, &bt);
+        assert!(want.data()[0].is_nan());
+        let btp = pack_bt(&bt);
+        let mut c = Tensor::zeros(&[1, 1]);
+        nt_panel(a.data(), 2, &btp, c.data_mut(), 0, 1);
+        assert!(c.data()[0].is_nan());
+        // ...while nn skips the zero row exactly like its reference.
+        let b = Tensor::from_vec(&[2, 1], vec![f32::INFINITY, 2.0]);
+        let want_nn = naive_nn(&a, &b);
+        let bp = pack_b(&b);
+        let mut c = Tensor::zeros(&[1, 1]);
+        nn_panel(a.data(), 2, &bp, c.data_mut(), 0, 1);
+        assert_bits(&c, &want_nn, "nn zero-skip");
+        assert_eq!(c.data()[0], 2.0);
+    }
+
+    #[test]
+    fn block_inplace_matches_naive_block_accumulation() {
+        let (m, k, n) = (10, 9, 11);
+        let a = mat(m, k, 5, true);
+        let b = mat(k, n, 6, false);
+        // Naive: accumulate two k-blocks in sequence.
+        let mut want = Tensor::zeros(&[m, n]);
+        for (k0, k1) in [(0usize, 4usize), (4, 9)] {
+            for i in 0..m {
+                for kk in k0..k1 {
+                    let aik = a.data()[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    for j in 0..n {
+                        want.data_mut()[i * n + j] += aik * b.data()[kk * n + j];
+                    }
+                }
+            }
+        }
+        let mut c = Tensor::zeros(&[m, n]);
+        for (k0, k1) in [(0usize, 4usize), (4, 9)] {
+            nn_block_inplace(
+                a.data(),
+                k,
+                b.data(),
+                n,
+                c.data_mut(),
+                0,
+                (0, m),
+                (k0, k1),
+                (0, n),
+            );
+        }
+        assert_bits(&c, &want, "block inplace");
+    }
+}

@@ -1,0 +1,36 @@
+//! The bit-exact kernel layer: table-driven FP8/BF16 quantization and
+//! packed, cache-blocked host GEMM microkernels.
+//!
+//! Everything in this module is a **drop-in replacement for a scalar
+//! reference loop elsewhere in the crate, bit-identical by
+//! construction**:
+//!
+//! * [`qdq`] — 256-entry decode LUTs per FP8 format (filled from
+//!   [`crate::formats::fp8::Fp8Format::decode`], so equality is
+//!   structural) plus a table-driven saturating RNE encode whose
+//!   per-exponent drop counts reproduce the reference
+//!   `encode_with(x, Rounding::Saturate)` arithmetic exactly —
+//!   exhaustively parity-tested over all 256 byte patterns, the full
+//!   rounding-boundary set (every grid point and adjacent-pair
+//!   midpoint ± 2 f32 ulps) and random bit patterns. LUT-based QDQ is
+//!   exactly value-preserving: it changes *how* the value is computed,
+//!   never *which* value.
+//! * [`gemm`] — operand packing into contiguous column panels and
+//!   MR×NR register-tiled microkernels for the four matmul variants.
+//!   Work is tiled over the output's `j` dimension and over row
+//!   groups; the contraction index `k` stays **strictly sequential per
+//!   output element**, with the reference loops' exact zero-skip
+//!   behaviour, so every `c[i][j]` accumulates the identical f32
+//!   sequence as the naive triple loop and the results are bitwise
+//!   equal (pinned by `rust/tests/parallel_equivalence.rs`).
+//!
+//! Selection rides the per-run [`crate::util::par::Parallelism`] handle
+//! ([`crate::util::par::KernelMode`]): `Blocked` (default) runs this
+//! layer, `Scalar` keeps the original reference loops reachable as the
+//! parity oracle and the bench baseline (`MOR_SCALAR_KERNELS=1` flips
+//! auto-configured handles). Because both modes are bit-identical, the
+//! parallel ≡ serial and resume ≡ continuous contracts are unaffected
+//! by which one runs.
+
+pub mod gemm;
+pub mod qdq;

@@ -1,0 +1,382 @@
+//! Table-driven FP8/BF16 quantize–dequantize: the slice-level fast path
+//! behind `quant::fake_quant`'s Fig. 4 pipeline.
+//!
+//! Two tables per FP8 format, built once per process:
+//!
+//! * **decode LUT** — all 256 byte patterns decoded via the reference
+//!   [`Fp8Format::decode`], so `decode[b]` is *definitionally* the
+//!   reference value (the scalar path's `powi`-based decode never runs
+//!   on the hot path again);
+//! * **drop table** — for each of the 256 f32 biased-exponent values,
+//!   how many significand bits the RNE rounding must drop to land on
+//!   the fp8 grid at that exponent (`0xFF` = the value rounds to ±0
+//!   regardless of mantissa, `0xFE` = Inf/NaN exponent). This is the
+//!   same `drop` the reference `encode_with` computes arithmetically;
+//!   the table just hoists the range classification out of the
+//!   element loop, removing every float-domain branch
+//!   (`is_nan`/`is_infinite`/subnormal tests) from [`QdqTables::
+//!   encode_sat`].
+//!
+//! Only [`Rounding::Saturate`] is implemented here — the mode the
+//! fake-quant pipeline uses after amax scaling; `NanOnOverflow`
+//! (golden-table cross-validation against `ml_dtypes`) stays on the
+//! reference implementation. Parity with
+//! `Fp8Format::encode_with(x, Saturate)` is pinned by the exhaustive
+//! tests below.
+
+use crate::formats::fp8::{Fp8Format, Rounding, E4M3, E5M2};
+use crate::formats::{bf16, fp4, ReprType};
+use std::sync::OnceLock;
+
+/// Drop-table sentinel: the value rounds to ±0 for every mantissa
+/// (f32 zero/subnormal input, or more than 32 bits to drop).
+const DROP_ZERO: u8 = 0xFF;
+/// Drop-table sentinel: f32 exponent 255 (Inf or NaN input).
+const DROP_SPECIAL: u8 = 0xFE;
+
+/// Precomputed decode/encode tables for one FP8 format.
+pub struct QdqTables {
+    /// Reference decode of every byte pattern.
+    pub decode: [f32; 256],
+    /// Significand bits to drop, indexed by the f32 biased exponent.
+    drop: [u8; 256],
+    man_bits: u32,
+    man_mask: u8,
+    has_inf: bool,
+    bias: i32,
+    /// f32 biased exponent of the smallest normal fp8 magnitude.
+    min_norm_e: u32,
+    /// Largest fp8 exponent field that holds finite values.
+    max_exp_field: i32,
+    /// Byte encoding of +MAX (saturation target), sign bit clear.
+    max_byte: u8,
+    /// Canonical NaN byte, sign bit clear.
+    nan_byte: u8,
+}
+
+impl QdqTables {
+    fn build<F: Fp8Format>() -> QdqTables {
+        let mut decode = [0f32; 256];
+        for (b, slot) in decode.iter_mut().enumerate() {
+            *slot = F::decode(b as u8);
+        }
+        let min_norm_exp = 1 - F::BIAS;
+        let mut drop = [0u8; 256];
+        for (e, slot) in drop.iter_mut().enumerate() {
+            *slot = match e {
+                0 => DROP_ZERO,
+                255 => DROP_SPECIAL,
+                _ => {
+                    let f32_exp = e as i32 - 127;
+                    let d = if f32_exp >= min_norm_exp {
+                        23 - F::MAN_BITS as i32
+                    } else {
+                        23 - F::MAN_BITS as i32 + (min_norm_exp - f32_exp)
+                    };
+                    if d >= 33 {
+                        DROP_ZERO
+                    } else {
+                        d as u8
+                    }
+                }
+            };
+        }
+        let exp_mask = ((1u32 << F::EXP_BITS) - 1) as u8;
+        let man_mask = ((1u32 << F::MAN_BITS) - 1) as u8;
+        QdqTables {
+            decode,
+            drop,
+            man_bits: F::MAN_BITS,
+            man_mask,
+            has_inf: F::HAS_INF,
+            bias: F::BIAS,
+            min_norm_e: (min_norm_exp + 127) as u32,
+            max_exp_field: if F::HAS_INF {
+                exp_mask as i32 - 1
+            } else {
+                exp_mask as i32
+            },
+            max_byte: F::encode_max_with_sign(0, Rounding::Saturate),
+            nan_byte: if F::HAS_INF {
+                (exp_mask << F::MAN_BITS) | (1 << (F::MAN_BITS - 1))
+            } else {
+                (exp_mask << F::MAN_BITS) | man_mask
+            },
+        }
+    }
+
+    /// The process-wide E4M3 tables.
+    pub fn e4m3() -> &'static QdqTables {
+        static T: OnceLock<QdqTables> = OnceLock::new();
+        T.get_or_init(QdqTables::build::<E4M3>)
+    }
+
+    /// The process-wide E5M2 tables.
+    pub fn e5m2() -> &'static QdqTables {
+        static T: OnceLock<QdqTables> = OnceLock::new();
+        T.get_or_init(QdqTables::build::<E5M2>)
+    }
+
+    /// Encode with RNE and saturation-on-overflow — bit-identical to
+    /// `Fp8Format::encode_with(x, Rounding::Saturate)` for every f32
+    /// input (exhaustive parity tests below). The float-range
+    /// classification is one table lookup on the exponent field; the
+    /// rounding itself is the reference's staged integer RNE.
+    #[inline]
+    pub fn encode_sat(&self, x: f32) -> u8 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 31) as u8) << 7;
+        let abs = bits & 0x7fff_ffff;
+        let drop = self.drop[(abs >> 23) as usize];
+        if drop == DROP_ZERO {
+            return sign; // ±0, f32 subnormal, or deep underflow
+        }
+        if drop == DROP_SPECIAL {
+            // Saturate mode: Inf clamps to ±MAX; NaN stays NaN.
+            return if abs == 0x7f80_0000 {
+                sign | self.max_byte
+            } else {
+                sign | self.nan_byte
+            };
+        }
+
+        // Staged RNE on the 24-bit significand (reference arithmetic).
+        let significand24 = (abs & 0x007f_ffff) | 0x0080_0000;
+        let staged = (significand24 as u64) << 10;
+        let total_drop = drop as u32 + 10;
+        let keep = staged >> total_drop;
+        let round_bit = (staged >> (total_drop - 1)) & 1;
+        let sticky = (staged & ((1u64 << (total_drop - 1)) - 1)) != 0;
+        let rounded = keep + ((round_bit != 0 && (sticky || (keep & 1) == 1)) as u64);
+
+        let (e_fp8, m_fp8);
+        if (abs >> 23) >= self.min_norm_e {
+            let mut exp = (abs >> 23) as i32 - 127;
+            let mut sig = rounded;
+            if sig >= (1u64 << (self.man_bits + 1)) {
+                sig >>= 1;
+                exp += 1;
+            }
+            e_fp8 = exp + self.bias;
+            m_fp8 = (sig as u8) & self.man_mask;
+        } else if rounded >= (1u64 << self.man_bits) {
+            e_fp8 = 1;
+            m_fp8 = (rounded as u8) & self.man_mask;
+        } else {
+            e_fp8 = 0;
+            m_fp8 = rounded as u8;
+        }
+
+        let overflowed = e_fp8 > self.max_exp_field
+            || (!self.has_inf && e_fp8 == self.max_exp_field && m_fp8 == self.man_mask);
+        if overflowed {
+            return sign | self.max_byte;
+        }
+        sign | ((e_fp8 as u8) << self.man_bits) | m_fp8
+    }
+
+    /// One LUT quantize–dequantize round trip (Saturate mode).
+    #[inline]
+    pub fn qdq_sat(&self, x: f32) -> f32 {
+        self.decode[self.encode_sat(x) as usize]
+    }
+}
+
+/// Slice-level scaled QDQ: `out[i] = qdq(x[i] * scale) / scale`, the
+/// per-block body of fake-quant phase B. The arithmetic per element is
+/// exactly the scalar path's `qdq(target, v * s) / s` — multiply,
+/// round-trip, divide, in that order — so outputs are bit-identical for
+/// every target type; only the fp8 round-trip itself goes through the
+/// tables instead of the branchy codec.
+pub fn qdq_segment_scaled(target: ReprType, xs: &[f32], out: &mut [f32], scale: f32) {
+    debug_assert_eq!(xs.len(), out.len());
+    match target {
+        ReprType::E4M3 => {
+            let t = QdqTables::e4m3();
+            for (x, o) in xs.iter().zip(out.iter_mut()) {
+                *o = t.qdq_sat(*x * scale) / scale;
+            }
+        }
+        ReprType::E5M2 => {
+            let t = QdqTables::e5m2();
+            for (x, o) in xs.iter().zip(out.iter_mut()) {
+                *o = t.qdq_sat(*x * scale) / scale;
+            }
+        }
+        ReprType::Bf16 => {
+            for (x, o) in xs.iter().zip(out.iter_mut()) {
+                *o = bf16::quantize_dequantize(*x * scale) / scale;
+            }
+        }
+        ReprType::NvFp4 => {
+            for (x, o) in xs.iter().zip(out.iter_mut()) {
+                *o = fp4::e2m1_quantize_dequantize(*x * scale) / scale;
+            }
+        }
+    }
+}
+
+/// Slice-level unscaled BF16 round trip (the BF16-target fast path of
+/// fake-quant, which needs no scaling). Pure bit manipulation per
+/// element; bit-identical to `bf16::quantize_dequantize` by definition.
+pub fn bf16_segment(xs: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    for (x, o) in xs.iter().zip(out.iter_mut()) {
+        *o = bf16::quantize_dequantize(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full rounding-boundary set for one format: every finite grid
+    /// point, every adjacent-pair midpoint, each ± 2 f32 ulps, the
+    /// overflow/underflow boundaries, f32 specials, and per-exponent
+    /// mantissa extremes — both signs throughout.
+    fn boundary_bits(decode: &[f32; 256]) -> Vec<u32> {
+        let mut grid: Vec<f32> = decode
+            .iter()
+            .copied()
+            .filter(|v| v.is_finite() && *v >= 0.0)
+            .collect();
+        grid.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        grid.dedup();
+        let mut set = std::collections::BTreeSet::new();
+        let push_near = |v: f32, set: &mut std::collections::BTreeSet<u32>| {
+            let b = v.to_bits() & 0x7fff_ffff;
+            for d in -2i64..=2 {
+                set.insert((b as i64 + d).clamp(0, 0x7fff_ffff) as u32);
+            }
+        };
+        for (i, g) in grid.iter().enumerate() {
+            push_near(*g, &mut set);
+            if i + 1 < grid.len() {
+                push_near((g + grid[i + 1]) / 2.0, &mut set);
+            }
+        }
+        let max = *grid.last().unwrap();
+        push_near(max * 1.0625, &mut set); // past the overflow midpoint
+        push_near(grid[1] / 2.0, &mut set); // half the min subnormal
+        for b in [
+            0u32,
+            1,
+            0x007f_ffff,
+            0x0080_0000,
+            0x0080_0001,
+            0x7f7f_ffff,
+            0x7f80_0000,
+            0x7f80_0001,
+            0x7fc0_0000,
+            0x7fff_ffff,
+        ] {
+            set.insert(b);
+        }
+        for e in 0u32..=255 {
+            for m in [0u32, 1, 0x7f_fffe, 0x7f_ffff, 0x40_0000, 0x3f_ffff] {
+                set.insert((e << 23) | m);
+            }
+        }
+        let mut out: Vec<u32> = set.iter().copied().collect();
+        out.extend(set.iter().map(|b| *b | 0x8000_0000));
+        out
+    }
+
+    fn assert_byte_parity<F: Fp8Format>(t: &QdqTables, bits: u32) {
+        let x = f32::from_bits(bits);
+        let want = F::encode_with(x, Rounding::Saturate);
+        let got = t.encode_sat(x);
+        assert_eq!(
+            got, want,
+            "{}: encode mismatch at bits {bits:#010x} (x = {x:e}): LUT {got:#04x} vs \
+             reference {want:#04x}",
+            F::NAME
+        );
+    }
+
+    #[test]
+    fn decode_lut_matches_reference_all_256() {
+        let e4 = QdqTables::e4m3();
+        let e5 = QdqTables::e5m2();
+        for b in 0u16..=255 {
+            let b = b as u8;
+            let (l4, r4) = (e4.decode[b as usize], E4M3::decode(b));
+            let (l5, r5) = (e5.decode[b as usize], E5M2::decode(b));
+            assert_eq!(l4.to_bits(), r4.to_bits(), "e4m3 byte {b:#04x}");
+            assert_eq!(l5.to_bits(), r5.to_bits(), "e5m2 byte {b:#04x}");
+        }
+    }
+
+    #[test]
+    fn encode_parity_over_rounding_boundary_set() {
+        let e4 = QdqTables::e4m3();
+        for bits in boundary_bits(&e4.decode) {
+            assert_byte_parity::<E4M3>(e4, bits);
+        }
+        let e5 = QdqTables::e5m2();
+        for bits in boundary_bits(&e5.decode) {
+            assert_byte_parity::<E5M2>(e5, bits);
+        }
+    }
+
+    #[test]
+    fn encode_parity_over_random_bit_patterns() {
+        // xorshift64* stream over raw bit patterns: NaN payloads,
+        // subnormals, huge magnitudes — everything.
+        let mut s = 0x1234_5678_9abc_def0u64;
+        let e4 = QdqTables::e4m3();
+        let e5 = QdqTables::e5m2();
+        for _ in 0..200_000 {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            let bits = (s >> 32) as u32;
+            assert_byte_parity::<E4M3>(e4, bits);
+            assert_byte_parity::<E5M2>(e5, bits);
+        }
+    }
+
+    #[test]
+    fn qdq_sat_equals_reference_roundtrip() {
+        let e4 = QdqTables::e4m3();
+        let mut x = -500.0f32;
+        while x < 500.0 {
+            let want = E4M3::quantize_dequantize(x, Rounding::Saturate);
+            let got = e4.qdq_sat(x);
+            assert_eq!(got.to_bits(), want.to_bits(), "x = {x}");
+            x += 0.0713;
+        }
+        assert!(e4.qdq_sat(f32::NAN).is_nan());
+        assert_eq!(e4.qdq_sat(f32::INFINITY), 448.0);
+        assert_eq!(e4.qdq_sat(f32::NEG_INFINITY), -448.0);
+    }
+
+    #[test]
+    fn segments_match_scalar_loop_bitwise() {
+        let xs: Vec<f32> = (0..1000)
+            .map(|i| ((i as f32) * 0.7311).sin() * (1.5f32).powi((i % 40) as i32 - 20))
+            .collect();
+        for target in [ReprType::E4M3, ReprType::E5M2, ReprType::Bf16, ReprType::NvFp4] {
+            for scale in [1.0f32, 0.125, 3.7, 1e-3, 217.0] {
+                let mut out = vec![0f32; xs.len()];
+                qdq_segment_scaled(target, &xs, &mut out, scale);
+                for (x, o) in xs.iter().zip(out.iter()) {
+                    // The dynamic-dispatch helper uses Saturate for fp8
+                    // and the scalar codecs for bf16/fp4 — exactly the
+                    // fake-quant scalar path.
+                    let want = crate::formats::fp8::quantize_dequantize(
+                        target,
+                        x * scale,
+                        Rounding::Saturate,
+                    ) / scale;
+                    assert_eq!(o.to_bits(), want.to_bits(), "{target} x={x} s={scale}");
+                }
+            }
+        }
+        let mut out = vec![0f32; xs.len()];
+        bf16_segment(&xs, &mut out);
+        for (x, o) in xs.iter().zip(out.iter()) {
+            assert_eq!(o.to_bits(), bf16::quantize_dequantize(*x).to_bits());
+        }
+    }
+}

@@ -11,7 +11,8 @@
 //!   once to HLO text artifacts (`python/compile/aot.py`).
 //! * Layer 3 — this crate: the runtime coordinator ([`runtime`],
 //!   [`coordinator`]), a bit-exact host mirror of the numerics
-//!   ([`formats`], [`scaling`], [`quant`], [`mor`]), the data pipeline
+//!   ([`formats`], [`scaling`], [`quant`], [`mor`]) with a table-driven
+//!   /cache-blocked kernel layer ([`kernels`]), the data pipeline
 //!   ([`data`]), and the paper-table/figure report harness ([`report`]).
 //!
 //! Start with [`mor::Recipe`] for the decision engine and
@@ -20,6 +21,7 @@
 pub mod coordinator;
 pub mod data;
 pub mod formats;
+pub mod kernels;
 pub mod model;
 pub mod mor;
 pub mod quant;

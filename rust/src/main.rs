@@ -114,7 +114,8 @@ repro — MoR (Mixture of Representations) reproduction launcher
 USAGE:
   repro train  --artifact <name> [--config config1|config2] [--steps N]
                [--threshold 0.045] [--model tiny|small|base] [--out runs/]
-               [--suite-every N] [--ckpt-every N] [--resume <ckpt>] [--quiet]
+               [--suite-every N] [--ckpt-every N] [--resume <ckpt>]
+               [--embed-metrics] [--quiet]
   repro eval   [--model ...] [--artifact eval] (evaluates fresh init or --ckpt)
   repro report <table1|table2|table3|table4|fig5..fig21|all>
                [--steps N] [--model ...] [--out report/] [--fresh] [--quiet]
@@ -129,11 +130,14 @@ Common options:
 
 Checkpoint/resume: `--ckpt-every N` writes a full MORCKPT2 training
 checkpoint (params, Adam moments, data cursors, RNG streams, scaling
-histories, stats, metrics rows) every N completed steps; `--resume
-<ckpt>` continues such a run. Pass the run's TOTAL --steps (not the
-remaining count): a resumed run is bitwise identical to the
-uninterrupted one — params, metrics rows (minus wall-clock step_ms) and
-MoR decision fractions — at any --threads setting.
+histories, stats, a metrics row-count+hash digest — `--embed-metrics`
+stores the full row history instead) every N completed steps;
+`--resume <ckpt>` continues such a run, replaying the metrics prefix
+from the original run's metrics.csv after verifying it against the
+digest. Pass the run's TOTAL --steps (not the remaining count): a
+resumed run is bitwise identical to the uninterrupted one — params,
+metrics rows (minus wall-clock step_ms) and MoR decision fractions —
+at any --threads setting.
 
 PJRT artifacts are built with `make artifacts [MODEL=small]`; without
 them every command still runs on the host backend.";
@@ -152,6 +156,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.suite_every = args.u64("suite-every", 0);
     opts.ckpt_every = args.u64("ckpt-every", 0);
     opts.resume = args.get("resume").map(PathBuf::from);
+    opts.embed_metrics = args.flag("embed-metrics");
     opts.stats_window = args.u64("stats-window", (steps / 4).max(1));
     opts.per_channel = artifact.contains("channel");
     opts.quiet = args.flag("quiet");

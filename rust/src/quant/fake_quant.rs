@@ -17,9 +17,10 @@ use super::error::RelErrAccum;
 use super::partition::{BlockRegion, Partition};
 use crate::formats::fp8::{Fp8Format, Rounding, E4M3, E5M2};
 use crate::formats::{bf16, ReprType};
+use crate::kernels::qdq as qdq_kernel;
 use crate::scaling::{compute_scales_with, GroupScales, ScalingAlgo};
 use crate::tensor::Tensor;
-use crate::util::par::{self, DisjointWriter, Parallelism};
+use crate::util::par::{self, DisjointWriter, KernelMode, Parallelism};
 
 /// Result of fake-quantizing one tensor under one (type, partition,
 /// scaling) configuration.
@@ -45,6 +46,63 @@ fn qdq(t: ReprType, x: f32) -> f32 {
         ReprType::Bf16 => bf16::quantize_dequantize(x),
         ReprType::NvFp4 => crate::formats::fp4::e2m1_quantize_dequantize(x),
     }
+}
+
+/// Phase-B body for one block under the **kernel** engine: the block's
+/// contiguous row segments run through the slice-level LUT QDQ, then
+/// the error accumulator replays the written values in the same
+/// row-major order the scalar loop uses. Bit-identical to
+/// [`qdq_block_scalar`] (the LUT round-trip is exactly value-preserving
+/// and f64 error accumulation order is unchanged).
+///
+/// # Safety contract
+/// `sink` covers the whole output tensor and `b` is disjoint from every
+/// concurrently processed block (partition tiling).
+fn qdq_block_kernel(
+    target: ReprType,
+    xd: &[f32],
+    b: &BlockRegion,
+    cols: usize,
+    s: f32,
+    sink: &DisjointWriter<f32>,
+) -> RelErrAccum {
+    let mut acc = RelErrAccum::default();
+    let width = b.c1 - b.c0;
+    for r in b.r0..b.r1 {
+        let start = r * cols + b.c0;
+        let src = &xd[start..start + width];
+        // Safety: partition blocks tile the tensor disjointly.
+        let dst = unsafe { sink.slice_mut(start, width) };
+        qdq_kernel::qdq_segment_scaled(target, src, dst, s);
+        for (v, q) in src.iter().zip(dst.iter()) {
+            acc.add(*v, *q);
+        }
+    }
+    acc
+}
+
+/// Phase-B body for one block under the **scalar** oracle: the original
+/// per-element loop.
+fn qdq_block_scalar(
+    target: ReprType,
+    xd: &[f32],
+    b: &BlockRegion,
+    cols: usize,
+    s: f32,
+    sink: &DisjointWriter<f32>,
+) -> RelErrAccum {
+    let mut acc = RelErrAccum::default();
+    // De-scale by *division* (not multiply-by-reciprocal): this is
+    // what the compiled kernel does, and the two differ in the last
+    // f32 ulp — the cross-language tests require bit-equality.
+    for idx in b.indices(cols) {
+        let v = xd[idx];
+        let q = qdq(target, v * s) / s;
+        // Safety: partition blocks tile the tensor disjointly.
+        unsafe { sink.write(idx, q) };
+        acc.add(v, q);
+    }
+    acc
 }
 
 /// Per-block range scan: (amax, non-zero amin).
@@ -94,6 +152,7 @@ pub fn fake_quantize_with(
 
     if target == ReprType::Bf16 {
         let mut out = x.clone();
+        let kernel = cfg.kernel() == KernelMode::Blocked;
         let per_block: Vec<(RelErrAccum, (f32, Option<f32>))> = {
             let sink = DisjointWriter::new(out.data_mut());
             par::par_map(&cfg, blocks.len(), |bi| {
@@ -101,15 +160,36 @@ pub fn fake_quantize_with(
                 let mut acc = RelErrAccum::default();
                 let mut amax = 0.0f32;
                 let mut amin = f32::INFINITY;
-                for idx in b.indices(cols) {
-                    let q = bf16::quantize_dequantize(xd[idx]);
-                    // Safety: partition blocks tile the tensor disjointly.
-                    unsafe { sink.write(idx, q) };
-                    acc.add(xd[idx], q);
-                    let a = xd[idx].abs();
-                    amax = amax.max(a);
-                    if a != 0.0 {
-                        amin = amin.min(a);
+                if kernel {
+                    // Slice engine: per-row-segment bf16 round trip,
+                    // then the stats replay in the same element order.
+                    let width = b.c1 - b.c0;
+                    for r in b.r0..b.r1 {
+                        let start = r * cols + b.c0;
+                        let src = &xd[start..start + width];
+                        // Safety: partition blocks tile disjointly.
+                        let dst = unsafe { sink.slice_mut(start, width) };
+                        qdq_kernel::bf16_segment(src, dst);
+                        for (v, q) in src.iter().zip(dst.iter()) {
+                            acc.add(*v, *q);
+                            let a = v.abs();
+                            amax = amax.max(a);
+                            if a != 0.0 {
+                                amin = amin.min(a);
+                            }
+                        }
+                    }
+                } else {
+                    for idx in b.indices(cols) {
+                        let q = bf16::quantize_dequantize(xd[idx]);
+                        // Safety: partition blocks tile the tensor disjointly.
+                        unsafe { sink.write(idx, q) };
+                        acc.add(xd[idx], q);
+                        let a = xd[idx].abs();
+                        amax = amax.max(a);
+                        if a != 0.0 {
+                            amin = amin.min(a);
+                        }
                     }
                 }
                 (acc, (amax, if amin.is_finite() { Some(amin) } else { None }))
@@ -137,24 +217,22 @@ pub fn fake_quantize_with(
 
     // Phase B — scale, cast, de-scale per block; disjoint writes into
     // the output, per-block accumulators merged in canonical order.
+    // The kernel engine runs the slice-level LUT QDQ per block row
+    // segment; the scalar oracle keeps the per-element loop. Identical
+    // bits either way (parity pinned in tests and
+    // `parallel_equivalence.rs`).
+    let kernel = cfg.kernel() == KernelMode::Blocked;
     let mut out = Tensor::zeros(x.shape());
     let block_err: Vec<RelErrAccum> = {
         let sink = DisjointWriter::new(out.data_mut());
         par::par_map(&cfg, blocks.len(), |bi| {
             let b = &blocks[bi];
             let s = scales.blocks[bi].scale;
-            let mut acc = RelErrAccum::default();
-            // De-scale by *division* (not multiply-by-reciprocal): this is
-            // what the compiled kernel does, and the two differ in the last
-            // f32 ulp — the cross-language tests require bit-equality.
-            for idx in b.indices(cols) {
-                let v = xd[idx];
-                let q = qdq(target, v * s) / s;
-                // Safety: partition blocks tile the tensor disjointly.
-                unsafe { sink.write(idx, q) };
-                acc.add(v, q);
+            if kernel {
+                qdq_block_kernel(target, xd, b, cols, s, &sink)
+            } else {
+                qdq_block_scalar(target, xd, b, cols, s, &sink)
             }
-            acc
         })
     };
     let mut global = RelErrAccum::default();
@@ -236,6 +314,50 @@ mod tests {
             e_chan < e_tensor,
             "channel {e_chan} should beat tensor {e_tensor}"
         );
+    }
+
+    /// The kernel engine (LUT QDQ over row segments) is bit-identical
+    /// to the scalar oracle for every target/partition/scaling combo —
+    /// the correctness backbone of the whole kernel layer.
+    #[test]
+    fn prop_kernel_engine_matches_scalar_oracle_bitwise() {
+        prop(120, |g: &mut Gen| {
+            let rows = g.usize_in(1, 30);
+            let cols = g.usize_in(1, 30);
+            let x = Tensor::from_vec(
+                &[rows, cols],
+                (0..rows * cols)
+                    .map(|_| g.f32_in(-1.0, 1.0) * g.f32_log_uniform(1e-5, 1e4))
+                    .collect(),
+            );
+            let t = *g.choose(&[
+                ReprType::E4M3,
+                ReprType::E5M2,
+                ReprType::Bf16,
+                ReprType::NvFp4,
+            ]);
+            let (br, bc) = (g.usize_in(1, 9), g.usize_in(1, 9));
+            let p = *g.choose(&[
+                Partition::Tensor,
+                Partition::Block { r: br, c: bc },
+                Partition::ChannelRows,
+                Partition::ChannelCols,
+                Partition::SubChannelRows { len: 1 + br % 5 },
+            ]);
+            let s = *g.choose(&[ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0]);
+            let scalar = Parallelism::serial().with_kernel(KernelMode::Scalar);
+            let kernel = Parallelism::serial(); // Blocked default
+            let a = fake_quantize_with(&x, t, p, s, &scalar);
+            let b = fake_quantize_with(&x, t, p, s, &kernel);
+            for (i, (u, v)) in a.out.data().iter().zip(b.out.data()).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "{t} {p:?} {s:?} element {i}");
+            }
+            assert_eq!(a.block_err, b.block_err);
+            assert_eq!(a.global_err, b.global_err);
+            assert_eq!(a.block_range, b.block_range);
+            assert_eq!(a.scales.blocks, b.scales.blocks);
+            true
+        });
     }
 
     /// Property: fake-quant output is finite and the global error is the

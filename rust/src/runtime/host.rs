@@ -19,16 +19,17 @@
 //! correction. Stats slot order matches `QuantTensorId::flat`.
 
 use crate::formats::ReprType;
+use crate::kernels::gemm::{pack_b, PackedB};
 use crate::model::config::ModelConfig;
 use crate::model::naming::QuantTensorId;
 use crate::quant::error::dynamic_range_fits_e5m2;
 use crate::quant::fake_quant::fake_quantize_with;
-use crate::quant::partition::Partition;
+use crate::quant::partition::{BlockRegion, Partition};
 use crate::scaling::delayed::AmaxHistory;
 use crate::scaling::ScalingAlgo;
-use crate::tensor::ops::{matmul_nt_with, matmul_tn_with, matmul_with};
+use crate::tensor::ops::{matmul_nt_with, matmul_packed_with, matmul_tn_with, matmul_with};
 use crate::tensor::Tensor;
-use crate::util::par::{self, Parallelism};
+use crate::util::par::{self, KernelMode, Parallelism};
 use anyhow::{anyhow, bail, Result};
 
 pub const LN_EPS: f32 = 1e-5;
@@ -121,24 +122,128 @@ impl HostQuant {
     }
 }
 
-/// Apply the MoR recipe to one 2-D GEMM operand (python `mor_quantize`):
-/// returns (quantized tensor, relerr, fallback fraction). On fallback
-/// the operand stays in its original precision, exactly like the
-/// compiled step's `jnp.where(use, fq8, x2d)`.
+/// Per-block source selection of a planned MoR operand quantization —
+/// the *decision* half of [`mor_quantize`], separated from output
+/// materialization so the fused quantize-on-pack path can write GEMM
+/// pack buffers directly instead of materializing a tensor that the
+/// GEMM would immediately re-read.
+enum QuantChoice {
+    /// The operand stays in original precision (baseline recipe, or a
+    /// whole-tensor fallback): every element reads the input.
+    Original,
+    /// Whole-tensor E4M3 accept: every element reads the candidate.
+    WholeE4M3(Tensor),
+    /// Sub-tensor mix: `sel[bi]` picks block `bi`'s source
+    /// (0 = E4M3 candidate, 1 = E5M2 candidate, 2 = original input).
+    PerBlock {
+        blocks: Vec<BlockRegion>,
+        sel: Vec<u8>,
+        fq8: Tensor,
+        fq5: Tensor,
+    },
+}
+
+/// A planned MoR operand quantization: the block decisions plus the
+/// recorded telemetry, with the output not yet materialized. Produced
+/// by [`mor_quantize_plan`]; consumed by [`MorQuantPlan::into_tensor`]
+/// (the historical path) or [`MorQuantPlan::into_packed_b`] (fused).
+pub struct MorQuantPlan {
+    choice: QuantChoice,
+    relerr: f32,
+    fallback: f32,
+}
+
+impl MorQuantPlan {
+    /// Mean E4M3 relative error of the operand (0 for baseline).
+    pub fn relerr(&self) -> f32 {
+        self.relerr
+    }
+
+    /// BF16-fallback fraction of the operand (0/1 tensor-level,
+    /// fractional sub-tensor).
+    pub fn fallback(&self) -> f32 {
+        self.fallback
+    }
+
+    /// Materialize the quantized operand as a tensor — exactly the
+    /// historical [`mor_quantize`] output, bit for bit.
+    pub fn into_tensor(self, x: &Tensor) -> Tensor {
+        match self.choice {
+            QuantChoice::Original => x.clone(),
+            QuantChoice::WholeE4M3(t) => t,
+            QuantChoice::PerBlock { blocks, sel, fq8, fq5 } => {
+                let (_, cols) = x.as_2d();
+                let mut out = x.clone();
+                for (b, s) in blocks.iter().zip(sel.iter()) {
+                    let src = match *s {
+                        0 => fq8.data(),
+                        1 => fq5.data(),
+                        _ => continue, // fallback block: already x
+                    };
+                    let width = b.c1 - b.c0;
+                    for r in b.r0..b.r1 {
+                        let at = r * cols + b.c0;
+                        out.data_mut()[at..at + width].copy_from_slice(&src[at..at + width]);
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Fused quantize-on-pack: write the quantized operand directly
+    /// into a GEMM pack buffer, skipping the materialize+re-read pass.
+    /// The pack contents are bit-identical to
+    /// `kernels::gemm::pack_b(&self.into_tensor(x))` — packing is a
+    /// pure copy, so routing each block's row segments straight from
+    /// its source (candidate or input) to panel storage changes no
+    /// values.
+    pub fn into_packed_b(self, x: &Tensor) -> PackedB {
+        match self.choice {
+            QuantChoice::Original => pack_b(x),
+            QuantChoice::WholeE4M3(t) => pack_b(&t),
+            QuantChoice::PerBlock { blocks, sel, fq8, fq5 } => {
+                // as_2d(), like into_tensor: folded N-D operands pack
+                // the same way they materialize.
+                let (rows, cols) = x.as_2d();
+                let mut bp = PackedB::zeroed(rows, cols);
+                for (b, s) in blocks.iter().zip(sel.iter()) {
+                    let src = match *s {
+                        0 => fq8.data(),
+                        1 => fq5.data(),
+                        _ => x.data(), // fallback blocks pack the input
+                    };
+                    let width = b.c1 - b.c0;
+                    for r in b.r0..b.r1 {
+                        let at = r * cols + b.c0;
+                        bp.write_row_segment(r, b.c0, &src[at..at + width]);
+                    }
+                }
+                bp
+            }
+        }
+    }
+}
+
+/// Plan one MoR operand quantization (python `mor_quantize`'s decision
+/// machinery): run the candidate fake-quantizations, apply the recipe's
+/// accept/fallback rules, and return the block-source plan plus
+/// telemetry. On fallback the operand stays in its original precision,
+/// exactly like the compiled step's `jnp.where(use, fq8, x2d)`.
 ///
 /// The sub-tensor recipes need two candidate quantizations (E4M3 and
 /// E5M2) of the same tensor; they are independent, so they overlap on
 /// the worker pool via [`par::join2`] — each stays internally
 /// chunk-parallel and bit-identical to its serial run.
-pub fn mor_quantize(
+pub fn mor_quantize_plan(
     q: &HostQuant,
     x: &Tensor,
     th: f32,
     direction: usize,
     cfg: &Parallelism,
-) -> (Tensor, f32, f32) {
+) -> MorQuantPlan {
     if q.kind == HostRecipeKind::Baseline {
-        return (x.clone(), 0.0, 0.0);
+        return MorQuantPlan { choice: QuantChoice::Original, relerr: 0.0, fallback: 0.0 };
     }
     let part = q.partition.resolve(direction);
     let needs_e5m2 = matches!(
@@ -160,9 +265,9 @@ pub fn mor_quantize(
     match q.kind {
         HostRecipeKind::TensorLevel => {
             if (relerr as f64) < th as f64 {
-                (fq8.out, relerr, 0.0)
+                MorQuantPlan { choice: QuantChoice::WholeE4M3(fq8.out), relerr, fallback: 0.0 }
             } else {
-                (x.clone(), relerr, 1.0)
+                MorQuantPlan { choice: QuantChoice::Original, relerr, fallback: 1.0 }
             }
         }
         HostRecipeKind::SubTensorTwoWay | HostRecipeKind::SubTensorThreeWay => {
@@ -170,33 +275,66 @@ pub fn mor_quantize(
             let (rows, cols) = x.as_2d();
             let blocks = part.blocks(rows, cols);
             let nb = blocks.len().max(1) as f32;
-            let mut out = x.clone();
+            let mut sel = Vec::with_capacity(blocks.len());
             let mut fallback_blocks = 0usize;
-            for (bi, b) in blocks.iter().enumerate() {
+            for bi in 0..blocks.len() {
                 // M1 (Eq. 3): E4M3 wins when its relerr sum beats E5M2's.
-                let m1 = fq8.block_err[bi].sum < fq5.block_err[bi].sum;
-                if m1 {
-                    for idx in b.indices(cols) {
-                        out.data_mut()[idx] = fq8.out.data()[idx];
-                    }
+                if fq8.block_err[bi].sum < fq5.block_err[bi].sum {
+                    sel.push(0);
                     continue;
                 }
                 if q.kind == HostRecipeKind::SubTensorThreeWay {
                     // M2 (Eq. 4): E5M2 accepted when the range fits.
                     let (amax, amin) = fq8.block_range[bi];
                     if dynamic_range_fits_e5m2(amax, amin) {
-                        for idx in b.indices(cols) {
-                            out.data_mut()[idx] = fq5.out.data()[idx];
-                        }
+                        sel.push(1);
                         continue;
                     }
                 }
-                fallback_blocks += 1; // block stays in original precision
+                sel.push(2); // block stays in original precision
+                fallback_blocks += 1;
             }
-            (out, relerr, fallback_blocks as f32 / nb)
+            MorQuantPlan {
+                choice: QuantChoice::PerBlock { blocks, sel, fq8: fq8.out, fq5: fq5.out },
+                relerr,
+                fallback: fallback_blocks as f32 / nb,
+            }
         }
         HostRecipeKind::Baseline => unreachable!(),
     }
+}
+
+/// Apply the MoR recipe to one 2-D GEMM operand: returns (quantized
+/// tensor, relerr, fallback fraction) — [`mor_quantize_plan`]
+/// materialized.
+pub fn mor_quantize(
+    q: &HostQuant,
+    x: &Tensor,
+    th: f32,
+    direction: usize,
+    cfg: &Parallelism,
+) -> (Tensor, f32, f32) {
+    let plan = mor_quantize_plan(q, x, th, direction, cfg);
+    let (relerr, fallback) = (plan.relerr, plan.fallback);
+    (plan.into_tensor(x), relerr, fallback)
+}
+
+/// [`mor_quantize`] fused with GEMM operand packing: the quantized
+/// values land directly in a [`PackedB`] (column panels), so the
+/// B-side operand of a linear-layer GEMM never materializes as a
+/// row-major tensor at all. Telemetry and pack contents are bitwise
+/// equal to the unfused quantize-then-pack sequence (pinned by
+/// `rust/tests/parallel_equivalence.rs`).
+pub fn mor_quantize_packed(
+    q: &HostQuant,
+    x: &Tensor,
+    th: f32,
+    direction: usize,
+    cfg: &Parallelism,
+) -> (PackedB, f32, f32) {
+    let plan = mor_quantize_plan(q, x, th, direction, cfg);
+    let (relerr, fallback) = (plan.relerr, plan.fallback);
+    (plan.into_packed_b(x), relerr, fallback)
 }
 
 // ---------------------------------------------------------------------------
@@ -501,6 +639,13 @@ impl StepStats {
 /// y = fq(x) @ fq(w), recording input/weight forward-direction stats.
 /// The two operand quantizations are independent and overlap on the
 /// pool.
+///
+/// Under the kernel engine the weight operand quantizes **fused with
+/// packing** ([`mor_quantize_packed`]): its quantized values land
+/// directly in the GEMM's column panels, never materializing as a
+/// row-major tensor. The scalar oracle keeps the historical
+/// materialize-then-multiply sequence. Both produce bit-identical
+/// outputs and telemetry.
 #[allow(clippy::too_many_arguments)]
 fn linear_fwd(
     q: &HostQuant,
@@ -512,14 +657,24 @@ fn linear_fwd(
     w: &Tensor,
     cfg: &Parallelism,
 ) -> Tensor {
-    let ((qx, rex, fbx), (qw, rew, fbw)) = par::join2(
+    if cfg.kernel() == KernelMode::Scalar {
+        let ((qx, rex, fbx), (qw, rew, fbw)) = par::join2(
+            cfg,
+            || mor_quantize(q, x2d, th, 0, cfg),
+            || mor_quantize(q, w, th, 1, cfg),
+        );
+        stats.record(layer, linear, 0, 0, rex, fbx, x2d.amax());
+        stats.record(layer, linear, 1, 0, rew, fbw, w.amax());
+        return matmul_with(&qx, &qw, cfg);
+    }
+    let ((qx, rex, fbx), (pw, rew, fbw)) = par::join2(
         cfg,
         || mor_quantize(q, x2d, th, 0, cfg),
-        || mor_quantize(q, w, th, 1, cfg),
+        || mor_quantize_packed(q, w, th, 1, cfg),
     );
     stats.record(layer, linear, 0, 0, rex, fbx, x2d.amax());
     stats.record(layer, linear, 1, 0, rew, fbw, w.amax());
-    matmul_with(&qx, &qw, cfg)
+    matmul_packed_with(&qx, &pw, cfg)
 }
 
 /// Backward GEMMs with their own quantized operands (the paper's "and
@@ -543,11 +698,81 @@ fn linear_bwd(
     dy2d: &Tensor,
     cfg: &Parallelism,
 ) -> (Tensor, Tensor) {
-    // dy feeds both backward GEMMs; when the partition resolves both
-    // contraction directions identically the direction-1 pass would be
-    // bit-identical to direction 0, so it is skipped and the first
-    // pass reused. When it does differ (per-channel partitions) it is
-    // a fourth independent quantization and joins the overlap tree.
+    if cfg.kernel() == KernelMode::Scalar {
+        return linear_bwd_scalar(q, th, stats, layer, linear, x2d, w, dy2d, cfg);
+    }
+    // Kernel engine, fused quantize-on-pack for both B-side operands:
+    // W^T (B of the dx GEMM) and the direction-1 dy (B of the dW GEMM)
+    // quantize straight into pack buffers. dy direction 0 and x^T are
+    // the A-side operands, so they materialize as tensors exactly as
+    // before. When the partition resolves both contraction directions
+    // identically, the direction-1 dy quantization would be
+    // bit-identical to direction 0 — it is skipped and the pack copies
+    // the materialized tensor instead (packing is a pure copy, so the
+    // reuse semantics are unchanged). Per-channel partitions make it a
+    // fourth independent quantization joining the overlap tree.
+    let (((qdy0, reg0, fbg0), alt_dy), ((pwt, rew1, fbw1), (qxt, rex1, fbx1))) = par::join2(
+        cfg,
+        || {
+            par::join2(
+                cfg,
+                || mor_quantize(q, dy2d, th, 0, cfg),
+                || {
+                    if q.partition.direction_invariant() {
+                        None
+                    } else {
+                        Some(mor_quantize_packed(q, dy2d, th, 1, cfg))
+                    }
+                },
+            )
+        },
+        || {
+            par::join2(
+                cfg,
+                || {
+                    let wt = w.transpose();
+                    mor_quantize_packed(q, &wt, th, 1, cfg)
+                },
+                || {
+                    let xt = x2d.transpose();
+                    mor_quantize(q, &xt, th, 0, cfg)
+                },
+            )
+        },
+    );
+    let (pdy1, reg1, fbg1) = match alt_dy {
+        Some((p, re, fb)) => (p, re, fb),
+        None => (pack_b(&qdy0), reg0, fbg0),
+    };
+    let (dx, dw) = par::join2(
+        cfg,
+        || matmul_packed_with(&qdy0, &pwt, cfg),
+        || matmul_packed_with(&qxt, &pdy1, cfg),
+    );
+    // Operand amaxes are transpose-invariant, so they come from the
+    // untransposed tensors.
+    let (axm, awm, agm) = (x2d.amax(), w.amax(), dy2d.amax());
+    stats.record(layer, linear, 0, 1, rex1, fbx1, axm);
+    stats.record(layer, linear, 1, 1, rew1, fbw1, awm);
+    stats.record(layer, linear, 2, 0, reg0, fbg0, agm);
+    stats.record(layer, linear, 2, 1, reg1, fbg1, agm);
+    (dx, dw)
+}
+
+/// The historical (scalar-oracle) backward path: every operand
+/// materializes, every GEMM packs internally or runs naive.
+#[allow(clippy::too_many_arguments)]
+fn linear_bwd_scalar(
+    q: &HostQuant,
+    th: f32,
+    stats: &mut StepStats,
+    layer: usize,
+    linear: usize,
+    x2d: &Tensor,
+    w: &Tensor,
+    dy2d: &Tensor,
+    cfg: &Parallelism,
+) -> (Tensor, Tensor) {
     let (((qdy0, reg0, fbg0), alt_dy), ((qwt, rew1, fbw1), (qxt, rex1, fbx1))) = par::join2(
         cfg,
         || {
@@ -586,8 +811,6 @@ fn linear_bwd(
         || matmul_with(&qdy0, &qwt, cfg),
         || matmul_with(&qxt, qdy1, cfg),
     );
-    // Operand amaxes are transpose-invariant, so they come from the
-    // untransposed tensors.
     let (axm, awm, agm) = (x2d.amax(), w.amax(), dy2d.amax());
     stats.record(layer, linear, 0, 1, rex1, fbx1, axm);
     stats.record(layer, linear, 1, 1, rew1, fbw1, awm);
@@ -1150,6 +1373,43 @@ mod tests {
         assert!(re >= 0.045);
         assert_eq!(fb, 1.0);
         assert_eq!(out, wild);
+    }
+
+    #[test]
+    fn fused_pack_matches_materialized_quantize() {
+        // Every recipe class: the fused quantize-on-pack buffer must
+        // equal pack_b() of the materialized quantization, and the
+        // telemetry must match bit for bit.
+        let mut x = Tensor::normal(&[24, 20], 1.0, 77);
+        for (i, v) in x.data_mut().iter_mut().enumerate() {
+            *v *= (10.0f32).powi((i % 9) as i32 - 4); // wide range: mixed decisions
+        }
+        let cfg = Parallelism::serial();
+        for (recipe, partition, scaling) in [
+            ("baseline", "tensor", "gam"),
+            ("tensor_level", "block128x128", "gam"),
+            ("tensor_level", "tensor", "amax"), // wild input: falls back
+            ("subtensor2", "block4x4", "gam"),
+            ("subtensor3", "block4x4", "gam"),
+            ("subtensor3", "channel", "amax"),
+        ] {
+            let q = HostQuant::from_fields(recipe, partition, scaling).unwrap();
+            for direction in [0usize, 1] {
+                let (qt, re, fb) = mor_quantize(&q, &x, 0.045, direction, &cfg);
+                let (pk, re2, fb2) = mor_quantize_packed(&q, &x, 0.045, direction, &cfg);
+                assert_eq!(re.to_bits(), re2.to_bits(), "{recipe} relerr");
+                assert_eq!(fb.to_bits(), fb2.to_bits(), "{recipe} fallback");
+                let want = pack_b(&qt);
+                assert_eq!(want.data().len(), pk.data().len());
+                for (i, (a, b)) in want.data().iter().zip(pk.data()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{recipe}/{partition} dir {direction} pack element {i}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

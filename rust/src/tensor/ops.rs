@@ -13,10 +13,29 @@
 //! k-products in ascending-k order on exactly one thread, so results
 //! are bit-identical to the serial path for any thread count (pinned by
 //! `rust/tests/parallel_equivalence.rs`).
+//!
+//! Inside each panel, two interchangeable kernel implementations exist,
+//! selected by the handle's [`crate::util::par::KernelMode`]: the
+//! original naive triple loops (`matmul_naive_with` & co., the parity
+//! oracle) and the packed register-tiled microkernels of
+//! [`crate::kernels::gemm`]. Both run the identical per-element
+//! floating-point sequence — including the zero-`a` skip — so outputs
+//! are bitwise equal; only memory traffic differs.
 
 use super::Tensor;
 use crate::formats::ReprType;
-use crate::util::par::{self, Parallelism};
+use crate::kernels::gemm::{self, PackedB};
+use crate::util::par::{self, KernelMode, Parallelism};
+
+/// Below this many multiply-accumulates the operand-packing overhead of
+/// the blocked kernels outweighs their cache wins; such GEMMs take the
+/// naive loops even in [`KernelMode::Blocked`] (bit-identical either
+/// way, so the cutoff is pure scheduling).
+const BLOCKED_MIN_MACS: usize = 4096;
+
+fn use_blocked(cfg: &Parallelism, macs: usize) -> bool {
+    cfg.kernel() == KernelMode::Blocked && macs >= BLOCKED_MIN_MACS
+}
 
 /// Plain f32 GEMM: C = A @ B, parallel over output-row panels with the
 /// process-global [`Parallelism`].
@@ -24,8 +43,41 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     matmul_with(a, b, &par::global())
 }
 
-/// [`matmul`] with an explicit [`Parallelism`].
+/// [`matmul`] with an explicit [`Parallelism`]: packed blocked kernel
+/// by default, the naive reference loop under [`KernelMode::Scalar`]
+/// or for tiny products.
 pub fn matmul_with(a: &Tensor, b: &Tensor, cfg: &Parallelism) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    if use_blocked(cfg, m * k * n) {
+        matmul_packed_with(a, &gemm::pack_b(b), cfg)
+    } else {
+        matmul_naive_with(a, b, cfg)
+    }
+}
+
+/// C = A @ B over an already-packed B — the fused quantize-on-pack
+/// entry: `runtime::host` builds the pack while quantizing the operand,
+/// then calls this directly, skipping one full materialize+re-read
+/// pass. Bitwise equal to [`matmul_with`] on the equivalent tensor.
+pub fn matmul_packed_with(a: &Tensor, bp: &PackedB, cfg: &Parallelism) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    assert_eq!(k, bp.k, "matmul inner dims: {k} vs {}", bp.k);
+    let n = bp.n;
+    let mut c = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let cfg = cfg.gate(m * n);
+    let bounds = par::chunk_bounds(m, cfg.threads);
+    par::par_panels(&cfg, &bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
+        gemm::nn_panel(ad, k, bp, cd, r0, r1);
+    });
+    c
+}
+
+/// The original naive i/k/j loop — the scalar parity oracle and the
+/// small-product path.
+pub fn matmul_naive_with(a: &Tensor, b: &Tensor, cfg: &Parallelism) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
@@ -64,6 +116,25 @@ pub fn matmul_tn_with(a: &Tensor, b: &Tensor, cfg: &Parallelism) -> Tensor {
     let (k, m) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2);
+    if !use_blocked(cfg, m * k * n) {
+        return matmul_tn_naive_with(a, b, cfg);
+    }
+    let bp = gemm::pack_b(b);
+    let mut c = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let cfg = cfg.gate(m * n);
+    let bounds = par::chunk_bounds(m, cfg.threads);
+    par::par_panels(&cfg, &bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
+        gemm::tn_panel(ad, m, &bp, cd, r0, r1);
+    });
+    c
+}
+
+/// The naive `tn` reference loop.
+pub fn matmul_tn_naive_with(a: &Tensor, b: &Tensor, cfg: &Parallelism) -> Tensor {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
     let mut c = Tensor::zeros(&[m, n]);
     let (ad, bd) = (a.data(), b.data());
     let cfg = cfg.gate(m * n);
@@ -93,6 +164,26 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
 
 /// [`matmul_nt`] with an explicit [`Parallelism`].
 pub fn matmul_nt_with(a: &Tensor, b: &Tensor, cfg: &Parallelism) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
+    if !use_blocked(cfg, m * k * n) {
+        return matmul_nt_naive_with(a, b, cfg);
+    }
+    let bp = gemm::pack_bt(b);
+    let mut c = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let cfg = cfg.gate(m * n);
+    let bounds = par::chunk_bounds(m, cfg.threads);
+    par::par_panels(&cfg, &bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
+        gemm::nt_panel(ad, k, &bp, cd, r0, r1);
+    });
+    c
+}
+
+/// The naive `nt` reference loop (no zero-skip — a dot product per
+/// output element).
+pub fn matmul_nt_naive_with(a: &Tensor, b: &Tensor, cfg: &Parallelism) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (n, k2) = (b.rows(), b.cols());
     assert_eq!(k, k2);
@@ -188,6 +279,7 @@ pub fn mixed_gemm_with(
     let (ad, bd) = (a.data(), b.data());
     let n_bi = m.div_ceil(blk);
     let cfg = cfg.gate(m * n);
+    let blocked = cfg.kernel() == par::KernelMode::Blocked;
     let bounds = par::unit_panel_bounds(n_bi, blk, m, cfg.threads);
     let panel_macs: Vec<[u64; 4]> =
         par::par_panels(&cfg, &bounds, n, out.data_mut(), |_pi, (row0, row1), od| {
@@ -206,6 +298,22 @@ pub fn mixed_gemm_with(
                             ReprType::NvFp4 => 3,
                         };
                         macs[idx] += ((i1 - i0) * (j1 - j0) * (k1 - k0)) as u64;
+                        if blocked {
+                            // Register-tiled in-place kernel: identical
+                            // bk-then-kk per-element accumulation.
+                            crate::kernels::gemm::nn_block_inplace(
+                                ad,
+                                k,
+                                bd,
+                                n,
+                                od,
+                                row0,
+                                (i0, i1),
+                                (k0, k1),
+                                (j0, j1),
+                            );
+                            continue;
+                        }
                         for i in i0..i1 {
                             let orow = &mut od[(i - row0) * n..(i - row0) * n + n];
                             for kk in k0..k1 {
@@ -273,6 +381,64 @@ mod tests {
         assert_eq!(total, 10 * 6 * 8);
         assert!(rep.macs[2] > 0, "upcast MACs must be counted as BF16");
         assert!(rep.macs[0] > 0);
+    }
+
+    #[test]
+    fn blocked_dispatch_matches_naive_bitwise() {
+        use crate::util::par::{KernelMode, Parallelism};
+        // Shapes above BLOCKED_MIN_MACS so the default mode actually
+        // takes the packed kernels; zeros sprinkled in to exercise the
+        // skip path.
+        let mut a = Tensor::normal(&[33, 17], 1.0, 9);
+        for (i, v) in a.data_mut().iter_mut().enumerate() {
+            if i % 7 == 0 {
+                *v = 0.0;
+            }
+        }
+        let b = Tensor::normal(&[17, 29], 1.0, 10);
+        let blk = Parallelism::serial();
+        let scl = Parallelism::serial().with_kernel(KernelMode::Scalar);
+        assert_eq!(blk.kernel(), KernelMode::Blocked);
+
+        let want = matmul_with(&a, &b, &scl);
+        let got = matmul_with(&a, &b, &blk);
+        let packed = matmul_packed_with(&a, &crate::kernels::gemm::pack_b(&b), &blk);
+        for i in 0..want.len() {
+            assert_eq!(want.data()[i].to_bits(), got.data()[i].to_bits(), "nn {i}");
+            assert_eq!(want.data()[i].to_bits(), packed.data()[i].to_bits(), "packed {i}");
+        }
+
+        let at = a.transpose();
+        let w = matmul_tn_with(&at, &b, &scl);
+        let g = matmul_tn_with(&at, &b, &blk);
+        for i in 0..w.len() {
+            assert_eq!(w.data()[i].to_bits(), g.data()[i].to_bits(), "tn {i}");
+        }
+
+        let bt = b.transpose();
+        let w = matmul_nt_with(&a, &bt, &scl);
+        let g = matmul_nt_with(&a, &bt, &blk);
+        for i in 0..w.len() {
+            assert_eq!(w.data()[i].to_bits(), g.data()[i].to_bits(), "nt {i}");
+        }
+    }
+
+    #[test]
+    fn mixed_gemm_blocked_matches_scalar_bitwise() {
+        use crate::util::par::{KernelMode, Parallelism};
+        let a = Tensor::normal(&[26, 19], 1.0, 21);
+        let b = Tensor::normal(&[19, 23], 1.0, 22);
+        let ta = BlockTypes::uniform(26, 19, 8, ReprType::E4M3);
+        let mut tb = BlockTypes::uniform(19, 23, 8, ReprType::E4M3);
+        tb.grid[0][0] = ReprType::Bf16;
+        let blk = Parallelism::serial();
+        let scl = Parallelism::serial().with_kernel(KernelMode::Scalar);
+        let w = mixed_gemm_with(&a, &ta, &b, &tb, &scl);
+        let g = mixed_gemm_with(&a, &ta, &b, &tb, &blk);
+        assert_eq!(w.macs, g.macs);
+        for i in 0..w.out.len() {
+            assert_eq!(w.out.data()[i].to_bits(), g.out.data()[i].to_bits(), "mixed {i}");
+        }
     }
 
     #[test]

@@ -64,6 +64,22 @@ use std::sync::{Arc, Condvar, Mutex};
 /// more than the quantization itself).
 pub const DEFAULT_MIN_ITEMS: usize = 8192;
 
+/// Which numeric kernel implementation the hot loops run: the
+/// table-driven/blocked kernel layer (`crate::kernels`, the default) or
+/// the original scalar reference loops. Both are **bit-identical by
+/// contract** (the kernel layer only reorders memory traffic, never the
+/// per-element floating-point evaluation order); the scalar mode
+/// survives as the parity oracle for tests and the `scalar`-labelled
+/// bench rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// LUT QDQ + packed cache-blocked GEMM microkernels (default).
+    #[default]
+    Blocked,
+    /// The original per-element/naive-triple-loop reference kernels.
+    Scalar,
+}
+
 /// Which execution engine a [`Parallelism`] dispatches chunks on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Engine {
@@ -97,6 +113,7 @@ pub struct Parallelism {
     /// `threads > 1`.
     pub min_items: usize,
     engine: Engine,
+    kernel: KernelMode,
     pool: Option<Arc<WorkerPool>>,
 }
 
@@ -105,6 +122,7 @@ impl PartialEq for Parallelism {
         self.threads == other.threads
             && self.min_items == other.min_items
             && self.engine == other.engine
+            && self.kernel == other.kernel
     }
 }
 
@@ -113,7 +131,13 @@ impl Eq for Parallelism {}
 impl Parallelism {
     /// Strictly serial execution (no pool behind it).
     pub fn serial() -> Parallelism {
-        Parallelism { threads: 1, min_items: usize::MAX, engine: Engine::Steal, pool: None }
+        Parallelism {
+            threads: 1,
+            min_items: usize::MAX,
+            engine: Engine::Steal,
+            kernel: KernelMode::default(),
+            pool: None,
+        }
     }
 
     /// `n` chunk runners with the default serial cutoff.
@@ -127,7 +151,13 @@ impl Parallelism {
     pub fn pooled(threads: usize, min_items: usize) -> Parallelism {
         let threads = threads.max(1);
         let pool = (threads > 1).then(|| Arc::new(WorkerPool::new(threads)));
-        Parallelism { threads, min_items, engine: Engine::Steal, pool }
+        Parallelism {
+            threads,
+            min_items,
+            engine: Engine::Steal,
+            kernel: KernelMode::default(),
+            pool,
+        }
     }
 
     /// Autodetect: `MOR_THREADS` env override, else the machine's
@@ -135,8 +165,8 @@ impl Parallelism {
     /// cutoff (the CI-tuning twin of the `--par-min-block` flag).
     ///
     /// # Panics
-    /// When `MOR_THREADS` or `MOR_PAR_MIN_BLOCK` is set but not a
-    /// positive integer. A silent fallback here used to hide typos
+    /// When `MOR_THREADS`, `MOR_PAR_MIN_BLOCK` or `MOR_SCALAR_KERNELS`
+    /// is set but malformed. A silent fallback here used to hide typos
     /// (`MOR_THREADS=O8` ran serial); misconfiguring the determinism
     /// matrix should be loud.
     pub fn auto() -> Parallelism {
@@ -149,6 +179,9 @@ impl Parallelism {
         let mut p = Parallelism::with_threads(threads);
         if let Some(n) = env_min_items() {
             p.min_items = n;
+        }
+        if env_scalar_kernels() {
+            p.kernel = KernelMode::Scalar;
         }
         p
     }
@@ -173,6 +206,20 @@ impl Parallelism {
         self.engine
     }
 
+    /// This handle switched to `kernel` mode. Results are bit-identical
+    /// either way; [`KernelMode::Scalar`] keeps the original reference
+    /// loops reachable as the parity oracle / bench baseline.
+    pub fn with_kernel(mut self, kernel: KernelMode) -> Parallelism {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The kernel implementation the numeric hot loops run under this
+    /// handle.
+    pub fn kernel(&self) -> KernelMode {
+        self.kernel
+    }
+
     /// The pool behind this handle (`None` for serial / spawn configs).
     pub fn worker_pool(&self) -> Option<&WorkerPool> {
         self.pool.as_deref()
@@ -184,12 +231,16 @@ impl Parallelism {
     }
 
     /// This config with the serial cutoff applied for an `items`-sized
-    /// workload: unchanged when large enough, serial otherwise.
+    /// workload: unchanged when large enough, serial otherwise. The
+    /// kernel mode survives gating — a scalar-oracle run stays scalar
+    /// below the cutoff too, so bench baselines are not polluted.
     pub fn gate(&self, items: usize) -> Parallelism {
         if self.should_parallelize(items) {
             self.clone()
         } else {
-            Parallelism::serial()
+            let mut s = Parallelism::serial();
+            s.kernel = self.kernel;
+            s
         }
     }
 }
@@ -247,6 +298,35 @@ pub fn env_min_items() -> Option<usize> {
     match parse_par_min_block(env.as_deref()) {
         Ok(v) => v,
         Err(msg) => panic!("MOR_PAR_MIN_BLOCK {msg}"),
+    }
+}
+
+/// Parse a `MOR_SCALAR_KERNELS` value with the usual strictness:
+/// `Ok(None)` when unset, `Ok(Some(true/false))` for `1`/`0`, and a
+/// clear error for anything else — a typo must not silently select a
+/// kernel implementation.
+pub fn parse_scalar_kernels(raw: Option<&str>) -> Result<Option<bool>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    match raw.trim() {
+        "1" => Ok(Some(true)),
+        "0" => Ok(Some(false)),
+        other => Err(format!(
+            "MOR_SCALAR_KERNELS must be 1 (scalar oracle) or 0 (blocked kernels), \
+             got {other:?}"
+        )),
+    }
+}
+
+/// The `MOR_SCALAR_KERNELS` oracle override ([`Parallelism::auto`]):
+/// `true` forces [`KernelMode::Scalar`] on auto-configured handles.
+///
+/// # Panics
+/// When the variable is set but not `0`/`1`.
+pub fn env_scalar_kernels() -> bool {
+    let env = std::env::var("MOR_SCALAR_KERNELS").ok();
+    match parse_scalar_kernels(env.as_deref()) {
+        Ok(v) => v.unwrap_or(false),
+        Err(msg) => panic!("{msg}"),
     }
 }
 
@@ -1122,6 +1202,21 @@ impl<'a, T> DisjointWriter<'a, T> {
         debug_assert!(i < self.len);
         unsafe { *self.ptr.add(i) = v };
     }
+
+    /// A mutable view of the contiguous range `start..start + len` —
+    /// the slice-kernel entry point (`crate::kernels` QDQ segments
+    /// write whole block-row fragments at once instead of per-element).
+    ///
+    /// # Safety
+    /// `start + len <= self.len()`, and no concurrent access (read or
+    /// write) to any index in the range for the lifetime of the
+    /// returned slice. Partition-block disjointness gives exactly this.
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start.checked_add(len).is_some_and(|end| end <= self.len));
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
+    }
 }
 
 /// Convenience: chunk boundaries in *row* space for panels aligned to
@@ -1150,6 +1245,17 @@ pub fn engine_comparison_rows() -> Vec<(&'static str, Parallelism)> {
         ("spawn", Parallelism::auto().with_engine(Engine::Spawn)),
         ("pool", Parallelism::auto().with_engine(Engine::Pool)),
         ("steal", Parallelism::auto()),
+    ]
+}
+
+/// The two kernel-implementation rows the perf benches compare at the
+/// default engine/thread configuration: the original scalar reference
+/// loops vs the table-driven/blocked kernel layer. Bit-identical
+/// results by contract — only the wall clock differs.
+pub fn kernel_comparison_rows() -> Vec<(&'static str, Parallelism)> {
+    vec![
+        ("scalar", Parallelism::auto().with_kernel(KernelMode::Scalar)),
+        ("kernel", Parallelism::auto().with_kernel(KernelMode::Blocked)),
     ]
 }
 
@@ -1257,6 +1363,52 @@ mod tests {
         assert!(parse_mor_threads(Some("eight")).is_err());
         assert!(parse_mor_threads(Some("")).is_err());
         assert!(parse_mor_threads(Some("  ")).is_err());
+    }
+
+    #[test]
+    fn kernel_mode_defaults_rides_gate_and_compares() {
+        let cfg = Parallelism::pooled(4, 100);
+        assert_eq!(cfg.kernel(), KernelMode::Blocked);
+        let scalar = cfg.clone().with_kernel(KernelMode::Scalar);
+        assert_eq!(scalar.kernel(), KernelMode::Scalar);
+        assert_ne!(scalar, cfg, "kernel mode must participate in Eq");
+        // Gating below the cutoff keeps the oracle mode.
+        assert_eq!(scalar.gate(1).kernel(), KernelMode::Scalar);
+        assert_eq!(scalar.gate(1).threads, 1);
+        assert_eq!(cfg.gate(1_000_000).kernel(), KernelMode::Blocked);
+        // The bench rows cover both modes.
+        let rows = kernel_comparison_rows();
+        let labels: Vec<&str> = rows.iter().map(|(l, _)| *l).collect();
+        assert_eq!(labels, ["scalar", "kernel"]);
+        assert_eq!(rows[0].1.kernel(), KernelMode::Scalar);
+        assert_eq!(rows[1].1.kernel(), KernelMode::Blocked);
+    }
+
+    #[test]
+    fn scalar_kernels_parsing_is_strict() {
+        assert_eq!(parse_scalar_kernels(None), Ok(None));
+        assert_eq!(parse_scalar_kernels(Some("1")), Ok(Some(true)));
+        assert_eq!(parse_scalar_kernels(Some(" 0 ")), Ok(Some(false)));
+        assert!(parse_scalar_kernels(Some("yes")).is_err());
+        assert!(parse_scalar_kernels(Some("")).is_err());
+    }
+
+    #[test]
+    fn disjoint_writer_slices_from_threads() {
+        let mut data = vec![0f32; 64];
+        {
+            let w = DisjointWriter::new(&mut data);
+            let cfg = Parallelism::pooled(4, 1);
+            par_map(&cfg, 8, |i| {
+                let seg = unsafe { w.slice_mut(i * 8, 8) };
+                for (j, v) in seg.iter_mut().enumerate() {
+                    *v = (i * 8 + j) as f32;
+                }
+            });
+        }
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
     }
 
     #[test]

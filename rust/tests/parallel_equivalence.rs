@@ -5,24 +5,33 @@
 //! deque/steal scheduler (default), the legacy shared-queue pool, the
 //! spawn engine, and at whatever thread count `MOR_THREADS` selects
 //! (the CI determinism matrix runs this suite at 1, 2, 4 and 13
-//! threads; 2 is the minimal stealing case). Also pins
-//! `Histogram::bin_of` to the paper's 0.5%-wide bin edges.
+//! threads; 2 is the minimal stealing case). The kernel layer extends
+//! the same contract along a second axis: the packed/blocked GEMM
+//! microkernels, the LUT QDQ and the fused quantize-on-pack path must
+//! all match the scalar reference loops bitwise
+//! (`blocked_gemm_equals_naive_bitwise_adversarial`,
+//! `fused_pack_equals_quantize_then_matmul_bitwise`,
+//! `host_train_step_kernel_engine_equals_scalar_oracle_bitwise`).
+//! Also pins `Histogram::bin_of` to the paper's 0.5%-wide bin edges.
 
 use mor::coordinator::checkpoint::Checkpoint;
 use mor::coordinator::trainer::{TrainOutcome, Trainer, TrainerOptions};
 use mor::formats::ReprType;
+use mor::kernels::gemm::{nt_panel, pack_b, pack_bt, tn_panel, NR};
 use mor::model::config::{ModelConfig, TrainConfig};
 use mor::mor::recipes::{Recipe, RecipeKind, SubTensorMode};
 use mor::mor::stats::{Histogram, HIST_BINS};
 use mor::quant::fake_quant::fake_quantize_with;
 use mor::quant::partition::Partition;
+use mor::runtime::host::{mor_quantize, mor_quantize_packed, HostQuant};
 use mor::runtime::Runtime;
 use mor::scaling::{compute_scales_with, ScalingAlgo};
 use mor::tensor::ops::{
-    matmul_nt_with, matmul_tn_with, matmul_with, mixed_gemm_with, BlockTypes,
+    matmul_naive_with, matmul_nt_naive_with, matmul_nt_with, matmul_packed_with,
+    matmul_tn_naive_with, matmul_tn_with, matmul_with, mixed_gemm_with, BlockTypes,
 };
 use mor::tensor::Tensor;
-use mor::util::par::{Engine, Parallelism};
+use mor::util::par::{Engine, KernelMode, Parallelism};
 use mor::util::proptest::{prop, Gen};
 
 /// A worker pool with the serial cutoff disabled, so even tiny test
@@ -318,6 +327,162 @@ fn auto_env_config_matches_serial_bitwise() {
     assert_bits_eq(a.data(), b.data(), "auto-config matmul");
 }
 
+/// The packed register-tiled GEMM kernels are bitwise equal to the
+/// naive reference loops across adversarial shapes: 1×1, k=1, single
+/// row/column, register-tile boundaries (MR/NR ± 1), worker-count ± 1
+/// row counts, and ragged everything — forced through the blocked
+/// kernels directly (below the dispatch cutoff) and through the
+/// dispatching entry points at the CI matrix thread counts.
+#[test]
+fn blocked_gemm_equals_naive_bitwise_adversarial() {
+    let mk = |rows: usize, cols: usize, seed: u64| {
+        let mut t = Tensor::normal(&[rows, cols], 1.0, seed);
+        for (i, v) in t.data_mut().iter_mut().enumerate() {
+            if i % 4 == 0 {
+                *v = 0.0; // exercise the zero-skip paths
+            }
+        }
+        t
+    };
+    let ser = Parallelism::serial();
+    let shapes: Vec<(usize, usize, usize)> = vec![
+        (1, 1, 1),
+        (1, 5, 1),
+        (3, 1, NR + 1),
+        (2, 7, NR - 1),
+        (4, 16, NR),
+        (5, 40, 2),
+        (12, 3, 2 * NR + 3),
+        (13, 17, 33), // above the dispatch cutoff
+        (33, 29, 31),
+    ];
+    for &(m, k, n) in &shapes {
+        let a = mk(m, k, (m * 7 + k) as u64 + 1);
+        let b = mk(k, n, (k * 5 + n) as u64 + 2);
+        let at = a.transpose();
+        let bt = b.transpose();
+        let nn_ref = matmul_naive_with(&a, &b, &ser);
+        let tn_ref = matmul_tn_naive_with(&at, &b, &ser);
+        let nt_ref = matmul_nt_naive_with(&a, &bt, &ser);
+
+        // Forced blocked kernels (no size cutoff): packed nn entry,
+        // tn/nt panel kernels over the full row range.
+        let bp = pack_b(&b);
+        assert_bits_eq(
+            matmul_packed_with(&a, &bp, &ser).data(),
+            nn_ref.data(),
+            &format!("packed nn {m}x{k}x{n}"),
+        );
+        let mut c = Tensor::zeros(&[m, n]);
+        tn_panel(at.data(), m, &bp, c.data_mut(), 0, m);
+        assert_bits_eq(c.data(), tn_ref.data(), &format!("blocked tn {m}x{k}x{n}"));
+        let btp = pack_bt(&bt);
+        let mut c = Tensor::zeros(&[m, n]);
+        nt_panel(a.data(), k, &btp, c.data_mut(), 0, m);
+        assert_bits_eq(c.data(), nt_ref.data(), &format!("blocked nt {m}x{k}x{n}"));
+
+        // Dispatching entry points at the CI matrix thread counts (the
+        // kernel engine is the default mode): parallel blocked ≡
+        // serial naive, for worker counts straddling the row count.
+        for threads in [2usize, 3, 13] {
+            let cfg = pool(threads);
+            assert_eq!(cfg.kernel(), KernelMode::Blocked);
+            assert_bits_eq(
+                matmul_with(&a, &b, &cfg).data(),
+                nn_ref.data(),
+                &format!("nn dispatch {m}x{k}x{n} t{threads}"),
+            );
+            assert_bits_eq(
+                matmul_tn_with(&at, &b, &cfg).data(),
+                tn_ref.data(),
+                &format!("tn dispatch {m}x{k}x{n} t{threads}"),
+            );
+            assert_bits_eq(
+                matmul_nt_with(&a, &bt, &cfg).data(),
+                nt_ref.data(),
+                &format!("nt dispatch {m}x{k}x{n} t{threads}"),
+            );
+        }
+    }
+}
+
+/// Fused quantize-on-pack ≡ quantize-then-matmul, bitwise: for every
+/// recipe class (incl. per-channel partitions, where the backward dy
+/// requantizes per direction), `mor_quantize_packed` + the packed GEMM
+/// must reproduce `mor_quantize` + the dispatching GEMM exactly, and
+/// the scalar oracle must agree with both.
+#[test]
+fn fused_pack_equals_quantize_then_matmul_bitwise() {
+    let mut w = Tensor::normal(&[20, 24], 1.0, 31);
+    for (i, v) in w.data_mut().iter_mut().enumerate() {
+        *v *= (10.0f32).powi((i % 9) as i32 - 4); // wide range → mixed decisions
+    }
+    let x = Tensor::normal(&[17, 20], 0.7, 32);
+    for (recipe, partition, scaling) in [
+        ("baseline", "tensor", "gam"),
+        ("tensor_level", "block128x128", "gam"),
+        ("subtensor2", "block4x4", "gam"),
+        ("subtensor3", "block4x4", "gam"),
+        ("subtensor3", "channel", "amax"),
+    ] {
+        let q = HostQuant::from_fields(recipe, partition, scaling).unwrap();
+        for threads in [1usize, 2, 13] {
+            let cfg = if threads == 1 { Parallelism::serial() } else { pool(threads) };
+            let scalar_cfg = cfg.clone().with_kernel(KernelMode::Scalar);
+            let (qw, re_m, fb_m) = mor_quantize(&q, &w, 0.045, 1, &cfg);
+            let (pw, re_p, fb_p) = mor_quantize_packed(&q, &w, 0.045, 1, &cfg);
+            assert_eq!(re_m.to_bits(), re_p.to_bits(), "{recipe} relerr t{threads}");
+            assert_eq!(fb_m.to_bits(), fb_p.to_bits(), "{recipe} fallback t{threads}");
+            assert_bits_eq(
+                pack_b(&qw).data(),
+                pw.data(),
+                &format!("{recipe}/{partition} fused pack t{threads}"),
+            );
+            // quantize → matmul along three routes: fused-packed,
+            // materialized blocked, materialized scalar oracle.
+            let fused = matmul_packed_with(&x, &pw, &cfg);
+            let unfused = matmul_with(&x, &qw, &cfg);
+            let (qw_s, _, _) = mor_quantize(&q, &w, 0.045, 1, &scalar_cfg);
+            let scalar = matmul_with(&x, &qw_s, &scalar_cfg);
+            assert_bits_eq(fused.data(), unfused.data(), &format!("{recipe} fused GEMM"));
+            assert_bits_eq(fused.data(), scalar.data(), &format!("{recipe} scalar GEMM"));
+        }
+    }
+}
+
+/// The kernel engine (LUT QDQ + packed GEMM + fused pack) and the
+/// scalar oracle produce bit-identical full host train steps at the CI
+/// matrix thread counts — the end-to-end statement of the kernel
+/// layer's bit-exactness contract.
+#[test]
+fn host_train_step_kernel_engine_equals_scalar_oracle_bitwise() {
+    let run = |par: Parallelism| -> (Vec<u32>, Vec<f32>, Vec<f32>) {
+        let rt = Runtime::host(ModelConfig::TINY).with_parallelism(par);
+        let mut s = rt.train_session("train_mor_subtensor_three_way", 23).unwrap();
+        let tokens: Vec<i32> = (0..s.batch * s.seq).map(|i| (i % 239) as i32).collect();
+        let mut losses = Vec::new();
+        let mut out = None;
+        for _ in 0..2 {
+            let o = s.step(&tokens, 1e-3, 0.045).unwrap();
+            losses.push(o.loss.to_bits());
+            out = Some(o);
+        }
+        let o = out.unwrap();
+        (losses, o.relerr, o.fallback)
+    };
+    let oracle = run(Parallelism::serial().with_kernel(KernelMode::Scalar));
+    let kernel_serial = run(Parallelism::serial());
+    assert_eq!(oracle.0, kernel_serial.0, "serial kernel engine diverged from oracle");
+    assert_bits_eq(&oracle.1, &kernel_serial.1, "relerr slots (serial)");
+    assert_bits_eq(&oracle.2, &kernel_serial.2, "fallback slots (serial)");
+    for threads in [2, 13] {
+        let kernel = run(pool(threads));
+        assert_eq!(oracle.0, kernel.0, "kernel engine diverged at {threads} threads");
+        assert_bits_eq(&oracle.1, &kernel.1, "relerr slots");
+        assert_bits_eq(&oracle.2, &kernel.2, "fallback slots");
+    }
+}
+
 /// The full overlapped host train step — pipeline-parallel operand
 /// quantizations inside `linear_bwd`, GEMM overlap, pool engine — is
 /// bit-identical to the strictly serial step, including at the awkward
@@ -529,8 +694,20 @@ fn resume_equals_continuous_bitwise() {
     assert!(trainer.run(&bad).is_err(), "steps mismatch must be rejected");
     let mut bad = mk_opts(TOTAL, base.join("bad"), Parallelism::auto());
     bad.threshold = 0.05;
-    bad.resume = Some(ckpt);
+    bad.resume = Some(ckpt.clone());
     assert!(trainer.run(&bad).is_err(), "threshold mismatch must be rejected");
+
+    // Digest guard: checkpoints store a metrics row-count + content
+    // hash and replay the prefix from the on-disk metrics.csv — a
+    // tampered file must be rejected loudly, never silently resumed.
+    let csv_path = base.join("auto_cont").join(format!("{ARTIFACT}.config1.csv"));
+    let original = std::fs::read_to_string(&csv_path).unwrap();
+    let mut lines: Vec<String> = original.lines().map(str::to_string).collect();
+    lines[1].push('1'); // corrupt the first data row
+    std::fs::write(&csv_path, lines.join("\n") + "\n").unwrap();
+    let mut bad = mk_opts(TOTAL, base.join("bad"), Parallelism::auto());
+    bad.resume = Some(ckpt);
+    assert!(trainer.run(&bad).is_err(), "metrics digest mismatch must be rejected");
     std::fs::remove_dir_all(base).ok();
 }
 

@@ -172,6 +172,44 @@ fn golden_trajectory_reproduced_exactly() {
     }
 }
 
+/// The legacy embedded-metrics checkpoint representation (the
+/// `--embed-metrics` flag) still resumes bitwise — both `MetricsState`
+/// codec paths are exercised (the digest default is covered by
+/// `resume_equals_continuous_bitwise` in parallel_equivalence.rs).
+#[test]
+fn embedded_metrics_checkpoints_still_resume_bitwise() {
+    const ARTIFACT: &str = "train_mor_tensor_block";
+    let rt = Runtime::host(ModelConfig::TINY);
+    let trainer = Trainer::new(&rt, TrainConfig::config1(4));
+    let base = tmpdir("embed_resume");
+    let mk = |out: std::path::PathBuf, resume: Option<std::path::PathBuf>| {
+        let mut o = TrainerOptions::new(ARTIFACT, 4, out);
+        o.val_every = 2;
+        o.ckpt_every = 2;
+        o.embed_metrics = true;
+        o.quiet = true;
+        o.resume = resume;
+        o.parallelism = Some(Parallelism::auto());
+        o
+    };
+    let cont = trainer.run(&mk(base.join("cont"), None)).unwrap();
+    let ckpt = base.join("cont").join(format!("{ARTIFACT}.step2.ckpt"));
+    assert!(ckpt.exists(), "embedded-mode checkpoint missing");
+    // The embedded representation really is in the file (not a digest).
+    let ck = mor::coordinator::checkpoint::TrainCheckpoint::load(&ckpt).unwrap();
+    assert!(ck.metrics.embedded().is_some(), "embed_metrics must embed the rows");
+    assert_eq!(ck.metrics.rows(), 2);
+    let res = trainer.run(&mk(base.join("res"), Some(ckpt))).unwrap();
+    assert_eq!(cont.records.len(), res.records.len());
+    for (a, b) in cont.records.iter().zip(res.records.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "step {}", a.step);
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(), "step {}", a.step);
+        assert_eq!(a.param_norm.to_bits(), b.param_norm.to_bits(), "step {}", a.step);
+    }
+    std::fs::remove_dir_all(base).ok();
+}
+
 #[test]
 fn host_baseline_loss_decreases() {
     let rt = Runtime::host(ModelConfig::TINY);
