@@ -2,12 +2,12 @@
 //! blocked GEMM (which also models the fp8-vs-upcast MAC accounting),
 //! serial vs spawn vs the shared-queue pool vs the deque/steal
 //! scheduler over output-row panels, plus the kernel-layer rows —
-//! **naive triple loop vs packed register-tiled microkernel** for
-//! every variant, and **fused quantize-on-pack vs quantize-then-pack**
-//! for the MoR linear-operand path.
+//! **naive triple loop vs packed register-tiled microkernel vs the
+//! AVX2 SIMD twin** for every variant, and **fused quantize-on-pack vs
+//! quantize-then-pack** for the MoR linear-operand path.
 //!
 //! `--json <path>` merges the rows into the machine-readable perf
-//! snapshot (`BENCH_5.json`); `--warmup-ms/--measure-ms/--min-batches`
+//! snapshot (`BENCH_6.json`); `--warmup-ms/--measure-ms/--min-batches`
 //! shrink the budgets for CI.
 
 use mor::formats::ReprType;
@@ -38,8 +38,10 @@ fn main() {
     tb.grid[1][1] = ReprType::E5M2;
 
     // Kernel-layer rows at the default engine/thread configuration:
-    // the scalar oracle (naive loops) vs the packed blocked kernels,
-    // per GEMM variant — the headline naive-vs-blocked comparison.
+    // the scalar oracle (naive loops) vs the packed blocked kernels vs
+    // the AVX2 SIMD microkernels, per GEMM variant — the headline
+    // scalar/blocked/simd comparison (the simd row falls back to
+    // blocked on hosts without AVX2).
     for (label, cfg) in kernel_comparison_rows() {
         let mut rows: Vec<(String, mor::util::bench::BenchResult)> = Vec::new();
         let r = bench(&format!("matmul_{N}_kernel_{label}"), &opts, || {

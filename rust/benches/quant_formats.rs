@@ -1,13 +1,13 @@
 //! Codec throughput: fp8/bf16/fp4 encode-decode and the fake-quant
-//! pipeline per element, the **scalar codec vs table-driven LUT QDQ**
-//! kernel comparison, plus the serial vs spawn vs pool vs steal
-//! comparison of the full fake-quant pipeline on the chunked engine.
-//! The L3-side perf floor for any host-side quantization work (paper
-//! Section 2 claims "negligible overhead" for GAM metadata; this bench
-//! quantifies the compute side).
+//! pipeline per element, the **scalar codec vs table-driven LUT QDQ vs
+//! AVX2 SIMD QDQ** kernel comparison, plus the serial vs spawn vs pool
+//! vs steal comparison of the full fake-quant pipeline on the chunked
+//! engine. The L3-side perf floor for any host-side quantization work
+//! (paper Section 2 claims "negligible overhead" for GAM metadata;
+//! this bench quantifies the compute side).
 //!
 //! `--json <path>` merges the rows into the machine-readable perf
-//! snapshot (`BENCH_5.json`); `--warmup-ms/--measure-ms/--min-batches`
+//! snapshot (`BENCH_6.json`); `--warmup-ms/--measure-ms/--min-batches`
 //! shrink the budgets for CI.
 
 use mor::formats::bf16;
@@ -146,8 +146,9 @@ fn main() {
         }
     }
     // Kernel-engine rows: the whole fake-quant pipeline under the
-    // scalar oracle vs the LUT/slice kernel layer at the default
-    // engine+thread configuration.
+    // scalar oracle vs the LUT/slice kernel layer vs the AVX2 segment
+    // QDQ at the default engine+thread configuration (the simd row
+    // falls back to the LUT kernel on hosts without AVX2).
     for (label, cfg) in kernel_comparison_rows() {
         let r = bench(&format!("fake_quant_e4m3_gam_block128_512x512_qdq_{label}"), &opts, || {
             let fq = fake_quantize_with(

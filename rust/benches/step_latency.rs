@@ -13,14 +13,16 @@
 //!   compiled-step latency per recipe variant, the standalone quant
 //!   kernel, and the eval step.
 //!
-//! The `host_*_step_kernels_{scalar,kernel}` row pair is the kernel
-//! layer's headline comparison: the same full train step under the
-//! scalar oracle (per-element QDQ + naive GEMM loops) vs the
+//! The `host_*_step_kernels_{scalar,kernel,simd}` row triple is the
+//! kernel layer's headline comparison: the same full train step under
+//! the scalar oracle (per-element QDQ + naive GEMM loops), the
 //! table-driven LUT QDQ + packed blocked GEMM + fused quantize-on-pack
-//! engine — bit-identical outputs, only wall clock differs.
+//! engine, and the AVX2 SIMD twins of both — bit-identical outputs,
+//! only wall clock differs. On hosts without AVX2 the `simd` row
+//! degenerates to the blocked row (same code path).
 //!
 //! `--json <path>` merges the rows into the machine-readable perf
-//! snapshot (`BENCH_5.json`); `--warmup-ms/--measure-ms/--min-batches`
+//! snapshot (`BENCH_6.json`); `--warmup-ms/--measure-ms/--min-batches`
 //! shrink the budgets for CI.
 
 use mor::data::loader::BatchLoader;
@@ -75,10 +77,11 @@ fn host_backend_section(opts: &BenchOptions, snap: &mut Option<JsonSnapshot>) {
         }
     }
     // Kernel-engine rows on the default (steal) scheduler: the scalar
-    // oracle vs the LUT QDQ + packed-GEMM + fused-pack layer, per
-    // artifact — the `step_latency` acceptance pair for the kernel
-    // rewrite (same step, same bits, different kernels).
-    println!("== host backend kernel rows (scalar oracle vs blocked kernel layer) ==");
+    // oracle vs the LUT QDQ + packed-GEMM + fused-pack layer vs the
+    // AVX2 SIMD kernels, per artifact — the `step_latency` acceptance
+    // rows for the kernel engine (same step, same bits, different
+    // kernels).
+    println!("== host backend kernel rows (scalar oracle vs blocked vs simd) ==");
     for artifact in ["train_baseline", "train_mor_tensor_block", "train_mor_subtensor_two_way"] {
         for (label, cfg) in kernel_comparison_rows() {
             let mut session =

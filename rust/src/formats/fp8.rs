@@ -85,9 +85,18 @@ pub trait Fp8Format {
             };
         }
         if x.is_infinite() {
-            return match (Self::HAS_INF, mode) {
-                (true, Rounding::NanOnOverflow) => sign | (exp_mask << Self::MAN_BITS),
-                _ => Self::encode_max_with_sign(sign, mode),
+            // Same policy as finite overflow below: ml_dtypes maps Inf to
+            // Inf (E5M2) or NaN (E4M3, which has no Inf encoding) in
+            // NanOnOverflow mode, and clamps to ±MAX in Saturate mode.
+            return match mode {
+                Rounding::Saturate => Self::encode_max_with_sign(sign, mode),
+                Rounding::NanOnOverflow => {
+                    if Self::HAS_INF {
+                        sign | (exp_mask << Self::MAN_BITS) // Inf
+                    } else {
+                        sign | (exp_mask << Self::MAN_BITS) | man_mask // NaN
+                    }
+                }
             };
         }
 
@@ -361,6 +370,15 @@ mod tests {
             E5M2::decode(E5M2::encode_with(70000.0, Rounding::Saturate)),
             57344.0
         );
+        // Inf input follows the same policy as finite overflow: E4M3 has
+        // no Inf encoding, so ml_dtypes maps it to NaN (byte 0x7f/0xff).
+        assert_eq!(E4M3::encode(f32::INFINITY), 0x7F);
+        assert_eq!(E4M3::encode(f32::NEG_INFINITY), 0xFF);
+        assert_eq!(
+            E4M3::decode(E4M3::encode_with(f32::INFINITY, Rounding::Saturate)),
+            448.0
+        );
+        assert_eq!(E5M2::encode(f32::NEG_INFINITY), 0xFC);
     }
 
     #[test]

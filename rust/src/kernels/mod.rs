@@ -24,13 +24,22 @@
 //!   sequence as the naive triple loop and the results are bitwise
 //!   equal (pinned by `rust/tests/parallel_equivalence.rs`).
 //!
+//! * [`simd`] — runtime-dispatched AVX2 twins of the GEMM microkernels
+//!   (and, in [`qdq`], of the FP8 segment QDQ): the same per-element
+//!   IEEE operation chains executed `NR` lanes at a time, with a
+//!   guaranteed fall-through to the scalar kernels where the ISA is
+//!   absent. FMA is deliberately never used — one rounding where the
+//!   reference takes two would break the bitwise contract.
+//!
 //! Selection rides the per-run [`crate::util::par::Parallelism`] handle
-//! ([`crate::util::par::KernelMode`]): `Blocked` (default) runs this
-//! layer, `Scalar` keeps the original reference loops reachable as the
-//! parity oracle and the bench baseline (`MOR_SCALAR_KERNELS=1` flips
-//! auto-configured handles). Because both modes are bit-identical, the
-//! parallel ≡ serial and resume ≡ continuous contracts are unaffected
-//! by which one runs.
+//! ([`crate::util::par::KernelMode`]): `Simd` (default) runs this layer
+//! with the vector kernels, `Blocked` pins it to the scalar blocked
+//! paths (`MOR_NO_SIMD=1` flips auto-configured handles), and `Scalar`
+//! keeps the original reference loops reachable as the parity oracle
+//! and the bench baseline (`MOR_SCALAR_KERNELS=1`). Because all three
+//! modes are bit-identical, the parallel ≡ serial and resume ≡
+//! continuous contracts are unaffected by which one runs.
 
 pub mod gemm;
 pub mod qdq;
+pub mod simd;

@@ -1,0 +1,384 @@
+//! Runtime-dispatched AVX2 vector microkernels for the packed GEMM
+//! layer, bit-identical to the scalar kernels in [`super::gemm`].
+//!
+//! ## Bit-exactness argument
+//!
+//! The scalar tile loop accumulates each output element as a strictly
+//! ascending-`k` chain of `acc[c] += a * brow[c]` f32 operations. The
+//! vector kernels here keep exactly that chain and only change *how
+//! many columns advance per instruction*: the [`NR`]-wide full panel is
+//! two 8-lane `__m256` registers, `a` is broadcast, and every `k` step
+//! performs one IEEE multiply then one IEEE add per lane —
+//! `_mm256_add_ps(acc, _mm256_mul_ps(a, b))`, never `_mm256_fmadd_ps`,
+//! because a fused multiply-add rounds once where the reference rounds
+//! twice and would break bitwise equality. Per-lane AVX mul/add are the
+//! same correctly-rounded IEEE 754 operations as their scalar
+//! counterparts, the reference zero-skip is evaluated scalar-side
+//! before the broadcast, and the ragged last panel (width < `NR`) runs
+//! the scalar tile loop verbatim — so SIMD ≡ blocked-scalar ≡ naive
+//! stays bitwise for every shape (pinned by the unit tests below and by
+//! `rust/tests/parallel_equivalence.rs`).
+//!
+//! ## Dispatch
+//!
+//! Every entry point checks [`available`] at runtime and falls back to
+//! the scalar kernel when AVX2 is absent (or off-x86); the fallback is
+//! the *same function* the `KernelMode::Blocked` oracle runs, so
+//! results never depend on the host ISA. The FP8 QDQ lane kernels live
+//! in [`super::qdq`] (they need the private encode tables) behind the
+//! same [`available`] gate.
+
+use super::gemm::{self, PackedB, MR, NR};
+
+// The vector kernels hardcode NR = two 8-lane registers.
+const _: () = assert!(NR == 16);
+
+/// Whether the AVX2 vector kernels can run on this host. Detection is
+/// cached by the standard library; callers may query per call.
+#[inline]
+pub fn available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// AVX2 [`gemm::nn_panel`]: C-panel rows `[r0, r1)` of `C = A @ B` with
+/// the reference zero-skip. Scalar fallback where AVX2 is absent.
+pub fn nn_panel(ad: &[f32], k: usize, bp: &PackedB, cd: &mut [f32], r0: usize, r1: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if available() {
+        unsafe {
+            avx2::tile_loop(bp, r0, r1, cd, |kk, i| {
+                let a = ad[i * k + kk];
+                if a == 0.0 {
+                    None
+                } else {
+                    Some(a)
+                }
+            });
+        }
+        return;
+    }
+    gemm::nn_panel(ad, k, bp, cd, r0, r1);
+}
+
+/// AVX2 [`gemm::tn_panel`]: C-panel rows of `C = A^T @ B` with the
+/// reference zero-skip. Scalar fallback where AVX2 is absent.
+pub fn tn_panel(ad: &[f32], m: usize, bp: &PackedB, cd: &mut [f32], r0: usize, r1: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if available() {
+        unsafe {
+            avx2::tile_loop(bp, r0, r1, cd, |kk, i| {
+                let a = ad[kk * m + i];
+                if a == 0.0 {
+                    None
+                } else {
+                    Some(a)
+                }
+            });
+        }
+        return;
+    }
+    gemm::tn_panel(ad, m, bp, cd, r0, r1);
+}
+
+/// AVX2 [`gemm::nt_panel`]: C-panel rows of `C = A @ B^T` over a
+/// [`gemm::pack_bt`] pack — **no** zero-skip, exactly like the
+/// reference `nt` loop. Scalar fallback where AVX2 is absent.
+pub fn nt_panel(ad: &[f32], k: usize, bp: &PackedB, cd: &mut [f32], r0: usize, r1: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if available() {
+        unsafe {
+            avx2::tile_loop(bp, r0, r1, cd, |kk, i| Some(ad[i * k + kk]));
+        }
+        return;
+    }
+    gemm::nt_panel(ad, k, bp, cd, r0, r1);
+}
+
+/// AVX2 [`gemm::nn_block_inplace`]: in-place register-tiled `C += A @ B`
+/// for one `(i, k, j)` block, reference zero-skip included. Scalar
+/// fallback where AVX2 is absent.
+#[allow(clippy::too_many_arguments)]
+pub fn nn_block_inplace(
+    ad: &[f32],
+    k: usize,
+    bd: &[f32],
+    n: usize,
+    od: &mut [f32],
+    row0: usize,
+    (i0, i1): (usize, usize),
+    (k0, k1): (usize, usize),
+    (j0, j1): (usize, usize),
+) {
+    #[cfg(target_arch = "x86_64")]
+    if available() {
+        unsafe {
+            avx2::nn_block_inplace(ad, k, bd, n, od, row0, (i0, i1), (k0, k1), (j0, j1));
+        }
+        return;
+    }
+    gemm::nn_block_inplace(ad, k, bd, n, od, row0, (i0, i1), (k0, k1), (j0, j1));
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{gemm, PackedB, MR, NR};
+    use std::arch::x86_64::*;
+
+    /// Vectorized twin of the scalar `tile_loop`: full-width `NR`
+    /// panels accumulate in two `__m256` registers per output row with
+    /// a separate multiply and add per `k` step (two roundings, same as
+    /// scalar — FMA deliberately not used); the ragged last panel runs
+    /// the scalar loop body verbatim. `a_at` is evaluated scalar-side
+    /// so the zero-skip decision is shared with the reference.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile_loop<F>(bp: &PackedB, r0: usize, r1: usize, cd: &mut [f32], a_at: F)
+    where
+        F: Fn(usize, usize) -> Option<f32>,
+    {
+        let (k, n) = (bp.k, bp.n);
+        for p in 0..bp.panels() {
+            let j0 = p * NR;
+            let pb = bp.panel(p);
+            let jw = NR.min(n - j0);
+            let mut i = r0;
+            while i < r1 {
+                let mr = MR.min(r1 - i);
+                if jw == NR {
+                    let mut lo = [_mm256_setzero_ps(); MR];
+                    let mut hi = [_mm256_setzero_ps(); MR];
+                    for kk in 0..k {
+                        let brow = pb.as_ptr().add(kk * NR);
+                        let b0 = _mm256_loadu_ps(brow);
+                        let b1 = _mm256_loadu_ps(brow.add(8));
+                        let rows = lo.iter_mut().zip(hi.iter_mut()).enumerate().take(mr);
+                        for (r, (alo, ahi)) in rows {
+                            let Some(a) = a_at(kk, i + r) else { continue };
+                            let av = _mm256_set1_ps(a);
+                            *alo = _mm256_add_ps(*alo, _mm256_mul_ps(av, b0));
+                            *ahi = _mm256_add_ps(*ahi, _mm256_mul_ps(av, b1));
+                        }
+                    }
+                    for r in 0..mr {
+                        let at = (i + r - r0) * n + j0;
+                        _mm256_storeu_ps(cd.as_mut_ptr().add(at), lo[r]);
+                        _mm256_storeu_ps(cd.as_mut_ptr().add(at + 8), hi[r]);
+                    }
+                } else {
+                    // Ragged last panel: the scalar reference tile body.
+                    let mut acc = [[0f32; NR]; MR];
+                    for kk in 0..k {
+                        let brow = &pb[kk * jw..kk * jw + jw];
+                        for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                            let Some(a) = a_at(kk, i + r) else { continue };
+                            for c in 0..jw {
+                                accr[c] += a * brow[c];
+                            }
+                        }
+                    }
+                    for (r, accr) in acc.iter().enumerate().take(mr) {
+                        let at = (i + r - r0) * n + j0;
+                        cd[at..at + jw].copy_from_slice(&accr[..jw]);
+                    }
+                }
+                i += mr;
+            }
+        }
+    }
+
+    /// Vectorized twin of [`gemm::nn_block_inplace`]: C loads into the
+    /// tile registers before the `kk` loop and stores after it, so
+    /// accumulation order across successive k-blocks stays the naive
+    /// `bk`-then-`kk` sequence. Ragged `j` blocks delegate to the
+    /// scalar kernel.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn nn_block_inplace(
+        ad: &[f32],
+        k: usize,
+        bd: &[f32],
+        n: usize,
+        od: &mut [f32],
+        row0: usize,
+        (i0, i1): (usize, usize),
+        (k0, k1): (usize, usize),
+        (j0, j1): (usize, usize),
+    ) {
+        let mut jt = j0;
+        while jt < j1 {
+            let jw = NR.min(j1 - jt);
+            if jw < NR {
+                gemm::nn_block_inplace(ad, k, bd, n, od, row0, (i0, i1), (k0, k1), (jt, jt + jw));
+                jt += jw;
+                continue;
+            }
+            let mut i = i0;
+            while i < i1 {
+                let mr = MR.min(i1 - i);
+                let mut lo = [_mm256_setzero_ps(); MR];
+                let mut hi = [_mm256_setzero_ps(); MR];
+                for r in 0..mr {
+                    let at = (i + r - row0) * n + jt;
+                    lo[r] = _mm256_loadu_ps(od.as_ptr().add(at));
+                    hi[r] = _mm256_loadu_ps(od.as_ptr().add(at + 8));
+                }
+                for kk in k0..k1 {
+                    let brow = bd.as_ptr().add(kk * n + jt);
+                    let b0 = _mm256_loadu_ps(brow);
+                    let b1 = _mm256_loadu_ps(brow.add(8));
+                    for (r, (alo, ahi)) in lo.iter_mut().zip(hi.iter_mut()).enumerate().take(mr) {
+                        let a = ad[(i + r) * k + kk];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let av = _mm256_set1_ps(a);
+                        *alo = _mm256_add_ps(*alo, _mm256_mul_ps(av, b0));
+                        *ahi = _mm256_add_ps(*ahi, _mm256_mul_ps(av, b1));
+                    }
+                }
+                for r in 0..mr {
+                    let at = (i + r - row0) * n + jt;
+                    _mm256_storeu_ps(od.as_mut_ptr().add(at), lo[r]);
+                    _mm256_storeu_ps(od.as_mut_ptr().add(at + 8), hi[r]);
+                }
+                i += mr;
+            }
+            jt += jw;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn mat(rows: usize, cols: usize, seed: u64, with_zeros: bool) -> Tensor {
+        let mut t = Tensor::normal(&[rows, cols], 1.0, seed);
+        if with_zeros {
+            for (i, v) in t.data_mut().iter_mut().enumerate() {
+                if i % 5 == 0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        t
+    }
+
+    fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what} len");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} element {i}: {x} vs {y}");
+        }
+    }
+
+    /// SIMD ≡ scalar for every panel variant over the adversarial shape
+    /// set. On hosts without AVX2 the SIMD entry points *are* the
+    /// scalar kernels, so this documents the fallback rather than
+    /// proving vector parity — CI's x86 runners prove both.
+    #[test]
+    fn simd_panels_match_scalar_bitwise_adversarial_shapes() {
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (1, 7, 1),
+            (5, 1, 9),
+            (MR, 3, NR),
+            (MR + 1, 5, NR + 1),
+            (MR - 1, 4, NR - 1),
+            (13, 17, 33),
+            (16, 16, 16),
+            (3, 64, 2),
+            (9, 8, 2 * NR),
+        ];
+        for (m, k, n) in shapes {
+            let a = mat(m, k, (m * 31 + n) as u64, true);
+            let b = mat(k, n, (k * 17 + n) as u64 + 1, true);
+
+            let bp = gemm::pack_b(&b);
+            let mut want = vec![0f32; m * n];
+            let mut got = vec![0f32; m * n];
+            gemm::nn_panel(a.data(), k, &bp, &mut want, 0, m);
+            nn_panel(a.data(), k, &bp, &mut got, 0, m);
+            assert_bits(&got, &want, &format!("nn {m}x{k}x{n}"));
+
+            let at = a.transpose();
+            let mut want = vec![0f32; m * n];
+            let mut got = vec![0f32; m * n];
+            gemm::tn_panel(at.data(), m, &bp, &mut want, 0, m);
+            tn_panel(at.data(), m, &bp, &mut got, 0, m);
+            assert_bits(&got, &want, &format!("tn {m}x{k}x{n}"));
+
+            let bt = b.transpose();
+            let btp = gemm::pack_bt(&bt);
+            let mut want = vec![0f32; m * n];
+            let mut got = vec![0f32; m * n];
+            gemm::nt_panel(a.data(), k, &btp, &mut want, 0, m);
+            nt_panel(a.data(), k, &btp, &mut got, 0, m);
+            assert_bits(&got, &want, &format!("nt {m}x{k}x{n}"));
+
+            // Split row panels (the par_panels decomposition).
+            if m > 2 {
+                let split = m / 2;
+                let mut got = vec![0f32; m * n];
+                let mut want = vec![0f32; m * n];
+                gemm::nn_panel(a.data(), k, &bp, &mut want, 0, m);
+                let (lo, hi) = got.split_at_mut(split * n);
+                nn_panel(a.data(), k, &bp, lo, 0, split);
+                nn_panel(a.data(), k, &bp, hi, split, m);
+                assert_bits(&got, &want, &format!("nn split {m}x{k}x{n}"));
+            }
+        }
+    }
+
+    /// The `nt` variant must keep `0 * Inf = NaN` (no zero-skip) and
+    /// `nn` must skip it, exactly like the scalar kernels.
+    #[test]
+    fn simd_zero_skip_matches_scalar_semantics() {
+        let a = Tensor::from_vec(&[1, 2], vec![0.0, 1.0]);
+        let bt = Tensor::from_vec(&[1, 2], vec![f32::INFINITY, 2.0]);
+        let btp = gemm::pack_bt(&bt);
+        let mut c = vec![0f32; 1];
+        nt_panel(a.data(), 2, &btp, &mut c, 0, 1);
+        assert!(c[0].is_nan(), "nt must not skip 0 * Inf");
+
+        let b = Tensor::from_vec(&[2, 1], vec![f32::INFINITY, 2.0]);
+        let bp = gemm::pack_b(&b);
+        let mut c = vec![0f32; 1];
+        nn_panel(a.data(), 2, &bp, &mut c, 0, 1);
+        assert_eq!(c[0], 2.0, "nn must skip the zero row");
+    }
+
+    /// In-place k-block accumulation: SIMD ≡ scalar across a two-block
+    /// schedule, including a ragged j tail.
+    #[test]
+    fn simd_block_inplace_matches_scalar_bitwise() {
+        for (m, k, n) in [(10usize, 9usize, 11usize), (7, 5, 2 * NR + 3), (MR, 4, NR)] {
+            let a = mat(m, k, 5, true);
+            let b = mat(k, n, 6, false);
+            let mut want = vec![0f32; m * n];
+            let mut got = vec![0f32; m * n];
+            let ksplit = k / 2;
+            for (k0, k1) in [(0usize, ksplit), (ksplit, k)] {
+                gemm::nn_block_inplace(
+                    a.data(),
+                    k,
+                    b.data(),
+                    n,
+                    &mut want,
+                    0,
+                    (0, m),
+                    (k0, k1),
+                    (0, n),
+                );
+                nn_block_inplace(a.data(), k, b.data(), n, &mut got, 0, (0, m), (k0, k1), (0, n));
+            }
+            assert_bits(&got, &want, &format!("block inplace {m}x{k}x{n}"));
+        }
+    }
+}

@@ -65,6 +65,7 @@ fn qdq_block_kernel(
     cols: usize,
     s: f32,
     sink: &DisjointWriter<f32>,
+    simd: bool,
 ) -> RelErrAccum {
     let mut acc = RelErrAccum::default();
     let width = b.c1 - b.c0;
@@ -73,7 +74,11 @@ fn qdq_block_kernel(
         let src = &xd[start..start + width];
         // Safety: partition blocks tile the tensor disjointly.
         let dst = unsafe { sink.slice_mut(start, width) };
-        qdq_kernel::qdq_segment_scaled(target, src, dst, s);
+        if simd {
+            qdq_kernel::qdq_segment_scaled_simd(target, src, dst, s);
+        } else {
+            qdq_kernel::qdq_segment_scaled(target, src, dst, s);
+        }
         for (v, q) in src.iter().zip(dst.iter()) {
             acc.add(*v, *q);
         }
@@ -152,7 +157,9 @@ pub fn fake_quantize_with(
 
     if target == ReprType::Bf16 {
         let mut out = x.clone();
-        let kernel = cfg.kernel() == KernelMode::Blocked;
+        // BF16's round trip is branch-free bit manipulation, so both
+        // kernel-layer modes run the same segment loop here.
+        let kernel = cfg.kernel() != KernelMode::Scalar;
         let per_block: Vec<(RelErrAccum, (f32, Option<f32>))> = {
             let sink = DisjointWriter::new(out.data_mut());
             par::par_map(&cfg, blocks.len(), |bi| {
@@ -218,10 +225,11 @@ pub fn fake_quantize_with(
     // Phase B — scale, cast, de-scale per block; disjoint writes into
     // the output, per-block accumulators merged in canonical order.
     // The kernel engine runs the slice-level LUT QDQ per block row
-    // segment; the scalar oracle keeps the per-element loop. Identical
-    // bits either way (parity pinned in tests and
-    // `parallel_equivalence.rs`).
-    let kernel = cfg.kernel() == KernelMode::Blocked;
+    // segment (AVX2 lanes under `KernelMode::Simd`); the scalar oracle
+    // keeps the per-element loop. Identical bits every way (parity
+    // pinned in tests and `parallel_equivalence.rs`).
+    let kernel = cfg.kernel() != KernelMode::Scalar;
+    let simd = cfg.kernel() == KernelMode::Simd;
     let mut out = Tensor::zeros(x.shape());
     let block_err: Vec<RelErrAccum> = {
         let sink = DisjointWriter::new(out.data_mut());
@@ -229,7 +237,7 @@ pub fn fake_quantize_with(
             let b = &blocks[bi];
             let s = scales.blocks[bi].scale;
             if kernel {
-                qdq_block_kernel(target, xd, b, cols, s, &sink)
+                qdq_block_kernel(target, xd, b, cols, s, &sink, simd)
             } else {
                 qdq_block_scalar(target, xd, b, cols, s, &sink)
             }
@@ -346,16 +354,18 @@ mod tests {
             ]);
             let s = *g.choose(&[ScalingAlgo::Gam, ScalingAlgo::AmaxFp32, ScalingAlgo::E8M0]);
             let scalar = Parallelism::serial().with_kernel(KernelMode::Scalar);
-            let kernel = Parallelism::serial(); // Blocked default
             let a = fake_quantize_with(&x, t, p, s, &scalar);
-            let b = fake_quantize_with(&x, t, p, s, &kernel);
-            for (i, (u, v)) in a.out.data().iter().zip(b.out.data()).enumerate() {
-                assert_eq!(u.to_bits(), v.to_bits(), "{t} {p:?} {s:?} element {i}");
+            for mode in [KernelMode::Blocked, KernelMode::Simd] {
+                let kernel = Parallelism::serial().with_kernel(mode);
+                let b = fake_quantize_with(&x, t, p, s, &kernel);
+                for (i, (u, v)) in a.out.data().iter().zip(b.out.data()).enumerate() {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{t} {p:?} {s:?} {mode:?} element {i}");
+                }
+                assert_eq!(a.block_err, b.block_err);
+                assert_eq!(a.global_err, b.global_err);
+                assert_eq!(a.block_range, b.block_range);
+                assert_eq!(a.scales.blocks, b.scales.blocks);
             }
-            assert_eq!(a.block_err, b.block_err);
-            assert_eq!(a.global_err, b.global_err);
-            assert_eq!(a.block_range, b.block_range);
-            assert_eq!(a.scales.blocks, b.scales.blocks);
             true
         });
     }

@@ -14,27 +14,59 @@
 //! are bit-identical to the serial path for any thread count (pinned by
 //! `rust/tests/parallel_equivalence.rs`).
 //!
-//! Inside each panel, two interchangeable kernel implementations exist,
-//! selected by the handle's [`crate::util::par::KernelMode`]: the
-//! original naive triple loops (`matmul_naive_with` & co., the parity
-//! oracle) and the packed register-tiled microkernels of
-//! [`crate::kernels::gemm`]. Both run the identical per-element
+//! Inside each panel, three interchangeable kernel implementations
+//! exist, selected by the handle's [`crate::util::par::KernelMode`]:
+//! the original naive triple loops (`matmul_naive_with` & co., the
+//! parity oracle), the packed register-tiled microkernels of
+//! [`crate::kernels::gemm`], and their runtime-dispatched AVX2 twins in
+//! [`crate::kernels::simd`]. All run the identical per-element
 //! floating-point sequence — including the zero-`a` skip — so outputs
-//! are bitwise equal; only memory traffic differs.
+//! are bitwise equal; only memory traffic and lane width differ.
 
 use super::Tensor;
 use crate::formats::ReprType;
 use crate::kernels::gemm::{self, PackedB};
+use crate::kernels::simd;
 use crate::util::par::{self, KernelMode, Parallelism};
 
 /// Below this many multiply-accumulates the operand-packing overhead of
 /// the blocked kernels outweighs their cache wins; such GEMMs take the
-/// naive loops even in [`KernelMode::Blocked`] (bit-identical either
+/// naive loops even in the kernel-layer modes (bit-identical either
 /// way, so the cutoff is pure scheduling).
 const BLOCKED_MIN_MACS: usize = 4096;
 
 fn use_blocked(cfg: &Parallelism, macs: usize) -> bool {
-    cfg.kernel() == KernelMode::Blocked && macs >= BLOCKED_MIN_MACS
+    cfg.kernel() != KernelMode::Scalar && macs >= BLOCKED_MIN_MACS
+}
+
+/// The panel microkernel for the handle's mode: the AVX2-dispatched
+/// entry under [`KernelMode::Simd`], the scalar blocked kernel
+/// otherwise. Both signatures are identical, so selection is one fn
+/// pointer resolved outside the parallel region.
+type PanelFn = fn(&[f32], usize, &PackedB, &mut [f32], usize, usize);
+
+fn nn_panel_for(cfg: &Parallelism) -> PanelFn {
+    if cfg.kernel() == KernelMode::Simd {
+        simd::nn_panel
+    } else {
+        gemm::nn_panel
+    }
+}
+
+fn tn_panel_for(cfg: &Parallelism) -> PanelFn {
+    if cfg.kernel() == KernelMode::Simd {
+        simd::tn_panel
+    } else {
+        gemm::tn_panel
+    }
+}
+
+fn nt_panel_for(cfg: &Parallelism) -> PanelFn {
+    if cfg.kernel() == KernelMode::Simd {
+        simd::nt_panel
+    } else {
+        gemm::nt_panel
+    }
 }
 
 /// Plain f32 GEMM: C = A @ B, parallel over output-row panels with the
@@ -68,9 +100,10 @@ pub fn matmul_packed_with(a: &Tensor, bp: &PackedB, cfg: &Parallelism) -> Tensor
     let mut c = Tensor::zeros(&[m, n]);
     let ad = a.data();
     let cfg = cfg.gate(m * n);
+    let panel = nn_panel_for(&cfg);
     let bounds = par::chunk_bounds(m, cfg.threads);
     par::par_panels(&cfg, &bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
-        gemm::nn_panel(ad, k, bp, cd, r0, r1);
+        panel(ad, k, bp, cd, r0, r1);
     });
     c
 }
@@ -123,9 +156,10 @@ pub fn matmul_tn_with(a: &Tensor, b: &Tensor, cfg: &Parallelism) -> Tensor {
     let mut c = Tensor::zeros(&[m, n]);
     let ad = a.data();
     let cfg = cfg.gate(m * n);
+    let panel = tn_panel_for(&cfg);
     let bounds = par::chunk_bounds(m, cfg.threads);
     par::par_panels(&cfg, &bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
-        gemm::tn_panel(ad, m, &bp, cd, r0, r1);
+        panel(ad, m, &bp, cd, r0, r1);
     });
     c
 }
@@ -174,9 +208,10 @@ pub fn matmul_nt_with(a: &Tensor, b: &Tensor, cfg: &Parallelism) -> Tensor {
     let mut c = Tensor::zeros(&[m, n]);
     let ad = a.data();
     let cfg = cfg.gate(m * n);
+    let panel = nt_panel_for(&cfg);
     let bounds = par::chunk_bounds(m, cfg.threads);
     par::par_panels(&cfg, &bounds, n, c.data_mut(), |_pi, (r0, r1), cd| {
-        gemm::nt_panel(ad, k, &bp, cd, r0, r1);
+        panel(ad, k, &bp, cd, r0, r1);
     });
     c
 }
@@ -279,7 +314,23 @@ pub fn mixed_gemm_with(
     let (ad, bd) = (a.data(), b.data());
     let n_bi = m.div_ceil(blk);
     let cfg = cfg.gate(m * n);
-    let blocked = cfg.kernel() == par::KernelMode::Blocked;
+    let blocked = cfg.kernel() != par::KernelMode::Scalar;
+    #[allow(clippy::type_complexity)]
+    let block_inplace: fn(
+        &[f32],
+        usize,
+        &[f32],
+        usize,
+        &mut [f32],
+        usize,
+        (usize, usize),
+        (usize, usize),
+        (usize, usize),
+    ) = if cfg.kernel() == par::KernelMode::Simd {
+        simd::nn_block_inplace
+    } else {
+        gemm::nn_block_inplace
+    };
     let bounds = par::unit_panel_bounds(n_bi, blk, m, cfg.threads);
     let panel_macs: Vec<[u64; 4]> =
         par::par_panels(&cfg, &bounds, n, out.data_mut(), |_pi, (row0, row1), od| {
@@ -301,17 +352,7 @@ pub fn mixed_gemm_with(
                         if blocked {
                             // Register-tiled in-place kernel: identical
                             // bk-then-kk per-element accumulation.
-                            crate::kernels::gemm::nn_block_inplace(
-                                ad,
-                                k,
-                                bd,
-                                n,
-                                od,
-                                row0,
-                                (i0, i1),
-                                (k0, k1),
-                                (j0, j1),
-                            );
+                            block_inplace(ad, k, bd, n, od, row0, (i0, i1), (k0, k1), (j0, j1));
                             continue;
                         }
                         for i in i0..i1 {
@@ -396,30 +437,36 @@ mod tests {
             }
         }
         let b = Tensor::normal(&[17, 29], 1.0, 10);
-        let blk = Parallelism::serial();
         let scl = Parallelism::serial().with_kernel(KernelMode::Scalar);
-        assert_eq!(blk.kernel(), KernelMode::Blocked);
-
+        assert_eq!(Parallelism::serial().kernel(), KernelMode::Simd);
         let want = matmul_with(&a, &b, &scl);
-        let got = matmul_with(&a, &b, &blk);
-        let packed = matmul_packed_with(&a, &crate::kernels::gemm::pack_b(&b), &blk);
-        for i in 0..want.len() {
-            assert_eq!(want.data()[i].to_bits(), got.data()[i].to_bits(), "nn {i}");
-            assert_eq!(want.data()[i].to_bits(), packed.data()[i].to_bits(), "packed {i}");
-        }
 
-        let at = a.transpose();
-        let w = matmul_tn_with(&at, &b, &scl);
-        let g = matmul_tn_with(&at, &b, &blk);
-        for i in 0..w.len() {
-            assert_eq!(w.data()[i].to_bits(), g.data()[i].to_bits(), "tn {i}");
-        }
+        for mode in [KernelMode::Blocked, KernelMode::Simd] {
+            let cfg = Parallelism::serial().with_kernel(mode);
+            let got = matmul_with(&a, &b, &cfg);
+            let packed = matmul_packed_with(&a, &crate::kernels::gemm::pack_b(&b), &cfg);
+            for i in 0..want.len() {
+                assert_eq!(want.data()[i].to_bits(), got.data()[i].to_bits(), "nn {mode:?} {i}");
+                assert_eq!(
+                    want.data()[i].to_bits(),
+                    packed.data()[i].to_bits(),
+                    "packed {mode:?} {i}"
+                );
+            }
 
-        let bt = b.transpose();
-        let w = matmul_nt_with(&a, &bt, &scl);
-        let g = matmul_nt_with(&a, &bt, &blk);
-        for i in 0..w.len() {
-            assert_eq!(w.data()[i].to_bits(), g.data()[i].to_bits(), "nt {i}");
+            let at = a.transpose();
+            let w = matmul_tn_with(&at, &b, &scl);
+            let g = matmul_tn_with(&at, &b, &cfg);
+            for i in 0..w.len() {
+                assert_eq!(w.data()[i].to_bits(), g.data()[i].to_bits(), "tn {mode:?} {i}");
+            }
+
+            let bt = b.transpose();
+            let w = matmul_nt_with(&a, &bt, &scl);
+            let g = matmul_nt_with(&a, &bt, &cfg);
+            for i in 0..w.len() {
+                assert_eq!(w.data()[i].to_bits(), g.data()[i].to_bits(), "nt {mode:?} {i}");
+            }
         }
     }
 
@@ -431,13 +478,19 @@ mod tests {
         let ta = BlockTypes::uniform(26, 19, 8, ReprType::E4M3);
         let mut tb = BlockTypes::uniform(19, 23, 8, ReprType::E4M3);
         tb.grid[0][0] = ReprType::Bf16;
-        let blk = Parallelism::serial();
         let scl = Parallelism::serial().with_kernel(KernelMode::Scalar);
         let w = mixed_gemm_with(&a, &ta, &b, &tb, &scl);
-        let g = mixed_gemm_with(&a, &ta, &b, &tb, &blk);
-        assert_eq!(w.macs, g.macs);
-        for i in 0..w.out.len() {
-            assert_eq!(w.out.data()[i].to_bits(), g.out.data()[i].to_bits(), "mixed {i}");
+        for mode in [KernelMode::Blocked, KernelMode::Simd] {
+            let cfg = Parallelism::serial().with_kernel(mode);
+            let g = mixed_gemm_with(&a, &ta, &b, &tb, &cfg);
+            assert_eq!(w.macs, g.macs);
+            for i in 0..w.out.len() {
+                assert_eq!(
+                    w.out.data()[i].to_bits(),
+                    g.out.data()[i].to_bits(),
+                    "mixed {mode:?} {i}"
+                );
+            }
         }
     }
 

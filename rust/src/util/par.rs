@@ -65,16 +65,23 @@ use std::sync::{Arc, Condvar, Mutex};
 pub const DEFAULT_MIN_ITEMS: usize = 8192;
 
 /// Which numeric kernel implementation the hot loops run: the
-/// table-driven/blocked kernel layer (`crate::kernels`, the default) or
-/// the original scalar reference loops. Both are **bit-identical by
-/// contract** (the kernel layer only reorders memory traffic, never the
-/// per-element floating-point evaluation order); the scalar mode
-/// survives as the parity oracle for tests and the `scalar`-labelled
+/// SIMD-dispatched kernel layer (`crate::kernels`, the default), the
+/// same layer pinned to its scalar blocked path, or the original scalar
+/// reference loops. All three are **bit-identical by contract** (the
+/// kernel layer only reorders memory traffic, never the per-element
+/// floating-point evaluation order — SIMD lanes perform the identical
+/// IEEE mul/add sequence per output element); the non-default modes
+/// survive as parity oracles for tests and the `scalar` / `kernel`
 /// bench rows.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum KernelMode {
-    /// LUT QDQ + packed cache-blocked GEMM microkernels (default).
+    /// LUT QDQ + packed blocked GEMM with runtime-dispatched AVX2
+    /// vector microkernels (default). Falls back to the blocked scalar
+    /// path — bit-identically — where the ISA is unavailable.
     #[default]
+    Simd,
+    /// LUT QDQ + packed cache-blocked GEMM microkernels, scalar lanes
+    /// only (the `MOR_NO_SIMD=1` oracle).
     Blocked,
     /// The original per-element/naive-triple-loop reference kernels.
     Scalar,
@@ -165,10 +172,10 @@ impl Parallelism {
     /// cutoff (the CI-tuning twin of the `--par-min-block` flag).
     ///
     /// # Panics
-    /// When `MOR_THREADS`, `MOR_PAR_MIN_BLOCK` or `MOR_SCALAR_KERNELS`
-    /// is set but malformed. A silent fallback here used to hide typos
-    /// (`MOR_THREADS=O8` ran serial); misconfiguring the determinism
-    /// matrix should be loud.
+    /// When `MOR_THREADS`, `MOR_PAR_MIN_BLOCK`, `MOR_SCALAR_KERNELS` or
+    /// `MOR_NO_SIMD` is set but malformed. A silent fallback here used
+    /// to hide typos (`MOR_THREADS=O8` ran serial); misconfiguring the
+    /// determinism matrix should be loud.
     pub fn auto() -> Parallelism {
         let env = std::env::var("MOR_THREADS").ok();
         let threads = match parse_mor_threads(env.as_deref()) {
@@ -180,8 +187,12 @@ impl Parallelism {
         if let Some(n) = env_min_items() {
             p.min_items = n;
         }
+        // MOR_SCALAR_KERNELS outranks MOR_NO_SIMD: the reference loops
+        // are the stronger oracle.
         if env_scalar_kernels() {
             p.kernel = KernelMode::Scalar;
+        } else if env_no_simd() {
+            p.kernel = KernelMode::Blocked;
         }
         p
     }
@@ -325,6 +336,35 @@ pub fn parse_scalar_kernels(raw: Option<&str>) -> Result<Option<bool>, String> {
 pub fn env_scalar_kernels() -> bool {
     let env = std::env::var("MOR_SCALAR_KERNELS").ok();
     match parse_scalar_kernels(env.as_deref()) {
+        Ok(v) => v.unwrap_or(false),
+        Err(msg) => panic!("{msg}"),
+    }
+}
+
+/// Parse a `MOR_NO_SIMD` value with the usual strictness: `Ok(None)`
+/// when unset, `Ok(Some(true/false))` for `1`/`0`, and a clear error
+/// for anything else.
+pub fn parse_no_simd(raw: Option<&str>) -> Result<Option<bool>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    match raw.trim() {
+        "1" => Ok(Some(true)),
+        "0" => Ok(Some(false)),
+        other => Err(format!(
+            "MOR_NO_SIMD must be 1 (blocked-scalar oracle) or 0 (SIMD kernels), got {other:?}"
+        )),
+    }
+}
+
+/// The `MOR_NO_SIMD` oracle override ([`Parallelism::auto`]): `true`
+/// pins auto-configured handles to [`KernelMode::Blocked`] — the same
+/// kernel layer with every vector path disabled — mirroring
+/// `MOR_SCALAR_KERNELS` one rung up the implementation ladder.
+///
+/// # Panics
+/// When the variable is set but not `0`/`1`.
+pub fn env_no_simd() -> bool {
+    let env = std::env::var("MOR_NO_SIMD").ok();
+    match parse_no_simd(env.as_deref()) {
         Ok(v) => v.unwrap_or(false),
         Err(msg) => panic!("{msg}"),
     }
@@ -1248,14 +1288,16 @@ pub fn engine_comparison_rows() -> Vec<(&'static str, Parallelism)> {
     ]
 }
 
-/// The two kernel-implementation rows the perf benches compare at the
+/// The kernel-implementation rows the perf benches compare at the
 /// default engine/thread configuration: the original scalar reference
-/// loops vs the table-driven/blocked kernel layer. Bit-identical
-/// results by contract — only the wall clock differs.
+/// loops, the table-driven/blocked kernel layer with scalar lanes, and
+/// the runtime-dispatched SIMD layer. Bit-identical results by
+/// contract — only the wall clock differs.
 pub fn kernel_comparison_rows() -> Vec<(&'static str, Parallelism)> {
     vec![
         ("scalar", Parallelism::auto().with_kernel(KernelMode::Scalar)),
         ("kernel", Parallelism::auto().with_kernel(KernelMode::Blocked)),
+        ("simd", Parallelism::auto().with_kernel(KernelMode::Simd)),
     ]
 }
 
@@ -1368,20 +1410,23 @@ mod tests {
     #[test]
     fn kernel_mode_defaults_rides_gate_and_compares() {
         let cfg = Parallelism::pooled(4, 100);
-        assert_eq!(cfg.kernel(), KernelMode::Blocked);
+        assert_eq!(cfg.kernel(), KernelMode::Simd);
         let scalar = cfg.clone().with_kernel(KernelMode::Scalar);
         assert_eq!(scalar.kernel(), KernelMode::Scalar);
         assert_ne!(scalar, cfg, "kernel mode must participate in Eq");
         // Gating below the cutoff keeps the oracle mode.
         assert_eq!(scalar.gate(1).kernel(), KernelMode::Scalar);
         assert_eq!(scalar.gate(1).threads, 1);
-        assert_eq!(cfg.gate(1_000_000).kernel(), KernelMode::Blocked);
-        // The bench rows cover both modes.
+        assert_eq!(cfg.gate(1_000_000).kernel(), KernelMode::Simd);
+        let blocked = cfg.clone().with_kernel(KernelMode::Blocked);
+        assert_eq!(blocked.gate(1).kernel(), KernelMode::Blocked);
+        // The bench rows cover all three modes.
         let rows = kernel_comparison_rows();
         let labels: Vec<&str> = rows.iter().map(|(l, _)| *l).collect();
-        assert_eq!(labels, ["scalar", "kernel"]);
+        assert_eq!(labels, ["scalar", "kernel", "simd"]);
         assert_eq!(rows[0].1.kernel(), KernelMode::Scalar);
         assert_eq!(rows[1].1.kernel(), KernelMode::Blocked);
+        assert_eq!(rows[2].1.kernel(), KernelMode::Simd);
     }
 
     #[test]
@@ -1391,6 +1436,16 @@ mod tests {
         assert_eq!(parse_scalar_kernels(Some(" 0 ")), Ok(Some(false)));
         assert!(parse_scalar_kernels(Some("yes")).is_err());
         assert!(parse_scalar_kernels(Some("")).is_err());
+    }
+
+    #[test]
+    fn no_simd_parsing_is_strict() {
+        assert_eq!(parse_no_simd(None), Ok(None));
+        assert_eq!(parse_no_simd(Some("1")), Ok(Some(true)));
+        assert_eq!(parse_no_simd(Some(" 0 ")), Ok(Some(false)));
+        assert!(parse_no_simd(Some("true")).is_err());
+        assert!(parse_no_simd(Some("")).is_err());
+        assert!(parse_no_simd(Some("  ")).is_err());
     }
 
     #[test]

@@ -7,17 +7,21 @@
 //! (the CI determinism matrix runs this suite at 1, 2, 4 and 13
 //! threads; 2 is the minimal stealing case). The kernel layer extends
 //! the same contract along a second axis: the packed/blocked GEMM
-//! microkernels, the LUT QDQ and the fused quantize-on-pack path must
-//! all match the scalar reference loops bitwise
-//! (`blocked_gemm_equals_naive_bitwise_adversarial`,
+//! microkernels, the AVX2 SIMD twins, the LUT QDQ and the fused
+//! quantize-on-pack path must all match the scalar reference loops
+//! bitwise (`blocked_gemm_equals_naive_bitwise_adversarial`,
+//! `simd_gemm_rounding_boundary_inputs_match_scalar_bitwise`,
 //! `fused_pack_equals_quantize_then_matmul_bitwise`,
-//! `host_train_step_kernel_engine_equals_scalar_oracle_bitwise`).
+//! `host_train_step_kernel_engine_equals_scalar_oracle_bitwise`,
+//! `host_train_step_simd_equals_scalar_oracle_bitwise`). The CI matrix
+//! additionally re-runs the suite with `MOR_NO_SIMD=1`, pinning the
+//! blocked-scalar oracle lane on hosts where AVX2 is present.
 //! Also pins `Histogram::bin_of` to the paper's 0.5%-wide bin edges.
 
 use mor::coordinator::checkpoint::Checkpoint;
 use mor::coordinator::trainer::{TrainOutcome, Trainer, TrainerOptions};
 use mor::formats::ReprType;
-use mor::kernels::gemm::{nt_panel, pack_b, pack_bt, tn_panel, NR};
+use mor::kernels::gemm::{nt_panel, pack_b, pack_bt, tn_panel, MR, NR};
 use mor::model::config::{ModelConfig, TrainConfig};
 use mor::mor::recipes::{Recipe, RecipeKind, SubTensorMode};
 use mor::mor::stats::{Histogram, HIST_BINS};
@@ -381,26 +385,100 @@ fn blocked_gemm_equals_naive_bitwise_adversarial() {
         nt_panel(a.data(), k, &btp, c.data_mut(), 0, m);
         assert_bits_eq(c.data(), nt_ref.data(), &format!("blocked nt {m}x{k}x{n}"));
 
-        // Dispatching entry points at the CI matrix thread counts (the
-        // kernel engine is the default mode): parallel blocked ≡
-        // serial naive, for worker counts straddling the row count.
+        // Dispatching entry points at the CI matrix thread counts, in
+        // both engine modes — Simd (the default) and Blocked (the
+        // `MOR_NO_SIMD=1` oracle): parallel ≡ serial naive, bitwise,
+        // for worker counts straddling the row count.
         for threads in [2usize, 3, 13] {
-            let cfg = pool(threads);
-            assert_eq!(cfg.kernel(), KernelMode::Blocked);
+            assert_eq!(pool(threads).kernel(), KernelMode::Simd);
+            for mode in [KernelMode::Simd, KernelMode::Blocked] {
+                let cfg = pool(threads).with_kernel(mode);
+                assert_bits_eq(
+                    matmul_with(&a, &b, &cfg).data(),
+                    nn_ref.data(),
+                    &format!("nn dispatch {m}x{k}x{n} t{threads} {mode:?}"),
+                );
+                assert_bits_eq(
+                    matmul_tn_with(&at, &b, &cfg).data(),
+                    tn_ref.data(),
+                    &format!("tn dispatch {m}x{k}x{n} t{threads} {mode:?}"),
+                );
+                assert_bits_eq(
+                    matmul_nt_with(&a, &bt, &cfg).data(),
+                    nt_ref.data(),
+                    &format!("nt dispatch {m}x{k}x{n} t{threads} {mode:?}"),
+                );
+            }
+        }
+    }
+}
+
+/// SIMD GEMM ≡ scalar on rounding-boundary inputs: operand values are
+/// chosen so products carry sub-ulp tails that a fused multiply-add
+/// would round differently from the reference's separate mul-then-add
+/// (two roundings). Any FMA contraction hiding in the vector kernels
+/// fails this bitwise, as would any re-association of the k loop.
+/// Shapes cover 1×1, k=1, register-tile boundaries (MR/NR ± 1) and row
+/// counts straddling the 2/3/13-thread worker counts of the CI matrix.
+#[test]
+fn simd_gemm_rounding_boundary_inputs_match_scalar_bitwise() {
+    // Values with long mantissa tails and mixed magnitudes: EPSILON
+    // neighbours of 1.0, non-terminating binary fractions, subnormal
+    // boundaries and a magnitude large enough that mul-then-add loses
+    // bits the FMA would keep. Zeros exercise the skip paths.
+    let vals = [
+        1.0f32 + f32::EPSILON,
+        1.0 - f32::EPSILON / 2.0,
+        1.0 / 3.0,
+        -7.0 / 11.0,
+        16_777_216.0, // 2^24: addend ulp boundary
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE * 1.5, // subnormal products
+        0.0,
+        1e30,
+        -3.0e-5,
+    ];
+    let mk = |rows: usize, cols: usize, salt: usize| {
+        let data =
+            (0..rows * cols).map(|i| vals[(i * 7 + salt) % vals.len()]).collect::<Vec<f32>>();
+        Tensor::from_vec(&[rows, cols], data)
+    };
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (1, 1, NR),
+        (MR - 1, 3, NR - 1),
+        (MR + 1, 2, NR + 1),
+        (2, 1, 2 * NR),
+        (3, 24, NR),
+        (12, 9, 5), // 13 workers, 12 rows
+        (14, 5, 2 * NR + 3),
+    ];
+    let scalar_ser = Parallelism::serial().with_kernel(KernelMode::Scalar);
+    for &(m, k, n) in &shapes {
+        let a = mk(m, k, 1);
+        let b = mk(k, n, 4);
+        let at = a.transpose();
+        let bt = b.transpose();
+        let nn_ref = matmul_with(&a, &b, &scalar_ser);
+        let tn_ref = matmul_tn_with(&at, &b, &scalar_ser);
+        let nt_ref = matmul_nt_with(&a, &bt, &scalar_ser);
+        for threads in [1usize, 2, 3, 13] {
+            let base = if threads == 1 { Parallelism::serial() } else { pool(threads) };
+            let cfg = base.with_kernel(KernelMode::Simd);
             assert_bits_eq(
                 matmul_with(&a, &b, &cfg).data(),
                 nn_ref.data(),
-                &format!("nn dispatch {m}x{k}x{n} t{threads}"),
+                &format!("simd nn boundary {m}x{k}x{n} t{threads}"),
             );
             assert_bits_eq(
                 matmul_tn_with(&at, &b, &cfg).data(),
                 tn_ref.data(),
-                &format!("tn dispatch {m}x{k}x{n} t{threads}"),
+                &format!("simd tn boundary {m}x{k}x{n} t{threads}"),
             );
             assert_bits_eq(
                 matmul_nt_with(&a, &bt, &cfg).data(),
                 nt_ref.data(),
-                &format!("nt dispatch {m}x{k}x{n} t{threads}"),
+                &format!("simd nt boundary {m}x{k}x{n} t{threads}"),
             );
         }
     }
@@ -480,6 +558,43 @@ fn host_train_step_kernel_engine_equals_scalar_oracle_bitwise() {
         assert_eq!(oracle.0, kernel.0, "kernel engine diverged at {threads} threads");
         assert_bits_eq(&oracle.1, &kernel.1, "relerr slots");
         assert_bits_eq(&oracle.2, &kernel.2, "fallback slots");
+    }
+}
+
+/// Step-level SIMD statement of the contract: the explicit `Simd`
+/// engine and the `Blocked` (`MOR_NO_SIMD=1`) oracle mode both
+/// reproduce the scalar-oracle host train step bitwise — losses,
+/// per-slot relative errors and fallback fractions — serially and at
+/// the CI matrix thread counts. On hosts without AVX2 the `Simd` leg
+/// degenerates to `Blocked` and the assertion still holds.
+#[test]
+fn host_train_step_simd_equals_scalar_oracle_bitwise() {
+    let run = |par: Parallelism| -> (Vec<u32>, Vec<f32>, Vec<f32>) {
+        let rt = Runtime::host(ModelConfig::TINY).with_parallelism(par);
+        let mut s = rt.train_session("train_mor_subtensor_three_way", 37).unwrap();
+        let tokens: Vec<i32> = (0..s.batch * s.seq).map(|i| (i % 229) as i32).collect();
+        let mut losses = Vec::new();
+        let mut out = None;
+        for _ in 0..2 {
+            let o = s.step(&tokens, 1e-3, 0.045).unwrap();
+            losses.push(o.loss.to_bits());
+            out = Some(o);
+        }
+        let o = out.unwrap();
+        (losses, o.relerr, o.fallback)
+    };
+    let oracle = run(Parallelism::serial().with_kernel(KernelMode::Scalar));
+    for mode in [KernelMode::Simd, KernelMode::Blocked] {
+        let serial = run(Parallelism::serial().with_kernel(mode));
+        assert_eq!(oracle.0, serial.0, "{mode:?} serial losses diverged from scalar oracle");
+        assert_bits_eq(&oracle.1, &serial.1, &format!("{mode:?} relerr slots (serial)"));
+        assert_bits_eq(&oracle.2, &serial.2, &format!("{mode:?} fallback slots (serial)"));
+        for threads in [2usize, 13] {
+            let kernel = run(pool(threads).with_kernel(mode));
+            assert_eq!(oracle.0, kernel.0, "{mode:?} diverged at {threads} threads");
+            assert_bits_eq(&oracle.1, &kernel.1, &format!("{mode:?} relerr slots t{threads}"));
+            assert_bits_eq(&oracle.2, &kernel.2, &format!("{mode:?} fallback t{threads}"));
+        }
     }
 }
 
