@@ -1,17 +1,26 @@
 //! MoR framework overhead: full recipe application per tensor (the
-//! fake-quant + metric + Algorithm-2 walk) across partition strategies
-//! and recipes — the host-mirror cost model for the paper's "dynamic
-//! decisions at runtime" claim.
+//! fake-quant + metric + Algorithm-2 walk) across partition strategies,
+//! recipes and decision policies — the host-mirror cost model for the
+//! paper's "dynamic decisions at runtime" claim.
+//!
+//! `--json <path>` merges the rows into the shared perf snapshot
+//! (`BENCH_7.json` in CI); `--warmup-ms` / `--measure-ms` /
+//! `--min-batches` shrink the budget for CI runs.
 
-use mor::mor::recipes::{Recipe, RecipeKind, SubTensorMode};
+use mor::mor::policy;
+use mor::mor::recipes::{ApplyCtx, Recipe, RecipeKind, SubTensorMode};
 use mor::quant::partition::Partition;
 use mor::scaling::ScalingAlgo;
 use mor::tensor::Tensor;
-use mor::util::bench::{bench, report_throughput, BenchOptions};
+use mor::util::bench::{bench, report_throughput, BenchOptions, JsonSnapshot};
+use mor::util::cli::Args;
+use mor::util::par;
 use std::hint::black_box;
 
 fn main() {
-    let opts = BenchOptions::default();
+    let args = Args::from_env();
+    let opts = BenchOptions::default().with_args(&args);
+    let mut snap = JsonSnapshot::from_args("mor_decision", &args);
     let x = Tensor::normal(&[256, 256], 2.0, 5);
     let elems = (256 * 256) as f64;
 
@@ -31,6 +40,10 @@ fn main() {
             black_box(o);
         });
         report_throughput(&format!("tensor_level_{label}"), &r, elems, "elem");
+        if let Some(s) = snap.as_mut() {
+            s.record(&r);
+            s.record_throughput(&format!("tensor_level_{label}"), &r, elems, "elem");
+        }
     }
 
     for mode in [SubTensorMode::TwoWay, SubTensorMode::ThreeWay] {
@@ -44,6 +57,36 @@ fn main() {
             black_box(o);
         });
         report_throughput(&format!("subtensor_{mode:?}"), &r, elems, "elem");
+        if let Some(s) = snap.as_mut() {
+            s.record(&r);
+            s.record_throughput(&format!("subtensor_{mode:?}"), &r, elems, "elem");
+        }
+    }
+
+    // Decision-policy comparison on the heaviest recipe (three-way
+    // sub-tensor): what swapping the paper's threshold logic for the
+    // relerr-budget or static-assignment policy costs per application.
+    // Same tensor, same recipe — only `ApplyCtx::policy` varies.
+    let recipe = Recipe {
+        kind: RecipeKind::SubTensor { mode: SubTensorMode::ThreeWay },
+        partition: Partition::BLOCK128,
+        scaling: ScalingAlgo::Gam,
+    };
+    let cfg = par::global();
+    for spec in ["threshold", "metric=0.03", "static=e4m3,e4m3,e5m2"] {
+        let pol = policy::parse_policy(Some(spec))
+            .expect("bench policy spec parses")
+            .expect("non-empty spec");
+        let ctx = ApplyCtx::new(&cfg, pol.as_ref());
+        let r = bench(&format!("policy_{}_subtensor3_256x256", pol.describe()), &opts, || {
+            let o = recipe.apply_ctx(black_box(&x), &ctx);
+            black_box(o);
+        });
+        report_throughput(&format!("policy_{}", pol.describe()), &r, elems, "elem");
+        if let Some(s) = snap.as_mut() {
+            s.record(&r);
+            s.record_throughput(&format!("policy_{}", pol.describe()), &r, elems, "elem");
+        }
     }
 
     // Decision walk alone (metrics precomputed): the pure Algorithm-2
@@ -60,4 +103,12 @@ fn main() {
         black_box(types);
     });
     report_throughput("algorithm2_walk", &r, 1024.0, "block");
+    if let Some(s) = snap.as_mut() {
+        s.record(&r);
+        s.record_throughput("algorithm2_walk", &r, 1024.0, "block");
+    }
+
+    if let Some(s) = snap {
+        s.write(par::global().threads).expect("write bench snapshot");
+    }
 }

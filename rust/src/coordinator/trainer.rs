@@ -41,8 +41,9 @@ use crate::data::synthetic::CorpusProfile;
 use crate::data::tasks::EvalSuite;
 use crate::model::config::{ModelConfig, TrainConfig};
 use crate::model::naming::{param_specs, QuantTensorId};
+use crate::mor::policy::PolicyRef;
 use crate::mor::stats::StatsCollector;
-use crate::runtime::{Runtime, TrainSession};
+use crate::runtime::{Runtime, SessionCtx, TrainSession};
 use crate::util::par::Parallelism;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
@@ -77,9 +78,9 @@ pub struct TrainerOptions {
     /// at the checkpoint's completed-step count. The artifact, train
     /// config, and every pinned numerics-affecting option (total
     /// `steps`, `threshold`, `val_every`, `suite_every`,
-    /// `per_channel`) must match the original run — all are validated,
-    /// so a mismatch errors instead of silently breaking the bitwise
-    /// resume ≡ continuous contract.
+    /// `per_channel`, the decision `policy`) must match the original
+    /// run — all are validated, so a mismatch errors instead of
+    /// silently breaking the bitwise resume ≡ continuous contract.
     pub resume: Option<PathBuf>,
     /// Embed the full metrics history in checkpoints (the legacy
     /// `metrics/records` representation) instead of the default O(1)
@@ -98,6 +99,12 @@ pub struct TrainerOptions {
     /// for any thread count); give each run a `Some(...)` override for
     /// pool isolation.
     pub parallelism: Option<Parallelism>,
+    /// Per-run decision policy for the MoR quantization paths (`None`
+    /// inherits the runtime's default; see `mor::policy`). Pinned into
+    /// checkpoints by its [`crate::mor::policy::DecisionPolicy::pin`]
+    /// fingerprint, so resuming under a different policy errors instead
+    /// of silently diverging.
+    pub policy: Option<PolicyRef>,
 }
 
 impl TrainerOptions {
@@ -116,6 +123,7 @@ impl TrainerOptions {
             resume: None,
             embed_metrics: false,
             parallelism: None,
+            policy: None,
         }
     }
 }
@@ -146,17 +154,21 @@ impl<'rt> Trainer<'rt> {
     }
 
     pub fn run(&self, opts: &TrainerOptions) -> Result<TrainOutcome> {
-        // One Parallelism handle per run, owned by the run's sessions:
-        // the per-run override (or the runtime default) rides the
-        // session API instead of a scoped process-global override.
+        // One Parallelism handle and one DecisionPolicy per run, owned
+        // by the run's sessions: the per-run overrides (or the runtime
+        // defaults) ride the session API instead of a scoped
+        // process-global override.
         let par = opts
             .parallelism
             .clone()
             .unwrap_or_else(|| self.runtime.parallelism().clone());
+        let policy =
+            opts.policy.clone().unwrap_or_else(|| self.runtime.policy().clone());
         let tc = &self.train_config;
+        let ctx = SessionCtx { parallelism: par.clone(), policy: policy.clone() };
         let mut session = self
             .runtime
-            .train_session_with(&opts.artifact, tc.seed, par.clone())
+            .train_session_ctx(&opts.artifact, tc.seed, ctx)
             .with_context(|| format!("starting session for {}", opts.artifact))?;
         let profile = CorpusProfile::from_id(tc.data_profile);
 
@@ -164,7 +176,7 @@ impl<'rt> Trainer<'rt> {
         // (params + moments + step + amax histories), loader cursors,
         // stats, metrics rows, suite trajectory.
         let resumed = match &opts.resume {
-            Some(path) => Some(self.restore(path, &mut session, opts)?),
+            Some(path) => Some(self.restore(path, &mut session, opts, &policy)?),
             None => None,
         };
         // Resolve the resumed metrics prefix (bit-exact records + the
@@ -353,6 +365,7 @@ impl<'rt> Trainer<'rt> {
                     last_val,
                     ckpts,
                     opts,
+                    &policy,
                 )?;
             }
         }
@@ -382,6 +395,7 @@ impl<'rt> Trainer<'rt> {
         path: &std::path::Path,
         session: &mut TrainSession,
         opts: &TrainerOptions,
+        policy: &PolicyRef,
     ) -> Result<TrainCheckpoint> {
         let ck = TrainCheckpoint::load(path)?;
         if ck.artifact != opts.artifact {
@@ -418,9 +432,9 @@ impl<'rt> Trainer<'rt> {
         // Numerics-affecting options must match the original run, or
         // the resumed trajectory silently diverges from the continuous
         // one: total steps shape the LR schedule (resuming with the
-        // *remaining* count is the classic mistake), threshold changes
-        // decisions, and the val/suite cadence changes which
-        // validation batches are consumed.
+        // *remaining* count is the classic mistake), threshold and the
+        // decision policy change decisions, and the val/suite cadence
+        // changes which validation batches are consumed.
         let pinned = [
             ("opt/steps", opts.steps, "--steps (the run's TOTAL, not remaining)"),
             ("opt/threshold_bits", opts.threshold.to_bits() as u64, "--threshold"),
@@ -428,6 +442,7 @@ impl<'rt> Trainer<'rt> {
             ("opt/suite_every", opts.suite_every, "--suite-every"),
             ("opt/per_channel", opts.per_channel as u64, "per-channel stats"),
             ("opt/stats_window", opts.stats_window, "--stats-window"),
+            ("opt/policy", policy.pin(), "--policy"),
         ];
         for (key, got, flag) in pinned {
             if let Some(want) = ck.counter(key) {
@@ -461,6 +476,7 @@ impl<'rt> Trainer<'rt> {
         last_val: f32,
         ckpts_written: u64,
         opts: &TrainerOptions,
+        policy: &PolicyRef,
     ) -> Result<PathBuf> {
         let state = session.export_state()?;
         let train_cursor = train_loader.cursor();
@@ -485,6 +501,7 @@ impl<'rt> Trainer<'rt> {
             ("opt/suite_every".to_string(), opts.suite_every),
             ("opt/per_channel".to_string(), opts.per_channel as u64),
             ("opt/stats_window".to_string(), opts.stats_window),
+            ("opt/policy".to_string(), policy.pin()),
         ];
         let ck = TrainCheckpoint {
             step: state.step,

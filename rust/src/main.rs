@@ -17,8 +17,9 @@ use mor::coordinator::trainer::{Trainer, TrainerOptions};
 use mor::data::tasks::EvalSuite;
 use mor::model::config::{ModelConfig, TrainConfig};
 use mor::model::naming::param_specs;
+use mor::mor::policy;
 use mor::report::ReportCtx;
-use mor::runtime::Runtime;
+use mor::runtime::{PolicyRef, Runtime};
 use mor::util::cli::Args;
 use mor::util::par::{self, Parallelism};
 use std::path::PathBuf;
@@ -26,6 +27,9 @@ use std::path::PathBuf;
 fn main() {
     let args = Args::from_env();
     par::set_global(parallelism_of(&args));
+    if let Some(p) = policy_of(&args) {
+        policy::set_global(p);
+    }
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -67,6 +71,21 @@ fn parallelism_of(args: &Args) -> Parallelism {
         }
     }
     p
+}
+
+/// `--policy SPEC` selects the MoR decision policy for every run the
+/// process starts. Parsed with the same strictness as the other knobs
+/// (a malformed spec aborts loudly); when the flag is absent the
+/// `MOR_POLICY` env var is consulted lazily by `policy::global()`, and
+/// the default is the paper's threshold policy.
+fn policy_of(args: &Args) -> Option<PolicyRef> {
+    match policy::parse_policy(args.get("policy")) {
+        Ok(opt) => opt,
+        Err(msg) => {
+            eprintln!("error: --policy {msg}");
+            std::process::exit(2);
+        }
+    }
 }
 
 /// Select the execution backend: `--backend pjrt` requires compiled
@@ -115,9 +134,9 @@ USAGE:
   repro train  --artifact <name> [--config config1|config2] [--steps N]
                [--threshold 0.045] [--model tiny|small|base] [--out runs/]
                [--suite-every N] [--ckpt-every N] [--resume <ckpt>]
-               [--embed-metrics] [--quiet]
+               [--embed-metrics] [--quiet] [--policy SPEC]
   repro eval   [--model ...] [--artifact eval] (evaluates fresh init or --ckpt)
-  repro report <table1|table2|table3|table4|fig5..fig21|all>
+  repro report <table1|table2|table3|table4|fig5..fig21|policies|all>
                [--steps N] [--model ...] [--out report/] [--fresh] [--quiet]
   repro info   [--model ...]
 
@@ -127,6 +146,11 @@ Common options:
   --threads N                worker threads for the parallel engine (0 = auto;
                              MOR_THREADS env var also respected)
   --par-min-block N          tensors below N elements stay serial
+  --policy SPEC              MoR decision policy: threshold (paper default),
+                             metric[=BUDGET] or static[=INPUT,WEIGHT,GRAD];
+                             MOR_POLICY env var also respected. Non-threshold
+                             policies need the host backend. `repro report
+                             policies` compares all three on two tasks.
 
 Checkpoint/resume: `--ckpt-every N` writes a full MORCKPT2 training
 checkpoint (params, Adam moments, data cursors, RNG streams, scaling
@@ -160,6 +184,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.stats_window = args.u64("stats-window", (steps / 4).max(1));
     opts.per_channel = artifact.contains("channel");
     opts.quiet = args.flag("quiet");
+    // Explicit per-run policy override; when --policy is absent this
+    // stays None and the run inherits the runtime default (the
+    // process-global one, which main() set from the same flag).
+    opts.policy = policy_of(args);
     // opts.parallelism stays None: the run inherits the runtime's
     // handle, which is the process-global one main() set from the CLI
     // flags — one pool end to end.

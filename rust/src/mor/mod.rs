@@ -1,11 +1,17 @@
 //! The Mixture-of-Representations framework (§3) — the paper's core
-//! contribution — plus the concrete recipes evaluated in §4 and the
+//! contribution — plus the pluggable decision-policy layer
+//! ([`policy`]), the concrete recipes evaluated in §4, and the
 //! statistics machinery behind Figures 10–19.
 
 pub mod framework;
+pub mod policy;
 pub mod recipes;
 pub mod stats;
 
 pub use framework::{MorFramework, MorOutcome};
+pub use policy::{
+    BlockChoice, BlockProps, DecisionCtx, DecisionPolicy, MetricDrivenPolicy, MorThresholdPolicy,
+    PolicyRef, StaticAssignmentPolicy, TensorClass, TensorScope,
+};
 pub use recipes::{Recipe, RecipeKind, SubTensorMode};
 pub use stats::{Histogram, StatsCollector, TensorKey, HIST_BINS};

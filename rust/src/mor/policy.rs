@@ -1,0 +1,541 @@
+//! Pluggable precision-assignment policies: the decision layer of the
+//! MoR engine, extracted behind the [`DecisionPolicy`] trait.
+//!
+//! MoR's dynamic, property-aware representation choice is one point in
+//! a design space. This module makes the choice a first-class,
+//! swappable component: a policy observes per-tensor / per-block
+//! properties (candidate relative errors, amax dynamic range) plus the
+//! tensor's identity and step context, and answers the two questions
+//! the quantization paths ask —
+//!
+//! * **tensor level**: "may this whole tensor be stored in `format`?"
+//!   ([`DecisionPolicy::accept_tensor`]);
+//! * **sub-tensor level**: "which representation does this block get?"
+//!   ([`DecisionPolicy::choose_block`]).
+//!
+//! Built-in policies:
+//!
+//! * [`MorThresholdPolicy`] — the paper's logic (Algorithm 2 metrics
+//!   M1/M2 at block level, the relerr-threshold test at tensor level),
+//!   **bitwise-identical** to the pre-trait decisions. The default.
+//! * [`MetricDrivenPolicy`] — accepts any candidate whose measured
+//!   relative error is within a single global budget, in the spirit of
+//!   metric-driven mixed-precision selection (arXiv 2408.02897); it
+//!   ignores the per-block M1/M2 comparisons in favor of the absolute
+//!   budget.
+//! * [`StaticAssignmentPolicy`] — a fixed per-tensor-class table
+//!   (input/weight/grad), the classic static assignment baseline
+//!   (arXiv 2301.13464): no runtime properties consulted at all.
+//!
+//! A policy flows through the stack exactly like
+//! [`crate::util::par::Parallelism`]: process default ([`global`] /
+//! [`set_global`], resolved from `MOR_POLICY` by [`auto`]), per-run
+//! override (`TrainerOptions::policy`, `Runtime::with_policy`), and an
+//! explicit parameter on the context-taking entry points
+//! (`Recipe::apply_ctx`, `mor_quantize_plan_policy`). Checkpoints pin
+//! the active policy ([`DecisionPolicy::pin`]) so a resume under a
+//! different policy errors instead of silently diverging.
+
+use crate::formats::ReprType;
+use crate::quant::error::{dynamic_range_fits_e5m2, RelErrAccum};
+use std::sync::{Arc, Mutex};
+
+/// Shared, thread-safe handle to a policy — the unit that flows
+/// through `TrainerOptions`, `Runtime` and the session API.
+pub type PolicyRef = Arc<dyn DecisionPolicy>;
+
+/// Which of the three quantized tensor roles a decision concerns.
+/// Matches `model::naming::TENSOR_NAMES` order (`input`, `weight`,
+/// `grad`) so `index()` doubles as the StepStats slot coordinate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TensorClass {
+    /// Forward activations entering a linear.
+    #[default]
+    Input,
+    /// Linear weights.
+    Weight,
+    /// Backward upstream gradients.
+    Grad,
+}
+
+impl TensorClass {
+    /// Slot in per-class tables; the `TENSOR_NAMES` index.
+    pub fn index(self) -> usize {
+        match self {
+            TensorClass::Input => 0,
+            TensorClass::Weight => 1,
+            TensorClass::Grad => 2,
+        }
+    }
+
+    /// Stable lowercase name (CSV logs, `static=` policy specs).
+    pub fn name(self) -> &'static str {
+        match self {
+            TensorClass::Input => "input",
+            TensorClass::Weight => "weight",
+            TensorClass::Grad => "grad",
+        }
+    }
+}
+
+/// Identity and step context of one quantization decision. `Default`
+/// gives the anonymous scope the no-context entry points
+/// (`Recipe::apply`) use: a standalone input tensor at step 0.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecisionCtx {
+    /// Tensor role (input / weight / grad).
+    pub class: TensorClass,
+    /// Transformer layer index (0 for standalone tensors).
+    pub layer: usize,
+    /// GEMM pass the quantization feeds: 0 = forward-layout operand,
+    /// 1 = the transposed backward operand.
+    pub direction: usize,
+    /// Optimizer step (1-based inside training; 0 standalone).
+    pub step: u64,
+    /// Whether the recipe's type list offers E5M2 between E4M3 and the
+    /// BF16 fallback (the three-way sub-tensor recipe).
+    pub three_way: bool,
+}
+
+/// The per-tensor part of a [`DecisionCtx`]: everything that is known
+/// before the direction/recipe details. The host trainer threads one
+/// `TensorScope` per quantized tensor down to the plan builder.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TensorScope {
+    pub class: TensorClass,
+    pub layer: usize,
+    pub step: u64,
+}
+
+impl TensorScope {
+    pub fn new(class: TensorClass, layer: usize, step: u64) -> TensorScope {
+        TensorScope { class, layer, step }
+    }
+
+    /// Complete the scope into a decision context.
+    pub fn ctx(self, direction: usize, three_way: bool) -> DecisionCtx {
+        DecisionCtx {
+            class: self.class,
+            layer: self.layer,
+            direction,
+            step: self.step,
+            three_way,
+        }
+    }
+}
+
+/// Measured properties of one partition block, as produced by the
+/// candidate fake-quantizations: the E4M3 and E5M2 error accumulators
+/// and the block's `(amax, smallest nonzero |x|)` dynamic range.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockProps<'a> {
+    /// Relative-error accumulator of the E4M3 candidate (metric M1 lhs).
+    pub e4m3_err: &'a RelErrAccum,
+    /// Relative-error accumulator of the E5M2 candidate (metric M1 rhs).
+    pub e5m2_err: &'a RelErrAccum,
+    /// `(amax, min nonzero |x|)` of the block's source values (metric
+    /// M2 input); `None` when the block is all zeros.
+    pub range: (f32, Option<f32>),
+}
+
+/// A block-level verdict. `E5m2` is only honored by three-way recipes;
+/// the quantization paths coerce it to `Fallback` otherwise, so a
+/// policy never has to know which recipe is asking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockChoice {
+    /// Store the block in FP8 E4M3.
+    E4m3,
+    /// Store the block in FP8 E5M2 (three-way recipes only).
+    E5m2,
+    /// Keep the block at input precision (BF16 fallback).
+    Fallback,
+}
+
+/// A precision-assignment policy. Implementations must be pure
+/// functions of their inputs and configuration — the bitwise
+/// determinism contracts (parallel ≡ serial, resume ≡ continuous)
+/// extend over the policy layer.
+pub trait DecisionPolicy: Send + Sync + std::fmt::Debug {
+    /// Canonical spec string: `parse_policy(describe()) == self`.
+    fn describe(&self) -> String;
+
+    /// Stable identity + configuration fingerprint, pinned into
+    /// `MORCKPT2` checkpoints (`opt/policy`): resuming under a policy
+    /// with a different pin is an error.
+    fn pin(&self) -> u64;
+
+    /// Tensor-level question: may the whole tensor be stored as
+    /// `format`, given its measured mean relative error `relerr` and
+    /// the run's configured threshold `th`? Walked most-aggressive
+    /// format first; rejecting every candidate keeps input precision.
+    fn accept_tensor(&self, ctx: &DecisionCtx, format: ReprType, relerr: f64, th: f64) -> bool;
+
+    /// Sub-tensor question: which representation does this block get?
+    fn choose_block(&self, ctx: &DecisionCtx, block: &BlockProps) -> BlockChoice;
+}
+
+/// The paper's decision logic, bitwise-identical to the pre-trait
+/// implementation: tensor level accepts when `relerr < th`; block
+/// level runs metric M1 (E4M3 wins when its accumulated relative
+/// error is strictly below E5M2's) and, for three-way recipes, metric
+/// M2 (E5M2 when the block's dynamic range fits the format).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MorThresholdPolicy;
+
+impl DecisionPolicy for MorThresholdPolicy {
+    fn describe(&self) -> String {
+        "threshold".to_string()
+    }
+
+    fn pin(&self) -> u64 {
+        1
+    }
+
+    fn accept_tensor(&self, _ctx: &DecisionCtx, _format: ReprType, relerr: f64, th: f64) -> bool {
+        relerr < th
+    }
+
+    fn choose_block(&self, ctx: &DecisionCtx, block: &BlockProps) -> BlockChoice {
+        // Metric M1: accumulated relative error, strict comparison —
+        // the exact pre-trait expression (sum vs sum, both f64).
+        if block.e4m3_err.sum < block.e5m2_err.sum {
+            return BlockChoice::E4m3;
+        }
+        // Metric M2 (three-way only): dynamic-range containment.
+        if ctx.three_way && dynamic_range_fits_e5m2(block.range.0, block.range.1) {
+            return BlockChoice::E5m2;
+        }
+        BlockChoice::Fallback
+    }
+}
+
+/// Relerr-budget policy (arXiv 2408.02897 spirit): one global relative
+/// error budget; any candidate within budget is accepted, preferring
+/// the more aggressive format. Ignores the run threshold and the
+/// relative M1 comparison — the budget is absolute.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricDrivenPolicy {
+    /// Mean relative error a representation must stay within.
+    pub budget: f64,
+}
+
+impl MetricDrivenPolicy {
+    pub const DEFAULT_BUDGET: f64 = 0.03;
+}
+
+impl Default for MetricDrivenPolicy {
+    fn default() -> Self {
+        MetricDrivenPolicy { budget: Self::DEFAULT_BUDGET }
+    }
+}
+
+impl DecisionPolicy for MetricDrivenPolicy {
+    fn describe(&self) -> String {
+        format!("metric={}", self.budget)
+    }
+
+    fn pin(&self) -> u64 {
+        2 | ((self.budget as f32).to_bits() as u64) << 8
+    }
+
+    fn accept_tensor(&self, _ctx: &DecisionCtx, _format: ReprType, relerr: f64, _th: f64) -> bool {
+        relerr < self.budget
+    }
+
+    fn choose_block(&self, ctx: &DecisionCtx, block: &BlockProps) -> BlockChoice {
+        if block.e4m3_err.mean() < self.budget {
+            return BlockChoice::E4m3;
+        }
+        if ctx.three_way && block.e5m2_err.mean() < self.budget {
+            return BlockChoice::E5m2;
+        }
+        BlockChoice::Fallback
+    }
+}
+
+/// Static per-tensor-class assignment (arXiv 2301.13464 spirit): a
+/// fixed `input/weight/grad → format` table, no runtime properties
+/// consulted. The baseline every dynamic policy is judged against.
+#[derive(Debug, Clone, Copy)]
+pub struct StaticAssignmentPolicy {
+    /// Formats indexed by [`TensorClass::index`]: input, weight, grad.
+    pub table: [ReprType; 3],
+}
+
+impl Default for StaticAssignmentPolicy {
+    /// The classic FP8-training assignment: E4M3 forward operands,
+    /// E5M2 for the wider-range gradients.
+    fn default() -> Self {
+        StaticAssignmentPolicy { table: [ReprType::E4M3, ReprType::E4M3, ReprType::E5M2] }
+    }
+}
+
+impl StaticAssignmentPolicy {
+    fn assigned(&self, ctx: &DecisionCtx) -> ReprType {
+        self.table[ctx.class.index()]
+    }
+}
+
+impl DecisionPolicy for StaticAssignmentPolicy {
+    fn describe(&self) -> String {
+        format!(
+            "static={},{},{}",
+            self.table[0].name(),
+            self.table[1].name(),
+            self.table[2].name()
+        )
+    }
+
+    fn pin(&self) -> u64 {
+        let code = |t: ReprType| match t {
+            ReprType::E4M3 => 0u64,
+            ReprType::E5M2 => 1,
+            ReprType::Bf16 => 2,
+            ReprType::NvFp4 => 3,
+        };
+        3 | (code(self.table[0]) | code(self.table[1]) << 2 | code(self.table[2]) << 4) << 8
+    }
+
+    fn accept_tensor(&self, ctx: &DecisionCtx, format: ReprType, _relerr: f64, _th: f64) -> bool {
+        self.assigned(ctx) == format
+    }
+
+    fn choose_block(&self, ctx: &DecisionCtx, _block: &BlockProps) -> BlockChoice {
+        match self.assigned(ctx) {
+            ReprType::E4M3 => BlockChoice::E4m3,
+            // E5M2 downgrades to the fallback under two-way recipes —
+            // the format simply isn't on offer.
+            ReprType::E5M2 if ctx.three_way => BlockChoice::E5m2,
+            _ => BlockChoice::Fallback,
+        }
+    }
+}
+
+/// The grammar every spec error repeats.
+const SPEC_GRAMMAR: &str = "threshold, metric[=BUDGET] or static[=INPUT,WEIGHT,GRAD]";
+
+/// Strictly parse a `--policy` / `MOR_POLICY` spec with the knob
+/// conventions of [`crate::util::env`]: `Ok(None)` when unset,
+/// `Ok(Some(policy))` for a valid spec, and a clear error otherwise
+/// (the caller prefixes the flag/env name). Accepted specs:
+/// `threshold`, `metric`, `metric=0.05`, `static`,
+/// `static=e4m3,e4m3,e5m2` (three formats for input, weight, grad).
+pub fn parse_policy(raw: Option<&str>) -> Result<Option<PolicyRef>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return Err(format!("is set but empty; use {SPEC_GRAMMAR}, or unset it"));
+    }
+    let (head, arg) = match trimmed.split_once('=') {
+        Some((h, a)) => (h.trim(), Some(a.trim())),
+        None => (trimmed, None),
+    };
+    match (head, arg) {
+        ("threshold", None) => Ok(Some(Arc::new(MorThresholdPolicy))),
+        ("threshold", Some(_)) => {
+            Err(format!("threshold takes no argument, got {trimmed:?}"))
+        }
+        ("metric", None) => Ok(Some(Arc::new(MetricDrivenPolicy::default()))),
+        ("metric", Some(v)) => match v.parse::<f64>() {
+            Ok(b) if b.is_finite() && b > 0.0 => {
+                Ok(Some(Arc::new(MetricDrivenPolicy { budget: b })))
+            }
+            _ => Err(format!("metric budget must be a positive finite number, got {v:?}")),
+        },
+        ("static", None) => Ok(Some(Arc::new(StaticAssignmentPolicy::default()))),
+        ("static", Some(v)) => {
+            let parts: Vec<&str> = v.split(',').map(str::trim).collect();
+            let parsed: Option<Vec<ReprType>> =
+                parts.iter().map(|p| ReprType::parse(p)).collect();
+            match parsed.as_deref() {
+                Some([i, w, g]) => {
+                    Ok(Some(Arc::new(StaticAssignmentPolicy { table: [*i, *w, *g] })))
+                }
+                _ => Err(format!(
+                    "static assignment needs three formats INPUT,WEIGHT,GRAD from \
+                     e4m3/e5m2/bf16/nvfp4, got {v:?}"
+                )),
+            }
+        }
+        _ => Err(format!("must be {SPEC_GRAMMAR}, got {trimmed:?}")),
+    }
+}
+
+/// Resolve the `MOR_POLICY` env knob: the named policy when set, the
+/// default [`MorThresholdPolicy`] otherwise.
+///
+/// # Panics
+/// When `MOR_POLICY` is set but malformed — the same loud-failure
+/// contract as `MOR_THREADS` and the other knobs.
+pub fn auto() -> PolicyRef {
+    match parse_policy(crate::util::env::var("MOR_POLICY").as_deref()) {
+        Ok(Some(p)) => p,
+        Ok(None) => Arc::new(MorThresholdPolicy),
+        Err(msg) => panic!("MOR_POLICY {msg}"),
+    }
+}
+
+static GLOBAL: Mutex<Option<PolicyRef>> = Mutex::new(None);
+
+/// Process-wide default policy, used by the no-argument entry points
+/// (`Recipe::apply`, `mor_quantize_plan`) and as the default for new
+/// `Runtime`s. Lazily initialized from [`auto`].
+pub fn global() -> PolicyRef {
+    GLOBAL.lock().unwrap().get_or_insert_with(auto).clone()
+}
+
+/// Override the process-wide default (CLI `--policy`). Per-run
+/// configuration should prefer `TrainerOptions::policy` /
+/// `Runtime::with_policy` over mutating this.
+pub fn set_global(p: PolicyRef) {
+    *GLOBAL.lock().unwrap() = Some(p);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn accum(sum: f64, count: u64) -> RelErrAccum {
+        RelErrAccum { sum, count }
+    }
+
+    #[test]
+    fn threshold_policy_reproduces_m1_m2() {
+        let p = MorThresholdPolicy;
+        let two_way = DecisionCtx { three_way: false, ..Default::default() };
+        let three_way = DecisionCtx { three_way: true, ..Default::default() };
+
+        // M1 wins: strict less-than on the accumulated sums.
+        let b = BlockProps {
+            e4m3_err: &accum(0.1, 4),
+            e5m2_err: &accum(0.2, 4),
+            range: (1.0, Some(1.0)),
+        };
+        assert_eq!(p.choose_block(&two_way, &b), BlockChoice::E4m3);
+        assert_eq!(p.choose_block(&three_way, &b), BlockChoice::E4m3);
+
+        // M1 ties lose (strict), M2 rescues only the three-way recipe.
+        let tied = BlockProps {
+            e4m3_err: &accum(0.2, 4),
+            e5m2_err: &accum(0.2, 4),
+            range: (1.0, Some(0.5)),
+        };
+        assert_eq!(p.choose_block(&two_way, &tied), BlockChoice::Fallback);
+        assert_eq!(p.choose_block(&three_way, &tied), BlockChoice::E5m2);
+
+        // Range too wide for E5M2: fallback either way.
+        let wide = BlockProps {
+            e4m3_err: &accum(0.3, 4),
+            e5m2_err: &accum(0.2, 4),
+            range: (1e30, Some(1e-30)),
+        };
+        assert_eq!(p.choose_block(&three_way, &wide), BlockChoice::Fallback);
+
+        // Tensor level: the bare threshold test.
+        assert!(p.accept_tensor(&two_way, ReprType::E4M3, 0.01, 0.045));
+        assert!(!p.accept_tensor(&two_way, ReprType::E4M3, 0.05, 0.045));
+        assert!(!p.accept_tensor(&two_way, ReprType::E4M3, 0.045, 0.045), "strict <");
+    }
+
+    #[test]
+    fn metric_policy_uses_absolute_budget() {
+        let p = MetricDrivenPolicy { budget: 0.05 };
+        let three_way = DecisionCtx { three_way: true, ..Default::default() };
+        // E4M3 over budget, E5M2 within: picks E5M2 even though M1
+        // would have picked E4M3 (0.24 < 0.25).
+        let b = BlockProps {
+            e4m3_err: &accum(0.24, 4), // mean 0.06 > budget
+            e5m2_err: &accum(0.16, 4), // mean 0.04 < budget
+            range: (1.0, Some(1.0)),
+        };
+        assert_eq!(p.choose_block(&three_way, &b), BlockChoice::E5m2);
+        let two_way = DecisionCtx { three_way: false, ..Default::default() };
+        assert_eq!(p.choose_block(&two_way, &b), BlockChoice::Fallback);
+        // Tensor level ignores the run threshold entirely.
+        assert!(p.accept_tensor(&two_way, ReprType::E4M3, 0.04, 0.0));
+        assert!(!p.accept_tensor(&two_way, ReprType::E4M3, 0.06, 1.0));
+    }
+
+    #[test]
+    fn static_policy_ignores_properties() {
+        let p = StaticAssignmentPolicy::default();
+        let junk = BlockProps {
+            e4m3_err: &accum(f64::MAX, 1),
+            e5m2_err: &accum(0.0, 1),
+            range: (f32::MAX, Some(f32::MIN_POSITIVE)),
+        };
+        let weight = DecisionCtx {
+            class: TensorClass::Weight,
+            three_way: true,
+            ..Default::default()
+        };
+        let grad3 = DecisionCtx { class: TensorClass::Grad, three_way: true, ..Default::default() };
+        let grad2 =
+            DecisionCtx { class: TensorClass::Grad, three_way: false, ..Default::default() };
+        assert_eq!(p.choose_block(&weight, &junk), BlockChoice::E4m3);
+        assert_eq!(p.choose_block(&grad3, &junk), BlockChoice::E5m2);
+        // E5M2 is not on offer in a two-way recipe: fallback.
+        assert_eq!(p.choose_block(&grad2, &junk), BlockChoice::Fallback);
+        assert!(p.accept_tensor(&weight, ReprType::E4M3, 1e9, 0.0));
+        assert!(!p.accept_tensor(&weight, ReprType::NvFp4, 0.0, 1.0));
+    }
+
+    #[test]
+    fn parse_roundtrips_describe() {
+        for spec in ["threshold", "metric=0.03", "metric=0.125", "static=e4m3,e4m3,e5m2",
+            "static=nvfp4,e4m3,bf16"]
+        {
+            let p = parse_policy(Some(spec)).unwrap().unwrap();
+            assert_eq!(p.describe(), spec, "describe() must round-trip through parse");
+            let again = parse_policy(Some(&p.describe())).unwrap().unwrap();
+            assert_eq!(again.pin(), p.pin(), "pin stable across a parse round-trip");
+        }
+        // Bare names resolve to the defaults.
+        assert_eq!(parse_policy(Some("metric")).unwrap().unwrap().describe(), "metric=0.03");
+        assert_eq!(
+            parse_policy(Some("static")).unwrap().unwrap().describe(),
+            "static=e4m3,e4m3,e5m2"
+        );
+        assert!(parse_policy(None).unwrap().is_none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "", "  ", "thresh", "metric=", "metric=-1", "metric=0", "metric=nan",
+            "metric=inf", "static=e4m3", "static=e4m3,e4m3", "static=e4m3,e4m3,fp64",
+            "static=e4m3,e4m3,e5m2,e5m2", "threshold=1", "dynamic",
+        ] {
+            assert!(parse_policy(Some(bad)).is_err(), "spec {bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn pins_are_distinct_and_configuration_sensitive() {
+        let th = MorThresholdPolicy.pin();
+        let m1 = MetricDrivenPolicy { budget: 0.03 }.pin();
+        let m2 = MetricDrivenPolicy { budget: 0.05 }.pin();
+        let s1 = StaticAssignmentPolicy::default().pin();
+        let s2 = StaticAssignmentPolicy { table: [ReprType::E4M3; 3] }.pin();
+        let pins = [th, m1, m2, s1, s2];
+        for (i, a) in pins.iter().enumerate() {
+            for (j, b) in pins.iter().enumerate() {
+                if i != j {
+                    assert_ne!(a, b, "pins {i} and {j} collide");
+                }
+            }
+        }
+    }
+
+    /// The process default resolves to the threshold policy (directly
+    /// or via `MOR_POLICY=threshold`). Deliberately *not* a set/get
+    /// mutation test: unit tests run concurrently and several recipe
+    /// tests read the global through `Recipe::apply`, so flipping it
+    /// here would race them (`set_global` is covered by the CLI path
+    /// and the policy_equivalence integration suite).
+    #[test]
+    fn global_defaults_to_threshold() {
+        assert_eq!(global().describe(), "threshold");
+        assert_eq!(global().pin(), MorThresholdPolicy.pin());
+    }
+}

@@ -15,13 +15,44 @@
 //!   future-work direction §5 sketches, included for the ablation bench.
 
 use super::framework::{MorFramework, MorOutcome};
+use super::policy::{self, BlockChoice, BlockProps, DecisionCtx, DecisionPolicy};
 use crate::formats::ReprType;
-use crate::quant::error::dynamic_range_fits_e5m2;
 use crate::quant::fake_quant::fake_quantize_with;
 use crate::quant::partition::Partition;
 use crate::scaling::ScalingAlgo;
 use crate::tensor::Tensor;
 use crate::util::par::{self, Parallelism};
+
+/// Everything one recipe application needs beyond the tensor itself:
+/// the parallelism handle, the decision policy, and the decision
+/// context (tensor identity / step; the recipe fills in `three_way`).
+/// This is the single real entry-point parameter — `apply`,
+/// `apply_with` and the batch variants are thin wrappers that fill in
+/// the process-global defaults, so new per-application inputs extend
+/// this struct instead of multiplying `*_with` constructors.
+#[derive(Clone, Copy)]
+pub struct ApplyCtx<'a> {
+    /// Execution engine for the underlying fake-quant passes.
+    pub par: &'a Parallelism,
+    /// The precision-assignment policy consulted for every decision.
+    pub policy: &'a dyn DecisionPolicy,
+    /// Identity/step context forwarded to the policy. `three_way` is
+    /// overridden per recipe kind.
+    pub decision: DecisionCtx,
+}
+
+impl<'a> ApplyCtx<'a> {
+    /// A context with an anonymous decision scope (standalone tensor).
+    pub fn new(par: &'a Parallelism, policy: &'a dyn DecisionPolicy) -> ApplyCtx<'a> {
+        ApplyCtx { par, policy, decision: DecisionCtx::default() }
+    }
+
+    /// This context with an explicit decision scope.
+    pub fn with_decision(mut self, decision: DecisionCtx) -> ApplyCtx<'a> {
+        self.decision = decision;
+        self
+    }
+}
 
 /// Sub-tensor selection mode (§3.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -96,21 +127,29 @@ impl Recipe {
 
     /// Apply the recipe to one tensor, producing the mixed-representation
     /// fake-quantized output plus decision telemetry. Uses the
-    /// process-global [`Parallelism`] for the underlying fake-quant
-    /// passes.
+    /// process-global [`Parallelism`] and decision policy.
     pub fn apply(&self, x: &Tensor) -> MorOutcome {
-        self.apply_with(x, &par::global())
+        let (cfg, pol) = (par::global(), policy::global());
+        self.apply_ctx(x, &ApplyCtx::new(&cfg, pol.as_ref()))
     }
 
-    /// [`Recipe::apply`] with an explicit [`Parallelism`].
+    /// [`Recipe::apply`] with an explicit [`Parallelism`] (process-global
+    /// decision policy).
     pub fn apply_with(&self, x: &Tensor, cfg: &Parallelism) -> MorOutcome {
+        let pol = policy::global();
+        self.apply_ctx(x, &ApplyCtx::new(cfg, pol.as_ref()))
+    }
+
+    /// The real single-tensor entry point: apply the recipe under an
+    /// explicit [`ApplyCtx`] (parallelism + policy + decision scope).
+    pub fn apply_ctx(&self, x: &Tensor, ctx: &ApplyCtx) -> MorOutcome {
         match self.kind {
             RecipeKind::Baseline => baseline(x),
             RecipeKind::TensorLevel { threshold } => {
-                tensor_level(x, self.partition, self.scaling, threshold, cfg)
+                tensor_level(x, self.partition, self.scaling, threshold, ctx)
             }
             RecipeKind::SubTensor { mode } => {
-                sub_tensor(x, self.partition, self.scaling, mode, cfg)
+                sub_tensor(x, self.partition, self.scaling, mode, ctx)
             }
             RecipeKind::NvFp4TensorLevel { threshold_fp4, threshold_e4m3 } => {
                 nvfp4_tensor_level(
@@ -119,7 +158,7 @@ impl Recipe {
                     self.scaling,
                     threshold_fp4,
                     threshold_e4m3,
-                    cfg,
+                    ctx,
                 )
             }
         }
@@ -140,13 +179,22 @@ impl Recipe {
     /// dispatch reorders only *scheduling*, never the canonical result
     /// merge.
     pub fn apply_batch(&self, xs: &[&Tensor]) -> Vec<MorOutcome> {
-        self.apply_batch_with(xs, &par::global())
+        let (cfg, pol) = (par::global(), policy::global());
+        self.apply_batch_ctx(xs, &ApplyCtx::new(&cfg, pol.as_ref()))
     }
 
-    /// [`Recipe::apply_batch`] with an explicit [`Parallelism`].
+    /// [`Recipe::apply_batch`] with an explicit [`Parallelism`]
+    /// (process-global decision policy).
     pub fn apply_batch_with(&self, xs: &[&Tensor], cfg: &Parallelism) -> Vec<MorOutcome> {
-        if cfg.threads <= 1 || xs.len() <= 1 {
-            return xs.iter().map(|x| self.apply_with(x, cfg)).collect();
+        let pol = policy::global();
+        self.apply_batch_ctx(xs, &ApplyCtx::new(cfg, pol.as_ref()))
+    }
+
+    /// The real batch entry point: [`Recipe::apply_batch`] under an
+    /// explicit [`ApplyCtx`].
+    pub fn apply_batch_ctx(&self, xs: &[&Tensor], ctx: &ApplyCtx) -> Vec<MorOutcome> {
+        if ctx.par.threads <= 1 || xs.len() <= 1 {
+            return xs.iter().map(|x| self.apply_ctx(x, ctx)).collect();
         }
         let weights: Vec<usize> = xs.iter().map(|x| x.len()).collect();
         // Pooled engines share one bounded worker set, so nesting is
@@ -154,11 +202,12 @@ impl Recipe {
         // items × chunks would oversubscribe — so it keeps the old
         // serial-inside-each-item scheme (bitwise identical either
         // way, by the engine contract).
-        let inner = match cfg.engine() {
+        let inner_par = match ctx.par.engine() {
             par::Engine::Spawn => Parallelism::serial(),
-            _ => cfg.clone(),
+            _ => ctx.par.clone(),
         };
-        par::par_map_weighted(cfg, &weights, |i| self.apply_with(xs[i], &inner))
+        let inner = ApplyCtx { par: &inner_par, ..*ctx };
+        par::par_map_weighted(ctx.par, &weights, |i| self.apply_ctx(xs[i], &inner))
     }
 }
 
@@ -178,13 +227,17 @@ fn tensor_level(
     partition: Partition,
     scaling: ScalingAlgo,
     th: f64,
-    cfg: &Parallelism,
+    ctx: &ApplyCtx,
 ) -> MorOutcome {
+    let cfg = ctx.par;
     let fq = fake_quantize_with(x, ReprType::E4M3, partition, scaling, cfg);
     let relerr = fq.global_err.mean();
     let fw = MorFramework::e4m3_bf16();
     let nblocks = fq.block_err.len();
-    let choice = fw.select_block(0, |t, _| t == ReprType::E4M3 && relerr < th);
+    let dctx = DecisionCtx { three_way: false, ..ctx.decision };
+    let choice = fw.select_block(0, |t, _| {
+        t == ReprType::E4M3 && ctx.policy.accept_tensor(&dctx, t, relerr, th)
+    });
     if choice == ReprType::E4M3 {
         let metadata_bits = fq.scales.metadata_bits();
         MorOutcome {
@@ -212,8 +265,9 @@ fn sub_tensor(
     partition: Partition,
     scaling: ScalingAlgo,
     mode: SubTensorMode,
-    cfg: &Parallelism,
+    ctx: &ApplyCtx,
 ) -> MorOutcome {
+    let cfg = ctx.par;
     let (rows, cols) = x.as_2d();
     let _ = rows;
     // The two candidate quantizations are independent; overlap them on
@@ -224,19 +278,33 @@ fn sub_tensor(
         || fake_quantize_with(x, ReprType::E5M2, partition, scaling, cfg),
     );
     let nblocks = fq_e4m3.block_err.len();
+    let three_way = mode == SubTensorMode::ThreeWay;
     let fw = match mode {
         SubTensorMode::TwoWay => MorFramework::e4m3_bf16(),
         SubTensorMode::ThreeWay => MorFramework::e4m3_e5m2_bf16(),
     };
+    // One policy verdict per block (the default MorThresholdPolicy
+    // runs metric M1 / Eq. 3, then M2 / Eq. 4 for three-way recipes —
+    // bitwise-identical to the pre-policy inline walk). An `E5m2`
+    // verdict under a two-way recipe is coerced to the fallback: the
+    // format is not on offer.
+    let dctx = DecisionCtx { three_way, ..ctx.decision };
+    let choices: Vec<BlockChoice> = (0..nblocks)
+        .map(|b| {
+            let props = BlockProps {
+                e4m3_err: &fq_e4m3.block_err[b],
+                e5m2_err: &fq_e5m2.block_err[b],
+                range: fq_e4m3.block_range[b],
+            };
+            match ctx.policy.choose_block(&dctx, &props) {
+                BlockChoice::E5m2 if !three_way => BlockChoice::Fallback,
+                c => c,
+            }
+        })
+        .collect();
     let block_types = fw.select_all(nblocks, |t, b| match t {
-        // M1 (Eq. 3): E4M3 accepted when its relerr *sum* beats E5M2's.
-        ReprType::E4M3 => fq_e4m3.block_err[b].sum < fq_e5m2.block_err[b].sum,
-        // M2 (Eq. 4): E5M2 accepted when the block's dynamic range fits
-        // E5M2's normal range.
-        ReprType::E5M2 => {
-            let (amax, amin) = fq_e4m3.block_range[b];
-            dynamic_range_fits_e5m2(amax, amin)
-        }
+        ReprType::E4M3 => choices[b] == BlockChoice::E4m3,
+        ReprType::E5M2 => choices[b] == BlockChoice::E5m2,
         _ => false,
     });
 
@@ -280,8 +348,9 @@ fn nvfp4_tensor_level(
     scaling: ScalingAlgo,
     th_fp4: f64,
     th_e4m3: f64,
-    cfg: &Parallelism,
+    ctx: &ApplyCtx,
 ) -> MorOutcome {
+    let cfg = ctx.par;
     let (fq4, fq8) = par::join2(
         cfg,
         || {
@@ -291,9 +360,10 @@ fn nvfp4_tensor_level(
         || fake_quantize_with(x, ReprType::E4M3, partition, scaling, cfg),
     );
     let fw = MorFramework::new(vec![ReprType::NvFp4, ReprType::E4M3, ReprType::Bf16]);
+    let dctx = DecisionCtx { three_way: false, ..ctx.decision };
     let choice = fw.select_block(0, |t, _| match t {
-        ReprType::NvFp4 => fq4.global_err.mean() < th_fp4,
-        ReprType::E4M3 => fq8.global_err.mean() < th_e4m3,
+        ReprType::NvFp4 => ctx.policy.accept_tensor(&dctx, t, fq4.global_err.mean(), th_fp4),
+        ReprType::E4M3 => ctx.policy.accept_tensor(&dctx, t, fq8.global_err.mean(), th_e4m3),
         _ => false,
     });
     let nblocks = fq8.block_err.len();
@@ -453,6 +523,35 @@ mod tests {
             assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-9);
             true
         });
+    }
+
+    /// The explicit-context entry point honors a non-default policy,
+    /// and the wrapper quadruplet all route through it unchanged.
+    #[test]
+    fn apply_ctx_swaps_policy() {
+        use crate::mor::policy::{MorThresholdPolicy, StaticAssignmentPolicy};
+        let x = wild_tensor(8);
+        let recipe = Recipe {
+            kind: RecipeKind::SubTensor { mode: SubTensorMode::ThreeWay },
+            partition: Partition::Block { r: 4, c: 4 },
+            scaling: ScalingAlgo::Gam,
+        };
+        let cfg = Parallelism::serial();
+        // Static input→E4M3: every block pinned to E4M3 regardless of
+        // the measured errors the wild tensor produces.
+        let all_e4m3 = StaticAssignmentPolicy { table: [ReprType::E4M3; 3] };
+        let r = recipe.apply_ctx(&x, &ApplyCtx::new(&cfg, &all_e4m3));
+        assert!(r.block_types.iter().all(|t| *t == ReprType::E4M3));
+        assert_eq!(r.bf16_fraction, 0.0);
+        // The default-policy wrappers and an explicit threshold-policy
+        // context agree exactly (the process default is the threshold
+        // policy unless a test overrode it — pass it explicitly).
+        let via_ctx = recipe.apply_ctx(&x, &ApplyCtx::new(&cfg, &MorThresholdPolicy));
+        let via_with = recipe.apply_with(&x, &cfg);
+        assert_eq!(via_ctx.block_types, via_with.block_types);
+        for (a, b) in via_ctx.out.data().iter().zip(via_with.out.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     /// Property: two-way and three-way agree on blocks where E4M3 wins M1.

@@ -7,6 +7,7 @@
 //! recompute).
 
 pub mod figures;
+pub mod policies;
 pub mod runs;
 pub mod tables;
 
@@ -90,6 +91,9 @@ impl ReportCtx {
             "fig19" => figures::heatmap_channel(self, true),
             "fig20" => figures::subtensor_loss_curves(self),
             "fig21" => figures::subtensor_suite(self),
+            // Beyond the paper: decision-policy comparison sweep
+            // (threshold vs metric-budget vs static assignment).
+            "policies" => policies::policies(self),
             "all" => {
                 for e in [
                     "table1", "fig5", "fig6", "fig7", "table2", "fig8", "fig9", "table3",
@@ -101,7 +105,9 @@ impl ReportCtx {
                 }
                 Ok(())
             }
-            _ => anyhow::bail!("unknown experiment {exp:?} (try table1..4, fig5..fig21, all)"),
+            _ => anyhow::bail!(
+                "unknown experiment {exp:?} (try table1..4, fig5..fig21, policies, all)"
+            ),
         }
     }
 }

@@ -1,0 +1,187 @@
+//! The policy comparison harness (`repro report policies`): one CLI
+//! invocation sweeps decision policy × training task × recipe format
+//! and tabulates quality (final train/val loss), decision behaviour
+//! (BF16-fallback %, % of operands kept in FP8) and step latency.
+//!
+//! Every combination is an independent, fully-serial training run with
+//! its own host [`Runtime`] (the policy layer is host-only; the PJRT
+//! backend bakes the threshold decisions into its artifacts), so the
+//! sweep itself parallelizes across combinations on the chunked engine
+//! via [`par::par_map_weighted`] — results are bit-identical to the
+//! serial sweep for any thread count. The [`super::runs`] cache is
+//! deliberately bypassed: its keys do not carry a policy dimension.
+
+use super::ReportCtx;
+use crate::coordinator::trainer::{Trainer, TrainerOptions};
+use crate::mor::policy;
+use crate::runtime::Runtime;
+use crate::util::par::{self, Parallelism};
+use anyhow::{anyhow, Context, Result};
+
+/// The compared policy specs (parsed by [`policy::parse_policy`]):
+/// the paper's dynamic threshold logic, the absolute relerr-budget
+/// baseline, and the classic static per-class assignment.
+pub const POLICY_VARIANTS: [(&str, &str); 3] = [
+    ("threshold", "threshold"),
+    ("metric", "metric=0.03"),
+    ("static", "static=e4m3,e4m3,e5m2"),
+];
+
+/// The compared tasks: the §4.1 tensor-level recipe and the §4.2
+/// three-way sub-tensor recipe (weight = relative cost estimate for
+/// the sweep scheduler — sub-tensor runs fake-quantize two candidates).
+pub const TASK_VARIANTS: [(&str, &str, usize); 2] = [
+    ("tensor", "train_mor_tensor_block", 1),
+    ("subtensor3", "train_mor_subtensor_three_way", 2),
+];
+
+/// One sweep result row.
+#[derive(Debug, Clone)]
+pub struct PolicyRow {
+    pub policy: String,
+    pub task: String,
+    pub config_id: u8,
+    pub final_train_loss: f32,
+    pub final_val_loss: f32,
+    pub fallback_pct: f32,
+    /// Share of quantization decisions that kept an FP8 representation
+    /// (the complement of the fallback share).
+    pub fp8_pct: f32,
+    pub mean_step_ms: f32,
+}
+
+impl PolicyRow {
+    pub fn csv_line(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{}",
+            self.policy,
+            self.task,
+            self.config_id,
+            self.final_train_loss,
+            self.final_val_loss,
+            self.fallback_pct,
+            self.fp8_pct,
+            self.mean_step_ms
+        )
+    }
+}
+
+/// Execute the full policy × task × config sweep and return the rows
+/// in declaration order (policy-major, then task, then config).
+pub fn policy_sweep(ctx: &ReportCtx) -> Result<Vec<PolicyRow>> {
+    let mut combos: Vec<(&str, &str, &str, &str, u8, usize)> = Vec::new();
+    for (plabel, spec) in POLICY_VARIANTS {
+        for (tlabel, artifact, tweight) in TASK_VARIANTS {
+            for config_id in [1u8, 2] {
+                combos.push((plabel, spec, tlabel, artifact, config_id, tweight));
+            }
+        }
+    }
+    // Every spec parses before any run starts.
+    for (_, spec, ..) in &combos {
+        policy::parse_policy(Some(spec))
+            .map_err(|msg| anyhow!("policy spec {spec:?} {msg}"))?;
+    }
+
+    let model = ctx.model;
+    let steps = ctx.steps;
+    let quiet = ctx.quiet;
+    let sweep_dir = ctx.out_dir.join("policies");
+    // Combination-level parallelism: each run is fully serial inside,
+    // so any outer thread count reproduces the serial sweep bitwise.
+    let outer = ctx.runtime.parallelism().clone();
+    let weights: Vec<usize> =
+        combos.iter().map(|(.., config_id, w)| *w * *config_id as usize).collect();
+    let results: Vec<Result<PolicyRow>> = par::par_map_weighted(&outer, &weights, |i| {
+        let (plabel, spec, tlabel, artifact, config_id, _) = combos[i];
+        let policy = policy::parse_policy(Some(spec))
+            .map_err(|msg| anyhow!("policy spec {spec:?} {msg}"))?
+            .expect("non-empty spec parses to a policy");
+        let cfg = match config_id {
+            2 => crate::model::config::TrainConfig::config2(steps),
+            _ => crate::model::config::TrainConfig::config1(steps),
+        };
+        // Fresh host runtime per combination: policies are a host-layer
+        // feature, and `Runtime` is single-threaded by design.
+        let rt = Runtime::host(model);
+        let trainer = Trainer::new(&rt, cfg);
+        let mut opts =
+            TrainerOptions::new(artifact, steps, sweep_dir.join(plabel));
+        opts.quiet = true;
+        opts.val_every = (steps / 4).max(1);
+        opts.parallelism = Some(Parallelism::serial());
+        opts.policy = Some(policy.clone());
+        let outcome = trainer
+            .run(&opts)
+            .with_context(|| format!("policy sweep run {plabel}/{tlabel}/config{config_id}"))?;
+        let n = outcome.records.len().max(1) as f32;
+        let fallback_pct = outcome
+            .records
+            .iter()
+            .map(|r| r.bf16_fallback_rate)
+            .sum::<f32>()
+            / n
+            * 100.0;
+        if !quiet {
+            println!(
+                "  [policies] {plabel:<9} {tlabel:<10} config{config_id}: loss {:.4} fb {:.1}%",
+                outcome.final_train_loss, fallback_pct
+            );
+        }
+        Ok(PolicyRow {
+            policy: policy.describe(),
+            task: tlabel.to_string(),
+            config_id,
+            final_train_loss: outcome.final_train_loss,
+            final_val_loss: outcome.final_val_loss,
+            fallback_pct,
+            fp8_pct: 100.0 - fallback_pct,
+            mean_step_ms: outcome.mean_step_ms,
+        })
+    });
+    results.into_iter().collect()
+}
+
+/// The `repro report policies` experiment: run the sweep, print the
+/// comparison table, and persist `policies.csv` under the report
+/// out-dir.
+pub fn policies(ctx: &ReportCtx) -> Result<()> {
+    println!(
+        "Policy comparison: {} policies x {} tasks x 2 configs, {} steps each",
+        POLICY_VARIANTS.len(),
+        TASK_VARIANTS.len(),
+        ctx.steps
+    );
+    let rows = policy_sweep(ctx)?;
+
+    println!(
+        "\n{:<22} {:<10} {:>6} {:>11} {:>9} {:>7} {:>7} {:>8}",
+        "policy", "task", "config", "train_loss", "val_loss", "fb%", "fp8%", "step_ms"
+    );
+    for r in &rows {
+        println!(
+            "{:<22} {:<10} {:>6} {:>11.4} {:>9.4} {:>7.2} {:>7.2} {:>8.2}",
+            r.policy,
+            r.task,
+            r.config_id,
+            r.final_train_loss,
+            r.final_val_loss,
+            r.fallback_pct,
+            r.fp8_pct,
+            r.mean_step_ms
+        );
+    }
+
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let csv_path = ctx.out_dir.join("policies.csv");
+    let mut csv = String::from(
+        "policy,task,config,final_train_loss,final_val_loss,fallback_pct,fp8_pct,mean_step_ms\n",
+    );
+    for r in &rows {
+        csv.push_str(&r.csv_line());
+        csv.push('\n');
+    }
+    std::fs::write(&csv_path, csv)?;
+    println!("\nwrote {}", csv_path.display());
+    Ok(())
+}

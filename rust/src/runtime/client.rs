@@ -15,6 +15,7 @@ use super::host::{host_eval_tensors, host_quant, HostQuant, HostTrainer};
 use super::manifest::{ArtifactKind, Manifest};
 use crate::formats::ReprType;
 use crate::model::config::ModelConfig;
+use crate::mor::policy::{self, PolicyRef};
 use crate::model::naming::{param_specs, QuantTensorId};
 use crate::quant::partition::Partition;
 use crate::scaling::delayed::AmaxHistory;
@@ -35,17 +36,44 @@ enum Backend {
     Host,
 }
 
+/// Per-session execution context: the run-scoped knobs every session
+/// constructor threads together — the engine handle and the precision
+/// decision policy. [`Runtime::session_ctx`] seeds one from the
+/// runtime's defaults; callers override fields before passing it to
+/// the `*_session_ctx` constructors (that is what `Trainer::run` does).
+#[derive(Clone)]
+pub struct SessionCtx {
+    pub parallelism: Parallelism,
+    pub policy: PolicyRef,
+}
+
+impl SessionCtx {
+    /// This context with a different engine handle.
+    pub fn with_parallelism(mut self, p: Parallelism) -> SessionCtx {
+        self.parallelism = p;
+        self
+    }
+
+    /// This context with a different decision policy.
+    pub fn with_policy(mut self, p: PolicyRef) -> SessionCtx {
+        self.policy = p;
+        self
+    }
+}
+
 /// A loaded artifact set: backend + manifest + model preset. One
 /// `Runtime` per artifact directory (PJRT) or per preset (host). The
-/// runtime also owns the default [`Parallelism`] handle its sessions
-/// inherit; per-run overrides go through the `*_session_with`
-/// constructors (that is what `Trainer::run` does), replacing the old
-/// process-global scoped override.
+/// runtime also owns the default [`Parallelism`] handle and
+/// [`PolicyRef`] its sessions inherit; per-run overrides go through
+/// the `*_session_with` / `*_session_ctx` constructors (that is what
+/// `Trainer::run` does), replacing the old process-global scoped
+/// override.
 pub struct Runtime {
     backend: Backend,
     pub manifest: Manifest,
     pub model: ModelConfig,
     parallelism: Parallelism,
+    policy: PolicyRef,
 }
 
 impl Runtime {
@@ -60,6 +88,7 @@ impl Runtime {
             manifest,
             model,
             parallelism: par::global(),
+            policy: policy::global(),
         })
     }
 
@@ -73,6 +102,7 @@ impl Runtime {
             manifest: Manifest::host_synthetic(&model),
             model,
             parallelism: par::global(),
+            policy: policy::global(),
         }
     }
 
@@ -92,6 +122,31 @@ impl Runtime {
     /// The default engine handle sessions inherit.
     pub fn parallelism(&self) -> &Parallelism {
         &self.parallelism
+    }
+
+    /// This runtime with a different default [`DecisionPolicy`]
+    /// ([`crate::mor::policy::DecisionPolicy`]); sessions created
+    /// afterwards inherit it.
+    pub fn with_policy(mut self, p: PolicyRef) -> Runtime {
+        self.policy = p;
+        self
+    }
+
+    /// Replace the default policy in place. Existing sessions keep the
+    /// policy they were created with.
+    pub fn set_policy(&mut self, p: PolicyRef) {
+        self.policy = p;
+    }
+
+    /// The default decision policy sessions inherit.
+    pub fn policy(&self) -> &PolicyRef {
+        &self.policy
+    }
+
+    /// A [`SessionCtx`] seeded from this runtime's defaults — the
+    /// starting point for per-run overrides.
+    pub fn session_ctx(&self) -> SessionCtx {
+        SessionCtx { parallelism: self.parallelism.clone(), policy: self.policy.clone() }
     }
 
     /// The shared auto-backend policy: PJRT when a manifest exists at
@@ -135,19 +190,33 @@ impl Runtime {
 
     /// Start a training session for a train artifact, initializing
     /// parameters and Adam state host-side (deterministic seed). Uses
-    /// the runtime's default [`Parallelism`].
+    /// the runtime's default [`SessionCtx`].
     pub fn train_session(&self, name: &str, seed: u64) -> Result<TrainSession> {
-        self.train_session_with(name, seed, self.parallelism.clone())
+        self.train_session_ctx(name, seed, self.session_ctx())
     }
 
     /// [`Runtime::train_session`] with an explicit per-run
-    /// [`Parallelism`] handle (owned by the session for its lifetime).
+    /// [`Parallelism`] handle (owned by the session for its lifetime);
+    /// the policy stays the runtime default.
     pub fn train_session_with(
         &self,
         name: &str,
         seed: u64,
         par: Parallelism,
     ) -> Result<TrainSession> {
+        self.train_session_ctx(name, seed, self.session_ctx().with_parallelism(par))
+    }
+
+    /// [`Runtime::train_session`] with a full per-run [`SessionCtx`]
+    /// (engine handle + decision policy) — the entry every other train
+    /// constructor routes through.
+    pub fn train_session_ctx(
+        &self,
+        name: &str,
+        seed: u64,
+        ctx: SessionCtx,
+    ) -> Result<TrainSession> {
+        let SessionCtx { parallelism: par, policy } = ctx;
         let entry = self.manifest.get(name)?;
         if entry.kind != ArtifactKind::Train {
             bail!("artifact {name} is not a train step");
@@ -176,7 +245,7 @@ impl Runtime {
                     entry.field("scaling").unwrap_or("gam"),
                 )
                 .with_context(|| format!("artifact {name} recipe fields"))?;
-                let trainer = HostTrainer::new(self.model, quant, seed, par);
+                let trainer = HostTrainer::new(self.model, quant, seed, par).with_policy(policy);
                 TrainImpl::Host {
                     trainer,
                     param_lits: Vec::new(),
@@ -185,6 +254,16 @@ impl Runtime {
                 }
             }
             Backend::Pjrt { .. } => {
+                // The compiled artifacts bake the paper's threshold
+                // decisions into the HLO; a swapped-in policy cannot
+                // reach them, so anything else must fail loudly.
+                if policy.pin() != crate::mor::policy::MorThresholdPolicy.pin() {
+                    bail!(
+                        "the PJRT backend compiles the threshold policy into its \
+                         artifacts; policy {:?} requires the host backend",
+                        policy.describe()
+                    );
+                }
                 let exe = self.executable(name)?;
                 // Initialization mirrors python/compile/model.py
                 // `init_params`: scaled-normal weights, ones/zeros for LN.
@@ -219,6 +298,13 @@ impl Runtime {
         self.eval_session_with(name, self.parallelism.clone())
     }
 
+    /// [`Runtime::eval_session`] with a per-run [`SessionCtx`]. Eval
+    /// runs the unquantized baseline forward, so only the engine handle
+    /// is consulted; the policy rides along for constructor uniformity.
+    pub fn eval_session_ctx(&self, name: &str, ctx: SessionCtx) -> Result<EvalSession> {
+        self.eval_session_with(name, ctx.parallelism)
+    }
+
     /// [`Runtime::eval_session`] with an explicit per-run handle.
     pub fn eval_session_with(&self, name: &str, par: Parallelism) -> Result<EvalSession> {
         let entry = self.manifest.get(name)?;
@@ -241,6 +327,13 @@ impl Runtime {
     /// runtime's default [`Parallelism`].
     pub fn quant_session(&self, name: &str) -> Result<QuantSession> {
         self.quant_session_with(name, self.parallelism.clone())
+    }
+
+    /// [`Runtime::quant_session`] with a per-run [`SessionCtx`]. The
+    /// standalone kernels quantize to a fixed artifact format — no
+    /// decisions run, so only the engine handle is consulted.
+    pub fn quant_session_ctx(&self, name: &str, ctx: SessionCtx) -> Result<QuantSession> {
+        self.quant_session_with(name, ctx.parallelism)
     }
 
     /// [`Runtime::quant_session`] with an explicit per-run handle.
@@ -860,6 +953,38 @@ mod tests {
         assert_eq!(oa.loss.to_bits(), ob.loss.to_bits());
         assert_eq!(oa.relerr, ob.relerr);
         assert_eq!(oa.fallback, ob.fallback);
+    }
+
+    #[test]
+    fn sessions_inherit_runtime_policy() {
+        use crate::mor::policy::StaticAssignmentPolicy;
+        use std::sync::Arc;
+        let static_ref: PolicyRef =
+            Arc::new(StaticAssignmentPolicy { table: [ReprType::E4M3; 3] });
+        let rt = Runtime::host(ModelConfig::TINY);
+        assert_eq!(rt.policy().describe(), "threshold");
+        let forced = Runtime::host(ModelConfig::TINY).with_policy(static_ref.clone());
+        assert_eq!(forced.policy().describe(), "static=e4m3,e4m3,e4m3");
+
+        // An impossible threshold: the threshold policy rejects every
+        // tensor (full fallback); the static assignment accepts
+        // everything regardless of the measured error.
+        let mut a = rt.train_session("train_mor_tensor_block", 9).unwrap();
+        let mut b = forced.train_session("train_mor_tensor_block", 9).unwrap();
+        let tokens = vec![3i32; a.batch * a.seq];
+        let oa = a.step(&tokens, 1e-3, 1e-9).unwrap();
+        let ob = b.step(&tokens, 1e-3, 1e-9).unwrap();
+        assert!(oa.fallback.iter().all(|f| *f == 1.0), "threshold must reject all");
+        assert!(ob.fallback.iter().all(|f| *f == 0.0), "static must accept all");
+
+        // A per-session ctx override behaves exactly like the runtime
+        // default it shadows.
+        let ctx = rt.session_ctx().with_policy(static_ref);
+        let mut c = rt.train_session_ctx("train_mor_tensor_block", 9, ctx).unwrap();
+        let oc = c.step(&tokens, 1e-3, 1e-9).unwrap();
+        assert_eq!(ob.loss.to_bits(), oc.loss.to_bits());
+        assert_eq!(ob.relerr, oc.relerr);
+        assert_eq!(ob.fallback, oc.fallback);
     }
 
     #[test]

@@ -22,7 +22,10 @@ use crate::formats::ReprType;
 use crate::kernels::gemm::{pack_b, PackedB};
 use crate::model::config::ModelConfig;
 use crate::model::naming::QuantTensorId;
-use crate::quant::error::dynamic_range_fits_e5m2;
+use crate::mor::policy::{
+    BlockChoice, BlockProps, DecisionPolicy, MorThresholdPolicy, PolicyRef, TensorClass,
+    TensorScope,
+};
 use crate::quant::fake_quant::fake_quantize_with;
 use crate::quant::partition::{BlockRegion, Partition};
 use crate::scaling::delayed::AmaxHistory;
@@ -31,6 +34,7 @@ use crate::tensor::ops::{matmul_nt_with, matmul_packed_with, matmul_tn_with, mat
 use crate::tensor::Tensor;
 use crate::util::par::{self, KernelMode, Parallelism};
 use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
 
 pub const LN_EPS: f32 = 1e-5;
 const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi), f32 of 0.7978845608028654
@@ -226,20 +230,29 @@ impl MorQuantPlan {
 }
 
 /// Plan one MoR operand quantization (python `mor_quantize`'s decision
-/// machinery): run the candidate fake-quantizations, apply the recipe's
-/// accept/fallback rules, and return the block-source plan plus
-/// telemetry. On fallback the operand stays in its original precision,
-/// exactly like the compiled step's `jnp.where(use, fq8, x2d)`.
+/// machinery): run the candidate fake-quantizations, put the recipe's
+/// accept/fallback questions to the [`DecisionPolicy`], and return the
+/// block-source plan plus telemetry. On fallback the operand stays in
+/// its original precision, exactly like the compiled step's
+/// `jnp.where(use, fq8, x2d)`.
+///
+/// The measurement half (candidate fake-quantizations, telemetry) is
+/// recipe-owned and policy-independent; only the *decisions* — the
+/// tensor-level accept and the per-block representation choice — are
+/// delegated. Under [`MorThresholdPolicy`] the plan is bitwise
+/// identical to the historical inline logic.
 ///
 /// The sub-tensor recipes need two candidate quantizations (E4M3 and
 /// E5M2) of the same tensor; they are independent, so they overlap on
 /// the worker pool via [`par::join2`] — each stays internally
 /// chunk-parallel and bit-identical to its serial run.
-pub fn mor_quantize_plan(
+pub fn mor_quantize_plan_policy(
     q: &HostQuant,
     x: &Tensor,
     th: f32,
     direction: usize,
+    policy: &dyn DecisionPolicy,
+    scope: TensorScope,
     cfg: &Parallelism,
 ) -> MorQuantPlan {
     if q.kind == HostRecipeKind::Baseline {
@@ -264,7 +277,8 @@ pub fn mor_quantize_plan(
 
     match q.kind {
         HostRecipeKind::TensorLevel => {
-            if (relerr as f64) < th as f64 {
+            let ctx = scope.ctx(direction, false);
+            if policy.accept_tensor(&ctx, ReprType::E4M3, relerr as f64, th as f64) {
                 MorQuantPlan { choice: QuantChoice::WholeE4M3(fq8.out), relerr, fallback: 0.0 }
             } else {
                 MorQuantPlan { choice: QuantChoice::Original, relerr, fallback: 1.0 }
@@ -272,27 +286,32 @@ pub fn mor_quantize_plan(
         }
         HostRecipeKind::SubTensorTwoWay | HostRecipeKind::SubTensorThreeWay => {
             let fq5 = fq5.expect("sub-tensor recipes computed the E5M2 candidate");
+            let three_way = q.kind == HostRecipeKind::SubTensorThreeWay;
+            let ctx = scope.ctx(direction, three_way);
             let (rows, cols) = x.as_2d();
             let blocks = part.blocks(rows, cols);
             let nb = blocks.len().max(1) as f32;
             let mut sel = Vec::with_capacity(blocks.len());
             let mut fallback_blocks = 0usize;
             for bi in 0..blocks.len() {
-                // M1 (Eq. 3): E4M3 wins when its relerr sum beats E5M2's.
-                if fq8.block_err[bi].sum < fq5.block_err[bi].sum {
-                    sel.push(0);
-                    continue;
-                }
-                if q.kind == HostRecipeKind::SubTensorThreeWay {
-                    // M2 (Eq. 4): E5M2 accepted when the range fits.
-                    let (amax, amin) = fq8.block_range[bi];
-                    if dynamic_range_fits_e5m2(amax, amin) {
-                        sel.push(1);
-                        continue;
+                let props = BlockProps {
+                    e4m3_err: &fq8.block_err[bi],
+                    e5m2_err: &fq5.block_err[bi],
+                    range: fq8.block_range[bi],
+                };
+                let choice = match policy.choose_block(&ctx, &props) {
+                    // E5M2 is not on offer under the two-way recipe.
+                    BlockChoice::E5m2 if !three_way => BlockChoice::Fallback,
+                    c => c,
+                };
+                match choice {
+                    BlockChoice::E4m3 => sel.push(0),
+                    BlockChoice::E5m2 => sel.push(1),
+                    BlockChoice::Fallback => {
+                        sel.push(2); // block stays in original precision
+                        fallback_blocks += 1;
                     }
                 }
-                sel.push(2); // block stays in original precision
-                fallback_blocks += 1;
             }
             MorQuantPlan {
                 choice: QuantChoice::PerBlock { blocks, sel, fq8: fq8.out, fq5: fq5.out },
@@ -302,6 +321,18 @@ pub fn mor_quantize_plan(
         }
         HostRecipeKind::Baseline => unreachable!(),
     }
+}
+
+/// [`mor_quantize_plan_policy`] under the default [`MorThresholdPolicy`]
+/// and an anonymous scope — the historical entry point, bit for bit.
+pub fn mor_quantize_plan(
+    q: &HostQuant,
+    x: &Tensor,
+    th: f32,
+    direction: usize,
+    cfg: &Parallelism,
+) -> MorQuantPlan {
+    mor_quantize_plan_policy(q, x, th, direction, &MorThresholdPolicy, TensorScope::default(), cfg)
 }
 
 /// Apply the MoR recipe to one 2-D GEMM operand: returns (quantized
@@ -315,6 +346,23 @@ pub fn mor_quantize(
     cfg: &Parallelism,
 ) -> (Tensor, f32, f32) {
     let plan = mor_quantize_plan(q, x, th, direction, cfg);
+    let (relerr, fallback) = (plan.relerr, plan.fallback);
+    (plan.into_tensor(x), relerr, fallback)
+}
+
+/// [`mor_quantize`] with an explicit policy and tensor scope — the
+/// training paths' entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn mor_quantize_policy(
+    q: &HostQuant,
+    x: &Tensor,
+    th: f32,
+    direction: usize,
+    policy: &dyn DecisionPolicy,
+    scope: TensorScope,
+    cfg: &Parallelism,
+) -> (Tensor, f32, f32) {
+    let plan = mor_quantize_plan_policy(q, x, th, direction, policy, scope, cfg);
     let (relerr, fallback) = (plan.relerr, plan.fallback);
     (plan.into_tensor(x), relerr, fallback)
 }
@@ -333,6 +381,22 @@ pub fn mor_quantize_packed(
     cfg: &Parallelism,
 ) -> (PackedB, f32, f32) {
     let plan = mor_quantize_plan(q, x, th, direction, cfg);
+    let (relerr, fallback) = (plan.relerr, plan.fallback);
+    (plan.into_packed_b(x), relerr, fallback)
+}
+
+/// [`mor_quantize_packed`] with an explicit policy and tensor scope.
+#[allow(clippy::too_many_arguments)]
+pub fn mor_quantize_packed_policy(
+    q: &HostQuant,
+    x: &Tensor,
+    th: f32,
+    direction: usize,
+    policy: &dyn DecisionPolicy,
+    scope: TensorScope,
+    cfg: &Parallelism,
+) -> (PackedB, f32, f32) {
+    let plan = mor_quantize_plan_policy(q, x, th, direction, policy, scope, cfg);
     let (relerr, fallback) = (plan.relerr, plan.fallback);
     (plan.into_packed_b(x), relerr, fallback)
 }
@@ -636,6 +700,20 @@ impl StepStats {
     }
 }
 
+/// Everything a quantized GEMM needs to plan its operands: the recipe,
+/// the run threshold, the active [`DecisionPolicy`] and the 1-based
+/// optimizer step — bundled so the model walk threads one value
+/// instead of four loose parameters.
+#[derive(Clone, Copy)]
+pub struct StepEnv<'a> {
+    pub quant: &'a HostQuant,
+    pub th: f32,
+    pub policy: &'a dyn DecisionPolicy,
+    /// Optimizer step feeding [`DecisionCtx::step`]
+    /// ([`crate::mor::policy::DecisionCtx`]); 0 outside training.
+    pub step: u64,
+}
+
 /// y = fq(x) @ fq(w), recording input/weight forward-direction stats.
 /// The two operand quantizations are independent and overlap on the
 /// pool.
@@ -646,10 +724,8 @@ impl StepStats {
 /// row-major tensor. The scalar oracle keeps the historical
 /// materialize-then-multiply sequence. Both produce bit-identical
 /// outputs and telemetry.
-#[allow(clippy::too_many_arguments)]
 fn linear_fwd(
-    q: &HostQuant,
-    th: f32,
+    env: &StepEnv,
     stats: &mut StepStats,
     layer: usize,
     linear: usize,
@@ -657,11 +733,14 @@ fn linear_fwd(
     w: &Tensor,
     cfg: &Parallelism,
 ) -> Tensor {
+    let (q, th, pol) = (env.quant, env.th, env.policy);
+    let xs = TensorScope::new(TensorClass::Input, layer, env.step);
+    let ws = TensorScope::new(TensorClass::Weight, layer, env.step);
     if cfg.kernel() == KernelMode::Scalar {
         let ((qx, rex, fbx), (qw, rew, fbw)) = par::join2(
             cfg,
-            || mor_quantize(q, x2d, th, 0, cfg),
-            || mor_quantize(q, w, th, 1, cfg),
+            || mor_quantize_policy(q, x2d, th, 0, pol, xs, cfg),
+            || mor_quantize_policy(q, w, th, 1, pol, ws, cfg),
         );
         stats.record(layer, linear, 0, 0, rex, fbx, x2d.amax());
         stats.record(layer, linear, 1, 0, rew, fbw, w.amax());
@@ -669,8 +748,8 @@ fn linear_fwd(
     }
     let ((qx, rex, fbx), (pw, rew, fbw)) = par::join2(
         cfg,
-        || mor_quantize(q, x2d, th, 0, cfg),
-        || mor_quantize_packed(q, w, th, 1, cfg),
+        || mor_quantize_policy(q, x2d, th, 0, pol, xs, cfg),
+        || mor_quantize_packed_policy(q, w, th, 1, pol, ws, cfg),
     );
     stats.record(layer, linear, 0, 0, rex, fbx, x2d.amax());
     stats.record(layer, linear, 1, 0, rew, fbw, w.amax());
@@ -688,8 +767,7 @@ fn linear_fwd(
 /// canonical, so the result is bit-identical to the sequential order.
 #[allow(clippy::too_many_arguments)]
 fn linear_bwd(
-    q: &HostQuant,
-    th: f32,
+    env: &StepEnv,
     stats: &mut StepStats,
     layer: usize,
     linear: usize,
@@ -699,8 +777,12 @@ fn linear_bwd(
     cfg: &Parallelism,
 ) -> (Tensor, Tensor) {
     if cfg.kernel() == KernelMode::Scalar {
-        return linear_bwd_scalar(q, th, stats, layer, linear, x2d, w, dy2d, cfg);
+        return linear_bwd_scalar(env, stats, layer, linear, x2d, w, dy2d, cfg);
     }
+    let (q, th, pol) = (env.quant, env.th, env.policy);
+    let xs = TensorScope::new(TensorClass::Input, layer, env.step);
+    let ws = TensorScope::new(TensorClass::Weight, layer, env.step);
+    let gs = TensorScope::new(TensorClass::Grad, layer, env.step);
     // Kernel engine, fused quantize-on-pack for both B-side operands:
     // W^T (B of the dx GEMM) and the direction-1 dy (B of the dW GEMM)
     // quantize straight into pack buffers. dy direction 0 and x^T are
@@ -716,12 +798,12 @@ fn linear_bwd(
         || {
             par::join2(
                 cfg,
-                || mor_quantize(q, dy2d, th, 0, cfg),
+                || mor_quantize_policy(q, dy2d, th, 0, pol, gs, cfg),
                 || {
                     if q.partition.direction_invariant() {
                         None
                     } else {
-                        Some(mor_quantize_packed(q, dy2d, th, 1, cfg))
+                        Some(mor_quantize_packed_policy(q, dy2d, th, 1, pol, gs, cfg))
                     }
                 },
             )
@@ -731,11 +813,11 @@ fn linear_bwd(
                 cfg,
                 || {
                     let wt = w.transpose();
-                    mor_quantize_packed(q, &wt, th, 1, cfg)
+                    mor_quantize_packed_policy(q, &wt, th, 1, pol, ws, cfg)
                 },
                 || {
                     let xt = x2d.transpose();
-                    mor_quantize(q, &xt, th, 0, cfg)
+                    mor_quantize_policy(q, &xt, th, 0, pol, xs, cfg)
                 },
             )
         },
@@ -763,8 +845,7 @@ fn linear_bwd(
 /// materializes, every GEMM packs internally or runs naive.
 #[allow(clippy::too_many_arguments)]
 fn linear_bwd_scalar(
-    q: &HostQuant,
-    th: f32,
+    env: &StepEnv,
     stats: &mut StepStats,
     layer: usize,
     linear: usize,
@@ -773,17 +854,21 @@ fn linear_bwd_scalar(
     dy2d: &Tensor,
     cfg: &Parallelism,
 ) -> (Tensor, Tensor) {
+    let (q, th, pol) = (env.quant, env.th, env.policy);
+    let xs = TensorScope::new(TensorClass::Input, layer, env.step);
+    let ws = TensorScope::new(TensorClass::Weight, layer, env.step);
+    let gs = TensorScope::new(TensorClass::Grad, layer, env.step);
     let (((qdy0, reg0, fbg0), alt_dy), ((qwt, rew1, fbw1), (qxt, rex1, fbx1))) = par::join2(
         cfg,
         || {
             par::join2(
                 cfg,
-                || mor_quantize(q, dy2d, th, 0, cfg),
+                || mor_quantize_policy(q, dy2d, th, 0, pol, gs, cfg),
                 || {
                     if q.partition.direction_invariant() {
                         None
                     } else {
-                        Some(mor_quantize(q, dy2d, th, 1, cfg))
+                        Some(mor_quantize_policy(q, dy2d, th, 1, pol, gs, cfg))
                     }
                 },
             )
@@ -793,11 +878,11 @@ fn linear_bwd_scalar(
                 cfg,
                 || {
                     let wt = w.transpose();
-                    mor_quantize(q, &wt, th, 1, cfg)
+                    mor_quantize_policy(q, &wt, th, 1, pol, ws, cfg)
                 },
                 || {
                     let xt = x2d.transpose();
-                    mor_quantize(q, &xt, th, 0, cfg)
+                    mor_quantize_policy(q, &xt, th, 0, pol, xs, cfg)
                 },
             )
         },
@@ -921,8 +1006,7 @@ fn check_tokens(tokens: &[i32], vocab: usize) -> Result<()> {
 #[allow(clippy::too_many_arguments)]
 fn forward(
     m: &ModelConfig,
-    q: &HostQuant,
-    th: f32,
+    env: &StepEnv,
     params: &[Tensor],
     tokens: &[i32],
     batch: usize,
@@ -951,17 +1035,17 @@ fn forward(
         let lp = layer_params(params, l);
         // Attention block: x = x + proj(attn(qkv(ln1(x)))).
         let (h2d, ln1) = layernorm_fwd(&x, lp.ln1_s, lp.ln1_b);
-        let qkv = linear_fwd(q, th, stats, l, 0, &h2d, lp.wqkv, cfg);
+        let qkv = linear_fwd(env, stats, l, 0, &h2d, lp.wqkv, cfg);
         let (q3, k3, v3) = split3(&qkv, d);
         let (a2d, attn) = attention_fwd(m, batch, &q3, &k3, &v3);
-        let proj = linear_fwd(q, th, stats, l, 1, &a2d, lp.wproj, cfg);
+        let proj = linear_fwd(env, stats, l, 1, &a2d, lp.wproj, cfg);
         add_into(&mut x, &proj);
 
         // MLP block: x = x + fc2(gelu(fc1(ln2(x)))).
         let (h2, ln2) = layernorm_fwd(&x, lp.ln2_s, lp.ln2_b);
-        let f2d = linear_fwd(q, th, stats, l, 2, &h2, lp.w1, cfg);
+        let f2d = linear_fwd(env, stats, l, 2, &h2, lp.w1, cfg);
         let (g, gelu_t) = gelu_fwd(&f2d);
-        let o2d = linear_fwd(q, th, stats, l, 3, &g, lp.w2, cfg);
+        let o2d = linear_fwd(env, stats, l, 3, &g, lp.w2, cfg);
         add_into(&mut x, &o2d);
 
         if save {
@@ -1020,8 +1104,7 @@ fn loss_and_dlogits(
 #[allow(clippy::too_many_arguments)]
 fn backward(
     m: &ModelConfig,
-    q: &HostQuant,
-    th: f32,
+    env: &StepEnv,
     params: &[Tensor],
     cache: &ForwardCache,
     dlogits: &Tensor,
@@ -1046,17 +1129,17 @@ fn backward(
         let lc = &cache.layers[l];
 
         // MLP block.
-        let (dg, dw2) = linear_bwd(q, th, stats, l, 3, &lc.fc2_in, lp.w2, &dx, cfg);
+        let (dg, dw2) = linear_bwd(env, stats, l, 3, &lc.fc2_in, lp.w2, &dx, cfg);
         let df = gelu_bwd(&lc.gelu_in, &lc.gelu_t, &dg);
-        let (dh2, dw1) = linear_bwd(q, th, stats, l, 2, &lc.fc1_in, lp.w1, &df, cfg);
+        let (dh2, dw1) = linear_bwd(env, stats, l, 2, &lc.fc1_in, lp.w1, &df, cfg);
         let (dx_mlp, dln2s, dln2b) = layernorm_bwd(&lc.ln2, lp.ln2_s, &dh2);
         add_into(&mut dx, &dx_mlp);
 
         // Attention block.
-        let (da2d, dwproj) = linear_bwd(q, th, stats, l, 1, &lc.proj_in, lp.wproj, &dx, cfg);
+        let (da2d, dwproj) = linear_bwd(env, stats, l, 1, &lc.proj_in, lp.wproj, &dx, cfg);
         let (dq3, dk3, dv3) = attention_bwd(m, batch, &lc.attn, &da2d);
         let dqkv = concat3(&dq3, &dk3, &dv3);
-        let (dh2d, dwqkv) = linear_bwd(q, th, stats, l, 0, &lc.qkv_in, lp.wqkv, &dqkv, cfg);
+        let (dh2d, dwqkv) = linear_bwd(env, stats, l, 0, &lc.qkv_in, lp.wqkv, &dqkv, cfg);
         let (dx_attn, dln1s, dln1b) = layernorm_bwd(&lc.ln1, lp.ln1_s, &dh2d);
         add_into(&mut dx, &dx_attn);
 
@@ -1101,6 +1184,11 @@ pub struct HostTrainer {
     pub quant: HostQuant,
     /// The per-run engine handle every hot-path call below runs on.
     pub par: Parallelism,
+    /// The precision-assignment policy every quantization decision in
+    /// [`HostTrainer::step`] consults. Defaults to the paper's
+    /// [`MorThresholdPolicy`]; swap per run with
+    /// [`HostTrainer::with_policy`].
+    pub policy: PolicyRef,
     pub params: Vec<Tensor>,
     m: Vec<Tensor>,
     v: Vec<Tensor>,
@@ -1130,7 +1218,14 @@ impl HostTrainer {
         let v = specs.iter().map(|sp| Tensor::zeros(&sp.shape)).collect();
         let amax_hist =
             vec![AmaxHistory::new(AMAX_HIST_WINDOW); QuantTensorId::count(&model)];
-        HostTrainer { model, quant, par, params, m, v, amax_hist }
+        let policy: PolicyRef = Arc::new(MorThresholdPolicy);
+        HostTrainer { model, quant, par, policy, params, m, v, amax_hist }
+    }
+
+    /// Replace the decision policy (builder style, for session setup).
+    pub fn with_policy(mut self, policy: PolicyRef) -> HostTrainer {
+        self.policy = policy;
+        self
     }
 
     /// The Adam moments, in canonical parameter order (checkpointing).
@@ -1204,10 +1299,15 @@ impl HostTrainer {
         check_tokens(tokens, self.model.vocab_size)?;
         let n_slots = QuantTensorId::count(&self.model);
         let mut stats = StepStats::new(n_slots);
+        let env = StepEnv {
+            quant: &self.quant,
+            th,
+            policy: self.policy.as_ref(),
+            step: adam_t as u64,
+        };
         let (logits, cache) = forward(
             &self.model,
-            &self.quant,
-            th,
+            &env,
             &self.params,
             tokens,
             batch,
@@ -1219,8 +1319,7 @@ impl HostTrainer {
         let cache = cache.expect("forward(save=true) returns a cache");
         let grads = backward(
             &self.model,
-            &self.quant,
-            th,
+            &env,
             &self.params,
             &cache,
             &dlogits,
@@ -1281,8 +1380,10 @@ pub fn host_eval_tensors(
     check_tokens(tokens, v)?;
     let mut stats = StepStats::new(QuantTensorId::count(model));
     let quant = HostQuant::baseline();
-    let (logits, _) =
-        forward(model, &quant, 1.0, params, tokens, batch, &mut stats, false, cfg);
+    // Baseline recipe: no quantization decisions run, so the policy is
+    // inert here — eval scores are policy-independent by construction.
+    let env = StepEnv { quant: &quant, th: 1.0, policy: &MorThresholdPolicy, step: 0 };
+    let (logits, _) = forward(model, &env, params, tokens, batch, &mut stats, false, cfg);
     let mut n = 0f64;
     let mut loss = 0f64;
     let mut correct = 0f64;
@@ -1373,6 +1474,45 @@ mod tests {
         assert!(re >= 0.045);
         assert_eq!(fb, 1.0);
         assert_eq!(out, wild);
+    }
+
+    #[test]
+    fn mor_quantize_policy_overrides_decisions() {
+        use crate::mor::policy::StaticAssignmentPolicy;
+        let cfg = Parallelism::serial();
+        let mut wild = Tensor::normal(&[16, 16], 1.0, 3);
+        for (i, v) in wild.data_mut().iter_mut().enumerate() {
+            *v *= (10.0f32).powi((i % 13) as i32 - 6);
+        }
+        // The no-policy entry point is the threshold policy, bit for bit.
+        for (recipe, partition) in
+            [("tensor_level", "tensor"), ("subtensor2", "block4x4"), ("subtensor3", "block4x4")]
+        {
+            let q = HostQuant::from_fields(recipe, partition, "gam").unwrap();
+            let (a, rea, fba) = mor_quantize(&q, &wild, 0.045, 0, &cfg);
+            let (b, reb, fbb) = mor_quantize_policy(
+                &q,
+                &wild,
+                0.045,
+                0,
+                &MorThresholdPolicy,
+                TensorScope::default(),
+                &cfg,
+            );
+            assert_eq!(a, b, "{recipe} output");
+            assert_eq!((rea.to_bits(), fba.to_bits()), (reb.to_bits(), fbb.to_bits()));
+        }
+        // A static all-E4M3 assignment forces the accept the threshold
+        // policy refuses on this wide-range tensor.
+        let q = HostQuant::from_fields("tensor_level", "tensor", "gam").unwrap();
+        let (_, re, fb) = mor_quantize(&q, &wild, 0.045, 0, &cfg);
+        assert!(re >= 0.045 && fb == 1.0);
+        let all_e4m3 = StaticAssignmentPolicy { table: [ReprType::E4M3; 3] };
+        let (out, re, fb) =
+            mor_quantize_policy(&q, &wild, 0.045, 0, &all_e4m3, TensorScope::default(), &cfg);
+        assert!(re >= 0.045, "telemetry is policy-independent");
+        assert_eq!(fb, 0.0, "static policy accepts regardless of relerr");
+        assert_ne!(out, wild, "accepted tensor is actually quantized");
     }
 
     #[test]

@@ -12,10 +12,12 @@
 //!   `cargo test` and the trainer smoke tests self-contained.
 //!
 //! Every `Runtime` owns a default `util::par::Parallelism` handle (a
-//! persistent worker pool); sessions inherit it at creation, and the
-//! `*_session_with` constructors take an explicit per-run handle — the
-//! path `Trainer::run` uses, so concurrent runs never share or mutate
-//! a process-global engine setting.
+//! persistent worker pool) and a default `mor::policy` [`PolicyRef`];
+//! sessions inherit both at creation. The `*_session_with`
+//! constructors take an explicit per-run engine handle, and the
+//! `*_session_ctx` constructors take a full [`SessionCtx`] (handle +
+//! decision policy) — the path `Trainer::run` uses, so concurrent runs
+//! never share or mutate a process-global setting.
 //!
 //! Parameters flow from train to eval sessions as a borrowed
 //! [`ParamsRef`] (`TrainSession::params_ref` →
@@ -43,7 +45,9 @@ pub mod host;
 pub mod manifest;
 
 pub use client::{
-    EvalSession, ParamsRef, QuantSession, Runtime, StepOutputs, TrainSession, TrainState,
+    EvalSession, ParamsRef, QuantSession, Runtime, SessionCtx, StepOutputs, TrainSession,
+    TrainState,
 };
-pub use host::{HostQuant, HostTrainer};
+pub use crate::mor::policy::PolicyRef;
+pub use host::{HostQuant, HostTrainer, StepEnv};
 pub use manifest::{ArtifactEntry, ArtifactKind, Manifest};

@@ -1,0 +1,190 @@
+//! The environment-knob registry: one strict parser family and one
+//! table of every `MOR_*` variable the crate reads.
+//!
+//! Historically each knob (`MOR_THREADS`, `MOR_PAR_MIN_BLOCK`,
+//! `MOR_SCALAR_KERNELS`, `MOR_NO_SIMD`) carried its own hand-rolled
+//! strict parser in `util::par`; adding `MOR_POLICY` would have made a
+//! fifth copy. This module centralizes the two parser shapes every
+//! knob uses — positive integer and 0/1 boolean — with the original
+//! error messages preserved verbatim (tests pin them), plus a
+//! [`KNOBS`] registry that the README knobs table is generated from
+//! (`knobs_markdown`), so docs cannot drift from the code.
+//!
+//! Parsing stays **strict** by design: a set-but-malformed knob is a
+//! loud error, never a silent fallback — a typo in the CI determinism
+//! matrix must fail the job, not quietly run serial.
+
+/// One registered environment knob: the variable, its optional CLI
+/// twin, and the two README table columns.
+#[derive(Debug, Clone, Copy)]
+pub struct Knob {
+    /// Environment variable name (`MOR_*`).
+    pub env: &'static str,
+    /// The CLI flag spelling when one exists (`--threads N`).
+    pub flag: Option<&'static str>,
+    /// Default shown in the README table.
+    pub default_desc: &'static str,
+    /// Meaning column of the README table.
+    pub meaning: &'static str,
+}
+
+/// Every environment knob the crate reads, in README table order.
+/// `Parallelism::auto` resolves the first four; `mor::policy::auto`
+/// resolves `MOR_POLICY`.
+pub const KNOBS: &[Knob] = &[
+    Knob {
+        env: "MOR_THREADS",
+        flag: Some("--threads N"),
+        default_desc: "machine parallelism",
+        meaning: "chunk runners (1 = serial)",
+    },
+    Knob {
+        env: "MOR_PAR_MIN_BLOCK",
+        flag: Some("--par-min-block N"),
+        default_desc: "8192",
+        meaning: "tensors below N elements stay serial",
+    },
+    Knob {
+        env: "MOR_SCALAR_KERNELS",
+        flag: None,
+        default_desc: "0",
+        meaning: "`1` forces the scalar reference kernels (parity oracle)",
+    },
+    Knob {
+        env: "MOR_NO_SIMD",
+        flag: None,
+        default_desc: "0",
+        meaning: "`1` pins the blocked-scalar kernels (SIMD-off oracle)",
+    },
+    Knob {
+        env: "MOR_POLICY",
+        flag: Some("--policy SPEC"),
+        default_desc: "threshold",
+        meaning: "decision policy: `threshold`, `metric[=BUDGET]` or \
+                  `static[=INPUT,WEIGHT,GRAD]`",
+    },
+];
+
+/// The README knobs table, generated from [`KNOBS`]. A unit test (and
+/// the doc itself) pins `README.md` to this exact rendering.
+pub fn knobs_markdown() -> String {
+    let mut out = String::from("| knob | default | meaning |\n|------|---------|---------|\n");
+    for k in KNOBS {
+        match k.flag {
+            Some(flag) => out.push_str(&format!(
+                "| `{}` / `{}` | {} | {} |\n",
+                flag, k.env, k.default_desc, k.meaning
+            )),
+            None => {
+                out.push_str(&format!("| `{}` | {} | {} |\n", k.env, k.default_desc, k.meaning))
+            }
+        }
+    }
+    out
+}
+
+/// Read a knob's raw value (`None` when unset). One chokepoint so the
+/// registry is also the inventory of every `std::env::var` read.
+pub fn var(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+/// Strictly parse a positive-integer knob: `Ok(None)` when unset,
+/// `Ok(Some(n))` for `n >= 1`, and a clear error for `0`, empty or
+/// non-numeric values. `prefix` is prepended to every message (either
+/// the knob name plus a space, or empty when the caller prefixes the
+/// flag/env spelling itself); `unit` names what a valid value is;
+/// `zero_advice` explains what to do instead of `0`.
+pub fn parse_pos_int(
+    raw: Option<&str>,
+    prefix: &str,
+    unit: &str,
+    zero_advice: &str,
+) -> Result<Option<usize>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return Err(format!("{prefix}is set but empty; use a {unit} or unset it"));
+    }
+    match trimmed.parse::<usize>() {
+        Ok(0) => Err(format!("{prefix}must be >= 1 ({zero_advice})")),
+        Ok(n) => Ok(Some(n)),
+        Err(_) => Err(format!("{prefix}must be a {unit}, got {trimmed:?}")),
+    }
+}
+
+/// Strictly parse a `0`/`1` oracle knob: `Ok(None)` when unset,
+/// `Ok(Some(true/false))` for `1`/`0`, and a clear error naming both
+/// states for anything else.
+pub fn parse_bool01(
+    raw: Option<&str>,
+    name: &str,
+    on_desc: &str,
+    off_desc: &str,
+) -> Result<Option<bool>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    match raw.trim() {
+        "1" => Ok(Some(true)),
+        "0" => Ok(Some(false)),
+        other => {
+            Err(format!("{name} must be 1 ({on_desc}) or 0 ({off_desc}), got {other:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pos_int_parser_accepts_and_rejects() {
+        assert_eq!(parse_pos_int(None, "X ", "positive integer", "z"), Ok(None));
+        assert_eq!(parse_pos_int(Some("4"), "X ", "positive integer", "z"), Ok(Some(4)));
+        assert_eq!(parse_pos_int(Some(" 13 "), "X ", "positive integer", "z"), Ok(Some(13)));
+        assert!(parse_pos_int(Some(""), "X ", "positive integer", "z").is_err());
+        assert!(parse_pos_int(Some("0"), "X ", "positive integer", "z").is_err());
+        assert!(parse_pos_int(Some("-2"), "X ", "positive integer", "z").is_err());
+        assert!(parse_pos_int(Some("O8"), "X ", "positive integer", "z").is_err());
+    }
+
+    #[test]
+    fn bool01_parser_accepts_and_rejects() {
+        assert_eq!(parse_bool01(None, "X", "on", "off"), Ok(None));
+        assert_eq!(parse_bool01(Some("1"), "X", "on", "off"), Ok(Some(true)));
+        assert_eq!(parse_bool01(Some(" 0 "), "X", "on", "off"), Ok(Some(false)));
+        let err = parse_bool01(Some("yes"), "X", "on", "off").unwrap_err();
+        assert_eq!(err, "X must be 1 (on) or 0 (off), got \"yes\"");
+    }
+
+    #[test]
+    fn registry_covers_the_known_knobs() {
+        let names: Vec<&str> = KNOBS.iter().map(|k| k.env).collect();
+        assert_eq!(
+            names,
+            [
+                "MOR_THREADS",
+                "MOR_PAR_MIN_BLOCK",
+                "MOR_SCALAR_KERNELS",
+                "MOR_NO_SIMD",
+                "MOR_POLICY"
+            ]
+        );
+    }
+
+    /// The README knobs table is a literal copy of `knobs_markdown()`:
+    /// editing one without the other fails here.
+    #[test]
+    fn readme_knobs_table_matches_registry() {
+        let readme = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap()
+            .join("README.md");
+        let text = std::fs::read_to_string(&readme).expect("README.md at the repo root");
+        let table = knobs_markdown();
+        assert!(
+            text.contains(&table),
+            "README.md knobs table is out of sync with util::env::KNOBS;\n\
+             regenerate it from knobs_markdown():\n{table}"
+        );
+    }
+}

@@ -1,11 +1,13 @@
 //! In-repo replacements for crates unavailable in the offline build
 //! environment: a deterministic property-testing harness, a tiny CLI
 //! argument parser, a micro-benchmark harness (used by `cargo bench`
-//! targets with `harness = false`), a seeded RNG, and the parallel
-//! chunked execution engine behind the quantization hot paths.
+//! targets with `harness = false`), a seeded RNG, the strict
+//! environment-knob registry ([`env`]), and the parallel chunked
+//! execution engine behind the quantization hot paths.
 
 pub mod bench;
 pub mod cli;
+pub mod env;
 pub mod par;
 pub mod proptest;
 pub mod rng;

@@ -177,7 +177,7 @@ impl Parallelism {
     /// to hide typos (`MOR_THREADS=O8` ran serial); misconfiguring the
     /// determinism matrix should be loud.
     pub fn auto() -> Parallelism {
-        let env = std::env::var("MOR_THREADS").ok();
+        let env = crate::util::env::var("MOR_THREADS");
         let threads = match parse_mor_threads(env.as_deref()) {
             Ok(Some(n)) => n,
             Ok(None) => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
@@ -259,22 +259,15 @@ impl Parallelism {
 /// Parse a `MOR_THREADS` value: `Ok(None)` when unset, `Ok(Some(n))`
 /// for a positive integer, and a clear error for everything else —
 /// `0` (no workers is not a thread count; use 1 for serial), empty,
-/// negative or non-numeric strings.
+/// negative or non-numeric strings. Delegates to the shared strict
+/// parser in [`crate::util::env`]; the messages are unchanged.
 pub fn parse_mor_threads(raw: Option<&str>) -> Result<Option<usize>, String> {
-    let Some(raw) = raw else { return Ok(None) };
-    let trimmed = raw.trim();
-    if trimmed.is_empty() {
-        return Err(
-            "MOR_THREADS is set but empty; use a positive integer or unset it".to_string()
-        );
-    }
-    match trimmed.parse::<usize>() {
-        Ok(0) => Err(
-            "MOR_THREADS must be >= 1 (use 1 for serial, unset for autodetect)".to_string()
-        ),
-        Ok(n) => Ok(Some(n)),
-        Err(_) => Err(format!("MOR_THREADS must be a positive integer, got {trimmed:?}")),
-    }
+    crate::util::env::parse_pos_int(
+        raw,
+        "MOR_THREADS ",
+        "positive integer",
+        "use 1 for serial, unset for autodetect",
+    )
 }
 
 /// Parse a `--par-min-block` / `MOR_PAR_MIN_BLOCK` value with the same
@@ -283,20 +276,12 @@ pub fn parse_mor_threads(raw: Option<&str>) -> Result<Option<usize>, String> {
 /// `0` (use `1` to parallelize everything), empty, negative or
 /// non-numeric strings. The caller prefixes the flag/env name.
 pub fn parse_par_min_block(raw: Option<&str>) -> Result<Option<usize>, String> {
-    let Some(raw) = raw else { return Ok(None) };
-    let trimmed = raw.trim();
-    if trimmed.is_empty() {
-        return Err("is set but empty; use a positive element count or unset it".to_string());
-    }
-    match trimmed.parse::<usize>() {
-        Ok(0) => Err(
-            "must be >= 1 (a cutoff of 1 element parallelizes everything; \
-             unset for the default)"
-                .to_string(),
-        ),
-        Ok(n) => Ok(Some(n)),
-        Err(_) => Err(format!("must be a positive element count, got {trimmed:?}")),
-    }
+    crate::util::env::parse_pos_int(
+        raw,
+        "",
+        "positive element count",
+        "a cutoff of 1 element parallelizes everything; unset for the default",
+    )
 }
 
 /// The `MOR_PAR_MIN_BLOCK` serial-cutoff override, strictly parsed.
@@ -305,7 +290,7 @@ pub fn parse_par_min_block(raw: Option<&str>) -> Result<Option<usize>, String> {
 /// When the variable is set but not a positive integer — CI tuning
 /// typos must fail loudly, exactly like `MOR_THREADS`.
 pub fn env_min_items() -> Option<usize> {
-    let env = std::env::var("MOR_PAR_MIN_BLOCK").ok();
+    let env = crate::util::env::var("MOR_PAR_MIN_BLOCK");
     match parse_par_min_block(env.as_deref()) {
         Ok(v) => v,
         Err(msg) => panic!("MOR_PAR_MIN_BLOCK {msg}"),
@@ -317,15 +302,7 @@ pub fn env_min_items() -> Option<usize> {
 /// clear error for anything else — a typo must not silently select a
 /// kernel implementation.
 pub fn parse_scalar_kernels(raw: Option<&str>) -> Result<Option<bool>, String> {
-    let Some(raw) = raw else { return Ok(None) };
-    match raw.trim() {
-        "1" => Ok(Some(true)),
-        "0" => Ok(Some(false)),
-        other => Err(format!(
-            "MOR_SCALAR_KERNELS must be 1 (scalar oracle) or 0 (blocked kernels), \
-             got {other:?}"
-        )),
-    }
+    crate::util::env::parse_bool01(raw, "MOR_SCALAR_KERNELS", "scalar oracle", "blocked kernels")
 }
 
 /// The `MOR_SCALAR_KERNELS` oracle override ([`Parallelism::auto`]):
@@ -334,7 +311,7 @@ pub fn parse_scalar_kernels(raw: Option<&str>) -> Result<Option<bool>, String> {
 /// # Panics
 /// When the variable is set but not `0`/`1`.
 pub fn env_scalar_kernels() -> bool {
-    let env = std::env::var("MOR_SCALAR_KERNELS").ok();
+    let env = crate::util::env::var("MOR_SCALAR_KERNELS");
     match parse_scalar_kernels(env.as_deref()) {
         Ok(v) => v.unwrap_or(false),
         Err(msg) => panic!("{msg}"),
@@ -345,14 +322,7 @@ pub fn env_scalar_kernels() -> bool {
 /// when unset, `Ok(Some(true/false))` for `1`/`0`, and a clear error
 /// for anything else.
 pub fn parse_no_simd(raw: Option<&str>) -> Result<Option<bool>, String> {
-    let Some(raw) = raw else { return Ok(None) };
-    match raw.trim() {
-        "1" => Ok(Some(true)),
-        "0" => Ok(Some(false)),
-        other => Err(format!(
-            "MOR_NO_SIMD must be 1 (blocked-scalar oracle) or 0 (SIMD kernels), got {other:?}"
-        )),
-    }
+    crate::util::env::parse_bool01(raw, "MOR_NO_SIMD", "blocked-scalar oracle", "SIMD kernels")
 }
 
 /// The `MOR_NO_SIMD` oracle override ([`Parallelism::auto`]): `true`
@@ -363,7 +333,7 @@ pub fn parse_no_simd(raw: Option<&str>) -> Result<Option<bool>, String> {
 /// # Panics
 /// When the variable is set but not `0`/`1`.
 pub fn env_no_simd() -> bool {
-    let env = std::env::var("MOR_NO_SIMD").ok();
+    let env = crate::util::env::var("MOR_NO_SIMD");
     match parse_no_simd(env.as_deref()) {
         Ok(v) => v.unwrap_or(false),
         Err(msg) => panic!("{msg}"),

@@ -324,6 +324,61 @@ fn golden_fixture_v1_bytes_pinned() {
     assert_tensors_bitwise_eq(&back.tensors, &fixture_checkpoint().tensors);
 }
 
+// ---------------------------------------------------------------------------
+// Option pinning: the decision policy is part of the resume contract
+// ---------------------------------------------------------------------------
+
+/// MORCKPT2 checkpoints pin the decision policy fingerprint
+/// (`opt/policy`): resuming under a different policy changes every
+/// quantization decision, so it must error loudly instead of silently
+/// diverging from the bitwise resume ≡ continuous contract. Resuming
+/// with the original policy spelled explicitly still works.
+#[test]
+fn resume_rejects_policy_mismatch() {
+    use mor::coordinator::trainer::{Trainer, TrainerOptions};
+    use mor::model::config::{ModelConfig, TrainConfig};
+    use mor::mor::policy;
+    use mor::runtime::Runtime;
+    use mor::util::par::Parallelism;
+
+    const ARTIFACT: &str = "train_mor_tensor_block";
+    let rt = Runtime::host(ModelConfig::TINY);
+    let trainer = Trainer::new(&rt, TrainConfig::config1(4));
+    let base = tmpdir("policy_pin");
+    let mk = |out: PathBuf, resume: Option<PathBuf>, spec: Option<&str>| {
+        let mut o = TrainerOptions::new(ARTIFACT, 4, out);
+        o.val_every = 2;
+        o.ckpt_every = 2;
+        o.quiet = true;
+        o.resume = resume;
+        o.policy = spec.map(|s| policy::parse_policy(Some(s)).unwrap().unwrap());
+        o.parallelism = Some(Parallelism::serial());
+        o
+    };
+    trainer.run(&mk(base.join("orig"), None, None)).unwrap();
+    let ckpt = base.join("orig").join(format!("{ARTIFACT}.step2.ckpt"));
+    assert!(ckpt.exists(), "checkpoint missing");
+
+    // Different policy → hard error naming the flag.
+    let err = trainer
+        .run(&mk(base.join("bad"), Some(ckpt.clone()), Some("metric=0.03")))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--policy"), "error should name the mismatched flag: {msg}");
+
+    // Original (default threshold) policy, spelled explicitly →
+    // resumes fine and reproduces the continuous run bitwise.
+    let cont = trainer.run(&mk(base.join("cont"), None, Some("threshold"))).unwrap();
+    let res =
+        trainer.run(&mk(base.join("res"), Some(ckpt), Some("threshold"))).unwrap();
+    assert_eq!(cont.records.len(), res.records.len());
+    for (a, b) in cont.records.iter().zip(res.records.iter()) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "step {}", a.step);
+        assert_eq!(a.param_norm.to_bits(), b.param_norm.to_bits(), "step {}", a.step);
+    }
+    std::fs::remove_dir_all(base).ok();
+}
+
 #[test]
 fn golden_fixture_v2_bytes_pinned() {
     let want = std::fs::read(golden("morckpt2_fixture.bin"))

@@ -1,0 +1,305 @@
+//! The `DecisionPolicy` refactor's correctness contract:
+//!
+//! * the default policy path (no `--policy`, `TrainerOptions::policy`
+//!   = None) is **bitwise identical** to an explicit
+//!   `MorThresholdPolicy` — at 1, 2 and 13 threads — so extracting the
+//!   decisions behind the trait changed nothing;
+//! * the rival policies (`metric=`, `static=`) keep the parallel ≡
+//!   serial contract: any thread count reproduces the serial run
+//!   bitwise;
+//! * per-policy decision fractions on a fixed adversarial tensor are
+//!   pinned against a committed golden
+//!   (`tests/golden/policy_decision_fractions.csv`, bootstrapped on
+//!   first run like the trainer-smoke trajectory);
+//! * `parse_policy` stays strict: malformed specs are loud errors.
+
+use mor::coordinator::trainer::{Trainer, TrainerOptions, TrainOutcome};
+use mor::model::config::{ModelConfig, TrainConfig};
+use mor::mor::policy::{self, MorThresholdPolicy, PolicyRef};
+use mor::mor::recipes::{ApplyCtx, Recipe, RecipeKind, SubTensorMode};
+use mor::quant::partition::Partition;
+use mor::runtime::Runtime;
+use mor::scaling::ScalingAlgo;
+use mor::tensor::Tensor;
+use mor::util::par::Parallelism;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mor_poleq_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A short host training run under an explicit policy (None = inherit
+/// the runtime/process default) at an explicit thread count.
+fn run_with(tag: &str, spec: Option<&str>, par: Parallelism) -> TrainOutcome {
+    let policy: Option<PolicyRef> = spec.map(|s| {
+        policy::parse_policy(Some(s)).expect("valid spec").expect("non-empty spec")
+    });
+    let rt = Runtime::host(ModelConfig::TINY);
+    let out_dir = tmpdir(tag);
+    let trainer = Trainer::new(&rt, TrainConfig::config1(2));
+    let mut opts = TrainerOptions::new("train_mor_subtensor_three_way", 2, out_dir.clone());
+    opts.val_every = 1;
+    opts.quiet = true;
+    opts.parallelism = Some(par);
+    opts.policy = policy;
+    let outcome = trainer.run(&opts).unwrap();
+    std::fs::remove_dir_all(out_dir).ok();
+    outcome
+}
+
+fn assert_outcomes_bitwise_eq(a: &TrainOutcome, b: &TrainOutcome, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(ra.step, rb.step, "{what}");
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{what}: train loss at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.val_loss.to_bits(),
+            rb.val_loss.to_bits(),
+            "{what}: val loss at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.bf16_fallback_rate.to_bits(),
+            rb.bf16_fallback_rate.to_bits(),
+            "{what}: fallback at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.mean_relerr.to_bits(),
+            rb.mean_relerr.to_bits(),
+            "{what}: relerr at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.param_norm.to_bits(),
+            rb.param_norm.to_bits(),
+            "{what}: param norm at step {}",
+            ra.step
+        );
+    }
+}
+
+/// The refactor's central claim: routing every decision through the
+/// `DecisionPolicy` trait with the default `MorThresholdPolicy` is a
+/// pure refactor — the no-policy path and the explicit-threshold path
+/// produce bit-identical trajectories at any thread count.
+#[test]
+fn default_equals_explicit_threshold_bitwise_at_any_thread_count() {
+    for (label, par) in [
+        ("serial", Parallelism::serial()),
+        ("pooled2", Parallelism::pooled(2, 1)),
+        ("pooled13", Parallelism::pooled(13, 1)),
+    ] {
+        let implicit = run_with(&format!("def_{label}"), None, par.clone());
+        let explicit = run_with(&format!("thr_{label}"), Some("threshold"), par);
+        assert_outcomes_bitwise_eq(&implicit, &explicit, label);
+    }
+}
+
+/// The rival policies inherit the engine's parallel ≡ serial contract:
+/// nothing in `MetricDrivenPolicy`/`StaticAssignmentPolicy` depends on
+/// scheduling order.
+#[test]
+fn rival_policies_parallel_equals_serial_bitwise() {
+    for spec in ["metric=0.03", "static=e4m3,e4m3,e5m2"] {
+        let tag = spec.split(['=', ',']).next().unwrap();
+        let serial = run_with(&format!("{tag}_s"), Some(spec), Parallelism::serial());
+        let pooled =
+            run_with(&format!("{tag}_p"), Some(spec), Parallelism::pooled(13, 1));
+        assert_outcomes_bitwise_eq(&serial, &pooled, spec);
+    }
+}
+
+/// A wide-dynamic-range tensor (seven decades of magnitude inside
+/// every 128-block): forces non-trivial decisions out of every policy.
+fn wild_tensor() -> Tensor {
+    let base = Tensor::normal(&[128, 128], 3.0, 11);
+    let data: Vec<f32> =
+        base.data().iter().enumerate().map(|(i, v)| v * 10f32.powi((i % 7) as i32 - 3)).collect();
+    Tensor::from_vec(&[128, 128], data)
+}
+
+/// The rival policies genuinely decide differently from threshold —
+/// otherwise the comparison harness compares nothing. On the wild
+/// tensor: the E4M3 candidate's relerr blows past both the run
+/// threshold and the metric budget (sub-amax decades flush to zero),
+/// so tensor-level threshold falls back while static never does, and
+/// on the three-way recipe threshold's M2 range check admits E5M2
+/// while the absolute metric budget rejects it.
+#[test]
+fn policies_make_distinct_decisions() {
+    let par = Parallelism::serial();
+    let x = wild_tensor();
+    let pol = |s: &str| policy::parse_policy(Some(s)).unwrap().unwrap();
+    let apply = |kind: RecipeKind, p: &PolicyRef| {
+        let recipe = Recipe { kind, partition: Partition::BLOCK128, scaling: ScalingAlgo::Gam };
+        recipe.apply_ctx(&x, &ApplyCtx::new(&par, p.as_ref()))
+    };
+
+    let tl = RecipeKind::TensorLevel { threshold: 0.045 };
+    let thr_tl = apply(tl, &pol("threshold"));
+    let sta_tl = apply(tl, &pol("static=e4m3,e4m3,e5m2"));
+    assert!(thr_tl.full_fallback(), "threshold should reject E4M3 on the wild tensor");
+    assert_eq!(sta_tl.bf16_fraction, 0.0, "static e4m3 never falls back");
+
+    let s3 = RecipeKind::SubTensor { mode: SubTensorMode::ThreeWay };
+    let thr_s3 = apply(s3, &pol("threshold"));
+    let met_s3 = apply(s3, &pol("metric=0.03"));
+    assert_ne!(
+        thr_s3.bf16_fraction.to_bits(),
+        met_s3.bf16_fraction.to_bits(),
+        "metric budget and threshold M1/M2 should disagree on the wild tensor"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Golden decision fractions
+// ---------------------------------------------------------------------------
+
+/// See `trainer_smoke.rs`: the strict golden pin is scoped to the CI
+/// platform; elsewhere the run-twice determinism check still applies.
+const GOLDEN_PINNED_PLATFORM: bool = cfg!(all(target_os = "linux", target_arch = "x86_64"));
+
+/// One line per (policy, recipe):
+/// `policy,recipe,bf16_fraction_bits,e4m3_relerr_bits` (f64 bit
+/// patterns in hex) for the fixed wide-dynamic-range tensor.
+fn decision_fraction_lines() -> Vec<String> {
+    let par = Parallelism::serial();
+    let x = wild_tensor();
+
+    let mut lines = Vec::new();
+    for spec in ["threshold", "metric=0.03", "static=e4m3,e4m3,e5m2"] {
+        let pol = policy::parse_policy(Some(spec)).unwrap().unwrap();
+        let ctx = ApplyCtx::new(&par, pol.as_ref());
+        for (rname, kind) in [
+            ("tensor_level", RecipeKind::TensorLevel { threshold: 0.045 }),
+            ("subtensor2", RecipeKind::SubTensor { mode: SubTensorMode::TwoWay }),
+            ("subtensor3", RecipeKind::SubTensor { mode: SubTensorMode::ThreeWay }),
+        ] {
+            let recipe =
+                Recipe { kind, partition: Partition::BLOCK128, scaling: ScalingAlgo::Gam };
+            let o = recipe.apply_ctx(&x, &ctx);
+            lines.push(format!(
+                "{spec},{rname},{:016x},{:016x}",
+                o.bf16_fraction.to_bits(),
+                o.e4m3_relerr.to_bits()
+            ));
+        }
+    }
+    lines
+}
+
+/// Decision-fraction golden: per-policy fallback fractions on a fixed
+/// tensor are pinned, so a change to any policy's decision logic (or
+/// to the shared plan walk) cannot land silently. Bootstrap mirrors
+/// `golden_trajectory_reproduced_exactly`.
+#[test]
+fn golden_decision_fractions_reproduced_exactly() {
+    let lines = decision_fraction_lines();
+    assert_eq!(lines.len(), 9, "3 policies x 3 recipes");
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/policy_decision_fractions.csv");
+    if !GOLDEN_PINNED_PLATFORM {
+        let again = decision_fraction_lines();
+        assert_eq!(lines, again, "decision fractions not deterministic across runs");
+        eprintln!("golden pin skipped (not the pinned linux/x86_64 platform)");
+        return;
+    }
+    match std::fs::read_to_string(&path) {
+        Ok(text) => {
+            let want: Vec<&str> =
+                text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()).collect();
+            assert_eq!(want.len(), lines.len(), "golden {} row count", path.display());
+            for (got, want) in lines.iter().zip(want.iter()) {
+                assert_eq!(
+                    got, want,
+                    "decision fractions diverged from {} \
+                     (policy logic changed — if intentional, delete the golden and re-run)",
+                    path.display()
+                );
+            }
+        }
+        Err(_) => {
+            let again = decision_fraction_lines();
+            assert_eq!(lines, again, "decision fractions not deterministic across runs");
+            let mut text = String::from(
+                "# policy,recipe,bf16_fraction_bits,e4m3_relerr_bits (f64 hex)\n\
+                 # Fixed 128x128 wide-dynamic-range tensor, BLOCK128/Gam, serial.\n\
+                 # Pinned platform: linux/x86_64; other platforms run the\n\
+                 # determinism check only.\n\
+                 # Bootstrapped by golden_decision_fractions_reproduced_exactly — commit this file.\n",
+            );
+            for l in &lines {
+                text.push_str(l);
+                text.push('\n');
+            }
+            match std::fs::write(&path, text) {
+                Ok(()) => eprintln!("bootstrapped decision-fraction golden at {}", path.display()),
+                Err(e) => eprintln!("could not write decision-fraction golden: {e}"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spec parsing stays strict
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parse_policy_accepts_the_documented_grammar() {
+    assert!(policy::parse_policy(None).unwrap().is_none());
+    for (spec, describe) in [
+        ("threshold", "threshold"),
+        ("metric", "metric=0.03"),
+        ("metric=0.03", "metric=0.03"),
+        (" metric = 0.03 ", "metric=0.03"),
+        ("static=e4m3,e4m3,e5m2", "static=e4m3,e4m3,e5m2"),
+    ] {
+        let p = policy::parse_policy(Some(spec)).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+        assert_eq!(p.expect("some policy").describe(), describe, "{spec:?}");
+    }
+    // Pins are stable identities: same spec → same pin, different
+    // configuration → different pin.
+    let pin = |s: &str| policy::parse_policy(Some(s)).unwrap().unwrap().pin();
+    assert_eq!(pin("threshold"), MorThresholdPolicy.pin());
+    assert_eq!(pin("metric=0.03"), pin("metric=0.03"));
+    assert_ne!(pin("metric=0.03"), pin("metric=0.05"));
+    assert_ne!(pin("static=e4m3,e4m3,e5m2"), pin("static=e4m3,e4m3,e4m3"));
+}
+
+#[test]
+fn parse_policy_rejects_malformed_specs_loudly() {
+    for bad in [
+        "",
+        "  ",
+        "nope",
+        "threshold=0.5",
+        "metric=",
+        "metric=-1",
+        "metric=nan",
+        "metric=0",
+        "static=e4m3",
+        "static=e4m3,e4m3",
+        "static=e4m3,e4m3,int8",
+        "static=e4m3,e4m3,e5m2,bf16",
+    ] {
+        let r = policy::parse_policy(Some(bad));
+        assert!(r.is_err(), "spec {bad:?} should be rejected, got {r:?}");
+    }
+}
+
+/// The `MOR_POLICY` knob is registered (satellite of the same PR that
+/// introduced the policies): the README table generator includes it.
+#[test]
+fn mor_policy_knob_is_registered() {
+    let table = mor::util::env::knobs_markdown();
+    assert!(table.contains("MOR_POLICY"), "knob table missing MOR_POLICY:\n{table}");
+    assert!(table.contains("--policy SPEC"), "knob table missing the CLI twin:\n{table}");
+}
