@@ -78,25 +78,26 @@ pub mod section {
     pub const SUITE: &str = "eval/suite";
     pub const META: &str = "meta";
     pub const TELEMETRY: &str = "telemetry/counters";
+    pub const GUARD: &str = "guard/state";
 }
 
 // ---------------------------------------------------------------------------
 // Little-endian writer/reader primitives
 // ---------------------------------------------------------------------------
 
-fn put_u8(out: &mut Vec<u8>, v: u8) {
+pub(crate) fn put_u8(out: &mut Vec<u8>, v: u8) {
     out.push(v);
 }
 
-fn put_u32(out: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f32(out: &mut Vec<u8>, v: f32) {
+pub(crate) fn put_f32(out: &mut Vec<u8>, v: f32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -104,7 +105,7 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_str(out: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
     assert!(s.len() <= MAX_NAME_LEN, "name {s:?} exceeds MAX_NAME_LEN");
     put_u32(out, s.len() as u32);
     out.extend_from_slice(s.as_bytes());
@@ -123,21 +124,21 @@ fn put_f32s(out: &mut Vec<u8>, data: &[f32]) {
 /// `take` verifies the requested length against the remaining bytes, so
 /// no length field can trigger an allocation larger than the file
 /// itself.
-struct Rd<'a> {
+pub(crate) struct Rd<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Rd<'a> {
-    fn new(buf: &'a [u8]) -> Rd<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Rd<'a> {
         Rd { buf, pos: 0 }
     }
 
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
-    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
         if n > self.remaining() {
             bail!("checkpoint truncated: {what} needs {n} bytes, {} left", self.remaining());
         }
@@ -146,21 +147,21 @@ impl<'a> Rd<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self, what: &str) -> Result<u8> {
+    pub(crate) fn u8(&mut self, what: &str) -> Result<u8> {
         Ok(self.take(1, what)?[0])
     }
 
-    fn u32(&mut self, what: &str) -> Result<u32> {
+    pub(crate) fn u32(&mut self, what: &str) -> Result<u32> {
         let b = self.take(4, what)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn u64(&mut self, what: &str) -> Result<u64> {
+    pub(crate) fn u64(&mut self, what: &str) -> Result<u64> {
         let b = self.take(8, what)?;
         Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
-    fn f32(&mut self, what: &str) -> Result<f32> {
+    pub(crate) fn f32(&mut self, what: &str) -> Result<f32> {
         let b = self.take(4, what)?;
         Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
@@ -170,7 +171,7 @@ impl<'a> Rd<'a> {
         Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
-    fn str(&mut self, what: &str) -> Result<String> {
+    pub(crate) fn str(&mut self, what: &str) -> Result<String> {
         let n = self.u32(what)? as usize;
         if n > MAX_NAME_LEN {
             bail!("checkpoint corrupt: {what} length {n} exceeds cap {MAX_NAME_LEN}");
@@ -188,12 +189,39 @@ impl<'a> Rd<'a> {
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
     }
 
-    fn expect_done(&self, what: &str) -> Result<()> {
+    pub(crate) fn expect_done(&self, what: &str) -> Result<()> {
         if self.remaining() != 0 {
             bail!("checkpoint corrupt: {} trailing bytes after {what}", self.remaining());
         }
         Ok(())
     }
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 integrity trailer
+// ---------------------------------------------------------------------------
+
+/// Trailer magic appended after the section list by [`Checkpoint::
+/// to_bytes_v2_crc`]. Files without it (every MORCKPT2 written before
+/// the trailer existed) still load; files with trailing bytes that are
+/// *not* a trailer are rejected as corrupt, as before.
+const TRAILER_MAGIC: &[u8; 8] = b"MORCRC32";
+const TRAILER_V1: u8 = 1;
+
+/// CRC-32/ISO-HDLC (the zlib/PNG crc32): reflected, polynomial
+/// 0xEDB88320, init and xor-out 0xFFFFFFFF. Bitwise implementation —
+/// checkpoint writes are dominated by tensor serialization, not the
+/// checksum.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
 }
 
 // ---------------------------------------------------------------------------
@@ -296,10 +324,13 @@ impl Checkpoint {
         self.sections.iter().find(|(n, _)| n == name).map(|(_, p)| p.as_slice())
     }
 
-    /// Serialize in the `MORCKPT2` layout (`params` section first, then
-    /// the extra sections in order).
-    pub fn to_bytes_v2(&self) -> Vec<u8> {
+    /// The `MORCKPT2` image plus the per-section payload CRCs, in
+    /// on-disk section order (`params` first). Shared by the plain and
+    /// trailer-carrying serializers so both produce the identical
+    /// section image.
+    fn v2_image(&self) -> (Vec<u8>, Vec<u32>) {
         let mut out = Vec::new();
+        let mut crcs = Vec::with_capacity(1 + self.sections.len());
         out.extend_from_slice(MAGIC_V2);
         put_u64(&mut out, self.step);
         put_u32(&mut out, 1 + self.sections.len() as u32);
@@ -308,11 +339,40 @@ impl Checkpoint {
         put_str(&mut out, section::PARAMS);
         put_u64(&mut out, params.len() as u64);
         out.extend_from_slice(&params);
+        crcs.push(crc32(&params));
         for (name, payload) in &self.sections {
             put_str(&mut out, name);
             put_u64(&mut out, payload.len() as u64);
             out.extend_from_slice(payload);
+            crcs.push(crc32(payload));
         }
+        (out, crcs)
+    }
+
+    /// Serialize in the `MORCKPT2` layout (`params` section first, then
+    /// the extra sections in order), without the integrity trailer —
+    /// byte-identical to every pre-trailer writer, which keeps the
+    /// committed golden fixture pinned.
+    pub fn to_bytes_v2(&self) -> Vec<u8> {
+        self.v2_image().0
+    }
+
+    /// Serialize with the CRC-32 integrity trailer appended:
+    /// `"MORCRC32" | u8 version | u32 n | n × u32 payload CRC |
+    /// u32 prefix CRC` (the last one covers every byte before it —
+    /// container header and trailer head included — so header
+    /// corruption is caught too). This is what [`Checkpoint::save`]
+    /// writes; trailer-less v2 files still load.
+    pub fn to_bytes_v2_crc(&self) -> Vec<u8> {
+        let (mut out, crcs) = self.v2_image();
+        out.extend_from_slice(TRAILER_MAGIC);
+        put_u8(&mut out, TRAILER_V1);
+        put_u32(&mut out, crcs.len() as u32);
+        for c in &crcs {
+            put_u32(&mut out, *c);
+        }
+        let prefix = crc32(&out);
+        put_u32(&mut out, prefix);
         out
     }
 
@@ -348,6 +408,10 @@ impl Checkpoint {
         let mut tensors = Vec::new();
         let mut seen_params = false;
         let mut sections = Vec::new();
+        // Per-payload CRCs in on-disk order, checked against the
+        // trailer (when one is present) after the section list.
+        let mut crcs = Vec::with_capacity(nsections);
+        let mut names = Vec::with_capacity(nsections);
         for i in 0..nsections {
             let name = rd.str(&format!("section {i} name"))?;
             let len = rd.u64(&format!("section {name} length"))?;
@@ -361,6 +425,8 @@ impl Checkpoint {
             {
                 bail!("checkpoint corrupt: duplicate section {name:?}");
             }
+            crcs.push(crc32(payload));
+            names.push(name.clone());
             if name == section::PARAMS {
                 let mut prd = Rd::new(payload);
                 tensors = read_tensors(&mut prd)?;
@@ -370,16 +436,84 @@ impl Checkpoint {
                 sections.push((name, payload.to_vec()));
             }
         }
-        rd.expect_done("section list")?;
+        if rd.remaining() > 0 {
+            // Anything after the section list must be a valid CRC
+            // trailer; arbitrary trailing bytes stay a corrupt file.
+            let trailer_start = rd.pos;
+            let magic = rd.take(8, "CRC trailer magic")?;
+            if magic != TRAILER_MAGIC {
+                bail!(
+                    "checkpoint corrupt: {} trailing bytes after section list \
+                     are not a CRC trailer",
+                    buf.len() - trailer_start
+                );
+            }
+            let version = rd.u8("CRC trailer version")?;
+            if version != TRAILER_V1 {
+                bail!("checkpoint corrupt: unknown CRC trailer version {version}");
+            }
+            let n = rd.u32("CRC trailer entry count")? as usize;
+            if n != crcs.len() {
+                bail!(
+                    "checkpoint corrupt: CRC trailer lists {n} sections, file has {}",
+                    crcs.len()
+                );
+            }
+            for (i, want) in crcs.iter().enumerate() {
+                let got = rd.u32(&format!("section {} CRC", names[i]))?;
+                if got != *want {
+                    bail!(
+                        "checkpoint corrupt: section {:?} CRC mismatch \
+                         (stored {got:#010x}, computed {want:#010x})",
+                        names[i]
+                    );
+                }
+            }
+            let prefix_end = rd.pos;
+            let stored_prefix = rd.u32("prefix CRC")?;
+            let computed_prefix = crc32(&buf[..prefix_end]);
+            if stored_prefix != computed_prefix {
+                bail!(
+                    "checkpoint corrupt: prefix CRC mismatch \
+                     (stored {stored_prefix:#010x}, computed {computed_prefix:#010x})"
+                );
+            }
+            rd.expect_done("CRC trailer")?;
+        }
         if !seen_params {
             bail!("checkpoint corrupt: no params section");
         }
         Ok(Checkpoint { step, tensors, sections })
     }
 
-    /// Save in the current (`MORCKPT2`) format.
+    /// Save in the current (`MORCKPT2`) format, with the CRC trailer.
     pub fn save(&self, path: &Path) -> Result<()> {
-        write_file(path, &self.to_bytes_v2())
+        write_file(path, &self.to_bytes_v2_crc())
+    }
+
+    /// [`Checkpoint::save`] with an optional fault-injection plan: when
+    /// the plan schedules a torn save for this 1-based save index, the
+    /// first half of the image is written DIRECTLY to the final path —
+    /// deliberately skipping the temp+rename+fsync discipline — to
+    /// model a crash mid-write. `--auto-resume` must skip the result.
+    pub fn save_with_faults(
+        &self,
+        path: &Path,
+        faults: Option<&crate::faults::FaultPlan>,
+        save_index: u64,
+    ) -> Result<()> {
+        if let Some(fp) = faults {
+            if fp.torn_save_due(save_index) {
+                let bytes = self.to_bytes_v2_crc();
+                if let Some(parent) = path.parent() {
+                    std::fs::create_dir_all(parent)?;
+                }
+                std::fs::write(path, &bytes[..bytes.len() / 2])
+                    .with_context(|| format!("torn-writing checkpoint {}", path.display()))?;
+                return Ok(());
+            }
+        }
+        self.save(path)
     }
 
     /// Save in the legacy (`MORCKPT1`) format.
@@ -400,21 +534,94 @@ impl Checkpoint {
     }
 }
 
-/// Atomic write: a crash mid-save (the exact scenario resume exists
-/// for) must never leave a truncated file at the checkpoint path, so
-/// the bytes land in a same-directory temp file first and are renamed
-/// into place only once fully written.
+/// Atomic, durable write: a crash mid-save (the exact scenario resume
+/// exists for) must never leave a truncated file at the checkpoint
+/// path, so the bytes land in a same-directory temp file first —
+/// fsynced before the rename, with the parent directory fsynced after,
+/// so neither the content nor the directory entry can be lost to a
+/// power cut after `save` returns. The temp file is removed on every
+/// error path; stale temps from killed processes are reaped by
+/// [`sweep_stale_tmp`].
 fn write_file(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
     let mut tmp = path.as_os_str().to_os_string();
     tmp.push(&format!(".tmp.{}", std::process::id()));
     let tmp = std::path::PathBuf::from(tmp);
-    std::fs::write(&tmp, bytes)
-        .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
-    std::fs::rename(&tmp, path)
-        .with_context(|| format!("publishing checkpoint {}", path.display()))
+    let write_synced = || -> std::io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()
+    };
+    if let Err(e) = write_synced() {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e).with_context(|| format!("writing checkpoint {}", tmp.display()));
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e).with_context(|| format!("publishing checkpoint {}", path.display()));
+    }
+    // Durability of the rename itself: fsync the parent directory.
+    // Best-effort — not every filesystem lets you open a directory for
+    // sync (the rename already happened, so this can only strengthen).
+    #[cfg(unix)]
+    {
+        let parent = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        if let Ok(dir) = std::fs::File::open(parent) {
+            dir.sync_all().ok();
+        }
+    }
+    Ok(())
+}
+
+/// Remove stale `*.ckpt.tmp.*` files left behind by processes killed
+/// mid-save. Returns how many were removed. Called when opening a
+/// checkpoint directory for auto-resume; ignores unreadable dirs.
+pub fn sweep_stale_tmp(dir: &Path) -> usize {
+    let mut removed = 0;
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return 0,
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.contains(".ckpt.tmp.") && std::fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
+/// Scan a run directory for the checkpoint ring of one artifact:
+/// every `{artifact}.step{N}.ckpt` file, returned as (step, path)
+/// sorted newest-first. Purely name-based — corrupt/torn files are
+/// still listed; the auto-resume walk decides loadability.
+pub fn scan_ring(dir: &Path, artifact: &str) -> Vec<(u64, std::path::PathBuf)> {
+    let mut ring = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return ring,
+    };
+    let prefix = format!("{artifact}.step");
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(rest) = name.strip_prefix(&prefix) {
+            if let Some(num) = rest.strip_suffix(".ckpt") {
+                if let Ok(step) = num.parse::<u64>() {
+                    ring.push((step, entry.path()));
+                }
+            }
+        }
+    }
+    ring.sort_by(|a, b| b.0.cmp(&a.0));
+    ring
 }
 
 // ---------------------------------------------------------------------------
@@ -783,6 +990,11 @@ pub struct TrainCheckpoint {
     pub suite_history: Vec<(u64, EvalScores)>,
     /// Extensible named telemetry counters.
     pub counters: Vec<(String, u64)>,
+    /// Opaque numeric-guard state (`guard/state` section), present only
+    /// when a run trains with `--guard` — see `coordinator::guard`.
+    /// Carried opaquely so old readers skip it, per the section
+    /// contract.
+    pub guard_state: Option<Vec<u8>>,
 }
 
 impl TrainCheckpoint {
@@ -841,6 +1053,10 @@ impl TrainCheckpoint {
         let mut buf = Vec::new();
         put_counters(&mut buf, &self.counters);
         ck.push_section(section::TELEMETRY, buf);
+
+        if let Some(gs) = &self.guard_state {
+            ck.push_section(section::GUARD, gs.clone());
+        }
         ck
     }
 
@@ -916,6 +1132,9 @@ impl TrainCheckpoint {
         let counters = read_counters(&mut rd)?;
         rd.expect_done("telemetry section")?;
 
+        // Optional: only guarded runs write it.
+        let guard_state = ck.section(section::GUARD).map(|p| p.to_vec());
+
         Ok(TrainCheckpoint {
             step: ck.step,
             artifact,
@@ -930,11 +1149,23 @@ impl TrainCheckpoint {
             metrics,
             suite_history,
             counters,
+            guard_state,
         })
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
         self.to_container().save(path)
+    }
+
+    /// [`TrainCheckpoint::save`] under an optional fault plan (torn
+    /// saves); `save_index` is the run's 1-based checkpoint count.
+    pub fn save_with_faults(
+        &self,
+        path: &Path,
+        faults: Option<&crate::faults::FaultPlan>,
+        save_index: u64,
+    ) -> Result<()> {
+        self.to_container().save_with_faults(path, faults, save_index)
     }
 
     pub fn load(path: &Path) -> Result<TrainCheckpoint> {
@@ -1062,6 +1293,7 @@ mod tests {
                 EvalScores { per_task: vec![("copy", 1.5, 40.0), ("cycle", 0.5, 80.0)] },
             )],
             counters: vec![("ckpts_written".into(), 1)],
+            guard_state: None,
         };
         let back = TrainCheckpoint::from_container(&tc.to_container()).unwrap();
         assert_eq!(back.step, 5);
@@ -1101,6 +1333,95 @@ mod tests {
         }
         assert_eq!(back2.metrics.rows(), 123_456);
         assert!(back2.metrics.embedded().is_none());
+
+        // Guard state rides an optional section and round-trips.
+        let mut tc3 = tc.clone();
+        tc3.guard_state = Some(vec![1, 2, 3, 4]);
+        let back3 = TrainCheckpoint::from_container(&tc3.to_container()).unwrap();
+        assert_eq!(back3.guard_state, Some(vec![1, 2, 3, 4]));
+        assert_eq!(back.guard_state, None, "unguarded runs carry no guard section");
+    }
+
+    #[test]
+    fn crc32_known_answer() {
+        // CRC-32/ISO-HDLC check value from the catalogue.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc_trailer_roundtrip_and_detection() {
+        let mut ck = Checkpoint::new(4, vec![("p".into(), Tensor::normal(&[3, 3], 1.0, 5))]);
+        ck.push_section("alpha", vec![1, 2, 3]);
+        let bytes = ck.to_bytes_v2_crc();
+        // The trailer-carrying image loads back identically.
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back, ck);
+        // The plain image is a strict prefix (trailer is append-only).
+        let plain = ck.to_bytes_v2();
+        assert_eq!(&bytes[..plain.len()], &plain[..]);
+        // A flipped payload byte is caught by the per-section CRC.
+        let mut bad = bytes.clone();
+        let idx = plain.len() - 2; // inside the last section payload
+        bad[idx] ^= 0x01;
+        let err = Checkpoint::from_bytes(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC"), "{err:#}");
+        // A flipped trailer byte is caught by the prefix CRC.
+        let mut bad = bytes.clone();
+        let last = bad.len() - 5; // inside the per-section CRC list
+        bad[last] ^= 0x01;
+        assert!(Checkpoint::from_bytes(&bad).is_err());
+        // Truncation anywhere inside the trailer is caught.
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn trailerless_v2_still_loads_and_garbage_tail_is_rejected() {
+        let ck = Checkpoint::new(2, vec![("p".into(), Tensor::zeros(&[2]))]);
+        let plain = ck.to_bytes_v2();
+        assert_eq!(Checkpoint::from_bytes(&plain).unwrap(), ck);
+        // Arbitrary trailing bytes are still corrupt, not a trailer.
+        let mut tail = plain.clone();
+        tail.extend_from_slice(&[0xAA; 12]);
+        let err = Checkpoint::from_bytes(&tail).unwrap_err();
+        assert!(format!("{err:#}").contains("not a CRC trailer"), "{err:#}");
+    }
+
+    #[test]
+    fn torn_save_truncates_in_place() {
+        let dir = tmp("torn");
+        let path = dir.join("t.step2.ckpt");
+        let ck = Checkpoint::new(2, vec![("p".into(), Tensor::normal(&[4, 4], 1.0, 3))]);
+        let spec = crate::faults::parse_faults(Some("torn-save@ckpt=1")).unwrap().unwrap();
+        let plan = crate::faults::FaultPlan::new(spec, 1);
+        ck.save_with_faults(&path, Some(&plan), 1).unwrap();
+        let len = std::fs::metadata(&path).unwrap().len() as usize;
+        assert_eq!(len, ck.to_bytes_v2_crc().len() / 2, "half the image");
+        assert!(Checkpoint::load(&path).is_err(), "torn file must not parse");
+        // The one-shot fired; the next save index writes normally.
+        ck.save_with_faults(&path, Some(&plan), 2).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn ring_scan_and_tmp_sweep() {
+        let dir = tmp("ring");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = Checkpoint::new(0, vec![("p".into(), Tensor::zeros(&[2]))]);
+        for step in [2u64, 6, 4] {
+            ck.save(&dir.join(format!("run.step{step}.ckpt"))).unwrap();
+        }
+        std::fs::write(dir.join("other.step9.ckpt"), b"x").unwrap();
+        std::fs::write(dir.join("run.step9.ckpt.tmp.123"), b"x").unwrap();
+        std::fs::write(dir.join("run.stepXX.ckpt"), b"x").unwrap();
+        let ring = scan_ring(&dir, "run");
+        let steps: Vec<u64> = ring.iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps, vec![6, 4, 2], "newest first, other artifacts excluded");
+        assert_eq!(sweep_stale_tmp(&dir), 1);
+        assert!(!dir.join("run.step9.ckpt.tmp.123").exists());
+        assert_eq!(sweep_stale_tmp(&dir), 0);
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

@@ -1,0 +1,601 @@
+//! The numeric guard: per-step failure detection plus a bounded
+//! recovery ladder for low-precision training.
+//!
+//! FP8 training lives near the overflow cliff; this module is the
+//! subsystem that notices a run going numerically bad and recovers it
+//! instead of letting NaNs silently corrupt every later step. Detection
+//! inputs, all computed by the existing step path: the per-slot amax
+//! values of [`StepOutputs`], the non-finite gradient count, the step
+//! loss and the post-update parameter norm. The response ladder, in
+//! escalation order:
+//!
+//! 1. **Skip-step** — the host trainer zeroes the update (Adam state
+//!    untouched) whenever a gradient scan finds non-finite values.
+//! 2. **BF16 quarantine** — every quantized `(class, layer)` pair is
+//!    demoted to the BF16 fallback for `quarantine_steps` steps via
+//!    [`QuarantinePolicy`], composing with the PR 7 policy layer. The
+//!    demotion is global because a non-finite produced inside one
+//!    quantized tensor propagates through the step before any per-slot
+//!    amax can attribute it.
+//! 3. **Rewind** — when strikes outlast the skip tolerance (or the
+//!    parameters themselves go non-finite, which no skip can undo), the
+//!    trainer rewinds to the newest loadable checkpoint. Retries are
+//!    capped at `max_rewinds`; backoff is an escalating skip tolerance
+//!    (`skip_limit + rewinds_so_far`) so each retry tolerates more
+//!    turbulence before rewinding again.
+//!
+//! Guard state (strikes, rewind count, loss window, active quarantine
+//! entries, the event log) is checkpointed in the `guard/state` section
+//! so resume ≡ continuous holds bitwise for guarded runs too.
+
+use crate::coordinator::checkpoint::{put_f32, put_str, put_u32, put_u64, put_u8, Rd};
+use crate::mor::policy::{PolicyRef, QuarantinePolicy};
+use crate::runtime::StepOutputs;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// The grammar every guard spec error repeats.
+pub const SPEC_GRAMMAR: &str =
+    "on, off, or comma-separated skip=N, quarantine=N, rewinds=N, spike=X";
+
+/// Guard configuration, parsed from `--guard` / `MOR_GUARD`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GuardConfig {
+    /// Consecutive skipped steps tolerated before a rewind (the base of
+    /// the escalating tolerance).
+    pub skip_limit: u64,
+    /// How many steps a quarantine demotion lasts.
+    pub quarantine_steps: u64,
+    /// Hard cap on rewind-to-checkpoint retries per run.
+    pub max_rewinds: u64,
+    /// Loss-spike monitor: a finite loss above `spike_factor ×` the
+    /// trailing-window mean counts as an anomaly.
+    pub spike_factor: f32,
+}
+
+impl Default for GuardConfig {
+    fn default() -> Self {
+        GuardConfig { skip_limit: 2, quarantine_steps: 8, max_rewinds: 3, spike_factor: 10.0 }
+    }
+}
+
+impl GuardConfig {
+    /// Canonical spelling; `parse_guard(describe())` round-trips.
+    pub fn describe(&self) -> String {
+        format!(
+            "skip={},quarantine={},rewinds={},spike={}",
+            self.skip_limit, self.quarantine_steps, self.max_rewinds, self.spike_factor
+        )
+    }
+
+    /// Configuration fingerprint for the `opt/guard` checkpoint pin
+    /// (0 is reserved for "guard off").
+    pub fn pin(&self) -> u64 {
+        1 | (self.skip_limit & 0x3F) << 4
+            | (self.quarantine_steps & 0xFFF) << 10
+            | (self.max_rewinds & 0x3F) << 22
+            | (self.spike_factor.to_bits() as u64) << 28
+    }
+}
+
+/// Strictly parse a `--guard` / `MOR_GUARD` spec: `Ok(None)` when unset
+/// or `off`, defaults for `on`, and `k=v` overrides onto the defaults
+/// otherwise. Malformed specs are loud errors (caller prefixes the
+/// flag/env name).
+pub fn parse_guard(raw: Option<&str>) -> Result<Option<GuardConfig>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    let trimmed = raw.trim();
+    if trimmed.is_empty() {
+        return Err(format!("is set but empty; use {SPEC_GRAMMAR}, or unset it"));
+    }
+    if trimmed == "off" {
+        return Ok(None);
+    }
+    let mut cfg = GuardConfig::default();
+    for part in trimmed.split(',') {
+        let part = part.trim();
+        if part == "on" {
+            continue;
+        }
+        if part == "off" {
+            return Err(format!("off cannot be combined with other settings, got {trimmed:?}"));
+        }
+        let Some((key, val)) = part.split_once('=') else {
+            return Err(format!("setting {part:?} is not key=value; use {SPEC_GRAMMAR}"));
+        };
+        let (key, val) = (key.trim(), val.trim());
+        let parse_u64 = |what: &str| -> Result<u64, String> {
+            val.parse::<u64>()
+                .map_err(|_| format!("{what} must be a non-negative integer, got {val:?}"))
+        };
+        match key {
+            "skip" => cfg.skip_limit = parse_u64("skip")?,
+            "quarantine" => {
+                let n = parse_u64("quarantine")?;
+                if n == 0 {
+                    return Err("quarantine=0 would demote for zero steps".into());
+                }
+                cfg.quarantine_steps = n;
+            }
+            "rewinds" => cfg.max_rewinds = parse_u64("rewinds")?,
+            "spike" => {
+                let x: f32 = val
+                    .parse()
+                    .map_err(|_| format!("spike must be a number, got {val:?}"))?;
+                if !x.is_finite() || x <= 1.0 {
+                    return Err(format!("spike factor must be finite and > 1, got {val:?}"));
+                }
+                cfg.spike_factor = x;
+            }
+            other => return Err(format!("unknown setting {other:?}; use {SPEC_GRAMMAR}")),
+        }
+    }
+    Ok(Some(cfg))
+}
+
+/// Resolve the `MOR_GUARD` env knob; panics loudly on a malformed
+/// value, mirroring the other strict knobs.
+pub fn auto() -> Option<GuardConfig> {
+    match parse_guard(crate::util::env::var("MOR_GUARD").as_deref()) {
+        Ok(opt) => opt,
+        Err(msg) => panic!("MOR_GUARD {msg}"),
+    }
+}
+
+/// What the guard did at a step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GuardAction {
+    SkipStep,
+    Quarantine,
+    LossSpike,
+    Rewind,
+}
+
+impl GuardAction {
+    pub fn name(self) -> &'static str {
+        match self {
+            GuardAction::SkipStep => "skip_step",
+            GuardAction::Quarantine => "quarantine",
+            GuardAction::LossSpike => "loss_spike",
+            GuardAction::Rewind => "rewind",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            GuardAction::SkipStep => 0,
+            GuardAction::Quarantine => 1,
+            GuardAction::LossSpike => 2,
+            GuardAction::Rewind => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<GuardAction> {
+        Some(match c {
+            0 => GuardAction::SkipStep,
+            1 => GuardAction::Quarantine,
+            2 => GuardAction::LossSpike,
+            3 => GuardAction::Rewind,
+            _ => return None,
+        })
+    }
+}
+
+/// One guard intervention, recorded for the run's `guard.csv`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GuardEvent {
+    /// 0-based trainer step index the intervention happened at.
+    pub step: u64,
+    pub action: GuardAction,
+    pub detail: String,
+}
+
+/// The per-step verdict [`NumericGuard::assess`] returns to the
+/// trainer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GuardVerdict {
+    /// Nothing wrong; the step stands.
+    Healthy,
+    /// An anomaly was absorbed by skip/quarantine; keep training.
+    Intervened,
+    /// Recovery requires rewinding to the last good checkpoint.
+    Rewind { reason: String },
+}
+
+/// Trailing-loss window length for the spike monitor.
+const LOSS_WINDOW: usize = 8;
+/// Event-log cap inside the checkpointed guard state.
+const MAX_SAVED_EVENTS: usize = 256;
+const GUARD_STATE_V1: u8 = 1;
+
+/// The guard itself: detection state plus the shared quarantine wrapper
+/// it escalates through. Owned by `Trainer::run`; one per guarded run.
+pub struct NumericGuard {
+    cfg: GuardConfig,
+    quarantine: Arc<QuarantinePolicy>,
+    n_layers: usize,
+    /// Consecutive anomalous steps (reset by any healthy step).
+    strikes: u64,
+    /// Rewinds performed so far this run.
+    rewinds: u64,
+    loss_window: VecDeque<f32>,
+    events: Vec<GuardEvent>,
+}
+
+impl NumericGuard {
+    pub fn new(cfg: GuardConfig, quarantine: Arc<QuarantinePolicy>, n_layers: usize) -> Self {
+        NumericGuard {
+            cfg,
+            quarantine,
+            n_layers,
+            strikes: 0,
+            rewinds: 0,
+            loss_window: VecDeque::with_capacity(LOSS_WINDOW),
+            events: Vec::new(),
+        }
+    }
+
+    /// The quarantine wrapper as a [`PolicyRef`] for the session.
+    pub fn policy(&self) -> PolicyRef {
+        self.quarantine.clone()
+    }
+
+    pub fn config(&self) -> &GuardConfig {
+        &self.cfg
+    }
+
+    pub fn events(&self) -> &[GuardEvent] {
+        &self.events
+    }
+
+    pub fn rewinds(&self) -> u64 {
+        self.rewinds
+    }
+
+    /// Count of events with the given action (test/telemetry helper).
+    pub fn count(&self, action: GuardAction) -> u64 {
+        self.events.iter().filter(|e| e.action == action).count() as u64
+    }
+
+    /// Demote every quantized `(class, layer)` pair until the anomaly's
+    /// effects have flushed: attribution of an in-flight non-finite to
+    /// one tensor is impossible post-hoc, so the demotion is global.
+    fn quarantine_all(&mut self, step0: u64, why: &str) {
+        // `step0` is the 0-based trainer index; the quarantine map
+        // lives in the 1-based DecisionCtx domain where this step was
+        // step0+1, so the demotion covers (step0+2 ..= step0+1+N).
+        let until = step0 + 2 + self.cfg.quarantine_steps;
+        for class_idx in 0..3 {
+            for layer in 0..self.n_layers {
+                self.quarantine.quarantine(class_idx, layer, until);
+            }
+        }
+        self.events.push(GuardEvent {
+            step: step0,
+            action: GuardAction::Quarantine,
+            detail: format!("all tensors -> bf16 until step {until} ({why})"),
+        });
+    }
+
+    /// Judge one completed step. `step0` is the 0-based trainer index,
+    /// `out` the step outputs, `param_norm` the post-update norm.
+    pub fn assess(&mut self, step0: u64, out: &StepOutputs, param_norm: f32) -> GuardVerdict {
+        // Non-finite parameters: the update already destroyed state no
+        // skip or demotion can recover. Straight to rewind.
+        if !param_norm.is_finite() {
+            return GuardVerdict::Rewind { reason: "non-finite parameters".into() };
+        }
+        // Overflow monitor: a non-finite per-slot amax means some
+        // quantized operand overflowed mid-step even if the loss came
+        // out finite by accident.
+        let overflow = out.amax.iter().filter(|a| !a.is_finite()).count() as u64;
+        let skipped = out.skipped || out.nonfinite_grads > 0 || overflow > 0;
+        if skipped || !out.loss.is_finite() {
+            self.strikes += 1;
+            self.events.push(GuardEvent {
+                step: step0,
+                action: GuardAction::SkipStep,
+                detail: format!(
+                    "loss {} with {} non-finite gradient value(s) and {} overflowed amax \
+                     slot(s); strike {}",
+                    out.loss, out.nonfinite_grads, overflow, self.strikes
+                ),
+            });
+            self.quarantine_all(step0, "non-finite step");
+            // Escalating tolerance: each rewind already performed buys
+            // one more tolerated strike before the next one.
+            if self.strikes > self.cfg.skip_limit + self.rewinds {
+                return GuardVerdict::Rewind {
+                    reason: format!("persistent non-finite steps ({} strikes)", self.strikes),
+                };
+            }
+            return GuardVerdict::Intervened;
+        }
+        // Loss-spike monitor: only with a full window, so early noisy
+        // steps can't trip it.
+        if self.loss_window.len() == LOSS_WINDOW {
+            let mean: f32 =
+                self.loss_window.iter().sum::<f32>() / self.loss_window.len() as f32;
+            if mean > 0.0 && out.loss > self.cfg.spike_factor * mean {
+                self.events.push(GuardEvent {
+                    step: step0,
+                    action: GuardAction::LossSpike,
+                    detail: format!("loss {} vs trailing mean {mean}", out.loss),
+                });
+                self.quarantine_all(step0, "loss spike");
+                self.strikes = 0;
+                return GuardVerdict::Intervened;
+            }
+        }
+        self.strikes = 0;
+        if self.loss_window.len() == LOSS_WINDOW {
+            self.loss_window.pop_front();
+        }
+        self.loss_window.push_back(out.loss);
+        GuardVerdict::Healthy
+    }
+
+    /// Consume one unit of rewind budget; `false` means the budget is
+    /// exhausted and the run must fail. Also resets the strike counter
+    /// (the restored trajectory starts clean).
+    pub fn begin_rewind(&mut self, step0: u64, reason: &str) -> bool {
+        if self.rewinds >= self.cfg.max_rewinds {
+            return false;
+        }
+        self.rewinds += 1;
+        self.strikes = 0;
+        self.events.push(GuardEvent {
+            step: step0,
+            action: GuardAction::Rewind,
+            detail: format!("{reason}; rewind {}/{}", self.rewinds, self.cfg.max_rewinds),
+        });
+        true
+    }
+
+    /// Serialize the guard's dynamic state for the `guard/state`
+    /// checkpoint section.
+    pub fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u8(&mut out, GUARD_STATE_V1);
+        put_u64(&mut out, self.strikes);
+        put_u64(&mut out, self.rewinds);
+        put_u32(&mut out, self.loss_window.len() as u32);
+        for v in &self.loss_window {
+            put_f32(&mut out, *v);
+        }
+        let entries = self.quarantine.active_entries();
+        put_u32(&mut out, entries.len() as u32);
+        for (c, l, u) in entries {
+            put_u32(&mut out, c as u32);
+            put_u32(&mut out, l as u32);
+            put_u64(&mut out, u);
+        }
+        let skip = self.events.len().saturating_sub(MAX_SAVED_EVENTS);
+        let saved = &self.events[skip..];
+        put_u32(&mut out, saved.len() as u32);
+        for e in saved {
+            put_u64(&mut out, e.step);
+            put_u8(&mut out, e.action.code());
+            put_str(&mut out, &e.detail);
+        }
+        out
+    }
+
+    /// Restore from a `guard/state` payload. `keep_rewinds` preserves
+    /// the in-memory rewind count instead of the checkpointed one —
+    /// required on the rewind path, where restoring the (lower) saved
+    /// count would hand the guard an unbounded retry budget.
+    pub fn import_state(&mut self, bytes: &[u8], keep_rewinds: bool) -> Result<()> {
+        let mut rd = Rd::new(bytes);
+        let version = rd.u8("guard state version")?;
+        if version != GUARD_STATE_V1 {
+            bail!("checkpoint corrupt: unknown guard state version {version}");
+        }
+        let strikes = rd.u64("guard strikes")?;
+        let rewinds = rd.u64("guard rewinds")?;
+        let nw = rd.u32("guard loss window length")? as usize;
+        if nw > LOSS_WINDOW {
+            bail!("checkpoint corrupt: guard loss window {nw} exceeds cap {LOSS_WINDOW}");
+        }
+        let mut window = VecDeque::with_capacity(LOSS_WINDOW);
+        for _ in 0..nw {
+            window.push_back(rd.f32("guard loss window value")?);
+        }
+        let ne = rd.u32("guard quarantine entry count")? as usize;
+        if ne > rd.remaining() / 16 + 1 {
+            bail!("checkpoint corrupt: guard quarantine count {ne} exceeds file capacity");
+        }
+        let mut entries = Vec::with_capacity(ne);
+        for _ in 0..ne {
+            let c = rd.u32("guard quarantine class")? as usize;
+            let l = rd.u32("guard quarantine layer")? as usize;
+            let u = rd.u64("guard quarantine until")?;
+            entries.push((c, l, u));
+        }
+        let nev = rd.u32("guard event count")? as usize;
+        if nev > MAX_SAVED_EVENTS {
+            bail!("checkpoint corrupt: guard event count {nev} exceeds cap {MAX_SAVED_EVENTS}");
+        }
+        let mut events = Vec::with_capacity(nev);
+        for i in 0..nev {
+            let step = rd.u64(&format!("guard event {i} step"))?;
+            let code = rd.u8(&format!("guard event {i} action"))?;
+            let action = GuardAction::from_code(code).ok_or_else(|| {
+                anyhow::anyhow!("checkpoint corrupt: unknown guard action code {code}")
+            })?;
+            let detail = rd.str(&format!("guard event {i} detail"))?;
+            events.push(GuardEvent { step, action, detail });
+        }
+        rd.expect_done("guard state")?;
+        self.strikes = strikes;
+        if !keep_rewinds {
+            self.rewinds = rewinds;
+        }
+        self.loss_window = window;
+        self.quarantine.restore_entries(&entries);
+        self.events = events;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mor::policy::MorThresholdPolicy;
+
+    fn out(loss: f32, nonfinite: u64, skipped: bool) -> StepOutputs {
+        StepOutputs {
+            loss,
+            relerr: vec![0.01],
+            fallback: vec![0.0],
+            amax: vec![1.0],
+            nonfinite_grads: nonfinite,
+            skipped,
+        }
+    }
+
+    fn guard(cfg: GuardConfig) -> NumericGuard {
+        NumericGuard::new(cfg, QuarantinePolicy::new(Arc::new(MorThresholdPolicy)), 2)
+    }
+
+    #[test]
+    fn parse_matrix() {
+        assert_eq!(parse_guard(None).unwrap(), None);
+        assert_eq!(parse_guard(Some("off")).unwrap(), None);
+        assert_eq!(parse_guard(Some("on")).unwrap(), Some(GuardConfig::default()));
+        let custom = parse_guard(Some("skip=5,quarantine=3,rewinds=1,spike=4.5"))
+            .unwrap()
+            .unwrap();
+        assert_eq!(
+            custom,
+            GuardConfig { skip_limit: 5, quarantine_steps: 3, max_rewinds: 1, spike_factor: 4.5 }
+        );
+        assert_eq!(parse_guard(Some(&custom.describe())).unwrap(), Some(custom));
+        // Partial overrides keep the other defaults.
+        let part = parse_guard(Some("on,rewinds=9")).unwrap().unwrap();
+        assert_eq!(part.max_rewinds, 9);
+        assert_eq!(part.skip_limit, GuardConfig::default().skip_limit);
+        for bad in [
+            "", " ", "banana", "skip", "skip=", "skip=-1", "skip=x", "quarantine=0",
+            "spike=1", "spike=0.5", "spike=inf", "spike=abc", "off,skip=1", "frob=2",
+        ] {
+            assert!(parse_guard(Some(bad)).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn pin_is_configuration_sensitive_and_nonzero() {
+        let a = GuardConfig::default().pin();
+        let b = GuardConfig { skip_limit: 3, ..GuardConfig::default() }.pin();
+        let c = GuardConfig { spike_factor: 5.0, ..GuardConfig::default() }.pin();
+        assert_ne!(a, 0, "0 is reserved for guard-off");
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn ladder_skips_then_quarantines_then_rewinds() {
+        let mut g = guard(GuardConfig { skip_limit: 2, ..GuardConfig::default() });
+        // Healthy steps record nothing.
+        assert_eq!(g.assess(0, &out(2.0, 0, false), 10.0), GuardVerdict::Healthy);
+        assert!(g.events().is_empty());
+        // First two anomalies: absorbed (skip + quarantine-all).
+        assert_eq!(g.assess(1, &out(f32::NAN, 3, true), 10.0), GuardVerdict::Intervened);
+        assert_eq!(g.assess(2, &out(f32::NAN, 3, true), 10.0), GuardVerdict::Intervened);
+        assert_eq!(g.count(GuardAction::SkipStep), 2);
+        assert_eq!(g.count(GuardAction::Quarantine), 2);
+        assert!(!g.policy().accept_tensor(
+            &crate::mor::policy::DecisionCtx { step: 4, ..Default::default() },
+            crate::formats::ReprType::E4M3,
+            0.0,
+            1.0
+        ));
+        // Third consecutive strike exceeds the tolerance: rewind.
+        match g.assess(3, &out(f32::NAN, 3, true), 10.0) {
+            GuardVerdict::Rewind { reason } => assert!(reason.contains("persistent")),
+            v => panic!("expected rewind, got {v:?}"),
+        }
+        // A healthy step resets the strikes.
+        let mut g = guard(GuardConfig { skip_limit: 1, ..GuardConfig::default() });
+        assert_eq!(g.assess(0, &out(f32::INFINITY, 1, true), 10.0), GuardVerdict::Intervened);
+        assert_eq!(g.assess(1, &out(2.0, 0, false), 10.0), GuardVerdict::Healthy);
+        assert_eq!(g.assess(2, &out(f32::INFINITY, 1, true), 10.0), GuardVerdict::Intervened);
+    }
+
+    #[test]
+    fn nonfinite_params_rewind_immediately() {
+        let mut g = guard(GuardConfig::default());
+        match g.assess(5, &out(2.0, 0, false), f32::NAN) {
+            GuardVerdict::Rewind { reason } => assert!(reason.contains("parameters")),
+            v => panic!("expected rewind, got {v:?}"),
+        }
+        assert!(g.events().is_empty(), "the rewind event is recorded by begin_rewind");
+    }
+
+    #[test]
+    fn loss_spike_trips_only_with_a_full_window() {
+        let mut g = guard(GuardConfig { spike_factor: 3.0, ..GuardConfig::default() });
+        // Window not yet full: a huge loss is still "healthy".
+        assert_eq!(g.assess(0, &out(100.0, 0, false), 1.0), GuardVerdict::Healthy);
+        for s in 1..=8 {
+            assert_eq!(g.assess(s, &out(2.0, 0, false), 1.0), GuardVerdict::Healthy);
+        }
+        // Full window of ~2.0; 2.0*3 < 100 → spike.
+        assert_eq!(g.assess(9, &out(100.0, 0, false), 1.0), GuardVerdict::Intervened);
+        assert_eq!(g.count(GuardAction::LossSpike), 1);
+        // The spiking loss is not admitted into the window.
+        assert_eq!(g.assess(10, &out(2.1, 0, false), 1.0), GuardVerdict::Healthy);
+    }
+
+    #[test]
+    fn rewind_budget_is_capped_and_escalates_tolerance() {
+        let mut g = guard(GuardConfig { max_rewinds: 2, skip_limit: 0, ..GuardConfig::default() });
+        assert!(g.begin_rewind(3, "test"));
+        assert!(g.begin_rewind(4, "test"));
+        assert!(!g.begin_rewind(5, "test"), "budget of 2 exhausted");
+        assert_eq!(g.rewinds(), 2);
+        // After 2 rewinds the tolerance is skip_limit + 2: two strikes
+        // absorbed, the third rewinds.
+        assert_eq!(g.assess(6, &out(f32::NAN, 1, true), 1.0), GuardVerdict::Intervened);
+        assert_eq!(g.assess(7, &out(f32::NAN, 1, true), 1.0), GuardVerdict::Intervened);
+        assert!(matches!(
+            g.assess(8, &out(f32::NAN, 1, true), 1.0),
+            GuardVerdict::Rewind { .. }
+        ));
+    }
+
+    #[test]
+    fn state_roundtrips_and_keep_rewinds_guards_the_budget() {
+        let mut g = guard(GuardConfig::default());
+        g.assess(0, &out(2.0, 0, false), 1.0);
+        g.assess(1, &out(f32::NAN, 2, true), 1.0);
+        g.begin_rewind(1, "test");
+        let state = g.export_state();
+
+        let mut back = guard(GuardConfig::default());
+        back.import_state(&state, false).unwrap();
+        assert_eq!(back.rewinds(), 1);
+        assert_eq!(back.events(), g.events());
+        assert_eq!(back.export_state(), state, "round-trip is bytewise stable");
+        assert_eq!(
+            back.quarantine.active_entries(),
+            g.quarantine.active_entries(),
+            "quarantine entries restored"
+        );
+
+        // On the rewind path the in-memory count wins.
+        let mut live = guard(GuardConfig::default());
+        live.rewinds = 3;
+        live.import_state(&state, true).unwrap();
+        assert_eq!(live.rewinds(), 3);
+
+        // Malformed payloads are loud.
+        assert!(back.import_state(&[], false).is_err());
+        assert!(back.import_state(&[9, 0, 0], false).is_err());
+        let mut trailing = state.clone();
+        trailing.push(0);
+        assert!(back.import_state(&trailing, false).is_err());
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod checkpoint;
 pub mod eval;
+pub mod guard;
 pub mod logging;
 pub mod trainer;
 

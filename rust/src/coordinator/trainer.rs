@@ -33,20 +33,24 @@
 //!   consumes an extra validation batch) can only ever fire on the
 //!   run's true last step — a step no resumable checkpoint precedes.
 
-use super::checkpoint::{section, MetricsState, TrainCheckpoint};
+use super::checkpoint::{scan_ring, section, sweep_stale_tmp, MetricsState, TrainCheckpoint};
 use super::eval::{eval_suite, EvalScores};
+use super::guard::{GuardConfig, GuardEvent, GuardVerdict, NumericGuard};
 use super::logging::{csv_lines_digest, MetricsLogger, StepRecord};
 use crate::data::loader::BatchLoader;
 use crate::data::synthetic::CorpusProfile;
 use crate::data::tasks::EvalSuite;
+use crate::faults::{FaultPlan, FaultSpec};
 use crate::model::config::{ModelConfig, TrainConfig};
 use crate::model::naming::{param_specs, QuantTensorId};
-use crate::mor::policy::PolicyRef;
+use crate::mor::policy::{PolicyRef, QuarantinePolicy};
 use crate::mor::stats::StatsCollector;
 use crate::runtime::{Runtime, SessionCtx, TrainSession};
 use crate::util::par::Parallelism;
 use anyhow::{bail, Context, Result};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Options for one training run.
@@ -105,6 +109,23 @@ pub struct TrainerOptions {
     /// fingerprint, so resuming under a different policy errors instead
     /// of silently diverging.
     pub policy: Option<PolicyRef>,
+    /// Deterministic fault-injection schedule (`--faults` /
+    /// `MOR_FAULTS`; see [`crate::faults`]). Host backend only;
+    /// deliberately NOT pinned into checkpoints — a rewind replay or a
+    /// clean restart continues without re-firing consumed one-shot
+    /// faults, which is exactly what makes recovery testable.
+    pub faults: Option<FaultSpec>,
+    /// Numeric guard configuration (`--guard` / `MOR_GUARD`; see
+    /// [`super::guard`]). `None` trains unguarded, bit-for-bit the
+    /// historical behavior.
+    pub guard: Option<GuardConfig>,
+    /// Checkpoint-ring retention: keep the newest K checkpoints,
+    /// pruning older ones after each save (0 keeps everything).
+    pub ckpt_keep: u64,
+    /// Resume from the newest loadable checkpoint in `out_dir`,
+    /// walking the ring past corrupt/torn files; fresh start when the
+    /// ring is empty. Mutually exclusive with `resume`.
+    pub auto_resume: bool,
 }
 
 impl TrainerOptions {
@@ -124,6 +145,10 @@ impl TrainerOptions {
             embed_metrics: false,
             parallelism: None,
             policy: None,
+            faults: None,
+            guard: None,
+            ckpt_keep: 0,
+            auto_resume: false,
         }
     }
 }
@@ -139,6 +164,9 @@ pub struct TrainOutcome {
     pub suite_history: Vec<(u64, EvalScores)>,
     pub metrics_path: PathBuf,
     pub mean_step_ms: f32,
+    /// Every intervention the numeric guard performed (empty when the
+    /// guard was off); also written to `{artifact}.{config}.guard.csv`.
+    pub guard_events: Vec<GuardEvent>,
 }
 
 /// The training coordinator.
@@ -162,36 +190,72 @@ impl<'rt> Trainer<'rt> {
             .parallelism
             .clone()
             .unwrap_or_else(|| self.runtime.parallelism().clone());
-        let policy =
+        let base_policy =
             opts.policy.clone().unwrap_or_else(|| self.runtime.policy().clone());
+        // A guarded run interposes the quarantine wrapper between the
+        // session and the base policy (transparent while no tensor is
+        // quarantined, so fault-free guarded == unguarded bitwise); an
+        // unguarded run keeps the base policy untouched.
+        let (policy, mut guard) = match opts.guard {
+            Some(cfg) => {
+                let qp = QuarantinePolicy::new(base_policy.clone());
+                let g = NumericGuard::new(cfg, qp, self.model.n_layers);
+                (g.policy(), Some(g))
+            }
+            None => (base_policy, None),
+        };
         let tc = &self.train_config;
+        let faults: Option<Arc<FaultPlan>> = opts
+            .faults
+            .as_ref()
+            .map(|spec| Arc::new(FaultPlan::new(spec.clone(), tc.seed)));
         let ctx = SessionCtx { parallelism: par.clone(), policy: policy.clone() };
         let mut session = self
             .runtime
             .train_session_ctx(&opts.artifact, tc.seed, ctx)
             .with_context(|| format!("starting session for {}", opts.artifact))?;
+        session.set_faults(faults.clone())?;
+        if guard.is_some() {
+            session.set_guard_skip(true);
+        }
         let profile = CorpusProfile::from_id(tc.data_profile);
 
+        // Resolve what to resume from: an explicit checkpoint path, or
+        // (auto-resume) the newest loadable ring entry — walking past
+        // corrupt/torn files — or nothing.
+        if opts.resume.is_some() && opts.auto_resume {
+            bail!("resume and auto_resume are mutually exclusive");
+        }
+        let resume_path: Option<PathBuf> = match &opts.resume {
+            Some(p) => Some(p.clone()),
+            None if opts.auto_resume => self.find_auto_resume(opts),
+            None => None,
+        };
         // Restore the full training state when resuming: session
         // (params + moments + step + amax histories), loader cursors,
         // stats, metrics rows, suite trajectory.
-        let resumed = match &opts.resume {
+        let resumed = match &resume_path {
             Some(path) => Some(self.restore(path, &mut session, opts, &policy)?),
             None => None,
         };
+        if let (Some(g), Some(ck)) = (&mut guard, &resumed) {
+            if let Some(bytes) = &ck.guard_state {
+                g.import_state(bytes, false).context("restoring checkpointed guard state")?;
+            }
+        }
         // Resolve the resumed metrics prefix (bit-exact records + the
         // raw CSV lines to replay) BEFORE the logger is created: a
         // digest checkpoint replays from the original run's on-disk
         // metrics file, and resuming into the same out_dir would
         // otherwise read the file the logger just truncated.
         let resumed_metrics: Option<(Vec<StepRecord>, Vec<String>)> =
-            match (&resumed, &opts.resume) {
+            match (&resumed, &resume_path) {
                 (Some(ck), Some(path)) => {
                     Some(restore_metrics(ck, path, &opts.artifact, self.train_config.name)?)
                 }
                 _ => None,
             };
-        let (train_loader, val_loader) = match &resumed {
+        let (mut train_loader, mut val_loader) = match &resumed {
             Some(ck) => (
                 BatchLoader::resume(
                     profile,
@@ -266,114 +330,288 @@ impl<'rt> Trainer<'rt> {
         let mut total_ms = records.iter().map(|r| r.step_ms).sum::<f32>();
         let n_slots = QuantTensorId::count(&self.model);
 
-        for step in start_step..opts.steps {
+        let mut step = start_step;
+        while step < opts.steps {
             let lr = tc.schedule.lr_at(step);
             let batch = train_loader.next_batch();
             let t0 = Instant::now();
-            let out = session.step(&batch.tokens, lr, opts.threshold)?;
+            // The step runs under catch_unwind so an injected (or real)
+            // worker panic is recoverable: nothing has committed when a
+            // step unwinds — params, moments and the session's step
+            // counter only mutate on success — so a guarded run can
+            // rewind, and an unguarded run re-raises unchanged.
+            let stepped = catch_unwind(AssertUnwindSafe(|| {
+                session.step(&batch.tokens, lr, opts.threshold)
+            }));
             let step_ms = t0.elapsed().as_secs_f32() * 1e3;
-            total_ms += step_ms;
+            let rewind_reason: Option<String> = match stepped {
+                // No guard: an unguarded run re-raises unchanged.
+                Err(payload) => match &guard {
+                    None => resume_unwind(payload),
+                    Some(_) => {
+                        Some(format!("step panicked: {}", panic_text(payload.as_ref())))
+                    }
+                },
+                Ok(Err(e)) => return Err(e),
+                Ok(Ok(out)) => {
+                    total_ms += step_ms;
 
-            // Record per-slot decisions into the heatmap stats.
-            stats.set_step(step);
-            debug_assert_eq!(out.relerr.len(), n_slots);
-            let mut fb_sum = 0f32;
-            let mut re_sum = 0f32;
-            for (i, (re, fb)) in out.relerr.iter().zip(out.fallback.iter()).enumerate() {
-                let id = QuantTensorId::from_flat(i);
-                // Direction-1 slots only carry signal for per-channel
-                // partitions; other partitions mirror direction 0 and we
-                // skip them to avoid double counting.
-                if id.direction == 1 && !opts.per_channel {
-                    continue;
+                    // Record per-slot decisions into the heatmap stats.
+                    stats.set_step(step);
+                    debug_assert_eq!(out.relerr.len(), n_slots);
+                    let mut fb_sum = 0f32;
+                    let mut re_sum = 0f32;
+                    for (i, (re, fb)) in
+                        out.relerr.iter().zip(out.fallback.iter()).enumerate()
+                    {
+                        let id = QuantTensorId::from_flat(i);
+                        // Direction-1 slots only carry signal for
+                        // per-channel partitions; other partitions
+                        // mirror direction 0 and we skip them to avoid
+                        // double counting.
+                        if id.direction == 1 && !opts.per_channel {
+                            continue;
+                        }
+                        stats.record(
+                            id.key(opts.per_channel),
+                            *re as f64,
+                            *fb >= 0.5,
+                            *fb as f64,
+                        );
+                        fb_sum += fb;
+                        re_sum += re;
+                    }
+                    let denom =
+                        if opts.per_channel { n_slots } else { n_slots / 2 } as f32;
+
+                    // Validation loss on a held-out stream. The forced
+                    // final-step pass only fires on the run's true last
+                    // step: `steps` is pinned in every checkpoint, so
+                    // no resumable checkpoint can sit after a forced
+                    // pass — mid-run checkpoints stay exact prefixes of
+                    // the continuous run.
+                    let is_val_step = opts.val_every > 0
+                        && (step % opts.val_every == 0 || step + 1 == opts.steps);
+                    if is_val_step {
+                        if let Some(ev) = &eval {
+                            let vb = val_loader.next_batch();
+                            let mask = full_mask(session.batch, session.seq);
+                            // Tensor-native interchange: on the host
+                            // backend the eval borrows the trainer's
+                            // params directly — no Tensor→Literal→
+                            // Tensor round-trip per validation.
+                            let (vl, _) =
+                                ev.eval_params(session.params_ref(), &vb.tokens, &mask)?;
+                            last_val = vl;
+                        }
+                    }
+
+                    // Eval-task suite (the downstream-benchmark
+                    // substitute); same final-step rule as validation.
+                    if opts.suite_every > 0
+                        && (step % opts.suite_every == 0 || step + 1 == opts.steps)
+                    {
+                        if let Some(ev) = &eval {
+                            let scores = eval_suite(ev, session.params_ref(), &suite)?;
+                            suite_history.push((step, scores));
+                        }
+                    }
+
+                    let rec = StepRecord {
+                        step,
+                        lr,
+                        train_loss: out.loss,
+                        val_loss: if is_val_step { last_val } else { f32::NAN },
+                        param_norm: session.param_norm()?,
+                        bf16_fallback_rate: fb_sum / denom,
+                        mean_relerr: re_sum / denom,
+                        step_ms,
+                    };
+                    logger.log(&rec)?;
+                    if !opts.quiet && (step % 10 == 0 || step + 1 == opts.steps) {
+                        println!(
+                            "[{}] step {step:>5} loss {:.4} val {:.4} lr {:.2e} fb {:.2}% \
+                             relerr {:.3}% ({:.0} ms)",
+                            opts.artifact,
+                            rec.train_loss,
+                            rec.val_loss,
+                            rec.lr,
+                            rec.bf16_fallback_rate * 100.0,
+                            rec.mean_relerr * 100.0,
+                            step_ms
+                        );
+                    }
+                    let param_norm = rec.param_norm;
+                    records.push(rec);
+
+                    // Judge the completed step AFTER its record is
+                    // logged (a rewind truncates the anomalous suffix)
+                    // and BEFORE any checkpoint: a state the guard
+                    // condemns must never enter the ring.
+                    let verdict = match &mut guard {
+                        Some(g) => g.assess(step, &out, param_norm),
+                        None => GuardVerdict::Healthy,
+                    };
+                    match verdict {
+                        GuardVerdict::Rewind { reason } => Some(reason),
+                        GuardVerdict::Healthy | GuardVerdict::Intervened => {
+                            // Checkpoint after the record is logged:
+                            // the file captures exactly `completed`
+                            // finished steps of the continuous run.
+                            let completed = step + 1;
+                            let on_cadence = completed % opts.ckpt_every.max(1) == 0
+                                || completed == opts.steps;
+                            if opts.ckpt_every > 0 && on_cadence {
+                                ckpts += 1;
+                                self.save_checkpoint(
+                                    &session,
+                                    &train_loader,
+                                    &val_loader,
+                                    &stats,
+                                    &records,
+                                    &suite_history,
+                                    last_val,
+                                    ckpts,
+                                    opts,
+                                    &policy,
+                                    faults.as_deref(),
+                                    guard.as_ref(),
+                                )?;
+                                // Ring retention: keep the newest K
+                                // checkpoints, prune the rest.
+                                if opts.ckpt_keep > 0 {
+                                    for (_, old) in
+                                        scan_ring(&opts.out_dir, &opts.artifact)
+                                            .into_iter()
+                                            .skip(opts.ckpt_keep as usize)
+                                    {
+                                        let _ = std::fs::remove_file(old);
+                                    }
+                                }
+                            }
+                            None
+                        }
+                    }
                 }
-                stats.record(id.key(opts.per_channel), *re as f64, *fb >= 0.5, *fb as f64);
-                fb_sum += fb;
-                re_sum += re;
-            }
-            let denom = if opts.per_channel { n_slots } else { n_slots / 2 } as f32;
-
-            // Validation loss on a held-out stream. The forced
-            // final-step pass only fires on the run's true last step:
-            // `steps` is pinned in every checkpoint, so no resumable
-            // checkpoint can sit after a forced pass — mid-run
-            // checkpoints stay exact prefixes of the continuous run.
-            let is_val_step = opts.val_every > 0
-                && (step % opts.val_every == 0 || step + 1 == opts.steps);
-            if is_val_step {
-                if let Some(ev) = &eval {
-                    let vb = val_loader.next_batch();
-                    let mask = full_mask(session.batch, session.seq);
-                    // Tensor-native interchange: on the host backend the
-                    // eval borrows the trainer's params directly — no
-                    // Tensor→Literal→Tensor round-trip per validation.
-                    let (vl, _) = ev.eval_params(session.params_ref(), &vb.tokens, &mask)?;
-                    last_val = vl;
-                }
-            }
-
-            // Eval-task suite (the downstream-benchmark substitute);
-            // same final-step rule as validation.
-            if opts.suite_every > 0
-                && (step % opts.suite_every == 0 || step + 1 == opts.steps)
-            {
-                if let Some(ev) = &eval {
-                    let scores = eval_suite(ev, session.params_ref(), &suite)?;
-                    suite_history.push((step, scores));
-                }
-            }
-
-            let rec = StepRecord {
-                step,
-                lr,
-                train_loss: out.loss,
-                val_loss: if is_val_step { last_val } else { f32::NAN },
-                param_norm: session.param_norm()?,
-                bf16_fallback_rate: fb_sum / denom,
-                mean_relerr: re_sum / denom,
-                step_ms,
             };
-            logger.log(&rec)?;
-            if !opts.quiet && (step % 10 == 0 || step + 1 == opts.steps) {
-                println!(
-                    "[{}] step {step:>5} loss {:.4} val {:.4} lr {:.2e} fb {:.2}% \
-                     relerr {:.3}% ({:.0} ms)",
-                    opts.artifact,
-                    rec.train_loss,
-                    rec.val_loss,
-                    rec.lr,
-                    rec.bf16_fallback_rate * 100.0,
-                    rec.mean_relerr * 100.0,
-                    step_ms
-                );
-            }
-            records.push(rec);
 
-            // Checkpoint after the record is logged: the file captures
-            // exactly `completed` finished steps of the continuous run.
-            let completed = step + 1;
-            let on_cadence = completed % opts.ckpt_every.max(1) == 0 || completed == opts.steps;
-            if opts.ckpt_every > 0 && on_cadence {
-                ckpts += 1;
-                self.save_checkpoint(
-                    &session,
-                    &train_loader,
-                    &val_loader,
-                    &stats,
-                    &records,
-                    &suite_history,
-                    last_val,
-                    ckpts,
-                    opts,
-                    &policy,
-                )?;
+            if let Some(reason) = rewind_reason {
+                let g = guard.as_mut().expect("rewind verdicts only come from the guard");
+                if g.rewinds() >= g.config().max_rewinds {
+                    bail!(
+                        "numeric guard exhausted its rewind budget ({}) at step {step}: \
+                         {reason}",
+                        g.config().max_rewinds
+                    );
+                }
+                // Newest loadable checkpoint at or before the failed
+                // step; corrupt/torn ring entries are walked past.
+                let mut target: Option<PathBuf> = None;
+                for (ck_step, path) in scan_ring(&opts.out_dir, &opts.artifact) {
+                    if ck_step > step {
+                        continue;
+                    }
+                    match TrainCheckpoint::load(&path) {
+                        Ok(_) => {
+                            target = Some(path);
+                            break;
+                        }
+                        Err(e) => {
+                            if !opts.quiet {
+                                println!(
+                                    "[guard] skipping corrupt checkpoint {}: {e:#}",
+                                    path.display()
+                                );
+                            }
+                        }
+                    }
+                }
+                let Some(path) = target else {
+                    bail!(
+                        "numeric guard must rewind ({reason}) but no loadable checkpoint \
+                         exists in {} — enable --ckpt-every to make recovery possible",
+                        opts.out_dir.display()
+                    );
+                };
+                if !opts.quiet {
+                    println!("[guard] rewinding to {}: {reason}", path.display());
+                }
+                let ck = self.restore(&path, &mut session, opts, &policy)?;
+                train_loader = BatchLoader::resume(
+                    profile,
+                    self.model.vocab_size,
+                    session.batch,
+                    session.seq,
+                    tc.seed,
+                    0,
+                    &ck.train_cursor,
+                );
+                val_loader = BatchLoader::resume(
+                    profile,
+                    self.model.vocab_size,
+                    session.batch,
+                    session.seq,
+                    tc.seed,
+                    1,
+                    &ck.val_cursor,
+                );
+                // Roll the coordinator state back and rebuild
+                // metrics.csv as the checkpoint's exact prefix (the
+                // in-memory records ARE the continuous file's rows;
+                // csv_line is shortest-round-trip stable).
+                records.truncate(ck.metrics.rows() as usize);
+                ckpts = ck.counter("ckpts_written").unwrap_or(0);
+                drop(logger);
+                logger = MetricsLogger::create(&metrics_path)?;
+                for r in &records {
+                    logger.log_raw(&r.csv_line())?;
+                }
+                // Guard state rolls back too (quarantines, strikes,
+                // loss window) — except the rewind budget, which must
+                // survive the restore or retries become unbounded. The
+                // rewind itself is recorded after the rollback so its
+                // event outlives it.
+                if let Some(bytes) = &ck.guard_state {
+                    g.import_state(bytes, true)
+                        .context("restoring guard state during rewind")?;
+                }
+                let granted = g.begin_rewind(step, &reason);
+                assert!(granted, "budget was checked before the restore");
+                last_val = ck.last_val;
+                stats = ck.stats;
+                suite_history = ck.suite_history;
+                total_ms = records.iter().map(|r| r.step_ms).sum();
+                step = ck.step;
+                continue;
             }
+            step += 1;
         }
         logger.flush()?;
 
         // Persist the stats heatmap CSV next to the metrics.
         let stats_path = opts.out_dir.join(format!("{}.{}.stats.csv", opts.artifact, tc.name));
         std::fs::write(&stats_path, stats.heatmap_csv())?;
+
+        // Guard telemetry: the intervention log rides the outcome and
+        // lands next to the metrics as guard.csv.
+        let guard_events = match &guard {
+            Some(g) => {
+                let gpath =
+                    opts.out_dir.join(format!("{}.{}.guard.csv", opts.artifact, tc.name));
+                let mut text = String::from("step,action,detail\n");
+                for e in g.events() {
+                    text.push_str(&format!(
+                        "{},{},\"{}\"\n",
+                        e.step,
+                        e.action.name(),
+                        e.detail.replace('"', "'")
+                    ));
+                }
+                std::fs::write(&gpath, text)?;
+                g.events().to_vec()
+            }
+            None => Vec::new(),
+        };
 
         let final_train_loss = records.last().map(|r| r.train_loss).unwrap_or(f32::NAN);
         Ok(TrainOutcome {
@@ -384,7 +622,33 @@ impl<'rt> Trainer<'rt> {
             stats,
             suite_history,
             metrics_path,
+            guard_events,
         })
+    }
+
+    /// Auto-resume target discovery: sweep stale save temp files, then
+    /// walk the checkpoint ring newest → oldest and pick the first
+    /// entry that loads cleanly, noting each corrupt/torn file skipped.
+    fn find_auto_resume(&self, opts: &TrainerOptions) -> Option<PathBuf> {
+        let swept = sweep_stale_tmp(&opts.out_dir);
+        if swept > 0 && !opts.quiet {
+            println!("[auto-resume] swept {swept} stale checkpoint temp file(s)");
+        }
+        for (ck_step, path) in scan_ring(&opts.out_dir, &opts.artifact) {
+            match TrainCheckpoint::load(&path) {
+                Ok(_) => return Some(path),
+                Err(e) => {
+                    if !opts.quiet {
+                        println!(
+                            "[auto-resume] skipping corrupt checkpoint {} (step {ck_step}): \
+                             {e:#}",
+                            path.display()
+                        );
+                    }
+                }
+            }
+        }
+        None
     }
 
     /// Load and validate a resume checkpoint, importing the session
@@ -443,6 +707,7 @@ impl<'rt> Trainer<'rt> {
             ("opt/per_channel", opts.per_channel as u64, "per-channel stats"),
             ("opt/stats_window", opts.stats_window, "--stats-window"),
             ("opt/policy", policy.pin(), "--policy"),
+            ("opt/guard", opts.guard.map_or(0, |g| g.pin()), "--guard"),
         ];
         for (key, got, flag) in pinned {
             if let Some(want) = ck.counter(key) {
@@ -477,6 +742,8 @@ impl<'rt> Trainer<'rt> {
         ckpts_written: u64,
         opts: &TrainerOptions,
         policy: &PolicyRef,
+        faults: Option<&FaultPlan>,
+        guard: Option<&NumericGuard>,
     ) -> Result<PathBuf> {
         let state = session.export_state()?;
         let train_cursor = train_loader.cursor();
@@ -502,6 +769,10 @@ impl<'rt> Trainer<'rt> {
             ("opt/per_channel".to_string(), opts.per_channel as u64),
             ("opt/stats_window".to_string(), opts.stats_window),
             ("opt/policy".to_string(), policy.pin()),
+            // The guard config is pinned (0 = off); the fault schedule
+            // deliberately is NOT — consumed one-shot faults must not
+            // re-fire on a rewind replay or a clean restart.
+            ("opt/guard".to_string(), opts.guard.map_or(0, |g| g.pin())),
         ];
         let ck = TrainCheckpoint {
             step: state.step,
@@ -527,10 +798,22 @@ impl<'rt> Trainer<'rt> {
             },
             suite_history: suite_history.to_vec(),
             counters,
+            guard_state: guard.map(|g| g.export_state()),
         };
         let path = opts.out_dir.join(format!("{}.step{}.ckpt", opts.artifact, ck.step));
-        ck.save(&path)?;
+        ck.save_with_faults(&path, faults, ckpts_written)?;
         Ok(path)
+    }
+}
+
+/// Best-effort text of a panic payload, for guard event details.
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 

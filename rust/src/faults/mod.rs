@@ -1,0 +1,522 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! A fault schedule is a strictly-parsed spec string (`--faults SPEC` /
+//! `MOR_FAULTS`) of `;`-separated entries:
+//!
+//! ```text
+//! nan:grad@step=7        seed one NaN into a gradient tensor at step 7
+//! inf:weight@step=9      seed one Inf into a parameter after the update
+//! bitflip:block@p=1e-4   flip one mantissa bit per quantized block w.p. p
+//! panic:worker@step=11   panic inside a parallel worker closure at step 11
+//! torn-save@ckpt=2       truncate the 2nd checkpoint save halfway
+//! ```
+//!
+//! Steps are 1-based optimizer steps (the same domain as
+//! `DecisionCtx::step`); checkpoint indices are 1-based save counts.
+//! Every random draw comes from a counter-keyed [`Rng`] stream derived
+//! from the training seed, so a chaos run is bitwise reproducible at
+//! any thread count, and a post-rewind replay redraws identically.
+//!
+//! Parsing is strict in the house style: malformed sites, missing `@`,
+//! zero probabilities and unknown fault kinds abort loudly instead of
+//! silently doing nothing.
+
+use crate::util::rng::Rng;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Grammar summary used in error messages.
+pub const SPEC_GRAMMAR: &str = "nan:grad@step=N | nan:weight@step=N | inf:grad@step=N | \
+     inf:weight@step=N | bitflip:block@p=P | panic:worker@step=N | torn-save@ckpt=K \
+     (entries joined with ';')";
+
+/// What value a seed fault injects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedKind {
+    Nan,
+    Inf,
+}
+
+impl SeedKind {
+    fn name(self) -> &'static str {
+        match self {
+            SeedKind::Nan => "nan",
+            SeedKind::Inf => "inf",
+        }
+    }
+
+    /// The poison value itself.
+    pub fn value(self) -> f32 {
+        match self {
+            SeedKind::Nan => f32::NAN,
+            SeedKind::Inf => f32::INFINITY,
+        }
+    }
+}
+
+/// Where a seed fault lands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedSite {
+    /// One gradient element, after backward and before the update.
+    Grad,
+    /// One parameter element, after the update.
+    Weight,
+}
+
+impl SeedSite {
+    fn name(self) -> &'static str {
+        match self {
+            SeedSite::Grad => "grad",
+            SeedSite::Weight => "weight",
+        }
+    }
+}
+
+/// One scheduled fault.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// Seed a NaN/Inf into a gradient or parameter at a 1-based step.
+    Seed {
+        kind: SeedKind,
+        site: SeedSite,
+        step: u64,
+    },
+    /// Flip one mantissa bit in a quantized block with probability `p`
+    /// per block per quantization call.
+    Bitflip { p: f64 },
+    /// Panic inside a parallel worker closure at a 1-based step.
+    PanicWorker { step: u64 },
+    /// Truncate the `ckpt`-th (1-based) checkpoint save halfway.
+    TornSave { ckpt: u64 },
+}
+
+impl Fault {
+    fn describe(&self) -> String {
+        match self {
+            Fault::Seed { kind, site, step } => {
+                format!("{}:{}@step={}", kind.name(), site.name(), step)
+            }
+            Fault::Bitflip { p } => format!("bitflip:block@p={p}"),
+            Fault::PanicWorker { step } => format!("panic:worker@step={step}"),
+            Fault::TornSave { ckpt } => format!("torn-save@ckpt={ckpt}"),
+        }
+    }
+}
+
+/// A parsed, validated fault schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultSpec {
+    /// Canonical spelling; `parse_faults(describe())` round-trips.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self.faults.iter().map(|f| f.describe()).collect();
+        parts.join(";")
+    }
+}
+
+fn parse_u64_arg(entry: &str, key: &str, val: &str) -> Result<u64, String> {
+    let n: u64 = val
+        .parse()
+        .map_err(|_| format!("fault {entry:?}: {key} must be a positive integer, got {val:?}"))?;
+    if n == 0 {
+        return Err(format!(
+            "fault {entry:?}: {key}=0 is before the first step and would never fire"
+        ));
+    }
+    Ok(n)
+}
+
+fn parse_entry(entry: &str) -> Result<Fault, String> {
+    let (head, arg) = entry
+        .split_once('@')
+        .ok_or_else(|| format!("fault {entry:?} is missing '@': expected {SPEC_GRAMMAR}"))?;
+    let (key, val) = arg
+        .split_once('=')
+        .ok_or_else(|| format!("fault {entry:?}: argument {arg:?} is not key=value"))?;
+    let (kind, site) = match head.split_once(':') {
+        Some((k, s)) => (k, Some(s)),
+        None => (head, None),
+    };
+    match kind {
+        "nan" | "inf" => {
+            let sk = if kind == "nan" { SeedKind::Nan } else { SeedKind::Inf };
+            let site = site.ok_or_else(|| {
+                format!("fault {entry:?}: {kind} needs a site ({kind}:grad or {kind}:weight)")
+            })?;
+            let site = match site {
+                "grad" => SeedSite::Grad,
+                "weight" => SeedSite::Weight,
+                other => {
+                    return Err(format!(
+                        "fault {entry:?}: unknown {kind} site {other:?} (expected grad or weight)"
+                    ))
+                }
+            };
+            if key != "step" {
+                return Err(format!("fault {entry:?}: {kind} takes step=N, not {key:?}"));
+            }
+            let step = parse_u64_arg(entry, "step", val)?;
+            Ok(Fault::Seed { kind: sk, site, step })
+        }
+        "bitflip" => {
+            match site {
+                Some("block") => {}
+                Some(other) => {
+                    return Err(format!(
+                        "fault {entry:?}: unknown bitflip site {other:?} (only block)"
+                    ))
+                }
+                None => {
+                    return Err(format!("fault {entry:?}: bitflip needs the block site"));
+                }
+            }
+            if key != "p" {
+                return Err(format!("fault {entry:?}: bitflip takes p=P, not {key:?}"));
+            }
+            let p: f64 = val
+                .parse()
+                .map_err(|_| format!("fault {entry:?}: p must be a number, got {val:?}"))?;
+            if !p.is_finite() || p <= 0.0 || p > 1.0 {
+                return Err(format!(
+                    "fault {entry:?}: p must be in (0, 1] — zero probability never fires"
+                ));
+            }
+            Ok(Fault::Bitflip { p })
+        }
+        "panic" => {
+            match site {
+                Some("worker") => {}
+                Some(other) => {
+                    return Err(format!(
+                        "fault {entry:?}: unknown panic site {other:?} (only worker)"
+                    ))
+                }
+                None => {
+                    return Err(format!("fault {entry:?}: panic needs the worker site"));
+                }
+            }
+            if key != "step" {
+                return Err(format!("fault {entry:?}: panic takes step=N, not {key:?}"));
+            }
+            let step = parse_u64_arg(entry, "step", val)?;
+            Ok(Fault::PanicWorker { step })
+        }
+        "torn-save" => {
+            if let Some(s) = site {
+                return Err(format!(
+                    "fault {entry:?}: torn-save takes no site, got {s:?}"
+                ));
+            }
+            if key != "ckpt" {
+                return Err(format!("fault {entry:?}: torn-save takes ckpt=K, not {key:?}"));
+            }
+            let ckpt = parse_u64_arg(entry, "ckpt", val)?;
+            Ok(Fault::TornSave { ckpt })
+        }
+        other => Err(format!(
+            "unknown fault kind {other:?} in {entry:?}: expected {SPEC_GRAMMAR}"
+        )),
+    }
+}
+
+/// Parse an explicit fault spec. `None` stays `None`; malformed specs
+/// (including empty strings and empty entries) are loud errors.
+pub fn parse_faults(raw: Option<&str>) -> Result<Option<FaultSpec>, String> {
+    let raw = match raw {
+        None => return Ok(None),
+        Some(r) => r,
+    };
+    if raw.is_empty() {
+        return Err(format!("spec is empty: expected {SPEC_GRAMMAR}"));
+    }
+    let mut faults = Vec::new();
+    for entry in raw.split(';') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            return Err(format!("spec {raw:?} has an empty entry"));
+        }
+        faults.push(parse_entry(entry)?);
+    }
+    Ok(Some(FaultSpec { faults }))
+}
+
+/// Resolve the `MOR_FAULTS` env var; panics loudly on a malformed
+/// value, mirroring the other strict knobs.
+pub fn auto() -> Option<FaultSpec> {
+    let raw = crate::util::env::var("MOR_FAULTS");
+    match parse_faults(raw.as_deref()) {
+        Ok(opt) => opt,
+        Err(msg) => panic!("MOR_FAULTS {msg}"),
+    }
+}
+
+/// A live fault schedule: the parsed spec plus one-shot firing state
+/// and telemetry counters. One plan per training run; seeded from the
+/// run's training seed so chaos runs reproduce bitwise.
+pub struct FaultPlan {
+    spec: FaultSpec,
+    seed: u64,
+    /// One-shot flags, parallel to `spec.faults` (bitflips re-fire and
+    /// ignore theirs).
+    fired: Vec<AtomicBool>,
+    bitflips: AtomicU64,
+    seeds: AtomicU64,
+    panics: AtomicU64,
+    torn: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec, seed: u64) -> Self {
+        let fired = spec.faults.iter().map(|_| AtomicBool::new(false)).collect();
+        FaultPlan {
+            spec,
+            seed,
+            fired,
+            bitflips: AtomicU64::new(0),
+            seeds: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            torn: AtomicU64::new(0),
+        }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Seed faults due at this 1-based step, firing each at most once.
+    pub fn seeds_due(&self, step1: u64) -> Vec<(SeedKind, SeedSite)> {
+        let mut due = Vec::new();
+        for (i, f) in self.spec.faults.iter().enumerate() {
+            if let Fault::Seed { kind, site, step } = f {
+                if *step == step1 && !self.fired[i].swap(true, Ordering::Relaxed) {
+                    self.seeds.fetch_add(1, Ordering::Relaxed);
+                    due.push((*kind, *site));
+                }
+            }
+        }
+        due
+    }
+
+    /// True once, at the scheduled worker-panic step.
+    pub fn worker_panic_due(&self, step1: u64) -> bool {
+        for (i, f) in self.spec.faults.iter().enumerate() {
+            if let Fault::PanicWorker { step } = f {
+                if *step == step1 && !self.fired[i].swap(true, Ordering::Relaxed) {
+                    self.panics.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// True once, for the scheduled 1-based checkpoint save index.
+    pub fn torn_save_due(&self, ckpt_idx: u64) -> bool {
+        for (i, f) in self.spec.faults.iter().enumerate() {
+            if let Fault::TornSave { ckpt } = f {
+                if *ckpt == ckpt_idx && !self.fired[i].swap(true, Ordering::Relaxed) {
+                    self.torn.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Decide whether a bitflip fault hits the given quantized block;
+    /// on a hit, returns the per-block RNG (already advanced past the
+    /// hit draw) for the caller to pick the corrupted element with.
+    ///
+    /// The stream is keyed purely by schedule coordinates (fault index,
+    /// tensor class, layer, step, direction, block index) — never by
+    /// thread identity or call order — so parallel == serial holds and
+    /// a post-rewind replay redraws identically.
+    pub fn bitflip_stream(
+        &self,
+        class_idx: usize,
+        layer: usize,
+        step1: u64,
+        direction: usize,
+        block_idx: usize,
+    ) -> Option<Rng> {
+        for (i, f) in self.spec.faults.iter().enumerate() {
+            if let Fault::Bitflip { p } = f {
+                let mut h = self.seed ^ 0xB1F1_B1F1_B1F1_B1F1u64;
+                for k in [
+                    i as u64,
+                    class_idx as u64,
+                    layer as u64,
+                    step1,
+                    direction as u64,
+                    block_idx as u64,
+                ] {
+                    h ^= k.wrapping_add(0x9E37_79B9_7F4A_7C15);
+                    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+                    h ^= h >> 27;
+                }
+                let mut rng = Rng::new(h);
+                if rng.f64() < *p {
+                    self.bitflips.fetch_add(1, Ordering::Relaxed);
+                    return Some(rng);
+                }
+            }
+        }
+        None
+    }
+
+    /// A deterministic stream for picking seed-fault targets.
+    pub fn seed_target_stream(&self, step1: u64, salt: u64) -> Rng {
+        let mut h = self.seed ^ 0x5EED_5EED_5EED_5EEDu64;
+        for k in [step1, salt] {
+            h ^= k.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            h ^= h >> 27;
+        }
+        Rng::new(h)
+    }
+
+    pub fn bitflips_fired(&self) -> u64 {
+        self.bitflips.load(Ordering::Relaxed)
+    }
+    pub fn seeds_fired(&self) -> u64 {
+        self.seeds.load(Ordering::Relaxed)
+    }
+    pub fn panics_fired(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+    pub fn torn_fired(&self) -> u64 {
+        self.torn.load(Ordering::Relaxed)
+    }
+}
+
+/// Panic message used by the injected worker panic; the guard
+/// recognizes injected panics by it in test assertions.
+pub const WORKER_PANIC_MSG: &str = "injected fault: worker panic";
+
+thread_local! {
+    /// Armed on the trainer thread just before a step; consumed by the
+    /// first `join2` call on the same thread. Thread-local (not
+    /// process-global) so concurrently running tests cannot steal each
+    /// other's scheduled panics.
+    static WORKER_PANIC_ARMED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Arm the next `join2` on this thread to panic in its second closure.
+pub fn arm_worker_panic() {
+    WORKER_PANIC_ARMED.with(|c| c.set(true));
+}
+
+/// Consume the armed flag (called by `join2`).
+pub fn take_worker_panic() -> bool {
+    WORKER_PANIC_ARMED.with(|c| c.replace(false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_round_trips_canonical_spellings() {
+        let spec = "nan:grad@step=7;bitflip:block@p=0.0001;panic:worker@step=11;torn-save@ckpt=2";
+        let parsed = parse_faults(Some(spec)).unwrap().unwrap();
+        assert_eq!(parsed.faults.len(), 4);
+        assert_eq!(parsed.describe(), spec);
+        let reparsed = parse_faults(Some(&parsed.describe())).unwrap().unwrap();
+        assert_eq!(reparsed, parsed);
+    }
+
+    #[test]
+    fn scientific_notation_probability_canonicalizes() {
+        let parsed = parse_faults(Some("bitflip:block@p=1e-4")).unwrap().unwrap();
+        assert_eq!(parsed.describe(), "bitflip:block@p=0.0001");
+    }
+
+    #[test]
+    fn none_is_none_and_rejects_are_loud() {
+        assert_eq!(parse_faults(None).unwrap(), None);
+        for bad in [
+            "",
+            "nan:grad",                  // missing '@'
+            "nan:grad@7",                // arg is not key=value
+            "nan@step=1",                // missing site
+            "nan:flux@step=1",           // malformed site
+            "nan:grad@step=0",           // step 0 never fires
+            "nan:grad@p=1",              // wrong key
+            "bitflip:block@p=0",         // zero probability
+            "bitflip:block@p=2",         // out of range
+            "bitflip:block@p=nope",      // not a number
+            "bitflip@p=0.5",             // missing site
+            "panic@step=3",              // missing site
+            "panic:main@step=3",         // malformed site
+            "torn-save:ckpt@ckpt=1",     // torn-save takes no site
+            "torn-save@step=1",          // wrong key
+            "frob:grad@step=1",          // unknown kind
+            "nan:grad@step=1;;inf:grad@step=2", // empty entry
+        ] {
+            assert!(parse_faults(Some(bad)).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn seed_faults_fire_exactly_once() {
+        let spec = parse_faults(Some("nan:grad@step=3")).unwrap().unwrap();
+        let plan = FaultPlan::new(spec, 42);
+        assert!(plan.seeds_due(2).is_empty());
+        assert_eq!(plan.seeds_due(3), vec![(SeedKind::Nan, SeedSite::Grad)]);
+        assert!(plan.seeds_due(3).is_empty(), "one-shot flag not consumed");
+        assert_eq!(plan.seeds_fired(), 1);
+    }
+
+    #[test]
+    fn panic_and_torn_fire_exactly_once() {
+        let spec = parse_faults(Some("panic:worker@step=5;torn-save@ckpt=2"))
+            .unwrap()
+            .unwrap();
+        let plan = FaultPlan::new(spec, 42);
+        assert!(!plan.worker_panic_due(4));
+        assert!(plan.worker_panic_due(5));
+        assert!(!plan.worker_panic_due(5));
+        assert!(!plan.torn_save_due(1));
+        assert!(plan.torn_save_due(2));
+        assert!(!plan.torn_save_due(2));
+    }
+
+    #[test]
+    fn bitflip_stream_is_deterministic_and_coordinate_keyed() {
+        let spec = parse_faults(Some("bitflip:block@p=1")).unwrap().unwrap();
+        let plan = FaultPlan::new(spec.clone(), 7);
+        let a = plan.bitflip_stream(0, 1, 2, 0, 3).expect("p=1 always hits");
+        let b = plan.bitflip_stream(0, 1, 2, 0, 3).expect("p=1 always hits");
+        let (mut a, mut b) = (a, b);
+        assert_eq!(a.next_u64(), b.next_u64(), "same coordinates, same stream");
+        let plan2 = FaultPlan::new(spec, 8);
+        let mut c = plan2.bitflip_stream(0, 1, 2, 0, 3).unwrap();
+        let mut a2 = plan.bitflip_stream(0, 1, 2, 0, 3).unwrap();
+        assert_ne!(a2.next_u64(), c.next_u64(), "seed changes the stream");
+    }
+
+    #[test]
+    fn tiny_probability_mostly_misses() {
+        let spec = parse_faults(Some("bitflip:block@p=1e-9")).unwrap().unwrap();
+        let plan = FaultPlan::new(spec, 7);
+        for b in 0..64 {
+            assert!(plan.bitflip_stream(0, 0, 1, 0, b).is_none());
+        }
+        assert_eq!(plan.bitflips_fired(), 0);
+    }
+
+    #[test]
+    fn worker_panic_arm_is_thread_local_and_one_shot() {
+        assert!(!take_worker_panic());
+        arm_worker_panic();
+        assert!(take_worker_panic());
+        assert!(!take_worker_panic());
+        arm_worker_panic();
+        let other = std::thread::spawn(take_worker_panic).join().unwrap();
+        assert!(!other, "arming must not leak across threads");
+        assert!(take_worker_panic());
+    }
+}

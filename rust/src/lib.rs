@@ -20,6 +20,7 @@
 
 pub mod coordinator;
 pub mod data;
+pub mod faults;
 pub mod formats;
 pub mod kernels;
 pub mod model;

@@ -88,6 +88,61 @@ fn policy_of(args: &Args) -> Option<PolicyRef> {
     }
 }
 
+/// `--faults SPEC` installs a deterministic fault-injection schedule
+/// for the run (chaos testing; host backend only). Strict like every
+/// knob: a malformed spec aborts loudly; when the flag is absent the
+/// `MOR_FAULTS` env var is consulted.
+fn faults_of(args: &Args) -> Option<mor::faults::FaultSpec> {
+    match args.get("faults") {
+        Some(raw) => match mor::faults::parse_faults(Some(raw)) {
+            Ok(opt) => opt,
+            Err(msg) => {
+                eprintln!("error: --faults {msg}");
+                std::process::exit(2);
+            }
+        },
+        None => mor::faults::auto(),
+    }
+}
+
+/// `--guard SPEC` arms the numeric guard (skip-step → BF16 quarantine
+/// → checkpoint rewind). `on`/`off` or a `k=v` list; malformed specs
+/// abort loudly; absent flag falls back to `MOR_GUARD`.
+fn guard_of(args: &Args) -> Option<mor::coordinator::guard::GuardConfig> {
+    match args.get("guard") {
+        Some(raw) => match mor::coordinator::guard::parse_guard(Some(raw)) {
+            Ok(opt) => opt,
+            Err(msg) => {
+                eprintln!("error: --guard {msg}");
+                std::process::exit(2);
+            }
+        },
+        None => mor::coordinator::guard::auto(),
+    }
+}
+
+/// `--ckpt-keep K` caps the checkpoint ring at the newest K files
+/// (0/absent = keep everything). Falls back to `MOR_CKPT_KEEP`.
+fn ckpt_keep_of(args: &Args) -> u64 {
+    let (raw, prefix): (Option<String>, &str) = match args.get("ckpt-keep") {
+        Some(v) => (Some(v.to_string()), "--ckpt-keep "),
+        None => (mor::util::env::var("MOR_CKPT_KEEP"), "MOR_CKPT_KEEP "),
+    };
+    match mor::util::env::parse_pos_int(
+        raw.as_deref(),
+        prefix,
+        "positive checkpoint count",
+        "unset it to keep every checkpoint",
+    ) {
+        Ok(Some(n)) => n as u64,
+        Ok(None) => 0,
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
 /// Select the execution backend: `--backend pjrt` requires compiled
 /// artifacts, `--backend host` runs the pure-Rust mirror, and the
 /// default `auto` uses PJRT when the manifest exists and falls back to
@@ -134,7 +189,8 @@ USAGE:
   repro train  --artifact <name> [--config config1|config2] [--steps N]
                [--threshold 0.045] [--model tiny|small|base] [--out runs/]
                [--suite-every N] [--ckpt-every N] [--resume <ckpt>]
-               [--embed-metrics] [--quiet] [--policy SPEC]
+               [--auto-resume] [--ckpt-keep K] [--embed-metrics]
+               [--quiet] [--policy SPEC] [--faults SPEC] [--guard SPEC]
   repro eval   [--model ...] [--artifact eval] (evaluates fresh init or --ckpt)
   repro report <table1|table2|table3|table4|fig5..fig21|policies|all>
                [--steps N] [--model ...] [--out report/] [--fresh] [--quiet]
@@ -151,6 +207,29 @@ Common options:
                              MOR_POLICY env var also respected. Non-threshold
                              policies need the host backend. `repro report
                              policies` compares all three on two tasks.
+
+Robustness options (train):
+  --faults SPEC              deterministic fault injection for chaos runs
+                             (host backend only; MOR_FAULTS env var also
+                             respected): `;`-separated entries from
+                             nan:grad@step=N, nan:weight@step=N,
+                             inf:grad@step=N, inf:weight@step=N,
+                             bitflip:block@p=P, panic:worker@step=N,
+                             torn-save@ckpt=K. Seeded from the training
+                             seed — bitwise reproducible at any --threads.
+  --guard SPEC               numeric guard (MOR_GUARD): `on`, `off` or
+                             skip=K,quarantine=N,rewinds=R,spike=F.
+                             Escalates skip-step → BF16
+                             quarantine → rewind to the last good
+                             checkpoint; interventions land in
+                             <artifact>.<config>.guard.csv. Fault-free
+                             guarded runs are bitwise-identical to
+                             unguarded ones.
+  --ckpt-keep K              keep only the newest K ring checkpoints
+                             (MOR_CKPT_KEEP; default: keep all)
+  --auto-resume              resume from the newest loadable checkpoint in
+                             --out, walking past corrupt/torn files
+                             (mutually exclusive with --resume)
 
 Checkpoint/resume: `--ckpt-every N` writes a full MORCKPT2 training
 checkpoint (params, Adam moments, data cursors, RNG streams, scaling
@@ -180,6 +259,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     opts.suite_every = args.u64("suite-every", 0);
     opts.ckpt_every = args.u64("ckpt-every", 0);
     opts.resume = args.get("resume").map(PathBuf::from);
+    opts.auto_resume = args.flag("auto-resume");
+    opts.ckpt_keep = ckpt_keep_of(args);
+    opts.faults = faults_of(args);
+    opts.guard = guard_of(args);
     opts.embed_metrics = args.flag("embed-metrics");
     opts.stats_window = args.u64("stats-window", (steps / 4).max(1));
     opts.per_channel = artifact.contains("channel");

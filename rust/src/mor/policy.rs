@@ -38,7 +38,8 @@
 
 use crate::formats::ReprType;
 use crate::quant::error::{dynamic_range_fits_e5m2, RelErrAccum};
-use std::sync::{Arc, Mutex};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
 
 /// Shared, thread-safe handle to a policy — the unit that flows
 /// through `TrainerOptions`, `Runtime` and the session API.
@@ -311,6 +312,88 @@ impl DecisionPolicy for StaticAssignmentPolicy {
     }
 }
 
+/// A composing wrapper the numeric guard uses to demote tensors to the
+/// BF16 fallback for a bounded number of steps: any `(class, layer)`
+/// pair with an active quarantine entry is forced to input precision
+/// (tensor level rejects every FP8 candidate, block level picks
+/// `Fallback`), everything else delegates to the wrapped policy.
+///
+/// Identity (`describe`/`pin`) is the *inner* policy's — quarantine is
+/// run-dynamic state, checkpointed by the guard alongside its own
+/// state, not part of the configured policy identity. The entry map is
+/// only mutated between steps (the guard runs after each step), so
+/// decisions within a step read a frozen map and the bitwise
+/// determinism contracts hold.
+#[derive(Debug)]
+pub struct QuarantinePolicy {
+    inner: PolicyRef,
+    /// `(TensorClass::index, layer) → first step the quarantine has
+    /// expired at`, in the 1-based `DecisionCtx::step` domain: the
+    /// pair is quarantined while `ctx.step < until`.
+    until: RwLock<HashMap<(usize, usize), u64>>,
+}
+
+impl QuarantinePolicy {
+    pub fn new(inner: PolicyRef) -> Arc<QuarantinePolicy> {
+        Arc::new(QuarantinePolicy { inner, until: RwLock::new(HashMap::new()) })
+    }
+
+    /// Quarantine `(class_idx, layer)` until `until_step` (exclusive,
+    /// 1-based). Extensions max-merge with any existing entry.
+    pub fn quarantine(&self, class_idx: usize, layer: usize, until_step: u64) {
+        let mut map = self.until.write().unwrap();
+        let e = map.entry((class_idx, layer)).or_insert(0);
+        *e = (*e).max(until_step);
+    }
+
+    /// Active entries as sorted `(class_idx, layer, until_step)` rows —
+    /// the guard's checkpoint codec input.
+    pub fn active_entries(&self) -> Vec<(usize, usize, u64)> {
+        let map = self.until.read().unwrap();
+        let mut out: Vec<_> = map.iter().map(|(&(c, l), &u)| (c, l, u)).collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Replace the entry map (guard state restore / rewind).
+    pub fn restore_entries(&self, entries: &[(usize, usize, u64)]) {
+        let mut map = self.until.write().unwrap();
+        map.clear();
+        for &(c, l, u) in entries {
+            map.insert((c, l), u);
+        }
+    }
+
+    fn quarantined(&self, ctx: &DecisionCtx) -> bool {
+        let map = self.until.read().unwrap();
+        map.get(&(ctx.class.index(), ctx.layer)).is_some_and(|&u| ctx.step < u)
+    }
+}
+
+impl DecisionPolicy for QuarantinePolicy {
+    fn describe(&self) -> String {
+        self.inner.describe()
+    }
+
+    fn pin(&self) -> u64 {
+        self.inner.pin()
+    }
+
+    fn accept_tensor(&self, ctx: &DecisionCtx, format: ReprType, relerr: f64, th: f64) -> bool {
+        if self.quarantined(ctx) {
+            return false;
+        }
+        self.inner.accept_tensor(ctx, format, relerr, th)
+    }
+
+    fn choose_block(&self, ctx: &DecisionCtx, block: &BlockProps) -> BlockChoice {
+        if self.quarantined(ctx) {
+            return BlockChoice::Fallback;
+        }
+        self.inner.choose_block(ctx, block)
+    }
+}
+
 /// The grammar every spec error repeats.
 const SPEC_GRAMMAR: &str = "threshold, metric[=BUDGET] or static[=INPUT,WEIGHT,GRAD]";
 
@@ -525,6 +608,44 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn quarantine_wrapper_is_transparent_until_armed() {
+        let qp = QuarantinePolicy::new(Arc::new(MorThresholdPolicy));
+        let ctx = DecisionCtx {
+            class: TensorClass::Grad,
+            layer: 1,
+            step: 5,
+            three_way: true,
+            ..Default::default()
+        };
+        let good = BlockProps {
+            e4m3_err: &accum(0.1, 4),
+            e5m2_err: &accum(0.2, 4),
+            range: (1.0, Some(1.0)),
+        };
+        // Transparent with no entries: identity and decisions delegate.
+        assert_eq!(qp.describe(), "threshold");
+        assert_eq!(qp.pin(), MorThresholdPolicy.pin());
+        assert!(qp.accept_tensor(&ctx, ReprType::E4M3, 0.01, 0.045));
+        assert_eq!(qp.choose_block(&ctx, &good), BlockChoice::E4m3);
+
+        // Quarantined while step < until, for the keyed pair only.
+        qp.quarantine(TensorClass::Grad.index(), 1, 8);
+        assert!(!qp.accept_tensor(&ctx, ReprType::E4M3, 0.01, 0.045));
+        assert_eq!(qp.choose_block(&ctx, &good), BlockChoice::Fallback);
+        let other_layer = DecisionCtx { layer: 2, ..ctx };
+        assert_eq!(qp.choose_block(&other_layer, &good), BlockChoice::E4m3);
+        let expired = DecisionCtx { step: 8, ..ctx };
+        assert_eq!(qp.choose_block(&expired, &good), BlockChoice::E4m3);
+
+        // Extensions max-merge; restore replaces wholesale.
+        qp.quarantine(TensorClass::Grad.index(), 1, 6);
+        assert_eq!(qp.active_entries(), vec![(2, 1, 8)]);
+        qp.restore_entries(&[(0, 0, 3)]);
+        assert_eq!(qp.active_entries(), vec![(0, 0, 3)]);
+        assert_eq!(qp.choose_block(&ctx, &good), BlockChoice::E4m3);
     }
 
     /// The process default resolves to the threshold policy (directly

@@ -413,6 +413,15 @@ pub struct StepOutputs {
     /// Per-slot BF16-fallback fraction in [0,1] (0/1 for tensor-level
     /// decisions, block fraction for sub-tensor recipes).
     pub fallback: Vec<f32>,
+    /// Per-slot amax observed this step (host backend; empty for PJRT).
+    /// The numeric guard's overflow monitor reads these.
+    pub amax: Vec<f32>,
+    /// Non-finite gradient values found by the pre-update scan (always
+    /// 0 unless [`TrainSession::set_guard_skip`] armed the scan).
+    pub nonfinite_grads: u64,
+    /// Whether the optimizer update was skipped because the scan found
+    /// non-finite gradients.
+    pub skipped: bool,
 }
 
 /// A borrowed view of a session's parameters in whichever form the
@@ -499,7 +508,14 @@ impl TrainSession {
                 let (loss, relerr, fallback) =
                     trainer.step(tokens, self.batch, lr, threshold, adam_t)?;
                 *lits_stale = true;
-                StepOutputs { loss, relerr, fallback }
+                StepOutputs {
+                    loss,
+                    relerr,
+                    fallback,
+                    amax: trainer.last_amax().to_vec(),
+                    nonfinite_grads: trainer.last_nonfinite_grads(),
+                    skipped: trainer.last_update_skipped(),
+                }
             }
             TrainImpl::Pjrt { exe, state } => {
                 let mut inputs: Vec<&xla::Literal> = state.iter().collect();
@@ -524,7 +540,14 @@ impl TrainSession {
                 let relerr = parts.pop().unwrap().to_vec::<f32>()?;
                 let loss = parts.pop().unwrap().get_first_element::<f32>()?;
                 *state = parts;
-                StepOutputs { loss, relerr, fallback }
+                StepOutputs {
+                    loss,
+                    relerr,
+                    fallback,
+                    amax: Vec::new(),
+                    nonfinite_grads: 0,
+                    skipped: false,
+                }
             }
         };
         self.step += 1;
@@ -533,6 +556,36 @@ impl TrainSession {
 
     pub fn steps_taken(&self) -> u64 {
         self.step
+    }
+
+    /// Arm (or disarm) the pre-update non-finite gradient scan — the
+    /// numeric guard's first rung. A no-op on PJRT, where the update is
+    /// baked into the compiled step.
+    pub fn set_guard_skip(&mut self, on: bool) {
+        if let TrainImpl::Host { trainer, .. } = &mut self.imp {
+            trainer.set_skip_nonfinite(on);
+        }
+    }
+
+    /// Install a deterministic fault-injection plan (`--faults`); pass
+    /// `None` to clear. Injection hooks exist only in the host mirror,
+    /// so a plan on the PJRT backend fails loudly.
+    pub fn set_faults(
+        &mut self,
+        faults: Option<std::sync::Arc<crate::faults::FaultPlan>>,
+    ) -> Result<()> {
+        match &mut self.imp {
+            TrainImpl::Host { trainer, .. } => {
+                trainer.set_faults(faults);
+                Ok(())
+            }
+            TrainImpl::Pjrt { .. } => {
+                if faults.is_some() {
+                    bail!("fault injection (--faults) requires the host backend");
+                }
+                Ok(())
+            }
+        }
     }
 
     /// Copy the current parameters to host tensors (for checkpoints,

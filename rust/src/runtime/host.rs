@@ -18,6 +18,7 @@
 //! next-token cross-entropy, and `train_step`'s Adam with bias
 //! correction. Stats slot order matches `QuantTensorId::flat`.
 
+use crate::faults::FaultPlan;
 use crate::formats::ReprType;
 use crate::kernels::gemm::{pack_b, PackedB};
 use crate::model::config::ModelConfig;
@@ -246,6 +247,7 @@ impl MorQuantPlan {
 /// E5M2) of the same tensor; they are independent, so they overlap on
 /// the worker pool via [`par::join2`] — each stays internally
 /// chunk-parallel and bit-identical to its serial run.
+#[allow(clippy::too_many_arguments)]
 pub fn mor_quantize_plan_policy(
     q: &HostQuant,
     x: &Tensor,
@@ -253,6 +255,7 @@ pub fn mor_quantize_plan_policy(
     direction: usize,
     policy: &dyn DecisionPolicy,
     scope: TensorScope,
+    faults: Option<&FaultPlan>,
     cfg: &Parallelism,
 ) -> MorQuantPlan {
     if q.kind == HostRecipeKind::Baseline {
@@ -263,7 +266,7 @@ pub fn mor_quantize_plan_policy(
         q.kind,
         HostRecipeKind::SubTensorTwoWay | HostRecipeKind::SubTensorThreeWay
     );
-    let (fq8, fq5) = if needs_e5m2 {
+    let (mut fq8, fq5) = if needs_e5m2 {
         let (fq8, fq5) = par::join2(
             cfg,
             || fake_quantize_with(x, ReprType::E4M3, part, q.scaling, cfg),
@@ -274,6 +277,37 @@ pub fn mor_quantize_plan_policy(
         (fake_quantize_with(x, ReprType::E4M3, part, q.scaling, cfg), None)
     };
     let relerr = fq8.global_err.mean() as f32;
+
+    // Fault injection: corrupt the E4M3 candidate *here*, before the
+    // plan materializes into either a tensor or a packed B panel, so
+    // both representations inherit the same corrupted value and the
+    // SIMD ≡ blocked ≡ scalar contract is untouched. Telemetry above
+    // was computed pre-flip — the corruption is silent, exactly what
+    // the guard must catch downstream.
+    if let Some(fp) = faults {
+        let (rows, cols) = x.as_2d();
+        let regions: Vec<BlockRegion> = if matches!(q.kind, HostRecipeKind::TensorLevel) {
+            vec![BlockRegion { r0: 0, r1: rows, c0: 0, c1: cols }]
+        } else {
+            part.blocks(rows, cols)
+        };
+        for (bi, reg) in regions.iter().enumerate() {
+            if reg.is_empty() {
+                continue;
+            }
+            if let Some(mut rng) =
+                fp.bitflip_stream(scope.class.index(), scope.layer, scope.step, direction, bi)
+            {
+                let r = rng.usize_in(reg.r0, reg.r1 - 1);
+                let c = rng.usize_in(reg.c0, reg.c1 - 1);
+                // Flip a high exponent bit of the dequantized value: a
+                // silent large-magnitude corruption, the classic SDC.
+                let i = r * cols + c;
+                let bits = fq8.out.data()[i].to_bits() ^ (1 << 30);
+                fq8.out.data_mut()[i] = f32::from_bits(bits);
+            }
+        }
+    }
 
     match q.kind {
         HostRecipeKind::TensorLevel => {
@@ -332,7 +366,16 @@ pub fn mor_quantize_plan(
     direction: usize,
     cfg: &Parallelism,
 ) -> MorQuantPlan {
-    mor_quantize_plan_policy(q, x, th, direction, &MorThresholdPolicy, TensorScope::default(), cfg)
+    mor_quantize_plan_policy(
+        q,
+        x,
+        th,
+        direction,
+        &MorThresholdPolicy,
+        TensorScope::default(),
+        None,
+        cfg,
+    )
 }
 
 /// Apply the MoR recipe to one 2-D GEMM operand: returns (quantized
@@ -360,9 +403,10 @@ pub fn mor_quantize_policy(
     direction: usize,
     policy: &dyn DecisionPolicy,
     scope: TensorScope,
+    faults: Option<&FaultPlan>,
     cfg: &Parallelism,
 ) -> (Tensor, f32, f32) {
-    let plan = mor_quantize_plan_policy(q, x, th, direction, policy, scope, cfg);
+    let plan = mor_quantize_plan_policy(q, x, th, direction, policy, scope, faults, cfg);
     let (relerr, fallback) = (plan.relerr, plan.fallback);
     (plan.into_tensor(x), relerr, fallback)
 }
@@ -394,9 +438,10 @@ pub fn mor_quantize_packed_policy(
     direction: usize,
     policy: &dyn DecisionPolicy,
     scope: TensorScope,
+    faults: Option<&FaultPlan>,
     cfg: &Parallelism,
 ) -> (PackedB, f32, f32) {
-    let plan = mor_quantize_plan_policy(q, x, th, direction, policy, scope, cfg);
+    let plan = mor_quantize_plan_policy(q, x, th, direction, policy, scope, faults, cfg);
     let (relerr, fallback) = (plan.relerr, plan.fallback);
     (plan.into_packed_b(x), relerr, fallback)
 }
@@ -712,6 +757,9 @@ pub struct StepEnv<'a> {
     /// Optimizer step feeding [`DecisionCtx::step`]
     /// ([`crate::mor::policy::DecisionCtx`]); 0 outside training.
     pub step: u64,
+    /// Active fault-injection plan (chaos testing); `None` in normal
+    /// runs, and `None` keeps every quantization bit-identical.
+    pub faults: Option<&'a FaultPlan>,
 }
 
 /// y = fq(x) @ fq(w), recording input/weight forward-direction stats.
@@ -733,14 +781,14 @@ fn linear_fwd(
     w: &Tensor,
     cfg: &Parallelism,
 ) -> Tensor {
-    let (q, th, pol) = (env.quant, env.th, env.policy);
+    let (q, th, pol, fa) = (env.quant, env.th, env.policy, env.faults);
     let xs = TensorScope::new(TensorClass::Input, layer, env.step);
     let ws = TensorScope::new(TensorClass::Weight, layer, env.step);
     if cfg.kernel() == KernelMode::Scalar {
         let ((qx, rex, fbx), (qw, rew, fbw)) = par::join2(
             cfg,
-            || mor_quantize_policy(q, x2d, th, 0, pol, xs, cfg),
-            || mor_quantize_policy(q, w, th, 1, pol, ws, cfg),
+            || mor_quantize_policy(q, x2d, th, 0, pol, xs, fa, cfg),
+            || mor_quantize_policy(q, w, th, 1, pol, ws, fa, cfg),
         );
         stats.record(layer, linear, 0, 0, rex, fbx, x2d.amax());
         stats.record(layer, linear, 1, 0, rew, fbw, w.amax());
@@ -748,8 +796,8 @@ fn linear_fwd(
     }
     let ((qx, rex, fbx), (pw, rew, fbw)) = par::join2(
         cfg,
-        || mor_quantize_policy(q, x2d, th, 0, pol, xs, cfg),
-        || mor_quantize_packed_policy(q, w, th, 1, pol, ws, cfg),
+        || mor_quantize_policy(q, x2d, th, 0, pol, xs, fa, cfg),
+        || mor_quantize_packed_policy(q, w, th, 1, pol, ws, fa, cfg),
     );
     stats.record(layer, linear, 0, 0, rex, fbx, x2d.amax());
     stats.record(layer, linear, 1, 0, rew, fbw, w.amax());
@@ -779,7 +827,7 @@ fn linear_bwd(
     if cfg.kernel() == KernelMode::Scalar {
         return linear_bwd_scalar(env, stats, layer, linear, x2d, w, dy2d, cfg);
     }
-    let (q, th, pol) = (env.quant, env.th, env.policy);
+    let (q, th, pol, fa) = (env.quant, env.th, env.policy, env.faults);
     let xs = TensorScope::new(TensorClass::Input, layer, env.step);
     let ws = TensorScope::new(TensorClass::Weight, layer, env.step);
     let gs = TensorScope::new(TensorClass::Grad, layer, env.step);
@@ -798,12 +846,12 @@ fn linear_bwd(
         || {
             par::join2(
                 cfg,
-                || mor_quantize_policy(q, dy2d, th, 0, pol, gs, cfg),
+                || mor_quantize_policy(q, dy2d, th, 0, pol, gs, fa, cfg),
                 || {
                     if q.partition.direction_invariant() {
                         None
                     } else {
-                        Some(mor_quantize_packed_policy(q, dy2d, th, 1, pol, gs, cfg))
+                        Some(mor_quantize_packed_policy(q, dy2d, th, 1, pol, gs, fa, cfg))
                     }
                 },
             )
@@ -813,11 +861,11 @@ fn linear_bwd(
                 cfg,
                 || {
                     let wt = w.transpose();
-                    mor_quantize_packed_policy(q, &wt, th, 1, pol, ws, cfg)
+                    mor_quantize_packed_policy(q, &wt, th, 1, pol, ws, fa, cfg)
                 },
                 || {
                     let xt = x2d.transpose();
-                    mor_quantize_policy(q, &xt, th, 0, pol, xs, cfg)
+                    mor_quantize_policy(q, &xt, th, 0, pol, xs, fa, cfg)
                 },
             )
         },
@@ -854,7 +902,7 @@ fn linear_bwd_scalar(
     dy2d: &Tensor,
     cfg: &Parallelism,
 ) -> (Tensor, Tensor) {
-    let (q, th, pol) = (env.quant, env.th, env.policy);
+    let (q, th, pol, fa) = (env.quant, env.th, env.policy, env.faults);
     let xs = TensorScope::new(TensorClass::Input, layer, env.step);
     let ws = TensorScope::new(TensorClass::Weight, layer, env.step);
     let gs = TensorScope::new(TensorClass::Grad, layer, env.step);
@@ -863,12 +911,12 @@ fn linear_bwd_scalar(
         || {
             par::join2(
                 cfg,
-                || mor_quantize_policy(q, dy2d, th, 0, pol, gs, cfg),
+                || mor_quantize_policy(q, dy2d, th, 0, pol, gs, fa, cfg),
                 || {
                     if q.partition.direction_invariant() {
                         None
                     } else {
-                        Some(mor_quantize_policy(q, dy2d, th, 1, pol, gs, cfg))
+                        Some(mor_quantize_policy(q, dy2d, th, 1, pol, gs, fa, cfg))
                     }
                 },
             )
@@ -878,11 +926,11 @@ fn linear_bwd_scalar(
                 cfg,
                 || {
                     let wt = w.transpose();
-                    mor_quantize_policy(q, &wt, th, 1, pol, ws, cfg)
+                    mor_quantize_policy(q, &wt, th, 1, pol, ws, fa, cfg)
                 },
                 || {
                     let xt = x2d.transpose();
-                    mor_quantize_policy(q, &xt, th, 0, pol, xs, cfg)
+                    mor_quantize_policy(q, &xt, th, 0, pol, xs, fa, cfg)
                 },
             )
         },
@@ -1200,6 +1248,19 @@ pub struct HostTrainer {
     /// state so a delayed-scaling recipe slots in without a format
     /// change).
     amax_hist: Vec<AmaxHistory>,
+    /// Active fault-injection plan (chaos testing); `None` in normal
+    /// runs.
+    faults: Option<Arc<FaultPlan>>,
+    /// Numeric-guard mode: scan gradients for non-finite values each
+    /// step and skip the Adam update when any are found (ladder rung 1).
+    skip_nonfinite: bool,
+    /// Per-slot amaxes observed by the last step (guard telemetry).
+    last_amax: Vec<f32>,
+    /// Non-finite gradient values counted by the last step's scan (0
+    /// when `skip_nonfinite` is off).
+    last_nonfinite: u64,
+    /// Whether the last step skipped its update.
+    last_skipped: bool,
 }
 
 impl HostTrainer {
@@ -1219,7 +1280,46 @@ impl HostTrainer {
         let amax_hist =
             vec![AmaxHistory::new(AMAX_HIST_WINDOW); QuantTensorId::count(&model)];
         let policy: PolicyRef = Arc::new(MorThresholdPolicy);
-        HostTrainer { model, quant, par, policy, params, m, v, amax_hist }
+        HostTrainer {
+            model,
+            quant,
+            par,
+            policy,
+            params,
+            m,
+            v,
+            amax_hist,
+            faults: None,
+            skip_nonfinite: false,
+            last_amax: Vec::new(),
+            last_nonfinite: 0,
+            last_skipped: false,
+        }
+    }
+
+    /// Install (or clear) the fault-injection plan for this session.
+    pub fn set_faults(&mut self, faults: Option<Arc<FaultPlan>>) {
+        self.faults = faults;
+    }
+
+    /// Toggle the guard's non-finite gradient scan + skip-step rung.
+    pub fn set_skip_nonfinite(&mut self, on: bool) {
+        self.skip_nonfinite = on;
+    }
+
+    /// Per-slot amaxes the last step observed.
+    pub fn last_amax(&self) -> &[f32] {
+        &self.last_amax
+    }
+
+    /// Non-finite gradient values the last step's scan counted.
+    pub fn last_nonfinite_grads(&self) -> u64 {
+        self.last_nonfinite
+    }
+
+    /// Whether the last step skipped its parameter update.
+    pub fn last_update_skipped(&self) -> bool {
+        self.last_skipped
     }
 
     /// Replace the decision policy (builder style, for session setup).
@@ -1299,11 +1399,20 @@ impl HostTrainer {
         check_tokens(tokens, self.model.vocab_size)?;
         let n_slots = QuantTensorId::count(&self.model);
         let mut stats = StepStats::new(n_slots);
+        let step1 = adam_t as u64;
+        if let Some(fp) = &self.faults {
+            // Armed on this thread, consumed by the first join2 of the
+            // forward pass (linear_fwd calls join2 unconditionally).
+            if fp.worker_panic_due(step1) {
+                crate::faults::arm_worker_panic();
+            }
+        }
         let env = StepEnv {
             quant: &self.quant,
             th,
             policy: self.policy.as_ref(),
-            step: adam_t as u64,
+            step: step1,
+            faults: self.faults.as_deref(),
         };
         let (logits, cache) = forward(
             &self.model,
@@ -1329,27 +1438,82 @@ impl HostTrainer {
             &self.par,
         );
 
+        // Fault injection, gradient seeds: poison one element of one
+        // gradient tensor, after backward and before the update — the
+        // exact corruption the guard's scan must catch.
+        let mut grads = grads;
+        let seeded = self
+            .faults
+            .as_ref()
+            .map_or(Vec::new(), |fp| fp.seeds_due(step1));
+        for (si, (kind, site)) in seeded.iter().enumerate() {
+            if *site != crate::faults::SeedSite::Grad {
+                continue;
+            }
+            let fp = self.faults.as_ref().expect("seeds came from the plan");
+            let mut rng = fp.seed_target_stream(step1, si as u64);
+            let pi = rng.usize_in(0, grads.len() - 1);
+            let ei = rng.usize_in(0, grads[pi].len().max(1) - 1);
+            grads[pi].data_mut()[ei] = kind.value();
+        }
+
         // Advance the per-slot delayed-scaling histories with the
         // amaxes this step observed (checkpointable telemetry).
         for (h, &a) in self.amax_hist.iter_mut().zip(stats.amax.iter()) {
             h.push(a);
         }
+        self.last_amax = stats.amax.clone();
+        self.last_nonfinite = 0;
+        self.last_skipped = false;
 
-        let bc1 = 1.0 - ADAM_B1.powf(adam_t);
-        let bc2 = 1.0 - ADAM_B2.powf(adam_t);
-        for ((p, g), (mi, vi)) in
-            self.params.iter_mut().zip(&grads).zip(self.m.iter_mut().zip(self.v.iter_mut()))
-        {
-            for i in 0..p.len() {
-                let gv = g.data()[i];
-                let m_new = ADAM_B1 * mi.data()[i] + (1.0 - ADAM_B1) * gv;
-                let v_new = ADAM_B2 * vi.data()[i] + (1.0 - ADAM_B2) * gv * gv;
-                mi.data_mut()[i] = m_new;
-                vi.data_mut()[i] = v_new;
-                let mhat = m_new / bc1;
-                let vhat = v_new / bc2;
-                p.data_mut()[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+        // Guard rung 1: scan gradients for non-finite values; a single
+        // one poisons Adam state and the parameters it feeds, so the
+        // whole update is skipped (optimizer state untouched).
+        if self.skip_nonfinite {
+            let mut bad = 0u64;
+            for g in &grads {
+                for v in g.data() {
+                    if !v.is_finite() {
+                        bad += 1;
+                    }
+                }
             }
+            self.last_nonfinite = bad;
+        }
+        let do_update = !(self.skip_nonfinite && self.last_nonfinite > 0);
+        if do_update {
+            let bc1 = 1.0 - ADAM_B1.powf(adam_t);
+            let bc2 = 1.0 - ADAM_B2.powf(adam_t);
+            for ((p, g), (mi, vi)) in
+                self.params.iter_mut().zip(&grads).zip(self.m.iter_mut().zip(self.v.iter_mut()))
+            {
+                for i in 0..p.len() {
+                    let gv = g.data()[i];
+                    let m_new = ADAM_B1 * mi.data()[i] + (1.0 - ADAM_B1) * gv;
+                    let v_new = ADAM_B2 * vi.data()[i] + (1.0 - ADAM_B2) * gv * gv;
+                    mi.data_mut()[i] = m_new;
+                    vi.data_mut()[i] = v_new;
+                    let mhat = m_new / bc1;
+                    let vhat = v_new / bc2;
+                    p.data_mut()[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+                }
+            }
+        } else {
+            self.last_skipped = true;
+        }
+
+        // Fault injection, weight seeds: poison one parameter element
+        // *after* the update — corruption no gradient scan can see,
+        // forcing the guard's param-norm check and the rewind rung.
+        for (si, (kind, site)) in seeded.iter().enumerate() {
+            if *site != crate::faults::SeedSite::Weight {
+                continue;
+            }
+            let fp = self.faults.as_ref().expect("seeds came from the plan");
+            let mut rng = fp.seed_target_stream(step1, 0x10 + si as u64);
+            let pi = rng.usize_in(0, self.params.len() - 1);
+            let ei = rng.usize_in(0, self.params[pi].len().max(1) - 1);
+            self.params[pi].data_mut()[ei] = kind.value();
         }
         Ok((loss, stats.relerr, stats.fallback))
     }
@@ -1382,7 +1546,8 @@ pub fn host_eval_tensors(
     let quant = HostQuant::baseline();
     // Baseline recipe: no quantization decisions run, so the policy is
     // inert here — eval scores are policy-independent by construction.
-    let env = StepEnv { quant: &quant, th: 1.0, policy: &MorThresholdPolicy, step: 0 };
+    let env =
+        StepEnv { quant: &quant, th: 1.0, policy: &MorThresholdPolicy, step: 0, faults: None };
     let (logits, _) = forward(model, &env, params, tokens, batch, &mut stats, false, cfg);
     let mut n = 0f64;
     let mut loss = 0f64;
@@ -1497,6 +1662,7 @@ mod tests {
                 0,
                 &MorThresholdPolicy,
                 TensorScope::default(),
+                None,
                 &cfg,
             );
             assert_eq!(a, b, "{recipe} output");
@@ -1508,8 +1674,16 @@ mod tests {
         let (_, re, fb) = mor_quantize(&q, &wild, 0.045, 0, &cfg);
         assert!(re >= 0.045 && fb == 1.0);
         let all_e4m3 = StaticAssignmentPolicy { table: [ReprType::E4M3; 3] };
-        let (out, re, fb) =
-            mor_quantize_policy(&q, &wild, 0.045, 0, &all_e4m3, TensorScope::default(), &cfg);
+        let (out, re, fb) = mor_quantize_policy(
+            &q,
+            &wild,
+            0.045,
+            0,
+            &all_e4m3,
+            TensorScope::default(),
+            None,
+            &cfg,
+        );
         assert!(re >= 0.045, "telemetry is policy-independent");
         assert_eq!(fb, 0.0, "static policy accepts regardless of relerr");
         assert_ne!(out, wild, "accepted tensor is actually quantized");

@@ -30,7 +30,8 @@ pub struct Knob {
 
 /// Every environment knob the crate reads, in README table order.
 /// `Parallelism::auto` resolves the first four; `mor::policy::auto`
-/// resolves `MOR_POLICY`.
+/// resolves `MOR_POLICY`; `faults::auto` and `coordinator::guard::auto`
+/// resolve `MOR_FAULTS` / `MOR_GUARD`; `main` resolves `MOR_CKPT_KEEP`.
 pub const KNOBS: &[Knob] = &[
     Knob {
         env: "MOR_THREADS",
@@ -62,6 +63,26 @@ pub const KNOBS: &[Knob] = &[
         default_desc: "threshold",
         meaning: "decision policy: `threshold`, `metric[=BUDGET]` or \
                   `static[=INPUT,WEIGHT,GRAD]`",
+    },
+    Knob {
+        env: "MOR_FAULTS",
+        flag: Some("--faults SPEC"),
+        default_desc: "unset",
+        meaning: "deterministic fault schedule, e.g. \
+                  `nan:grad@step=7;bitflip:block@p=1e-4` (host backend only)",
+    },
+    Knob {
+        env: "MOR_GUARD",
+        flag: Some("--guard SPEC"),
+        default_desc: "off",
+        meaning: "numeric guard: `on`, `off` or \
+                  `skip=K,quarantine=N,rewinds=R,spike=F`",
+    },
+    Knob {
+        env: "MOR_CKPT_KEEP",
+        flag: Some("--ckpt-keep K"),
+        default_desc: "keep all",
+        meaning: "checkpoint ring retention: keep only the newest K files",
     },
 ];
 
@@ -166,7 +187,10 @@ mod tests {
                 "MOR_PAR_MIN_BLOCK",
                 "MOR_SCALAR_KERNELS",
                 "MOR_NO_SIMD",
-                "MOR_POLICY"
+                "MOR_POLICY",
+                "MOR_FAULTS",
+                "MOR_GUARD",
+                "MOR_CKPT_KEEP"
             ]
         );
     }

@@ -1130,6 +1130,27 @@ where
     FA: FnOnce() -> A,
     FB: FnOnce() -> B + Send,
 {
+    // Deterministic fault injection: when the calling thread armed a
+    // worker panic (`--faults panic:worker@step=N`), the offloaded
+    // closure panics instead of computing — on the pool path this
+    // exercises the real catch_unwind → record_panic → resume_unwind
+    // machinery; serial and spawn paths panic in the equivalent place.
+    if crate::faults::take_worker_panic() {
+        let fb = move || -> B {
+            let _keep = fb;
+            panic!("{}", crate::faults::WORKER_PANIC_MSG);
+        };
+        return join2_impl(cfg, fa, fb);
+    }
+    join2_impl(cfg, fa, fb)
+}
+
+fn join2_impl<A, B, FA, FB>(cfg: &Parallelism, fa: FA, fb: FB) -> (A, B)
+where
+    B: Send,
+    FA: FnOnce() -> A,
+    FB: FnOnce() -> B + Send,
+{
     if cfg.threads <= 1 {
         let a = fa();
         let b = fb();

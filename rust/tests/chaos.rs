@@ -1,0 +1,460 @@
+//! The robustness layer's proof obligations:
+//!
+//! * the fault-spec and guard-spec grammars are strict — a full
+//!   accept/reject matrix, with canonical `describe()` round-trips;
+//! * a **fault-free guarded run is bitwise identical to an unguarded
+//!   one** at 1, 2 and 13 threads (the quarantine wrapper is
+//!   transparent while empty);
+//! * every fault class is detected and survived: seeded NaN gradients
+//!   are skip-stepped and quarantined, seeded NaN weights and worker
+//!   panics trigger a checkpoint rewind whose recovered trajectory is
+//!   **bitwise identical to a clean run**, block bit-flips are caught
+//!   and quarantined, and torn checkpoint saves are walked past;
+//! * the checkpoint ring is crash-safe: CRC-corrupt and torn files are
+//!   detected by `TrainCheckpoint::load`, `--auto-resume` walks the
+//!   ring newest → oldest past them (sweeping stale save temps), and
+//!   `--ckpt-keep` prunes retention.
+
+use mor::coordinator::checkpoint::{scan_ring, TrainCheckpoint};
+use mor::coordinator::guard::{parse_guard, GuardAction, GuardConfig};
+use mor::coordinator::trainer::{TrainOutcome, Trainer, TrainerOptions};
+use mor::faults::parse_faults;
+use mor::model::config::{ModelConfig, TrainConfig};
+use mor::runtime::Runtime;
+use mor::util::par::Parallelism;
+use std::path::PathBuf;
+
+const ARTIFACT: &str = "train_mor_tensor_block";
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mor_chaos_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A short host training run with chaos-specific options layered on by
+/// the `tweak` closure. The out dir is the caller's to clean up (the
+/// ring tests inspect it after the run).
+fn run_in(
+    dir: &std::path::Path,
+    artifact: &str,
+    steps: u64,
+    par: &Parallelism,
+    tweak: impl FnOnce(&mut TrainerOptions),
+) -> anyhow::Result<TrainOutcome> {
+    let rt = Runtime::host(ModelConfig::TINY);
+    let trainer = Trainer::new(&rt, TrainConfig::config1(steps));
+    let mut opts = TrainerOptions::new(artifact, steps, dir.to_path_buf());
+    opts.val_every = 1;
+    opts.quiet = true;
+    opts.parallelism = Some(par.clone());
+    tweak(&mut opts);
+    trainer.run(&opts)
+}
+
+fn guarded(opts: &mut TrainerOptions) {
+    opts.guard = Some(GuardConfig::default());
+}
+
+fn with_faults(opts: &mut TrainerOptions, spec: &str) {
+    opts.faults = parse_faults(Some(spec)).expect("valid fault spec");
+}
+
+fn thread_sweep() -> [(&'static str, Parallelism); 3] {
+    [
+        ("serial", Parallelism::serial()),
+        ("pooled2", Parallelism::pooled(2, 1)),
+        ("pooled13", Parallelism::pooled(13, 1)),
+    ]
+}
+
+fn count(outcome: &TrainOutcome, action: GuardAction) -> usize {
+    outcome.guard_events.iter().filter(|e| e.action == action).count()
+}
+
+fn assert_outcomes_bitwise_eq(a: &TrainOutcome, b: &TrainOutcome, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(ra.step, rb.step, "{what}");
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{what}: train loss at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.val_loss.to_bits(),
+            rb.val_loss.to_bits(),
+            "{what}: val loss at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.bf16_fallback_rate.to_bits(),
+            rb.bf16_fallback_rate.to_bits(),
+            "{what}: fallback at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.mean_relerr.to_bits(),
+            rb.mean_relerr.to_bits(),
+            "{what}: relerr at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.param_norm.to_bits(),
+            rb.param_norm.to_bits(),
+            "{what}: param norm at step {}",
+            ra.step
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grammar
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fault_grammar_accepts_and_round_trips() {
+    assert!(parse_faults(None).unwrap().is_none());
+    let spec = parse_faults(Some(
+        "nan:grad@step=7;inf:weight@step=9;bitflip:block@p=1e-4;panic:worker@step=11;\
+         torn-save@ckpt=2",
+    ))
+    .unwrap()
+    .unwrap();
+    assert_eq!(spec.faults.len(), 5);
+    // Canonical spelling round-trips (1e-4 normalizes to 0.0001).
+    let canon = spec.describe();
+    assert_eq!(
+        canon,
+        "nan:grad@step=7;inf:weight@step=9;bitflip:block@p=0.0001;panic:worker@step=11;\
+         torn-save@ckpt=2"
+    );
+    assert_eq!(parse_faults(Some(&canon)).unwrap().unwrap(), spec);
+    // Entry-level whitespace is tolerated.
+    let ws = parse_faults(Some(" nan:grad@step=7 ; inf:grad@step=2 ")).unwrap().unwrap();
+    assert_eq!(ws.faults.len(), 2);
+    // Boundary probability: p=1 is legal (every block hit).
+    assert!(parse_faults(Some("bitflip:block@p=1")).is_ok());
+}
+
+#[test]
+fn fault_grammar_rejects_malformed() {
+    for bad in [
+        "",                       // empty spec
+        ";",                      // empty entries
+        "nan:grad@step=7;",       // trailing empty entry
+        "nan@step=7",             // seed without a site
+        "nan:tensor@step=7",      // unknown seed site
+        "nan:grad",               // missing '@'
+        "nan:grad@step",          // argument is not key=value
+        "nan:grad@step=0",        // before the first step
+        "nan:grad@step=x",        // non-numeric
+        "nan:grad@p=3",           // wrong key for a seed
+        "bitflip@p=0.5",          // bitflip without the block site
+        "bitflip:worker@p=0.5",   // wrong bitflip site
+        "bitflip:block@p=0",      // zero probability never fires
+        "bitflip:block@p=1.5",    // out of (0, 1]
+        "bitflip:block@p=-0.1",   // negative
+        "bitflip:block@p=nan",    // non-finite
+        "bitflip:block@step=3",   // wrong key for bitflip
+        "panic@step=3",           // panic without the worker site
+        "panic:block@step=3",     // wrong panic site
+        "panic:worker@step=0",    // before the first step
+        "torn-save:block@ckpt=1", // torn-save takes no site
+        "torn-save@step=1",       // wrong key for torn-save
+        "torn-save@ckpt=0",       // save indices are 1-based
+        "blort:worker@step=3",    // unknown fault kind
+    ] {
+        assert!(parse_faults(Some(bad)).is_err(), "spec {bad:?} must be rejected");
+    }
+}
+
+#[test]
+fn guard_grammar_accepts_and_rejects() {
+    assert!(parse_guard(None).unwrap().is_none());
+    assert!(parse_guard(Some("off")).unwrap().is_none());
+    assert_eq!(parse_guard(Some("on")).unwrap().unwrap(), GuardConfig::default());
+    let cfg = parse_guard(Some("skip=1,quarantine=4,rewinds=2,spike=5")).unwrap().unwrap();
+    assert_eq!(cfg.skip_limit, 1);
+    assert_eq!(cfg.quarantine_steps, 4);
+    assert_eq!(cfg.max_rewinds, 2);
+    assert_eq!(cfg.spike_factor, 5.0);
+    // `on` composes with overrides; describe() round-trips.
+    let composed = parse_guard(Some("on,quarantine=4")).unwrap().unwrap();
+    assert_eq!(composed.quarantine_steps, 4);
+    assert_eq!(composed.skip_limit, GuardConfig::default().skip_limit);
+    assert_eq!(parse_guard(Some(&cfg.describe())).unwrap().unwrap(), cfg);
+    for bad in [
+        "",             // empty
+        "banana",       // not a setting
+        "skip",         // not key=value
+        "skip=x",       // non-numeric
+        "quarantine=0", // zero-length demotion
+        "rewinds=-1",   // negative
+        "spike=1.0",    // must be > 1
+        "spike=0.5",    // must be > 1
+        "spike=inf",    // must be finite
+        "spike=nan",    // must be finite
+        "off,skip=1",   // off cannot be combined
+        "skip=1,,",     // empty setting
+    ] {
+        assert!(parse_guard(Some(bad)).is_err(), "guard spec {bad:?} must be rejected");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The transparency contract
+// ---------------------------------------------------------------------------
+
+/// With no faults and no anomalies, arming the guard changes nothing:
+/// the quarantine wrapper is empty, the skip scan counts zero, and the
+/// run is bitwise identical to an unguarded one at any thread count.
+#[test]
+fn fault_free_guarded_equals_unguarded_bitwise() {
+    for (label, par) in thread_sweep() {
+        let d_plain = tmpdir(&format!("plain_{label}"));
+        let d_guard = tmpdir(&format!("guard_{label}"));
+        let plain = run_in(&d_plain, ARTIFACT, 4, &par, |_| {}).unwrap();
+        let armed = run_in(&d_guard, ARTIFACT, 4, &par, guarded).unwrap();
+        assert_outcomes_bitwise_eq(&plain, &armed, label);
+        assert!(armed.guard_events.is_empty(), "{label}: no interventions expected");
+        std::fs::remove_dir_all(d_plain).ok();
+        std::fs::remove_dir_all(d_guard).ok();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault classes: detect and survive
+// ---------------------------------------------------------------------------
+
+/// A seeded NaN gradient is caught by the pre-update scan: the update
+/// is skipped (optimizer state untouched), the tensors are quarantined
+/// to BF16, and the run finishes with a finite loss — at 1, 2 and 13
+/// threads. Without the guard the same fault corrupts the parameters
+/// and the loss goes (and stays) non-finite.
+#[test]
+fn nan_grad_fault_is_skipped_and_survived() {
+    for (label, par) in thread_sweep() {
+        let dir = tmpdir(&format!("nangrad_{label}"));
+        let out = run_in(&dir, ARTIFACT, 6, &par, |o| {
+            guarded(o);
+            with_faults(o, "nan:grad@step=3");
+        })
+        .unwrap();
+        assert!(
+            out.final_train_loss.is_finite(),
+            "{label}: guarded run must end finite, got {}",
+            out.final_train_loss
+        );
+        assert!(count(&out, GuardAction::SkipStep) >= 1, "{label}: expected a skip");
+        assert!(
+            count(&out, GuardAction::Quarantine) >= 1,
+            "{label}: expected a quarantine"
+        );
+        assert_eq!(count(&out, GuardAction::Rewind), 0, "{label}: no rewind needed");
+        // The intervention log lands next to the metrics.
+        let gcsv = dir.join(format!("{ARTIFACT}.config1.guard.csv"));
+        let text = std::fs::read_to_string(&gcsv).expect("guard.csv written");
+        assert!(text.starts_with("step,action,detail\n"), "guard.csv header");
+        assert!(text.contains("skip_step"), "guard.csv records the skip");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    // Control: the identical fault without a guard poisons the run.
+    let dir = tmpdir("nangrad_unguarded");
+    let out = run_in(&dir, ARTIFACT, 6, &Parallelism::serial(), |o| {
+        with_faults(o, "nan:grad@step=3");
+    })
+    .unwrap();
+    assert!(
+        !out.final_train_loss.is_finite(),
+        "unguarded run should end non-finite, got {}",
+        out.final_train_loss
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// A NaN seeded into the *parameters* (post-update) cannot be skipped
+/// away — the guard rewinds to the last good checkpoint, and because
+/// the consumed one-shot fault does not re-fire, the recovered
+/// trajectory is bitwise identical to a clean guarded run.
+#[test]
+fn weight_nan_rewind_recovers_bitwise() {
+    for (label, par) in thread_sweep() {
+        let d_clean = tmpdir(&format!("wnan_clean_{label}"));
+        let d_fault = tmpdir(&format!("wnan_fault_{label}"));
+        let clean = run_in(&d_clean, ARTIFACT, 8, &par, |o| {
+            guarded(o);
+            o.ckpt_every = 2;
+        })
+        .unwrap();
+        let recovered = run_in(&d_fault, ARTIFACT, 8, &par, |o| {
+            guarded(o);
+            o.ckpt_every = 2;
+            with_faults(o, "nan:weight@step=5");
+        })
+        .unwrap();
+        assert_outcomes_bitwise_eq(&clean, &recovered, label);
+        assert_eq!(count(&recovered, GuardAction::Rewind), 1, "{label}: one rewind");
+        assert!(recovered.records.iter().all(|r| r.param_norm.is_finite()), "{label}");
+        std::fs::remove_dir_all(d_clean).ok();
+        std::fs::remove_dir_all(d_fault).ok();
+    }
+}
+
+/// A worker panic mid-step unwinds out of the parallel section without
+/// committing anything; the guard catches the panic, rewinds, and the
+/// replayed trajectory is bitwise identical to a clean guarded run —
+/// on the serial path and on 2- and 13-thread pools.
+#[test]
+fn worker_panic_rewind_recovers_bitwise() {
+    for (label, par) in thread_sweep() {
+        let d_clean = tmpdir(&format!("panic_clean_{label}"));
+        let d_fault = tmpdir(&format!("panic_fault_{label}"));
+        let clean = run_in(&d_clean, ARTIFACT, 8, &par, |o| {
+            guarded(o);
+            o.ckpt_every = 2;
+        })
+        .unwrap();
+        let recovered = run_in(&d_fault, ARTIFACT, 8, &par, |o| {
+            guarded(o);
+            o.ckpt_every = 2;
+            with_faults(o, "panic:worker@step=5");
+        })
+        .unwrap();
+        assert_outcomes_bitwise_eq(&clean, &recovered, label);
+        assert_eq!(count(&recovered, GuardAction::Rewind), 1, "{label}: one rewind");
+        std::fs::remove_dir_all(d_clean).ok();
+        std::fs::remove_dir_all(d_fault).ok();
+    }
+}
+
+/// Silent block corruption (an exponent bit-flip in every quantized
+/// block, p=1) blows up the first step's numerics; the guard skips the
+/// poisoned update and quarantines everything to BF16, after which the
+/// fault has no remaining surface — the run finishes finite without
+/// spending a rewind.
+#[test]
+fn bitflip_fault_is_quarantined_and_survived() {
+    for (label, par) in thread_sweep() {
+        let dir = tmpdir(&format!("bitflip_{label}"));
+        let out = run_in(&dir, "train_mor_subtensor_three_way", 6, &par, |o| {
+            guarded(o);
+            with_faults(o, "bitflip:block@p=1");
+        })
+        .unwrap();
+        assert!(
+            out.final_train_loss.is_finite(),
+            "{label}: guarded run must end finite, got {}",
+            out.final_train_loss
+        );
+        assert!(count(&out, GuardAction::SkipStep) >= 1, "{label}: expected a skip");
+        assert!(
+            count(&out, GuardAction::Quarantine) >= 1,
+            "{label}: expected a quarantine"
+        );
+        assert_eq!(count(&out, GuardAction::Rewind), 0, "{label}: no rewind needed");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}
+
+/// The torn-save fault truncates one ring entry mid-write; training is
+/// unaffected (the torn file just sits there unloadable), and
+/// auto-resume later walks past it to the newest intact checkpoint.
+#[test]
+fn torn_save_fault_is_survived_by_auto_resume() {
+    let par = Parallelism::serial();
+    let d_clean = tmpdir("torn_clean");
+    let d_fault = tmpdir("torn_fault");
+    let clean = run_in(&d_clean, ARTIFACT, 8, &par, |o| o.ckpt_every = 2).unwrap();
+    let torn = run_in(&d_fault, ARTIFACT, 8, &par, |o| {
+        o.ckpt_every = 2;
+        with_faults(o, "torn-save@ckpt=2");
+    })
+    .unwrap();
+    // The fault only damages the ring, never the trajectory.
+    assert_outcomes_bitwise_eq(&clean, &torn, "torn-save");
+    let p4 = d_fault.join(format!("{ARTIFACT}.step4.ckpt"));
+    assert!(TrainCheckpoint::load(&p4).is_err(), "2nd save (step4) must be torn");
+    assert!(TrainCheckpoint::load(&d_fault.join(format!("{ARTIFACT}.step2.ckpt"))).is_ok());
+    assert!(TrainCheckpoint::load(&d_fault.join(format!("{ARTIFACT}.step6.ckpt"))).is_ok());
+
+    // Strand the run before the torn entry: only step2 (good) and
+    // step4 (torn) remain. Auto-resume must skip step4, restart from
+    // step2, and land bitwise on the continuous trajectory.
+    std::fs::remove_file(d_fault.join(format!("{ARTIFACT}.step6.ckpt"))).unwrap();
+    std::fs::remove_file(d_fault.join(format!("{ARTIFACT}.step8.ckpt"))).unwrap();
+    let resumed = run_in(&d_fault, ARTIFACT, 8, &par, |o| {
+        o.ckpt_every = 2;
+        o.auto_resume = true;
+    })
+    .unwrap();
+    assert_outcomes_bitwise_eq(&clean, &resumed, "auto-resume past torn");
+    std::fs::remove_dir_all(d_clean).ok();
+    std::fs::remove_dir_all(d_fault).ok();
+}
+
+// ---------------------------------------------------------------------------
+// The crash-safe ring
+// ---------------------------------------------------------------------------
+
+/// CRC-corrupt and torn ring entries are detected at load; auto-resume
+/// sweeps stale save temps and walks newest → oldest to the first
+/// loadable checkpoint, and the resumed run is bitwise identical to
+/// the uninterrupted one.
+#[test]
+fn auto_resume_walks_past_corrupt_and_torn_ring_entries() {
+    let par = Parallelism::serial();
+    let d_cont = tmpdir("ring_cont");
+    let d_ring = tmpdir("ring");
+    let continuous = run_in(&d_cont, ARTIFACT, 8, &par, |o| o.ckpt_every = 2).unwrap();
+    run_in(&d_ring, ARTIFACT, 8, &par, |o| o.ckpt_every = 2).unwrap();
+
+    // Corrupt the newest entry with a mid-file bit-flip: the CRC
+    // trailer must reject it.
+    let p8 = d_ring.join(format!("{ARTIFACT}.step8.ckpt"));
+    let mut bytes = std::fs::read(&p8).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&p8, &bytes).unwrap();
+    assert!(TrainCheckpoint::load(&p8).is_err(), "bit-flipped checkpoint must not load");
+
+    // Tear the next one (simulated crash mid-write).
+    let p6 = d_ring.join(format!("{ARTIFACT}.step6.ckpt"));
+    let b6 = std::fs::read(&p6).unwrap();
+    std::fs::write(&p6, &b6[..b6.len() / 2]).unwrap();
+    assert!(TrainCheckpoint::load(&p6).is_err(), "torn checkpoint must not load");
+
+    // And leave a stale save temp from a "killed" process.
+    let stale = d_ring.join(format!("{ARTIFACT}.step9.ckpt.tmp.4242"));
+    std::fs::write(&stale, b"junk").unwrap();
+
+    // Auto-resume: walks 8 (corrupt) -> 6 (torn) -> 4 (loads), sweeps
+    // the temp, and finishes the run bitwise-identically.
+    let resumed = run_in(&d_ring, ARTIFACT, 8, &par, |o| {
+        o.ckpt_every = 2;
+        o.auto_resume = true;
+    })
+    .unwrap();
+    assert_outcomes_bitwise_eq(&continuous, &resumed, "auto-resume");
+    assert!(!stale.exists(), "stale temp file must be swept");
+    std::fs::remove_dir_all(d_cont).ok();
+    std::fs::remove_dir_all(d_ring).ok();
+}
+
+/// `--ckpt-keep K` retains only the newest K ring entries.
+#[test]
+fn ckpt_keep_prunes_the_ring() {
+    let dir = tmpdir("keep");
+    run_in(&dir, ARTIFACT, 6, &Parallelism::serial(), |o| {
+        o.ckpt_every = 1;
+        o.ckpt_keep = 2;
+    })
+    .unwrap();
+    let ring = scan_ring(&dir, ARTIFACT);
+    let steps: Vec<u64> = ring.iter().map(|(s, _)| *s).collect();
+    assert_eq!(steps, [6, 5], "only the newest two checkpoints survive");
+    std::fs::remove_dir_all(dir).ok();
+}
