@@ -7,7 +7,7 @@
 //! quantize-then-pack** for the MoR linear-operand path.
 //!
 //! `--json <path>` merges the rows into the machine-readable perf
-//! snapshot (`BENCH_7.json`); `--warmup-ms/--measure-ms/--min-batches`
+//! snapshot (`BENCH_9.json`); `--warmup-ms/--measure-ms/--min-batches`
 //! shrink the budgets for CI.
 
 use mor::formats::ReprType;

@@ -4,7 +4,7 @@
 //! paper's "dynamic decisions at runtime" claim.
 //!
 //! `--json <path>` merges the rows into the shared perf snapshot
-//! (`BENCH_7.json` in CI); `--warmup-ms` / `--measure-ms` /
+//! (`BENCH_9.json` in CI); `--warmup-ms` / `--measure-ms` /
 //! `--min-batches` shrink the budget for CI runs.
 
 use mor::mor::policy;

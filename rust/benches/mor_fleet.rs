@@ -1,0 +1,75 @@
+//! Fleet-scheduler overhead: wall-clock for N tenants' worth of
+//! training steps submitted through `coordinator::scheduler::run_fleet`
+//! versus the same steps run back-to-back, at N = 1 / 2 / 4 tenants on
+//! the shared pool. The `n1` row is the scheduler's fixed cost over a
+//! bare `Trainer::run` (one tenant, one slice, no preemption); the
+//! `n2`/`n4` rows show how run-granularity slices fill the pool.
+//!
+//! All runs are host-backend on the tiny preset with checkpointing and
+//! validation off (quantum 0, `ckpt_every` 0), so the rows measure
+//! scheduling + training compute, not ring I/O. `--json <path>` merges
+//! the rows into the shared perf snapshot (`BENCH_9.json`).
+
+use mor::coordinator::scheduler::{run_fleet, FleetOptions, Tenant};
+use mor::coordinator::trainer::TrainerOptions;
+use mor::model::config::{ModelConfig, TrainConfig};
+use mor::util::bench::{bench, report_throughput, BenchOptions, JsonSnapshot};
+use mor::util::cli::Args;
+use mor::util::par::Parallelism;
+use std::hint::black_box;
+use std::time::Duration;
+
+const STEPS: u64 = 3;
+
+fn fleet_of(n: usize, root: &std::path::Path, par: &Parallelism) -> Vec<Tenant> {
+    (0..n)
+        .map(|i| {
+            let id = format!("bench{i}");
+            let mut opts = TrainerOptions::new(
+                "train_mor_tensor_block",
+                STEPS,
+                root.join(&id),
+            );
+            opts.quiet = true;
+            opts.val_every = 0;
+            opts.parallelism = Some(par.clone());
+            Tenant::new(&id, ModelConfig::TINY, TrainConfig::config1(STEPS), opts)
+        })
+        .collect()
+}
+
+fn main() {
+    let args = Args::from_env();
+    let opts = BenchOptions {
+        warmup: Duration::from_millis(300),
+        measure: Duration::from_millis(1500),
+        min_batches: 2,
+    }
+    .with_args(&args);
+    let mut snap = JsonSnapshot::from_args("mor_fleet", &args);
+
+    let par = Parallelism::auto();
+    let root = std::env::temp_dir().join(format!("mor_fleet_bench_{}", std::process::id()));
+    println!("== fleet scheduler (tiny preset, {} steps/tenant, {} threads) ==", STEPS, par.threads);
+    for n in [1usize, 2, 4] {
+        let tenants = fleet_of(n, &root.join(format!("n{n}")), &par);
+        let mut fo = FleetOptions::new(par.clone());
+        fo.max_runs = n.max(1);
+        let steps_per_iter = (n as u64 * STEPS) as f64;
+        let r = bench(&format!("mor_fleet_n{n}"), &opts, || {
+            let out = run_fleet(black_box(&tenants), &fo).expect("bench fleet");
+            assert!(out.tenants.iter().all(|t| t.completed()));
+            black_box(out.rounds);
+        });
+        report_throughput(&format!("mor_fleet_n{n}"), &r, steps_per_iter, "step");
+        if let Some(s) = &mut snap {
+            s.record(&r);
+            s.record_throughput(&format!("mor_fleet_n{n}"), &r, steps_per_iter, "step");
+        }
+    }
+    std::fs::remove_dir_all(&root).ok();
+
+    if let Some(s) = &snap {
+        s.write(par.threads).expect("writing bench snapshot");
+    }
+}

@@ -7,7 +7,7 @@
 //! this bench quantifies the compute side).
 //!
 //! `--json <path>` merges the rows into the machine-readable perf
-//! snapshot (`BENCH_7.json`); `--warmup-ms/--measure-ms/--min-batches`
+//! snapshot (`BENCH_9.json`); `--warmup-ms/--measure-ms/--min-batches`
 //! shrink the budgets for CI.
 
 use mor::formats::bf16;

@@ -22,7 +22,7 @@
 //! degenerates to the blocked row (same code path).
 //!
 //! `--json <path>` merges the rows into the machine-readable perf
-//! snapshot (`BENCH_7.json`); `--warmup-ms/--measure-ms/--min-batches`
+//! snapshot (`BENCH_9.json`); `--warmup-ms/--measure-ms/--min-batches`
 //! shrink the budgets for CI.
 
 use mor::data::loader::BatchLoader;

@@ -1178,6 +1178,31 @@ impl TrainCheckpoint {
     pub fn counter(&self, name: &str) -> Option<u64> {
         self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
     }
+
+    /// Timing-free fingerprint of the checkpointed training state:
+    /// FNV-1a 64 over the v2 container image with the two
+    /// non-state fields normalized away — the metrics digest hash
+    /// (it covers CSV rows that carry the wall-clock `step_ms`
+    /// column) and the `ckpts_written` counter (a preempted run
+    /// writes extra suspension checkpoints its solo twin never
+    /// does). Everything else — params, Adam moments, loader
+    /// cursors, RNG streams, amax histories, decision stats, suite
+    /// trajectory, metrics row count, pinned options, guard state —
+    /// feeds the hash bit-for-bit, so two checkpoints fingerprint
+    /// equal iff they would resume into bitwise-identical runs.
+    /// This is what `tests/scheduler_equivalence.rs` compares.
+    pub fn state_fingerprint(&self) -> u64 {
+        let mut canon = self.clone();
+        canon.metrics = MetricsState::Digest { rows: self.metrics.rows(), hash: 0 };
+        canon.counters.retain(|(name, _)| name != "ckpts_written");
+        let image = canon.to_container().to_bytes_v2();
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in image {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -1340,6 +1365,27 @@ mod tests {
         let back3 = TrainCheckpoint::from_container(&tc3.to_container()).unwrap();
         assert_eq!(back3.guard_state, Some(vec![1, 2, 3, 4]));
         assert_eq!(back.guard_state, None, "unguarded runs carry no guard section");
+
+        // The timing-free fingerprint ignores exactly the two
+        // wall-clock artifacts — the metrics content hash (step_ms
+        // rides the hashed CSV rows) and the save counter — and is
+        // sensitive to everything else.
+        let fp = tc.state_fingerprint();
+        assert_eq!(back.state_fingerprint(), fp, "round-trip preserves the fingerprint");
+        let mut timing = tc.clone();
+        timing.metrics = MetricsState::Digest { rows: 1, hash: 0x1234 };
+        timing.counters = vec![("ckpts_written".into(), 99)];
+        assert_eq!(timing.state_fingerprint(), fp, "timing artifacts must not feed it");
+        let mut drifted = tc.clone();
+        drifted.session.params[0].data_mut()[0] += 1.0;
+        assert_ne!(drifted.state_fingerprint(), fp, "a param bit change must show");
+        let mut more_rows = tc.clone();
+        more_rows.metrics = MetricsState::Digest { rows: 2, hash: 0 };
+        assert_ne!(more_rows.state_fingerprint(), fp, "the row count is state");
+        let mut counted = tc.clone();
+        counted.counters.push(("train_batches".into(), 7));
+        assert_ne!(counted.state_fingerprint(), fp, "non-save counters are state");
+        assert_ne!(tc3.state_fingerprint(), fp, "guard state is state");
     }
 
     #[test]

@@ -8,7 +8,9 @@ pub mod checkpoint;
 pub mod eval;
 pub mod guard;
 pub mod logging;
+pub mod scheduler;
 pub mod trainer;
 
 pub use logging::{MetricsLogger, StepRecord};
+pub use scheduler::{FleetOptions, FleetOutcome, Tenant, TenantReport};
 pub use trainer::{TrainOutcome, Trainer, TrainerOptions};

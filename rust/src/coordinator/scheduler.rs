@@ -1,0 +1,454 @@
+//! The fleet scheduler: fair-share multiplexing of N concurrent
+//! training runs over one shared [`Parallelism`] pool, with
+//! checkpoint-backed preemption and per-tenant failure containment.
+//!
+//! ## Design
+//!
+//! A **tenant** is one training run (artifact + config + options +
+//! fair-share weight). The scheduler advances tenants in **rounds**:
+//! each round it picks up to `max_runs` runnable tenants by [stride
+//! scheduling](https://en.wikipedia.org/wiki/Stride_scheduling) — every
+//! tenant carries a *pass* value that grows by `STRIDE_ONE / weight`
+//! per slice it receives, and the tenants with the smallest pass run
+//! next, so over time each tenant's slice share converges to
+//! `weight / Σ weights` and no tenant starves. Ties break by the same
+//! largest-first rule [`par::weighted_order`] gives sweep items
+//! (descending weight, then index), and the selected tenants are
+//! submitted to the shared pool through [`par::par_map_weighted`] —
+//! run-granularity items on exactly the machinery that already
+//! schedules tensor-granularity work, nested chunk-parallelism and
+//! all (the pool's help-while-waiting protocol keeps tenant slices
+//! that are themselves chunk-parallel deadlock-free).
+//!
+//! ## Preemption contract
+//!
+//! A slice runs its tenant for `quantum` steps via
+//! `TrainerOptions::stop_after`, which forces a `MORCKPT2` checkpoint
+//! at the suspension point; the session is then dropped — eviction
+//! costs zero resident state — and the next slice `auto_resume`s from
+//! the tenant's own checkpoint ring. The PR 4 resume ≡ continuous
+//! contract makes this *bitwise* invisible: an interleaved tenant's
+//! trajectory, metrics rows (minus the wall-clock `step_ms` column),
+//! decision fractions and final checkpointed state are identical to
+//! the same run executed alone, at any thread count. That is not a
+//! design hope — `tests/scheduler_equivalence.rs` proves it.
+//!
+//! ## Containment
+//!
+//! Each slice runs under `catch_unwind`, so a tenant that panics (e.g.
+//! an injected worker panic with no guard to absorb it) or errors
+//! (rewind budget exhausted, corrupt state) becomes a *failed tenant*,
+//! not a dead fleet: its error is reported, its neighbors keep their
+//! slices, and — because guarded recovery (skip → BF16 quarantine →
+//! rewind, PR 8) runs *inside* the slice — a tenant with a guard
+//! usually never surfaces here at all. Guard state (strikes,
+//! quarantines, the rewind budget) lives in the `guard/state`
+//! checkpoint section, so it survives eviction like everything else.
+
+use super::trainer::{TrainOutcome, Trainer, TrainerOptions};
+use crate::model::config::{ModelConfig, TrainConfig};
+use crate::mor::policy;
+use crate::runtime::Runtime;
+use crate::util::par::{self, Parallelism};
+use anyhow::{bail, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// One training run under the scheduler.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    /// Unique tenant name (schedule log, reports).
+    pub id: String,
+    pub model: ModelConfig,
+    pub config: TrainConfig,
+    /// The run's own options: artifact, steps, out_dir, policy, guard,
+    /// faults, checkpoint cadence… The scheduler owns only the
+    /// preemption fields: `resume`/`auto_resume`/`stop_after` are
+    /// overwritten per slice.
+    pub opts: TrainerOptions,
+    /// Fair-share weight (≥ 1): slice share converges to
+    /// `weight / Σ weights`.
+    pub weight: usize,
+}
+
+impl Tenant {
+    pub fn new(id: &str, model: ModelConfig, config: TrainConfig, opts: TrainerOptions) -> Self {
+        Tenant { id: id.to_string(), model, config, opts, weight: 1 }
+    }
+
+    pub fn with_weight(mut self, weight: usize) -> Self {
+        self.weight = weight;
+        self
+    }
+}
+
+/// Fleet-level knobs.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// Maximum tenants resident (advancing) in one round — the
+    /// oversubscription cap (`--max-runs` / `MOR_MAX_RUNS`).
+    pub max_runs: usize,
+    /// Steps per slice; `0` runs every tenant to completion in its
+    /// first slice (no preemption — the policy-sweep shape).
+    pub quantum: u64,
+    /// The shared pool every slice is submitted to (and the default
+    /// engine handle for tenants that don't carry their own).
+    pub parallelism: Parallelism,
+    /// Silence the per-round narration.
+    pub quiet: bool,
+}
+
+impl FleetOptions {
+    pub fn new(parallelism: Parallelism) -> Self {
+        let max_runs = parallelism.threads.max(1);
+        FleetOptions { max_runs, quantum: 0, parallelism, quiet: true }
+    }
+}
+
+/// One schedule-log entry: tenant `tenant` advanced from `from_step`
+/// to `to_step` completed steps during round `round`. The log is
+/// deterministic (selection is a pure function of weights and history)
+/// and is what the starvation test audits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slice {
+    pub round: u64,
+    pub tenant: usize,
+    pub from_step: u64,
+    pub to_step: u64,
+}
+
+/// Per-tenant result.
+#[derive(Debug)]
+pub struct TenantReport {
+    pub id: String,
+    /// The final slice's outcome — which covers the *whole* run
+    /// (records replay the full prefix), so for a completed tenant
+    /// this is exactly what a solo `Trainer::run` would have returned.
+    /// `None` only for a tenant that failed before any slice finished.
+    pub outcome: Option<TrainOutcome>,
+    /// The containment verdict: `Some(error)` for a failed tenant.
+    pub error: Option<String>,
+    /// Slices this tenant received.
+    pub slices: u64,
+}
+
+impl TenantReport {
+    pub fn completed(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// The fleet's outcome: per-tenant reports (tenant order preserved)
+/// plus the full schedule log.
+#[derive(Debug)]
+pub struct FleetOutcome {
+    pub tenants: Vec<TenantReport>,
+    pub schedule: Vec<Slice>,
+    pub rounds: u64,
+}
+
+impl FleetOutcome {
+    /// The report for a tenant by id.
+    pub fn tenant(&self, id: &str) -> Option<&TenantReport> {
+        self.tenants.iter().find(|t| t.id == id)
+    }
+
+    /// Longest run of consecutive rounds (while the tenant was still
+    /// runnable) in which tenant `i` received no slice — the quantity
+    /// the fair-share bound constrains.
+    pub fn max_wait_rounds(&self, i: usize) -> u64 {
+        let mut scheduled: Vec<u64> =
+            self.schedule.iter().filter(|s| s.tenant == i).map(|s| s.round).collect();
+        scheduled.sort_unstable();
+        let mut max_gap = 0u64;
+        let mut prev: Option<u64> = None;
+        for r in scheduled {
+            if let Some(p) = prev {
+                max_gap = max_gap.max(r - p - 1);
+            } else {
+                max_gap = max_gap.max(r); // rounds waited before the first slice
+            }
+            prev = Some(r);
+        }
+        max_gap
+    }
+}
+
+/// Pass-value unit: one slice at weight 1 advances pass by this much,
+/// a weight-w tenant by `STRIDE_ONE / w`. Large enough that integer
+/// division keeps distinct strides for any sane weight.
+const STRIDE_ONE: u128 = 1 << 40;
+
+/// Consecutive no-progress slices tolerated before a tenant is failed
+/// (a livelock backstop — e.g. a fault plan that tears every save a
+/// fresh start ever reaches could otherwise loop forever).
+const MAX_STALLS: u32 = 3;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Status {
+    Runnable,
+    Done,
+    Failed(String),
+}
+
+/// Run every tenant to completion (or containment), multiplexed over
+/// `opts.parallelism` — see the module docs for the scheduling,
+/// preemption and containment contracts.
+pub fn run_fleet(tenants: &[Tenant], opts: &FleetOptions) -> Result<FleetOutcome> {
+    if tenants.is_empty() {
+        bail!("fleet has no tenants");
+    }
+    if opts.max_runs == 0 {
+        bail!("max_runs must be >= 1");
+    }
+    for (i, t) in tenants.iter().enumerate() {
+        if t.weight == 0 {
+            bail!("tenant {:?} has weight 0; weights must be >= 1", t.id);
+        }
+        if t.opts.resume.is_some() {
+            bail!("tenant {:?} sets resume; the scheduler owns resumption", t.id);
+        }
+        for u in &tenants[..i] {
+            if u.id == t.id {
+                bail!("duplicate tenant id {:?}", t.id);
+            }
+            // Metrics/stats files are keyed by (artifact, config) and
+            // the checkpoint ring by artifact alone, so colliding runs
+            // would corrupt each other's state on disk.
+            if u.opts.out_dir == t.opts.out_dir && u.opts.artifact == t.opts.artifact {
+                let slicing = opts.quantum > 0
+                    || t.opts.ckpt_every > 0
+                    || u.opts.ckpt_every > 0;
+                if slicing || u.config.name == t.config.name {
+                    bail!(
+                        "tenants {:?} and {:?} share out_dir {} and artifact {:?}; \
+                         their on-disk files would collide",
+                        u.id,
+                        t.id,
+                        t.opts.out_dir.display(),
+                        t.opts.artifact
+                    );
+                }
+            }
+        }
+    }
+
+    let n = tenants.len();
+    let mut status: Vec<Status> = vec![Status::Runnable; n];
+    let mut completed: Vec<u64> = vec![0; n];
+    let mut pass: Vec<u128> = vec![0; n];
+    let mut stalls: Vec<u32> = vec![0; n];
+    let mut slices: Vec<u64> = vec![0; n];
+    let mut outcomes: Vec<Option<TrainOutcome>> = (0..n).map(|_| None).collect();
+    let mut schedule: Vec<Slice> = Vec::new();
+    let mut round: u64 = 0;
+
+    while status.iter().any(|s| *s == Status::Runnable) {
+        // Stride selection: smallest pass first, ties by the
+        // largest-first weighted order (descending weight, then
+        // index) — the same total order `par::weighted_order` gives
+        // the dispatch below.
+        let mut resident: Vec<usize> =
+            (0..n).filter(|&i| status[i] == Status::Runnable).collect();
+        resident.sort_by_key(|&i| (pass[i], std::cmp::Reverse(tenants[i].weight), i));
+        resident.truncate(opts.max_runs);
+
+        let weights: Vec<usize> = resident.iter().map(|&i| tenants[i].weight).collect();
+        let before: Vec<u64> = resident.iter().map(|&i| completed[i]).collect();
+        let results: Vec<Result<TrainOutcome, String>> =
+            par::par_map_weighted(&opts.parallelism, &weights, |k| {
+                advance(&tenants[resident[k]], before[k], opts)
+            });
+
+        for (k, res) in results.into_iter().enumerate() {
+            let i = resident[k];
+            pass[i] += STRIDE_ONE / tenants[i].weight as u128;
+            slices[i] += 1;
+            match res {
+                Err(e) => {
+                    if !opts.quiet {
+                        println!("[fleet] tenant {} FAILED: {e}", tenants[i].id);
+                    }
+                    status[i] = Status::Failed(e);
+                }
+                Ok(out) => {
+                    let now = out.records.len() as u64;
+                    schedule.push(Slice {
+                        round,
+                        tenant: i,
+                        from_step: completed[i],
+                        to_step: now,
+                    });
+                    if now <= completed[i] {
+                        stalls[i] += 1;
+                        if stalls[i] >= MAX_STALLS {
+                            status[i] = Status::Failed(format!(
+                                "no progress in {MAX_STALLS} consecutive slices \
+                                 (stuck at step {now})"
+                            ));
+                        }
+                    } else {
+                        stalls[i] = 0;
+                    }
+                    completed[i] = now;
+                    let done = now >= tenants[i].opts.steps;
+                    if done {
+                        status[i] = Status::Done;
+                    }
+                    if !opts.quiet {
+                        println!(
+                            "[fleet] round {round}: {} -> step {now}/{}{}",
+                            tenants[i].id,
+                            tenants[i].opts.steps,
+                            if done { " (done)" } else { "" }
+                        );
+                    }
+                    outcomes[i] = Some(out);
+                }
+            }
+        }
+        round += 1;
+    }
+
+    let reports = tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| TenantReport {
+            id: t.id.clone(),
+            outcome: outcomes[i].take(),
+            error: match &status[i] {
+                Status::Failed(e) => Some(e.clone()),
+                _ => None,
+            },
+            slices: slices[i],
+        })
+        .collect();
+    Ok(FleetOutcome { tenants: reports, schedule, rounds: round })
+}
+
+/// One slice: build a fresh host runtime + trainer for the tenant,
+/// auto-resume its ring, run to the slice horizon (which force-writes
+/// the suspension checkpoint), and drop every session — the tenant
+/// holds no resident state between slices. Panics are contained into
+/// `Err` here so one tenant's crash never reaches the pool machinery
+/// of its neighbors.
+fn advance(tenant: &Tenant, from: u64, opts: &FleetOptions) -> Result<TrainOutcome, String> {
+    let mut o = tenant.opts.clone();
+    o.resume = None;
+    o.auto_resume = true;
+    o.stop_after = match opts.quantum {
+        0 => None,
+        q => Some((from + q).min(o.steps)),
+    };
+    if o.parallelism.is_none() {
+        o.parallelism = Some(opts.parallelism.clone());
+    }
+    let run = catch_unwind(AssertUnwindSafe(|| {
+        let par_run = o.parallelism.clone().expect("slice parallelism resolved above");
+        let pol = o.policy.clone().unwrap_or_else(policy::global);
+        let rt = Runtime::host_with(tenant.model, par_run, pol);
+        Trainer::new(&rt, tenant.config).run(&o)
+    }));
+    match run {
+        Ok(Ok(out)) => Ok(out),
+        Ok(Err(e)) => Err(format!("{e:#}")),
+        Err(payload) => Err(format!("slice panicked: {}", panic_text(payload.as_ref()))),
+    }
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Resolve `MOR_MAX_RUNS` strictly (library-side twin of the CLI's
+/// `--max-runs`); `fallback` when unset, a loud panic when malformed —
+/// the same contract as the other env autos.
+pub fn auto_max_runs(fallback: usize) -> usize {
+    match crate::util::env::parse_pos_int(
+        crate::util::env::var("MOR_MAX_RUNS").as_deref(),
+        "MOR_MAX_RUNS ",
+        "positive run count",
+        "unset it to default to the pool width",
+    ) {
+        Ok(v) => v.unwrap_or(fallback),
+        Err(msg) => panic!("{msg}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tenant(id: &str, steps: u64, weight: usize) -> Tenant {
+        let dir = std::env::temp_dir()
+            .join(format!("mor_sched_unit_{}_{id}", std::process::id()));
+        let mut opts = TrainerOptions::new("train_mor_tensor_block", steps, dir);
+        opts.quiet = true;
+        opts.val_every = 0;
+        Tenant::new(id, ModelConfig::TINY, TrainConfig::config1(steps), opts)
+            .with_weight(weight)
+    }
+
+    #[test]
+    fn fleet_rejects_malformed_configurations() {
+        let fo = FleetOptions::new(Parallelism::serial());
+        assert!(run_fleet(&[], &fo).is_err(), "empty fleet");
+
+        let mut zero_runs = fo.clone();
+        zero_runs.max_runs = 0;
+        assert!(run_fleet(&[tenant("a", 1, 1)], &zero_runs).is_err());
+
+        assert!(run_fleet(&[tenant("a", 1, 0)], &fo).is_err(), "weight 0");
+
+        let dup = [tenant("a", 1, 1), tenant("a", 1, 1)];
+        assert!(run_fleet(&dup, &fo).is_err(), "duplicate id");
+
+        let mut resuming = tenant("a", 1, 1);
+        resuming.opts.resume = Some("x.ckpt".into());
+        assert!(run_fleet(&[resuming], &fo).is_err(), "caller-owned resume");
+
+        // Same dir + artifact + config always collides; with slicing
+        // on, same dir + artifact collides even across configs (the
+        // ring is keyed by artifact alone).
+        let mut b = tenant("b", 1, 1);
+        b.opts.out_dir = tenant("a", 1, 1).opts.out_dir;
+        assert!(run_fleet(&[tenant("a", 1, 1), b.clone()], &fo).is_err());
+        b.config = TrainConfig::config2(1);
+        assert!(run_fleet(&[tenant("a", 1, 1), b.clone()], &fo).is_ok_and(|f| f
+            .tenants
+            .iter()
+            .all(|t| t.completed())));
+        let mut sliced = fo.clone();
+        sliced.quantum = 1;
+        assert!(run_fleet(&[tenant("a", 1, 1), b], &sliced).is_err());
+    }
+
+    #[test]
+    fn max_wait_rounds_audits_the_schedule_log() {
+        let out = FleetOutcome {
+            tenants: Vec::new(),
+            schedule: vec![
+                Slice { round: 0, tenant: 0, from_step: 0, to_step: 1 },
+                Slice { round: 3, tenant: 0, from_step: 1, to_step: 2 },
+                Slice { round: 4, tenant: 0, from_step: 2, to_step: 3 },
+                Slice { round: 2, tenant: 1, from_step: 0, to_step: 1 },
+            ],
+            rounds: 5,
+        };
+        assert_eq!(out.max_wait_rounds(0), 2, "rounds 1-2 skipped tenant 0");
+        assert_eq!(out.max_wait_rounds(1), 2, "tenant 1 first ran in round 2");
+        assert_eq!(out.max_wait_rounds(9), 0, "never-scheduled tenant");
+    }
+
+    #[test]
+    fn auto_max_runs_resolves_strictly() {
+        // Unset in the test environment: the fallback wins.
+        std::env::remove_var("MOR_MAX_RUNS");
+        assert_eq!(auto_max_runs(7), 7);
+    }
+}

@@ -126,6 +126,14 @@ pub struct TrainerOptions {
     /// walking the ring past corrupt/torn files; fresh start when the
     /// ring is empty. Mutually exclusive with `resume`.
     pub auto_resume: bool,
+    /// Cooperative preemption: suspend the run after this many
+    /// completed steps (when `< steps`), writing a checkpoint at the
+    /// suspension point even when the cadence would not — so a later
+    /// `auto_resume` continues bitwise where the slice stopped. This is
+    /// how `coordinator::scheduler` time-slices tenants; like `faults`
+    /// it is scheduling, not numerics, so it is deliberately NOT pinned
+    /// into checkpoints. `None` (or `>= steps`) runs to completion.
+    pub stop_after: Option<u64>,
 }
 
 impl TrainerOptions {
@@ -149,6 +157,7 @@ impl TrainerOptions {
             guard: None,
             ckpt_keep: 0,
             auto_resume: false,
+            stop_after: None,
         }
     }
 }
@@ -330,11 +339,23 @@ impl<'rt> Trainer<'rt> {
         let mut total_ms = records.iter().map(|r| r.step_ms).sum::<f32>();
         let n_slots = QuantTensorId::count(&self.model);
 
+        // Preemption horizon: a slice stops early at `stop_after`
+        // completed steps; everything downstream of the loop condition
+        // (val/suite "final step" rules, LR schedule, pins) still keys
+        // off the true `opts.steps`, so a slice is an exact prefix of
+        // the continuous run.
+        let suspend_at = opts.stop_after.filter(|s| *s < opts.steps);
+        let horizon = suspend_at.unwrap_or(opts.steps);
+
         let mut step = start_step;
-        while step < opts.steps {
+        while step < horizon {
             let lr = tc.schedule.lr_at(step);
             let batch = train_loader.next_batch();
             let t0 = Instant::now();
+            // Tenancy hygiene: make sure no stale injected-panic flag
+            // from an earlier aborted run on this thread fires inside
+            // this step (see `faults::clear_worker_panic`).
+            crate::faults::clear_worker_panic();
             // The step runs under catch_unwind so an injected (or real)
             // worker panic is recoverable: nothing has committed when a
             // step unwinds — params, moments and the session's step
@@ -461,7 +482,12 @@ impl<'rt> Trainer<'rt> {
                             let completed = step + 1;
                             let on_cadence = completed % opts.ckpt_every.max(1) == 0
                                 || completed == opts.steps;
-                            if opts.ckpt_every > 0 && on_cadence {
+                            // A suspension point always checkpoints —
+                            // even off-cadence, even with the cadence
+                            // disabled — or the slice's work would be
+                            // lost at eviction.
+                            let suspending = Some(completed) == suspend_at;
+                            if (opts.ckpt_every > 0 && on_cadence) || suspending {
                                 ckpts += 1;
                                 self.save_checkpoint(
                                     &session,

@@ -414,6 +414,16 @@ pub fn take_worker_panic() -> bool {
     WORKER_PANIC_ARMED.with(|c| c.replace(false))
 }
 
+/// Disarm this thread's pending worker panic, if any. Multi-tenant
+/// hygiene: a step that unwinds or errors between arming and its first
+/// `join2` would leave the flag set on a pool thread, and the next
+/// run's `join2` scheduled there would consume a panic it never armed.
+/// The trainer clears before every step so a stale flag cannot cross
+/// run boundaries.
+pub fn clear_worker_panic() {
+    WORKER_PANIC_ARMED.with(|c| c.set(false));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

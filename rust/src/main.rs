@@ -168,13 +168,37 @@ fn runtime_of(args: &Args, model: ModelConfig) -> Result<Runtime> {
     }
 }
 
+/// `--max-runs N` caps how many training runs the fleet scheduler
+/// keeps resident per round (absent = the pool's thread count). Falls
+/// back to `MOR_MAX_RUNS`.
+fn max_runs_of(args: &Args, fallback: usize) -> usize {
+    let (raw, prefix): (Option<String>, &str) = match args.get("max-runs") {
+        Some(v) => (Some(v.to_string()), "--max-runs "),
+        None => (mor::util::env::var("MOR_MAX_RUNS"), "MOR_MAX_RUNS "),
+    };
+    match mor::util::env::parse_pos_int(
+        raw.as_deref(),
+        prefix,
+        "positive run count",
+        "unset it to default to the pool width",
+    ) {
+        Ok(Some(n)) => n,
+        Ok(None) => fallback,
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("train") => cmd_train(args),
+        Some("fleet") => cmd_fleet(args),
         Some("report") => cmd_report(args),
         Some("eval") => cmd_eval(args),
         Some("info") => cmd_info(args),
-        Some(other) => bail!("unknown command {other:?}; try train/report/eval/info"),
+        Some(other) => bail!("unknown command {other:?}; try train/fleet/report/eval/info"),
         None => {
             println!("{}", USAGE);
             Ok(())
@@ -191,6 +215,9 @@ USAGE:
                [--suite-every N] [--ckpt-every N] [--resume <ckpt>]
                [--auto-resume] [--ckpt-keep K] [--embed-metrics]
                [--quiet] [--policy SPEC] [--faults SPEC] [--guard SPEC]
+  repro fleet  --tenants N [--weights W0,W1,...] [--quantum Q] [--max-runs M]
+               [--artifact <name>] [--config ...] [--steps N] [--out runs/fleet]
+               [--ckpt-every N] [--guard SPEC] [--faults SPEC]
   repro eval   [--model ...] [--artifact eval] (evaluates fresh init or --ckpt)
   repro report <table1|table2|table3|table4|fig5..fig21|policies|all>
                [--steps N] [--model ...] [--out report/] [--fresh] [--quiet]
@@ -230,6 +257,20 @@ Robustness options (train):
   --auto-resume              resume from the newest loadable checkpoint in
                              --out, walking past corrupt/torn files
                              (mutually exclusive with --resume)
+
+Fleet options (fleet):
+  --tenants N                concurrent training runs to multiplex (each in
+                             runs/fleet/tenant<i>; host backend)
+  --weights W0,W1,...        fair-share weights, one per tenant (default all
+                             1); slice share converges to weight/sum(weights)
+  --quantum Q                steps per scheduling slice; 0 (default) runs each
+                             tenant to completion uninterrupted. Q > 0
+                             suspends tenants at Q-step boundaries through the
+                             checkpoint ring — bitwise identical to solo runs.
+  --max-runs M               tenants resident per round (MOR_MAX_RUNS;
+                             default: the pool's thread count)
+  --faults SPEC              injected into tenant 0 only — a containment demo:
+                             the other tenants must finish unperturbed
 
 Checkpoint/resume: `--ckpt-every N` writes a full MORCKPT2 training
 checkpoint (params, Adam moments, data cursors, RNG streams, scaling
@@ -287,6 +328,102 @@ fn cmd_train(args: &Args) -> Result<()> {
         "BF16 fallback (aggregate): {:.2}% of tensor decisions",
         outcome.stats.overall_fallback_pct()
     );
+    Ok(())
+}
+
+/// Multiplex N training runs over one shared pool via the fleet
+/// scheduler (host backend; see `coordinator::scheduler`).
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use mor::coordinator::scheduler::{run_fleet, FleetOptions, Tenant};
+    let model = model_of(args)?;
+    let steps = args.u64("steps", 100);
+    let n = args.usize("tenants", 2);
+    if n == 0 {
+        bail!("--tenants must be >= 1");
+    }
+    let config = TrainConfig::by_name(args.get_or("config", "config1"), steps)
+        .context("--config must be config1 or config2")?;
+    let artifact = args.get_or("artifact", "train_mor_tensor_block").to_string();
+    let out = PathBuf::from(args.get_or("out", "runs/fleet"));
+    let weights: Vec<usize> = match args.get("weights") {
+        None => vec![1; n],
+        Some(raw) => {
+            let ws: Vec<usize> = raw
+                .split(',')
+                .map(|w| match w.trim().parse::<usize>() {
+                    Ok(v) if v >= 1 => Ok(v),
+                    _ => bail!("--weights entries must be integers >= 1, got {w:?}"),
+                })
+                .collect::<Result<_>>()?;
+            if ws.len() != n {
+                bail!("--weights has {} entries for {n} tenants", ws.len());
+            }
+            ws
+        }
+    };
+    let faults = faults_of(args);
+    let guard = guard_of(args);
+    let policy = policy_of(args);
+    let mut fleet_opts = FleetOptions::new(parallelism_of(args));
+    fleet_opts.max_runs = max_runs_of(args, fleet_opts.max_runs);
+    fleet_opts.quantum = args.u64("quantum", 0);
+    fleet_opts.quiet = args.flag("quiet");
+    let tenants: Vec<Tenant> = (0..n)
+        .map(|i| {
+            let id = format!("tenant{i}");
+            let mut o = TrainerOptions::new(&artifact, steps, out.join(&id));
+            o.threshold = args.f32("threshold", 0.045);
+            o.val_every = args.u64("val-every", 20);
+            o.ckpt_every = args.u64("ckpt-every", 0);
+            o.ckpt_keep = ckpt_keep_of(args);
+            o.stats_window = args.u64("stats-window", (steps / 4).max(1));
+            o.per_channel = artifact.contains("channel");
+            o.guard = guard;
+            o.policy = policy.clone();
+            o.quiet = true;
+            // The fault schedule targets tenant 0 only: the point of
+            // a chaos fleet is watching the neighbors stay clean.
+            if i == 0 {
+                o.faults = faults.clone();
+            }
+            Tenant::new(&id, model, config, o).with_weight(weights[i])
+        })
+        .collect();
+    let fleet = run_fleet(&tenants, &fleet_opts)?;
+    println!(
+        "{:<10} {:>6} {:>7} {:>10} {:>10}  status",
+        "tenant", "weight", "slices", "train", "val"
+    );
+    for (i, t) in fleet.tenants.iter().enumerate() {
+        let (train, val) = t
+            .outcome
+            .as_ref()
+            .map(|o| (o.final_train_loss, o.final_val_loss))
+            .unwrap_or((f32::NAN, f32::NAN));
+        println!(
+            "{:<10} {:>6} {:>7} {:>10.4} {:>10.4}  {}",
+            t.id,
+            tenants[i].weight,
+            t.slices,
+            train,
+            val,
+            match &t.error {
+                None => "ok".to_string(),
+                Some(e) => format!("FAILED: {e}"),
+            }
+        );
+    }
+    println!(
+        "{} tenants over {} rounds ({} slices, max {} resident, quantum {})",
+        n,
+        fleet.rounds,
+        fleet.schedule.len(),
+        fleet_opts.max_runs,
+        fleet_opts.quantum
+    );
+    if fleet.tenants.iter().all(|t| !t.completed()) {
+        bail!("every tenant failed");
+    }
     Ok(())
 }
 

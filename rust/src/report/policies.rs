@@ -5,17 +5,20 @@
 //!
 //! Every combination is an independent, fully-serial training run with
 //! its own host [`Runtime`] (the policy layer is host-only; the PJRT
-//! backend bakes the threshold decisions into its artifacts), so the
-//! sweep itself parallelizes across combinations on the chunked engine
-//! via [`par::par_map_weighted`] — results are bit-identical to the
+//! backend bakes the threshold decisions into its artifacts). The
+//! sweep is the fleet scheduler's first real client: the 12 runs are
+//! submitted as weighted tenants through
+//! [`crate::coordinator::scheduler::run_fleet`], which multiplexes
+//! them over the chunked engine with the same largest-first fair-share
+//! machinery tensor work gets — results are bit-identical to the
 //! serial sweep for any thread count. The [`super::runs`] cache is
 //! deliberately bypassed: its keys do not carry a policy dimension.
 
 use super::ReportCtx;
-use crate::coordinator::trainer::{Trainer, TrainerOptions};
+use crate::coordinator::scheduler::{self, run_fleet, FleetOptions, Tenant};
+use crate::coordinator::trainer::TrainerOptions;
 use crate::mor::policy;
-use crate::runtime::Runtime;
-use crate::util::par::{self, Parallelism};
+use crate::util::par::Parallelism;
 use anyhow::{anyhow, Context, Result};
 
 /// The compared policy specs (parsed by [`policy::parse_policy`]):
@@ -77,69 +80,88 @@ pub fn policy_sweep(ctx: &ReportCtx) -> Result<Vec<PolicyRow>> {
             }
         }
     }
-    // Every spec parses before any run starts.
-    for (_, spec, ..) in &combos {
-        policy::parse_policy(Some(spec))
-            .map_err(|msg| anyhow!("policy spec {spec:?} {msg}"))?;
-    }
 
-    let model = ctx.model;
     let steps = ctx.steps;
-    let quiet = ctx.quiet;
     let sweep_dir = ctx.out_dir.join("policies");
     // Combination-level parallelism: each run is fully serial inside,
     // so any outer thread count reproduces the serial sweep bitwise.
     let outer = ctx.runtime.parallelism().clone();
-    let weights: Vec<usize> =
-        combos.iter().map(|(.., config_id, w)| *w * *config_id as usize).collect();
-    let results: Vec<Result<PolicyRow>> = par::par_map_weighted(&outer, &weights, |i| {
-        let (plabel, spec, tlabel, artifact, config_id, _) = combos[i];
-        let policy = policy::parse_policy(Some(spec))
-            .map_err(|msg| anyhow!("policy spec {spec:?} {msg}"))?
-            .expect("non-empty spec parses to a policy");
-        let cfg = match config_id {
-            2 => crate::model::config::TrainConfig::config2(steps),
-            _ => crate::model::config::TrainConfig::config1(steps),
-        };
-        // Fresh host runtime per combination: policies are a host-layer
-        // feature, and `Runtime` is single-threaded by design.
-        let rt = Runtime::host(model);
-        let trainer = Trainer::new(&rt, cfg);
-        let mut opts =
-            TrainerOptions::new(artifact, steps, sweep_dir.join(plabel));
-        opts.quiet = true;
-        opts.val_every = (steps / 4).max(1);
-        opts.parallelism = Some(Parallelism::serial());
-        opts.policy = Some(policy.clone());
-        let outcome = trainer
-            .run(&opts)
-            .with_context(|| format!("policy sweep run {plabel}/{tlabel}/config{config_id}"))?;
-        let n = outcome.records.len().max(1) as f32;
-        let fallback_pct = outcome
-            .records
-            .iter()
-            .map(|r| r.bf16_fallback_rate)
-            .sum::<f32>()
-            / n
-            * 100.0;
-        if !quiet {
-            println!(
-                "  [policies] {plabel:<9} {tlabel:<10} config{config_id}: loss {:.4} fb {:.1}%",
-                outcome.final_train_loss, fallback_pct
+
+    let tenants: Vec<Tenant> = combos
+        .iter()
+        .map(|&(plabel, spec, tlabel, artifact, config_id, tweight)| {
+            // Every spec parses before any run starts.
+            let policy = policy::parse_policy(Some(spec))
+                .map_err(|msg| anyhow!("policy spec {spec:?} {msg}"))?
+                .expect("non-empty spec parses to a policy");
+            let cfg = match config_id {
+                2 => crate::model::config::TrainConfig::config2(steps),
+                _ => crate::model::config::TrainConfig::config1(steps),
+            };
+            let id = format!("{plabel}/{tlabel}/config{config_id}");
+            let mut opts = TrainerOptions::new(
+                artifact,
+                steps,
+                sweep_dir.join(plabel).join(format!("{tlabel}_config{config_id}")),
             );
-        }
-        Ok(PolicyRow {
-            policy: policy.describe(),
-            task: tlabel.to_string(),
-            config_id,
-            final_train_loss: outcome.final_train_loss,
-            final_val_loss: outcome.final_val_loss,
-            fallback_pct,
-            fp8_pct: 100.0 - fallback_pct,
-            mean_step_ms: outcome.mean_step_ms,
+            opts.quiet = true;
+            opts.val_every = (steps / 4).max(1);
+            opts.parallelism = Some(Parallelism::serial());
+            opts.policy = Some(policy);
+            Ok(Tenant::new(&id, ctx.model, cfg, opts)
+                .with_weight(tweight * config_id as usize))
         })
-    });
-    results.into_iter().collect()
+        .collect::<Result<_>>()?;
+
+    // Uninterrupted runs (quantum 0), as many resident as the pool has
+    // threads (overridable via MOR_MAX_RUNS).
+    let mut fleet_opts = FleetOptions::new(outer);
+    fleet_opts.max_runs = scheduler::auto_max_runs(fleet_opts.max_runs);
+    let fleet = run_fleet(&tenants, &fleet_opts)?;
+
+    fleet
+        .tenants
+        .iter()
+        .zip(&combos)
+        .map(|(report, &(plabel, spec, tlabel, _, config_id, _))| {
+            if let Some(e) = &report.error {
+                return Err(anyhow!("{e}"))
+                    .with_context(|| format!("policy sweep run {}", report.id));
+            }
+            let outcome = report
+                .outcome
+                .as_ref()
+                .expect("a completed tenant carries its outcome");
+            let n = outcome.records.len().max(1) as f32;
+            let fallback_pct = outcome
+                .records
+                .iter()
+                .map(|r| r.bf16_fallback_rate)
+                .sum::<f32>()
+                / n
+                * 100.0;
+            if !ctx.quiet {
+                println!(
+                    "  [policies] {plabel:<9} {tlabel:<10} config{config_id}: loss {:.4} fb {:.1}%",
+                    outcome.final_train_loss, fallback_pct
+                );
+            }
+            let described = policy::parse_policy(Some(spec))
+                .expect("spec validated at tenant build time")
+                .expect("non-empty spec parses to a policy")
+                .describe();
+            Ok(PolicyRow {
+                policy: described,
+                task: tlabel.to_string(),
+                config_id,
+                final_train_loss: outcome.final_train_loss,
+                final_val_loss: outcome.final_val_loss,
+                fallback_pct,
+                fp8_pct: 100.0 - fallback_pct,
+                mean_step_ms: outcome.mean_step_ms,
+            })
+        })
+        .collect()
 }
 
 /// The `repro report policies` experiment: run the sweep, print the

@@ -97,12 +97,21 @@ impl Runtime {
     /// mirror. The end-to-end path for tests, benches and `repro`
     /// commands when no compiled artifacts exist.
     pub fn host(model: ModelConfig) -> Runtime {
+        Self::host_with(model, par::global(), policy::global())
+    }
+
+    /// [`Runtime::host`] with explicit engine/policy defaults instead
+    /// of the process globals. The fleet scheduler builds one runtime
+    /// per tenant slice on pool worker threads; taking the handles as
+    /// arguments keeps a tenant's numerics independent of whatever
+    /// ambient global another run may have installed.
+    pub fn host_with(model: ModelConfig, parallelism: Parallelism, policy: PolicyRef) -> Runtime {
         Runtime {
             backend: Backend::Host,
             manifest: Manifest::host_synthetic(&model),
             model,
-            parallelism: par::global(),
-            policy: policy::global(),
+            parallelism,
+            policy,
         }
     }
 

@@ -1403,6 +1403,10 @@ impl HostTrainer {
         if let Some(fp) = &self.faults {
             // Armed on this thread, consumed by the first join2 of the
             // forward pass (linear_fwd calls join2 unconditionally).
+            // The trainer disarms before every step (see
+            // `faults::clear_worker_panic`), so a flag orphaned by an
+            // aborted run can never fire inside another tenant sharing
+            // this pool thread.
             if fp.worker_panic_due(step1) {
                 crate::faults::arm_worker_panic();
             }

@@ -5,7 +5,7 @@
 //!
 //! Machine-readable output: a [`JsonSnapshot`] collects the same rows
 //! and merges them into a shared perf-snapshot JSON file (the
-//! `BENCH_7.json` artifact the CI bench step uploads), one `targets`
+//! `BENCH_9.json` artifact the CI bench step uploads), one `targets`
 //! entry per bench binary, so `step_latency`, `host_gemm` and
 //! `quant_formats` can all write into one file across separate
 //! invocations.
@@ -152,7 +152,7 @@ fn json_num(v: f64) -> String {
 /// snapshot file keyed by target name. The file is a plain JSON object
 /// (`schema: mor-bench-v1`) with one `targets.<name>` array per bench
 /// binary; re-running a binary replaces only its own entry, so the
-/// four CI bench invocations compose one `BENCH_7.json`.
+/// five CI bench invocations compose one `BENCH_9.json`.
 pub struct JsonSnapshot {
     target: String,
     path: PathBuf,

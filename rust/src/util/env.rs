@@ -31,7 +31,9 @@ pub struct Knob {
 /// Every environment knob the crate reads, in README table order.
 /// `Parallelism::auto` resolves the first four; `mor::policy::auto`
 /// resolves `MOR_POLICY`; `faults::auto` and `coordinator::guard::auto`
-/// resolve `MOR_FAULTS` / `MOR_GUARD`; `main` resolves `MOR_CKPT_KEEP`.
+/// resolve `MOR_FAULTS` / `MOR_GUARD`; `main` resolves `MOR_CKPT_KEEP`;
+/// `coordinator::scheduler::auto_max_runs` (and `main`'s `--max-runs`)
+/// resolve `MOR_MAX_RUNS`.
 pub const KNOBS: &[Knob] = &[
     Knob {
         env: "MOR_THREADS",
@@ -83,6 +85,12 @@ pub const KNOBS: &[Knob] = &[
         flag: Some("--ckpt-keep K"),
         default_desc: "keep all",
         meaning: "checkpoint ring retention: keep only the newest K files",
+    },
+    Knob {
+        env: "MOR_MAX_RUNS",
+        flag: Some("--max-runs N"),
+        default_desc: "pool thread count",
+        meaning: "fleet scheduler: max training runs resident per round",
     },
 ];
 
@@ -190,7 +198,8 @@ mod tests {
                 "MOR_POLICY",
                 "MOR_FAULTS",
                 "MOR_GUARD",
-                "MOR_CKPT_KEEP"
+                "MOR_CKPT_KEEP",
+                "MOR_MAX_RUNS"
             ]
         );
     }

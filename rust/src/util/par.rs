@@ -916,12 +916,24 @@ where
     if cfg.threads <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by_key(|&i| (std::cmp::Reverse(weights[i]), i));
+    let order = weighted_order(weights);
     match (cfg.engine, cfg.pool.as_deref()) {
         (Engine::Spawn, _) | (_, None) => par_map_weighted_spawn(cfg.threads, &order, n, &f),
         (engine, Some(pool)) => par_map_weighted_pool(pool, engine, &order, n, &f),
     }
+}
+
+/// Largest-first submission order for a weighted batch: indices sorted
+/// by descending weight, ties broken by ascending index so the order is
+/// total and deterministic. This is the scheduling heart of
+/// [`par_map_weighted`], exported so run-granularity clients (the fleet
+/// scheduler in `coordinator::scheduler`) dispatch whole training runs
+/// with exactly the same no-giant-stranded-behind-tinies rule the sweep
+/// items get — without touching the deque/steal machinery.
+pub fn weighted_order(weights: &[usize]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(weights[i]), i));
+    order
 }
 
 fn par_map_weighted_pool<R, F>(
@@ -1514,6 +1526,16 @@ mod tests {
         // Tied weights keep index order deterministically.
         let tied = vec![7usize; 9];
         assert_eq!(par_map_weighted(&cfg, &tied, |i| i), (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_order_is_descending_and_tie_stable() {
+        assert_eq!(weighted_order(&[]), Vec::<usize>::new());
+        assert_eq!(weighted_order(&[5]), vec![0]);
+        // Heaviest first; equal weights keep ascending index order.
+        assert_eq!(weighted_order(&[1, 9, 4, 9, 2]), vec![1, 3, 2, 4, 0]);
+        let tied = weighted_order(&[7; 6]);
+        assert_eq!(tied, (0..6).collect::<Vec<_>>());
     }
 
     #[test]

@@ -13,10 +13,15 @@
 //! * the checkpoint ring is crash-safe: CRC-corrupt and torn files are
 //!   detected by `TrainCheckpoint::load`, `--auto-resume` walks the
 //!   ring newest → oldest past them (sweeping stale save temps), and
-//!   `--ckpt-keep` prunes retention.
+//!   `--ckpt-keep` prunes retention;
+//! * chaos is **contained at fleet scope**: killing, NaN-seeding or
+//!   torn-saving one tenant of a multiplexed fleet mid-flight leaves
+//!   every surviving tenant bitwise identical to its solo run, at 1,
+//!   4 and 13 threads.
 
 use mor::coordinator::checkpoint::{scan_ring, TrainCheckpoint};
 use mor::coordinator::guard::{parse_guard, GuardAction, GuardConfig};
+use mor::coordinator::scheduler::{run_fleet, FleetOptions, Tenant};
 use mor::coordinator::trainer::{TrainOutcome, Trainer, TrainerOptions};
 use mor::faults::parse_faults;
 use mor::model::config::{ModelConfig, TrainConfig};
@@ -442,6 +447,120 @@ fn auto_resume_walks_past_corrupt_and_torn_ring_entries() {
     assert!(!stale.exists(), "stale temp file must be swept");
     std::fs::remove_dir_all(d_cont).ok();
     std::fs::remove_dir_all(d_ring).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Multi-run chaos: one tenant misbehaves, the fleet does not
+// ---------------------------------------------------------------------------
+
+/// The fleet containment matrix: 1, 4 and 13 threads (the shared pool
+/// every tenant slice is multiplexed over).
+fn fleet_sweep() -> [(&'static str, Parallelism); 3] {
+    [
+        ("serial", Parallelism::serial()),
+        ("pooled4", Parallelism::pooled(4, 1)),
+        ("pooled13", Parallelism::pooled(13, 1)),
+    ]
+}
+
+/// A three-tenant fleet (time-sliced, two resident) where the middle
+/// tenant runs with `victim_tweak` layered on; returns the fleet
+/// outcome, after asserting both neighbors completed bitwise identical
+/// to their solo runs. The victim's verdict is the caller's to assert.
+fn fleet_with_victim(
+    tag: &str,
+    par: &Parallelism,
+    victim_tweak: impl Fn(&mut TrainerOptions),
+) -> mor::coordinator::scheduler::FleetOutcome {
+    let root = tmpdir(tag);
+    let steps = 6u64;
+    let mk = |id: &str, tweak: &dyn Fn(&mut TrainerOptions)| {
+        let mut opts = TrainerOptions::new(ARTIFACT, steps, root.join("fleet").join(id));
+        opts.val_every = 1;
+        opts.quiet = true;
+        opts.parallelism = Some(par.clone());
+        tweak(&mut opts);
+        Tenant::new(id, ModelConfig::TINY, TrainConfig::config1(steps), opts)
+    };
+    let nop: &dyn Fn(&mut TrainerOptions) = &|_| {};
+    let tenants = [mk("left", nop), mk("victim", &|o| victim_tweak(o)), mk("right", nop)];
+    let mut fo = FleetOptions::new(par.clone());
+    fo.quantum = 2;
+    fo.max_runs = 2;
+    let fleet = run_fleet(&tenants, &fo).expect("fleet itself must not die");
+
+    for id in ["left", "right"] {
+        let report = fleet.tenant(id).expect("neighbor reported");
+        assert!(report.completed(), "{tag}/{id}: neighbor failed: {:?}", report.error);
+        let solo = run_in(&root.join("solo").join(id), ARTIFACT, steps, par, |_| {})
+            .expect("solo neighbor run");
+        assert_outcomes_bitwise_eq(
+            report.outcome.as_ref().unwrap(),
+            &solo,
+            &format!("{tag}/{id}"),
+        );
+    }
+    std::fs::remove_dir_all(root).ok();
+    fleet
+}
+
+/// Kill one tenant: an *unguarded* injected worker panic aborts the
+/// victim's slice. The fleet contains it — the victim is reported
+/// failed with the panic text, and both neighbors (sharing the pool
+/// the panic unwound through) finish bitwise identical to solo runs.
+#[test]
+fn fleet_contains_an_unguarded_worker_panic_kill() {
+    for (label, par) in fleet_sweep() {
+        let fleet = fleet_with_victim(&format!("mr_kill_{label}"), &par, |o| {
+            with_faults(o, "panic:worker@step=4");
+        });
+        let victim = fleet.tenant("victim").unwrap();
+        assert!(!victim.completed(), "{label}: unguarded panic must kill the tenant");
+        let err = victim.error.as_deref().unwrap();
+        assert!(err.contains("panic"), "{label}: verdict names the panic, got {err:?}");
+    }
+}
+
+/// NaN-seed one tenant: a guarded NaN-weight fault forces a checkpoint
+/// rewind *inside* the victim's slice. The victim survives (one rewind,
+/// finite loss, full trajectory) and the neighbors never notice.
+#[test]
+fn fleet_contains_a_guarded_nan_seed() {
+    for (label, par) in fleet_sweep() {
+        let fleet = fleet_with_victim(&format!("mr_nan_{label}"), &par, |o| {
+            guarded(o);
+            o.ckpt_every = 2;
+            with_faults(o, "nan:weight@step=3");
+        });
+        let victim = fleet.tenant("victim").unwrap();
+        assert!(victim.completed(), "{label}: guard must absorb the NaN: {:?}", victim.error);
+        let out = victim.outcome.as_ref().unwrap();
+        assert_eq!(count(out, GuardAction::Rewind), 1, "{label}: one rewind");
+        assert!(out.final_train_loss.is_finite(), "{label}: finite after recovery");
+        assert_eq!(out.records.len(), 6, "{label}: full trajectory");
+    }
+}
+
+/// Torn-save one tenant: every suspension checkpoint the victim writes
+/// is torn (`torn-save@ckpt=1` with no cadence saves), so each slice
+/// auto-resumes into a fresh start — yet completed steps still grow
+/// once per slice, the stall backstop never trips, and the victim's
+/// final (from-scratch) trajectory equals a clean solo run bitwise.
+#[test]
+fn fleet_survives_a_torn_save_tenant() {
+    for (label, par) in fleet_sweep() {
+        let fleet = fleet_with_victim(&format!("mr_torn_{label}"), &par, |o| {
+            with_faults(o, "torn-save@ckpt=1");
+        });
+        let victim = fleet.tenant("victim").unwrap();
+        assert!(victim.completed(), "{label}: torn saves must not kill: {:?}", victim.error);
+        let out = victim.outcome.as_ref().unwrap();
+        assert_eq!(out.records.len(), 6, "{label}: full trajectory despite restarts");
+        let root = tmpdir(&format!("mr_torn_solo_{label}"));
+        let solo = run_in(&root, ARTIFACT, 6, &par, |_| {}).unwrap();
+        assert_outcomes_bitwise_eq(out, &solo, &format!("{label}/victim"));
+        std::fs::remove_dir_all(root).ok();
+    }
 }
 
 /// `--ckpt-keep K` retains only the newest K ring entries.

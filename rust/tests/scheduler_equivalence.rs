@@ -1,0 +1,418 @@
+//! The fleet scheduler's proof obligations (the tenancy suite):
+//!
+//! * **Interleaving is bitwise invisible.** N tenants multiplexed over
+//!   one shared pool — suspended at quantum boundaries through the
+//!   checkpoint ring, evicted, resumed — each produce exactly the
+//!   trajectory, metrics rows (minus the wall-clock `step_ms` column),
+//!   decision fractions and final checkpointed state of the same run
+//!   executed alone, at 1/2/4/13 threads.
+//! * **Containment composes with equivalence.** A fleet where one
+//!   tenant carries a fault schedule (guarded NaN-weight rewind)
+//!   reproduces each tenant's solo outcome bitwise — the faulted
+//!   tenant matches its faulted solo twin, the neighbors match their
+//!   clean ones.
+//! * **Preemption at adversarial boundaries is safe.** Suspending at
+//!   step 0, after one step, mid-quarantine, around a rewind, at the
+//!   penultimate and final steps — the stitched run equals the
+//!   continuous one bitwise, including guard events and the rewind
+//!   budget (the state fingerprint covers the `guard/state` section).
+//! * **Fair-share prevents starvation.** One giant tenant among many
+//!   tiny ones: everyone completes, and the schedule log shows no
+//!   tenant waited longer than its weight-share bound
+//!   `ceil(Σ weights / weight_i)` rounds between slices.
+
+use mor::coordinator::checkpoint::{scan_ring, TrainCheckpoint};
+use mor::coordinator::guard::{GuardAction, GuardConfig};
+use mor::coordinator::scheduler::{run_fleet, FleetOptions, Tenant};
+use mor::coordinator::trainer::{TrainOutcome, Trainer, TrainerOptions};
+use mor::faults::parse_faults;
+use mor::model::config::{ModelConfig, TrainConfig};
+use mor::runtime::Runtime;
+use mor::util::par::Parallelism;
+use std::path::{Path, PathBuf};
+
+const TENSOR: &str = "train_mor_tensor_block";
+const SUBTENSOR: &str = "train_mor_subtensor_three_way";
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mor_sched_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The acceptance matrix: 1/2/4/13 threads. (The CI fleet job
+/// additionally runs the whole suite under `MOR_THREADS`, which the
+/// ambient-handle test below picks up via `Parallelism::auto`.)
+fn thread_sweep() -> [(&'static str, Parallelism); 4] {
+    [
+        ("serial", Parallelism::serial()),
+        ("pooled2", Parallelism::pooled(2, 1)),
+        ("pooled4", Parallelism::pooled(4, 1)),
+        ("pooled13", Parallelism::pooled(13, 1)),
+    ]
+}
+
+/// Tenant spec for the equivalence fleets: (id, artifact, config_id,
+/// steps, weight, faults, guard).
+struct Spec {
+    id: &'static str,
+    artifact: &'static str,
+    config_id: u8,
+    steps: u64,
+    weight: usize,
+    faults: Option<&'static str>,
+    guarded: bool,
+}
+
+impl Spec {
+    fn clean(id: &'static str, artifact: &'static str, config_id: u8, steps: u64) -> Spec {
+        Spec { id, artifact, config_id, steps, weight: 1, faults: None, guarded: false }
+    }
+
+    fn config(&self) -> TrainConfig {
+        match self.config_id {
+            2 => TrainConfig::config2(self.steps),
+            _ => TrainConfig::config1(self.steps),
+        }
+    }
+
+    fn opts(&self, dir: &Path, par: &Parallelism) -> TrainerOptions {
+        let mut o = TrainerOptions::new(self.artifact, self.steps, dir.to_path_buf());
+        o.val_every = 1;
+        o.ckpt_every = 2;
+        o.quiet = true;
+        o.parallelism = Some(par.clone());
+        if let Some(spec) = self.faults {
+            o.faults = parse_faults(Some(spec)).expect("valid fault spec");
+        }
+        if self.guarded {
+            o.guard = Some(GuardConfig::default());
+        }
+        o
+    }
+
+    fn solo(&self, dir: &Path, par: &Parallelism) -> TrainOutcome {
+        let rt = Runtime::host(ModelConfig::TINY);
+        Trainer::new(&rt, self.config())
+            .run(&self.opts(dir, par))
+            .expect("solo run completes")
+    }
+}
+
+/// Newest ring entry = the final checkpoint (written at the last step;
+/// every spec here sets `ckpt_every`).
+fn final_fingerprint(dir: &Path, artifact: &str) -> u64 {
+    let (step, path) = scan_ring(dir, artifact)
+        .into_iter()
+        .next()
+        .unwrap_or_else(|| panic!("no checkpoint ring in {}", dir.display()));
+    let ck = TrainCheckpoint::load(&path).expect("final checkpoint loads");
+    assert_eq!(ck.step, step);
+    ck.state_fingerprint()
+}
+
+fn assert_outcomes_bitwise_eq(a: &TrainOutcome, b: &TrainOutcome, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(ra.step, rb.step, "{what}");
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{what}: train loss at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.val_loss.to_bits(),
+            rb.val_loss.to_bits(),
+            "{what}: val loss at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.bf16_fallback_rate.to_bits(),
+            rb.bf16_fallback_rate.to_bits(),
+            "{what}: fallback at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.mean_relerr.to_bits(),
+            rb.mean_relerr.to_bits(),
+            "{what}: relerr at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.param_norm.to_bits(),
+            rb.param_norm.to_bits(),
+            "{what}: param norm at step {}",
+            ra.step
+        );
+    }
+    assert_eq!(
+        a.stats.heatmap_csv(),
+        b.stats.heatmap_csv(),
+        "{what}: decision fractions"
+    );
+    assert_eq!(a.guard_events, b.guard_events, "{what}: guard events");
+}
+
+/// Run `specs` as one interleaved fleet AND as solo runs, then assert
+/// per-tenant bitwise equivalence: records (minus step_ms), decision
+/// fractions, guard events, and the final checkpoint's timing-free
+/// state fingerprint.
+fn assert_fleet_matches_solo(
+    tag: &str,
+    specs: &[Spec],
+    par: &Parallelism,
+    quantum: u64,
+    max_runs: usize,
+) {
+    let root = tmpdir(tag);
+    let tenants: Vec<Tenant> = specs
+        .iter()
+        .map(|s| {
+            Tenant::new(
+                s.id,
+                ModelConfig::TINY,
+                s.config(),
+                s.opts(&root.join("fleet").join(s.id), par),
+            )
+            .with_weight(s.weight)
+        })
+        .collect();
+    let mut fo = FleetOptions::new(par.clone());
+    fo.quantum = quantum;
+    fo.max_runs = max_runs;
+    let fleet = run_fleet(&tenants, &fo).expect("fleet completes");
+
+    for s in specs {
+        let report = fleet.tenant(s.id).expect("tenant reported");
+        assert!(
+            report.completed(),
+            "{tag}/{}: tenant failed: {:?}",
+            s.id,
+            report.error
+        );
+        let interleaved = report.outcome.as_ref().expect("completed tenant outcome");
+        assert_eq!(
+            interleaved.records.len() as u64,
+            s.steps,
+            "{tag}/{}: full trajectory",
+            s.id
+        );
+        let solo_dir = root.join("solo").join(s.id);
+        let solo = s.solo(&solo_dir, par);
+        assert_outcomes_bitwise_eq(interleaved, &solo, &format!("{tag}/{}", s.id));
+        assert_eq!(
+            final_fingerprint(&root.join("fleet").join(s.id), s.artifact),
+            final_fingerprint(&solo_dir, s.artifact),
+            "{tag}/{}: final checkpoint state",
+            s.id
+        );
+        if quantum > 0 && quantum < s.steps {
+            assert!(
+                report.slices > 1,
+                "{tag}/{}: preemption must actually have happened",
+                s.id
+            );
+        }
+    }
+    std::fs::remove_dir_all(root).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Interleaved ≡ solo
+// ---------------------------------------------------------------------------
+
+/// Three clean tenants (two artifacts, both train configs, distinct
+/// lengths and weights), time-sliced two-resident over one shared
+/// pool: every tenant reproduces its solo run bitwise, at every
+/// thread count in the acceptance matrix.
+#[test]
+fn interleaved_tenants_match_solo_bitwise() {
+    for (label, par) in thread_sweep() {
+        let specs = [
+            Spec { weight: 3, ..Spec::clean("a", TENSOR, 1, 6) },
+            Spec::clean("b", SUBTENSOR, 1, 4),
+            Spec { weight: 2, ..Spec::clean("c", TENSOR, 2, 5) },
+        ];
+        assert_fleet_matches_solo(&format!("eq_{label}"), &specs, &par, 2, 2);
+    }
+}
+
+/// The ambient-handle variant the CI determinism matrix drives: under
+/// `Parallelism::auto()` (which resolves `MOR_THREADS`), a sliced
+/// fleet still reproduces the solo runs bitwise.
+#[test]
+fn interleaved_matches_solo_under_ambient_threads() {
+    let par = Parallelism::auto();
+    let specs = [
+        Spec::clean("amb_a", TENSOR, 1, 4),
+        Spec::clean("amb_b", SUBTENSOR, 2, 3),
+    ];
+    assert_fleet_matches_solo("eq_ambient", &specs, &par, 2, 1);
+}
+
+/// Single-tenant fault injection: tenant `b` carries a guarded
+/// NaN-weight fault (checkpoint rewind mid-fleet); tenants `a`/`c`
+/// are clean. Every tenant — including the faulted one — matches its
+/// solo twin bitwise at every thread count, i.e. chaos in one tenant
+/// neither perturbs neighbors nor breaks the faulted tenant's own
+/// equivalence.
+#[test]
+fn single_tenant_fault_preserves_fleet_equivalence() {
+    for (label, par) in thread_sweep() {
+        let specs = [
+            Spec::clean("a", TENSOR, 1, 6),
+            Spec {
+                weight: 2,
+                faults: Some("nan:weight@step=3"),
+                guarded: true,
+                ..Spec::clean("b", TENSOR, 2, 6)
+            },
+            Spec::clean("c", SUBTENSOR, 1, 4),
+        ];
+        assert_fleet_matches_solo(&format!("fault_{label}"), &specs, &par, 3, 2);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Preemption property test
+// ---------------------------------------------------------------------------
+
+/// Suspend/evict/resume one guarded, faulted run at adversarial
+/// boundaries — step 0 (before anything ran), step 1, step 3
+/// (mid-quarantine: the NaN-grad at step 2 quarantines through the
+/// run's end), step 5 (just before the NaN-weight rewind at step 5),
+/// step 7 (penultimate), step 8 (the final step). The stitched run
+/// must equal the continuous one bitwise: records, guard events
+/// (skip/quarantine/rewind trail), and the final checkpoint's state
+/// fingerprint — which covers the `guard/state` section, so the
+/// rewind budget surviving eviction is part of the proof.
+#[test]
+fn preemption_at_adversarial_boundaries_is_bitwise_invisible() {
+    let steps = 8u64;
+    let spec = Spec {
+        faults: Some("nan:grad@step=3;nan:weight@step=6"),
+        guarded: true,
+        ..Spec::clean("pre", TENSOR, 1, steps)
+    };
+    for (label, par) in thread_sweep() {
+        let root = tmpdir(&format!("preempt_{label}"));
+        let continuous = spec.solo(&root.join("cont"), &par);
+        // The fault trail this test depends on: one skip+quarantine
+        // (NaN grad), one rewind (NaN weight).
+        assert!(
+            continuous
+                .guard_events
+                .iter()
+                .any(|e| e.action == GuardAction::SkipStep),
+            "{label}: NaN grad must skip-step"
+        );
+        assert_eq!(
+            continuous
+                .guard_events
+                .iter()
+                .filter(|e| e.action == GuardAction::Rewind)
+                .count(),
+            1,
+            "{label}: NaN weight must rewind exactly once"
+        );
+
+        let seg_dir = root.join("seg");
+        let mut last: Option<TrainOutcome> = None;
+        for stop in [0u64, 1, 3, 5, 7, steps] {
+            // Eviction between iterations: runtime, trainer, session,
+            // loaders and guard are all rebuilt from disk each segment.
+            let rt = Runtime::host(ModelConfig::TINY);
+            let mut o = spec.opts(&seg_dir, &par);
+            o.auto_resume = true;
+            o.stop_after = Some(stop);
+            last = Some(Trainer::new(&rt, spec.config()).run(&o).unwrap_or_else(|e| {
+                panic!("{label}: segment to step {stop} failed: {e:#}")
+            }));
+        }
+        let stitched = last.expect("segments ran");
+        assert_outcomes_bitwise_eq(&stitched, &continuous, &format!("preempt_{label}"));
+        assert_eq!(
+            final_fingerprint(&seg_dir, spec.artifact),
+            final_fingerprint(&root.join("cont"), spec.artifact),
+            "{label}: final checkpoint state (incl. guard rewind budget)"
+        );
+        std::fs::remove_dir_all(root).ok();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fair share / starvation
+// ---------------------------------------------------------------------------
+
+/// The 1-giant + 12-tiny shape: a weight-12 tenant that needs 6 slices
+/// among 12 weight-1 single-slice tenants, 4 resident per round. All
+/// 13 must complete, and the schedule log must show no tenant waited
+/// more than `ceil(Σ weights / weight_i)` rounds between slices.
+#[test]
+fn fair_share_schedules_giant_and_tiny_tenants_without_starvation() {
+    let root = tmpdir("starve");
+    let par = Parallelism::pooled(4, 1);
+    let giant_steps = 18u64;
+    let tiny_steps = 3u64;
+    let mut tenants = Vec::new();
+    {
+        let mut o = TrainerOptions::new(TENSOR, giant_steps, root.join("giant"));
+        o.val_every = 0;
+        o.quiet = true;
+        o.parallelism = Some(par.clone());
+        tenants.push(
+            Tenant::new("giant", ModelConfig::TINY, TrainConfig::config1(giant_steps), o)
+                .with_weight(12),
+        );
+    }
+    for i in 0..12 {
+        let id = format!("tiny{i}");
+        let mut o = TrainerOptions::new(TENSOR, tiny_steps, root.join(&id));
+        o.val_every = 0;
+        o.quiet = true;
+        o.parallelism = Some(par.clone());
+        tenants.push(Tenant::new(
+            &id,
+            ModelConfig::TINY,
+            TrainConfig::config1(tiny_steps),
+            o,
+        ));
+    }
+    let mut fo = FleetOptions::new(par);
+    fo.quantum = 3;
+    fo.max_runs = 4;
+    let fleet = run_fleet(&tenants, &fo).expect("starvation fleet completes");
+
+    let total_weight: usize = tenants.iter().map(|t| t.weight).sum();
+    assert_eq!(total_weight, 24);
+    for (i, t) in tenants.iter().enumerate() {
+        let report = &fleet.tenants[i];
+        assert!(
+            report.completed(),
+            "{}: failed: {:?}",
+            t.id,
+            report.error
+        );
+        let got = report.outcome.as_ref().unwrap().records.len() as u64;
+        assert_eq!(got, t.opts.steps, "{}: must run to completion", t.id);
+        let bound = (total_weight as u64).div_ceil(t.weight as u64);
+        let waited = fleet.max_wait_rounds(i);
+        assert!(
+            waited <= bound,
+            "{}: waited {waited} rounds, weight-share bound is {bound}",
+            t.id
+        );
+    }
+    // The giant needed multiple slices (preemption really happened);
+    // each tiny fit in one.
+    assert_eq!(fleet.tenants[0].slices, giant_steps / fo.quantum);
+    assert!(fleet.tenants[1..].iter().all(|t| t.slices == 1));
+    // The log accounts for every slice of every tenant.
+    assert_eq!(
+        fleet.schedule.len() as u64,
+        fleet.tenants.iter().map(|t| t.slices).sum::<u64>()
+    );
+    std::fs::remove_dir_all(root).ok();
+}
