@@ -39,6 +39,12 @@ use std::sync::Arc;
 pub const SPEC_GRAMMAR: &str =
     "on, off, or comma-separated skip=N, quarantine=N, rewinds=N, spike=X";
 
+/// Prefix of the trainer's bail message when the rewind budget runs out.
+/// The fleet supervisor matches on this to tell guard exhaustion (demote
+/// straight away — retrying the same precision would burn the budget
+/// again) from transient crashes (retry with backoff first).
+pub const REWIND_EXHAUSTED_MSG: &str = "numeric guard exhausted its rewind budget";
+
 /// Guard configuration, parsed from `--guard` / `MOR_GUARD`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GuardConfig {
@@ -67,6 +73,14 @@ impl GuardConfig {
             "skip={},quarantine={},rewinds={},spike={}",
             self.skip_limit, self.quarantine_steps, self.max_rewinds, self.spike_factor
         )
+    }
+
+    /// The same guard with a deeper rewind budget, for a tenant the
+    /// fleet supervisor demotes into BF16 quarantine: the fault that
+    /// exhausted the old budget may refire on replay, so the demoted
+    /// retry gets `2r + 2` rewinds to absorb it.
+    pub fn widened(&self) -> GuardConfig {
+        GuardConfig { max_rewinds: self.max_rewinds * 2 + 2, ..*self }
     }
 
     /// Configuration fingerprint for the `opt/guard` checkpoint pin

@@ -9,8 +9,10 @@ pub mod eval;
 pub mod guard;
 pub mod logging;
 pub mod scheduler;
+pub mod supervisor;
 pub mod trainer;
 
 pub use logging::{MetricsLogger, StepRecord};
 pub use scheduler::{FleetOptions, FleetOutcome, Tenant, TenantReport};
+pub use supervisor::{FleetManifest, Health, Supervisor, SupervisorOptions};
 pub use trainer::{TrainOutcome, Trainer, TrainerOptions};

@@ -45,6 +45,10 @@
 //! quarantines, the rewind budget) lives in the `guard/state`
 //! checkpoint section, so it survives eviction like everything else.
 
+use super::guard::REWIND_EXHAUSTED_MSG;
+use super::supervisor::{
+    self, FailureVerdict, FleetManifest, Health, ManifestTenant, Supervisor, SupervisorOptions,
+};
 use super::trainer::{TrainOutcome, Trainer, TrainerOptions};
 use crate::model::config::{ModelConfig, TrainConfig};
 use crate::mor::policy;
@@ -95,12 +99,29 @@ pub struct FleetOptions {
     pub parallelism: Parallelism,
     /// Silence the per-round narration.
     pub quiet: bool,
+    /// Adaptive quanta: when more tenants are runnable than `max_runs`
+    /// worker slots, carve the quantum into `ceil(runnable/max_runs)`
+    /// shares (floor 1) so every tenant cycles through sooner. Pure
+    /// scheduling — per-tenant trajectories are bitwise-unchanged
+    /// (`tests/scheduler_equivalence.rs` pins adaptive ≡ fixed).
+    pub adaptive: bool,
+    /// Fleet supervision (retry/backoff, the degradation ladder, the
+    /// stall watchdog, the crash-safe manifest); `None` keeps the
+    /// historical binary-failure behavior bit-for-bit.
+    pub supervisor: Option<SupervisorOptions>,
 }
 
 impl FleetOptions {
     pub fn new(parallelism: Parallelism) -> Self {
         let max_runs = parallelism.threads.max(1);
-        FleetOptions { max_runs, quantum: 0, parallelism, quiet: true }
+        FleetOptions {
+            max_runs,
+            quantum: 0,
+            parallelism,
+            quiet: true,
+            adaptive: false,
+            supervisor: None,
+        }
     }
 }
 
@@ -129,6 +150,15 @@ pub struct TenantReport {
     pub error: Option<String>,
     /// Slices this tenant received.
     pub slices: u64,
+    /// Fair-share weight (echoed for the summary table).
+    pub weight: usize,
+    /// Terminal supervisor health (unsupervised fleets report Healthy,
+    /// or Dead for a failed tenant).
+    pub health: Health,
+    /// Total failed retries across all demotion rungs.
+    pub retries: u32,
+    /// Demotion rung reached (0 native, 1 BF16 quarantine, 2 scalar).
+    pub demotions: u8,
 }
 
 impl TenantReport {
@@ -144,6 +174,9 @@ pub struct FleetOutcome {
     pub tenants: Vec<TenantReport>,
     pub schedule: Vec<Slice>,
     pub rounds: u64,
+    /// The supervisor's `halt_after` testing hook stopped the loop
+    /// early (a simulated supervisor crash): reports may be partial.
+    pub halted: bool,
 }
 
 impl FleetOutcome {
@@ -170,6 +203,93 @@ impl FleetOutcome {
             prev = Some(r);
         }
         max_gap
+    }
+
+    /// One aligned cross-tenant summary table (what `repro fleet`
+    /// prints): final losses, fp8 share, guard interventions, retries
+    /// and the terminal health state per tenant.
+    pub fn summary_table(&self) -> String {
+        let idw = self.tenants.iter().map(|t| t.id.len()).max().unwrap_or(0).max(6);
+        let mut out = format!(
+            "{:<idw$}  {:>2}  {:>6}  {:>7}  {:>6}  {:<11}  {:>9}  {:>9}  {:>6}  {:>5}  status\n",
+            "tenant", "wt", "slices", "retries", "demote", "health", "train", "val", "fp8%",
+            "guard",
+        );
+        for t in &self.tenants {
+            let (train, val, fp8, guard) = match &t.outcome {
+                Some(o) => (
+                    format!("{:.4}", o.final_train_loss),
+                    format!("{:.4}", o.final_val_loss),
+                    format!("{:.1}", 100.0 - o.stats.overall_fallback_pct()),
+                    o.guard_events.len().to_string(),
+                ),
+                None => ("-".into(), "-".into(), "-".into(), "-".into()),
+            };
+            let status = match &t.error {
+                Some(e) => format!("failed: {}", clip(e, 60)),
+                None => "done".to_string(),
+            };
+            out.push_str(&format!(
+                "{:<idw$}  {:>2}  {:>6}  {:>7}  {:>6}  {:<11}  {:>9}  {:>9}  {:>6}  {:>5}  {status}\n",
+                t.id,
+                t.weight,
+                t.slices,
+                t.retries,
+                t.demotions,
+                t.health.name(),
+                train,
+                val,
+                fp8,
+                guard,
+            ));
+        }
+        out
+    }
+
+    /// The machine-readable twin of [`FleetOutcome::summary_table`]
+    /// (written as `fleet_summary.csv` by `repro fleet`). Floats use
+    /// shortest-round-trip formatting so downstream diffs are exact.
+    pub fn summary_csv(&self) -> String {
+        let mut out = String::from(
+            "tenant,weight,slices,retries,demotions,health,train_loss,val_loss,fp8_pct,\
+             guard_events,status\n",
+        );
+        for t in &self.tenants {
+            let (train, val, fp8, guard) = match &t.outcome {
+                Some(o) => (
+                    format!("{}", o.final_train_loss),
+                    format!("{}", o.final_val_loss),
+                    format!("{}", 100.0 - o.stats.overall_fallback_pct()),
+                    o.guard_events.len().to_string(),
+                ),
+                None => Default::default(),
+            };
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{}\n",
+                t.id,
+                t.weight,
+                t.slices,
+                t.retries,
+                t.demotions,
+                t.health.name(),
+                train,
+                val,
+                fp8,
+                guard,
+                if t.error.is_some() { "failed" } else { "done" },
+            ));
+        }
+        out
+    }
+}
+
+/// Clip a diagnostic string for the table's status column.
+fn clip(s: &str, n: usize) -> String {
+    if s.chars().count() <= n {
+        s.to_string()
+    } else {
+        let head: String = s.chars().take(n).collect();
+        format!("{head}...")
     }
 }
 
@@ -207,6 +327,13 @@ pub fn run_fleet(tenants: &[Tenant], opts: &FleetOptions) -> Result<FleetOutcome
         if t.opts.resume.is_some() {
             bail!("tenant {:?} sets resume; the scheduler owns resumption", t.id);
         }
+        if t.opts.repin || t.opts.fresh_guard {
+            bail!(
+                "tenant {:?} sets repin/fresh_guard; those are the supervisor's demotion \
+                 mechanics, not tenant configuration",
+                t.id
+            );
+        }
         for u in &tenants[..i] {
             if u.id == t.id {
                 bail!("duplicate tenant id {:?}", t.id);
@@ -233,6 +360,8 @@ pub fn run_fleet(tenants: &[Tenant], opts: &FleetOptions) -> Result<FleetOutcome
     }
 
     let n = tenants.len();
+    let mut sup: Option<Supervisor> =
+        opts.supervisor.clone().map(|so| Supervisor::new(so, n));
     let mut status: Vec<Status> = vec![Status::Runnable; n];
     let mut completed: Vec<u64> = vec![0; n];
     let mut pass: Vec<u128> = vec![0; n];
@@ -241,22 +370,113 @@ pub fn run_fleet(tenants: &[Tenant], opts: &FleetOptions) -> Result<FleetOutcome
     let mut outcomes: Vec<Option<TrainOutcome>> = (0..n).map(|_| None).collect();
     let mut schedule: Vec<Slice> = Vec::new();
     let mut round: u64 = 0;
+    let mut halted = false;
+
+    // Crash recovery: restore the scheduler/supervisor ledger from the
+    // fleet manifest. Tenant *state* lives in each tenant's checkpoint
+    // ring (and resumes regardless); the manifest carries exactly what
+    // the rings cannot — progress counters, stride passes, health,
+    // budgets, the schedule log — so the resumed fleet continues the
+    // interleaving bitwise. A corrupt/torn manifest fails its CRC and
+    // we fall back to a fresh ledger rather than a dead fleet.
+    if let Some(s) = &mut sup {
+        if s.opts.auto_resume {
+            if let Some(path) = s.opts.manifest.clone() {
+                if path.exists() {
+                    match FleetManifest::load(&path) {
+                        Ok(m) => {
+                            restore_manifest(
+                                &m,
+                                tenants,
+                                opts,
+                                s,
+                                &mut status,
+                                &mut completed,
+                                &mut slices,
+                                &mut pass,
+                                &mut schedule,
+                                &mut round,
+                            )?;
+                            if !opts.quiet {
+                                println!(
+                                    "[fleet] resuming from manifest {} at round {round}",
+                                    path.display()
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            if !opts.quiet {
+                                println!(
+                                    "[fleet] manifest {} unusable ({e:#}); starting a fresh \
+                                     ledger (tenant rings still resume)",
+                                    path.display()
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
 
     while status.iter().any(|s| *s == Status::Runnable) {
+        // The supervisor's simulated-crash hook: stop cold before this
+        // round. Every completed round's manifest is already on disk.
+        if let Some(s) = &sup {
+            if s.opts.halt_after.is_some_and(|h| round >= h) {
+                halted = true;
+                break;
+            }
+        }
         // Stride selection: smallest pass first, ties by the
         // largest-first weighted order (descending weight, then
         // index) — the same total order `par::weighted_order` gives
-        // the dispatch below.
-        let mut resident: Vec<usize> =
-            (0..n).filter(|&i| status[i] == Status::Runnable).collect();
+        // the dispatch below. Supervision only *removes* tenants from
+        // the candidate set (Dead, or backing off), so a fault-free
+        // supervised fleet selects identically to an unsupervised one.
+        let mut resident: Vec<usize> = (0..n)
+            .filter(|&i| {
+                status[i] == Status::Runnable
+                    && sup.as_ref().map_or(true, |s| s.eligible(i, round))
+            })
+            .collect();
+        let eligible_n = resident.len();
+        if eligible_n == 0 {
+            // Everyone runnable is backing off: the round ticks by
+            // empty (backoff is measured in rounds, so empty rounds
+            // ARE the backoff — deterministic at any thread count).
+            round += 1;
+            save_fleet_manifest(
+                &sup, opts, tenants, &status, &completed, &slices, &pass, &schedule, round,
+            );
+            continue;
+        }
         resident.sort_by_key(|&i| (pass[i], std::cmp::Reverse(tenants[i].weight), i));
         resident.truncate(opts.max_runs);
+        let quantum = effective_quantum(opts, eligible_n);
+
+        // Per-slice supervisor context, collected before the parallel
+        // dispatch (the ledger is not shared with the pool): demotion
+        // rung and the one-shot guard-refresh marker.
+        let rungs: Vec<u8> = resident
+            .iter()
+            .map(|&i| sup.as_ref().map_or(0, |s| s.tenant(i).demotions))
+            .collect();
+        let fresh: Vec<bool> = resident
+            .iter()
+            .map(|&i| sup.as_mut().map_or(false, |s| s.take_refresh_guard(i)))
+            .collect();
+        if let Some(s) = &mut sup {
+            for &i in &resident {
+                s.on_release(i);
+            }
+        }
 
         let weights: Vec<usize> = resident.iter().map(|&i| tenants[i].weight).collect();
         let before: Vec<u64> = resident.iter().map(|&i| completed[i]).collect();
         let results: Vec<Result<TrainOutcome, String>> =
             par::par_map_weighted(&opts.parallelism, &weights, |k| {
-                advance(&tenants[resident[k]], before[k], opts)
+                advance(&tenants[resident[k]], before[k], opts, quantum, rungs[k], fresh[k])
             });
 
         for (k, res) in results.into_iter().enumerate() {
@@ -264,12 +484,30 @@ pub fn run_fleet(tenants: &[Tenant], opts: &FleetOptions) -> Result<FleetOutcome
             pass[i] += STRIDE_ONE / tenants[i].weight as u128;
             slices[i] += 1;
             match res {
-                Err(e) => {
-                    if !opts.quiet {
-                        println!("[fleet] tenant {} FAILED: {e}", tenants[i].id);
+                Err(e) => match &mut sup {
+                    None => {
+                        if !opts.quiet {
+                            println!("[fleet] tenant {} FAILED: {e}", tenants[i].id);
+                        }
+                        status[i] = Status::Failed(e);
                     }
-                    status[i] = Status::Failed(e);
-                }
+                    Some(s) => {
+                        // Guard exhaustion skips the retry branch of
+                        // the ladder: that tenant already burned a full
+                        // rewind budget at this precision.
+                        let guard_exhausted = e.contains(REWIND_EXHAUSTED_MSG);
+                        apply_failure_verdict(
+                            s,
+                            i,
+                            round,
+                            &tenants[i].id,
+                            e,
+                            guard_exhausted,
+                            opts.quiet,
+                            &mut status,
+                        );
+                    }
+                },
                 Ok(out) => {
                     let now = out.records.len() as u64;
                     schedule.push(Slice {
@@ -279,15 +517,39 @@ pub fn run_fleet(tenants: &[Tenant], opts: &FleetOptions) -> Result<FleetOutcome
                         to_step: now,
                     });
                     if now <= completed[i] {
-                        stalls[i] += 1;
-                        if stalls[i] >= MAX_STALLS {
-                            status[i] = Status::Failed(format!(
-                                "no progress in {MAX_STALLS} consecutive slices \
-                                 (stuck at step {now})"
-                            ));
+                        match &mut sup {
+                            None => {
+                                stalls[i] += 1;
+                                if stalls[i] >= MAX_STALLS {
+                                    status[i] = Status::Failed(format!(
+                                        "no progress in {MAX_STALLS} consecutive slices \
+                                         (stuck at step {now})"
+                                    ));
+                                }
+                            }
+                            Some(s) => {
+                                // The stall watchdog: tolerated until
+                                // `stall_after` consecutive no-progress
+                                // slices, then the ladder takes over.
+                                if let Some(msg) = s.on_no_progress(i, now) {
+                                    apply_failure_verdict(
+                                        s,
+                                        i,
+                                        round,
+                                        &tenants[i].id,
+                                        msg,
+                                        false,
+                                        opts.quiet,
+                                        &mut status,
+                                    );
+                                }
+                            }
                         }
                     } else {
                         stalls[i] = 0;
+                        if let Some(s) = &mut sup {
+                            s.on_progress(i);
+                        }
                     }
                     completed[i] = now;
                     let done = now >= tenants[i].opts.steps;
@@ -307,22 +569,208 @@ pub fn run_fleet(tenants: &[Tenant], opts: &FleetOptions) -> Result<FleetOutcome
             }
         }
         round += 1;
+        save_fleet_manifest(
+            &sup, opts, tenants, &status, &completed, &slices, &pass, &schedule, round,
+        );
+    }
+
+    // A tenant that completed before a supervisor crash has no slice in
+    // this process to carry its outcome: replay it from its ring (zero
+    // steps execute — the trainer's finished-replay contract — so the
+    // reconstructed outcome is the continuous one, bitwise).
+    if !halted {
+        for i in 0..n {
+            if status[i] == Status::Done && outcomes[i].is_none() {
+                let rung = sup.as_ref().map_or(0, |s| s.tenant(i).demotions);
+                match advance(&tenants[i], completed[i], opts, 0, rung, false) {
+                    Ok(out) => outcomes[i] = Some(out),
+                    Err(e) => {
+                        status[i] =
+                            Status::Failed(format!("replaying finished tenant: {e}"));
+                    }
+                }
+            }
+        }
     }
 
     let reports = tenants
         .iter()
         .enumerate()
-        .map(|(i, t)| TenantReport {
-            id: t.id.clone(),
-            outcome: outcomes[i].take(),
-            error: match &status[i] {
-                Status::Failed(e) => Some(e.clone()),
-                _ => None,
-            },
-            slices: slices[i],
+        .map(|(i, t)| {
+            let health = match (&sup, &status[i]) {
+                (Some(s), _) => s.tenant(i).health,
+                (None, Status::Failed(_)) => Health::Dead,
+                (None, _) => Health::Healthy,
+            };
+            TenantReport {
+                id: t.id.clone(),
+                outcome: outcomes[i].take(),
+                error: match &status[i] {
+                    Status::Failed(e) => Some(e.clone()),
+                    _ => None,
+                },
+                slices: slices[i],
+                weight: t.weight,
+                health,
+                retries: sup.as_ref().map_or(0, |s| s.tenant(i).retries_total),
+                demotions: sup.as_ref().map_or(0, |s| s.tenant(i).demotions),
+            }
         })
         .collect();
-    Ok(FleetOutcome { tenants: reports, schedule, rounds: round })
+    Ok(FleetOutcome { tenants: reports, schedule, rounds: round, halted })
+}
+
+/// Adaptive quanta: with more runnable tenants than worker slots, carve
+/// the configured quantum into `ceil(runnable/max_runs)` shares
+/// (floor 1). Scheduling only — slice boundaries move, trajectories
+/// don't.
+fn effective_quantum(opts: &FleetOptions, runnable: usize) -> u64 {
+    if !opts.adaptive || opts.quantum == 0 || runnable <= opts.max_runs {
+        return opts.quantum;
+    }
+    (opts.quantum / runnable.div_ceil(opts.max_runs) as u64).max(1)
+}
+
+/// Route one failed slice through the supervisor's ladder and narrate
+/// the verdict. Only a `Dead` verdict terminally fails the tenant.
+#[allow(clippy::too_many_arguments)]
+fn apply_failure_verdict(
+    s: &mut Supervisor,
+    i: usize,
+    round: u64,
+    id: &str,
+    error: String,
+    guard_exhausted: bool,
+    quiet: bool,
+    status: &mut [Status],
+) {
+    match s.on_failure(i, round, guard_exhausted) {
+        FailureVerdict::Retry { release_round } => {
+            if !quiet {
+                println!(
+                    "[fleet] tenant {id} failed (retry {}/{} at rung {}, runnable again in \
+                     round {release_round}): {error}",
+                    s.tenant(i).retries_used,
+                    s.opts.retries,
+                    s.tenant(i).demotions
+                );
+            }
+        }
+        FailureVerdict::Demote { rung } => {
+            if !quiet {
+                println!(
+                    "[fleet] tenant {id} demoted to rung {rung} ({}): {error}",
+                    if rung == 1 {
+                        "BF16 quarantine + widened guard"
+                    } else {
+                        "scalar kernels"
+                    }
+                );
+            }
+        }
+        FailureVerdict::Dead => {
+            if !quiet {
+                println!("[fleet] tenant {id} DEAD (every rung exhausted): {error}");
+            }
+            status[i] = Status::Failed(error);
+        }
+    }
+}
+
+/// Persist the fleet manifest after a round (no-op without a supervisor
+/// or a manifest path). A failed save degrades crash recovery, not the
+/// running fleet — warn and continue.
+#[allow(clippy::too_many_arguments)]
+fn save_fleet_manifest(
+    sup: &Option<Supervisor>,
+    opts: &FleetOptions,
+    tenants: &[Tenant],
+    status: &[Status],
+    completed: &[u64],
+    slices: &[u64],
+    pass: &[u128],
+    schedule: &[Slice],
+    next_round: u64,
+) {
+    let Some(s) = sup else { return };
+    let Some(path) = &s.opts.manifest else { return };
+    let sups = s.export();
+    let m = FleetManifest {
+        round: next_round,
+        quantum: opts.quantum,
+        tenants: tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| ManifestTenant {
+                id: t.id.clone(),
+                sup: sups[i].clone(),
+                completed: completed[i],
+                slices: slices[i],
+                pass: pass[i],
+                failed: match &status[i] {
+                    Status::Failed(e) => Some(e.clone()),
+                    _ => None,
+                },
+                done: status[i] == Status::Done,
+            })
+            .collect(),
+        schedule: schedule.to_vec(),
+    };
+    if let Err(e) = m.save(path) {
+        eprintln!(
+            "[fleet] WARNING: failed to save fleet manifest {}: {e:#}",
+            path.display()
+        );
+    }
+}
+
+/// Validate a loaded manifest against this fleet and restore the
+/// ledger. A mismatched fleet (different tenants or slicing) is a
+/// caller error, not corruption — bail instead of silently diverging.
+#[allow(clippy::too_many_arguments)]
+fn restore_manifest(
+    m: &FleetManifest,
+    tenants: &[Tenant],
+    opts: &FleetOptions,
+    s: &mut Supervisor,
+    status: &mut [Status],
+    completed: &mut [u64],
+    slices: &mut [u64],
+    pass: &mut [u128],
+    schedule: &mut Vec<Slice>,
+    round: &mut u64,
+) -> Result<()> {
+    if m.tenants.len() != tenants.len()
+        || m.tenants.iter().zip(tenants).any(|(mt, t)| mt.id != t.id)
+    {
+        bail!(
+            "fleet manifest names a different tenant set ({:?}); refusing to resume — \
+             delete the manifest to start this fleet fresh",
+            m.tenants.iter().map(|t| t.id.as_str()).collect::<Vec<_>>()
+        );
+    }
+    if m.quantum != opts.quantum {
+        bail!(
+            "fleet manifest pins quantum {} but this fleet uses {}; resume with the \
+             original slicing to keep the bitwise contract",
+            m.quantum,
+            opts.quantum
+        );
+    }
+    for (i, mt) in m.tenants.iter().enumerate() {
+        completed[i] = mt.completed;
+        slices[i] = mt.slices;
+        pass[i] = mt.pass;
+        status[i] = match (&mt.failed, mt.done) {
+            (Some(e), _) => Status::Failed(e.clone()),
+            (None, true) => Status::Done,
+            (None, false) => Status::Runnable,
+        };
+    }
+    s.import(m.tenants.iter().map(|mt| mt.sup.clone()).collect());
+    *schedule = m.schedule.clone();
+    *round = m.round;
+    Ok(())
 }
 
 /// One slice: build a fresh host runtime + trainer for the tenant,
@@ -330,18 +778,31 @@ pub fn run_fleet(tenants: &[Tenant], opts: &FleetOptions) -> Result<FleetOutcome
 /// the suspension checkpoint), and drop every session — the tenant
 /// holds no resident state between slices. Panics are contained into
 /// `Err` here so one tenant's crash never reaches the pool machinery
-/// of its neighbors.
-fn advance(tenant: &Tenant, from: u64, opts: &FleetOptions) -> Result<TrainOutcome, String> {
+/// of its neighbors. A demoted tenant's options are rewritten for its
+/// rung (BF16 quarantine, widened guard, scalar kernels) just before
+/// dispatch, so demotion needs no mutable tenant state.
+fn advance(
+    tenant: &Tenant,
+    from: u64,
+    opts: &FleetOptions,
+    quantum: u64,
+    rung: u8,
+    fresh_guard: bool,
+) -> Result<TrainOutcome, String> {
     let mut o = tenant.opts.clone();
     o.resume = None;
     o.auto_resume = true;
-    o.stop_after = match opts.quantum {
+    o.stop_after = match quantum {
         0 => None,
         q => Some((from + q).min(o.steps)),
     };
     if o.parallelism.is_none() {
         o.parallelism = Some(opts.parallelism.clone());
     }
+    if rung > 0 {
+        supervisor::apply_demotion(&mut o, rung, &opts.parallelism);
+    }
+    o.fresh_guard = fresh_guard;
     let run = catch_unwind(AssertUnwindSafe(|| {
         let par_run = o.parallelism.clone().expect("slice parallelism resolved above");
         let pol = o.policy.clone().unwrap_or_else(policy::global);
@@ -412,6 +873,13 @@ mod tests {
         resuming.opts.resume = Some("x.ckpt".into());
         assert!(run_fleet(&[resuming], &fo).is_err(), "caller-owned resume");
 
+        let mut repinned = tenant("a", 1, 1);
+        repinned.opts.repin = true;
+        assert!(run_fleet(&[repinned], &fo).is_err(), "supervisor-owned repin");
+        let mut refreshed = tenant("a", 1, 1);
+        refreshed.opts.fresh_guard = true;
+        assert!(run_fleet(&[refreshed], &fo).is_err(), "supervisor-owned fresh_guard");
+
         // Same dir + artifact + config always collides; with slicing
         // on, same dir + artifact collides even across configs (the
         // ring is keyed by artifact alone).
@@ -439,10 +907,26 @@ mod tests {
                 Slice { round: 2, tenant: 1, from_step: 0, to_step: 1 },
             ],
             rounds: 5,
+            halted: false,
         };
         assert_eq!(out.max_wait_rounds(0), 2, "rounds 1-2 skipped tenant 0");
         assert_eq!(out.max_wait_rounds(1), 2, "tenant 1 first ran in round 2");
         assert_eq!(out.max_wait_rounds(9), 0, "never-scheduled tenant");
+    }
+
+    #[test]
+    fn adaptive_quantum_shares_the_queue_over_the_worker_cap() {
+        let mut fo = FleetOptions::new(Parallelism::serial());
+        fo.quantum = 6;
+        fo.max_runs = 2;
+        assert_eq!(effective_quantum(&fo, 2), 6, "adaptive off: fixed quantum");
+        fo.adaptive = true;
+        assert_eq!(effective_quantum(&fo, 2), 6, "queue fits the cap");
+        assert_eq!(effective_quantum(&fo, 4), 3, "2x oversubscribed: halved");
+        assert_eq!(effective_quantum(&fo, 5), 2, "ceil(5/2)=3 shares");
+        assert_eq!(effective_quantum(&fo, 100), 1, "floor at one step");
+        fo.quantum = 0;
+        assert_eq!(effective_quantum(&fo, 100), 0, "run-to-completion stays");
     }
 
     #[test]

@@ -1,0 +1,684 @@
+//! The fleet supervisor: per-tenant health, deterministic retry /
+//! backoff, a stall watchdog, a degradation ladder, and a crash-safe
+//! fleet manifest.
+//!
+//! PR 8 made a *single run* survive numeric faults (guard rewinds, the
+//! checkpoint ring); the scheduler multiplexed runs into a fleet but
+//! kept a binary view of tenant failure — one panic and the tenant is
+//! dead. The supervisor closes that gap with three mechanisms, all
+//! deterministic by construction:
+//!
+//! 1. **Retry with exponential backoff measured in scheduler rounds,
+//!    not wall-clock.** A failed tenant re-enters the runnable set
+//!    after `1, 2, 4, …` rounds (scaled by the configured base), so the
+//!    supervised interleaving is a pure function of weights, failures
+//!    and history — bitwise-reproducible at every `MOR_THREADS`.
+//! 2. **A degradation ladder instead of binary death.** When the retry
+//!    budget at the current rung is spent — or the tenant's own numeric
+//!    guard exhausted its rewind budget, where retrying the same
+//!    precision would just burn the budget again — the tenant is
+//!    *demoted*: rung 1 forces a BF16 `StaticAssignmentPolicy` with a
+//!    widened guard (precision quarantine), rung 2 additionally drops
+//!    to scalar kernels. Each rung refreshes the retry budget; only a
+//!    tenant that fails through every rung is declared Dead.
+//! 3. **A stall watchdog counted in slices.** A tenant that keeps
+//!    getting scheduled but stops completing steps (the `stall` fault
+//!    class, or a real wedge self-preempted via the cooperative stop
+//!    flag) accrues no-progress slices; after `stall_after` consecutive
+//!    ones the watchdog trips and the failure ladder takes over.
+//!
+//! The whole ledger — health, budgets, backoff deadlines, pass
+//! counters, the schedule log — is persisted after every round in a
+//! **fleet manifest** (the same sectioned LE container + CRC32 trailer
+//! + atomic fsync'd save as `MORCKPT2`), so `repro fleet --auto-resume`
+//! restarts the *whole fleet* after a supervisor crash and the resumed
+//! fleet is bitwise-identical to the uninterrupted one: tenants resume
+//! from their own checkpoint rings, and the manifest restores exactly
+//! the scheduler/supervisor state those rings cannot carry.
+
+use super::checkpoint::{put_str, put_u32, put_u64, put_u8, Checkpoint, Rd};
+use super::scheduler::Slice;
+use super::trainer::TrainerOptions;
+use crate::formats::ReprType;
+use crate::mor::policy::{PolicyRef, StaticAssignmentPolicy};
+use crate::util::par::{KernelMode, Parallelism};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// How many demotion rungs exist below a tenant's native configuration:
+/// rung 1 = BF16 precision quarantine (+ widened guard), rung 2 =
+/// scalar kernels on top. A failure at rung 2 is Dead.
+pub const DEMOTION_RUNGS: u8 = 2;
+
+/// Per-tenant health, the supervisor's five-state machine:
+///
+/// ```text
+/// Healthy ──failure──▶ Degraded ──release──▶ (runs again)
+///    ▲                    │ next failure
+///    │ progress           ▼
+///    │                 Backoff ──budget spent──▶ Quarantined (demoted)
+///    └──────────────────────────────────────────────│ rungs spent
+///                                                   ▼
+///                                                  Dead
+/// ```
+///
+/// (`Degraded` is "has failed at this rung, waiting to retry";
+/// `Backoff` is the same tenant while its release round is still in the
+/// future. `Quarantined` is sticky: a demoted tenant that completes
+/// reports Quarantined, not Healthy — the precision demotion is a
+/// visible outcome, never silently reabsorbed.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Healthy,
+    Degraded,
+    Backoff,
+    Quarantined,
+    Dead,
+}
+
+impl Health {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Degraded => "degraded",
+            Health::Backoff => "backoff",
+            Health::Quarantined => "quarantined",
+            Health::Dead => "dead",
+        }
+    }
+
+    fn code(&self) -> u8 {
+        match self {
+            Health::Healthy => 0,
+            Health::Degraded => 1,
+            Health::Backoff => 2,
+            Health::Quarantined => 3,
+            Health::Dead => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Health> {
+        Ok(match c {
+            0 => Health::Healthy,
+            1 => Health::Degraded,
+            2 => Health::Backoff,
+            3 => Health::Quarantined,
+            4 => Health::Dead,
+            other => bail!("fleet manifest corrupt: unknown health code {other}"),
+        })
+    }
+}
+
+/// Supervisor configuration (`--retries` / `--backoff` /
+/// `--stall-after`, env twins `MOR_RETRIES` / `MOR_STALL_AFTER`).
+#[derive(Debug, Clone)]
+pub struct SupervisorOptions {
+    /// Retry budget per tenant *per demotion rung*: after this many
+    /// failed retries at one precision rung the tenant is demoted to
+    /// the next (and the budget refreshes).
+    pub retries: u32,
+    /// Base backoff in scheduler rounds: the k-th retry at a rung waits
+    /// `backoff * 2^(k-1)` rounds before re-entering the runnable set.
+    pub backoff: u64,
+    /// Stall watchdog: consecutive no-progress slices tolerated before
+    /// the watchdog trips and the failure ladder takes over.
+    pub stall_after: u32,
+    /// Where to persist the fleet manifest (`None` = in-memory only).
+    pub manifest: Option<PathBuf>,
+    /// Resume a crashed fleet from the manifest when one exists.
+    pub auto_resume: bool,
+    /// Stop the scheduler loop before starting this round (testing
+    /// hook: a deterministic stand-in for a supervisor crash — the
+    /// manifest of every earlier round is already on disk).
+    pub halt_after: Option<u64>,
+}
+
+impl Default for SupervisorOptions {
+    fn default() -> Self {
+        SupervisorOptions {
+            retries: 3,
+            backoff: 1,
+            stall_after: 3,
+            manifest: None,
+            auto_resume: false,
+            halt_after: None,
+        }
+    }
+}
+
+impl SupervisorOptions {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// The supervisor's ledger entry for one tenant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSup {
+    pub health: Health,
+    /// Failed retries at the current demotion rung.
+    pub retries_used: u32,
+    /// Failed retries across all rungs (reporting).
+    pub retries_total: u32,
+    /// First round this tenant may run again (Backoff only).
+    pub backoff_until: u64,
+    /// Backoff length (in rounds) the *next* failure will impose;
+    /// doubles per failure, resets on progress or demotion.
+    pub backoff_len: u64,
+    /// Consecutive slices without a completed step.
+    pub stall_slices: u32,
+    /// Demotion rung: 0 native, 1 BF16 quarantine, 2 + scalar kernels.
+    pub demotions: u8,
+    /// One-shot: the next slice must discard checkpointed guard state
+    /// (a demotion just swapped in a widened guard).
+    pub refresh_guard: bool,
+}
+
+impl TenantSup {
+    fn new() -> TenantSup {
+        TenantSup {
+            health: Health::Healthy,
+            retries_used: 0,
+            retries_total: 0,
+            backoff_until: 0,
+            backoff_len: 0,
+            stall_slices: 0,
+            demotions: 0,
+            refresh_guard: false,
+        }
+    }
+}
+
+/// What the failure ladder decided for one failed tenant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FailureVerdict {
+    /// Retry at the same rung after backoff; runnable again at
+    /// `release_round`.
+    Retry { release_round: u64 },
+    /// Budget spent (or guard exhausted): demote to `rung` and retry
+    /// with a refreshed budget.
+    Demote { rung: u8 },
+    /// Every rung is spent; the tenant is dead.
+    Dead,
+}
+
+/// The fleet supervisor: pure bookkeeping, no I/O except the manifest.
+#[derive(Debug)]
+pub struct Supervisor {
+    pub opts: SupervisorOptions,
+    tenants: Vec<TenantSup>,
+}
+
+impl Supervisor {
+    pub fn new(opts: SupervisorOptions, n_tenants: usize) -> Supervisor {
+        Supervisor { opts, tenants: (0..n_tenants).map(|_| TenantSup::new()).collect() }
+    }
+
+    pub fn tenant(&self, i: usize) -> &TenantSup {
+        &self.tenants[i]
+    }
+
+    /// May tenant `i` be scheduled in `round`? Dead tenants never run;
+    /// backoff holds a tenant out until its release round.
+    pub fn eligible(&self, i: usize, round: u64) -> bool {
+        match self.tenants[i].health {
+            Health::Dead => false,
+            Health::Backoff => round >= self.tenants[i].backoff_until,
+            _ => true,
+        }
+    }
+
+    /// Tenant `i` is being dispatched: a backoff release becomes a
+    /// visible Degraded state (running again, not yet trusted).
+    pub fn on_release(&mut self, i: usize) {
+        if self.tenants[i].health == Health::Backoff {
+            self.tenants[i].health = Health::Degraded;
+        }
+    }
+
+    /// Tenant `i`'s slice completed steps: clear the stall counter,
+    /// reset the backoff escalation, and restore trust — Quarantined
+    /// stays sticky for a demoted tenant, everything else is Healthy.
+    pub fn on_progress(&mut self, i: usize) {
+        let t = &mut self.tenants[i];
+        t.stall_slices = 0;
+        t.backoff_len = 0;
+        t.health = if t.demotions > 0 { Health::Quarantined } else { Health::Healthy };
+    }
+
+    /// Tenant `i`'s slice completed WITHOUT finishing a step. Returns
+    /// the watchdog's failure message once `stall_after` consecutive
+    /// no-progress slices accrue; `None` while still under the limit.
+    pub fn on_no_progress(&mut self, i: usize, at_step: u64) -> Option<String> {
+        let t = &mut self.tenants[i];
+        t.stall_slices += 1;
+        if t.stall_slices >= self.opts.stall_after {
+            Some(format!(
+                "stalled: no progress in {} consecutive slices (stuck at step {at_step})",
+                t.stall_slices
+            ))
+        } else {
+            None
+        }
+    }
+
+    /// Walk the failure ladder for tenant `i` failing in `round`.
+    /// `guard_exhausted` skips the retry branch: the tenant's own
+    /// numeric guard already spent a whole rewind budget at this
+    /// precision, so re-running unchanged would only spend another.
+    pub fn on_failure(&mut self, i: usize, round: u64, guard_exhausted: bool) -> FailureVerdict {
+        let retries = self.opts.retries;
+        let base = self.opts.backoff;
+        let t = &mut self.tenants[i];
+        if !guard_exhausted && t.retries_used < retries {
+            t.retries_used += 1;
+            t.retries_total += 1;
+            t.health = Health::Backoff;
+            if t.backoff_len == 0 {
+                t.backoff_len = base.max(1);
+            }
+            // Release after the backoff window: the failing round
+            // itself doesn't count as waiting.
+            t.backoff_until = round + 1 + t.backoff_len;
+            t.backoff_len *= 2;
+            return FailureVerdict::Retry { release_round: t.backoff_until };
+        }
+        if t.demotions < DEMOTION_RUNGS {
+            t.demotions += 1;
+            t.retries_used = 0;
+            t.backoff_len = 0;
+            t.stall_slices = 0;
+            t.refresh_guard = true;
+            t.health = Health::Quarantined;
+            return FailureVerdict::Demote { rung: t.demotions };
+        }
+        t.health = Health::Dead;
+        FailureVerdict::Dead
+    }
+
+    /// Consume the one-shot "discard checkpointed guard state" marker
+    /// set by a demotion (the next slice resumes under the widened
+    /// guard, whose saved state belongs to the old configuration).
+    pub fn take_refresh_guard(&mut self, i: usize) -> bool {
+        std::mem::take(&mut self.tenants[i].refresh_guard)
+    }
+
+    pub(crate) fn export(&self) -> Vec<TenantSup> {
+        self.tenants.clone()
+    }
+
+    pub(crate) fn import(&mut self, tenants: Vec<TenantSup>) {
+        assert_eq!(tenants.len(), self.tenants.len(), "manifest tenant count");
+        self.tenants = tenants;
+    }
+}
+
+/// The demoted-precision policy: every tensor class pinned to BF16.
+/// Same decision surface as any other `DecisionPolicy`, so the demoted
+/// run stays on the standard code path — just with quantization off.
+pub fn demotion_policy() -> PolicyRef {
+    Arc::new(StaticAssignmentPolicy { table: [ReprType::Bf16; 3] })
+}
+
+/// Rewrite one tenant's `TrainerOptions` for a demotion rung. Rung 1
+/// forces the BF16 static policy with a widened guard (and `repin`, so
+/// the tenant's own ring — pinned to the original policy/guard — still
+/// resumes); rung 2 additionally drops the run to scalar kernels,
+/// derived from the fleet's parallelism so the pool configuration is
+/// preserved. Rungs are cumulative and idempotent.
+pub fn apply_demotion(o: &mut TrainerOptions, rung: u8, fleet_par: &Parallelism) {
+    if rung >= 1 {
+        o.policy = Some(demotion_policy());
+        o.guard = o.guard.map(|g| g.widened());
+        o.repin = true;
+    }
+    if rung >= 2 {
+        let base = o.parallelism.clone().unwrap_or_else(|| fleet_par.clone());
+        o.parallelism = Some(base.with_kernel(KernelMode::Scalar));
+    }
+}
+
+/// Resolve `MOR_RETRIES` strictly (library-side twin of `--retries`);
+/// `fallback` when unset, a loud panic when malformed — the same
+/// contract as the other env autos.
+pub fn auto_retries(fallback: u32) -> u32 {
+    match crate::util::env::parse_pos_int(
+        crate::util::env::var("MOR_RETRIES").as_deref(),
+        "MOR_RETRIES ",
+        "positive retry count",
+        "unset it to default to 3",
+    ) {
+        Ok(v) => v.map(|n| n as u32).unwrap_or(fallback),
+        Err(msg) => panic!("{msg}"),
+    }
+}
+
+/// Resolve `MOR_STALL_AFTER` strictly (twin of `--stall-after`).
+pub fn auto_stall_after(fallback: u32) -> u32 {
+    match crate::util::env::parse_pos_int(
+        crate::util::env::var("MOR_STALL_AFTER").as_deref(),
+        "MOR_STALL_AFTER ",
+        "positive slice count",
+        "unset it to default to 3",
+    ) {
+        Ok(v) => v.map(|n| n as u32).unwrap_or(fallback),
+        Err(msg) => panic!("{msg}"),
+    }
+}
+
+/// One tenant's row in the fleet manifest: the supervisor ledger plus
+/// the scheduler state (progress, stride pass, terminal status) the
+/// tenant's own checkpoint ring cannot carry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestTenant {
+    pub id: String,
+    pub sup: TenantSup,
+    /// Completed steps at the last round boundary.
+    pub completed: u64,
+    /// Slices dispatched so far.
+    pub slices: u64,
+    /// Stride-scheduler virtual pass (u128, split hi/lo on disk).
+    pub pass: u128,
+    /// Terminal error text, if the tenant already failed for good.
+    pub failed: Option<String>,
+    /// Whether the tenant already ran to completion.
+    pub done: bool,
+}
+
+/// The crash-safe fleet manifest: everything `run_fleet` needs to
+/// restart mid-fleet bitwise. Saved atomically (tmp + fsync + rename)
+/// with per-section CRC32 trailers via the `MORCKPT2` container, so a
+/// torn or corrupt manifest fails loudly at load.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetManifest {
+    /// Next round to run (every round below this completed fully).
+    pub round: u64,
+    /// The fleet's quantum, pinned so a resume with different slicing
+    /// fails instead of silently diverging.
+    pub quantum: u64,
+    pub tenants: Vec<ManifestTenant>,
+    /// Schedule log of the completed rounds.
+    pub schedule: Vec<Slice>,
+}
+
+const SEC_META: &str = "fleet/meta";
+const SEC_TENANTS: &str = "fleet/tenants";
+const SEC_SCHEDULE: &str = "fleet/schedule";
+const MANIFEST_VERSION: u8 = 1;
+
+impl FleetManifest {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut ck = Checkpoint::new(self.round, Vec::new());
+
+        let mut meta = Vec::new();
+        put_u8(&mut meta, MANIFEST_VERSION);
+        put_u64(&mut meta, self.round);
+        put_u64(&mut meta, self.quantum);
+        ck.push_section(SEC_META, meta);
+
+        let mut tb = Vec::new();
+        put_u32(&mut tb, self.tenants.len() as u32);
+        for t in &self.tenants {
+            put_str(&mut tb, &t.id);
+            put_u8(&mut tb, t.sup.health.code());
+            put_u32(&mut tb, t.sup.retries_used);
+            put_u32(&mut tb, t.sup.retries_total);
+            put_u64(&mut tb, t.sup.backoff_until);
+            put_u64(&mut tb, t.sup.backoff_len);
+            put_u32(&mut tb, t.sup.stall_slices);
+            put_u8(&mut tb, t.sup.demotions);
+            put_u8(&mut tb, t.sup.refresh_guard as u8);
+            put_u64(&mut tb, t.completed);
+            put_u64(&mut tb, t.slices);
+            put_u64(&mut tb, (t.pass >> 64) as u64);
+            put_u64(&mut tb, t.pass as u64);
+            put_u8(&mut tb, t.done as u8);
+            match &t.failed {
+                Some(e) => {
+                    put_u8(&mut tb, 1);
+                    // Error text is diagnostic; clip to the container's
+                    // name cap rather than asserting on a long message.
+                    let clipped: String = e.chars().take(1024).collect();
+                    put_str(&mut tb, &clipped);
+                }
+                None => put_u8(&mut tb, 0),
+            }
+        }
+        ck.push_section(SEC_TENANTS, tb);
+
+        let mut sb = Vec::new();
+        put_u32(&mut sb, self.schedule.len() as u32);
+        for s in &self.schedule {
+            put_u64(&mut sb, s.round);
+            put_u32(&mut sb, s.tenant as u32);
+            put_u64(&mut sb, s.from_step);
+            put_u64(&mut sb, s.to_step);
+        }
+        ck.push_section(SEC_SCHEDULE, sb);
+
+        ck.save(path)
+    }
+
+    pub fn load(path: &Path) -> Result<FleetManifest> {
+        let ck = Checkpoint::load(path)?;
+        let meta = ck
+            .section(SEC_META)
+            .with_context(|| format!("fleet manifest {} has no {SEC_META}", path.display()))?;
+        let mut rd = Rd::new(meta);
+        let version = rd.u8("manifest version")?;
+        if version != MANIFEST_VERSION {
+            bail!(
+                "fleet manifest {} is version {version}, this build reads {MANIFEST_VERSION}",
+                path.display()
+            );
+        }
+        let round = rd.u64("manifest round")?;
+        let quantum = rd.u64("manifest quantum")?;
+        rd.expect_done(SEC_META)?;
+
+        let tb = ck
+            .section(SEC_TENANTS)
+            .with_context(|| format!("fleet manifest {} has no {SEC_TENANTS}", path.display()))?;
+        let mut rd = Rd::new(tb);
+        let n = rd.u32("tenant count")? as usize;
+        let mut tenants = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = rd.str("tenant id")?;
+            let sup = TenantSup {
+                health: Health::from_code(rd.u8("health")?)?,
+                retries_used: rd.u32("retries_used")?,
+                retries_total: rd.u32("retries_total")?,
+                backoff_until: rd.u64("backoff_until")?,
+                backoff_len: rd.u64("backoff_len")?,
+                stall_slices: rd.u32("stall_slices")?,
+                demotions: rd.u8("demotions")?,
+                refresh_guard: rd.u8("refresh_guard")? != 0,
+            };
+            let completed = rd.u64("completed")?;
+            let slices = rd.u64("slices")?;
+            let pass = ((rd.u64("pass hi")? as u128) << 64) | rd.u64("pass lo")? as u128;
+            let done = rd.u8("done")? != 0;
+            let failed = match rd.u8("failed flag")? {
+                0 => None,
+                _ => Some(rd.str("failure text")?),
+            };
+            tenants.push(ManifestTenant { id, sup, completed, slices, pass, failed, done });
+        }
+        rd.expect_done(SEC_TENANTS)?;
+
+        let sb = ck
+            .section(SEC_SCHEDULE)
+            .with_context(|| format!("fleet manifest {} has no {SEC_SCHEDULE}", path.display()))?;
+        let mut rd = Rd::new(sb);
+        let n = rd.u32("schedule length")? as usize;
+        let mut schedule = Vec::with_capacity(n);
+        for _ in 0..n {
+            schedule.push(Slice {
+                round: rd.u64("slice round")?,
+                tenant: rd.u32("slice tenant")? as usize,
+                from_step: rd.u64("slice from")?,
+                to_step: rd.u64("slice to")?,
+            });
+        }
+        rd.expect_done(SEC_SCHEDULE)?;
+
+        Ok(FleetManifest { round, quantum, tenants, schedule })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sup(retries: u32, backoff: u64) -> Supervisor {
+        let opts = SupervisorOptions { retries, backoff, ..SupervisorOptions::new() };
+        Supervisor::new(opts, 2)
+    }
+
+    #[test]
+    fn failure_ladder_retries_then_demotes_then_dies() {
+        let mut s = sup(2, 1);
+        // Two retries at rung 0 with doubling backoff.
+        assert_eq!(s.on_failure(0, 0, false), FailureVerdict::Retry { release_round: 2 });
+        assert_eq!(s.tenant(0).health, Health::Backoff);
+        assert!(!s.eligible(0, 1), "still backing off");
+        assert!(s.eligible(0, 2), "released");
+        assert_eq!(s.on_failure(0, 2, false), FailureVerdict::Retry { release_round: 5 });
+        // Budget spent: demote to rung 1, budget refreshes.
+        assert_eq!(s.on_failure(0, 5, false), FailureVerdict::Demote { rung: 1 });
+        assert_eq!(s.tenant(0).health, Health::Quarantined);
+        assert!(s.take_refresh_guard(0), "demotion schedules a guard refresh");
+        assert!(!s.take_refresh_guard(0), "one-shot");
+        // Fresh budget at rung 1; backoff escalation restarted.
+        assert_eq!(s.on_failure(0, 6, false), FailureVerdict::Retry { release_round: 8 });
+        assert_eq!(s.on_failure(0, 8, false), FailureVerdict::Retry { release_round: 11 });
+        assert_eq!(s.on_failure(0, 11, false), FailureVerdict::Demote { rung: 2 });
+        // Rung 2 budget, then Dead.
+        assert_eq!(s.on_failure(0, 12, false), FailureVerdict::Retry { release_round: 14 });
+        assert_eq!(s.on_failure(0, 14, false), FailureVerdict::Retry { release_round: 17 });
+        assert_eq!(s.on_failure(0, 17, false), FailureVerdict::Dead);
+        assert_eq!(s.tenant(0).health, Health::Dead);
+        assert!(!s.eligible(0, 99));
+        // The neighbor's ledger never moved.
+        assert_eq!(s.tenant(1).health, Health::Healthy);
+    }
+
+    #[test]
+    fn guard_exhaustion_skips_the_retry_branch() {
+        let mut s = sup(3, 1);
+        assert_eq!(s.on_failure(0, 4, true), FailureVerdict::Demote { rung: 1 });
+        assert_eq!(s.tenant(0).retries_total, 0, "no retries were burned");
+        assert_eq!(s.tenant(0).demotions, 1);
+    }
+
+    #[test]
+    fn progress_resets_trust_but_quarantine_sticks() {
+        let mut s = sup(1, 1);
+        assert!(matches!(s.on_failure(0, 0, false), FailureVerdict::Retry { .. }));
+        s.on_release(0);
+        assert_eq!(s.tenant(0).health, Health::Degraded);
+        s.on_progress(0);
+        assert_eq!(s.tenant(0).health, Health::Healthy);
+        assert_eq!(s.tenant(0).backoff_len, 0, "escalation reset");
+        // After a demotion, progress restores Quarantined, not Healthy.
+        assert!(matches!(s.on_failure(0, 1, true), FailureVerdict::Demote { .. }));
+        s.on_progress(0);
+        assert_eq!(s.tenant(0).health, Health::Quarantined);
+    }
+
+    #[test]
+    fn stall_watchdog_counts_consecutive_no_progress_slices() {
+        let opts = SupervisorOptions { stall_after: 2, ..SupervisorOptions::new() };
+        let mut s = Supervisor::new(opts, 1);
+        assert!(s.on_no_progress(0, 7).is_none(), "first stall tolerated");
+        s.on_progress(0);
+        assert!(s.on_no_progress(0, 7).is_none(), "progress reset the count");
+        let msg = s.on_no_progress(0, 7).expect("second consecutive stall trips");
+        assert!(msg.contains("stalled"), "{msg}");
+        assert!(msg.contains("stuck at step 7"), "{msg}");
+    }
+
+    #[test]
+    fn manifest_round_trips_and_rejects_corruption() {
+        let dir =
+            std::env::temp_dir().join(format!("mor_sup_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fleet.manifest");
+        let manifest = FleetManifest {
+            round: 3,
+            quantum: 4,
+            tenants: vec![
+                ManifestTenant {
+                    id: "a".into(),
+                    sup: TenantSup {
+                        health: Health::Backoff,
+                        retries_used: 1,
+                        retries_total: 2,
+                        backoff_until: 5,
+                        backoff_len: 4,
+                        stall_slices: 1,
+                        demotions: 1,
+                        refresh_guard: true,
+                    },
+                    completed: 6,
+                    slices: 2,
+                    pass: (7u128 << 64) | 9,
+                    failed: None,
+                    done: false,
+                },
+                ManifestTenant {
+                    id: "b".into(),
+                    sup: TenantSup { health: Health::Dead, ..TenantSup::new() },
+                    completed: 2,
+                    slices: 3,
+                    pass: 11,
+                    failed: Some("step panicked: injected".into()),
+                    done: false,
+                },
+            ],
+            schedule: vec![Slice { round: 0, tenant: 1, from_step: 0, to_step: 2 }],
+        };
+        manifest.save(&path).unwrap();
+        assert_eq!(FleetManifest::load(&path).unwrap(), manifest);
+
+        // Any flipped byte in the container fails the CRC loudly.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(FleetManifest::load(&path).is_err(), "corrupt manifest must not load");
+
+        // A torn (truncated) file fails too.
+        manifest.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(FleetManifest::load(&path).is_err(), "torn manifest must not load");
+    }
+
+    #[test]
+    fn env_autos_resolve_strictly() {
+        std::env::remove_var("MOR_RETRIES");
+        std::env::remove_var("MOR_STALL_AFTER");
+        assert_eq!(auto_retries(7), 7);
+        assert_eq!(auto_stall_after(5), 5);
+    }
+
+    #[test]
+    fn demotion_rewrites_policy_guard_and_kernels_cumulatively() {
+        use super::super::guard::GuardConfig;
+        let fleet_par = Parallelism::serial();
+        let mut o = TrainerOptions::new("art", 8, std::path::PathBuf::from("/tmp/x"));
+        o.guard = Some(GuardConfig::default());
+        apply_demotion(&mut o, 1, &fleet_par);
+        assert!(o.repin);
+        assert_eq!(o.policy.as_ref().unwrap().pin(), demotion_policy().pin());
+        assert_eq!(
+            o.guard.unwrap().max_rewinds,
+            GuardConfig::default().max_rewinds * 2 + 2
+        );
+        assert!(o.parallelism.is_none(), "rung 1 leaves kernels alone");
+        apply_demotion(&mut o, 2, &fleet_par);
+        assert!(o.parallelism.is_some(), "rung 2 pins scalar kernels");
+    }
+}

@@ -35,7 +35,7 @@
 
 use super::checkpoint::{scan_ring, section, sweep_stale_tmp, MetricsState, TrainCheckpoint};
 use super::eval::{eval_suite, EvalScores};
-use super::guard::{GuardConfig, GuardEvent, GuardVerdict, NumericGuard};
+use super::guard::{GuardConfig, GuardEvent, GuardVerdict, NumericGuard, REWIND_EXHAUSTED_MSG};
 use super::logging::{csv_lines_digest, MetricsLogger, StepRecord};
 use crate::data::loader::BatchLoader;
 use crate::data::synthetic::CorpusProfile;
@@ -50,6 +50,7 @@ use crate::util::par::Parallelism;
 use anyhow::{bail, Context, Result};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -134,6 +135,25 @@ pub struct TrainerOptions {
     /// it is scheduling, not numerics, so it is deliberately NOT pinned
     /// into checkpoints. `None` (or `>= steps`) runs to completion.
     pub stop_after: Option<u64>,
+    /// Cooperative stop flag, polled at every step boundary (and while
+    /// a `stall` fault spins): when another thread sets it, the run
+    /// suspends at the next completed step exactly like `stop_after` —
+    /// suspension checkpoint included — enabling mid-quantum preemption
+    /// without wall-clock timers. Like `stop_after` it is scheduling,
+    /// not numerics, and is NOT pinned into checkpoints.
+    pub stop_flag: Option<Arc<AtomicBool>>,
+    /// Accept checkpoint pin mismatches for `opt/policy` and
+    /// `opt/guard` only (printing what changed instead of bailing).
+    /// This is the fleet supervisor's demotion escape hatch: a demoted
+    /// tenant resumes its own ring under a forced BF16 policy and a
+    /// widened guard, deliberately diverging from the pinned originals.
+    /// All other pins (steps, threshold, cadences) still bail.
+    pub repin: bool,
+    /// Skip importing checkpointed guard state on resume, starting the
+    /// guard clean (strikes, quarantines and rewind budget all zero).
+    /// Used with `repin` when the supervisor swaps in a widened guard
+    /// whose saved state belongs to the old configuration.
+    pub fresh_guard: bool,
 }
 
 impl TrainerOptions {
@@ -158,6 +178,9 @@ impl TrainerOptions {
             ckpt_keep: 0,
             auto_resume: false,
             stop_after: None,
+            stop_flag: None,
+            repin: false,
+            fresh_guard: false,
         }
     }
 }
@@ -247,9 +270,12 @@ impl<'rt> Trainer<'rt> {
             Some(path) => Some(self.restore(path, &mut session, opts, &policy)?),
             None => None,
         };
-        if let (Some(g), Some(ck)) = (&mut guard, &resumed) {
-            if let Some(bytes) = &ck.guard_state {
-                g.import_state(bytes, false).context("restoring checkpointed guard state")?;
+        if !opts.fresh_guard {
+            if let (Some(g), Some(ck)) = (&mut guard, &resumed) {
+                if let Some(bytes) = &ck.guard_state {
+                    g.import_state(bytes, false)
+                        .context("restoring checkpointed guard state")?;
+                }
             }
         }
         // Resolve the resumed metrics prefix (bit-exact records + the
@@ -349,6 +375,38 @@ impl<'rt> Trainer<'rt> {
 
         let mut step = start_step;
         while step < horizon {
+            // Injected stall (`stall:step@step=N`): the deterministic
+            // stand-in for a wedged tenant. The "hung" step polls the
+            // cooperative stop flag for a bounded budget, then
+            // self-preempts — checkpointing whatever this slice already
+            // completed and ending the slice early, so the scheduler
+            // observes a tenant that stopped making progress (which is
+            // what the supervisor's stall watchdog counts).
+            if faults.as_deref().is_some_and(|p| p.stall_due(step + 1)) {
+                poll_stop(opts.stop_flag.as_deref());
+                if !opts.quiet {
+                    println!("[{}] stalled before step {step}; suspending", opts.artifact);
+                }
+                if step > start_step {
+                    ckpts += 1;
+                    self.save_checkpoint(
+                        &session,
+                        &train_loader,
+                        &val_loader,
+                        &stats,
+                        &records,
+                        &suite_history,
+                        last_val,
+                        ckpts,
+                        opts,
+                        &policy,
+                        faults.as_deref(),
+                        guard.as_ref(),
+                    )?;
+                }
+                break;
+            }
+            let mut stop_now = false;
             let lr = tc.schedule.lr_at(step);
             let batch = train_loader.next_batch();
             let t0 = Instant::now();
@@ -485,8 +543,17 @@ impl<'rt> Trainer<'rt> {
                             // A suspension point always checkpoints —
                             // even off-cadence, even with the cadence
                             // disabled — or the slice's work would be
-                            // lost at eviction.
-                            let suspending = Some(completed) == suspend_at;
+                            // lost at eviction. The cooperative stop
+                            // flag suspends the same way, just at a
+                            // step boundary the setter didn't pick in
+                            // advance.
+                            let flag_stop = opts
+                                .stop_flag
+                                .as_ref()
+                                .is_some_and(|f| f.load(Ordering::Relaxed));
+                            let suspending =
+                                Some(completed) == suspend_at || flag_stop;
+                            stop_now = flag_stop;
                             if (opts.ckpt_every > 0 && on_cadence) || suspending {
                                 ckpts += 1;
                                 self.save_checkpoint(
@@ -525,8 +592,7 @@ impl<'rt> Trainer<'rt> {
                 let g = guard.as_mut().expect("rewind verdicts only come from the guard");
                 if g.rewinds() >= g.config().max_rewinds {
                     bail!(
-                        "numeric guard exhausted its rewind budget ({}) at step {step}: \
-                         {reason}",
+                        "{REWIND_EXHAUSTED_MSG} ({}) at step {step}: {reason}",
                         g.config().max_rewinds
                     );
                 }
@@ -611,6 +677,9 @@ impl<'rt> Trainer<'rt> {
                 continue;
             }
             step += 1;
+            if stop_now {
+                break;
+            }
         }
         logger.flush()?;
 
@@ -704,7 +773,16 @@ impl<'rt> Trainer<'rt> {
                 self.train_config.name
             );
         }
-        if ck.step >= opts.steps {
+        // Auto-resuming a run that already finished is a pure replay:
+        // zero steps execute, and the outcome (records, stats, suite
+        // history, final losses) is reconstructed from the checkpoint
+        // byte-identically. The fleet scheduler leans on this to
+        // materialize reports for tenants that completed before a
+        // supervisor crash. An *explicit* `resume` of a finished run —
+        // or any overshoot — still errors: that is the classic
+        // pass-the-remaining-steps mistake.
+        let finished_replay = opts.auto_resume && ck.step == opts.steps;
+        if ck.step >= opts.steps && !finished_replay {
             bail!(
                 "checkpoint {} already has {} completed steps; nothing to do for a {}-step run \
                  (pass the run's total steps, not the remaining steps)",
@@ -738,6 +816,20 @@ impl<'rt> Trainer<'rt> {
         for (key, got, flag) in pinned {
             if let Some(want) = ck.counter(key) {
                 if want != got {
+                    // The supervisor's demotion escape hatch: a demoted
+                    // tenant deliberately resumes under a different
+                    // policy/guard, which is a visible precision change
+                    // — never a silent one — so only those two pins may
+                    // be overridden.
+                    if opts.repin && matches!(key, "opt/policy" | "opt/guard") {
+                        if !opts.quiet {
+                            println!(
+                                "[repin] {flag} changes from {key}={want} to {got} \
+                                 (supervised demotion)"
+                            );
+                        }
+                        continue;
+                    }
                     bail!(
                         "checkpoint {} pins {flag} ({key}={want}) but this run uses {got}; \
                          resume with the original settings to keep the bitwise contract",
@@ -830,6 +922,28 @@ impl<'rt> Trainer<'rt> {
         ck.save_with_faults(&path, faults, ckpts_written)?;
         Ok(path)
     }
+}
+
+/// How many cooperative yields a stalled step spends watching the stop
+/// flag before it self-preempts. A fixed iteration budget (not a
+/// wall-clock timeout) keeps stalled runs bitwise-reproducible: the
+/// outcome — suspend at this step boundary — is the same whether the
+/// flag arrives on the first yield or never.
+const STALL_POLL_BUDGET: u32 = 4096;
+
+/// Poll the cooperative stop flag while "hung", yielding between reads;
+/// returns whether the flag was observed set before the budget ran out.
+/// With no flag wired the budget is skipped entirely — the stall is
+/// about scheduling, not about burning CPU.
+fn poll_stop(flag: Option<&AtomicBool>) -> bool {
+    let Some(flag) = flag else { return false };
+    for _ in 0..STALL_POLL_BUDGET {
+        if flag.load(Ordering::Relaxed) {
+            return true;
+        }
+        std::thread::yield_now();
+    }
+    false
 }
 
 /// Best-effort text of a panic payload, for guard event details.

@@ -8,6 +8,11 @@
 //! inf:weight@step=9      seed one Inf into a parameter after the update
 //! bitflip:block@p=1e-4   flip one mantissa bit per quantized block w.p. p
 //! panic:worker@step=11   panic inside a parallel worker closure at step 11
+//! repeat-panic:worker@step=5,count=3
+//!                        panic the first 3 attempts of step 5 (rewind
+//!                        replays refire until the plan spent its count)
+//! stall:step@step=4      hang cooperatively before step 4 (the trainer
+//!                        polls its stop flag, then self-preempts)
 //! torn-save@ckpt=2       truncate the 2nd checkpoint save halfway
 //! ```
 //!
@@ -27,7 +32,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 /// Grammar summary used in error messages.
 pub const SPEC_GRAMMAR: &str = "nan:grad@step=N | nan:weight@step=N | inf:grad@step=N | \
-     inf:weight@step=N | bitflip:block@p=P | panic:worker@step=N | torn-save@ckpt=K \
+     inf:weight@step=N | bitflip:block@p=P | panic:worker@step=N | \
+     repeat-panic:worker@step=N,count=K | stall:step@step=N | torn-save@ckpt=K \
      (entries joined with ';')";
 
 /// What value a seed fault injects.
@@ -86,6 +92,19 @@ pub enum Fault {
     Bitflip { p: f64 },
     /// Panic inside a parallel worker closure at a 1-based step.
     PanicWorker { step: u64 },
+    /// Panic inside a parallel worker on the first `count` *attempts*
+    /// of step `step`: unlike the one-shot [`Fault::PanicWorker`], a
+    /// rewind replay of the step refires until the plan has fired
+    /// `count` times — the persistent-failure shape that exercises the
+    /// guard's rewind budget (and, past it, the fleet supervisor's
+    /// demotion ladder).
+    RepeatPanic { step: u64, count: u64 },
+    /// Deterministic stall: the trainer hangs cooperatively before
+    /// executing 1-based step `step` — it polls its stop flag for a
+    /// fixed (wall-clock-free) budget, then self-preempts without
+    /// committing progress. Fires once per plan, i.e. once per fleet
+    /// slice, so a stalled tenant stays stalled across retries.
+    Stall { step: u64 },
     /// Truncate the `ckpt`-th (1-based) checkpoint save halfway.
     TornSave { ckpt: u64 },
 }
@@ -98,6 +117,10 @@ impl Fault {
             }
             Fault::Bitflip { p } => format!("bitflip:block@p={p}"),
             Fault::PanicWorker { step } => format!("panic:worker@step={step}"),
+            Fault::RepeatPanic { step, count } => {
+                format!("repeat-panic:worker@step={step},count={count}")
+            }
+            Fault::Stall { step } => format!("stall:step@step={step}"),
             Fault::TornSave { ckpt } => format!("torn-save@ckpt={ckpt}"),
         }
     }
@@ -129,13 +152,17 @@ fn parse_u64_arg(entry: &str, key: &str, val: &str) -> Result<u64, String> {
     Ok(n)
 }
 
+/// Split one `key=value` argument (most fault kinds take exactly one;
+/// `repeat-panic` splits its comma list first and feeds each part here).
+fn split_kv<'a>(entry: &str, arg: &'a str) -> Result<(&'a str, &'a str), String> {
+    arg.split_once('=')
+        .ok_or_else(|| format!("fault {entry:?}: argument {arg:?} is not key=value"))
+}
+
 fn parse_entry(entry: &str) -> Result<Fault, String> {
     let (head, arg) = entry
         .split_once('@')
         .ok_or_else(|| format!("fault {entry:?} is missing '@': expected {SPEC_GRAMMAR}"))?;
-    let (key, val) = arg
-        .split_once('=')
-        .ok_or_else(|| format!("fault {entry:?}: argument {arg:?} is not key=value"))?;
     let (kind, site) = match head.split_once(':') {
         Some((k, s)) => (k, Some(s)),
         None => (head, None),
@@ -155,6 +182,7 @@ fn parse_entry(entry: &str) -> Result<Fault, String> {
                     ))
                 }
             };
+            let (key, val) = split_kv(entry, arg)?;
             if key != "step" {
                 return Err(format!("fault {entry:?}: {kind} takes step=N, not {key:?}"));
             }
@@ -173,6 +201,7 @@ fn parse_entry(entry: &str) -> Result<Fault, String> {
                     return Err(format!("fault {entry:?}: bitflip needs the block site"));
                 }
             }
+            let (key, val) = split_kv(entry, arg)?;
             if key != "p" {
                 return Err(format!("fault {entry:?}: bitflip takes p=P, not {key:?}"));
             }
@@ -198,11 +227,68 @@ fn parse_entry(entry: &str) -> Result<Fault, String> {
                     return Err(format!("fault {entry:?}: panic needs the worker site"));
                 }
             }
+            let (key, val) = split_kv(entry, arg)?;
             if key != "step" {
                 return Err(format!("fault {entry:?}: panic takes step=N, not {key:?}"));
             }
             let step = parse_u64_arg(entry, "step", val)?;
             Ok(Fault::PanicWorker { step })
+        }
+        "repeat-panic" => {
+            match site {
+                Some("worker") => {}
+                Some(other) => {
+                    return Err(format!(
+                        "fault {entry:?}: unknown repeat-panic site {other:?} (only worker)"
+                    ))
+                }
+                None => {
+                    return Err(format!("fault {entry:?}: repeat-panic needs the worker site"));
+                }
+            }
+            let (mut step, mut count) = (None, None);
+            for part in arg.split(',') {
+                let (key, val) = split_kv(entry, part)?;
+                match key {
+                    "step" if step.is_none() => step = Some(parse_u64_arg(entry, "step", val)?),
+                    "count" if count.is_none() => {
+                        count = Some(parse_u64_arg(entry, "count", val)?)
+                    }
+                    "step" | "count" => {
+                        return Err(format!("fault {entry:?}: duplicate {key} argument"))
+                    }
+                    other => {
+                        return Err(format!(
+                            "fault {entry:?}: repeat-panic takes step=N,count=K, not {other:?}"
+                        ))
+                    }
+                }
+            }
+            match (step, count) {
+                (Some(step), Some(count)) => Ok(Fault::RepeatPanic { step, count }),
+                _ => Err(format!(
+                    "fault {entry:?}: repeat-panic needs both step=N and count=K"
+                )),
+            }
+        }
+        "stall" => {
+            match site {
+                Some("step") => {}
+                Some(other) => {
+                    return Err(format!(
+                        "fault {entry:?}: unknown stall site {other:?} (only step)"
+                    ))
+                }
+                None => {
+                    return Err(format!("fault {entry:?}: stall needs the step site"));
+                }
+            }
+            let (key, val) = split_kv(entry, arg)?;
+            if key != "step" {
+                return Err(format!("fault {entry:?}: stall takes step=N, not {key:?}"));
+            }
+            let step = parse_u64_arg(entry, "step", val)?;
+            Ok(Fault::Stall { step })
         }
         "torn-save" => {
             if let Some(s) = site {
@@ -210,6 +296,7 @@ fn parse_entry(entry: &str) -> Result<Fault, String> {
                     "fault {entry:?}: torn-save takes no site, got {s:?}"
                 ));
             }
+            let (key, val) = split_kv(entry, arg)?;
             if key != "ckpt" {
                 return Err(format!("fault {entry:?}: torn-save takes ckpt=K, not {key:?}"));
             }
@@ -262,22 +349,30 @@ pub struct FaultPlan {
     /// One-shot flags, parallel to `spec.faults` (bitflips re-fire and
     /// ignore theirs).
     fired: Vec<AtomicBool>,
+    /// Per-fault attempt counters, parallel to `spec.faults` (only
+    /// `repeat-panic` reads its slot: fires while the count is below
+    /// its budget).
+    counts: Vec<AtomicU64>,
     bitflips: AtomicU64,
     seeds: AtomicU64,
     panics: AtomicU64,
+    stalls: AtomicU64,
     torn: AtomicU64,
 }
 
 impl FaultPlan {
     pub fn new(spec: FaultSpec, seed: u64) -> Self {
         let fired = spec.faults.iter().map(|_| AtomicBool::new(false)).collect();
+        let counts = spec.faults.iter().map(|_| AtomicU64::new(0)).collect();
         FaultPlan {
             spec,
             seed,
             fired,
+            counts,
             bitflips: AtomicU64::new(0),
             seeds: AtomicU64::new(0),
             panics: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
             torn: AtomicU64::new(0),
         }
     }
@@ -300,12 +395,42 @@ impl FaultPlan {
         due
     }
 
-    /// True once, at the scheduled worker-panic step.
+    /// True when a worker panic is scheduled for this attempt of the
+    /// 1-based step: `panic:worker` fires exactly once per plan;
+    /// `repeat-panic:worker` fires on each attempt of its step until
+    /// the plan has spent its `count` (so a rewind replay of the step
+    /// refires — the persistent-failure shape).
     pub fn worker_panic_due(&self, step1: u64) -> bool {
         for (i, f) in self.spec.faults.iter().enumerate() {
-            if let Fault::PanicWorker { step } = f {
+            match f {
+                Fault::PanicWorker { step } => {
+                    if *step == step1 && !self.fired[i].swap(true, Ordering::Relaxed) {
+                        self.panics.fetch_add(1, Ordering::Relaxed);
+                        return true;
+                    }
+                }
+                Fault::RepeatPanic { step, count } => {
+                    if *step == step1
+                        && self.counts[i].fetch_add(1, Ordering::Relaxed) < *count
+                    {
+                        self.panics.fetch_add(1, Ordering::Relaxed);
+                        return true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        false
+    }
+
+    /// True once, at the scheduled stall step: the trainer responds by
+    /// polling its cooperative stop flag (a fixed, wall-clock-free
+    /// budget) and self-preempting without committing progress.
+    pub fn stall_due(&self, step1: u64) -> bool {
+        for (i, f) in self.spec.faults.iter().enumerate() {
+            if let Fault::Stall { step } = f {
                 if *step == step1 && !self.fired[i].swap(true, Ordering::Relaxed) {
-                    self.panics.fetch_add(1, Ordering::Relaxed);
+                    self.stalls.fetch_add(1, Ordering::Relaxed);
                     return true;
                 }
             }
@@ -387,6 +512,9 @@ impl FaultPlan {
     pub fn panics_fired(&self) -> u64 {
         self.panics.load(Ordering::Relaxed)
     }
+    pub fn stalls_fired(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
     pub fn torn_fired(&self) -> u64 {
         self.torn.load(Ordering::Relaxed)
     }
@@ -430,12 +558,17 @@ mod tests {
 
     #[test]
     fn grammar_round_trips_canonical_spellings() {
-        let spec = "nan:grad@step=7;bitflip:block@p=0.0001;panic:worker@step=11;torn-save@ckpt=2";
+        let spec = "nan:grad@step=7;bitflip:block@p=0.0001;panic:worker@step=11;\
+                    repeat-panic:worker@step=5,count=3;stall:step@step=4;torn-save@ckpt=2";
         let parsed = parse_faults(Some(spec)).unwrap().unwrap();
-        assert_eq!(parsed.faults.len(), 4);
+        assert_eq!(parsed.faults.len(), 6);
         assert_eq!(parsed.describe(), spec);
         let reparsed = parse_faults(Some(&parsed.describe())).unwrap().unwrap();
         assert_eq!(reparsed, parsed);
+        // repeat-panic arguments are order-insensitive; the canonical
+        // spelling puts step first.
+        let swapped = parse_faults(Some("repeat-panic:worker@count=3,step=5")).unwrap().unwrap();
+        assert_eq!(swapped.describe(), "repeat-panic:worker@step=5,count=3");
     }
 
     #[test]
@@ -465,6 +598,18 @@ mod tests {
             "torn-save@step=1",          // wrong key
             "frob:grad@step=1",          // unknown kind
             "nan:grad@step=1;;inf:grad@step=2", // empty entry
+            "repeat-panic@step=1,count=2",   // missing site
+            "repeat-panic:main@step=1,count=2", // malformed site
+            "repeat-panic:worker@step=1",    // missing count
+            "repeat-panic:worker@count=2",   // missing step
+            "repeat-panic:worker@step=0,count=2", // step 0 never fires
+            "repeat-panic:worker@step=1,count=0", // zero budget never fires
+            "repeat-panic:worker@step=1,count=2,step=3", // duplicate key
+            "repeat-panic:worker@step=1,blort=2", // unknown key
+            "stall@step=3",              // missing site
+            "stall:worker@step=3",       // malformed site
+            "stall:step@step=0",         // step 0 never fires
+            "stall:step@count=3",        // wrong key
         ] {
             assert!(parse_faults(Some(bad)).is_err(), "accepted {bad:?}");
         }
@@ -492,6 +637,32 @@ mod tests {
         assert!(!plan.torn_save_due(1));
         assert!(plan.torn_save_due(2));
         assert!(!plan.torn_save_due(2));
+    }
+
+    #[test]
+    fn repeat_panic_fires_per_attempt_until_its_count_is_spent() {
+        let spec = parse_faults(Some("repeat-panic:worker@step=4,count=2")).unwrap().unwrap();
+        let plan = FaultPlan::new(spec, 42);
+        assert!(!plan.worker_panic_due(3), "wrong step never fires");
+        assert!(plan.worker_panic_due(4), "attempt 1 fires");
+        assert!(plan.worker_panic_due(4), "attempt 2 (a rewind replay) refires");
+        assert!(!plan.worker_panic_due(4), "the count is spent");
+        assert!(!plan.worker_panic_due(4));
+        assert_eq!(plan.panics_fired(), 2);
+    }
+
+    #[test]
+    fn stall_fires_exactly_once_per_plan() {
+        let spec = parse_faults(Some("stall:step@step=3")).unwrap().unwrap();
+        let plan = FaultPlan::new(spec, 42);
+        assert!(!plan.stall_due(2));
+        assert!(plan.stall_due(3));
+        assert!(!plan.stall_due(3), "one-shot within a plan");
+        assert_eq!(plan.stalls_fired(), 1);
+        // A fresh plan (a new fleet slice) refires: stalls persist
+        // across retries by construction.
+        let spec = parse_faults(Some("stall:step@step=3")).unwrap().unwrap();
+        assert!(FaultPlan::new(spec, 42).stall_due(3));
     }
 
     #[test]

@@ -191,6 +191,50 @@ fn max_runs_of(args: &Args, fallback: usize) -> usize {
     }
 }
 
+/// `--retries N` sets the fleet supervisor's retry budget per tenant
+/// per demotion rung. Falls back to `MOR_RETRIES`, then 3.
+fn retries_of(args: &Args) -> u32 {
+    let (raw, prefix): (Option<String>, &str) = match args.get("retries") {
+        Some(v) => (Some(v.to_string()), "--retries "),
+        None => (mor::util::env::var("MOR_RETRIES"), "MOR_RETRIES "),
+    };
+    match mor::util::env::parse_pos_int(
+        raw.as_deref(),
+        prefix,
+        "positive retry count",
+        "unset it to default to 3",
+    ) {
+        Ok(Some(n)) => n as u32,
+        Ok(None) => 3,
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `--stall-after N` sets how many consecutive no-progress slices the
+/// stall watchdog tolerates. Falls back to `MOR_STALL_AFTER`, then 3.
+fn stall_after_of(args: &Args) -> u32 {
+    let (raw, prefix): (Option<String>, &str) = match args.get("stall-after") {
+        Some(v) => (Some(v.to_string()), "--stall-after "),
+        None => (mor::util::env::var("MOR_STALL_AFTER"), "MOR_STALL_AFTER "),
+    };
+    match mor::util::env::parse_pos_int(
+        raw.as_deref(),
+        prefix,
+        "positive slice count",
+        "unset it to default to 3",
+    ) {
+        Ok(Some(n)) => n as u32,
+        Ok(None) => 3,
+        Err(msg) => {
+            eprintln!("error: {msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("train") => cmd_train(args),
@@ -217,7 +261,8 @@ USAGE:
                [--quiet] [--policy SPEC] [--faults SPEC] [--guard SPEC]
   repro fleet  --tenants N [--weights W0,W1,...] [--quantum Q] [--max-runs M]
                [--artifact <name>] [--config ...] [--steps N] [--out runs/fleet]
-               [--ckpt-every N] [--guard SPEC] [--faults SPEC]
+               [--ckpt-every N] [--guard SPEC] [--faults SPEC] [--adaptive]
+               [--retries N] [--backoff R] [--stall-after N] [--auto-resume]
   repro eval   [--model ...] [--artifact eval] (evaluates fresh init or --ckpt)
   repro report <table1|table2|table3|table4|fig5..fig21|policies|all>
                [--steps N] [--model ...] [--out report/] [--fresh] [--quiet]
@@ -242,8 +287,10 @@ Robustness options (train):
                              nan:grad@step=N, nan:weight@step=N,
                              inf:grad@step=N, inf:weight@step=N,
                              bitflip:block@p=P, panic:worker@step=N,
-                             torn-save@ckpt=K. Seeded from the training
-                             seed — bitwise reproducible at any --threads.
+                             repeat-panic:worker@step=N,count=K,
+                             stall:step@step=N, torn-save@ckpt=K. Seeded
+                             from the training seed — bitwise
+                             reproducible at any --threads.
   --guard SPEC               numeric guard (MOR_GUARD): `on`, `off` or
                              skip=K,quarantine=N,rewinds=R,spike=F.
                              Escalates skip-step → BF16
@@ -269,8 +316,24 @@ Fleet options (fleet):
                              checkpoint ring — bitwise identical to solo runs.
   --max-runs M               tenants resident per round (MOR_MAX_RUNS;
                              default: the pool's thread count)
+  --adaptive                 shrink slice quanta while more tenants are
+                             runnable than --max-runs slots (scheduling only;
+                             trajectories stay bitwise-identical)
+  --retries N                supervisor retry budget per tenant per demotion
+                             rung (MOR_RETRIES; default 3)
+  --backoff R                base backoff in scheduler rounds, doubling per
+                             retry (default 1)
+  --stall-after N            consecutive no-progress slices before the stall
+                             watchdog trips (MOR_STALL_AFTER; default 3)
+  --auto-resume              restart a crashed fleet from <out>/fleet.manifest
+                             (tenant rings resume regardless; the manifest
+                             restores the scheduler/supervisor ledger so the
+                             resumed interleaving is bitwise-continuous)
   --faults SPEC              injected into tenant 0 only — a containment demo:
-                             the other tenants must finish unperturbed
+                             the other tenants must finish unperturbed.
+                             A failing tenant walks the supervisor ladder:
+                             retry w/ backoff → BF16 quarantine + widened
+                             guard → scalar kernels → dead
 
 Checkpoint/resume: `--ckpt-every N` writes a full MORCKPT2 training
 checkpoint (params, Adam moments, data cursors, RNG streams, scaling
@@ -335,6 +398,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// scheduler (host backend; see `coordinator::scheduler`).
 fn cmd_fleet(args: &Args) -> Result<()> {
     use mor::coordinator::scheduler::{run_fleet, FleetOptions, Tenant};
+    use mor::coordinator::supervisor::SupervisorOptions;
     let model = model_of(args)?;
     let steps = args.u64("steps", 100);
     let n = args.usize("tenants", 2);
@@ -368,6 +432,18 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     fleet_opts.max_runs = max_runs_of(args, fleet_opts.max_runs);
     fleet_opts.quantum = args.u64("quantum", 0);
     fleet_opts.quiet = args.flag("quiet");
+    fleet_opts.adaptive = args.flag("adaptive");
+    // The fleet always runs supervised from the CLI: retry/backoff,
+    // the degradation ladder, the stall watchdog, and a crash-safe
+    // manifest in the fleet out dir (`--auto-resume` restarts a
+    // crashed fleet from it, bitwise).
+    let mut so = SupervisorOptions::new();
+    so.retries = retries_of(args);
+    so.backoff = args.u64("backoff", 1);
+    so.stall_after = stall_after_of(args);
+    so.manifest = Some(out.join("fleet.manifest"));
+    so.auto_resume = args.flag("auto-resume");
+    fleet_opts.supervisor = Some(so);
     let tenants: Vec<Tenant> = (0..n)
         .map(|i| {
             let id = format!("tenant{i}");
@@ -390,29 +466,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         })
         .collect();
     let fleet = run_fleet(&tenants, &fleet_opts)?;
-    println!(
-        "{:<10} {:>6} {:>7} {:>10} {:>10}  status",
-        "tenant", "weight", "slices", "train", "val"
-    );
-    for (i, t) in fleet.tenants.iter().enumerate() {
-        let (train, val) = t
-            .outcome
-            .as_ref()
-            .map(|o| (o.final_train_loss, o.final_val_loss))
-            .unwrap_or((f32::NAN, f32::NAN));
-        println!(
-            "{:<10} {:>6} {:>7} {:>10.4} {:>10.4}  {}",
-            t.id,
-            tenants[i].weight,
-            t.slices,
-            train,
-            val,
-            match &t.error {
-                None => "ok".to_string(),
-                Some(e) => format!("FAILED: {e}"),
-            }
-        );
-    }
+    print!("{}", fleet.summary_table());
+    let csv_path = out.join("fleet_summary.csv");
+    std::fs::create_dir_all(&out)?;
+    std::fs::write(&csv_path, fleet.summary_csv())
+        .with_context(|| format!("writing {}", csv_path.display()))?;
+    println!("summary csv at {}", csv_path.display());
     println!(
         "{} tenants over {} rounds ({} slices, max {} resident, quantum {})",
         n,

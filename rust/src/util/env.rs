@@ -33,7 +33,9 @@ pub struct Knob {
 /// resolves `MOR_POLICY`; `faults::auto` and `coordinator::guard::auto`
 /// resolve `MOR_FAULTS` / `MOR_GUARD`; `main` resolves `MOR_CKPT_KEEP`;
 /// `coordinator::scheduler::auto_max_runs` (and `main`'s `--max-runs`)
-/// resolve `MOR_MAX_RUNS`.
+/// resolve `MOR_MAX_RUNS`; `coordinator::supervisor::auto_retries` /
+/// `auto_stall_after` (and `main`'s `--retries` / `--stall-after`)
+/// resolve `MOR_RETRIES` / `MOR_STALL_AFTER`.
 pub const KNOBS: &[Knob] = &[
     Knob {
         env: "MOR_THREADS",
@@ -91,6 +93,19 @@ pub const KNOBS: &[Knob] = &[
         flag: Some("--max-runs N"),
         default_desc: "pool thread count",
         meaning: "fleet scheduler: max training runs resident per round",
+    },
+    Knob {
+        env: "MOR_RETRIES",
+        flag: Some("--retries N"),
+        default_desc: "3",
+        meaning: "fleet supervisor: retry budget per tenant per demotion rung",
+    },
+    Knob {
+        env: "MOR_STALL_AFTER",
+        flag: Some("--stall-after N"),
+        default_desc: "3",
+        meaning: "fleet supervisor: consecutive no-progress slices before the \
+                  stall watchdog trips",
     },
 ];
 
@@ -199,7 +214,9 @@ mod tests {
                 "MOR_FAULTS",
                 "MOR_GUARD",
                 "MOR_CKPT_KEEP",
-                "MOR_MAX_RUNS"
+                "MOR_MAX_RUNS",
+                "MOR_RETRIES",
+                "MOR_STALL_AFTER"
             ]
         );
     }

@@ -9,7 +9,10 @@
 //!   are skip-stepped and quarantined, seeded NaN weights and worker
 //!   panics trigger a checkpoint rewind whose recovered trajectory is
 //!   **bitwise identical to a clean run**, block bit-flips are caught
-//!   and quarantined, and torn checkpoint saves are walked past;
+//!   and quarantined, torn checkpoint saves are walked past, repeating
+//!   panics burn one rewind per refire (and exhaust the budget loudly
+//!   when they outlast it), and the stall fault self-preempts instead
+//!   of hanging;
 //! * the checkpoint ring is crash-safe: CRC-corrupt and torn files are
 //!   detected by `TrainCheckpoint::load`, `--auto-resume` walks the
 //!   ring newest → oldest past them (sweeping stale save temps), and
@@ -124,19 +127,22 @@ fn fault_grammar_accepts_and_round_trips() {
     assert!(parse_faults(None).unwrap().is_none());
     let spec = parse_faults(Some(
         "nan:grad@step=7;inf:weight@step=9;bitflip:block@p=1e-4;panic:worker@step=11;\
-         torn-save@ckpt=2",
+         repeat-panic:worker@step=5,count=3;stall:step@step=4;torn-save@ckpt=2",
     ))
     .unwrap()
     .unwrap();
-    assert_eq!(spec.faults.len(), 5);
+    assert_eq!(spec.faults.len(), 7);
     // Canonical spelling round-trips (1e-4 normalizes to 0.0001).
     let canon = spec.describe();
     assert_eq!(
         canon,
         "nan:grad@step=7;inf:weight@step=9;bitflip:block@p=0.0001;panic:worker@step=11;\
-         torn-save@ckpt=2"
+         repeat-panic:worker@step=5,count=3;stall:step@step=4;torn-save@ckpt=2"
     );
     assert_eq!(parse_faults(Some(&canon)).unwrap().unwrap(), spec);
+    // repeat-panic's comma args canonicalize step-first.
+    let swapped = parse_faults(Some("repeat-panic:worker@count=3,step=5")).unwrap().unwrap();
+    assert_eq!(swapped.describe(), "repeat-panic:worker@step=5,count=3");
     // Entry-level whitespace is tolerated.
     let ws = parse_faults(Some(" nan:grad@step=7 ; inf:grad@step=2 ")).unwrap().unwrap();
     assert_eq!(ws.faults.len(), 2);
@@ -171,6 +177,18 @@ fn fault_grammar_rejects_malformed() {
         "torn-save@step=1",       // wrong key for torn-save
         "torn-save@ckpt=0",       // save indices are 1-based
         "blort:worker@step=3",    // unknown fault kind
+        "repeat-panic@step=5,count=2",          // missing worker site
+        "repeat-panic:block@step=5,count=2",    // wrong site
+        "repeat-panic:worker@step=5",           // count is required
+        "repeat-panic:worker@count=2",          // step is required
+        "repeat-panic:worker@step=0,count=2",   // before the first step
+        "repeat-panic:worker@step=5,count=0",   // zero refires never fire
+        "repeat-panic:worker@step=5,count=2,step=6", // duplicate key
+        "repeat-panic:worker@step=5,blort=2",   // unknown key
+        "stall@step=4",        // stall without the step site
+        "stall:worker@step=4", // wrong stall site
+        "stall:step@ckpt=4",   // wrong key for stall
+        "stall:step@step=0",   // before the first step
     ] {
         assert!(parse_faults(Some(bad)).is_err(), "spec {bad:?} must be rejected");
     }
@@ -334,6 +352,82 @@ fn worker_panic_rewind_recovers_bitwise() {
         std::fs::remove_dir_all(d_clean).ok();
         std::fs::remove_dir_all(d_fault).ok();
     }
+}
+
+/// `repeat-panic:worker@step=N,count=K` re-fires on the first K
+/// attempts of step N — including the guard's rewind replays. With K
+/// within the rewind budget the guard burns exactly K rewinds and the
+/// recovered trajectory is bitwise identical to a clean guarded run.
+#[test]
+fn repeat_panic_within_guard_budget_recovers_bitwise() {
+    for (label, par) in thread_sweep() {
+        let d_clean = tmpdir(&format!("rpanic_clean_{label}"));
+        let d_fault = tmpdir(&format!("rpanic_fault_{label}"));
+        let clean = run_in(&d_clean, ARTIFACT, 8, &par, |o| {
+            guarded(o);
+            o.ckpt_every = 2;
+        })
+        .unwrap();
+        let recovered = run_in(&d_fault, ARTIFACT, 8, &par, |o| {
+            guarded(o);
+            o.ckpt_every = 2;
+            with_faults(o, "repeat-panic:worker@step=5,count=2");
+        })
+        .unwrap();
+        assert_outcomes_bitwise_eq(&clean, &recovered, label);
+        assert_eq!(count(&recovered, GuardAction::Rewind), 2, "{label}: two rewinds");
+        std::fs::remove_dir_all(d_clean).ok();
+        std::fs::remove_dir_all(d_fault).ok();
+    }
+}
+
+/// With more refires than the rewind budget, every replay panics again
+/// and the guard gives up loudly — the error names the exhausted
+/// budget (the supervisor's cue to demote rather than retry).
+#[test]
+fn repeat_panic_beyond_budget_exhausts_the_guard() {
+    let dir = tmpdir("rpanic_exhaust");
+    let err = run_in(&dir, ARTIFACT, 8, &Parallelism::serial(), |o| {
+        guarded(o);
+        o.ckpt_every = 2;
+        with_faults(o, "repeat-panic:worker@step=5,count=5");
+    })
+    .expect_err("unsurvivable refire count must fail the run");
+    let text = format!("{err:#}");
+    assert!(
+        text.contains("exhausted its rewind budget"),
+        "error names the exhausted budget, got {text:?}"
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The stall fault self-preempts instead of hanging: the "wedged" step
+/// polls the cooperative stop flag for a bounded budget, checkpoints
+/// the finished prefix, and ends the run early — and auto-resume later
+/// completes the trajectory bitwise identical to an unstalled run.
+#[test]
+fn stall_fault_self_preempts_without_hanging() {
+    let par = Parallelism::serial();
+    let d_clean = tmpdir("stall_clean");
+    let d_stall = tmpdir("stall_fault");
+    let clean = run_in(&d_clean, ARTIFACT, 6, &par, |o| o.ckpt_every = 2).unwrap();
+    let stalled = run_in(&d_stall, ARTIFACT, 6, &par, |o| {
+        o.ckpt_every = 2;
+        with_faults(o, "stall:step@step=3");
+    })
+    .unwrap();
+    assert_eq!(stalled.records.len(), 2, "two steps finish before the stall");
+    // The suspension checkpoint captured the finished prefix.
+    assert!(TrainCheckpoint::load(&d_stall.join(format!("{ARTIFACT}.step2.ckpt"))).is_ok());
+    // A fault-free auto-resume completes the trajectory bitwise.
+    let resumed = run_in(&d_stall, ARTIFACT, 6, &par, |o| {
+        o.ckpt_every = 2;
+        o.auto_resume = true;
+    })
+    .unwrap();
+    assert_outcomes_bitwise_eq(&clean, &resumed, "resume after stall");
+    std::fs::remove_dir_all(d_clean).ok();
+    std::fs::remove_dir_all(d_stall).ok();
 }
 
 /// Silent block corruption (an exponent bit-flip in every quantized

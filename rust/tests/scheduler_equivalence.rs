@@ -20,6 +20,11 @@
 //!   tiny ones: everyone completes, and the schedule log shows no
 //!   tenant waited longer than its weight-share bound
 //!   `ceil(Σ weights / weight_i)` rounds between slices.
+//! * **Adaptive quanta are bitwise invisible.** Shrinking the slice
+//!   length when the runnable queue overflows the worker cap changes
+//!   *when* tenants are preempted, never *what* they compute: an
+//!   adaptive fleet equals a fixed-quantum fleet bitwise, per tenant,
+//!   at every thread count.
 
 use mor::coordinator::checkpoint::{scan_ring, TrainCheckpoint};
 use mor::coordinator::guard::{GuardAction, GuardConfig};
@@ -337,6 +342,80 @@ fn preemption_at_adversarial_boundaries_is_bitwise_invisible() {
             final_fingerprint(&seg_dir, spec.artifact),
             final_fingerprint(&root.join("cont"), spec.artifact),
             "{label}: final checkpoint state (incl. guard rewind budget)"
+        );
+        std::fs::remove_dir_all(root).ok();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive quanta ≡ fixed quanta
+// ---------------------------------------------------------------------------
+
+/// `--adaptive` divides the quantum by the queue-over-cap ratio (three
+/// runnable tenants over a one-run cap → quantum 4 becomes 1), so
+/// oversubscribed rounds cycle tenants faster. Preemption points move;
+/// the computation must not: every tenant of the adaptive fleet equals
+/// its fixed-quantum twin bitwise — records, decision fractions, guard
+/// events and final checkpoint state — at every thread count.
+#[test]
+fn adaptive_quanta_match_fixed_quanta_bitwise() {
+    for (label, par) in thread_sweep() {
+        let root = tmpdir(&format!("adaptive_{label}"));
+        let specs = [
+            Spec::clean("a", TENSOR, 1, 6),
+            Spec::clean("b", SUBTENSOR, 1, 4),
+            Spec { weight: 2, ..Spec::clean("c", TENSOR, 2, 5) },
+        ];
+        let run = |sub: &str, adaptive: bool| {
+            let tenants: Vec<Tenant> = specs
+                .iter()
+                .map(|s| {
+                    Tenant::new(
+                        s.id,
+                        ModelConfig::TINY,
+                        s.config(),
+                        s.opts(&root.join(sub).join(s.id), &par),
+                    )
+                    .with_weight(s.weight)
+                })
+                .collect();
+            let mut fo = FleetOptions::new(par.clone());
+            fo.quantum = 4;
+            fo.max_runs = 1;
+            fo.adaptive = adaptive;
+            run_fleet(&tenants, &fo).expect("fleet completes")
+        };
+        let fixed = run("fixed", false);
+        let adaptive = run("adaptive", true);
+
+        for s in &specs {
+            let f = fixed.tenant(s.id).expect("fixed tenant reported");
+            let a = adaptive.tenant(s.id).expect("adaptive tenant reported");
+            assert!(f.completed(), "{label}/{}: fixed failed: {:?}", s.id, f.error);
+            assert!(a.completed(), "{label}/{}: adaptive failed: {:?}", s.id, a.error);
+            assert_outcomes_bitwise_eq(
+                a.outcome.as_ref().unwrap(),
+                f.outcome.as_ref().unwrap(),
+                &format!("adaptive_{label}/{}", s.id),
+            );
+            assert_eq!(
+                final_fingerprint(&root.join("adaptive").join(s.id), s.artifact),
+                final_fingerprint(&root.join("fixed").join(s.id), s.artifact),
+                "{label}/{}: final checkpoint state",
+                s.id
+            );
+        }
+        // The shrunk quantum really bit: with three runnable tenants
+        // over a one-run cap the adaptive fleet runs 1-step slices
+        // while oversubscribed, so it takes strictly more slices.
+        let slices = |fo: &mor::coordinator::scheduler::FleetOutcome| {
+            fo.tenants.iter().map(|t| t.slices).sum::<u64>()
+        };
+        assert!(
+            slices(&adaptive) > slices(&fixed),
+            "{label}: adaptive must preempt more often ({} vs {})",
+            slices(&adaptive),
+            slices(&fixed)
         );
         std::fs::remove_dir_all(root).ok();
     }

@@ -1,0 +1,569 @@
+//! The fleet supervisor's proof obligations:
+//!
+//! * **Supervision is transparent while unneeded.** A fault-free
+//!   supervised fleet is bitwise identical to an unsupervised one —
+//!   same schedule log, same per-tenant records and final checkpoint
+//!   state — at 1, 2 and 13 threads, and every tenant reports Healthy
+//!   with zero retries and zero demotions.
+//! * **Failure walks a ladder, not a cliff.** A tenant whose slices
+//!   keep dying burns its retry budget (with exponential backoff
+//!   measured in scheduler rounds), is demoted to the BF16 quarantine
+//!   rung, then to scalar kernels, and only then is declared Dead —
+//!   while its neighbors stay bitwise identical to their solo runs.
+//! * **Backoff is deterministic.** The supervised schedule log and
+//!   every terminal report are identical across thread counts: backoff
+//!   is counted in rounds, never wall-clock.
+//! * **Demotion rescues what retry cannot.** A tenant whose own guard
+//!   exhausts its rewind budget is demoted (skipping the futile retry
+//!   branch); under the widened guard and BF16 policy it completes,
+//!   reporting the sticky Quarantined state.
+//! * **The stall watchdog converts silence into a verdict.** A wedged
+//!   tenant (the `stall` fault, self-preempting via the cooperative
+//!   stop flag) accrues no-progress slices until the watchdog trips
+//!   and the ladder runs to its documented terminal state.
+//! * **The fleet manifest makes the whole fleet crash-safe.** A fleet
+//!   halted mid-run (simulated supervisor crash) auto-resumes from the
+//!   manifest bitwise identical to the uninterrupted fleet; a corrupt
+//!   manifest degrades to a fresh ledger (tenant rings still resume to
+//!   the same final state); a manifest for a different fleet refuses
+//!   to resume.
+
+use mor::coordinator::checkpoint::{scan_ring, TrainCheckpoint};
+use mor::coordinator::guard::{GuardAction, GuardConfig};
+use mor::coordinator::scheduler::{run_fleet, FleetOptions, FleetOutcome, Tenant};
+use mor::coordinator::supervisor::{Health, SupervisorOptions};
+use mor::coordinator::trainer::{TrainOutcome, Trainer, TrainerOptions};
+use mor::faults::parse_faults;
+use mor::model::config::{ModelConfig, TrainConfig};
+use mor::runtime::Runtime;
+use mor::util::par::Parallelism;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+const ARTIFACT: &str = "train_mor_tensor_block";
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mor_sup_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The acceptance matrix for the supervision contracts.
+fn thread_sweep() -> [(&'static str, Parallelism); 3] {
+    [
+        ("serial", Parallelism::serial()),
+        ("pooled2", Parallelism::pooled(2, 1)),
+        ("pooled13", Parallelism::pooled(13, 1)),
+    ]
+}
+
+fn opts_in(dir: &Path, steps: u64, par: &Parallelism) -> TrainerOptions {
+    let mut o = TrainerOptions::new(ARTIFACT, steps, dir.to_path_buf());
+    o.val_every = 1;
+    o.ckpt_every = 2;
+    o.quiet = true;
+    o.parallelism = Some(par.clone());
+    o
+}
+
+fn mk_tenant(
+    id: &str,
+    steps: u64,
+    dir: &Path,
+    par: &Parallelism,
+    tweak: &dyn Fn(&mut TrainerOptions),
+) -> Tenant {
+    let mut o = opts_in(dir, steps, par);
+    tweak(&mut o);
+    Tenant::new(id, ModelConfig::TINY, TrainConfig::config1(steps), o)
+}
+
+fn solo(dir: &Path, steps: u64, par: &Parallelism) -> TrainOutcome {
+    let rt = Runtime::host(ModelConfig::TINY);
+    Trainer::new(&rt, TrainConfig::config1(steps))
+        .run(&opts_in(dir, steps, par))
+        .expect("solo run completes")
+}
+
+fn with_faults(o: &mut TrainerOptions, spec: &str) {
+    o.faults = parse_faults(Some(spec)).expect("valid fault spec");
+}
+
+/// Newest ring entry's timing-free state fingerprint.
+fn final_fingerprint(dir: &Path, artifact: &str) -> u64 {
+    let (step, path) = scan_ring(dir, artifact)
+        .into_iter()
+        .next()
+        .unwrap_or_else(|| panic!("no checkpoint ring in {}", dir.display()));
+    let ck = TrainCheckpoint::load(&path).expect("final checkpoint loads");
+    assert_eq!(ck.step, step);
+    ck.state_fingerprint()
+}
+
+fn assert_outcomes_bitwise_eq(a: &TrainOutcome, b: &TrainOutcome, what: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{what}: record count");
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(ra.step, rb.step, "{what}");
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{what}: train loss at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.val_loss.to_bits(),
+            rb.val_loss.to_bits(),
+            "{what}: val loss at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.bf16_fallback_rate.to_bits(),
+            rb.bf16_fallback_rate.to_bits(),
+            "{what}: fallback at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.param_norm.to_bits(),
+            rb.param_norm.to_bits(),
+            "{what}: param norm at step {}",
+            ra.step
+        );
+    }
+    assert_eq!(a.guard_events, b.guard_events, "{what}: guard events");
+}
+
+// ---------------------------------------------------------------------------
+// Supervised ≡ unsupervised while fault-free
+// ---------------------------------------------------------------------------
+
+/// With no failures the supervisor only observes: it never removes a
+/// tenant from the candidate set, so stride selection — and therefore
+/// the schedule log, every tenant's trajectory, and every final
+/// checkpoint — is bitwise identical to an unsupervised fleet, at
+/// every thread count. Every tenant ends Healthy with zero retries.
+#[test]
+fn supervised_fault_free_fleet_matches_unsupervised_bitwise() {
+    let nop: &dyn Fn(&mut TrainerOptions) = &|_| {};
+    for (label, par) in thread_sweep() {
+        let root = tmpdir(&format!("transparent_{label}"));
+        let specs: [(&str, u64); 3] = [("a", 6), ("b", 4), ("c", 5)];
+        let run = |sub: &str, so: Option<SupervisorOptions>| {
+            let tenants: Vec<Tenant> = specs
+                .iter()
+                .map(|(id, steps)| {
+                    mk_tenant(id, *steps, &root.join(sub).join(id), &par, nop)
+                })
+                .collect();
+            let mut fo = FleetOptions::new(par.clone());
+            fo.quantum = 2;
+            fo.max_runs = 2;
+            fo.supervisor = so;
+            run_fleet(&tenants, &fo).expect("fleet completes")
+        };
+        let plain = run("unsup", None);
+        let supervised = run("sup", Some(SupervisorOptions::new()));
+
+        assert_eq!(supervised.schedule, plain.schedule, "{label}: schedule log");
+        assert_eq!(supervised.rounds, plain.rounds, "{label}: round count");
+        for (id, _) in &specs {
+            let s = supervised.tenant(id).unwrap();
+            let p = plain.tenant(id).unwrap();
+            assert!(s.completed(), "{label}/{id}: {:?}", s.error);
+            assert_eq!(s.health, Health::Healthy, "{label}/{id}");
+            assert_eq!((s.retries, s.demotions), (0, 0), "{label}/{id}");
+            assert_outcomes_bitwise_eq(
+                s.outcome.as_ref().unwrap(),
+                p.outcome.as_ref().unwrap(),
+                &format!("{label}/{id}"),
+            );
+            assert_eq!(
+                final_fingerprint(&root.join("sup").join(id), ARTIFACT),
+                final_fingerprint(&root.join("unsup").join(id), ARTIFACT),
+                "{label}/{id}: final checkpoint state"
+            );
+        }
+        // The cross-tenant summary covers every tenant in both forms.
+        let table = supervised.summary_table();
+        let csv = supervised.summary_csv();
+        for (id, _) in &specs {
+            assert!(table.contains(id), "summary table lists {id}");
+        }
+        assert!(table.contains("healthy"), "summary table shows health");
+        assert_eq!(csv.lines().count(), specs.len() + 1, "csv: header + one row each");
+        assert!(csv.starts_with("tenant,weight,slices,retries,demotions,health,"));
+        std::fs::remove_dir_all(root).ok();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The failure ladder
+// ---------------------------------------------------------------------------
+
+/// A three-tenant fleet whose middle tenant dies every slice (an
+/// unguarded injected panic at a step it never gets past). With a
+/// one-retry budget the ladder is: retry at rung 0 → demote to BF16
+/// quarantine → retry → demote to scalar kernels → retry → Dead.
+fn ladder_fleet(root: &Path, par: &Parallelism) -> (Vec<Tenant>, FleetOutcome) {
+    let nop: &dyn Fn(&mut TrainerOptions) = &|_| {};
+    let tenants = vec![
+        mk_tenant("left", 6, &root.join("fleet").join("left"), par, nop),
+        mk_tenant("victim", 6, &root.join("fleet").join("victim"), par, &|o| {
+            with_faults(o, "panic:worker@step=2");
+        }),
+        mk_tenant("right", 6, &root.join("fleet").join("right"), par, nop),
+    ];
+    let mut fo = FleetOptions::new(par.clone());
+    fo.quantum = 2;
+    fo.max_runs = 2;
+    fo.supervisor = Some(SupervisorOptions {
+        retries: 1,
+        backoff: 1,
+        ..SupervisorOptions::new()
+    });
+    let fleet = run_fleet(&tenants, &fo).expect("fleet itself must not die");
+    (tenants, fleet)
+}
+
+/// Retry exhaustion walks the whole ladder to Dead — the victim's
+/// terminal report documents one failed retry per rung (3 total) and
+/// both demotions — and the neighbors sharing the pool finish bitwise
+/// identical to their solo runs.
+#[test]
+fn retry_exhaustion_walks_the_demotion_ladder_to_dead() {
+    let par = Parallelism::serial();
+    let root = tmpdir("ladder");
+    let (_, fleet) = ladder_fleet(&root, &par);
+
+    let victim = fleet.tenant("victim").unwrap();
+    assert!(!victim.completed(), "every rung must fail");
+    assert_eq!(victim.health, Health::Dead, "terminal health");
+    assert_eq!(victim.demotions, 2, "both rungs were tried");
+    assert_eq!(victim.retries, 3, "one failed retry per rung");
+    let err = victim.error.as_deref().unwrap();
+    assert!(err.contains("panic"), "verdict names the panic, got {err:?}");
+
+    for id in ["left", "right"] {
+        let report = fleet.tenant(id).unwrap();
+        assert!(report.completed(), "{id}: neighbor failed: {:?}", report.error);
+        assert_eq!(report.health, Health::Healthy, "{id}");
+        let solo_out = solo(&root.join("solo").join(id), 6, &par);
+        assert_outcomes_bitwise_eq(report.outcome.as_ref().unwrap(), &solo_out, id);
+    }
+    std::fs::remove_dir_all(root).ok();
+}
+
+/// Backoff is measured in scheduler rounds, so the supervised
+/// interleaving around a repeatedly-failing tenant — which rounds ran
+/// whom, how many slices each tenant got, the victim's terminal
+/// ledger — is identical at 1, 2 and 13 threads.
+#[test]
+fn supervised_backoff_schedule_is_identical_across_thread_counts() {
+    let mut baseline: Option<(Vec<mor::coordinator::scheduler::Slice>, Vec<_>)> = None;
+    for (label, par) in thread_sweep() {
+        let root = tmpdir(&format!("backoff_{label}"));
+        let (_, fleet) = ladder_fleet(&root, &par);
+        let reports: Vec<(String, u64, u32, u8, Health, Option<String>)> = fleet
+            .tenants
+            .iter()
+            .map(|t| {
+                (t.id.clone(), t.slices, t.retries, t.demotions, t.health, t.error.clone())
+            })
+            .collect();
+        match &baseline {
+            None => baseline = Some((fleet.schedule.clone(), reports)),
+            Some((sched, reps)) => {
+                assert_eq!(&fleet.schedule, sched, "{label}: schedule log");
+                assert_eq!(&reports, reps, "{label}: terminal reports");
+            }
+        }
+        std::fs::remove_dir_all(root).ok();
+    }
+}
+
+/// Guard exhaustion skips the retry branch (re-running the same
+/// precision would just burn another rewind budget) and demotes
+/// immediately; under the demoted BF16 policy and the widened guard
+/// the refiring panic is absorbed and the tenant completes — with the
+/// sticky Quarantined state and zero retries on its terminal report.
+#[test]
+fn guard_exhaustion_demotes_and_demotion_rescues() {
+    for (label, par) in thread_sweep() {
+        let root = tmpdir(&format!("rescue_{label}"));
+        let victim =
+            mk_tenant("victim", 6, &root.join("victim"), &par, &|o| {
+                o.guard = Some(GuardConfig { max_rewinds: 1, ..GuardConfig::default() });
+                with_faults(o, "repeat-panic:worker@step=3,count=3");
+            });
+        let mut fo = FleetOptions::new(par.clone());
+        fo.quantum = 4;
+        fo.max_runs = 1;
+        fo.supervisor = Some(SupervisorOptions::new());
+        let fleet = run_fleet(std::slice::from_ref(&victim), &fo).unwrap();
+
+        let report = fleet.tenant("victim").unwrap();
+        assert!(report.completed(), "{label}: demotion must rescue: {:?}", report.error);
+        assert_eq!(report.health, Health::Quarantined, "{label}: quarantine is sticky");
+        assert_eq!(report.demotions, 1, "{label}: one demotion");
+        assert_eq!(report.retries, 0, "{label}: guard exhaustion skips retries");
+        let out = report.outcome.as_ref().unwrap();
+        assert_eq!(out.records.len(), 6, "{label}: full trajectory");
+        assert!(out.final_train_loss.is_finite(), "{label}");
+        // The widened guard (rewind budget 1*2+2=4) absorbed the three
+        // refires in the demoted slice.
+        let rewinds = out
+            .guard_events
+            .iter()
+            .filter(|e| e.action == GuardAction::Rewind)
+            .count();
+        assert_eq!(rewinds, 3, "{label}: one rewind per surviving refire");
+        std::fs::remove_dir_all(root).ok();
+    }
+}
+
+/// A stalled tenant (the `stall` fault: a deterministic wedge that
+/// self-preempts through the cooperative stop flag) keeps getting
+/// scheduled but never completes a step. The watchdog converts the
+/// silence into ladder failures — and since no rung can unwedge it,
+/// the documented terminal state is Dead, at every thread count.
+#[test]
+fn stall_watchdog_walks_a_wedged_tenant_to_dead() {
+    for (label, par) in thread_sweep() {
+        let root = tmpdir(&format!("stall_{label}"));
+        let victim = mk_tenant("victim", 6, &root.join("victim"), &par, &|o| {
+            with_faults(o, "stall:step@step=3");
+        });
+        let mut fo = FleetOptions::new(par.clone());
+        fo.quantum = 2;
+        fo.max_runs = 1;
+        fo.supervisor = Some(SupervisorOptions {
+            retries: 1,
+            backoff: 1,
+            stall_after: 2,
+            ..SupervisorOptions::new()
+        });
+        let fleet = run_fleet(std::slice::from_ref(&victim), &fo).unwrap();
+
+        let report = fleet.tenant("victim").unwrap();
+        assert!(!report.completed(), "{label}: a wedge no rung fixes must die");
+        assert_eq!(report.health, Health::Dead, "{label}: terminal health");
+        assert_eq!(report.demotions, 2, "{label}: the ladder was walked first");
+        let err = report.error.as_deref().unwrap();
+        assert!(err.contains("stalled"), "{label}: verdict names the stall, got {err:?}");
+        std::fs::remove_dir_all(root).ok();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The crash-safe fleet manifest
+// ---------------------------------------------------------------------------
+
+fn supervised_opts(manifest: &Path) -> SupervisorOptions {
+    SupervisorOptions {
+        manifest: Some(manifest.to_path_buf()),
+        ..SupervisorOptions::new()
+    }
+}
+
+fn manifest_fleet(
+    root: &Path,
+    sub: &str,
+    par: &Parallelism,
+    so: SupervisorOptions,
+) -> FleetOutcome {
+    let nop: &dyn Fn(&mut TrainerOptions) = &|_| {};
+    let tenants = vec![
+        mk_tenant("a", 6, &root.join(sub).join("a"), par, nop),
+        mk_tenant("b", 2, &root.join(sub).join("b"), par, nop),
+        mk_tenant("c", 5, &root.join(sub).join("c"), par, nop),
+    ];
+    let mut fo = FleetOptions::new(par.clone());
+    fo.quantum = 2;
+    fo.max_runs = 2;
+    fo.supervisor = Some(so);
+    run_fleet(&tenants, &fo).expect("fleet completes")
+}
+
+/// Kill the supervisor after two rounds (the `halt_after` hook — every
+/// completed round's manifest is on disk), then `--auto-resume` the
+/// whole fleet: the resumed fleet's schedule log continues the crashed
+/// one's exactly, and every tenant — including the short one that
+/// already *finished* before the crash, whose outcome is reconstructed
+/// by the trainer's finished-replay path — ends bitwise identical to
+/// the uninterrupted fleet, at 1, 2 and 13 threads.
+#[test]
+fn fleet_auto_resume_after_supervisor_crash_is_bitwise() {
+    for (label, par) in thread_sweep() {
+        let root = tmpdir(&format!("fleetresume_{label}"));
+        let cont_manifest = root.join("cont").join("fleet.manifest");
+        let crash_manifest = root.join("crash").join("fleet.manifest");
+        let continuous =
+            manifest_fleet(&root, "cont", &par, supervised_opts(&cont_manifest));
+
+        let crashed = manifest_fleet(
+            &root,
+            "crash",
+            &par,
+            SupervisorOptions { halt_after: Some(2), ..supervised_opts(&crash_manifest) },
+        );
+        assert!(crashed.halted, "{label}: the simulated crash must trip");
+        assert!(crash_manifest.exists(), "{label}: manifest persisted per round");
+
+        let resumed = manifest_fleet(
+            &root,
+            "crash",
+            &par,
+            SupervisorOptions { auto_resume: true, ..supervised_opts(&crash_manifest) },
+        );
+        assert!(!resumed.halted, "{label}");
+        assert_eq!(resumed.schedule, continuous.schedule, "{label}: schedule log");
+        assert_eq!(resumed.rounds, continuous.rounds, "{label}: round count");
+        for id in ["a", "b", "c"] {
+            let r = resumed.tenant(id).unwrap();
+            let c = continuous.tenant(id).unwrap();
+            assert!(r.completed(), "{label}/{id}: {:?}", r.error);
+            assert_eq!(r.health, Health::Healthy, "{label}/{id}");
+            assert_outcomes_bitwise_eq(
+                r.outcome.as_ref().unwrap(),
+                c.outcome.as_ref().unwrap(),
+                &format!("{label}/{id}"),
+            );
+            assert_eq!(
+                final_fingerprint(&root.join("crash").join(id), ARTIFACT),
+                final_fingerprint(&root.join("cont").join(id), ARTIFACT),
+                "{label}/{id}: final checkpoint state"
+            );
+        }
+        std::fs::remove_dir_all(root).ok();
+    }
+}
+
+/// Manifest failure modes: a manifest for a *different* fleet (tenant
+/// set or slicing) refuses to resume — caller error, not corruption —
+/// while a corrupt manifest fails its CRC and degrades to a fresh
+/// ledger: the fleet still completes, and because every tenant resumes
+/// from its own intact checkpoint ring, the final per-tenant state is
+/// bitwise identical to the uninterrupted fleet's.
+#[test]
+fn corrupt_manifest_degrades_to_a_fresh_ledger_not_a_dead_fleet() {
+    let par = Parallelism::serial();
+    let root = tmpdir("manifest_rec");
+    let cont_manifest = root.join("cont").join("fleet.manifest");
+    let crash_manifest = root.join("crash").join("fleet.manifest");
+    let continuous = manifest_fleet(&root, "cont", &par, supervised_opts(&cont_manifest));
+
+    let crashed = manifest_fleet(
+        &root,
+        "crash",
+        &par,
+        SupervisorOptions { halt_after: Some(2), ..supervised_opts(&crash_manifest) },
+    );
+    assert!(crashed.halted);
+
+    // A different tenant set refuses to resume (same manifest path).
+    {
+        let nop: &dyn Fn(&mut TrainerOptions) = &|_| {};
+        let strangers = vec![
+            mk_tenant("x", 6, &root.join("crash").join("a"), &par, nop),
+            mk_tenant("y", 2, &root.join("crash").join("b"), &par, nop),
+            mk_tenant("z", 5, &root.join("crash").join("c"), &par, nop),
+        ];
+        let mut fo = FleetOptions::new(par.clone());
+        fo.quantum = 2;
+        fo.max_runs = 2;
+        fo.supervisor = Some(SupervisorOptions {
+            auto_resume: true,
+            ..supervised_opts(&crash_manifest)
+        });
+        let err = run_fleet(&strangers, &fo).expect_err("stranger fleet must not resume");
+        assert!(
+            format!("{err:#}").contains("different tenant set"),
+            "got {err:#}"
+        );
+    }
+
+    // A different quantum refuses too (the bitwise contract needs the
+    // original slicing).
+    {
+        let nop: &dyn Fn(&mut TrainerOptions) = &|_| {};
+        let tenants = vec![
+            mk_tenant("a", 6, &root.join("crash").join("a"), &par, nop),
+            mk_tenant("b", 2, &root.join("crash").join("b"), &par, nop),
+            mk_tenant("c", 5, &root.join("crash").join("c"), &par, nop),
+        ];
+        let mut fo = FleetOptions::new(par.clone());
+        fo.quantum = 3;
+        fo.max_runs = 2;
+        fo.supervisor = Some(SupervisorOptions {
+            auto_resume: true,
+            ..supervised_opts(&crash_manifest)
+        });
+        let err = run_fleet(&tenants, &fo).expect_err("resliced fleet must not resume");
+        assert!(format!("{err:#}").contains("quantum"), "got {err:#}");
+    }
+
+    // Tamper with the manifest: the CRC trailer rejects it at load and
+    // the resume falls back to a fresh ledger instead of dying.
+    let mut bytes = std::fs::read(&crash_manifest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x20;
+    std::fs::write(&crash_manifest, &bytes).unwrap();
+
+    let resumed = manifest_fleet(
+        &root,
+        "crash",
+        &par,
+        SupervisorOptions { auto_resume: true, ..supervised_opts(&crash_manifest) },
+    );
+    for id in ["a", "b", "c"] {
+        let r = resumed.tenant(id).unwrap();
+        let c = continuous.tenant(id).unwrap();
+        assert!(r.completed(), "{id}: {:?}", r.error);
+        assert_outcomes_bitwise_eq(
+            r.outcome.as_ref().unwrap(),
+            c.outcome.as_ref().unwrap(),
+            id,
+        );
+        assert_eq!(
+            final_fingerprint(&root.join("crash").join(id), ARTIFACT),
+            final_fingerprint(&root.join("cont").join(id), ARTIFACT),
+            "{id}: final checkpoint state"
+        );
+    }
+    std::fs::remove_dir_all(root).ok();
+}
+
+// ---------------------------------------------------------------------------
+// The cooperative stop flag
+// ---------------------------------------------------------------------------
+
+/// The stop flag preempts mid-quantum at the next step boundary,
+/// exactly like a `stop_after` the setter didn't pick in advance: the
+/// run suspends after the in-flight step with a forced suspension
+/// checkpoint, and a later auto-resume completes the trajectory
+/// bitwise identical to an uninterrupted run.
+#[test]
+fn stop_flag_suspends_mid_quantum_like_stop_after() {
+    let par = Parallelism::serial();
+    let d_cont = tmpdir("flag_cont");
+    let d_flag = tmpdir("flag_stop");
+    let continuous = solo(&d_cont, 6, &par);
+
+    let rt = Runtime::host(ModelConfig::TINY);
+    let mut o = opts_in(&d_flag, 6, &par);
+    o.stop_flag = Some(Arc::new(AtomicBool::new(true)));
+    let stopped = Trainer::new(&rt, TrainConfig::config1(6)).run(&o).unwrap();
+    assert_eq!(stopped.records.len(), 1, "suspends after the in-flight step");
+    assert!(
+        TrainCheckpoint::load(&d_flag.join(format!("{ARTIFACT}.step1.ckpt"))).is_ok(),
+        "forced suspension checkpoint"
+    );
+
+    let mut o = opts_in(&d_flag, 6, &par);
+    o.auto_resume = true;
+    let resumed = Trainer::new(&rt, TrainConfig::config1(6)).run(&o).unwrap();
+    assert_outcomes_bitwise_eq(&continuous, &resumed, "resume after stop flag");
+    std::fs::remove_dir_all(d_cont).ok();
+    std::fs::remove_dir_all(d_flag).ok();
+}
